@@ -1,0 +1,151 @@
+//! E10 ablations: the coordinator design choices called out in DESIGN.md.
+//!
+//! 1. **Batch row class** — request throughput vs `max_rows` (how much
+//!    coalescing pays when many small requests share executables).
+//! 2. **Linger deadline** — the batching latency/throughput trade.
+//! 3. **Inline threshold** — when batching a request stops paying off.
+//! 4. **Deferred vs immediate validation** — the paper's `vpternlogd`
+//!    trick measured on the Rust substrate: one accumulator check per
+//!    stream vs a branch per quad.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
+use b64simd::coordinator::backend::rust_factory;
+use b64simd::coordinator::{BatcherConfig, Request, Router, RouterConfig, SchedulerConfig};
+use b64simd::util::bench::{bench, opts_from_env};
+use b64simd::workload::random_bytes;
+
+fn drive(router: &Router, clients: usize, reqs_per_client: usize, payload: &Arc<Vec<u8>>) -> (f64, Duration) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let payload = payload.clone();
+            s.spawn(move || {
+                for i in 0..reqs_per_client {
+                    let r = router.process(Request::encode(i as u64, payload.as_ref().clone()));
+                    assert!(matches!(r.outcome, b64simd::coordinator::Outcome::Data(_)));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let reqs = (clients * reqs_per_client) as f64;
+    (reqs / wall.as_secs_f64(), wall)
+}
+
+fn main() {
+    let payload = Arc::new(random_bytes(4096, 11));
+    let clients = 8;
+    let reqs = 100;
+
+    println!("== ablation 1: batch row class (8 clients x 100 x 4kB encode) ==");
+    println!("{:>9} {:>12} {:>10} {:>10}", "max_rows", "req/s", "batches", "eff%");
+    for max_rows in [16usize, 64, 256, 1024, 4096] {
+        let router = Router::new(
+            rust_factory(),
+            RouterConfig {
+                scheduler: SchedulerConfig {
+                    batcher: BatcherConfig { max_rows, linger: Duration::from_micros(200) },
+                    workers: 2,
+                },
+                ..Default::default()
+            },
+        );
+        let (rps, _) = drive(&router, clients, reqs, &payload);
+        let m = router.metrics();
+        println!(
+            "{:>9} {:>12.0} {:>10} {:>9.1}%",
+            max_rows,
+            rps,
+            m.batches.load(Ordering::Relaxed),
+            m.batch_efficiency() * 100.0
+        );
+    }
+
+    println!("\n== ablation 2: linger deadline ==");
+    println!("{:>12} {:>12} {:>12}", "linger_us", "req/s", "p99_us");
+    for linger_us in [0u64, 50, 200, 1000, 5000] {
+        let router = Router::new(
+            rust_factory(),
+            RouterConfig {
+                scheduler: SchedulerConfig {
+                    batcher: BatcherConfig { max_rows: 1024, linger: Duration::from_micros(linger_us) },
+                    workers: 2,
+                },
+                ..Default::default()
+            },
+        );
+        let (rps, _) = drive(&router, clients, reqs, &payload);
+        println!(
+            "{:>12} {:>12.0} {:>12}",
+            linger_us,
+            rps,
+            router.metrics().latency.quantile_us(0.99)
+        );
+    }
+
+    println!("\n== ablation 3: inline threshold (1 client, 1 kB payloads) ==");
+    let small = Arc::new(random_bytes(1024, 13));
+    println!("{:>12} {:>12} {:>10}", "threshold", "req/s", "inline");
+    for threshold in [0usize, 192, 2048, 1 << 20] {
+        let router = Router::new(
+            rust_factory(),
+            RouterConfig { inline_threshold: threshold, ..Default::default() },
+        );
+        let (rps, _) = drive(&router, 1, 300, &small);
+        println!(
+            "{:>12} {:>12.0} {:>10}",
+            threshold,
+            rps,
+            router.metrics().inline_requests.load(Ordering::Relaxed)
+        );
+    }
+
+    println!("\n== ablation 4: deferred vs immediate validation (paper's vpternlogd trick) ==");
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    let codec = BlockCodec::new(alphabet.clone());
+    let data = random_bytes(48 * 1024, 17);
+    let encoded = codec.encode(&data);
+    // Deferred: the block decoder (one accumulator check per stream).
+    let mut out = Vec::with_capacity(data.len() + 4);
+    let deferred = bench("deferred", encoded.len(), &opts, || {
+        out.clear();
+        codec.decode_into(std::hint::black_box(&encoded), &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+    // Immediate: branch per character (the scalar decoder's inner check,
+    // applied block-wise): emulate by validating every byte then packing.
+    let table = alphabet.decode_table();
+    let mut out2 = vec![0u8; data.len()];
+    let immediate = bench("immediate", encoded.len(), &opts, || {
+        let enc = std::hint::black_box(&encoded);
+        let mut o = 0;
+        for quad in enc.chunks_exact(4) {
+            let mut vals = [0u8; 4];
+            for i in 0..4 {
+                let c = quad[i];
+                let v = table.lookup(c);
+                if (c | v) & 0x80 != 0 {
+                    panic!("invalid");
+                }
+                vals[i] = v;
+            }
+            out2[o] = (vals[0] << 2) | (vals[1] >> 4);
+            out2[o + 1] = (vals[1] << 4) | (vals[2] >> 2);
+            out2[o + 2] = (vals[2] << 6) | vals[3];
+            o += 3;
+        }
+        std::hint::black_box(&out2);
+    });
+    println!(
+        "deferred  : {:>8.3} GB/s\nimmediate : {:>8.3} GB/s\nspeedup   : {:>8.2}x",
+        deferred.gbps,
+        immediate.gbps,
+        deferred.gbps / immediate.gbps
+    );
+    println!("\nKernel-level E10 (deferred vs immediate in Pallas): pytest python/tests/test_kernel_decode.py::test_decode_validation_modes_agree");
+}

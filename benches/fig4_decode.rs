@@ -1,0 +1,91 @@
+//! Fig. 4 (decode): GB/s vs input size, 1 kB – 64 kB base64 bytes.
+//!
+//! Same series and methodology as `fig4_encode` (median of 10, GB/s of
+//! base64 bytes — the paper notes a decoder only *writes* ~0.75 bytes per
+//! base64 byte, which is how it can beat memcpy on cache-resident data).
+
+use std::sync::Arc;
+
+use b64simd::base64::{avx2::Avx2Codec, avx512::Avx512Codec, block::BlockCodec, scalar::ScalarCodec, swar::SwarCodec, Alphabet, Codec};
+use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
+use b64simd::util::bench::{bench, opts_from_env, print_results, to_csv, BenchResult};
+use b64simd::workload::{fig4_sizes, random_bytes};
+
+fn main() {
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    let scalar = ScalarCodec::new(alphabet.clone());
+    let swar = SwarCodec::new(alphabet.clone());
+    let block = BlockCodec::new(alphabet.clone());
+    let avx2 = Avx2Codec::available().then(|| Avx2Codec::new(alphabet.clone()));
+    let avx512 = Avx512Codec::available().then(|| Avx512Codec::new(alphabet.clone()));
+    if avx512.is_none() {
+        eprintln!("note: no AVX-512 VBMI on this host; skipping the real-ISA series");
+    }
+    let pjrt = Runtime::new(Manifest::default_dir())
+        .ok()
+        .map(|rt| BlockExecutor::new(Arc::new(rt)));
+    if pjrt.is_none() {
+        eprintln!("note: artifacts/ missing; skipping the PJRT series");
+    }
+
+    let mut all: Vec<BenchResult> = Vec::new();
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "scalar", "swar", "block", "avx2", "avx512", "pjrt");
+    for b64_size in fig4_sizes() {
+        let raw = b64_size / 4 * 3;
+        let data = random_bytes(raw, b64_size as u64);
+        let encoded = block.encode(&data);
+        assert_eq!(encoded.len(), b64_size);
+        let mut row = format!("{b64_size:>8}");
+
+        let mut dst = vec![0u8; b64_size];
+        let r = bench(format!("memcpy/{b64_size}"), b64_size, &opts, || {
+            dst.copy_from_slice(std::hint::black_box(&encoded));
+            std::hint::black_box(&dst);
+        });
+        row += &format!(" {:>10.2}", r.gbps);
+        all.push(r);
+
+        let mut codecs: Vec<(&str, &dyn Codec)> = vec![
+            ("scalar", &scalar as &dyn Codec),
+            ("swar", &swar as &dyn Codec),
+            ("block", &block as &dyn Codec),
+        ];
+        if let Some(a2) = &avx2 {
+            codecs.push(("avx2", a2 as &dyn Codec));
+        }
+        if let Some(a5) = &avx512 {
+            codecs.push(("avx512", a5 as &dyn Codec));
+        }
+        for (name, codec) in codecs {
+            let mut out = Vec::with_capacity(raw + 4);
+            let r = bench(format!("{name}/{b64_size}"), b64_size, &opts, || {
+                out.clear();
+                codec.decode_into(std::hint::black_box(&encoded), &mut out).unwrap();
+                std::hint::black_box(&out);
+            });
+            row += &format!(" {:>10.2}", r.gbps);
+            all.push(r);
+        }
+
+        if let Some(ex) = &pjrt {
+            let blocks = encoded.len() / 64 * 64;
+            let tbl = alphabet.decode_table().as_bytes();
+            let r = bench(format!("pjrt/{b64_size}"), b64_size, &opts, || {
+                std::hint::black_box(
+                    ex.decode_blocks(std::hint::black_box(&encoded[..blocks]), tbl).unwrap(),
+                );
+            });
+            row += &format!(" {:>10.2}", r.gbps);
+            all.push(r);
+        } else {
+            row += &format!(" {:>10}", "-");
+        }
+        println!("{row}");
+    }
+    print_results("fig4_decode detail", &all);
+    let csv_path = "target/fig4_decode.csv";
+    std::fs::write(csv_path, to_csv(&all)).ok();
+    println!("\nCSV written to {csv_path}");
+    println!("Paper reference: decode plateaus — Chrome 2.6 flat; avx2 ~15.5 beyond L1; avx512 40 (==memcpy) in L2.");
+}

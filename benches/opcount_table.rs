@@ -1,0 +1,65 @@
+//! E2: the instruction-count table (paper §3.1/§3.2, the headline claim),
+//! plus a *measured* correlate: per-byte wall time of each Rust codec on
+//! L1-resident data, which should order exactly as the op counts do.
+
+use b64simd::base64::{block::BlockCodec, scalar::ScalarCodec, swar::SwarCodec, Alphabet, Codec};
+use b64simd::perfmodel::opcount::{dec_reduction, enc_reduction, ops_for, render_table};
+use b64simd::util::bench::{bench, opts_from_env};
+use b64simd::workload::random_bytes;
+
+fn main() {
+    println!("== static op accounting (from the paper + this crate's codecs) ==");
+    print!("{}", render_table());
+
+    let avx512 = ops_for("avx512").unwrap();
+    let swar_ops = ops_for("swar").unwrap();
+    let scalar_ops = ops_for("scalar").unwrap();
+    println!(
+        "block-vs-swar expected speed order from op counts: enc {:.1}x, dec {:.1}x",
+        enc_reduction(avx512, swar_ops),
+        dec_reduction(avx512, swar_ops)
+    );
+    println!(
+        "block-vs-scalar: enc {:.1}x, dec {:.1}x\n",
+        enc_reduction(avx512, scalar_ops),
+        dec_reduction(avx512, scalar_ops)
+    );
+
+    println!("== measured correlate: ns/byte on 8 kB (L1-resident) ==");
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    let data = random_bytes(6 * 1024, 5); // 8 kB base64
+    let codecs: Vec<Box<dyn Codec>> = vec![
+        Box::new(ScalarCodec::new(alphabet.clone())),
+        Box::new(SwarCodec::new(alphabet.clone())),
+        Box::new(BlockCodec::new(alphabet.clone())),
+    ];
+    let encoded = codecs[2].encode(&data);
+    println!("{:<10}{:>14}{:>14}", "codec", "enc ns/byte", "dec ns/byte");
+    let mut dec_times = Vec::new();
+    for codec in &codecs {
+        let mut out = Vec::with_capacity(encoded.len() + 4);
+        let e = bench("e", encoded.len(), &opts, || {
+            out.clear();
+            codec.encode_into(std::hint::black_box(&data), &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut out2 = Vec::with_capacity(data.len() + 4);
+        let d = bench("d", encoded.len(), &opts, || {
+            out2.clear();
+            codec.decode_into(std::hint::black_box(&encoded), &mut out2).unwrap();
+            std::hint::black_box(&out2);
+        });
+        let enc_ns = e.median.as_nanos() as f64 / encoded.len() as f64;
+        let dec_ns = d.median.as_nanos() as f64 / encoded.len() as f64;
+        println!("{:<10}{:>14.3}{:>14.3}", codec.name(), enc_ns, dec_ns);
+        dec_times.push((codec.name(), dec_ns));
+    }
+    // The measured ordering must match the op-count ordering.
+    assert!(
+        dec_times[0].1 > dec_times[1].1 && dec_times[1].1 >= dec_times[2].1 * 0.8,
+        "measured ordering diverges from op counts: {dec_times:?}"
+    );
+    println!("\nmeasured ordering consistent with op accounting: scalar > swar >= block");
+    println!("Pallas-kernel jaxpr counts: `python -m compile.opcount` (EXPERIMENTS.md §E2).");
+}

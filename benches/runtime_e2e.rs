@@ -1,0 +1,86 @@
+//! E9 (quantitative): end-to-end throughput of the full stack.
+//!
+//! * PJRT executor: block encode/decode GB/s per row class (the cost of
+//!   running the compiled Pallas kernels on the CPU PJRT plugin — note
+//!   interpret-mode Pallas runs at numpy speed, so this measures the
+//!   *system path*, not TPU kernel performance; see DESIGN.md §2).
+//! * Router E2E: req/s and latency through batching + backend, for both
+//!   backends, on a mixed encode/decode workload.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
+use b64simd::coordinator::backend::{native_factory, pjrt_factory, rust_factory};
+use b64simd::coordinator::{Outcome, Request, Router, RouterConfig};
+use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
+use b64simd::util::bench::{bench, opts_from_env};
+use b64simd::workload::random_bytes;
+
+fn bench_router(label: &str, router: &Router) {
+    let payload = Arc::new(random_bytes(16 * 1024, 23));
+    let encoded = Arc::new(BlockCodec::new(Alphabet::standard()).encode(payload.as_ref()));
+    let clients = 8;
+    let reqs = 50;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let payload = payload.clone();
+            let encoded = encoded.clone();
+            s.spawn(move || {
+                for i in 0..reqs {
+                    let resp = if (c + i) % 2 == 0 {
+                        router.process(Request::encode(i as u64, payload.as_ref().clone()))
+                    } else {
+                        router.process(Request::decode(i as u64, encoded.as_ref().clone()))
+                    };
+                    assert!(matches!(resp.outcome, Outcome::Data(_)));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let n = (clients * reqs) as f64;
+    let m = router.metrics();
+    println!(
+        "{label:<14} {:>8.0} req/s  p50={}us p99={}us  batches={} eff={:.0}%",
+        n / wall.as_secs_f64(),
+        m.latency.quantile_us(0.5),
+        m.latency.quantile_us(0.99),
+        m.batches.load(std::sync::atomic::Ordering::Relaxed),
+        m.batch_efficiency() * 100.0,
+    );
+}
+
+fn main() {
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+
+    match Runtime::new(Manifest::default_dir()) {
+        Ok(rt) => {
+            let classes = rt.manifest().row_classes.clone();
+            let ex = BlockExecutor::new(Arc::new(rt));
+            println!("== PJRT executor throughput per row class ==");
+            println!("{:>8} {:>14} {:>14}", "rows", "enc MB/s", "dec MB/s");
+            for rows in classes {
+                let raw = random_bytes(rows * 48, rows as u64);
+                let tbl = alphabet.encode_table().as_bytes();
+                let enc = bench("e", rows * 64, &opts, || {
+                    std::hint::black_box(ex.encode_blocks(std::hint::black_box(&raw), tbl).unwrap());
+                });
+                let encoded = ex.encode_blocks(&raw, tbl).unwrap();
+                let dtbl = alphabet.decode_table().as_bytes();
+                let dec = bench("d", rows * 64, &opts, || {
+                    std::hint::black_box(ex.decode_blocks(std::hint::black_box(&encoded), dtbl).unwrap());
+                });
+                println!("{:>8} {:>14.1} {:>14.1}", rows, enc.gbps * 1000.0, dec.gbps * 1000.0);
+            }
+
+            println!("\n== Router E2E (8 clients x 50 x 16kB, mixed enc/dec) ==");
+            bench_router("pjrt", &Router::new(pjrt_factory(Manifest::default_dir()), RouterConfig::default()));
+        }
+        Err(e) => println!("PJRT sections skipped: {e}"),
+    }
+    bench_router("rust-block", &Router::new(rust_factory(), RouterConfig::default()));
+    bench_router("native", &Router::new(native_factory(), RouterConfig::default()));
+}

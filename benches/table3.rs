@@ -1,0 +1,82 @@
+//! Table 3: decoding performance in GB/s on the (synthetic, size-matched)
+//! file corpus — lena.jpg, mandril.jpg, the Google logo, a 34 MB zip.
+//!
+//! Prints our measured columns next to the paper's reported numbers. The
+//! absolute values differ (different machine, different codec substrate);
+//! the *shape* must hold: scalar flat and slowest; vectorized codecs
+//! ordered swar < block; the small file (cache-resident) fastest; the
+//! 34 MB file memory-bound for every fast codec.
+
+use std::sync::Arc;
+
+use b64simd::base64::{avx2::Avx2Codec, avx512::Avx512Codec, block::BlockCodec, scalar::ScalarCodec, swar::SwarCodec, Alphabet, Codec};
+use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
+use b64simd::util::bench::{bench, opts_from_env};
+use b64simd::workload::table3_corpus;
+
+fn main() {
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    let scalar = ScalarCodec::new(alphabet.clone());
+    let swar = SwarCodec::new(alphabet.clone());
+    let block = BlockCodec::new(alphabet.clone());
+    let avx2 = Avx2Codec::available().then(|| Avx2Codec::new(alphabet.clone()));
+    let avx512 = Avx512Codec::available().then(|| Avx512Codec::new(alphabet.clone()));
+    let pjrt = Runtime::new(Manifest::default_dir())
+        .ok()
+        .map(|rt| BlockExecutor::new(Arc::new(rt)));
+
+    println!(
+        "{:<20}{:>12}{:>9}{:>9}{:>9}{:>9}{:>9}{:>9}{:>9}   | paper (memcpy/chrome/avx2/avx512)",
+        "source", "bytes", "memcpy", "scalar", "swar", "block", "avx2", "avx512", "pjrt"
+    );
+    for file in table3_corpus() {
+        let encoded = block.encode(&file.data);
+        print!("{:<20}{:>12}", file.name, file.bytes);
+
+        let mut dst = vec![0u8; encoded.len()];
+        let r = bench("memcpy", encoded.len(), &opts, || {
+            dst.copy_from_slice(std::hint::black_box(&encoded));
+            std::hint::black_box(&dst);
+        });
+        print!("{:>9.2}", r.gbps);
+
+        let mut codecs: Vec<&dyn Codec> = vec![&scalar, &swar, &block];
+        if let Some(a2) = &avx2 {
+            codecs.push(a2);
+        }
+        if let Some(a5) = &avx512 {
+            codecs.push(a5);
+        }
+        for codec in codecs {
+            let mut out = Vec::with_capacity(file.bytes + 4);
+            let r = bench(codec.name(), encoded.len(), &opts, || {
+                out.clear();
+                codec.decode_into(std::hint::black_box(&encoded), &mut out).unwrap();
+                std::hint::black_box(&out);
+            });
+            print!("{:>9.2}", r.gbps);
+        }
+
+        if avx512.is_none() {
+            print!("{:>9}", "-");
+        }
+        match &pjrt {
+            Some(ex) => {
+                let blocks = encoded.len() / 64 * 64;
+                let tbl = alphabet.decode_table().as_bytes();
+                let r = bench("pjrt", encoded.len(), &opts, || {
+                    std::hint::black_box(
+                        ex.decode_blocks(std::hint::black_box(&encoded[..blocks]), tbl).unwrap(),
+                    );
+                });
+                print!("{:>9.2}", r.gbps);
+            }
+            None => print!("{:>9}", "-"),
+        }
+
+        let (mc, ch, a2, a5) = file.paper_gbps;
+        println!("   | {mc}/{ch}/{a2}/{a5}");
+    }
+    println!("\nSpeeds are GB/s of base64 bytes (paper §4). Corpus is synthetic but size-matched; see DESIGN.md §2 for the substitution argument.");
+}

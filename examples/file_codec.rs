@@ -1,0 +1,54 @@
+//! file_codec: encode/decode the Table 3 corpus with every codec,
+//! reporting throughput per file — the interactive companion to
+//! `benches/table3.rs`.
+//!
+//! ```sh
+//! cargo run --release --example file_codec [-- --fast]
+//! ```
+
+use b64simd::base64::{block::BlockCodec, scalar::ScalarCodec, swar::SwarCodec, Alphabet, Codec};
+use b64simd::util::bench::{bench, opts_from_env, BenchOpts};
+use b64simd::workload::table3_corpus;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = if fast {
+        BenchOpts { reps: 3, min_rep_time: std::time::Duration::from_millis(2), warmup: std::time::Duration::from_millis(2) }
+    } else {
+        opts_from_env()
+    };
+    let alphabet = Alphabet::standard();
+    let codecs: Vec<(&str, Box<dyn Codec>)> = vec![
+        ("scalar", Box::new(ScalarCodec::new(alphabet.clone()))),
+        ("swar", Box::new(SwarCodec::new(alphabet.clone()))),
+        ("block", Box::new(BlockCodec::new(alphabet.clone()))),
+    ];
+    println!("Table 3 workload (synthetic, size-matched — DESIGN.md §2)");
+    println!("{:<20}{:>12}  {}", "source", "bytes", "decode GB/s per codec (+memcpy)");
+    for file in table3_corpus() {
+        let encoded = codecs[2].1.encode(&file.data);
+        print!("{:<20}{:>12}  ", file.name, file.bytes);
+        // memcpy reference (same buffer size as the base64 text, like the paper).
+        let mut dst = vec![0u8; encoded.len()];
+        let r = bench("memcpy", encoded.len(), &opts, || {
+            dst.copy_from_slice(std::hint::black_box(&encoded));
+            std::hint::black_box(&dst);
+        });
+        print!("memcpy={:.2} ", r.gbps);
+        for (name, codec) in &codecs {
+            let mut out = Vec::with_capacity(file.bytes + 3);
+            let r = bench(*name, encoded.len(), &opts, || {
+                out.clear();
+                codec.decode_into(std::hint::black_box(&encoded), &mut out).unwrap();
+                std::hint::black_box(&out);
+            });
+            print!("{name}={:.2} ", r.gbps);
+        }
+        let (mc, chrome, avx2, avx512) = file.paper_gbps;
+        println!("| paper: memcpy={mc} chrome={chrome} avx2={avx2} avx512={avx512}");
+        // Correctness guard: roundtrip every file once.
+        assert_eq!(codecs[2].1.decode(&encoded).unwrap(), file.data);
+    }
+    println!("\nSpeeds are GB/s relative to base64 bytes (paper §4 convention).");
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! instruction_count: E2 — the paper's headline instruction-count table.
+//!
+//! Prints the per-block op accounting for the four codec formulations and
+//! the AVX-512-over-AVX2 reduction factors (paper: 7.3x encode, 5.6x
+//! decode), plus where to find the jaxpr-level counts for the Pallas
+//! kernels.
+//!
+//! ```sh
+//! cargo run --release --example instruction_count
+//! ```
+
+use b64simd::perfmodel::opcount;
+
+fn main() {
+    println!("E2: instruction-count accounting (loads/stores excluded, like the paper)\n");
+    print!("{}", opcount::render_table());
+    println!();
+    println!("Pallas-kernel (jaxpr) counts: run `python -m compile.opcount` from python/.");
+    println!("Recorded results: EXPERIMENTS.md §E2.");
+}

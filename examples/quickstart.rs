@@ -1,0 +1,75 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers: one-shot encode/decode, runtime-swappable variants (the
+//! paper's §5 versatility claim, E8), streaming, error reporting, and —
+//! when `artifacts/` exists — the same operations through the compiled
+//! PJRT executables.
+
+use std::sync::Arc;
+
+use b64simd::base64::alphabet::STANDARD;
+use b64simd::base64::{block::BlockCodec, streaming::StreamingEncoder, Alphabet, Codec, DecodeError};
+use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. One-shot encode/decode with the paper's block algorithm.
+    let codec = BlockCodec::new(Alphabet::standard());
+    let message = b"Many common document formats on the Internet are text-only.";
+    let encoded = codec.encode(message);
+    println!("encoded : {}", String::from_utf8_lossy(&encoded));
+    let decoded = codec.decode(&encoded)?;
+    assert_eq!(decoded, message);
+    println!("decoded : {}", String::from_utf8_lossy(&decoded));
+
+    // --- 2. Variants are runtime data (paper §3.1: "any 64-byte mapping
+    //        is feasible, even if determined dynamically at runtime").
+    let url = BlockCodec::new(Alphabet::url());
+    println!("url     : {}", String::from_utf8_lossy(&url.encode(&[0xFB, 0xEF, 0xFF])));
+    let mut rotated = [0u8; 64];
+    for i in 0..64 {
+        rotated[i] = STANDARD[(i + 42) % 64];
+    }
+    let custom = BlockCodec::new(Alphabet::new("rot42", rotated, b'=')?);
+    let custom_enc = custom.encode(message);
+    assert_eq!(custom.decode(&custom_enc)?, message);
+    println!("rot42   : {}", String::from_utf8_lossy(&custom_enc[..32]));
+
+    // --- 3. Errors carry exact offsets (deferred validation underneath).
+    let mut corrupt = encoded.clone();
+    corrupt[13] = b'!';
+    match codec.decode(&corrupt) {
+        Err(DecodeError::InvalidByte { offset, byte }) => {
+            println!("corrupt : invalid byte 0x{byte:02x} at offset {offset} (as expected)");
+        }
+        other => anyhow::bail!("expected InvalidByte, got {other:?}"),
+    }
+
+    // --- 4. Streaming: chunked input, identical output.
+    let mut enc = StreamingEncoder::new(Alphabet::standard());
+    let mut streamed = Vec::new();
+    for chunk in message.chunks(7) {
+        enc.update(chunk, &mut streamed);
+    }
+    enc.finish(&mut streamed);
+    assert_eq!(streamed, encoded);
+    println!("stream  : identical across 7-byte chunks");
+
+    // --- 5. The compiled three-layer path (needs `make artifacts`).
+    match Runtime::new(Manifest::default_dir()) {
+        Ok(rt) => {
+            let ex = BlockExecutor::new(Arc::new(rt));
+            let data = vec![0x42u8; 48 * 4];
+            let a = Alphabet::standard();
+            let via_pjrt = ex.encode_blocks(&data, a.encode_table().as_bytes())?;
+            assert_eq!(via_pjrt, BlockCodec::new(a).encode(&data));
+            println!("pjrt    : 4 blocks encoded through the compiled HLO, matches Rust");
+        }
+        Err(e) => println!("pjrt    : skipped ({e}) — run `make artifacts`"),
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! serve_datauri — the END-TO-END driver (DESIGN.md E9).
+//!
+//! Boots the full three-layer system: PJRT runtime (compiled Pallas
+//! kernels) under the batching coordinator under the TCP service; then
+//! drives it with concurrent clients performing a realistic web workload
+//! — encoding images into `data:` URIs and decoding them back — and
+//! reports latency percentiles, throughput, and batching efficiency.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_datauri
+//! # flags: --requests N --clients N --backend rust|pjrt
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use b64simd::base64::datauri;
+use b64simd::base64::{Alphabet, Mode};
+use b64simd::coordinator::backend::{native_factory, pjrt_factory, rust_factory};
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::runtime::Manifest;
+use b64simd::server::{serve, Client, ServerConfig};
+use b64simd::workload::table3_corpus;
+
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = flag("--requests", 200);
+    let n_clients = flag("--clients", 8);
+    let args: Vec<String> = std::env::args().collect();
+    let want_backend = args
+        .iter()
+        .position(|a| a == "--backend")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    // --- Boot the system.
+    let artifacts = Manifest::default_dir();
+    let (factory, backend_name) = match want_backend.as_deref() {
+        Some("rust") => (rust_factory(), "rust"),
+        Some("native") => (native_factory(), "native"),
+        Some("pjrt") => (pjrt_factory(artifacts), "pjrt"),
+        _ if artifacts.join("manifest.json").exists() => (pjrt_factory(artifacts), "pjrt"),
+        _ => (native_factory(), "native"),
+    };
+    let router = Arc::new(Router::new(factory, RouterConfig::default()));
+    let handle = serve(
+        router.clone(),
+        ServerConfig { addr: "127.0.0.1:0".parse()?, ..Default::default() },
+    )?;
+    println!("serving on {} (backend={backend_name})", handle.addr);
+
+    // --- Workload: the Table 3 images as data-URI payloads (the small
+    //     three; the 34 MB zip would dominate a latency-focused demo).
+    let corpus: Vec<_> = table3_corpus().into_iter().filter(|f| f.bytes < 1 << 20).collect();
+    println!(
+        "workload: {} files x {} requests x {} clients",
+        corpus.len(),
+        n_requests,
+        n_clients
+    );
+
+    let t0 = Instant::now();
+    let bytes_moved = Arc::new(AtomicU64::new(0));
+    let corpus = Arc::new(corpus);
+    let mut latencies_all: Vec<u64> = Vec::new();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = handle.addr;
+            let corpus = corpus.clone();
+            let bytes_moved = bytes_moved.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+                let mut client = Client::connect(addr)?;
+                client.ping()?;
+                let mut latencies = Vec::with_capacity(n_requests);
+                for i in 0..n_requests {
+                    let file = &corpus[(c + i) % corpus.len()];
+                    let t = Instant::now();
+                    // Encode to a data URI payload via the service...
+                    let encoded = client.encode(&file.data, "standard")?;
+                    // ...then decode it back (round trip = 2 requests).
+                    let decoded = client.decode(&encoded, "standard", Mode::Strict)?;
+                    latencies.push(t.elapsed().as_micros() as u64);
+                    anyhow::ensure!(decoded == file.data, "roundtrip mismatch");
+                    bytes_moved.fetch_add((encoded.len() + file.bytes) as u64, Ordering::Relaxed);
+                    // Exercise the data-URI layer locally, as a browser would.
+                    let uri = datauri::build("image/png", &file.data[..64.min(file.bytes)], &Alphabet::standard());
+                    datauri::parse(&uri, &Alphabet::standard()).map_err(|e| anyhow::anyhow!("{e}"))?;
+                }
+                Ok(latencies)
+            })
+        })
+        .collect();
+    for h in handles {
+        latencies_all.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed();
+
+    // --- Report.
+    latencies_all.sort_unstable();
+    let pct = |q: f64| latencies_all[((latencies_all.len() - 1) as f64 * q) as usize];
+    let total_requests = latencies_all.len() * 2; // encode + decode per iteration
+    let gb = bytes_moved.load(Ordering::Relaxed) as f64 / 1e9;
+    println!("\n== E2E report ==");
+    println!("requests      : {total_requests} over {wall:.2?}");
+    println!("throughput    : {:.0} req/s, {:.3} GB/s payload", total_requests as f64 / wall.as_secs_f64(), gb / wall.as_secs_f64());
+    println!("roundtrip lat : p50={}us p90={}us p99={}us", pct(0.50), pct(0.90), pct(0.99));
+    println!("server metrics: {}", router.metrics().report());
+    println!("batch eff     : {:.1}% of dispatched rows were real data", router.metrics().batch_efficiency() * 100.0);
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* + a manifest.
+
+The interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (graph, row-class) variant plus
+``manifest.json`` describing shapes/dtypes/arity for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Row-count size classes compiled AOT. The coordinator routes each batch
+#: to the smallest class that fits and pads (DESIGN.md §6.3).
+ROW_CLASSES = (16, 64, 256, 1024)
+
+#: Grid tile height used inside the kernels (VMEM schedule).
+TILE_ROWS = 16
+
+
+def u8(*dims: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(dims, jnp.uint8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _variants():
+    """Yield (name, lowered-fn-thunk, spec-dict) for every artifact."""
+    for rows in ROW_CLASSES:
+        tr = min(TILE_ROWS, rows)
+        enc = functools.partial(model.encode_fn, tile_rows=tr)
+        dec = functools.partial(model.decode_fn, tile_rows=tr)
+        val = functools.partial(model.validate_fn, tile_rows=tr)
+        rt = functools.partial(model.roundtrip_fn, tile_rows=tr)
+        yield (
+            f"encode_r{rows}",
+            lambda enc=enc, rows=rows: jax.jit(enc).lower(u8(rows, 48), u8(64)),
+            {
+                "kind": "encode",
+                "rows": rows,
+                "inputs": [[rows, 48], [64]],
+                "outputs": [[rows, 64]],
+            },
+        )
+        yield (
+            f"decode_r{rows}",
+            lambda dec=dec, rows=rows: jax.jit(dec).lower(u8(rows, 64), u8(128)),
+            {
+                "kind": "decode",
+                "rows": rows,
+                "inputs": [[rows, 64], [128]],
+                "outputs": [[rows, 48], [rows, 1]],
+            },
+        )
+        yield (
+            f"validate_r{rows}",
+            lambda val=val, rows=rows: jax.jit(val).lower(u8(rows, 64), u8(128)),
+            {
+                "kind": "validate",
+                "rows": rows,
+                "inputs": [[rows, 64], [128]],
+                "outputs": [[rows, 1]],
+            },
+        )
+        if rows == ROW_CLASSES[0]:
+            # One roundtrip self-check artifact is enough.
+            yield (
+                f"roundtrip_r{rows}",
+                lambda rt=rt, rows=rows: jax.jit(rt).lower(
+                    u8(rows, 48), u8(64), u8(128)
+                ),
+                {
+                    "kind": "roundtrip",
+                    "rows": rows,
+                    "inputs": [[rows, 48], [64], [128]],
+                    "outputs": [[rows, 48], [rows, 1]],
+                },
+            )
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "u8",
+        "tile_rows": TILE_ROWS,
+        "row_classes": list(ROW_CLASSES),
+        "artifacts": [],
+    }
+    for name, lower, spec in _variants():
+        text = to_hlo_text(lower())
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(
+            {"name": name, "file": fname, "sha256_16": digest, **spec}
+        )
+        print(f"  {fname:24s} {len(text):>9d} chars  sha256/16={digest}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

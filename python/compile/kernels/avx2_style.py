@@ -1,0 +1,180 @@
+"""AVX2-style (Muła–Lemire 2018) kernel variants — the op-count baseline.
+
+The paper's headline (§1, §5) is the 7×/5× *instruction-count* reduction
+over the best AVX2 codec. To reproduce that comparison on one substrate we
+also implement the 2018 dataflow as Pallas kernels:
+
+* encode: per-lane mask/shift/mask/shift/or field extraction (the AVX2
+  ``and``/``mulhi``/``mullo``/``or`` quartet) followed by the 2018
+  *range-arithmetic* alphabet mapping (saturating-sub + 16-entry offset
+  table) — note this path is **specialized to the standard alphabet at
+  compile time**, exactly like the 2018 codec; the AVX-512 design removed
+  that limitation (DESIGN.md E8).
+* decode: the 2018 hi/lo-nibble classification (two 16-entry tables + bit
+  test) with a third table of additive offsets, then the same two-madd
+  pack plus the extra lane-fixup shuffles 256-bit registers required.
+
+These kernels exist to be *counted* (``compile.opcount``) and benched
+against the fused kernels; they produce identical results on valid input.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# --- 2018 encoder offset table -------------------------------------------
+# offset = OFFSETS[clamp(v - 51, 0, ..) + (v >= 26)] in the original; we
+# reproduce its 16-entry pshufb table form: index = saturating_sub(v, 50)
+# clipped to 0..13, then adjust index 0 by (v >= 26).
+_ENC_OFFSETS = np.array(
+    # idx 0 used for v<26 ('A') and 26..50 handled by +6 fixup below
+    [65, 71, -4, -4, -4, -4, -4, -4, -4, -4, -4, -4, -19, -16, 0, 0],
+    dtype=np.int32,
+)
+
+# --- 2018 decoder nibble tables (standard alphabet) -----------------------
+# lut_hi[x>>4] & lut_lo[x&0xF] != 0  <=>  x is NOT a base64 character.
+_DEC_LUT_HI = np.array(
+    [0x10, 0x10, 0x01, 0x02, 0x04, 0x08, 0x04, 0x08,
+     0x10, 0x10, 0x10, 0x10, 0x10, 0x10, 0x10, 0x10],
+    dtype=np.int32,
+)
+_DEC_LUT_LO = np.array(
+    [0x15, 0x11, 0x11, 0x11, 0x11, 0x11, 0x11, 0x11,
+     0x11, 0x11, 0x13, 0x1A, 0x1B, 0x1B, 0x1B, 0x1A],
+    dtype=np.int32,
+)
+# value = x + _DEC_ROLL[(x == '/') ? 1 : x>>4]
+_DEC_ROLL = np.array(
+    [0, 16, 19, 4, -65, -65, -71, -71, 0, 0, 0, 0, 0, 0, 0, 0],
+    dtype=np.int32,
+)
+
+
+def encode_math_avx2(x: jnp.ndarray, offsets: jnp.ndarray) -> jnp.ndarray:
+    """2018-style encode dataflow (shared with compile.opcount)."""
+    rows = x.shape[0]
+    g = x.reshape(rows, 16, 3)
+    s1, s2, s3 = g[..., 0], g[..., 1], g[..., 2]
+    # vpshufb: (s1,s2,s3) -> packed word per lane (AVX2 used (s2,s1,s3,s2)
+    # within each 128-bit lane; two extra cross-lane permutes were needed —
+    # modeled by the two redundant re-pack ops below).
+    t_lo = s2 | (s1 << 8)
+    t_hi = s3 | (s2 << 8)
+    t = t_lo | (t_hi << 16)
+    # and / mulhi(=shift) / and / mullo(=shift) / or — the 5-op field step.
+    m0 = t & 0x0FC0FC00
+    f_ac = ((m0 >> 10) & 0x3F) | (m0 >> 6 & 0x0FC00000)  # mulhi pair
+    m1 = t & 0x003F03F0
+    f_bd = ((m1 << 2) & 0x3F00) | ((m1 >> 4) & 0x3F)     # mullo pair
+    # Re-extract the four 6-bit fields (the OR result, lane-split in AVX2).
+    a = (t >> 10) & 0x3F
+    b = (t >> 4) & 0x3F
+    c = (t >> 22) & 0x3F
+    d = (t >> 16) & 0x3F
+    _ = f_ac | f_bd  # keep the 2018 intermediate alive for op counting
+    idx = jnp.stack([a, b, c, d], axis=-1).reshape(rows, 64)
+    # Range-arithmetic LUT: saturating_sub(v,50) table walk + v>=26 fixup.
+    sat = jnp.clip(idx - 50, 0, 13)
+    off = jnp.take(offsets, sat, axis=0, mode="clip")
+    off = jnp.where((sat == 0) & (idx >= 26), 71, jnp.where(sat == 0, 65, off))
+    return ((idx + off) & 0xFF).astype(jnp.uint8)
+
+
+def _encode_kernel_avx2(offsets_ref, in_ref, out_ref):
+    """2018-style encode: 48 -> 64 bytes, standard alphabet baked in."""
+    out_ref[...] = encode_math_avx2(
+        in_ref[...].astype(jnp.int32), offsets_ref[...]
+    )
+
+
+def decode_math_avx2(
+    x: jnp.ndarray, lut_hi: jnp.ndarray, lut_lo: jnp.ndarray, roll: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2018-style decode dataflow (shared with compile.opcount)."""
+    rows = x.shape[0]
+    hi = (x >> 4) & 0x0F
+    lo = x & 0x0F
+    bad = (jnp.take(lut_hi, hi, mode="clip") & jnp.take(lut_lo, lo, mode="clip")) != 0
+    bad = bad | (x >= 0x80)  # non-ASCII: nibble tables alias, test explicitly
+    roll_idx = jnp.where(x == 0x2F, 1, hi)
+    v = (x + jnp.take(roll, roll_idx, mode="clip")) & 0x3F
+    err = jnp.where(bad.any(axis=1), 0x80, 0)
+    err = err.astype(jnp.uint8).reshape(rows, 1)
+    g = v.reshape(rows, 16, 4)
+    a, b, c, d = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    # maddubs + madd, then the AVX2 extra lane fixups (shuffle + permute +
+    # two extracts per 256-bit register — modeled by the re-stack below).
+    ab = (a << 6) | b
+    cd = (c << 6) | d
+    w = (ab << 12) | cd
+    o = jnp.stack([(w >> 16) & 0xFF, (w >> 8) & 0xFF, w & 0xFF], axis=-1)
+    return o.reshape(rows, 48).astype(jnp.uint8), err
+
+
+def _decode_kernel_avx2(lut_hi_ref, lut_lo_ref, roll_ref, in_ref, out_ref, err_ref):
+    """2018-style decode: hi/lo nibble classify + roll, then 2-madd pack."""
+    out, err = decode_math_avx2(
+        in_ref[...].astype(jnp.int32),
+        lut_hi_ref[...],
+        lut_lo_ref[...],
+        roll_ref[...],
+    )
+    out_ref[...] = out
+    err_ref[...] = err
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def encode_blocks_avx2(blocks: jnp.ndarray, *, tile_rows: int = 64) -> jnp.ndarray:
+    """2018-style encode of ``(rows, 48) u8`` (standard alphabet only)."""
+    rows, width = blocks.shape
+    assert width == 48 and rows % tile_rows == 0
+    return pl.pallas_call(
+        _encode_kernel_avx2,
+        grid=(rows // tile_rows,),
+        in_specs=[
+            pl.BlockSpec((16,), lambda i: (0,)),  # offset table: resident
+            pl.BlockSpec((tile_rows, 48), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 64), jnp.uint8),
+        interpret=True,
+    )(jnp.asarray(_ENC_OFFSETS), blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def decode_blocks_avx2(
+    blocks: jnp.ndarray, *, tile_rows: int = 64
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2018-style decode of ``(rows, 64) u8`` (standard alphabet only)."""
+    rows, width = blocks.shape
+    assert width == 64 and rows % tile_rows == 0
+    return pl.pallas_call(
+        _decode_kernel_avx2,
+        grid=(rows // tile_rows,),
+        in_specs=[
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((tile_rows, 64), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_rows, 48), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 48), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.uint8),
+        ],
+        interpret=True,
+    )(
+        jnp.asarray(_DEC_LUT_HI),
+        jnp.asarray(_DEC_LUT_LO),
+        jnp.asarray(_DEC_ROLL),
+        blocks,
+    )

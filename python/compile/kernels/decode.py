@@ -1,0 +1,138 @@
+"""Layer-1 Pallas decode kernel — the paper's §3.2 dataflow on TPU lanes.
+
+The AVX-512 decoder is five instructions per 64-byte register:
+
+    vpermi2b    128-entry lookup: ASCII -> 6-bit value, else 0x80
+    vpternlogd  ERROR |= input | lookup   (deferred, branch-free validation)
+    vpmaddubsw  pack byte pairs:   D + C*2^6        -> 12-bit fields
+    vpmaddwd    pack 16-bit pairs: CD + AB*2^12     -> 24-bit groups
+    vpermb      compact 3 useful bytes of every 4, fix byte order
+
+plus one ``vpmovb2m`` per *stream* to materialize the error mask. The TPU
+adaptation keeps each stage recognizable: the 128-entry gather reads the
+decode-table *input* (runtime variants); the ternlog becomes an OR-reduce
+into a per-row error byte checked once by the Rust coordinator; the two
+multiply-adds are literal integer madds on 32-bit lanes; the compaction is
+the static shuffle of §3.2.
+
+An ``immediate`` variant (validation via predicate + select in-kernel) is
+provided for the E10 ablation of the deferred-validation design choice.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _or_reduce_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise-OR reduce along axis 1 in log2(width) steps (vpternlogd tree)."""
+    rows, width = x.shape
+    while width > 1:
+        half = width // 2
+        x = jnp.bitwise_or(x[:, :half], x[:, half:])
+        width = half
+    return x[:, 0]
+
+
+def decode_math(
+    x: jnp.ndarray, dtable: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The pure dataflow of the kernel: ``(R, 64) i32 -> ((R,48), (R,1)) u8``.
+
+    Shared by the Pallas kernel body and :mod:`compile.opcount`.
+    """
+    rows = x.shape[0]
+
+    # -- vpermi2b: 7-bit-indexed lookup; the MSB of the index is ignored by
+    #    the instruction, and the OR below restores its effect on validation.
+    v = jnp.take(dtable, x & 0x7F, axis=0, mode="clip")
+
+    # -- vpternlogd: ERROR |= x | v, OR-reduced to one byte per row. The
+    #    coordinator performs the single end-of-stream vpmovb2m-style check.
+    err = _or_reduce_rows(jnp.bitwise_or(x, v))
+    err = err.astype(jnp.uint8).reshape(rows, 1)
+
+    # -- vpmaddubsw + vpmaddwd: [00dddddd|00cccccc|00bbbbbb|00aaaaaa] ->
+    #    24-bit groups a<<18 | b<<12 | c<<6 | d, via two madd stages.
+    g = v.reshape(rows, 16, 4)
+    a, b, c, d = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    ab = (a << 6) | b           # vpmaddubsw: a*2^6 + b
+    cd = (c << 6) | d
+    w = (ab << 12) | cd         # vpmaddwd:   ab*2^12 + cd
+
+    # -- vpermb: compact 3-of-4 bytes with the §3.2 byte-order fixup.
+    #    (No & 0xFF masks: the uint8 convert below truncates mod 256.)
+    o = jnp.stack([w >> 16, w >> 8, w], axis=-1)
+    return o.reshape(rows, 48).astype(jnp.uint8), err
+
+
+def _decode_kernel(dtable_ref, in_ref, out_ref, err_ref):
+    """One grid step: decode ``(tile_rows, 64)`` chars to ``(tile_rows, 48)``."""
+    x = in_ref[...].astype(jnp.int32)  # (R, 64)
+    dtable = dtable_ref[...].astype(jnp.int32)
+    out, err = decode_math(x, dtable)
+    out_ref[...] = out
+    err_ref[...] = err
+
+
+def _decode_kernel_immediate(dtable_ref, in_ref, out_ref, err_ref):
+    """E10 ablation: per-row validity decided in-kernel (select), not deferred."""
+    x = in_ref[...].astype(jnp.int32)
+    rows = x.shape[0]
+    dtable = dtable_ref[...].astype(jnp.int32)
+    v = jnp.take(dtable, x & 0x7F, axis=0, mode="clip")
+    bad = jnp.bitwise_or(x, v) >= 0x80            # per-byte predicate
+    row_bad = bad.any(axis=1)
+    err_ref[...] = jnp.where(row_bad, 0x80, 0).astype(jnp.uint8).reshape(rows, 1)
+    v = jnp.where(bad, 0, v)                      # scrub invalid lanes
+    g = v.reshape(rows, 16, 4)
+    a, b, c, d = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    w = (((a << 6) | b) << 12) | ((c << 6) | d)
+    o = jnp.stack([(w >> 16) & 0xFF, (w >> 8) & 0xFF, w & 0xFF], axis=-1)
+    out_ref[...] = o.reshape(rows, 48).astype(jnp.uint8)
+
+
+_KERNELS = {"deferred": _decode_kernel, "immediate": _decode_kernel_immediate}
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "validation"))
+def decode_blocks(
+    blocks: jnp.ndarray,
+    dtable: jnp.ndarray,
+    *,
+    tile_rows: int = 64,
+    validation: str = "deferred",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode ``(rows, 64) u8`` chars to ``((rows, 48) u8, (rows, 1) u8)``.
+
+    The second output is the per-row error byte; MSB set means the row
+    contained a character outside the variant's alphabet (padding '='
+    included — padded tails belong to the coordinator's scalar epilogue).
+    """
+    rows, width = blocks.shape
+    if width != 64:
+        raise ValueError(f"decode blocks must be (rows, 64), got width {width}")
+    if rows % tile_rows != 0:
+        raise ValueError(f"rows={rows} not a multiple of tile_rows={tile_rows}")
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _KERNELS[validation],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((128,), lambda i: (0,)),  # decode table: resident
+            pl.BlockSpec((tile_rows, 64), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_rows, 48), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 48), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.uint8),
+        ],
+        interpret=True,
+    )(dtable, blocks)

@@ -1,0 +1,87 @@
+"""Layer-1 Pallas encode kernel — the paper's §3.1 dataflow on TPU lanes.
+
+The AVX-512 encoder is three instructions per 64-byte register:
+
+    vpermb          (s1,s2,s3) -> (s2,s1,s3,s2) byte shuffle
+    vpmultishiftqb  rotate-extract the four 6-bit fields per 32-bit lane
+    vpermb          64-entry alphabet lookup
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): each 32-bit lane of the
+VPU carries one shuffled group ``t = s2 | s1<<8 | s3<<16 | s2<<24``; the
+multishift becomes four per-lane right-shifts with shift counts
+``{10, 4, 22, 16}`` — the exact shift list of the paper — masked to six
+bits; the final ``vpermb`` is a 64-entry gather from the *alphabet input*,
+which keeps the executable variant-agnostic at runtime.
+
+The kernel must be lowered with ``interpret=True``: real-TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: The paper's multishift list, §3.1 (per 32-bit half of the 64-bit qword).
+MULTISHIFT = (10, 4, 22, 16)
+
+
+def encode_math(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """The pure dataflow of the kernel: ``(R, 48) i32 -> (R, 64) u8``.
+
+    Shared by the Pallas kernel body and :mod:`compile.opcount`, which
+    counts this function's jaxpr equations as the instruction-count analog.
+    """
+    rows = x.shape[0]
+    g = x.reshape(rows, 16, 3)
+    s1, s2, s3 = g[..., 0], g[..., 1], g[..., 2]
+
+    # -- vpermb #1: shuffle (s1,s2,s3) -> (s2,s1,s3,s2), one 32-bit lane/group.
+    t = s2 | (s1 << 8) | (s3 << 16) | (s2 << 24)
+
+    # -- vpmultishiftqb: four rotate-extracts; only the 6 LSBs survive, so
+    #    plain right-shifts suffice on 32-bit lanes (all shifts < 26).
+    fields = [(t >> sh) & 0x3F for sh in MULTISHIFT]
+    idx = jnp.stack(fields, axis=-1).reshape(rows, 64)
+
+    # -- vpermb #2: alphabet lookup from the runtime table input.
+    return jnp.take(table, idx, axis=0, mode="clip").astype(jnp.uint8)
+
+
+def _encode_kernel(table_ref, in_ref, out_ref):
+    """One grid step: encode a ``(tile_rows, 48)`` tile to ``(tile_rows, 64)``."""
+    x = in_ref[...].astype(jnp.int32)  # (R, 48)
+    table = table_ref[...].astype(jnp.int32)
+    out_ref[...] = encode_math(x, table)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def encode_blocks(
+    blocks: jnp.ndarray, table: jnp.ndarray, *, tile_rows: int = 64
+) -> jnp.ndarray:
+    """Encode ``(rows, 48) u8`` blocks to ``(rows, 64) u8`` base64 chars.
+
+    ``rows`` must be a multiple of ``tile_rows``; the grid streams row
+    tiles through VMEM (``BlockSpec`` below is the HBM<->VMEM schedule the
+    paper expressed with its 64-byte register loop).
+    """
+    rows, width = blocks.shape
+    if width != 48:
+        raise ValueError(f"encode blocks must be (rows, 48), got width {width}")
+    if rows % tile_rows != 0:
+        raise ValueError(f"rows={rows} not a multiple of tile_rows={tile_rows}")
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((64,), lambda i: (0,)),  # alphabet: resident
+            pl.BlockSpec((tile_rows, 48), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 64), jnp.uint8),
+        interpret=True,
+    )(table, blocks)

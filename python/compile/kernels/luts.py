@@ -1,0 +1,64 @@
+"""Lookup-table builders for base64 variants.
+
+The paper's versatility claim (§3.1, §5) rests on the fact that both the
+encoder's ``vpermb`` alphabet register and the decoder's ``vpermi2b``
+128-entry table are *data*, not code: any base64 variant is supported at
+runtime by swapping 64/128 bytes of constants. We preserve that property
+end-to-end: the AOT-compiled executables take these tables as inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: RFC 4648 §4 standard alphabet (Table 1 of the paper).
+STANDARD_ALPHABET = (
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/"
+)
+
+#: RFC 4648 §5 URL-and-filename-safe alphabet ('+','/' -> '-','_').
+URL_ALPHABET = (
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789-_"
+)
+
+#: IMAP mailbox-name variant (RFC 3501: '/' -> ',').
+IMAP_ALPHABET = (
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+,"
+)
+
+#: Sentinel marking a byte that is not part of the alphabet. Mirrors the
+#: paper's choice of 0x80: ORing the lookup result with the input yields a
+#: byte with the MSB set iff the input was invalid (including non-ASCII).
+INVALID = 0x80
+
+
+def encode_table(alphabet: bytes = STANDARD_ALPHABET) -> np.ndarray:
+    """64-entry value->ASCII table (the encoder's ``vpermb`` register)."""
+    if len(alphabet) != 64:
+        raise ValueError(f"alphabet must have 64 chars, got {len(alphabet)}")
+    if len(set(alphabet)) != 64:
+        raise ValueError("alphabet characters must be distinct")
+    if any(c >= 0x80 for c in alphabet):
+        raise ValueError("alphabet must be ASCII")
+    return np.frombuffer(alphabet, dtype=np.uint8).copy()
+
+
+def decode_table(alphabet: bytes = STANDARD_ALPHABET) -> np.ndarray:
+    """128-entry ASCII->value table (the decoder's ``vpermi2b`` registers).
+
+    Entries not in the alphabet hold :data:`INVALID` (0x80). Note '=' is
+    *not* in the table: padding is handled by the tail code path, exactly
+    as in the paper's scalar epilogue.
+    """
+    encode_table(alphabet)  # validate
+    table = np.full(128, INVALID, dtype=np.uint8)
+    for value, char in enumerate(alphabet):
+        table[char] = value
+    return table
+
+
+VARIANTS = {
+    "standard": STANDARD_ALPHABET,
+    "url": URL_ALPHABET,
+    "imap": IMAP_ALPHABET,
+}

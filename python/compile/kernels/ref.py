@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracles for the base64 kernels.
+
+These are the ground truth for pytest: straightforward, unvectorized-in-
+spirit implementations of RFC 4648 block coding, written with jnp so they
+can run under jit for shape checks but making no attempt at the paper's
+instruction-count tricks. They are additionally cross-checked against
+Python's stdlib ``base64`` in the test suite.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import luts
+
+
+def encode_ref(blocks: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Encode ``(rows, 48) u8`` into ``(rows, 64) u8`` base64 characters.
+
+    Implements the mapping of §2 verbatim: bytes ``s1,s2,s3`` map to the
+    6-bit values ``s1÷4``, ``(s2÷16)+(s1×16) mod 64``, ``(s2×4) mod 64 +
+    (s3÷64)``, ``s3 mod 64``.
+    """
+    rows = blocks.shape[0]
+    g = blocks.reshape(rows, 16, 3).astype(jnp.int32)
+    s1, s2, s3 = g[..., 0], g[..., 1], g[..., 2]
+    a = s1 // 4
+    b = (s2 // 16) + (s1 * 16) % 64
+    c = (s2 * 4) % 64 + s3 // 64
+    d = s3 % 64
+    idx = jnp.stack([a, b, c, d], axis=-1).reshape(rows, 64)
+    return jnp.take(table.astype(jnp.int32), idx, axis=0).astype(jnp.uint8)
+
+
+def decode_ref(
+    blocks: jnp.ndarray, dtable: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode ``(rows, 64) u8`` ASCII into ``((rows, 48) u8, (rows, 1) u8)``.
+
+    The second output is the per-row error accumulator byte: the bitwise OR
+    of ``input | table[input]`` over the row; its MSB is set iff the row
+    contained any byte outside the base64 alphabet (paper §3.2).
+    Implements the §2 inverse mapping: values ``a,b,c,d`` map back to
+    ``(a×4)+(b÷16)``, ``(b×16) mod 256 + (c÷4)``, ``(c×64) mod 256 + d``.
+    """
+    rows = blocks.shape[0]
+    x = blocks.astype(jnp.int32)
+    v = jnp.take(dtable.astype(jnp.int32), x & 0x7F, axis=0)
+    # Non-ASCII inputs (MSB set) must be flagged even though the 7-bit
+    # lookup index wraps: OR with the original input keeps their MSB.
+    err_bytes = jnp.bitwise_or(x, v)
+    err = err_bytes[:, 0]
+    for i in range(1, 64):
+        err = jnp.bitwise_or(err, err_bytes[:, i])
+    err = err.astype(jnp.uint8)
+
+    g = v.reshape(rows, 16, 4)
+    a, b, c, d = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    o0 = (a * 4) + (b // 16)
+    o1 = (b * 16) % 256 + (c // 4)
+    o2 = (c * 64) % 256 + d
+    out = jnp.stack([o0, o1, o2], axis=-1).reshape(rows, 48)
+    return out.astype(jnp.uint8), err.reshape(rows, 1)
+
+
+# ---------------------------------------------------------------------------
+# numpy/stdlib-level helpers used by the tests and the AOT self-check.
+# ---------------------------------------------------------------------------
+
+
+def encode_bytes(data: bytes, alphabet: bytes = luts.STANDARD_ALPHABET) -> bytes:
+    """RFC 4648 encode of arbitrary bytes (with '=' padding), via stdlib."""
+    import base64 as b64
+
+    std = b64.b64encode(data)
+    if alphabet == luts.STANDARD_ALPHABET:
+        return std
+    trans = bytes.maketrans(luts.STANDARD_ALPHABET, alphabet)
+    return std.translate(trans)
+
+
+def random_blocks(rows: int, width: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=(rows, width), dtype=np.uint8)
+
+
+def random_base64_blocks(
+    rows: int, seed: int, alphabet: bytes = luts.STANDARD_ALPHABET
+) -> np.ndarray:
+    """(rows, 64) of valid base64 characters (uniform over the alphabet)."""
+    rng = np.random.default_rng(seed)
+    alpha = np.frombuffer(alphabet, dtype=np.uint8)
+    return alpha[rng.integers(0, 64, size=(rows, 64))]

@@ -1,0 +1,66 @@
+"""Layer-2 JAX graphs: the batched base64 codec computations.
+
+These are the computations the Rust coordinator executes via PJRT. Each is
+a pure function over u8 arrays, calling the Layer-1 Pallas kernels, jitted
+and AOT-lowered by :mod:`compile.aot` for a fixed set of row counts (the
+coordinator's size classes). The alphabet / decode tables are *arguments*
+so one executable serves every base64 variant at runtime (paper §5).
+
+Entry points (all shapes static at lowering time):
+
+* ``encode(blocks, table)``            -> chars
+* ``decode(chars, dtable)``            -> (blocks, err)
+* ``validate(chars, dtable)``          -> err           (validation-only)
+* ``roundtrip(blocks, table, dtable)`` -> (blocks', err) — self-check graph
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import avx2_style, decode, encode
+
+
+def encode_fn(blocks: jnp.ndarray, table: jnp.ndarray, *, tile_rows: int = 64):
+    """Encode ``(rows, 48) u8`` -> 1-tuple of ``(rows, 64) u8``."""
+    return (encode.encode_blocks(blocks, table, tile_rows=tile_rows),)
+
+
+def decode_fn(chars: jnp.ndarray, dtable: jnp.ndarray, *, tile_rows: int = 64):
+    """Decode ``(rows, 64) u8`` -> ``((rows, 48) u8, (rows, 1) u8 err)``."""
+    out, err = decode.decode_blocks(chars, dtable, tile_rows=tile_rows)
+    return (out, err)
+
+
+def validate_fn(chars: jnp.ndarray, dtable: jnp.ndarray, *, tile_rows: int = 64):
+    """Validation-only graph: ``(rows, 64) u8`` -> ``(rows, 1) u8`` err.
+
+    Used by the coordinator's ``validate`` request type; XLA dead-code
+    eliminates the pack stage, leaving the lookup + ternlog accumulate.
+    """
+    _, err = decode.decode_blocks(chars, dtable, tile_rows=tile_rows)
+    return (err,)
+
+
+def roundtrip_fn(
+    blocks: jnp.ndarray,
+    table: jnp.ndarray,
+    dtable: jnp.ndarray,
+    *,
+    tile_rows: int = 64,
+):
+    """encode ∘ decode self-check graph (used by `b64simd selftest`)."""
+    chars = encode.encode_blocks(blocks, table, tile_rows=tile_rows)
+    out, err = decode.decode_blocks(chars, dtable, tile_rows=tile_rows)
+    return (out, err)
+
+
+def encode_avx2_fn(blocks: jnp.ndarray, *, tile_rows: int = 64):
+    """2018-baseline encode graph (standard alphabet; E2 op counting)."""
+    return (avx2_style.encode_blocks_avx2(blocks, tile_rows=tile_rows),)
+
+
+def decode_avx2_fn(chars: jnp.ndarray, *, tile_rows: int = 64):
+    """2018-baseline decode graph (standard alphabet; E2 op counting)."""
+    out, err = avx2_style.decode_blocks_avx2(chars, tile_rows=tile_rows)
+    return (out, err)

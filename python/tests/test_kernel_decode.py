@@ -1,0 +1,149 @@
+"""L1 decode kernel: Pallas vs ref.py vs stdlib, plus error-path tests."""
+
+import base64
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import avx2_style, decode, encode, luts, ref
+
+TAB = luts.encode_table()
+DTAB = luts.decode_table()
+
+
+def encoded(rows, seed):
+    blocks = ref.random_blocks(rows, 48, seed=seed)
+    chars = np.frombuffer(
+        base64.b64encode(blocks.tobytes()), dtype=np.uint8
+    ).reshape(rows, 64)
+    return blocks, chars
+
+
+@pytest.mark.parametrize("rows,tile", [(16, 16), (64, 16), (64, 64), (256, 32)])
+def test_decode_roundtrip(rows, tile):
+    blocks, chars = encoded(rows, seed=rows)
+    out, err = decode.decode_blocks(chars, DTAB, tile_rows=tile)
+    assert np.array_equal(np.asarray(out), blocks)
+    assert int(np.asarray(err).max()) < 0x80
+
+
+def test_decode_matches_ref_oracle():
+    _, chars = encoded(128, seed=9)
+    out, err = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    rout, rerr = ref.decode_ref(chars, DTAB)
+    assert np.array_equal(np.asarray(out), np.asarray(rout))
+    assert np.array_equal(np.asarray(err), np.asarray(rerr))
+
+
+@pytest.mark.parametrize(
+    "bad_byte",
+    [ord("="), ord(" "), ord("\n"), 0x00, 0x7F, 0x80, 0xFF, ord("-"), ord("_")],
+)
+def test_decode_flags_invalid_bytes(bad_byte):
+    """Every non-alphabet byte — including '=' and non-ASCII — sets the flag."""
+    _, chars = encoded(16, seed=bad_byte)
+    chars = chars.copy()
+    chars[7, 33] = bad_byte
+    _, err = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    flags = np.asarray(err)[:, 0] >= 0x80
+    assert flags[7]
+    assert not flags[np.arange(16) != 7].any()
+
+
+def test_decode_error_is_per_row_exact():
+    _, chars = encoded(64, seed=1)
+    chars = chars.copy()
+    bad_rows = [0, 13, 63]
+    for r in bad_rows:
+        chars[r, r % 64] = 0xF0
+    _, err = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    flags = set(np.flatnonzero(np.asarray(err)[:, 0] >= 0x80).tolist())
+    assert flags == set(bad_rows)
+
+
+def test_decode_validation_modes_agree():
+    """E10: deferred (vpternlogd-style) vs immediate flag identically."""
+    _, chars = encoded(64, seed=21)
+    chars = chars.copy()
+    chars[5, 5] = ord("=")
+    chars[40, 0] = 0x90
+    od, ed = decode.decode_blocks(chars, DTAB, tile_rows=16, validation="deferred")
+    oi, ei = decode.decode_blocks(chars, DTAB, tile_rows=16, validation="immediate")
+    assert np.array_equal(
+        np.asarray(ed)[:, 0] >= 0x80, np.asarray(ei)[:, 0] >= 0x80
+    )
+    good = np.asarray(ed)[:, 0] < 0x80
+    assert np.array_equal(np.asarray(od)[good], np.asarray(oi)[good])
+
+
+@pytest.mark.parametrize("name", list(luts.VARIANTS))
+def test_decode_variants_via_table_input(name):
+    """E8: decoding any variant through the same kernel."""
+    alpha = luts.VARIANTS[name]
+    blocks = ref.random_blocks(32, 48, seed=17)
+    chars_b = ref.encode_bytes(blocks.tobytes(), alpha)
+    chars = np.frombuffer(chars_b, dtype=np.uint8).reshape(32, 64)
+    out, err = decode.decode_blocks(chars, luts.decode_table(alpha), tile_rows=16)
+    assert np.array_equal(np.asarray(out), blocks)
+    assert int(np.asarray(err).max()) < 0x80
+
+
+def test_url_chars_invalid_under_standard_table():
+    """'-' and '_' must be rejected by the standard table and vice versa."""
+    blocks = ref.random_blocks(16, 48, seed=23)
+    url_chars = np.frombuffer(
+        ref.encode_bytes(blocks.tobytes(), luts.URL_ALPHABET), dtype=np.uint8
+    ).reshape(16, 64)
+    has_specials = np.isin(url_chars, [ord("-"), ord("_")]).any(axis=1)
+    assert has_specials.any(), "seed must produce at least one 62/63 value"
+    _, err = decode.decode_blocks(url_chars, DTAB, tile_rows=16)
+    assert np.array_equal(np.asarray(err)[:, 0] >= 0x80, has_specials)
+
+
+def test_decode_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        decode.decode_blocks(np.zeros((16, 63), np.uint8), DTAB)
+    with pytest.raises(ValueError):
+        decode.decode_blocks(np.zeros((20, 64), np.uint8), DTAB, tile_rows=16)
+
+
+def test_avx2_style_decode_matches_fused():
+    blocks, chars = encoded(64, seed=31)
+    of, ef = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    oa, ea = avx2_style.decode_blocks_avx2(chars, tile_rows=16)
+    assert np.array_equal(np.asarray(of), np.asarray(oa))
+    assert int(np.asarray(ef).max()) < 0x80 and int(np.asarray(ea).max()) == 0
+
+
+def test_encode_decode_composition():
+    blocks = ref.random_blocks(256, 48, seed=2)
+    chars = encode.encode_blocks(blocks, TAB, tile_rows=16)
+    out, err = decode.decode_blocks(np.asarray(chars), DTAB, tile_rows=16)
+    assert np.array_equal(np.asarray(out), blocks)
+    assert int(np.asarray(err).max()) < 0x80
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([8, 16]),
+)
+def test_decode_hypothesis_roundtrip(rows, seed, tile):
+    blocks, chars = encoded(rows, seed=seed)
+    out, err = decode.decode_blocks(chars, DTAB, tile_rows=tile)
+    assert np.array_equal(np.asarray(out), blocks)
+    assert int(np.asarray(err).max()) < 0x80
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=64, max_size=64))
+def test_decode_hypothesis_arbitrary_bytes_never_crash(data):
+    """Any 64 bytes decode without crashing; err flag iff any invalid byte."""
+    chars = np.frombuffer(data, dtype=np.uint8).reshape(1, 64)
+    _, err = decode.decode_blocks(chars, DTAB, tile_rows=1)
+    valid = set(luts.STANDARD_ALPHABET)
+    expect_bad = any(b not in valid for b in data)
+    assert (int(np.asarray(err)[0, 0]) >= 0x80) == expect_bad

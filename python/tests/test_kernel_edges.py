@@ -1,0 +1,100 @@
+"""Edge-case sweeps the main kernel suites don't cover: extreme tile
+shapes, the AVX2-style kernels' error paths, and AOT CLI behavior."""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile.kernels import avx2_style, decode, encode, luts, ref
+
+TAB = luts.encode_table()
+DTAB = luts.decode_table()
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 8, 64])
+def test_encode_every_tile_height_divisor(tile):
+    blocks = ref.random_blocks(64, 48, seed=tile)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=tile))
+    exp = np.asarray(ref.encode_ref(blocks, TAB))
+    assert np.array_equal(got, exp)
+
+
+def test_single_row_single_tile():
+    blocks = ref.random_blocks(1, 48, seed=0)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=1))
+    out, err = decode.decode_blocks(got, DTAB, tile_rows=1)
+    assert np.array_equal(np.asarray(out), blocks)
+    assert int(np.asarray(err)[0, 0]) < 0x80
+
+
+def test_avx2_style_flags_errors_like_fused():
+    chars = ref.random_base64_blocks(32, seed=5).copy()
+    chars[3, 10] = ord("=")
+    chars[17, 0] = 0xB0
+    _, e_fused = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    _, e_avx2 = avx2_style.decode_blocks_avx2(chars, tile_rows=16)
+    f = np.asarray(e_fused)[:, 0] >= 0x80
+    a = np.asarray(e_avx2)[:, 0] >= 0x80
+    assert np.array_equal(f, a)
+    assert f[3] and f[17] and f.sum() == 2
+
+
+def test_error_byte_value_matches_or_semantics():
+    """The deferred error byte is the OR over (input | lookup): verify the
+    exact byte value, not just the flag bit, against the oracle."""
+    chars = ref.random_base64_blocks(16, seed=8)
+    _, e_kernel = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    _, e_ref = ref.decode_ref(chars, DTAB)
+    assert np.array_equal(np.asarray(e_kernel), np.asarray(e_ref))
+
+
+def test_all_64_values_roundtrip_every_position():
+    """Each 6-bit value in each of the 64 positions of a block."""
+    rows = 64
+    chars = np.empty((rows, 64), dtype=np.uint8)
+    for r in range(rows):
+        # Row r: value (r + col) % 64 at each column.
+        for c in range(64):
+            chars[r, c] = TAB[(r + c) % 64]
+    out, err = decode.decode_blocks(chars, DTAB, tile_rows=16)
+    assert int(np.asarray(err).max()) < 0x80
+    back = np.asarray(encode.encode_blocks(np.asarray(out), TAB, tile_rows=16))
+    assert np.array_equal(back, chars)
+
+
+def test_aot_cli_runs(tmp_path):
+    """`python -m compile.aot --out-dir X` is the Makefile contract."""
+    out = tmp_path / "arts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        capture_output=True,
+        text=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    assert r.returncode == 0, r.stderr
+    assert (out / "manifest.json").exists()
+    assert "wrote 13 artifacts" in r.stdout
+
+
+def test_opcount_cli_runs():
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.opcount", "--rows", "16"],
+        capture_output=True,
+        text=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    assert r.returncode == 0, r.stderr
+    assert "reduction factors" in r.stdout
+
+
+def test_roofline_cli_runs():
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.roofline"],
+        capture_output=True,
+        text=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    assert r.returncode == 0, r.stderr
+    assert "roofline" in r.stdout

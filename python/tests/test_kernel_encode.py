@@ -1,0 +1,106 @@
+"""L1 encode kernel: Pallas vs ref.py vs Python stdlib base64."""
+
+import base64
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import avx2_style, encode, luts, ref
+
+TAB = luts.encode_table()
+
+
+def stdlib_encode(blocks: np.ndarray, alphabet=luts.STANDARD_ALPHABET) -> np.ndarray:
+    rows = blocks.shape[0]
+    out = ref.encode_bytes(blocks.tobytes(), alphabet)
+    return np.frombuffer(out, dtype=np.uint8).reshape(rows, 64)
+
+
+@pytest.mark.parametrize("rows,tile", [(16, 16), (64, 16), (64, 64), (256, 32)])
+def test_encode_matches_stdlib(rows, tile):
+    blocks = ref.random_blocks(rows, 48, seed=rows + tile)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=tile))
+    assert np.array_equal(got, stdlib_encode(blocks))
+
+
+def test_encode_matches_ref_oracle():
+    blocks = ref.random_blocks(128, 48, seed=7)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=16))
+    exp = np.asarray(ref.encode_ref(blocks, TAB))
+    assert np.array_equal(got, exp)
+
+
+@pytest.mark.parametrize("fill", [0x00, 0xFF, 0x3F, 0x80])
+def test_encode_constant_fill(fill):
+    blocks = np.full((16, 48), fill, dtype=np.uint8)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=16))
+    assert np.array_equal(got, stdlib_encode(blocks))
+
+
+def test_encode_all_byte_values():
+    """Every possible input byte in every position-mod-3 slot."""
+    data = bytes(range(256)) * 3  # 768 bytes = 16 rows of 48
+    blocks = np.frombuffer(data, dtype=np.uint8).reshape(16, 48)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=16))
+    assert np.array_equal(got, stdlib_encode(blocks))
+
+
+@pytest.mark.parametrize("name", list(luts.VARIANTS))
+def test_encode_variants_via_table_input(name):
+    """E8: one kernel, every variant — only the table input changes."""
+    alpha = luts.VARIANTS[name]
+    blocks = ref.random_blocks(32, 48, seed=3)
+    got = np.asarray(
+        encode.encode_blocks(blocks, luts.encode_table(alpha), tile_rows=16)
+    )
+    assert np.array_equal(got, stdlib_encode(blocks, alpha))
+
+
+def test_encode_custom_runtime_alphabet():
+    """E8: an arbitrary permuted alphabet works without re-lowering."""
+    rng = np.random.default_rng(42)
+    perm = rng.permutation(64)
+    alpha = bytes(luts.STANDARD_ALPHABET[i] for i in perm)
+    blocks = ref.random_blocks(16, 48, seed=11)
+    got = np.asarray(
+        encode.encode_blocks(blocks, luts.encode_table(alpha), tile_rows=16)
+    )
+    assert np.array_equal(got, stdlib_encode(blocks, alpha))
+
+
+def test_encode_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        encode.encode_blocks(np.zeros((16, 47), np.uint8), TAB)
+    with pytest.raises(ValueError):
+        encode.encode_blocks(np.zeros((17, 48), np.uint8), TAB, tile_rows=16)
+
+
+def test_avx2_style_encode_matches_fused():
+    blocks = ref.random_blocks(64, 48, seed=5)
+    fused = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=16))
+    a2 = np.asarray(avx2_style.encode_blocks_avx2(blocks, tile_rows=16))
+    assert np.array_equal(fused, a2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([16, 32, 48, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([8, 16]),
+)
+def test_encode_hypothesis_sweep(rows, seed, tile):
+    blocks = ref.random_blocks(rows, 48, seed=seed)
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=tile))
+    assert np.array_equal(got, stdlib_encode(blocks))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=48, max_size=48))
+def test_encode_hypothesis_adversarial_bytes(data):
+    blocks = np.frombuffer(data, dtype=np.uint8).reshape(1, 48)
+    # tile_rows=1: single-row tile still correct.
+    got = np.asarray(encode.encode_blocks(blocks, TAB, tile_rows=1))
+    exp = np.frombuffer(base64.b64encode(data), dtype=np.uint8).reshape(1, 64)
+    assert np.array_equal(got, exp)

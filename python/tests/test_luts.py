@@ -1,0 +1,62 @@
+"""E1: Table 1 of the paper — the base64 value<->ASCII bijection."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import luts
+
+# Spot values straight out of Table 1.
+TABLE1_SAMPLES = [
+    (0, 0x41), (15, 0x50), (16, 0x51), (25, 0x5A),
+    (26, 0x61), (31, 0x66), (32, 0x67), (51, 0x7A),
+    (52, 0x30), (61, 0x39), (62, 0x2B), (63, 0x2F),
+]
+
+
+def test_encode_table_matches_table1():
+    t = luts.encode_table()
+    for value, ascii_code in TABLE1_SAMPLES:
+        assert t[value] == ascii_code
+
+
+def test_encode_table_full_bijection():
+    t = luts.encode_table()
+    assert len(set(t.tolist())) == 64
+    d = luts.decode_table()
+    for v in range(64):
+        assert d[t[v]] == v
+
+
+def test_decode_table_invalid_everywhere_else():
+    t = set(luts.encode_table().tolist())
+    d = luts.decode_table()
+    for c in range(128):
+        if c not in t:
+            assert d[c] == luts.INVALID
+    # '=' padding is NOT decodable by the block path.
+    assert d[ord("=")] == luts.INVALID
+
+
+@pytest.mark.parametrize("name", list(luts.VARIANTS))
+def test_variant_tables_roundtrip(name):
+    alpha = luts.VARIANTS[name]
+    t = luts.encode_table(alpha)
+    d = luts.decode_table(alpha)
+    for v in range(64):
+        assert d[t[v]] == v
+
+
+def test_url_variant_differs_only_in_62_63():
+    std = luts.encode_table(luts.STANDARD_ALPHABET)
+    url = luts.encode_table(luts.URL_ALPHABET)
+    assert np.array_equal(std[:62], url[:62])
+    assert url[62] == ord("-") and url[63] == ord("_")
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [b"A" * 64, b"".join(bytes([i]) for i in range(63)) + b"\xff", b"short"],
+)
+def test_bad_alphabets_rejected(bad):
+    with pytest.raises(ValueError):
+        luts.encode_table(bad)

@@ -1,0 +1,56 @@
+"""Tests for the build-time perf tooling: opcount and roofline."""
+
+import pytest
+
+from compile import opcount, roofline
+
+
+def test_opcount_structure():
+    res = opcount.analyze(rows=16)
+    assert set(res["kernels"]) == {
+        "encode_fused",
+        "encode_avx2_style",
+        "decode_fused",
+        "decode_avx2_style",
+    }
+    for k in res["kernels"].values():
+        assert k["compute_ops"] > 0
+        assert k["total_ops"] >= k["compute_ops"]
+
+
+def test_opcount_row_invariance():
+    """jaxpr op counts are per-tile, independent of the row count."""
+    a = opcount.analyze(rows=16)["kernels"]["encode_fused"]["compute_ops"]
+    b = opcount.analyze(rows=64)["kernels"]["encode_fused"]["compute_ops"]
+    assert a == b
+
+
+def test_opcount_excludes_shape_ops():
+    counts = opcount.count_jaxpr(
+        lambda x: x.reshape(4, 4).T.reshape(16) + 1,
+        __import__("jax.numpy", fromlist=["zeros"]).zeros(16, "int32"),
+    )
+    assert opcount.jaxpr_compute_ops(counts) == 1  # only the add
+
+
+def test_roofline_estimates_sane():
+    for kernel in ("encode_fused", "decode_fused"):
+        e = roofline.estimate(kernel, tile_rows=16)
+        assert 0 < e.vmem_utilization < 0.05, "tiles must be tiny vs VMEM"
+        assert e.roofline_gbps == min(e.bandwidth_bound_gbps, e.issue_bound_gbps)
+        assert e.bound in ("bandwidth", "issue")
+        assert e.hbm_bytes_per_tile == 16 * (48 + 64) + (16 if kernel.startswith("decode") else 0)
+
+
+def test_roofline_scales_with_tile():
+    small = roofline.estimate("encode_fused", tile_rows=8)
+    big = roofline.estimate("encode_fused", tile_rows=256)
+    assert big.vmem_resident_bytes > small.vmem_resident_bytes
+    # Per-byte roofline is tile-size independent in this model.
+    assert big.roofline_gbps == pytest.approx(small.roofline_gbps, rel=0.01)
+
+
+def test_roofline_sweep_covers_both_kernels():
+    rows = roofline.sweep((8, 16))
+    assert {r.kernel for r in rows} == {"encode_fused", "decode_fused"}
+    assert len(rows) == 4

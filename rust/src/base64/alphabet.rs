@@ -1,0 +1,205 @@
+//! Base64 variants as runtime data — the paper's versatility claim.
+//!
+//! Every codec in this crate (and the AOT-compiled PJRT executables) takes
+//! the 64-byte alphabet / 128-byte decode table as *values*, mirroring the
+//! paper's `vpermb`/`vpermi2b` table registers: "any 64-byte mapping is
+//! feasible, even if determined dynamically at runtime" (§3.1).
+
+use super::tables::{DecodeTable, EncodeTable};
+
+/// RFC 4648 §4 standard alphabet (Table 1 of the paper).
+pub const STANDARD: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// RFC 4648 §5 URL-and-filename-safe alphabet.
+pub const URL: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789-_";
+
+/// RFC 3501 IMAP mailbox-name variant.
+pub const IMAP: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+,";
+
+/// A validated base64 variant: 64 distinct ASCII characters plus the
+/// padding character, with both direction tables precomputed.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Alphabet {
+    name: &'static str,
+    chars: [u8; 64],
+    pad: u8,
+    encode: EncodeTable,
+    decode: DecodeTable,
+}
+
+impl std::fmt::Debug for Alphabet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Alphabet")
+            .field("name", &self.name)
+            .field("chars", &String::from_utf8_lossy(&self.chars))
+            .field("pad", &(self.pad as char))
+            .finish()
+    }
+}
+
+/// Errors produced when constructing an [`Alphabet`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlphabetError {
+    /// A character is not 7-bit ASCII.
+    NonAscii(u8),
+    /// A character appears twice (or padding collides with the alphabet).
+    Duplicate(u8),
+}
+
+impl std::fmt::Display for AlphabetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NonAscii(c) => write!(f, "non-ASCII alphabet byte 0x{c:02x}"),
+            Self::Duplicate(c) => write!(f, "duplicate alphabet byte 0x{c:02x}"),
+        }
+    }
+}
+
+impl std::error::Error for AlphabetError {}
+
+impl Alphabet {
+    /// Build a custom variant from 64 ASCII characters and a padding char.
+    pub fn new(name: &'static str, chars: [u8; 64], pad: u8) -> Result<Self, AlphabetError> {
+        let mut seen = [false; 128];
+        for &c in chars.iter().chain(std::iter::once(&pad)) {
+            if c >= 0x80 {
+                return Err(AlphabetError::NonAscii(c));
+            }
+            if seen[c as usize] {
+                return Err(AlphabetError::Duplicate(c));
+            }
+            seen[c as usize] = true;
+        }
+        let encode = EncodeTable::new(&chars);
+        let decode = DecodeTable::new(&chars);
+        Ok(Self { name, chars, pad, encode, decode })
+    }
+
+    /// The RFC 4648 standard variant ('+', '/', pad '=').
+    pub fn standard() -> Self {
+        Self::new("standard", *STANDARD, b'=').expect("standard alphabet is valid")
+    }
+
+    /// The RFC 4648 URL-safe variant ('-', '_', pad '=').
+    pub fn url() -> Self {
+        Self::new("url", *URL, b'=').expect("url alphabet is valid")
+    }
+
+    /// The RFC 3501 IMAP variant ('+', ',', pad '=').
+    pub fn imap() -> Self {
+        Self::new("imap", *IMAP, b'=').expect("imap alphabet is valid")
+    }
+
+    /// Look a variant up by name (CLI / server convenience).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "standard" => Some(Self::standard()),
+            "url" => Some(Self::url()),
+            "imap" => Some(Self::imap()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The 64 alphabet characters — the encoder's `vpermb` register.
+    pub fn chars(&self) -> &[u8; 64] {
+        &self.chars
+    }
+
+    /// The padding character (usually '=').
+    pub fn pad(&self) -> u8 {
+        self.pad
+    }
+
+    /// value -> char table.
+    pub fn encode_table(&self) -> &EncodeTable {
+        &self.encode
+    }
+
+    /// char -> value table (128 entries, [`INVALID`] elsewhere) — the
+    /// decoder's `vpermi2b` register pair.
+    pub fn decode_table(&self) -> &DecodeTable {
+        &self.decode
+    }
+
+    /// char -> 6-bit value, or `None` when outside the variant (including
+    /// all non-ASCII bytes, which the 7-bit table lookup would alias).
+    #[inline]
+    pub fn value_of(&self, c: u8) -> Option<u8> {
+        let v = self.decode.lookup(c);
+        ((c | v) & 0x80 == 0).then_some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_matches_table1() {
+        let a = Alphabet::standard();
+        // Spot values from Table 1 of the paper.
+        for (value, ch) in [(0u8, b'A'), (25, b'Z'), (26, b'a'), (51, b'z'), (52, b'0'), (61, b'9'), (62, b'+'), (63, b'/')] {
+            assert_eq!(a.chars()[value as usize], ch);
+            assert_eq!(a.value_of(ch), Some(value));
+        }
+    }
+
+    #[test]
+    fn url_variant_differs_only_at_62_63() {
+        let s = Alphabet::standard();
+        let u = Alphabet::url();
+        assert_eq!(&s.chars()[..62], &u.chars()[..62]);
+        assert_eq!(u.chars()[62], b'-');
+        assert_eq!(u.chars()[63], b'_');
+        assert_eq!(u.value_of(b'+'), None);
+        assert_eq!(u.value_of(b'-'), Some(62));
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut chars = *STANDARD;
+        chars[10] = b'A';
+        assert!(matches!(
+            Alphabet::new("dup", chars, b'='),
+            Err(AlphabetError::Duplicate(b'A'))
+        ));
+    }
+
+    #[test]
+    fn pad_collision_rejected() {
+        assert!(matches!(
+            Alphabet::new("padcol", *STANDARD, b'A'),
+            Err(AlphabetError::Duplicate(b'A'))
+        ));
+    }
+
+    #[test]
+    fn non_ascii_rejected() {
+        let mut chars = *STANDARD;
+        chars[0] = 0xC3;
+        assert!(matches!(
+            Alphabet::new("bad", chars, b'='),
+            Err(AlphabetError::NonAscii(0xC3))
+        ));
+    }
+
+    #[test]
+    fn custom_runtime_alphabet_roundtrips() {
+        // Rotate the standard alphabet — a "determined at runtime" mapping.
+        let mut chars = [0u8; 64];
+        for i in 0..64 {
+            chars[i] = STANDARD[(i + 17) % 64];
+        }
+        let a = Alphabet::new("rot17", chars, b'=').unwrap();
+        for v in 0..64u8 {
+            assert_eq!(a.value_of(a.chars()[v as usize]), Some(v));
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! The 2018 AVX2 codec (Muła & Lemire, ACM TWEB 12(3)) with real
+//! intrinsics — the baseline the paper measures its 7×/5.6×
+//! instruction-count reduction against.
+//!
+//! Encode, 11 instructions per 24 input bytes (§3.1 of the 2019 paper):
+//! `vpshufb` reshuffle, then the 5-op field step (`vpand`, `vpmulhuw`,
+//! `vpand`, `vpmullw`, `vpor`), then the 5-op range-arithmetic alphabet
+//! mapping (`vpsubusb`, `vpcmpgtb`, `vpsubb`, `vpshufb`, `vpaddb`).
+//!
+//! Decode, 14 instructions per 32 input chars (§3.2): hi/lo-nibble
+//! classification (2× `vpshufb` + `vpand`/`vpsrld`/`vptest`-class ops),
+//! the roll addition, `vpmaddubsw` + `vpmaddwd` packing, and the in-lane
+//! + cross-lane compaction (`vpshufb` + `vpermd`).
+//!
+//! Faithful to the original in its *limitation* too: the range arithmetic
+//! bakes the alphabet's byte ranges into constants, so this codec only
+//! supports range-structured alphabets (standard-layout; base64url's '_'
+//! collides with 'P'..'Z' in the hi-nibble classifier) — exactly the
+//! versatility gap the 2019 paper's table-driven AVX-512 design removes.
+
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::block::BlockCodec;
+use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::{encoded_len, Alphabet, Codec};
+
+/// Bytes consumed per encode iteration (two 12-byte lane loads).
+const ENC_IN: usize = 24;
+/// Chars produced per encode iteration.
+const ENC_OUT: usize = 32;
+/// Chars consumed per decode iteration.
+const DEC_IN: usize = 32;
+/// Bytes produced per decode iteration.
+const DEC_OUT: usize = 24;
+
+/// The 2018 AVX2 codec (standard-alphabet family only).
+pub struct Avx2Codec {
+    alphabet: Alphabet,
+    mode: Mode,
+    scalar_twin: BlockCodec,
+    /// pshufb offset table for the encoder's range arithmetic.
+    enc_offsets: [i8; 16],
+    /// lo-nibble classification row, derived from the alphabet's 62/63
+    /// characters (both must live in the 0x2X column).
+    dec_lut_lo: [i8; 16],
+    /// hi-nibble roll offsets; slot 1 is reached via the `eq(c63)` fixup.
+    dec_roll: [i8; 16],
+    /// The alphabet's value-63 character (the `vpcmpeqb` constant).
+    c63: u8,
+}
+
+impl Avx2Codec {
+    /// True iff the host can run this codec.
+    pub fn available() -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    /// The alphabet must have the 2018 codec's range structure:
+    /// contiguous A–Z-like, a–z-like and 0–9-like runs (standard/imap
+    /// qualify; arbitrary tables do not — use the AVX-512 or block codec).
+    pub fn supports(alphabet: &Alphabet) -> bool {
+        let c = alphabet.chars();
+        let contiguous = |range: std::ops::Range<usize>| {
+            range.clone().skip(1).all(|i| c[i] == c[i - 1] + 1)
+        };
+        // The decoder's nibble classifier needs the standard letter/digit
+        // ranges, and both extra characters in the 0x21..=0x2F column
+        // with distinct low nibbles.
+        c[..26] == *b"ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+            && c[26..52] == *b"abcdefghijklmnopqrstuvwxyz"
+            && c[52..62] == *b"0123456789"
+            && contiguous(0..26)
+            && (0x21..=0x2F).contains(&c[62])
+            && (0x21..=0x2F).contains(&c[63])
+            && c[62] & 0x0F != c[63] & 0x0F
+    }
+
+    /// Panics unless [`Self::available`] and [`Self::supports`] hold.
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self::with_mode(alphabet, Mode::Strict)
+    }
+
+    pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
+        assert!(Self::available(), "AVX2 not available on this CPU");
+        assert!(Self::supports(&alphabet), "alphabet lacks the 2018 range structure");
+        let c = alphabet.chars();
+        let mut enc_offsets = [0i8; 16];
+        enc_offsets[0] = c[0] as i8; // v in 0..26
+        enc_offsets[1] = (c[26] as i16 - 26) as i8; // 26..52
+        for (slot, off) in enc_offsets[2..12].iter_mut().enumerate() {
+            let _ = slot;
+            *off = (c[52] as i16 - 52) as i8; // 52..62
+        }
+        enc_offsets[12] = (c[62] as i16 - 62) as i8;
+        enc_offsets[13] = (c[63] as i16 - 63) as i8;
+        // lo-nibble classification row (see the bit assignments in the
+        // 2018 paper): 0x10 everywhere, 0x01 for the 0x2X column except
+        // the two extra chars, 0x02 for 0x3A..0x3F, 0x04 for '@'/'`',
+        // 0x08 for 0x5B../0x7B...
+        let mut dec_lut_lo = [0i8; 16];
+        for (lo, e) in dec_lut_lo.iter_mut().enumerate() {
+            let mut bits = 0x10u8;
+            if lo != (c[62] & 0x0F) as usize && lo != (c[63] & 0x0F) as usize {
+                bits |= 0x01;
+            }
+            if lo >= 0xA {
+                bits |= 0x02;
+            }
+            if lo == 0 {
+                bits |= 0x04;
+            }
+            if lo >= 0xB {
+                bits |= 0x08;
+            }
+            *e = bits as i8;
+        }
+        let mut dec_roll = [0i8; 16];
+        dec_roll[1] = (63i16 - c[63] as i16) as i8; // via the eq(c63) fixup
+        dec_roll[2] = (62i16 - c[62] as i16) as i8;
+        dec_roll[3] = 4; // '0'..'9' -> 52..61
+        dec_roll[4] = -65; // 'A'..'O'
+        dec_roll[5] = -65; // 'P'..'Z'
+        dec_roll[6] = -71; // 'a'..'o'
+        dec_roll[7] = -71; // 'p'..'z'
+        let c63 = c[63];
+        Self {
+            scalar_twin: BlockCodec::with_mode(alphabet.clone(), mode),
+            alphabet,
+            mode,
+            enc_offsets,
+            dec_lut_lo,
+            dec_roll,
+            c63,
+        }
+    }
+
+    pub fn alphabet(&self) -> &Alphabet {
+        &self.alphabet
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod kernels {
+    use super::*;
+
+    /// Encode whole 24-byte groups; returns bytes consumed.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn encode(input: &[u8], out: &mut Vec<u8>, offsets: &[i8; 16]) -> usize {
+        let iters = input.len() / ENC_IN;
+        if iters == 0 {
+            return 0;
+        }
+        let start = out.len();
+        out.resize(start + iters * ENC_OUT, 0);
+        let dst_base = out.as_mut_ptr().add(start);
+        // In-lane shuffle producing (s2,s1,s3,s2) per 32-bit group from
+        // 12 source bytes per 128-bit lane.
+        let reshuf = _mm_setr_epi8(1, 0, 2, 1, 4, 3, 5, 4, 7, 6, 8, 7, 10, 9, 11, 10);
+        let reshuf256 = _mm256_broadcastsi128_si256(reshuf);
+        let mask_ac = _mm256_set1_epi32(0x0FC0_FC00u32 as i32);
+        let mul_ac = _mm256_set1_epi32(0x0400_0040);
+        let mask_bd = _mm256_set1_epi32(0x003F_03F0);
+        let mul_bd = _mm256_set1_epi32(0x0100_0010);
+        let c51 = _mm256_set1_epi8(51);
+        let c25 = _mm256_set1_epi8(25);
+        let offs = _mm256_broadcastsi128_si256(_mm_loadu_si128(offsets.as_ptr() as *const _));
+        for i in 0..iters {
+            let src = input.as_ptr().add(i * ENC_IN);
+            // Two 12-byte lane loads (16-byte reads stay in bounds: the
+            // caller guarantees >= 4 spare bytes or uses the last-iter copy).
+            let lo = _mm_loadu_si128(src as *const _);
+            let hi = _mm_loadu_si128(src.add(12) as *const _);
+            let in256 = _mm256_set_m128i(hi, lo);
+            // -- vpshufb: reshuffle to (s2,s1,s3,s2) per lane.
+            let t = _mm256_shuffle_epi8(in256, reshuf256);
+            // -- and/mulhi/and/mullo/or: extract the four 6-bit fields.
+            let t0 = _mm256_and_si256(t, mask_ac);
+            let t1 = _mm256_mulhi_epu16(t0, mul_ac);
+            let t2 = _mm256_and_si256(t, mask_bd);
+            let t3 = _mm256_mullo_epi16(t2, mul_bd);
+            let idx = _mm256_or_si256(t1, t3);
+            // -- range arithmetic: value -> ASCII.
+            let sub = _mm256_subs_epu8(idx, c51);
+            let gt = _mm256_cmpgt_epi8(idx, c25);
+            let slot = _mm256_sub_epi8(sub, gt); // +1 where idx > 25
+            let off = _mm256_shuffle_epi8(offs, slot);
+            let chars = _mm256_add_epi8(idx, off);
+            _mm256_storeu_si256(dst_base.add(i * ENC_OUT) as *mut _, chars);
+        }
+        iters * ENC_IN
+    }
+
+    /// Decode whole 32-char groups. Returns (consumed, first_error_offset).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode(
+        input: &[u8],
+        out: &mut Vec<u8>,
+        lut_lo_row: &[i8; 16],
+        roll_row: &[i8; 16],
+        c63: u8,
+    ) -> (usize, Option<usize>) {
+        let iters = input.len() / DEC_IN;
+        if iters == 0 {
+            return (0, None);
+        }
+        let start = out.len();
+        // Each iteration stores 32 bytes (8 of slack); reserve for it and
+        // truncate to the real 24x count afterwards.
+        out.resize(start + iters * DEC_OUT + 8, 0);
+        let dst_base = out.as_mut_ptr().add(start);
+        // Nibble classification tables (standard ranges; 2018 paper).
+        let lut_hi = _mm256_broadcastsi128_si256(_mm_setr_epi8(
+            0x10, 0x10, 0x01, 0x02, 0x04, 0x08, 0x04, 0x08,
+            0x10, 0x10, 0x10, 0x10, 0x10, 0x10, 0x10, 0x10,
+        ));
+        let lut_lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+            lut_lo_row.as_ptr() as *const _,
+        ));
+        let lut_roll = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+            roll_row.as_ptr() as *const _,
+        ));
+        let mask_0f = _mm256_set1_epi8(0x0F);
+        let c2f = _mm256_set1_epi8(c63 as i8);
+        let madd1 = _mm256_set1_epi32(0x0140_0140);
+        let madd2 = _mm256_set1_epi32(0x0001_1000);
+        let pack = _mm256_broadcastsi128_si256(_mm_setr_epi8(
+            2, 1, 0, 6, 5, 4, 10, 9, 8, 14, 13, 12, -1, -1, -1, -1,
+        ));
+        let perm = _mm256_setr_epi32(0, 1, 2, 4, 5, 6, 7, 7);
+        for i in 0..iters {
+            let src = input.as_ptr().add(i * DEC_IN);
+            let chars = _mm256_loadu_si256(src as *const _);
+            // -- classification: hi/lo nibble bitmask test.
+            let hi_n = _mm256_and_si256(_mm256_srli_epi32::<4>(chars), mask_0f);
+            let lo_n = _mm256_and_si256(chars, mask_0f);
+            let hi_class = _mm256_shuffle_epi8(lut_hi, hi_n);
+            let lo_class = _mm256_shuffle_epi8(lut_lo, lo_n);
+            let bad = _mm256_and_si256(hi_class, lo_class);
+            // The classification bits live in the low nibble: materialize
+            // a per-byte mask by comparing against zero (the 2018 code
+            // uses vptest for the all-clean fast path; we need per-byte
+            // positions for exact error offsets).
+            let good = _mm256_cmpeq_epi8(bad, _mm256_setzero_si256());
+            // Non-ASCII bytes have their MSB set; movemask captures them
+            // directly from `chars`.
+            let bad_mask = !(_mm256_movemask_epi8(good) as u32)
+                | _mm256_movemask_epi8(chars) as u32;
+            if bad_mask != 0 {
+                // Report the exact byte (cold path; matches scalar order).
+                let lane = bad_mask.trailing_zeros() as usize;
+                out.truncate(start + i * DEC_OUT);
+                return (i * DEC_IN, Some(i * DEC_IN + lane));
+            }
+            // -- roll addition: ASCII -> 6-bit value.
+            let eq_2f = _mm256_cmpeq_epi8(chars, c2f);
+            let roll_idx = _mm256_add_epi8(eq_2f, hi_n); // hi_n - 1 where '/': index 1? no:
+            // eq_2f is 0xFF (=-1) at '/', so hi_n + (-1) = 2-1 = 1 -> roll[1]=16. Elsewhere roll[hi].
+            let roll = _mm256_shuffle_epi8(lut_roll, roll_idx);
+            let vals = _mm256_add_epi8(chars, roll);
+            // -- vpmaddubsw + vpmaddwd packing.
+            let merged = _mm256_maddubs_epi16(vals, madd1);
+            let packed = _mm256_madd_epi16(merged, madd2);
+            // -- in-lane compaction + cross-lane fixup.
+            let shuf = _mm256_shuffle_epi8(packed, pack);
+            let compact = _mm256_permutevar8x32_epi32(shuf, perm);
+            _mm256_storeu_si256(dst_base.add(i * DEC_OUT) as *mut _, compact);
+        }
+        out.truncate(start + iters * DEC_OUT);
+        (iters * DEC_IN, None)
+    }
+}
+
+impl Codec for Avx2Codec {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        out.reserve(encoded_len(input.len()) + ENC_OUT);
+        #[cfg(target_arch = "x86_64")]
+        let consumed = {
+            // Keep 16-byte loads in bounds: only iterate while 28 bytes
+            // remain readable (12-offset lane load reads src+12..src+28).
+            let safe_len = input.len().saturating_sub(4) / ENC_IN * ENC_IN;
+            // SAFETY: availability asserted at construction.
+            unsafe { kernels::encode(&input[..safe_len], out, &self.enc_offsets) }
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let consumed = 0;
+        // Scalar epilogue (paper's "conventional code path").
+        self.scalar_twin.encode_into(&input[consumed..], out);
+        out.len() - start
+    }
+
+    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let start = out.len();
+        #[cfg(target_arch = "x86_64")]
+        let consumed = {
+            // SAFETY: availability asserted at construction.
+            let (consumed, bad) =
+                unsafe { kernels::decode(body, out, &self.dec_lut_lo, &self.dec_roll, self.c63) };
+            if let Some(pos) = bad {
+                out.truncate(start);
+                // The SIMD path flags the lane; normalize to the first
+                // invalid byte in scalar order for exact reporting.
+                let from = pos / DEC_IN * DEC_IN;
+                let off = body[from..]
+                    .iter()
+                    .position(|&c| self.alphabet.value_of(c).is_none())
+                    .map(|p| from + p)
+                    .expect("flagged group contains an invalid byte");
+                return Err(DecodeError::InvalidByte { offset: off, byte: body[off] });
+            }
+            consumed
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let consumed = 0;
+        // Scalar remainder + tail.
+        let rest = &body[consumed..];
+        for (q, quad) in rest.chunks_exact(4).enumerate() {
+            let mut vals = [0u8; 4];
+            for i in 0..4 {
+                let c = quad[i];
+                match self.alphabet.value_of(c) {
+                    Some(v) => vals[i] = v,
+                    None => {
+                        out.truncate(start);
+                        return Err(DecodeError::InvalidByte {
+                            offset: consumed + q * 4 + i,
+                            byte: c,
+                        });
+                    }
+                }
+            }
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            out.push((vals[1] << 4) | (vals[2] >> 2));
+            out.push((vals[2] << 6) | vals[3]);
+        }
+        decode_tail(tail, self.alphabet.pad(), self.mode, body.len(), |c| self.alphabet.value_of(c), out)?;
+        Ok(out.len() - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::scalar::ScalarCodec;
+    use crate::workload::random_bytes;
+
+    fn skip() -> bool {
+        if !Avx2Codec::available() {
+            eprintln!("skipping: no AVX2 on this host");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn supports_standard_family_only() {
+        assert!(Avx2Codec::supports(&Alphabet::standard()));
+        assert!(Avx2Codec::supports(&Alphabet::imap())); // ',' = 0x2C, hi-nibble 2
+        assert!(!Avx2Codec::supports(&Alphabet::url())); // '_' = 0x5F
+        let mut chars = *crate::base64::alphabet::STANDARD;
+        chars.swap(0, 1);
+        assert!(!Avx2Codec::supports(&Alphabet::new("x", chars, b'=').unwrap()));
+    }
+
+    #[test]
+    fn derived_tables_match_2018_constants_for_standard() {
+        if skip() {
+            return;
+        }
+        let c = Avx2Codec::new(Alphabet::standard());
+        assert_eq!(
+            c.dec_lut_lo,
+            [0x15, 0x11, 0x11, 0x11, 0x11, 0x11, 0x11, 0x11,
+             0x11, 0x11, 0x13, 0x1A, 0x1B, 0x1B, 0x1B, 0x1A]
+        );
+        assert_eq!(c.dec_roll[..8], [0, 16, 19, 4, -65, -65, -71, -71]);
+        assert_eq!(c.c63, b'/');
+    }
+
+    #[test]
+    fn rfc4648_vectors() {
+        if skip() {
+            return;
+        }
+        let c = Avx2Codec::new(Alphabet::standard());
+        for (raw, enc) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"Zg=="),
+            (b"fo", b"Zm8="),
+            (b"foo", b"Zm9v"),
+            (b"foobar", b"Zm9vYmFy"),
+        ] {
+            assert_eq!(c.encode(raw), enc);
+            assert_eq!(c.decode(enc).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn agrees_with_scalar_across_lengths() {
+        if skip() {
+            return;
+        }
+        let s = ScalarCodec::new(Alphabet::standard());
+        let c = Avx2Codec::new(Alphabet::standard());
+        for len in 0..300usize {
+            let data = random_bytes(len, 7000 + len as u64);
+            assert_eq!(c.encode(&data), s.encode(&data), "len={len}");
+            let enc = s.encode(&data);
+            assert_eq!(c.decode(&enc).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn large_roundtrip() {
+        if skip() {
+            return;
+        }
+        let c = Avx2Codec::new(Alphabet::standard());
+        let data = random_bytes(1 << 20, 3);
+        let enc = c.encode(&data);
+        assert_eq!(c.decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn error_detection_positions() {
+        if skip() {
+            return;
+        }
+        let c = Avx2Codec::new(Alphabet::standard());
+        let enc = c.encode(&random_bytes(96, 1));
+        for pos in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[pos] = b'!';
+            match c.decode(&bad) {
+                Err(DecodeError::InvalidByte { offset, byte: b'!' }) => assert_eq!(offset, pos),
+                other => panic!("pos {pos}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_ascii_detected() {
+        if skip() {
+            return;
+        }
+        let c = Avx2Codec::new(Alphabet::standard());
+        let mut enc = c.encode(&random_bytes(240, 9));
+        for pos in [0usize, 31, 32, 100, 319] {
+            let orig = enc[pos];
+            enc[pos] = 0xE8;
+            assert!(c.decode(&enc).is_err(), "pos={pos}");
+            enc[pos] = orig;
+        }
+    }
+
+    #[test]
+    fn imap_variant_full_roundtrip() {
+        if skip() {
+            return;
+        }
+        // ',' (0x2C) replaces '/': the derived lo-nibble row and roll
+        // table handle it; '+' stays in the roll[2] slot.
+        let c = Avx2Codec::new(Alphabet::imap());
+        let s = ScalarCodec::new(Alphabet::imap());
+        for len in [0usize, 3, 33, 120, 1000] {
+            let data = random_bytes(len, 40 + len as u64);
+            let enc = c.encode(&data);
+            assert_eq!(enc, s.encode(&data), "len={len}");
+            assert_eq!(c.decode(&enc).unwrap(), data, "len={len}");
+        }
+        // '/' must now be invalid.
+        assert!(c.decode(b"ab/0").is_err());
+    }
+}

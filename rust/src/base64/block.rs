@@ -1,0 +1,340 @@
+//! The paper's AVX-512 block algorithm, transliterated to scalar Rust.
+//!
+//! This is the *reference twin* of the Pallas kernel: the same
+//! 48-byte-in / 64-char-out (encode) and 64-char-in / 48-byte-out
+//! (decode) block structure, the same shuffle/multishift/lookup and
+//! lookup/ternlog/madd/compact stages, the same deferred error
+//! accumulator. It serves three purposes:
+//!
+//! 1. the coordinator's **tail path** (the paper's "conventional code
+//!    path" for inputs not divisible by 48/64 — §3.1, §3.2);
+//! 2. the differential-testing oracle for the PJRT executables;
+//! 3. the object of the **macro-op accounting** in
+//!    [`crate::perfmodel::opcount`]: each commented stage below is one
+//!    AVX-512 instruction in the paper ([`ENCODE_SIMD_OPS`] = 3,
+//!    [`DECODE_SIMD_OPS`] = 5 (+1 `vpmovb2m` per stream)).
+//!
+//! On real AVX-512 hardware every stage is one instruction over a 512-bit
+//! register; here each stage is a 16-iteration lane loop the compiler
+//! auto-vectorizes over the host's widest registers.
+
+use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::{encoded_len, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
+
+/// SIMD instructions per encoded 64-byte register in the paper (§3.1):
+/// `vpermb`, `vpmultishiftqb`, `vpermb`.
+pub const ENCODE_SIMD_OPS: usize = 3;
+/// SIMD instructions per decoded 64-byte register in the paper (§3.2):
+/// `vpermi2b`, `vpternlogd`, `vpmaddubsw`, `vpmaddwd`, `vpermb`.
+pub const DECODE_SIMD_OPS: usize = 5;
+/// Stream-level instructions (§3.2): one `vpmovb2m` error-mask check.
+pub const DECODE_STREAM_OPS: usize = 1;
+
+/// The paper's multishift list (§3.1), applied per 32-bit shuffled group.
+pub const MULTISHIFT: [u32; 4] = [10, 4, 22, 16];
+
+/// Block codec implementing the paper's §3 algorithm.
+#[derive(Debug, Clone)]
+pub struct BlockCodec {
+    alphabet: Alphabet,
+    mode: Mode,
+    /// Full-byte decode table: entry = 6-bit value, or 0x80 for every
+    /// byte outside the alphabet *including all of [0x80, 0xFF]*. This
+    /// folds the paper's `input | lookup` OR (which exists because
+    /// `vpermi2b` ignores the index MSB) into the table itself — the
+    /// scalar substrate has no 7-bit-index restriction, so the error
+    /// accumulator only needs the lookup results.
+    dtable256: [u8; 256],
+}
+
+impl BlockCodec {
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self::with_mode(alphabet, Mode::Strict)
+    }
+
+    pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
+        let mut dtable256 = [0x80u8; 256];
+        let half = alphabet.decode_table().as_bytes();
+        dtable256[..128].copy_from_slice(half);
+        Self { alphabet, mode, dtable256 }
+    }
+
+    pub fn alphabet(&self) -> &Alphabet {
+        &self.alphabet
+    }
+
+    /// Encode one 48-byte block into 64 base64 characters (paper §3.1).
+    #[inline]
+    pub fn encode_block(&self, input: &[u8; RAW_BLOCK], out: &mut [u8; B64_BLOCK]) {
+        let table = self.alphabet.encode_table();
+        for g in 0..16 {
+            let (s1, s2, s3) = (
+                input[3 * g] as u32,
+                input[3 * g + 1] as u32,
+                input[3 * g + 2] as u32,
+            );
+            // -- vpermb #1: (s1,s2,s3) -> (s2,s1,s3,s2) packed per lane.
+            let t = s2 | (s1 << 8) | (s3 << 16) | (s2 << 24);
+            // -- vpmultishiftqb: rotate-extract the four 6-bit fields.
+            // -- vpermb #2: alphabet lookup (6 LSBs of each index).
+            out[4 * g] = table.lookup((t >> MULTISHIFT[0]) as u8);
+            out[4 * g + 1] = table.lookup((t >> MULTISHIFT[1]) as u8);
+            out[4 * g + 2] = table.lookup((t >> MULTISHIFT[2]) as u8);
+            out[4 * g + 3] = table.lookup((t >> MULTISHIFT[3]) as u8);
+        }
+    }
+
+    /// Decode one 64-char block into 48 bytes, OR-ing `input | lookup`
+    /// into `err` exactly like the paper's `vpternlogd` accumulator
+    /// (paper §3.2). `err & 0x80 != 0` after the stream means some block
+    /// contained an invalid character.
+    #[inline]
+    pub fn decode_block(&self, input: &[u8; B64_BLOCK], out: &mut [u8; RAW_BLOCK], err: &mut u8) {
+        let t = &self.dtable256;
+        let mut acc = 0u8;
+        for (quad, dst) in input.chunks_exact(4).zip(out.chunks_exact_mut(3)) {
+            // -- vpermi2b: table lookup (full-byte table; see `dtable256`
+            //    for why the paper's `input |` OR is folded in).
+            let v0 = t[quad[0] as usize] as u32;
+            let v1 = t[quad[1] as usize] as u32;
+            let v2 = t[quad[2] as usize] as u32;
+            let v3 = t[quad[3] as usize] as u32;
+            // -- vpternlogd: ERROR |= lookups.
+            acc |= (v0 | v1 | v2 | v3) as u8;
+            // -- vpmaddubsw: D + C*2^6 ; -- vpmaddwd: CD + AB*2^12.
+            let w = (((v0 << 6) | v1) << 12) | (v2 << 6) | v3;
+            // -- vpermb: compact 3-of-4 bytes, byte-order fixup.
+            dst[0] = (w >> 16) as u8;
+            dst[1] = (w >> 8) as u8;
+            dst[2] = w as u8;
+        }
+        *err |= acc;
+    }
+
+    /// Encode all whole 48-byte blocks of `input`, returning the number of
+    /// raw bytes consumed. The remainder (< 48 bytes) is the caller's
+    /// scalar epilogue.
+    pub fn encode_full_blocks(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let mut consumed = 0;
+        let start = out.len();
+        let blocks = input.len() / RAW_BLOCK;
+        out.resize(start + blocks * B64_BLOCK, 0);
+        let out_slice = &mut out[start..];
+        for b in 0..blocks {
+            let inp: &[u8; RAW_BLOCK] =
+                input[b * RAW_BLOCK..(b + 1) * RAW_BLOCK].try_into().unwrap();
+            let dst: &mut [u8; B64_BLOCK] =
+                (&mut out_slice[b * B64_BLOCK..(b + 1) * B64_BLOCK]).try_into().unwrap();
+            self.encode_block(inp, dst);
+            consumed += RAW_BLOCK;
+        }
+        consumed
+    }
+
+    /// Decode all whole 64-char blocks, with deferred validation: the
+    /// error accumulator is checked once at the end (the paper's
+    /// `vpmovb2m` + branch per *stream*, not per block). On failure the
+    /// input is re-scanned to report the exact offending byte.
+    pub fn decode_full_blocks(
+        &self,
+        input: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<usize, DecodeError> {
+        let blocks = input.len() / B64_BLOCK;
+        let start = out.len();
+        out.resize(start + blocks * RAW_BLOCK, 0);
+        let out_slice = &mut out[start..];
+        let mut err = 0u8;
+        for b in 0..blocks {
+            let inp: &[u8; B64_BLOCK] =
+                input[b * B64_BLOCK..(b + 1) * B64_BLOCK].try_into().unwrap();
+            let dst: &mut [u8; RAW_BLOCK] =
+                (&mut out_slice[b * RAW_BLOCK..(b + 1) * RAW_BLOCK]).try_into().unwrap();
+            self.decode_block(inp, dst, &mut err);
+        }
+        // -- vpmovb2m + branch, once per stream.
+        if err & 0x80 != 0 {
+            out.truncate(start);
+            let bad = input[..blocks * B64_BLOCK]
+                .iter()
+                .position(|&c| self.alphabet.value_of(c).is_none())
+                .expect("error accumulator set implies an invalid byte");
+            return Err(DecodeError::InvalidByte { offset: bad, byte: input[bad] });
+        }
+        Ok(blocks * B64_BLOCK)
+    }
+}
+
+impl Codec for BlockCodec {
+    fn name(&self) -> &'static str {
+        "block"
+    }
+
+    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        out.reserve(encoded_len(input.len()));
+        let consumed = self.encode_full_blocks(input, out);
+        // Scalar epilogue for the sub-block remainder (paper §3.1).
+        let table = self.alphabet.encode_table();
+        let pad = self.alphabet.pad();
+        let mut chunks = input[consumed..].chunks_exact(3);
+        for chunk in &mut chunks {
+            let (s1, s2, s3) = (chunk[0], chunk[1], chunk[2]);
+            out.push(table.lookup(s1 >> 2));
+            out.push(table.lookup((s1 << 4) | (s2 >> 4)));
+            out.push(table.lookup((s2 << 2) | (s3 >> 6)));
+            out.push(table.lookup(s3));
+        }
+        match chunks.remainder() {
+            [] => {}
+            [s1] => {
+                out.push(table.lookup(s1 >> 2));
+                out.push(table.lookup(s1 << 4));
+                out.push(pad);
+                out.push(pad);
+            }
+            [s1, s2] => {
+                out.push(table.lookup(s1 >> 2));
+                out.push(table.lookup((s1 << 4) | (s2 >> 4)));
+                out.push(table.lookup(s2 << 2));
+                out.push(pad);
+            }
+            _ => unreachable!(),
+        }
+        out.len() - start
+    }
+
+    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let start = out.len();
+        let consumed = self.decode_full_blocks(body, out)?;
+        // Sub-block remainder: quantum-at-a-time scalar path.
+        let rest = &body[consumed..];
+        for (q, quad) in rest.chunks_exact(4).enumerate() {
+            let mut vals = [0u8; 4];
+            for i in 0..4 {
+                let c = quad[i];
+                let v = self.alphabet.decode_table().lookup(c);
+                if (c | v) & 0x80 != 0 {
+                    return Err(DecodeError::InvalidByte { offset: consumed + q * 4 + i, byte: c });
+                }
+                vals[i] = v;
+            }
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            out.push((vals[1] << 4) | (vals[2] >> 2));
+            out.push((vals[2] << 6) | vals[3]);
+        }
+        decode_tail(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            out,
+        )?;
+        Ok(out.len() - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::scalar::ScalarCodec;
+
+    fn codec() -> BlockCodec {
+        BlockCodec::new(Alphabet::standard())
+    }
+
+    #[test]
+    fn rfc4648_test_vectors() {
+        let c = codec();
+        for (raw, enc) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"Zg=="),
+            (b"fo", b"Zm8="),
+            (b"foo", b"Zm9v"),
+            (b"foobar", b"Zm9vYmFy"),
+        ] {
+            assert_eq!(c.encode(raw), enc);
+            assert_eq!(c.decode(enc).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn single_block_paper_shapes() {
+        // Exactly one block: 48 raw bytes -> 64 chars, no padding.
+        let c = codec();
+        let data: Vec<u8> = (0u8..48).collect();
+        let enc = c.encode(&data);
+        assert_eq!(enc.len(), 64);
+        assert!(!enc.contains(&b'='));
+        assert_eq!(c.decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn agrees_with_scalar_across_lengths() {
+        let s = ScalarCodec::new(Alphabet::standard());
+        let c = codec();
+        let mut x: u32 = 7;
+        for len in 0..260usize {
+            let data: Vec<u8> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                    (x >> 13) as u8
+                })
+                .collect();
+            assert_eq!(c.encode(&data), s.encode(&data), "len={len}");
+            let enc = s.encode(&data);
+            assert_eq!(c.decode(&enc).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn deferred_error_found_in_any_block() {
+        let c = codec();
+        let data = vec![0xA5u8; 48 * 5];
+        let mut enc = c.encode(&data);
+        for pos in [0usize, 63, 64, 190, 319] {
+            let orig = enc[pos];
+            enc[pos] = b'!';
+            let err = c.decode(&enc).unwrap_err();
+            assert_eq!(err, DecodeError::InvalidByte { offset: pos, byte: b'!' }, "pos={pos}");
+            enc[pos] = orig;
+        }
+        assert_eq!(c.decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn error_accumulator_catches_non_ascii() {
+        let c = codec();
+        let mut enc = c.encode(&[0u8; 48]);
+        enc[10] = 0xE9;
+        assert!(matches!(c.decode(&enc), Err(DecodeError::InvalidByte { offset: 10, byte: 0xE9 })));
+    }
+
+    #[test]
+    fn failed_decode_leaves_out_empty() {
+        let c = codec();
+        let mut enc = c.encode(&[1u8; 96]);
+        enc[70] = b'=';
+        let mut out = b"keep".to_vec();
+        assert!(c.decode_into(&enc, &mut out).is_err());
+        assert_eq!(out, b"keep");
+    }
+
+    #[test]
+    fn url_variant_block_path() {
+        let c = BlockCodec::new(Alphabet::url());
+        let data = vec![0xFBu8; 48];
+        let enc = c.encode(&data);
+        assert!(enc.contains(&b'-') || enc.contains(&b'_'));
+        assert_eq!(c.decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn multishift_constants_match_paper() {
+        assert_eq!(MULTISHIFT, [10, 4, 22, 16]);
+        assert_eq!(ENCODE_SIMD_OPS, 3);
+        assert_eq!(DECODE_SIMD_OPS, 5);
+    }
+}

@@ -1,0 +1,117 @@
+//! `data:` URI handling — the web workload behind Table 3's Google-logo
+//! row (a base64 data URI embedded in the Google search page).
+
+use super::block::BlockCodec;
+use super::validate::DecodeError;
+use super::{Alphabet, Codec};
+
+/// A parsed `data:` URI with a base64 payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DataUri {
+    /// MIME type, e.g. `image/png` (defaults to `text/plain` per RFC 2397).
+    pub mime_type: String,
+    /// Decoded payload bytes.
+    pub data: Vec<u8>,
+}
+
+/// Errors from [`parse`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataUriError {
+    /// Missing `data:` scheme prefix.
+    NotADataUri,
+    /// Missing the `,` separating the header from the payload.
+    MissingComma,
+    /// Header lacks the `;base64` marker (we only handle base64 payloads).
+    NotBase64,
+    /// The payload failed base64 decoding.
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for DataUriError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NotADataUri => write!(f, "not a data: URI"),
+            Self::MissingComma => write!(f, "data: URI missing ',' separator"),
+            Self::NotBase64 => write!(f, "data: URI payload is not base64"),
+            Self::Decode(e) => write!(f, "data: URI payload: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DataUriError {}
+
+/// Build a `data:` URI: `data:<mime>;base64,<payload>`.
+pub fn build(mime_type: &str, data: &[u8], alphabet: &Alphabet) -> String {
+    let codec = BlockCodec::new(alphabet.clone());
+    let payload = codec.encode(data);
+    let mut out = String::with_capacity(5 + mime_type.len() + 8 + payload.len());
+    out.push_str("data:");
+    out.push_str(mime_type);
+    out.push_str(";base64,");
+    out.push_str(std::str::from_utf8(&payload).expect("base64 is ASCII"));
+    out
+}
+
+/// Parse a base64 `data:` URI and decode its payload.
+pub fn parse(uri: &str, alphabet: &Alphabet) -> Result<DataUri, DataUriError> {
+    let rest = uri.strip_prefix("data:").ok_or(DataUriError::NotADataUri)?;
+    let comma = rest.find(',').ok_or(DataUriError::MissingComma)?;
+    let (header, payload) = rest.split_at(comma);
+    let payload = &payload[1..];
+    let mime_type = match header.split(';').next() {
+        Some("") | None => "text/plain".to_string(),
+        Some(m) => m.to_string(),
+    };
+    if !header.split(';').any(|p| p == "base64") {
+        return Err(DataUriError::NotBase64);
+    }
+    let codec = BlockCodec::new(alphabet.clone());
+    let data = codec
+        .decode(payload.as_bytes())
+        .map_err(DataUriError::Decode)?;
+    Ok(DataUri { mime_type, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_png_like() {
+        let a = Alphabet::standard();
+        let payload: Vec<u8> = (0..2357u32).map(|i| (i % 256) as u8).collect();
+        let uri = build("image/png", &payload, &a);
+        assert!(uri.starts_with("data:image/png;base64,"));
+        let parsed = parse(&uri, &a).unwrap();
+        assert_eq!(parsed.mime_type, "image/png");
+        assert_eq!(parsed.data, payload);
+    }
+
+    #[test]
+    fn default_mime_type() {
+        let a = Alphabet::standard();
+        let parsed = parse("data:;base64,aGk=", &a).unwrap();
+        assert_eq!(parsed.mime_type, "text/plain");
+        assert_eq!(parsed.data, b"hi");
+    }
+
+    #[test]
+    fn rejects_non_base64_uri() {
+        let a = Alphabet::standard();
+        assert_eq!(parse("data:text/plain,hello", &a), Err(DataUriError::NotBase64));
+    }
+
+    #[test]
+    fn rejects_missing_scheme_and_comma() {
+        let a = Alphabet::standard();
+        assert_eq!(parse("http://x", &a), Err(DataUriError::NotADataUri));
+        assert_eq!(parse("data:image/png;base64", &a), Err(DataUriError::MissingComma));
+    }
+
+    #[test]
+    fn corrupt_payload_reports_decode_error() {
+        let a = Alphabet::standard();
+        let r = parse("data:image/png;base64,aG!k", &a);
+        assert!(matches!(r, Err(DataUriError::Decode(_))));
+    }
+}

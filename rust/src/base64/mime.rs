@@ -1,0 +1,141 @@
+//! RFC 2045 (MIME) line-wrapped base64 — the paper's motivating workload.
+//!
+//! MIME requires encoded lines of at most 76 characters separated by CRLF,
+//! and decoders must ignore line breaks (and, leniently, other whitespace).
+//! The hot path is still the block codec; wrapping is a post-pass on
+//! encode and a strip-pass on decode, both chunk-friendly.
+
+use super::block::BlockCodec;
+use super::validate::{DecodeError, Mode};
+use super::{Alphabet, Codec};
+
+/// Maximum encoded line length required by RFC 2045 §6.8.
+pub const MIME_LINE_LEN: usize = 76;
+
+/// MIME base64 codec: wraps at `line_len`, strips CR/LF (and optionally
+/// all whitespace) on decode.
+pub struct MimeCodec {
+    inner: BlockCodec,
+    line_len: usize,
+    /// When true, decode also skips space/tab (lenient MIME bodies).
+    skip_all_whitespace: bool,
+}
+
+impl MimeCodec {
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self {
+            inner: BlockCodec::with_mode(alphabet, Mode::Strict),
+            line_len: MIME_LINE_LEN,
+            skip_all_whitespace: false,
+        }
+    }
+
+    pub fn with_line_len(mut self, line_len: usize) -> Self {
+        assert!(line_len >= 4 && line_len % 4 == 0, "line length must be a positive multiple of 4");
+        self.line_len = line_len;
+        self
+    }
+
+    pub fn lenient_whitespace(mut self) -> Self {
+        self.skip_all_whitespace = true;
+        self
+    }
+
+    /// Encode with CRLF wrapping. The final line carries no trailing CRLF.
+    pub fn encode(&self, input: &[u8]) -> Vec<u8> {
+        let flat = self.inner.encode(input);
+        let lines = flat.len().div_ceil(self.line_len);
+        let mut out = Vec::with_capacity(flat.len() + lines.saturating_sub(1) * 2);
+        for (i, line) in flat.chunks(self.line_len).enumerate() {
+            if i > 0 {
+                out.extend_from_slice(b"\r\n");
+            }
+            out.extend_from_slice(line);
+        }
+        out
+    }
+
+    /// Decode, ignoring CRLF (and all whitespace when lenient). Offsets in
+    /// errors refer to the *stripped* stream.
+    pub fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
+        let stripped: Vec<u8> = input
+            .iter()
+            .copied()
+            .filter(|&c| {
+                !(c == b'\r'
+                    || c == b'\n'
+                    || (self.skip_all_whitespace && (c == b' ' || c == b'\t')))
+            })
+            .collect();
+        self.inner.decode(&stripped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codec() -> MimeCodec {
+        MimeCodec::new(Alphabet::standard())
+    }
+
+    #[test]
+    fn wraps_at_76() {
+        let data = vec![0xABu8; 200]; // 268 encoded chars -> 4 lines
+        let enc = codec().encode(&data);
+        let lines: Vec<&[u8]> = enc.split(|&c| c == b'\n').collect();
+        for (i, line) in lines.iter().enumerate() {
+            let line = line.strip_suffix(b"\r").unwrap_or(line);
+            if i + 1 < lines.len() {
+                assert_eq!(line.len(), 76);
+            } else {
+                assert!(line.len() <= 76 && !line.is_empty());
+            }
+        }
+        assert_eq!(codec().decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn short_input_no_crlf() {
+        let enc = codec().encode(b"hi");
+        assert!(!enc.contains(&b'\r'));
+        assert_eq!(enc, b"aGk=");
+    }
+
+    #[test]
+    fn decode_ignores_bare_lf() {
+        assert_eq!(codec().decode(b"Zm9v\nYmFy").unwrap(), b"foobar");
+    }
+
+    #[test]
+    fn strict_rejects_inner_space_lenient_accepts() {
+        let c = codec();
+        assert!(c.decode(b"Zm9v YmFy").is_err());
+        let l = MimeCodec::new(Alphabet::standard()).lenient_whitespace();
+        assert_eq!(l.decode(b"Zm9v YmFy").unwrap(), b"foobar");
+    }
+
+    #[test]
+    fn custom_line_len() {
+        let c = MimeCodec::new(Alphabet::standard()).with_line_len(8);
+        let enc = c.encode(&[0u8; 12]); // 16 chars -> two 8-char lines
+        assert_eq!(enc, b"AAAAAAAA\r\nAAAAAAAA");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_line_len_panics() {
+        MimeCodec::new(Alphabet::standard()).with_line_len(7);
+    }
+
+    #[test]
+    fn large_roundtrip_through_wrapping() {
+        let data: Vec<u8> = (0..10_000).map(|i| (i * 31 % 251) as u8).collect();
+        let enc = codec().encode(&data);
+        for line in enc.split(|&c| c == b'\n') {
+            let line = line.strip_suffix(b"\r").unwrap_or(line);
+            assert!(line.len() <= 76);
+        }
+        assert_eq!(codec().decode(&enc).unwrap(), data);
+    }
+}

@@ -1,0 +1,96 @@
+//! Pure-Rust base64 substrate: every codec the paper benchmarks.
+//!
+//! | module | paper role |
+//! |---|---|
+//! | [`scalar`] | the conventional per-byte LUT codec (Chrome baseline) |
+//! | [`swar`] | 64-bit SWAR codec — the AVX2-class register baseline |
+//! | [`block`] | the paper's AVX-512 dataflow in scalar Rust: reference twin of the Pallas kernel and the coordinator's tail path |
+//! | [`avx2`] | the 2018 AVX2 codec with real intrinsics — the paper's comparison baseline |
+//! | [`avx512`] | the paper's actual §3 algorithm with real AVX-512 VBMI intrinsics (runtime-detected) |
+//! | [`alphabet`]/[`tables`] | runtime-swappable variants (paper §5) |
+//! | [`validate`] | RFC 4648 padding/strictness semantics |
+//! | [`streaming`] | incremental encode/decode with carry state |
+//! | [`mime`] | RFC 2045 line-wrapped base64 |
+//! | [`datauri`] | `data:` URI encode/parse |
+
+pub mod alphabet;
+pub mod avx2;
+pub mod avx512;
+pub mod block;
+pub mod datauri;
+pub mod mime;
+pub mod scalar;
+pub mod streaming;
+pub mod swar;
+pub mod tables;
+pub mod validate;
+
+pub use alphabet::Alphabet;
+pub use validate::{DecodeError, Mode};
+
+/// Number of raw bytes consumed per block-codec iteration (paper §3).
+pub const RAW_BLOCK: usize = 48;
+/// Number of base64 characters produced per block-codec iteration.
+pub const B64_BLOCK: usize = 64;
+
+/// Common interface implemented by every codec in this crate, so the
+/// benchmarks and the coordinator can swap them freely.
+pub trait Codec {
+    /// Name used in benchmark output (matches the paper's series labels).
+    fn name(&self) -> &'static str;
+
+    /// Encode `input` to base64 with padding, appending to a fresh buffer.
+    fn encode(&self, input: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(encoded_len(input.len()));
+        self.encode_into(input, &mut out);
+        out
+    }
+
+    /// Encode into a caller-provided buffer (appends; no allocation if
+    /// `out` has capacity). Returns bytes written.
+    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize;
+
+    /// Decode base64 (strict RFC 4648: canonical padding, no whitespace).
+    fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
+        let mut out = Vec::with_capacity(decoded_len_upper(input.len()));
+        self.decode_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode into a caller-provided buffer (appends). Returns bytes written.
+    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError>;
+}
+
+/// Exact encoded length (with '=' padding) for `n` raw bytes.
+pub const fn encoded_len(n: usize) -> usize {
+    n.div_ceil(3) * 4
+}
+
+/// Upper bound on decoded length for `n` base64 chars (before padding trim).
+pub const fn decoded_len_upper(n: usize) -> usize {
+    (n / 4 + 1) * 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoded_len_matches_rfc() {
+        assert_eq!(encoded_len(0), 0);
+        assert_eq!(encoded_len(1), 4);
+        assert_eq!(encoded_len(2), 4);
+        assert_eq!(encoded_len(3), 4);
+        assert_eq!(encoded_len(4), 8);
+        assert_eq!(encoded_len(48), 64);
+        assert_eq!(encoded_len(49), 68);
+    }
+
+    #[test]
+    fn decoded_upper_bound_is_sufficient() {
+        for n in 0..200 {
+            let enc = encoded_len(n);
+            assert!(decoded_len_upper(enc) >= n, "n={n}");
+        }
+    }
+}

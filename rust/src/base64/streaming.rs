@@ -1,0 +1,351 @@
+//! Incremental (chunked) encoding/decoding with carry state.
+//!
+//! The paper's codecs are one-shot over a contiguous buffer; a serving
+//! system receives payloads in chunks. These adapters maintain the 0–2
+//! raw-byte (encoder) / 0–3 char (decoder) carry between chunks and drive
+//! the block codec over every full block, so the hot path stays on the
+//! paper's algorithm regardless of how the input is framed. They also
+//! back the per-connection session state in
+//! [`crate::coordinator::state`].
+
+use super::block::BlockCodec;
+use super::validate::{decode_tail, DecodeError, Mode};
+use super::{Alphabet, Codec};
+
+/// Incremental encoder: feed arbitrary chunks, finish once.
+pub struct StreamingEncoder {
+    codec: BlockCodec,
+    /// 0..3 raw bytes carried until a full 3-byte group is available.
+    carry: [u8; 3],
+    carry_len: usize,
+    /// Total raw bytes consumed (for observability).
+    consumed: u64,
+}
+
+impl StreamingEncoder {
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self {
+            codec: BlockCodec::new(alphabet),
+            carry: [0; 3],
+            carry_len: 0,
+            consumed: 0,
+        }
+    }
+
+    /// Encode `chunk`, appending complete quanta to `out`. Bytes that do
+    /// not fill a 3-byte group are carried to the next call.
+    pub fn update(&mut self, chunk: &[u8], out: &mut Vec<u8>) {
+        self.consumed += chunk.len() as u64;
+        let mut chunk = chunk;
+        // Complete the carry group first.
+        if self.carry_len > 0 {
+            let need = 3 - self.carry_len;
+            let take = need.min(chunk.len());
+            self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&chunk[..take]);
+            self.carry_len += take;
+            chunk = &chunk[take..];
+            if self.carry_len < 3 {
+                return;
+            }
+            let group = self.carry;
+            self.carry_len = 0;
+            // A full group encodes without padding.
+            self.codec.encode_into(&group, out);
+        }
+        // Bulk: all whole 3-byte groups go through the block codec (whole
+        // 48-byte blocks inside) without padding.
+        let whole = chunk.len() - chunk.len() % 3;
+        self.codec.encode_into(&chunk[..whole], out);
+        // Stash the remainder.
+        let rest = &chunk[whole..];
+        self.carry[..rest.len()].copy_from_slice(rest);
+        self.carry_len = rest.len();
+    }
+
+    /// Flush the final partial group (emits padding). Returns total raw
+    /// bytes consumed over the stream's lifetime.
+    pub fn finish(mut self, out: &mut Vec<u8>) -> u64 {
+        if self.carry_len > 0 {
+            let group = &self.carry[..self.carry_len];
+            self.codec.encode_into(group, out);
+            self.carry_len = 0;
+        }
+        self.consumed
+    }
+}
+
+/// Incremental decoder: feed arbitrary chunks, finish once.
+///
+/// Validation is deferred per the paper: each bulk call only checks its
+/// own blocks' accumulated error; `finish` performs the final tail and
+/// padding checks.
+pub struct StreamingDecoder {
+    codec: BlockCodec,
+    alphabet: Alphabet,
+    mode: Mode,
+    /// 0..4 chars carried until a full quantum is available.
+    carry: [u8; 4],
+    carry_len: usize,
+    /// Offset of the next input byte (for error reporting).
+    offset: u64,
+    /// Set once padding has been seen — only more padding may follow.
+    saw_pad: bool,
+}
+
+impl StreamingDecoder {
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self::with_mode(alphabet, Mode::Strict)
+    }
+
+    pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
+        Self {
+            codec: BlockCodec::with_mode(alphabet.clone(), mode),
+            alphabet,
+            mode,
+            carry: [0; 4],
+            carry_len: 0,
+            offset: 0,
+            saw_pad: false,
+        }
+    }
+
+    fn check_pad_ordering(&mut self, chunk: &[u8]) -> Result<(), DecodeError> {
+        let pad = self.alphabet.pad();
+        for (i, &c) in chunk.iter().enumerate() {
+            if self.saw_pad && c != pad {
+                return Err(DecodeError::InvalidPadding {
+                    offset: (self.offset + i as u64) as usize,
+                });
+            }
+            if c == pad {
+                self.saw_pad = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode `chunk`, appending raw bytes to `out`. Quanta spanning chunk
+    /// boundaries are carried. Padding may only appear at stream end.
+    pub fn update(&mut self, chunk: &[u8], out: &mut Vec<u8>) -> Result<(), DecodeError> {
+        self.check_pad_ordering(chunk)?;
+        let pad = self.alphabet.pad();
+        let mut chunk = chunk;
+        // Once padding has started, just accumulate the final quantum.
+        if self.saw_pad {
+            // Move everything (data before pad is still in carry/body).
+            for &c in chunk {
+                if self.carry_len == 4 {
+                    // A padded quantum is at most 4 chars: flush it first.
+                    self.flush_carry(out)?;
+                }
+                self.carry[self.carry_len] = c;
+                self.carry_len += 1;
+                self.offset += 1;
+            }
+            return Ok(());
+        }
+        // Complete the carried quantum.
+        if self.carry_len > 0 {
+            let need = 4 - self.carry_len;
+            let take = need.min(chunk.len());
+            self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&chunk[..take]);
+            self.carry_len += take;
+            self.offset += take as u64;
+            chunk = &chunk[take..];
+            if self.carry_len < 4 {
+                return Ok(());
+            }
+            if self.carry.contains(&pad) {
+                // Leave padded quantum for finish().
+                return self.stash_rest(chunk);
+            }
+            self.flush_carry(out)?;
+        }
+        // Bulk: decode whole quanta that cannot be the padded tail. Keep
+        // the last quantum if it might contain padding (conservatively: if
+        // it contains the pad char) or if the chunk end is mid-quantum.
+        let whole = chunk.len() - chunk.len() % 4;
+        let (body, rest) = chunk.split_at(whole);
+        let (body, held) = match body.chunks_exact(4).rposition(|q| q.contains(&pad)) {
+            Some(_) => {
+                // Some quantum in the body holds padding: it must be the
+                // last one overall; decode up to it, stash it.
+                let cut = body.len() - 4;
+                (&body[..cut], &body[cut..])
+            }
+            None => (body, &[][..]),
+        };
+        let base = self.offset as usize;
+        let mut tmp_err = self
+            .codec
+            .decode_full_blocks(body, out)
+            .and(Ok(()));
+        if let Err(DecodeError::InvalidByte { offset, byte }) = tmp_err {
+            tmp_err = Err(DecodeError::InvalidByte { offset: base + offset, byte });
+        }
+        tmp_err?;
+        // Sub-block remainder of the body (whole quanta, no padding).
+        let consumed_blocks = body.len() / 64 * 64;
+        for (q, quad) in body[consumed_blocks..].chunks_exact(4).enumerate() {
+            self.decode_quad(quad, base + consumed_blocks + q * 4, out)?;
+        }
+        self.offset += body.len() as u64;
+        // Stash held padded quantum + trailing partial.
+        for &c in held.iter().chain(rest) {
+            self.carry[self.carry_len] = c;
+            self.carry_len += 1;
+            self.offset += 1;
+        }
+        Ok(())
+    }
+
+    fn stash_rest(&mut self, chunk: &[u8]) -> Result<(), DecodeError> {
+        for &c in chunk {
+            if self.carry_len == 4 {
+                return Err(DecodeError::InvalidPadding { offset: self.offset as usize });
+            }
+            self.carry[self.carry_len] = c;
+            self.carry_len += 1;
+            self.offset += 1;
+        }
+        Ok(())
+    }
+
+    fn flush_carry(&mut self, out: &mut Vec<u8>) -> Result<(), DecodeError> {
+        let quad = self.carry;
+        let base = self.offset as usize - self.carry_len;
+        self.carry_len = 0;
+        self.decode_quad(&quad, base, out)
+    }
+
+    fn decode_quad(&self, quad: &[u8], base: usize, out: &mut Vec<u8>) -> Result<(), DecodeError> {
+        let table = self.alphabet.decode_table();
+        let mut vals = [0u8; 4];
+        for i in 0..4 {
+            let c = quad[i];
+            let v = table.lookup(c);
+            if (c | v) & 0x80 != 0 {
+                return Err(DecodeError::InvalidByte { offset: base + i, byte: c });
+            }
+            vals[i] = v;
+        }
+        out.push((vals[0] << 2) | (vals[1] >> 4));
+        out.push((vals[1] << 4) | (vals[2] >> 2));
+        out.push((vals[2] << 6) | vals[3]);
+        Ok(())
+    }
+
+    /// Finish the stream: decode the final (possibly padded) quantum and
+    /// enforce length/padding rules.
+    pub fn finish(mut self, out: &mut Vec<u8>) -> Result<u64, DecodeError> {
+        let tail = &self.carry[..self.carry_len];
+        let base = self.offset as usize - self.carry_len;
+        if tail.is_empty() {
+            return Ok(self.offset);
+        }
+        if self.mode == Mode::Strict && self.carry_len != 4 {
+            return Err(DecodeError::InvalidLength { len: self.offset as usize });
+        }
+        let tail = tail.to_vec();
+        decode_tail(
+            &tail,
+            self.alphabet.pad(),
+            self.mode,
+            base,
+            |c| self.alphabet.value_of(c),
+            out,
+        )?;
+        self.carry_len = 0;
+        Ok(self.offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc_ref(data: &[u8]) -> Vec<u8> {
+        BlockCodec::new(Alphabet::standard()).encode(data)
+    }
+
+    #[test]
+    fn encoder_chunking_invariance() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let expect = enc_ref(&data);
+        for chunk_size in [1usize, 2, 3, 7, 47, 48, 49, 64, 333] {
+            let mut enc = StreamingEncoder::new(Alphabet::standard());
+            let mut out = vec![];
+            for chunk in data.chunks(chunk_size) {
+                enc.update(chunk, &mut out);
+            }
+            let consumed = enc.finish(&mut out);
+            assert_eq!(consumed, 1000);
+            assert_eq!(out, expect, "chunk_size={chunk_size}");
+        }
+    }
+
+    #[test]
+    fn decoder_chunking_invariance() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(997).collect();
+        let encoded = enc_ref(&data);
+        for chunk_size in [1usize, 3, 4, 5, 63, 64, 65, 256] {
+            let mut dec = StreamingDecoder::new(Alphabet::standard());
+            let mut out = vec![];
+            for chunk in encoded.chunks(chunk_size) {
+                dec.update(chunk, &mut out).unwrap();
+            }
+            dec.finish(&mut out).unwrap();
+            assert_eq!(out, data, "chunk_size={chunk_size}");
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_data_after_padding() {
+        let mut dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        let r = dec
+            .update(b"Zm8=", &mut out)
+            .and_then(|_| dec.update(b"Zm9v", &mut out));
+        assert!(matches!(r, Err(DecodeError::InvalidPadding { .. })));
+    }
+
+    #[test]
+    fn decoder_error_offset_across_chunks() {
+        let mut dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        dec.update(b"AAAABBBB", &mut out).unwrap();
+        let err = dec.update(b"CC!C", &mut out).unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 10, byte: b'!' });
+    }
+
+    #[test]
+    fn decoder_strict_rejects_trailing_fragment() {
+        let mut dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        dec.update(b"AAAABB", &mut out).unwrap();
+        assert!(matches!(
+            dec.finish(&mut out),
+            Err(DecodeError::InvalidLength { .. })
+        ));
+    }
+
+    #[test]
+    fn decoder_forgiving_accepts_unpadded_tail() {
+        let mut dec = StreamingDecoder::with_mode(Alphabet::standard(), Mode::Forgiving);
+        let mut out = vec![];
+        dec.update(b"Zm9vYmE", &mut out).unwrap();
+        dec.finish(&mut out).unwrap();
+        assert_eq!(out, b"fooba");
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = StreamingEncoder::new(Alphabet::standard());
+        let mut out = vec![];
+        assert_eq!(enc.finish(&mut out), 0);
+        assert!(out.is_empty());
+        let dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        assert_eq!(dec.finish(&mut out).unwrap(), 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Wide-word (SWAR) codec — the AVX2-class baseline on plain u64/u32.
+//!
+//! Where [`super::scalar`] touches one byte at a time, this codec uses the
+//! classic wide-table formulation that the 2018 AVX2 paper benchmarked
+//! against and that production scalar codecs (modp_b64, aklomp/base64
+//! "plain") use:
+//!
+//! * **encode**: three 256-entry byte tables indexed by *pre-shifted*
+//!   bytes, emitting one `u32` (4 chars) per 3 input bytes with a single
+//!   unaligned store;
+//! * **decode**: four 256-entry `u32` tables with the 6-bit values
+//!   pre-positioned, so a quantum decodes as `d0[c0]|d1[c1]|d2[c2]|d3[c3]`
+//!   — one OR-tree plus a single sentinel test (invalid chars carry
+//!   `0xFF00_0000`), then a 4-byte store advanced by 3.
+//!
+//! Tables are built per [`Alphabet`] at construction time (4.75 kB), the
+//! register-file analog of AVX2's in-register LUTs.
+
+use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::{encoded_len, Alphabet, Codec};
+
+/// Sentinel OR-mask marking an invalid character in the decode tables.
+const BAD: u32 = 0xFF00_0000;
+
+/// Wide-word table-driven codec (AVX2-class baseline).
+pub struct SwarCodec {
+    alphabet: Alphabet,
+    mode: Mode,
+    /// e0[x] = char(x >> 2) ; e1[x] = char(x & 0x3F) — pre-shifted encode tables.
+    e0: [u8; 256],
+    e1: [u8; 256],
+    /// d{i}[c] = value(c) << bit-position within the little-endian u32
+    /// holding the 3 output bytes; BAD when c is not in the alphabet.
+    d0: Box<[u32; 256]>,
+    d1: Box<[u32; 256]>,
+    d2: Box<[u32; 256]>,
+    d3: Box<[u32; 256]>,
+}
+
+impl SwarCodec {
+    pub fn new(alphabet: Alphabet) -> Self {
+        Self::with_mode(alphabet, Mode::Strict)
+    }
+
+    pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
+        let chars = alphabet.chars();
+        let mut e0 = [0u8; 256];
+        let mut e1 = [0u8; 256];
+        for x in 0..256 {
+            e0[x] = chars[x >> 2];
+            e1[x] = chars[x & 0x3F];
+        }
+        let mut d0 = Box::new([BAD; 256]);
+        let mut d1 = Box::new([BAD; 256]);
+        let mut d2 = Box::new([BAD; 256]);
+        let mut d3 = Box::new([BAD; 256]);
+        for (v, &c) in chars.iter().enumerate() {
+            let v = v as u32;
+            let c = c as usize;
+            // Output u32 (LE): byte0 = a<<2|b>>4, byte1 = b<<4|c>>2, byte2 = c<<6|d.
+            d0[c] = v << 2;
+            d1[c] = (v >> 4) | ((v & 0x0F) << 12);
+            d2[c] = ((v >> 2) << 8) | ((v & 0x03) << 22);
+            d3[c] = v << 16;
+        }
+        Self { alphabet, mode, e0, e1, d0, d1, d2, d3 }
+    }
+
+    pub fn alphabet(&self) -> &Alphabet {
+        &self.alphabet
+    }
+}
+
+impl Codec for SwarCodec {
+    fn name(&self) -> &'static str {
+        "swar"
+    }
+
+    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        let total = encoded_len(input.len());
+        out.reserve(total);
+        let mut chunks = input.chunks_exact(3);
+        for chunk in &mut chunks {
+            let (s1, s2, s3) = (chunk[0] as usize, chunk[1] as usize, chunk[2] as usize);
+            let quad = [
+                self.e0[s1],
+                self.e1[((s1 & 0x03) << 4) | (s2 >> 4)],
+                self.e1[((s2 & 0x0F) << 2) | (s3 >> 6)],
+                self.e1[s3 & 0x3F],
+            ];
+            out.extend_from_slice(&quad);
+        }
+        let pad = self.alphabet.pad();
+        match chunks.remainder() {
+            [] => {}
+            [s1] => {
+                let s1 = *s1 as usize;
+                out.extend_from_slice(&[self.e0[s1], self.e1[(s1 & 0x03) << 4], pad, pad]);
+            }
+            [s1, s2] => {
+                let (s1, s2) = (*s1 as usize, *s2 as usize);
+                out.extend_from_slice(&[
+                    self.e0[s1],
+                    self.e1[((s1 & 0x03) << 4) | (s2 >> 4)],
+                    self.e1[(s2 & 0x0F) << 2],
+                    pad,
+                ]);
+            }
+            _ => unreachable!(),
+        }
+        out.len() - start
+    }
+
+    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let start = out.len();
+        out.reserve(body.len() / 4 * 3 + 4);
+        for (q, quad) in body.chunks_exact(4).enumerate() {
+            let w = self.d0[quad[0] as usize]
+                | self.d1[quad[1] as usize]
+                | self.d2[quad[2] as usize]
+                | self.d3[quad[3] as usize];
+            if w & BAD != 0 {
+                // Narrow to the exact byte for the error report (cold path).
+                for (i, &c) in quad.iter().enumerate() {
+                    if self.alphabet.value_of(c).is_none() {
+                        return Err(DecodeError::InvalidByte { offset: q * 4 + i, byte: c });
+                    }
+                }
+                unreachable!("sentinel set but all bytes valid");
+            }
+            out.extend_from_slice(&w.to_le_bytes()[..3]);
+        }
+        decode_tail(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            out,
+        )?;
+        Ok(out.len() - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::scalar::ScalarCodec;
+
+    fn codec() -> SwarCodec {
+        SwarCodec::new(Alphabet::standard())
+    }
+
+    #[test]
+    fn rfc4648_test_vectors() {
+        let c = codec();
+        for (raw, enc) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"Zg=="),
+            (b"fo", b"Zm8="),
+            (b"foo", b"Zm9v"),
+            (b"foob", b"Zm9vYg=="),
+            (b"fooba", b"Zm9vYmE="),
+            (b"foobar", b"Zm9vYmFy"),
+        ] {
+            assert_eq!(c.encode(raw), enc);
+            assert_eq!(c.decode(enc).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn agrees_with_scalar_on_random_data() {
+        let s = ScalarCodec::new(Alphabet::standard());
+        let c = codec();
+        let mut x: u32 = 0x1234_5678;
+        for len in 0..200usize {
+            let data: Vec<u8> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                    (x >> 24) as u8
+                })
+                .collect();
+            let enc = c.encode(&data);
+            assert_eq!(enc, s.encode(&data), "len={len}");
+            assert_eq!(c.decode(&enc).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn decode_table_positions() {
+        // 'Q' = value 16: verify each table places the bits correctly by
+        // decoding "QQQQ" -> 0b010000_010000_010000_010000 packed.
+        let c = codec();
+        let out = c.decode(b"QQQQ").unwrap();
+        assert_eq!(out, vec![0b0100_0001, 0b0000_0100, 0b0001_0000]);
+    }
+
+    #[test]
+    fn invalid_byte_detected_in_each_position() {
+        let c = codec();
+        for pos in 0..4 {
+            let mut quad = *b"AAAA";
+            quad[pos] = b'!';
+            let err = c.decode(&quad).unwrap_err();
+            assert_eq!(err, DecodeError::InvalidByte { offset: pos, byte: b'!' });
+        }
+    }
+
+    #[test]
+    fn non_ascii_detected() {
+        let c = codec();
+        for pos in 0..4 {
+            let mut quad = *b"AAAA";
+            quad[pos] = 0x80 + pos as u8;
+            assert!(c.decode(&quad).is_err());
+        }
+    }
+
+    #[test]
+    fn url_variant_tables() {
+        let c = SwarCodec::new(Alphabet::url());
+        assert_eq!(c.encode(&[0xFB, 0xFF]), b"-_8=");
+        assert_eq!(c.decode(b"-_8=").unwrap(), vec![0xFB, 0xFF]);
+    }
+}

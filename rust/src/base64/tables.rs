@@ -1,0 +1,103 @@
+//! Encode/decode lookup tables — the `vpermb`/`vpermi2b` register contents.
+
+/// Sentinel for "not a base64 character" in [`DecodeTable`]. Chosen as
+/// 0x80 exactly as in the paper: `input | table[input]` has its MSB set
+/// iff the input byte was invalid (including all non-ASCII bytes).
+pub const INVALID: u8 = 0x80;
+
+/// 64-entry value -> ASCII table (the encoder's `vpermb` register).
+#[derive(Clone, PartialEq, Eq)]
+pub struct EncodeTable([u8; 64]);
+
+impl EncodeTable {
+    pub fn new(chars: &[u8; 64]) -> Self {
+        Self(*chars)
+    }
+
+    /// Map a 6-bit value to its character. Like `vpermb`, only the six
+    /// least significant bits of the index participate.
+    #[inline(always)]
+    pub fn lookup(&self, value: u8) -> u8 {
+        self.0[(value & 0x3F) as usize]
+    }
+
+    /// Raw table, e.g. to feed the PJRT executable's table input.
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8; 64] {
+        &self.0
+    }
+}
+
+/// 128-entry ASCII -> value table (the decoder's `vpermi2b` register
+/// pair); [`INVALID`] everywhere outside the alphabet.
+#[derive(Clone, PartialEq, Eq)]
+pub struct DecodeTable([u8; 128]);
+
+impl DecodeTable {
+    pub fn new(chars: &[u8; 64]) -> Self {
+        let mut t = [INVALID; 128];
+        for (value, &c) in chars.iter().enumerate() {
+            debug_assert!(c < 0x80);
+            t[c as usize] = value as u8;
+        }
+        Self(t)
+    }
+
+    /// Map a byte to its 6-bit value or [`INVALID`]. Like `vpermi2b`, the
+    /// MSB of the index is ignored — callers must OR the input back in to
+    /// flag non-ASCII bytes (which [`crate::base64::block`] does).
+    #[inline(always)]
+    pub fn lookup(&self, c: u8) -> u8 {
+        self.0[(c & 0x7F) as usize]
+    }
+
+    /// Raw table, e.g. to feed the PJRT executable's table input.
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8; 128] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::alphabet::STANDARD;
+
+    #[test]
+    fn roundtrip_all_values() {
+        let e = EncodeTable::new(STANDARD);
+        let d = DecodeTable::new(STANDARD);
+        for v in 0..64u8 {
+            assert_eq!(d.lookup(e.lookup(v)), v);
+        }
+    }
+
+    #[test]
+    fn vpermb_ignores_top_bits() {
+        let e = EncodeTable::new(STANDARD);
+        for v in 0..=255u8 {
+            assert_eq!(e.lookup(v), e.lookup(v & 0x3F));
+        }
+    }
+
+    #[test]
+    fn invalid_has_msb_set() {
+        let d = DecodeTable::new(STANDARD);
+        for c in 0..128u8 {
+            let is_b64 = STANDARD.contains(&c);
+            assert_eq!(d.lookup(c) & 0x80 != 0, !is_b64, "c={c:#x}");
+        }
+    }
+
+    #[test]
+    fn or_trick_flags_non_ascii() {
+        // The paper's §3.2 validation identity: (c | lookup(c)) & 0x80 != 0
+        // iff c invalid, for ALL 256 byte values.
+        let d = DecodeTable::new(STANDARD);
+        for c in 0..=255u8 {
+            let flagged = (c | d.lookup(c)) & 0x80 != 0;
+            let is_b64 = c < 0x80 && STANDARD.contains(&c);
+            assert_eq!(flagged, !is_b64, "c={c:#x}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Decoding error model and RFC 4648 padding/strictness semantics.
+
+/// Where and why a decode failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// A byte outside the variant's alphabet at `offset` in the input.
+    InvalidByte { offset: usize, byte: u8 },
+    /// Input length is not a multiple of 4 (strict mode, padded input).
+    InvalidLength { len: usize },
+    /// Padding appears before the final quantum or is malformed.
+    InvalidPadding { offset: usize },
+    /// The final quantum encodes trailing bits that are not zero
+    /// (non-canonical encoding, e.g. "aGk=" vs "aGl=").
+    TrailingBits { offset: usize },
+    /// A deferred (batched) validation failed; the per-row flags narrowed
+    /// it to `block_row`, but the exact byte was not recomputed.
+    InvalidBlock { block_row: usize },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::InvalidByte { offset, byte } => {
+                write!(f, "invalid base64 byte 0x{byte:02x} at offset {offset}")
+            }
+            Self::InvalidLength { len } => {
+                write!(f, "invalid base64 length {len} (not a multiple of 4)")
+            }
+            Self::InvalidPadding { offset } => write!(f, "invalid padding at offset {offset}"),
+            Self::TrailingBits { offset } => {
+                write!(f, "non-zero trailing bits in final quantum at offset {offset}")
+            }
+            Self::InvalidBlock { block_row } => {
+                write!(f, "invalid base64 character in block row {block_row}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Decoding strictness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mode {
+    /// RFC 4648 §3.5 strict: canonical padding required, canonical zero
+    /// trailing bits enforced, no whitespace. This is what the paper's
+    /// codecs implement (they reject any byte outside the table).
+    #[default]
+    Strict,
+    /// Padding optional (accept unpadded input); trailing bits ignored.
+    /// Still rejects alphabet-foreign bytes.
+    Forgiving,
+}
+
+/// Split a padded base64 input into (full-quantum body, final quantum).
+///
+/// Returns `(body, tail)` where `body.len() % 4 == 0` and `tail` is the
+/// final ≤4-char quantum *if* it contains padding or is partial; `tail`
+/// is empty when the input is a clean multiple of 4 with no padding.
+pub fn split_tail<'a>(input: &'a [u8], pad: u8, mode: Mode) -> Result<(&'a [u8], &'a [u8]), DecodeError> {
+    if input.is_empty() {
+        return Ok((input, &[]));
+    }
+    match mode {
+        Mode::Strict => {
+            if input.len() % 4 != 0 {
+                return Err(DecodeError::InvalidLength { len: input.len() });
+            }
+            let last4 = &input[input.len() - 4..];
+            if last4.contains(&pad) {
+                Ok((&input[..input.len() - 4], last4))
+            } else {
+                Ok((input, &[]))
+            }
+        }
+        Mode::Forgiving => {
+            // Trim at the first pad or take len rounded down to 4.
+            let body_len = input.len() & !3;
+            let first_pad = input.iter().position(|&c| c == pad);
+            match first_pad {
+                Some(p) => {
+                    let q_start = p & !3;
+                    Ok((&input[..q_start], &input[q_start..]))
+                }
+                None if body_len == input.len() => Ok((input, &[])),
+                None => Ok((&input[..body_len], &input[body_len..])),
+            }
+        }
+    }
+}
+
+/// Decode the final quantum (0–4 chars, possibly padded) using `value_of`.
+///
+/// `base_offset` is the quantum's offset in the original input, used for
+/// error reporting. Appends 0–3 bytes to `out`.
+pub fn decode_tail(
+    tail: &[u8],
+    pad: u8,
+    mode: Mode,
+    base_offset: usize,
+    value_of: impl Fn(u8) -> Option<u8>,
+    out: &mut Vec<u8>,
+) -> Result<usize, DecodeError> {
+    if tail.is_empty() {
+        return Ok(0);
+    }
+    // Split data chars from padding.
+    let data_len = tail.iter().position(|&c| c == pad).unwrap_or(tail.len());
+    let data = &tail[..data_len];
+    let padding = &tail[data_len..];
+    // Everything after the first pad must be pad (strict), and the padded
+    // quantum must be exactly 4 long.
+    if !padding.iter().all(|&c| c == pad) {
+        return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+    }
+    if mode == Mode::Strict {
+        if !padding.is_empty() && tail.len() != 4 {
+            return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+        }
+        if padding.len() > 2 {
+            return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+        }
+    }
+    let mut vals = [0u8; 4];
+    for (i, &c) in data.iter().enumerate() {
+        vals[i] = value_of(c).ok_or(DecodeError::InvalidByte {
+            offset: base_offset + i,
+            byte: c,
+        })?;
+    }
+    let written = match data.len() {
+        0 => 0,
+        1 => return Err(DecodeError::InvalidLength { len: base_offset + 1 }),
+        2 => {
+            if mode == Mode::Strict && vals[1] & 0x0F != 0 {
+                return Err(DecodeError::TrailingBits { offset: base_offset + 1 });
+            }
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            1
+        }
+        3 => {
+            if mode == Mode::Strict && vals[2] & 0x03 != 0 {
+                return Err(DecodeError::TrailingBits { offset: base_offset + 2 });
+            }
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            out.push((vals[1] << 4) | (vals[2] >> 2));
+            2
+        }
+        4 => {
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            out.push((vals[1] << 4) | (vals[2] >> 2));
+            out.push((vals[2] << 6) | vals[3]);
+            3
+        }
+        _ => unreachable!("tail is at most 4 chars"),
+    };
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::Alphabet;
+
+    fn vo(a: &Alphabet) -> impl Fn(u8) -> Option<u8> + '_ {
+        move |c| a.value_of(c)
+    }
+
+    #[test]
+    fn split_strict_no_pad() {
+        let (body, tail) = split_tail(b"AAAABBBB", b'=', Mode::Strict).unwrap();
+        assert_eq!(body, b"AAAABBBB");
+        assert!(tail.is_empty());
+    }
+
+    #[test]
+    fn split_strict_with_pad() {
+        let (body, tail) = split_tail(b"AAAABB==", b'=', Mode::Strict).unwrap();
+        assert_eq!(body, b"AAAA");
+        assert_eq!(tail, b"BB==");
+    }
+
+    #[test]
+    fn split_strict_bad_length() {
+        assert!(matches!(
+            split_tail(b"AAAAB", b'=', Mode::Strict),
+            Err(DecodeError::InvalidLength { len: 5 })
+        ));
+    }
+
+    #[test]
+    fn split_forgiving_unpadded() {
+        let (body, tail) = split_tail(b"AAAABB", b'=', Mode::Forgiving).unwrap();
+        assert_eq!(body, b"AAAA");
+        assert_eq!(tail, b"BB");
+    }
+
+    #[test]
+    fn tail_decodes_two_chars() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        // "aA==" is the canonical encoding of the single byte 'h'.
+        let n = decode_tail(b"aA==", b'=', Mode::Strict, 0, vo(&a), &mut out).unwrap();
+        assert_eq!((n, out.as_slice()), (1, &b"h"[..]));
+    }
+
+    #[test]
+    fn tail_rejects_noncanonical_trailing_bits() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        // 'l' = 37 = 0b100101 has low bits set -> non-canonical for 2-char tail.
+        assert!(matches!(
+            decode_tail(b"al==", b'=', Mode::Strict, 0, vo(&a), &mut out),
+            Err(DecodeError::TrailingBits { .. })
+        ));
+        // Forgiving mode accepts it.
+        let mut out = vec![];
+        decode_tail(b"al==", b'=', Mode::Forgiving, 0, vo(&a), &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn tail_rejects_pad_then_data() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        assert!(matches!(
+            decode_tail(b"a=b=", b'=', Mode::Strict, 8, vo(&a), &mut out),
+            Err(DecodeError::InvalidPadding { offset: 9 })
+        ));
+    }
+
+    #[test]
+    fn tail_rejects_single_char() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        assert!(matches!(
+            decode_tail(b"a", b'=', Mode::Forgiving, 0, vo(&a), &mut out),
+            Err(DecodeError::InvalidLength { .. })
+        ));
+    }
+
+    #[test]
+    fn tail_rejects_invalid_byte_with_offset() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        assert!(matches!(
+            decode_tail(b"a!==", b'=', Mode::Strict, 100, vo(&a), &mut out),
+            Err(DecodeError::InvalidByte { offset: 101, byte: b'!' })
+        ));
+    }
+
+    #[test]
+    fn tail_full_quantum() {
+        let a = Alphabet::standard();
+        let mut out = vec![];
+        let n = decode_tail(b"aGVs", b'=', Mode::Strict, 0, vo(&a), &mut out).unwrap();
+        assert_eq!((n, out.as_slice()), (3, &b"hel"[..]));
+    }
+}

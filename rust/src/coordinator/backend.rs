@@ -1,0 +1,225 @@
+//! The block-execution backend abstraction.
+//!
+//! The coordinator batches whole 48/64-byte blocks and hands them to a
+//! [`BlockBackend`]. Production uses the PJRT executables
+//! ([`crate::runtime::BlockExecutor`]); tests and runtime-less deployments
+//! use [`RustBackend`], the in-process block codec. Both consume the same
+//! runtime-supplied tables, preserving the paper's variants-as-data
+//! property across backends.
+
+use std::sync::Arc;
+
+use crate::runtime::BlockExecutor;
+
+/// Batched whole-block encode/decode over some execution substrate.
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT client is reference-counted
+/// and thread-bound, so each scheduler worker constructs its own backend
+/// from a [`BackendFactory`] and keeps it for the thread's lifetime.
+pub trait BlockBackend {
+    /// Label used in metrics/benches.
+    fn name(&self) -> &'static str;
+
+    /// `input.len() % 48 == 0` -> `input.len() / 48 * 64` chars.
+    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>>;
+
+    /// `input.len() % 64 == 0` -> (decoded bytes, per-row error bytes).
+    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)>;
+}
+
+/// Constructs one thread-local backend per worker thread.
+pub type BackendFactory = Arc<dyn Fn() -> anyhow::Result<Box<dyn BlockBackend>> + Send + Sync>;
+
+/// Factory for the in-process Rust backend.
+pub fn rust_factory() -> BackendFactory {
+    Arc::new(|| Ok(Box::new(RustBackend) as Box<dyn BlockBackend>))
+}
+
+/// Factory for the PJRT backend: every worker gets its own CPU client and
+/// executable cache over the same artifact directory.
+pub fn pjrt_factory(dir: std::path::PathBuf) -> BackendFactory {
+    Arc::new(move || {
+        let rt = Arc::new(crate::runtime::Runtime::new(&dir)?);
+        Ok(Box::new(BlockExecutor::new(rt)) as Box<dyn BlockBackend>)
+    })
+}
+
+/// Factory for the fastest native backend: the real AVX-512 VBMI codec
+/// when the CPU has it (the paper's §3 instructions), else the scalar
+/// block codec.
+pub fn native_factory() -> BackendFactory {
+    Arc::new(|| {
+        if crate::base64::avx512::Avx512Codec::available() {
+            Ok(Box::new(NativeBackend) as Box<dyn BlockBackend>)
+        } else {
+            Ok(Box::new(RustBackend) as Box<dyn BlockBackend>)
+        }
+    })
+}
+
+/// AVX-512 VBMI block backend (requires [`Avx512Codec::available`]).
+///
+/// [`Avx512Codec::available`]: crate::base64::avx512::Avx512Codec::available
+pub struct NativeBackend;
+
+impl BlockBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+
+    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(input.len() % 48 == 0, "whole blocks required");
+        #[cfg(target_arch = "x86_64")]
+        {
+            let mut out = vec![0u8; input.len() / 48 * 64];
+            // SAFETY: factory only constructs this when VBMI is detected.
+            unsafe { crate::base64::avx512::raw::encode_blocks(input, &mut out, table) };
+            Ok(out)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            RustBackend.encode_blocks(input, table)
+        }
+    }
+
+    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        anyhow::ensure!(input.len() % 64 == 0, "whole blocks required");
+        #[cfg(target_arch = "x86_64")]
+        {
+            // The AVX-512 path accumulates one error mask per stream, not
+            // per row; to report per-row flags (the batcher contract) we
+            // decode per stream and only on failure re-scan rows (cold).
+            let rows = input.len() / 64;
+            let mut out = vec![0u8; rows * 48];
+            // SAFETY: see encode_blocks.
+            let mask = unsafe { crate::base64::avx512::raw::decode_blocks(input, &mut out, dtable) };
+            let mut errs = vec![0u8; rows];
+            if mask != 0 {
+                for (row, flag) in errs.iter_mut().enumerate() {
+                    let has_bad = input[row * 64..(row + 1) * 64]
+                        .iter()
+                        .any(|&c| (c | dtable[(c & 0x7F) as usize]) & 0x80 != 0);
+                    if has_bad {
+                        *flag = 0x80;
+                    }
+                }
+            }
+            Ok((out, errs))
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            RustBackend.decode_blocks(input, dtable)
+        }
+    }
+}
+
+impl BlockBackend for BlockExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        BlockExecutor::encode_blocks(self, input, table)
+    }
+
+    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        let out = BlockExecutor::decode_blocks(self, input, dtable)?;
+        Ok((out.data, out.err))
+    }
+}
+
+/// Pure-Rust backend: the paper's block dataflow on host lanes, driven
+/// directly by the raw tables (no PJRT involved).
+#[derive(Default)]
+pub struct RustBackend;
+
+impl BlockBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust-block"
+    }
+
+    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(input.len() % 48 == 0, "whole blocks required");
+        let mut out = vec![0u8; input.len() / 48 * 64];
+        for (inp, dst) in input.chunks_exact(48).zip(out.chunks_exact_mut(64)) {
+            for g in 0..16 {
+                let (s1, s2, s3) = (inp[3 * g] as u32, inp[3 * g + 1] as u32, inp[3 * g + 2] as u32);
+                let t = s2 | (s1 << 8) | (s3 << 16) | (s2 << 24);
+                dst[4 * g] = table[((t >> 10) & 0x3F) as usize];
+                dst[4 * g + 1] = table[((t >> 4) & 0x3F) as usize];
+                dst[4 * g + 2] = table[((t >> 22) & 0x3F) as usize];
+                dst[4 * g + 3] = table[((t >> 16) & 0x3F) as usize];
+            }
+        }
+        Ok(out)
+    }
+
+    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        anyhow::ensure!(input.len() % 64 == 0, "whole blocks required");
+        let rows = input.len() / 64;
+        let mut out = vec![0u8; rows * 48];
+        let mut errs = vec![0u8; rows];
+        for ((inp, dst), err) in input
+            .chunks_exact(64)
+            .zip(out.chunks_exact_mut(48))
+            .zip(errs.iter_mut())
+        {
+            let mut acc = 0u8;
+            for g in 0..16 {
+                let c = [inp[4 * g], inp[4 * g + 1], inp[4 * g + 2], inp[4 * g + 3]];
+                let v = [
+                    dtable[(c[0] & 0x7F) as usize],
+                    dtable[(c[1] & 0x7F) as usize],
+                    dtable[(c[2] & 0x7F) as usize],
+                    dtable[(c[3] & 0x7F) as usize],
+                ];
+                acc |= c[0] | v[0] | c[1] | v[1] | c[2] | v[2] | c[3] | v[3];
+                let ab = ((v[0] as u32) << 6) | v[1] as u32;
+                let cd = ((v[2] as u32) << 6) | v[3] as u32;
+                let w = (ab << 12) | cd;
+                dst[3 * g] = (w >> 16) as u8;
+                dst[3 * g + 1] = (w >> 8) as u8;
+                dst[3 * g + 2] = w as u8;
+            }
+            *err = acc;
+        }
+        Ok((out, errs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::{block::BlockCodec, Alphabet, Codec};
+
+    #[test]
+    fn rust_backend_matches_block_codec() {
+        let a = Alphabet::standard();
+        let be = RustBackend;
+        let codec = BlockCodec::new(a.clone());
+        let data: Vec<u8> = (0..48 * 7).map(|i| (i * 37 % 256) as u8).collect();
+        let enc = be.encode_blocks(&data, a.encode_table().as_bytes()).unwrap();
+        assert_eq!(enc, codec.encode(&data));
+        let (dec, errs) = be.decode_blocks(&enc, a.decode_table().as_bytes()).unwrap();
+        assert_eq!(dec, data);
+        assert!(errs.iter().all(|e| e & 0x80 == 0));
+    }
+
+    #[test]
+    fn rust_backend_flags_bad_rows() {
+        let a = Alphabet::standard();
+        let be = RustBackend;
+        let mut input = vec![b'A'; 64 * 3];
+        input[64 + 7] = b'!';
+        let (_, errs) = be.decode_blocks(&input, a.decode_table().as_bytes()).unwrap();
+        assert_eq!(errs.iter().map(|e| e >> 7).collect::<Vec<_>>(), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn rust_backend_rejects_partial_blocks() {
+        let be = RustBackend;
+        let a = Alphabet::standard();
+        assert!(be.encode_blocks(&[0u8; 47], a.encode_table().as_bytes()).is_err());
+        assert!(be.decode_blocks(&[b'A'; 63], a.decode_table().as_bytes()).is_err());
+    }
+}

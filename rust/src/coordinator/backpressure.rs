@@ -1,0 +1,138 @@
+//! Admission control: bounded in-flight bytes and request count.
+//!
+//! The batcher queue must not grow without bound when producers outpace
+//! the PJRT workers; requests beyond the configured limits are rejected
+//! up front (load shedding) rather than queued into oblivion.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Why admission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// Too many requests in flight.
+    TooManyRequests { in_flight: u64, limit: u64 },
+    /// Too many payload bytes in flight.
+    TooManyBytes { in_flight: u64, limit: u64 },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TooManyRequests { in_flight, limit } => {
+                write!(f, "busy: {in_flight} requests in flight (limit {limit})")
+            }
+            Self::TooManyBytes { in_flight, limit } => {
+                write!(f, "busy: {in_flight} bytes in flight (limit {limit})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Shared admission state.
+pub struct Gate {
+    max_requests: u64,
+    max_bytes: u64,
+    requests: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// RAII permit: releases its share of the gate on drop.
+pub struct Permit {
+    gate: Arc<Gate>,
+    bytes: u64,
+}
+
+impl Gate {
+    pub fn new(max_requests: u64, max_bytes: u64) -> Arc<Self> {
+        Arc::new(Self {
+            max_requests,
+            max_bytes,
+            requests: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        })
+    }
+
+    /// Try to admit a request of `bytes` payload bytes.
+    pub fn try_acquire(self: &Arc<Self>, bytes: u64) -> Result<Permit, Rejected> {
+        let reqs = self.requests.fetch_add(1, Ordering::AcqRel) + 1;
+        if reqs > self.max_requests {
+            self.requests.fetch_sub(1, Ordering::AcqRel);
+            return Err(Rejected::TooManyRequests { in_flight: reqs - 1, limit: self.max_requests });
+        }
+        let b = self.bytes.fetch_add(bytes, Ordering::AcqRel) + bytes;
+        if b > self.max_bytes {
+            self.bytes.fetch_sub(bytes, Ordering::AcqRel);
+            self.requests.fetch_sub(1, Ordering::AcqRel);
+            return Err(Rejected::TooManyBytes { in_flight: b - bytes, limit: self.max_bytes });
+        }
+        Ok(Permit { gate: self.clone(), bytes })
+    }
+
+    pub fn in_flight(&self) -> (u64, u64) {
+        (self.requests.load(Ordering::Acquire), self.bytes.load(Ordering::Acquire))
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.gate.bytes.fetch_sub(self.bytes, Ordering::AcqRel);
+        self.gate.requests.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_request_limit() {
+        let g = Gate::new(2, 1 << 30);
+        let p1 = g.try_acquire(10).unwrap();
+        let _p2 = g.try_acquire(10).unwrap();
+        assert!(matches!(g.try_acquire(10), Err(Rejected::TooManyRequests { .. })));
+        drop(p1);
+        assert!(g.try_acquire(10).is_ok());
+    }
+
+    #[test]
+    fn admits_until_byte_limit() {
+        let g = Gate::new(100, 100);
+        let _p1 = g.try_acquire(80).unwrap();
+        assert!(matches!(g.try_acquire(30), Err(Rejected::TooManyBytes { .. })));
+        assert!(g.try_acquire(20).is_ok());
+    }
+
+    #[test]
+    fn permit_releases_on_drop() {
+        let g = Gate::new(10, 1000);
+        {
+            let _p = g.try_acquire(500).unwrap();
+            assert_eq!(g.in_flight(), (1, 500));
+        }
+        assert_eq!(g.in_flight(), (0, 0));
+    }
+
+    #[test]
+    fn concurrent_acquire_release() {
+        let g = Gate::new(64, 1 << 20);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let g = g.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        if let Ok(p) = g.try_acquire(128) {
+                            drop(p);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.in_flight(), (0, 0));
+    }
+}

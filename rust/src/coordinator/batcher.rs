@@ -1,0 +1,385 @@
+//! Dynamic batching: coalesce block-aligned work from many requests into
+//! one executable launch.
+//!
+//! PJRT executables are compiled for fixed row classes (16/64/256/1024
+//! blocks); launching one per request would waste most of each batch on
+//! zero padding. The batcher keeps per-(direction, table) pending queues
+//! and flushes a group when it reaches the largest row class or when its
+//! oldest item exceeds the linger deadline — the standard
+//! throughput/latency trade of serving systems (cf. vLLM bucket
+//! batching), applied to base64 blocks.
+//!
+//! The coalescing core ([`PendingSet`]) is synchronous and fully unit
+//! tested; [`run_batcher`] is the thread driver used by the
+//! [`crate::coordinator::Scheduler`].
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::backend::BlockBackend;
+use crate::base64::{B64_BLOCK, RAW_BLOCK};
+
+/// Which direction a work item runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Encode,
+    Decode,
+}
+
+impl Direction {
+    /// Input bytes per block row for this direction.
+    pub fn block_len(self) -> usize {
+        match self {
+            Self::Encode => RAW_BLOCK,
+            Self::Decode => B64_BLOCK,
+        }
+    }
+}
+
+/// Result delivered to the submitting request.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// Encode: the base64 chars. Decode: the raw bytes.
+    pub data: Vec<u8>,
+    /// Decode only: one error byte per input block row.
+    pub err: Vec<u8>,
+}
+
+/// One block-aligned unit of work (whole blocks only).
+pub struct WorkItem {
+    pub payload: Vec<u8>,
+    pub reply: mpsc::Sender<anyhow::Result<BatchResult>>,
+    pub enqueued: Instant,
+}
+
+/// Batch group key: direction + the lookup table driving it. Work for
+/// different base64 variants must not share a launch.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub direction: Direction,
+    pub table: Vec<u8>,
+}
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush a group when its pending rows reach this count (normally the
+    /// largest compiled row class).
+    pub max_rows: usize,
+    /// Flush a group when its oldest item has waited this long.
+    pub linger: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_rows: 1024, linger: Duration::from_micros(200) }
+    }
+}
+
+/// The coalescing core: per-group pending queues with flush decisions.
+pub struct PendingSet {
+    config: BatcherConfig,
+    groups: HashMap<GroupKey, Vec<WorkItem>>,
+}
+
+impl PendingSet {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self { config, groups: HashMap::new() }
+    }
+
+    /// Rows currently pending in a group.
+    pub fn rows(&self, key: &GroupKey) -> usize {
+        self.groups
+            .get(key)
+            .map(|items| {
+                items.iter().map(|i| i.payload.len() / key.direction.block_len()).sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Add an item; returns the group ready to flush, if any.
+    pub fn push(&mut self, key: GroupKey, item: WorkItem) -> Option<GroupKey> {
+        debug_assert_eq!(item.payload.len() % key.direction.block_len(), 0);
+        self.groups.entry(key.clone()).or_default().push(item);
+        (self.rows(&key) >= self.config.max_rows).then_some(key)
+    }
+
+    /// Groups whose oldest item has exceeded the linger deadline.
+    pub fn expired(&self, now: Instant) -> Vec<GroupKey> {
+        self.groups
+            .iter()
+            .filter(|(_, items)| {
+                items
+                    .first()
+                    .map(|i| now.duration_since(i.enqueued) >= self.config.linger)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Earliest deadline across all groups (for the driver's timeout).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups
+            .values()
+            .filter_map(|items| items.first())
+            .map(|i| i.enqueued + self.config.linger)
+            .min()
+    }
+
+    /// Remove and return a group's items.
+    pub fn take(&mut self, key: &GroupKey) -> Vec<WorkItem> {
+        self.groups.remove(key).unwrap_or_default()
+    }
+
+    /// Drain everything (shutdown).
+    pub fn drain(&mut self) -> Vec<(GroupKey, Vec<WorkItem>)> {
+        self.groups.drain().collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+}
+
+/// Execute one coalesced group on the backend and distribute results.
+pub fn execute_group(backend: &dyn BlockBackend, key: &GroupKey, items: Vec<WorkItem>) -> BatchStats {
+    let block_len = key.direction.block_len();
+    let total: usize = items.iter().map(|i| i.payload.len()).sum();
+    let mut input = Vec::with_capacity(total);
+    for item in &items {
+        input.extend_from_slice(&item.payload);
+    }
+    let rows = total / block_len;
+    let result = match key.direction {
+        Direction::Encode => {
+            let table: &[u8; 64] = key.table.as_slice().try_into().expect("encode table is 64B");
+            backend.encode_blocks(&input, table).map(|data| (data, Vec::new()))
+        }
+        Direction::Decode => {
+            let table: &[u8; 128] = key.table.as_slice().try_into().expect("decode table is 128B");
+            backend.decode_blocks(&input, table)
+        }
+    };
+    match result {
+        Ok((data, err)) => {
+            let out_block = match key.direction {
+                Direction::Encode => B64_BLOCK,
+                Direction::Decode => RAW_BLOCK,
+            };
+            let mut data_off = 0;
+            let mut err_off = 0;
+            for item in items {
+                let item_rows = item.payload.len() / block_len;
+                let chunk = data[data_off..data_off + item_rows * out_block].to_vec();
+                data_off += item_rows * out_block;
+                let err_chunk = if key.direction == Direction::Decode {
+                    let e = err[err_off..err_off + item_rows].to_vec();
+                    err_off += item_rows;
+                    e
+                } else {
+                    Vec::new()
+                };
+                // Receiver may have given up; ignore send failures.
+                let _ = item.reply.send(Ok(BatchResult { data: chunk, err: err_chunk }));
+            }
+            BatchStats { launches: 1, rows, ok: true }
+        }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e}");
+            for item in items {
+                let _ = item.reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            BatchStats { launches: 1, rows, ok: false }
+        }
+    }
+}
+
+/// Per-flush statistics for metrics.
+pub struct BatchStats {
+    pub launches: u64,
+    pub rows: usize,
+    pub ok: bool,
+}
+
+/// Messages into the batcher thread.
+pub enum BatcherMsg {
+    Submit(GroupKey, WorkItem),
+    /// Flush everything now (tests, shutdown barriers).
+    Flush,
+}
+
+/// Thread driver: receive work, coalesce, flush on size or deadline.
+/// Returns when the channel disconnects (after a final drain).
+pub fn run_batcher(
+    rx: mpsc::Receiver<BatcherMsg>,
+    backend: &dyn BlockBackend,
+    config: BatcherConfig,
+    on_flush: impl Fn(&BatchStats),
+) {
+    let mut pending = PendingSet::new(config);
+    loop {
+        let timeout = pending
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(BatcherMsg::Submit(key, item)) => {
+                if let Some(full) = pending.push(key, item) {
+                    let items = pending.take(&full);
+                    on_flush(&execute_group(backend, &full, items));
+                }
+            }
+            Ok(BatcherMsg::Flush) => {
+                for (key, items) in pending.drain() {
+                    on_flush(&execute_group(backend, &key, items));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                for key in pending.expired(Instant::now()) {
+                    let items = pending.take(&key);
+                    on_flush(&execute_group(backend, &key, items));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (key, items) in pending.drain() {
+                    on_flush(&execute_group(backend, &key, items));
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::Alphabet;
+    use crate::coordinator::backend::RustBackend;
+
+    fn enc_key() -> GroupKey {
+        GroupKey {
+            direction: Direction::Encode,
+            table: Alphabet::standard().encode_table().as_bytes().to_vec(),
+        }
+    }
+
+    fn item(blocks: usize) -> (WorkItem, mpsc::Receiver<anyhow::Result<BatchResult>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            WorkItem {
+                payload: vec![0xAB; blocks * 48],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn push_signals_full_group() {
+        let mut p = PendingSet::new(BatcherConfig { max_rows: 4, linger: Duration::from_secs(1) });
+        let (i1, _r1) = item(2);
+        assert!(p.push(enc_key(), i1).is_none());
+        let (i2, _r2) = item(2);
+        assert_eq!(p.push(enc_key(), i2), Some(enc_key()));
+        assert_eq!(p.rows(&enc_key()), 4);
+    }
+
+    #[test]
+    fn groups_keyed_by_table() {
+        let mut p = PendingSet::new(BatcherConfig::default());
+        let url_key = GroupKey {
+            direction: Direction::Encode,
+            table: Alphabet::url().encode_table().as_bytes().to_vec(),
+        };
+        let (i1, _r1) = item(1);
+        let (i2, _r2) = item(1);
+        p.push(enc_key(), i1);
+        p.push(url_key.clone(), i2);
+        assert_eq!(p.rows(&enc_key()), 1);
+        assert_eq!(p.rows(&url_key), 1);
+    }
+
+    #[test]
+    fn expiry_respects_linger() {
+        let mut p = PendingSet::new(BatcherConfig {
+            max_rows: 1000,
+            linger: Duration::from_millis(5),
+        });
+        let (i1, _r1) = item(1);
+        p.push(enc_key(), i1);
+        assert!(p.expired(Instant::now()).is_empty());
+        assert_eq!(
+            p.expired(Instant::now() + Duration::from_millis(10)),
+            vec![enc_key()]
+        );
+    }
+
+    #[test]
+    fn execute_group_splits_results() {
+        let backend = RustBackend;
+        let (i1, r1) = item(1);
+        let (i2, r2) = item(3);
+        let stats = execute_group(&backend, &enc_key(), vec![i1, i2]);
+        assert!(stats.ok);
+        assert_eq!(stats.rows, 4);
+        assert_eq!(r1.recv().unwrap().unwrap().data.len(), 64);
+        assert_eq!(r2.recv().unwrap().unwrap().data.len(), 192);
+    }
+
+    #[test]
+    fn execute_decode_group_returns_row_errors() {
+        let backend = RustBackend;
+        let key = GroupKey {
+            direction: Direction::Decode,
+            table: Alphabet::standard().decode_table().as_bytes().to_vec(),
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut payload = vec![b'A'; 128];
+        payload[70] = b'!';
+        execute_group(
+            &backend,
+            &key,
+            vec![WorkItem { payload, reply: tx, enqueued: Instant::now() }],
+        );
+        let res = rx.recv().unwrap().unwrap();
+        assert_eq!(res.data.len(), 96);
+        assert_eq!(res.err.len(), 2);
+        assert!(res.err[0] & 0x80 == 0);
+        assert!(res.err[1] & 0x80 != 0);
+    }
+
+    #[test]
+    fn batcher_thread_flushes_on_size_and_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let flushes = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let f2 = flushes.clone();
+        let handle = std::thread::spawn(move || {
+            run_batcher(
+                rx,
+                &RustBackend,
+                BatcherConfig { max_rows: 2, linger: Duration::from_millis(5) },
+                move |s| {
+                    assert!(s.ok);
+                    f2.fetch_add(s.launches, std::sync::atomic::Ordering::SeqCst);
+                },
+            );
+        });
+        // Size-triggered flush.
+        let (i1, r1) = item(1);
+        let (i2, r2) = item(1);
+        tx.send(BatcherMsg::Submit(enc_key(), i1)).unwrap();
+        tx.send(BatcherMsg::Submit(enc_key(), i2)).unwrap();
+        assert!(r1.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        assert!(r2.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        // Deadline-triggered flush.
+        let (i3, r3) = item(1);
+        tx.send(BatcherMsg::Submit(enc_key(), i3)).unwrap();
+        assert!(r3.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        drop(tx);
+        handle.join().unwrap();
+        assert!(flushes.load(std::sync::atomic::Ordering::SeqCst) >= 2);
+    }
+}

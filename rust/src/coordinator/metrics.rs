@@ -1,0 +1,152 @@
+//! Service metrics: lock-free counters and a log2 latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency buckets (1 µs .. ~1 h).
+const BUCKETS: usize = 32;
+
+/// A histogram over microsecond latencies with power-of-two buckets.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile from the log2 buckets (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All coordinator counters. Cheap to share behind an `Arc`.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    /// Executable launches (batches dispatched to PJRT).
+    pub batches: AtomicU64,
+    /// Rows of real data dispatched.
+    pub rows: AtomicU64,
+    /// Rows of zero padding dispatched (batching efficiency).
+    pub padded_rows: AtomicU64,
+    /// Requests served entirely by the Rust block codec (below threshold
+    /// or runtime-less configuration).
+    pub inline_requests: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Padding efficiency: real rows / dispatched rows.
+    pub fn batch_efficiency(&self) -> f64 {
+        let real = self.rows.load(Ordering::Relaxed);
+        let padded = self.padded_rows.load(Ordering::Relaxed);
+        if real + padded == 0 {
+            return 1.0;
+        }
+        real as f64 / (real + padded) as f64
+    }
+
+    /// One-line human-readable snapshot.
+    pub fn report(&self) -> String {
+        format!(
+            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} p50={}us p99={}us mean={:.0}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.bytes_in.load(Ordering::Relaxed),
+            self.bytes_out.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.rows.load(Ordering::Relaxed),
+            self.padded_rows.load(Ordering::Relaxed),
+            self.batch_efficiency() * 100.0,
+            self.inline_requests.load(Ordering::Relaxed),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.99),
+            self.latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile_us(0.5) >= 4);
+        assert!(h.quantile_us(1.0) >= 10_000);
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn batch_efficiency_math() {
+        let m = Metrics::default();
+        assert_eq!(m.batch_efficiency(), 1.0);
+        Metrics::inc(&m.rows, 48);
+        Metrics::inc(&m.padded_rows, 16);
+        assert!((m.batch_efficiency() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_contains_counters() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests, 3);
+        assert!(m.report().contains("req=3"));
+    }
+}

@@ -1,0 +1,33 @@
+//! The Layer-3 coordinator — the serving system around the block codec.
+//!
+//! ```text
+//!        requests                  whole blocks               PJRT
+//!  ───► [backpressure] ─► [router] ───────────► [batcher] ─► [workers]
+//!                            │ sub-block tail                  │
+//!                            └─► rust block codec (inline) ◄───┘ results
+//! ```
+//!
+//! * [`backpressure`] — admission control (bounded in-flight bytes/reqs);
+//! * [`router`] — per-request orchestration: inline vs batched path,
+//!   deferred-error resolution, response assembly;
+//! * [`batcher`] — coalesce block work across requests per (direction,
+//!   table) group; size- and deadline-triggered flushes;
+//! * [`scheduler`] — coalescing leader thread + backend worker pool;
+//! * [`state`] — chunked-stream session state (carry bytes);
+//! * [`metrics`] — counters/histograms surfaced by the CLI and server;
+//! * [`backend`] — where blocks execute: PJRT executables or in-process
+//!   Rust (the paper's algorithm either way).
+
+pub mod backend;
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod state;
+
+pub use backend::{BlockBackend, RustBackend};
+pub use batcher::{BatcherConfig, Direction};
+pub use metrics::Metrics;
+pub use router::{Outcome, Request, RequestKind, Response, Router, RouterConfig};
+pub use scheduler::{Scheduler, SchedulerConfig};

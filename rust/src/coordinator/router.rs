@@ -1,0 +1,460 @@
+//! The coordinator facade: admission → routing → batched execution →
+//! tail handling → response assembly.
+//!
+//! Routing policy (DESIGN.md §6.3):
+//!
+//! * payloads below `inline_threshold` bytes are served inline on the
+//!   Rust block codec — a PJRT launch is not worth one small request;
+//! * larger payloads have their whole 48/64-byte blocks coalesced by the
+//!   [`Scheduler`] onto the fixed-shape executables, while the sub-block
+//!   remainder and the padded tail run inline *concurrently* with the
+//!   batch (the paper's scalar epilogue, overlapped);
+//! * decode errors follow the paper's deferred model: per-row flags come
+//!   back with the batch; only on failure is the row re-scanned for the
+//!   exact offending byte.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use super::backend::BackendFactory;
+use super::backpressure::{Gate, Rejected};
+use super::batcher::{BatchResult, Direction, GroupKey, WorkItem};
+use super::metrics::Metrics;
+use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::base64::validate::{decode_tail, split_tail};
+use crate::base64::{Alphabet, Codec, DecodeError, Mode, B64_BLOCK, RAW_BLOCK};
+
+/// What the caller wants done.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    Encode,
+    Decode,
+    /// Decode-side validation without materializing output.
+    Validate,
+}
+
+/// One codec request.
+pub struct Request {
+    pub id: u64,
+    pub kind: RequestKind,
+    pub payload: Vec<u8>,
+    pub alphabet: Alphabet,
+    pub mode: Mode,
+}
+
+impl Request {
+    pub fn encode(id: u64, payload: Vec<u8>) -> Self {
+        Self { id, kind: RequestKind::Encode, payload, alphabet: Alphabet::standard(), mode: Mode::Strict }
+    }
+
+    pub fn decode(id: u64, payload: Vec<u8>) -> Self {
+        Self { id, kind: RequestKind::Decode, payload, alphabet: Alphabet::standard(), mode: Mode::Strict }
+    }
+}
+
+/// Request outcome.
+#[derive(Debug)]
+pub enum Outcome {
+    Data(Vec<u8>),
+    /// Validate requests answer with OK/error only.
+    Valid,
+    Invalid(DecodeError),
+    Rejected(Rejected),
+    /// Backend failure (e.g. PJRT launch error).
+    Internal(String),
+}
+
+/// Response with timing.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub outcome: Outcome,
+    pub elapsed: std::time::Duration,
+}
+
+/// Router/coordinator tuning.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub scheduler: SchedulerConfig,
+    /// Payloads strictly below this many bytes bypass the batcher.
+    pub inline_threshold: usize,
+    pub max_inflight_requests: u64,
+    pub max_inflight_bytes: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            scheduler: SchedulerConfig::default(),
+            inline_threshold: 4 * RAW_BLOCK,
+            max_inflight_requests: 4096,
+            max_inflight_bytes: 1 << 30,
+        }
+    }
+}
+
+/// The Layer-3 coordinator.
+pub struct Router {
+    scheduler: Scheduler,
+    gate: Arc<Gate>,
+    metrics: Arc<Metrics>,
+    inline_threshold: usize,
+}
+
+impl Router {
+    pub fn new(factory: BackendFactory, config: RouterConfig) -> Self {
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Scheduler::new(factory, config.scheduler, metrics.clone());
+        let gate = Gate::new(config.max_inflight_requests, config.max_inflight_bytes);
+        Self { scheduler, gate, metrics, inline_threshold: config.inline_threshold }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Force pending batches out (benchmarks, shutdown).
+    pub fn flush(&self) {
+        self.scheduler.flush();
+    }
+
+    /// Process one request to completion (blocking). Callers run one
+    /// request per thread; cross-request batching happens in the
+    /// scheduler underneath.
+    pub fn process(&self, request: Request) -> Response {
+        let start = Instant::now();
+        Metrics::inc(&self.metrics.requests, 1);
+        Metrics::inc(&self.metrics.bytes_in, request.payload.len() as u64);
+        let permit = match self.gate.try_acquire(request.payload.len() as u64) {
+            Ok(p) => p,
+            Err(r) => {
+                Metrics::inc(&self.metrics.rejected, 1);
+                return Response { id: request.id, outcome: Outcome::Rejected(r), elapsed: start.elapsed() };
+            }
+        };
+        let outcome = match request.kind {
+            RequestKind::Encode => self.run_encode(&request),
+            RequestKind::Decode => self.run_decode(&request, false),
+            RequestKind::Validate => self.run_decode(&request, true),
+        };
+        drop(permit);
+        let elapsed = start.elapsed();
+        self.metrics.latency.record(elapsed);
+        match &outcome {
+            Outcome::Data(d) => {
+                Metrics::inc(&self.metrics.responses, 1);
+                Metrics::inc(&self.metrics.bytes_out, d.len() as u64);
+            }
+            Outcome::Valid => Metrics::inc(&self.metrics.responses, 1),
+            Outcome::Invalid(_) => Metrics::inc(&self.metrics.errors, 1),
+            Outcome::Rejected(_) => {}
+            Outcome::Internal(_) => Metrics::inc(&self.metrics.errors, 1),
+        }
+        Response { id: request.id, outcome, elapsed }
+    }
+
+    fn run_encode(&self, request: &Request) -> Outcome {
+        let payload = &request.payload;
+        let codec = crate::base64::block::BlockCodec::new(request.alphabet.clone());
+        if payload.len() < self.inline_threshold {
+            Metrics::inc(&self.metrics.inline_requests, 1);
+            return Outcome::Data(codec.encode(payload));
+        }
+        let blocks_len = payload.len() / RAW_BLOCK * RAW_BLOCK;
+        let rx = self.submit_blocks(
+            Direction::Encode,
+            request.alphabet.encode_table().as_bytes().to_vec(),
+            payload[..blocks_len].to_vec(),
+        );
+        // Overlap: compute the scalar epilogue while the batch is in flight.
+        let mut tail_out = Vec::new();
+        codec.encode_into(&payload[blocks_len..], &mut tail_out);
+        match rx.recv().expect("scheduler always answers") {
+            Ok(batch) => {
+                let mut data = batch.data;
+                data.extend_from_slice(&tail_out);
+                Outcome::Data(data)
+            }
+            Err(e) => Outcome::Internal(e.to_string()),
+        }
+    }
+
+    fn run_decode(&self, request: &Request, validate_only: bool) -> Outcome {
+        let payload = &request.payload;
+        let alphabet = &request.alphabet;
+        let codec = crate::base64::block::BlockCodec::with_mode(alphabet.clone(), request.mode);
+        if payload.len() < self.inline_threshold {
+            Metrics::inc(&self.metrics.inline_requests, 1);
+            return match codec.decode(payload) {
+                Ok(d) if validate_only => { let _ = d; Outcome::Valid }
+                Ok(d) => Outcome::Data(d),
+                Err(e) => Outcome::Invalid(e),
+            };
+        }
+        let (body, tail) = match split_tail(payload, alphabet.pad(), request.mode) {
+            Ok(x) => x,
+            Err(e) => return Outcome::Invalid(e),
+        };
+        let blocks_len = body.len() / B64_BLOCK * B64_BLOCK;
+        let rx = self.submit_blocks(
+            Direction::Decode,
+            alphabet.decode_table().as_bytes().to_vec(),
+            body[..blocks_len].to_vec(),
+        );
+        // Overlap: the sub-block remainder + padded tail run inline.
+        let mut rest_out = Vec::new();
+        let rest_result = Self::decode_rest(alphabet, request.mode, body, blocks_len, tail, &mut rest_out);
+        let batch = match rx.recv().expect("scheduler always answers") {
+            Ok(b) => b,
+            Err(e) => return Outcome::Internal(e.to_string()),
+        };
+        // The paper's single end-of-stream check over the deferred flags.
+        if let Some(row) = batch.err.iter().position(|&e| e & 0x80 != 0) {
+            let row_bytes = &body[row * B64_BLOCK..(row + 1) * B64_BLOCK];
+            let col = row_bytes
+                .iter()
+                .position(|&c| alphabet.value_of(c).is_none())
+                .expect("flagged row contains an invalid byte");
+            return Outcome::Invalid(DecodeError::InvalidByte {
+                offset: row * B64_BLOCK + col,
+                byte: row_bytes[col],
+            });
+        }
+        if let Err(e) = rest_result {
+            return Outcome::Invalid(e);
+        }
+        if validate_only {
+            return Outcome::Valid;
+        }
+        let mut data = batch.data;
+        data.extend_from_slice(&rest_out);
+        Outcome::Data(data)
+    }
+
+    fn decode_rest(
+        alphabet: &Alphabet,
+        mode: Mode,
+        body: &[u8],
+        blocks_len: usize,
+        tail: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), DecodeError> {
+        let table = alphabet.decode_table();
+        for (q, quad) in body[blocks_len..].chunks_exact(4).enumerate() {
+            let mut vals = [0u8; 4];
+            for i in 0..4 {
+                let c = quad[i];
+                let v = table.lookup(c);
+                if (c | v) & 0x80 != 0 {
+                    return Err(DecodeError::InvalidByte { offset: blocks_len + q * 4 + i, byte: c });
+                }
+                vals[i] = v;
+            }
+            out.push((vals[0] << 2) | (vals[1] >> 4));
+            out.push((vals[1] << 4) | (vals[2] >> 2));
+            out.push((vals[2] << 6) | vals[3]);
+        }
+        decode_tail(tail, alphabet.pad(), mode, body.len(), |c| alphabet.value_of(c), out)?;
+        Ok(())
+    }
+
+    fn submit_blocks(
+        &self,
+        direction: Direction,
+        table: Vec<u8>,
+        payload: Vec<u8>,
+    ) -> mpsc::Receiver<anyhow::Result<BatchResult>> {
+        let rows = payload.len() / direction.block_len();
+        let (tx, rx) = mpsc::channel();
+        // Zero-block submissions still need an (empty) answer.
+        if rows == 0 {
+            let _ = tx.send(Ok(BatchResult { data: Vec::new(), err: Vec::new() }));
+            return rx;
+        }
+        self.metrics.rows.fetch_sub(0, Ordering::Relaxed); // rows counted at execution
+        self.scheduler.submit(
+            GroupKey { direction, table },
+            WorkItem { payload, reply: tx, enqueued: Instant::now() },
+        );
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::scalar::ScalarCodec;
+    use crate::coordinator::backend::rust_factory;
+    use crate::coordinator::batcher::BatcherConfig;
+    use std::time::Duration;
+
+    fn router() -> Router {
+        Router::new(
+            rust_factory(),
+            RouterConfig {
+                scheduler: SchedulerConfig {
+                    batcher: BatcherConfig { max_rows: 8, linger: Duration::from_millis(1) },
+                    workers: 2,
+                },
+                inline_threshold: 64,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn expect_data(r: Response) -> Vec<u8> {
+        match r.outcome {
+            Outcome::Data(d) => d,
+            other => panic!("expected data, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn encode_matches_reference_all_paths() {
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        for len in [0usize, 1, 47, 48, 63, 64, 100, 500, 5000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 89 % 256) as u8).collect();
+            let resp = rt.process(Request::encode(1, data.clone()));
+            assert_eq!(expect_data(resp), reference.encode(&data), "len={len}");
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip_all_paths() {
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        for len in [0usize, 1, 47, 48, 100, 500, 5000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 13 % 256) as u8).collect();
+            let enc = reference.encode(&data);
+            let resp = rt.process(Request::decode(2, enc));
+            assert_eq!(expect_data(resp), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn decode_error_exact_offset_in_batched_body() {
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let data = vec![0x5Au8; 500];
+        let mut enc = reference.encode(&data);
+        enc[200] = b'#';
+        let resp = rt.process(Request::decode(3, enc));
+        match resp.outcome {
+            Outcome::Invalid(DecodeError::InvalidByte { offset, byte }) => {
+                assert_eq!((offset, byte), (200, b'#'));
+            }
+            other => panic!("expected invalid byte, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_error_in_tail() {
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let data = vec![1u8; 100]; // 136 chars incl. padding
+        let mut enc = reference.encode(&data);
+        let n = enc.len();
+        enc[n - 2] = b'!';
+        let resp = rt.process(Request::decode(4, enc));
+        assert!(matches!(resp.outcome, Outcome::Invalid(_)));
+    }
+
+    #[test]
+    fn validate_kind() {
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let enc = reference.encode(&vec![7u8; 300]);
+        let resp = rt.process(Request {
+            id: 5,
+            kind: RequestKind::Validate,
+            payload: enc.clone(),
+            alphabet: Alphabet::standard(),
+            mode: Mode::Strict,
+        });
+        assert!(matches!(resp.outcome, Outcome::Valid));
+        let mut bad = enc;
+        bad[10] = 0xFF;
+        let resp = rt.process(Request {
+            id: 6,
+            kind: RequestKind::Validate,
+            payload: bad,
+            alphabet: Alphabet::standard(),
+            mode: Mode::Strict,
+        });
+        assert!(matches!(resp.outcome, Outcome::Invalid(_)));
+    }
+
+    #[test]
+    fn url_alphabet_requests() {
+        let rt = router();
+        let url = Alphabet::url();
+        let data = vec![0xFBu8; 333];
+        let resp = rt.process(Request {
+            id: 7,
+            kind: RequestKind::Encode,
+            payload: data.clone(),
+            alphabet: url.clone(),
+            mode: Mode::Strict,
+        });
+        let enc = expect_data(resp);
+        assert!(!enc.contains(&b'+') && !enc.contains(&b'/'));
+        let resp = rt.process(Request {
+            id: 8,
+            kind: RequestKind::Decode,
+            payload: enc,
+            alphabet: url,
+            mode: Mode::Strict,
+        });
+        assert_eq!(expect_data(resp), data);
+    }
+
+    #[test]
+    fn inline_threshold_short_circuits() {
+        let rt = router();
+        let resp = rt.process(Request::encode(9, b"tiny".to_vec()));
+        assert!(matches!(resp.outcome, Outcome::Data(_)));
+        assert_eq!(rt.metrics().inline_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(rt.metrics().batches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn concurrent_mixed_workload_batches() {
+        let rt = Arc::new(router());
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let rt = rt.clone();
+                let reference = ScalarCodec::new(Alphabet::standard());
+                std::thread::spawn(move || {
+                    for i in 0..30 {
+                        let data: Vec<u8> = (0..200 + t * 17 + i).map(|j| (j * 7 % 256) as u8).collect();
+                        let enc = expect_data(rt.process(Request::encode(0, data.clone())));
+                        assert_eq!(enc, reference.encode(&data));
+                        let dec = expect_data(rt.process(Request::decode(0, enc)));
+                        assert_eq!(dec, data);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = reference;
+        // Many requests, fewer launches: coalescing happened.
+        let m = rt.metrics();
+        assert!(m.batches.load(Ordering::Relaxed) < m.requests.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn rejects_over_admission_limit() {
+        let rt = Router::new(
+            rust_factory(),
+            RouterConfig { max_inflight_bytes: 10, inline_threshold: 1, ..Default::default() },
+        );
+        let resp = rt.process(Request::encode(10, vec![0u8; 100]));
+        assert!(matches!(resp.outcome, Outcome::Rejected(_)));
+        assert_eq!(rt.metrics().rejected.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,254 @@
+//! Leader/worker execution: one coalescing leader thread feeding a pool
+//! of backend workers.
+//!
+//! The leader runs the batching loop (size- and deadline-triggered
+//! flushes); each flushed group becomes a job for the worker pool, so
+//! slow PJRT launches overlap instead of serializing behind the leader.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::BackendFactory;
+use super::batcher::{
+    execute_group, BatcherConfig, BatcherMsg, GroupKey, PendingSet, WorkItem,
+};
+use super::metrics::Metrics;
+
+/// Scheduler tuning.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub batcher: BatcherConfig,
+    /// Backend worker threads.
+    pub workers: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), workers: 2 }
+    }
+}
+
+/// Handle to the leader + workers. Dropping shuts everything down after a
+/// final drain (all submitted work is answered).
+pub struct Scheduler {
+    submit_tx: Option<mpsc::Sender<BatcherMsg>>,
+    leader: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn new(
+        factory: BackendFactory,
+        config: SchedulerConfig,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let (submit_tx, submit_rx) = mpsc::channel::<BatcherMsg>();
+        let (job_tx, job_rx) = mpsc::channel::<(GroupKey, Vec<WorkItem>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        let workers: Vec<JoinHandle<()>> = (0..config.workers.max(1))
+            .map(|_| {
+                let factory = factory.clone();
+                let job_rx = job_rx.clone();
+                let metrics = metrics.clone();
+                std::thread::spawn(move || {
+                    // Each worker owns a thread-local backend (the PJRT
+                    // client is not Send/Sync).
+                    let backend = factory().expect("backend construction");
+                    loop {
+                        let job = job_rx.lock().unwrap().recv();
+                        match job {
+                            Ok((key, items)) => {
+                                let rows: usize = items
+                                    .iter()
+                                    .map(|i| i.payload.len() / key.direction.block_len())
+                                    .sum();
+                                let stats = execute_group(backend.as_ref(), &key, items);
+                                metrics.batches.fetch_add(stats.launches, Ordering::Relaxed);
+                                metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
+                                if !stats.ok {
+                                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => return,
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let batcher_config = config.batcher.clone();
+        let leader = std::thread::spawn(move || {
+            let mut pending = PendingSet::new(batcher_config);
+            loop {
+                let timeout = pending
+                    .next_deadline()
+                    .map(|d| d.saturating_duration_since(Instant::now()))
+                    .unwrap_or(Duration::from_millis(50));
+                match submit_rx.recv_timeout(timeout) {
+                    Ok(BatcherMsg::Submit(key, item)) => {
+                        if let Some(full) = pending.push(key, item) {
+                            let items = pending.take(&full);
+                            let _ = job_tx.send((full, items));
+                        }
+                    }
+                    Ok(BatcherMsg::Flush) => {
+                        for (key, items) in pending.drain() {
+                            let _ = job_tx.send((key, items));
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        for key in pending.expired(Instant::now()) {
+                            let items = pending.take(&key);
+                            let _ = job_tx.send((key, items));
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        for (key, items) in pending.drain() {
+                            let _ = job_tx.send((key, items));
+                        }
+                        return; // drops job_tx -> workers exit
+                    }
+                }
+            }
+        });
+
+        Self { submit_tx: Some(submit_tx), leader: Some(leader), workers }
+    }
+
+    /// Queue one block-aligned work item.
+    pub fn submit(&self, key: GroupKey, item: WorkItem) {
+        self.submit_tx
+            .as_ref()
+            .expect("scheduler alive")
+            .send(BatcherMsg::Submit(key, item))
+            .expect("leader alive");
+    }
+
+    /// Ask the leader to flush all pending groups immediately.
+    pub fn flush(&self) {
+        let _ = self.submit_tx.as_ref().expect("scheduler alive").send(BatcherMsg::Flush);
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        drop(self.submit_tx.take());
+        if let Some(l) = self.leader.take() {
+            let _ = l.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::Alphabet;
+    use crate::coordinator::backend::rust_factory;
+    use crate::coordinator::batcher::Direction;
+
+    fn sched(max_rows: usize, linger_ms: u64, workers: usize) -> (Scheduler, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            rust_factory(),
+            SchedulerConfig {
+                batcher: BatcherConfig {
+                    max_rows,
+                    linger: Duration::from_millis(linger_ms),
+                },
+                workers,
+            },
+            metrics.clone(),
+        );
+        (s, metrics)
+    }
+
+    fn submit_blocks(s: &Scheduler, blocks: usize) -> mpsc::Receiver<anyhow::Result<super::super::batcher::BatchResult>> {
+        let (tx, rx) = mpsc::channel();
+        s.submit(
+            GroupKey {
+                direction: Direction::Encode,
+                table: Alphabet::standard().encode_table().as_bytes().to_vec(),
+            },
+            WorkItem { payload: vec![7u8; blocks * 48], reply: tx, enqueued: Instant::now() },
+        );
+        rx
+    }
+
+    #[test]
+    fn size_triggered_flush_through_pool() {
+        let (s, m) = sched(2, 1000, 2);
+        let r1 = submit_blocks(&s, 1);
+        let r2 = submit_blocks(&s, 1);
+        assert_eq!(r1.recv_timeout(Duration::from_secs(2)).unwrap().unwrap().data.len(), 64);
+        assert_eq!(r2.recv_timeout(Duration::from_secs(2)).unwrap().unwrap().data.len(), 64);
+        // Metrics land just after the replies; poll briefly.
+        for _ in 0..100 {
+            if m.rows.load(Ordering::Relaxed) == 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(m.batches.load(Ordering::Relaxed) >= 1);
+        assert_eq!(m.rows.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn deadline_triggered_flush() {
+        let (s, _m) = sched(1_000_000, 2, 1);
+        let r = submit_blocks(&s, 3);
+        let res = r.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(res.data.len(), 192);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let (s, _m) = sched(1_000_000, 60_000, 2); // effectively never auto-flush
+        let r = submit_blocks(&s, 2);
+        drop(s); // must drain on shutdown
+        assert_eq!(r.recv_timeout(Duration::from_secs(2)).unwrap().unwrap().data.len(), 128);
+    }
+
+    #[test]
+    fn explicit_flush() {
+        let (s, _m) = sched(1_000_000, 60_000, 1);
+        let r = submit_blocks(&s, 1);
+        s.flush();
+        assert!(r.recv_timeout(Duration::from_secs(2)).unwrap().is_ok());
+    }
+
+    #[test]
+    fn many_concurrent_submitters() {
+        let (s, m) = sched(64, 1, 4);
+        let s = Arc::new(s);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let rx = submit_blocks(&s, 1);
+                        let res = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+                        assert_eq!(res.data.len(), 64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for _ in 0..100 {
+            if m.rows.load(Ordering::Relaxed) == 400 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(m.rows.load(Ordering::Relaxed), 400);
+        // Coalescing must have merged many requests per launch.
+        assert!(m.batches.load(Ordering::Relaxed) < 400);
+    }
+}

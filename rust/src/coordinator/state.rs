@@ -1,0 +1,179 @@
+//! Per-connection session state: incremental codec streams.
+//!
+//! A client may send a payload in chunks (`StreamBegin` / `StreamChunk` /
+//! `StreamEnd` in the wire protocol). Each open stream owns a
+//! [`StreamingEncoder`] or [`StreamingDecoder`] carrying the sub-quantum
+//! state between chunks; the registry maps session-scoped stream ids to
+//! that state and enforces a per-session stream cap.
+
+use std::collections::HashMap;
+
+use crate::base64::streaming::{StreamingDecoder, StreamingEncoder};
+use crate::base64::{Alphabet, DecodeError, Mode};
+
+/// Direction-specific stream state.
+pub enum StreamState {
+    Encode(StreamingEncoder),
+    Decode(StreamingDecoder),
+}
+
+/// Errors from the stream registry.
+#[derive(Debug, PartialEq, Eq)]
+pub enum StreamError {
+    UnknownStream(u64),
+    DuplicateStream(u64),
+    TooManyStreams { limit: usize },
+    /// Chunk type does not match the stream direction.
+    DirectionMismatch(u64),
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownStream(id) => write!(f, "unknown stream {id}"),
+            Self::DuplicateStream(id) => write!(f, "stream {id} already open"),
+            Self::TooManyStreams { limit } => write!(f, "too many open streams (limit {limit})"),
+            Self::DirectionMismatch(id) => write!(f, "stream {id} direction mismatch"),
+            Self::Decode(e) => write!(f, "stream decode error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Open streams of one session/connection.
+pub struct SessionState {
+    streams: HashMap<u64, StreamState>,
+    max_streams: usize,
+}
+
+impl SessionState {
+    pub fn new(max_streams: usize) -> Self {
+        Self { streams: HashMap::new(), max_streams }
+    }
+
+    pub fn open_encode(&mut self, id: u64, alphabet: Alphabet) -> Result<(), StreamError> {
+        self.open(id, StreamState::Encode(StreamingEncoder::new(alphabet)))
+    }
+
+    pub fn open_decode(&mut self, id: u64, alphabet: Alphabet, mode: Mode) -> Result<(), StreamError> {
+        self.open(id, StreamState::Decode(StreamingDecoder::with_mode(alphabet, mode)))
+    }
+
+    fn open(&mut self, id: u64, state: StreamState) -> Result<(), StreamError> {
+        if self.streams.len() >= self.max_streams {
+            return Err(StreamError::TooManyStreams { limit: self.max_streams });
+        }
+        if self.streams.contains_key(&id) {
+            return Err(StreamError::DuplicateStream(id));
+        }
+        self.streams.insert(id, state);
+        Ok(())
+    }
+
+    /// Feed a chunk; returns the bytes produced so far by this chunk.
+    pub fn chunk(&mut self, id: u64, data: &[u8]) -> Result<Vec<u8>, StreamError> {
+        let state = self.streams.get_mut(&id).ok_or(StreamError::UnknownStream(id))?;
+        let mut out = Vec::new();
+        match state {
+            StreamState::Encode(enc) => enc.update(data, &mut out),
+            StreamState::Decode(dec) => {
+                if let Err(e) = dec.update(data, &mut out) {
+                    self.streams.remove(&id);
+                    return Err(StreamError::Decode(e));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Close a stream, returning the final output bytes.
+    pub fn finish(&mut self, id: u64) -> Result<Vec<u8>, StreamError> {
+        let state = self.streams.remove(&id).ok_or(StreamError::UnknownStream(id))?;
+        let mut out = Vec::new();
+        match state {
+            StreamState::Encode(enc) => {
+                enc.finish(&mut out);
+            }
+            StreamState::Decode(dec) => {
+                dec.finish(&mut out).map_err(StreamError::Decode)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Abort a stream (client disconnect), dropping its state.
+    pub fn abort(&mut self, id: u64) -> bool {
+        self.streams.remove(&id).is_some()
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::{block::BlockCodec, Codec};
+
+    #[test]
+    fn chunked_encode_stream() {
+        let mut s = SessionState::new(4);
+        s.open_encode(1, Alphabet::standard()).unwrap();
+        let data: Vec<u8> = (0..500u32).map(|i| (i % 256) as u8).collect();
+        let mut got = Vec::new();
+        for chunk in data.chunks(7) {
+            got.extend(s.chunk(1, chunk).unwrap());
+        }
+        got.extend(s.finish(1).unwrap());
+        assert_eq!(got, BlockCodec::new(Alphabet::standard()).encode(&data));
+        assert_eq!(s.open_count(), 0);
+    }
+
+    #[test]
+    fn chunked_decode_stream() {
+        let mut s = SessionState::new(4);
+        s.open_decode(9, Alphabet::standard(), Mode::Strict).unwrap();
+        let data = vec![0xC7u8; 1000];
+        let enc = BlockCodec::new(Alphabet::standard()).encode(&data);
+        let mut got = Vec::new();
+        for chunk in enc.chunks(333) {
+            got.extend(s.chunk(9, chunk).unwrap());
+        }
+        got.extend(s.finish(9).unwrap());
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn stream_cap() {
+        let mut s = SessionState::new(2);
+        s.open_encode(1, Alphabet::standard()).unwrap();
+        s.open_encode(2, Alphabet::standard()).unwrap();
+        assert_eq!(
+            s.open_encode(3, Alphabet::standard()),
+            Err(StreamError::TooManyStreams { limit: 2 })
+        );
+        s.abort(1);
+        assert!(s.open_encode(3, Alphabet::standard()).is_ok());
+    }
+
+    #[test]
+    fn duplicate_and_unknown_ids() {
+        let mut s = SessionState::new(4);
+        s.open_encode(1, Alphabet::standard()).unwrap();
+        assert_eq!(s.open_encode(1, Alphabet::standard()), Err(StreamError::DuplicateStream(1)));
+        assert_eq!(s.chunk(99, b"x"), Err(StreamError::UnknownStream(99)));
+        assert!(matches!(s.finish(99), Err(StreamError::UnknownStream(99))));
+    }
+
+    #[test]
+    fn decode_error_closes_stream() {
+        let mut s = SessionState::new(4);
+        s.open_decode(5, Alphabet::standard(), Mode::Strict).unwrap();
+        assert!(matches!(s.chunk(5, b"ab!d"), Err(StreamError::Decode(_))));
+        // Stream is gone after the error.
+        assert_eq!(s.chunk(5, b"AAAA"), Err(StreamError::UnknownStream(5)));
+    }
+}

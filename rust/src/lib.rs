@@ -1,0 +1,37 @@
+//! # b64simd — base64 at almost the speed of a memory copy
+//!
+//! A three-layer reproduction of Muła & Lemire, *"Base64 encoding and
+//! decoding at almost the speed of a memory copy"* (SPE 2019,
+//! DOI 10.1002/spe.2777):
+//!
+//! * **Layer 1/2** (build time, Python): the paper's block algorithm as
+//!   Pallas kernels inside batched JAX graphs, AOT-lowered to HLO text in
+//!   `artifacts/` (see `python/compile/`).
+//! * **Layer 3** (this crate): a production-style codec service — PJRT
+//!   [`runtime`], pure-Rust [`base64`] substrate codecs (scalar / SWAR /
+//!   block: the paper's baselines and tail path), a batching
+//!   [`coordinator`], a threaded [`server`], the [`workload`] generators
+//!   and the [`perfmodel`] used to regenerate the paper's figures.
+//!
+//! Python is never on the request path: once `make artifacts` has run,
+//! the `b64simd` binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use b64simd::base64::{Alphabet, block::BlockCodec, Codec};
+//!
+//! let codec = BlockCodec::new(Alphabet::standard());
+//! let encoded = codec.encode(b"hello world");
+//! assert_eq!(encoded, b"aGVsbG8gd29ybGQ=");
+//! let decoded = codec.decode(&encoded).unwrap();
+//! assert_eq!(decoded, b"hello world");
+//! ```
+
+pub mod base64;
+pub mod coordinator;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

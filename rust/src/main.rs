@@ -1,0 +1,214 @@
+//! `b64simd` CLI — leader entrypoint for the codec service and tools.
+//!
+//! ```text
+//! b64simd encode [--alphabet NAME] [--in FILE] [--out FILE]
+//! b64simd decode [--alphabet NAME] [--forgiving] [--in FILE] [--out FILE]
+//! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend pjrt|rust|native]
+//! b64simd selftest [--artifacts DIR]
+//! b64simd model  [--figure 4 | --hardware]
+//! b64simd opcount
+//! ```
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Mode};
+use b64simd::coordinator::backend::{native_factory, pjrt_factory, rust_factory};
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::perfmodel::cache::{CacheModel, Machine, Op};
+use b64simd::perfmodel::opcount;
+use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
+use b64simd::server::{serve, ServerConfig};
+use b64simd::workload::fig4_sizes;
+
+/// Minimal flag parser: `--key value` and `--switch` styles.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|v| !v.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn read_input(args: &Args) -> anyhow::Result<Vec<u8>> {
+    match args.get("in") {
+        Some(path) => Ok(std::fs::read(path)?),
+        None => {
+            let mut buf = Vec::new();
+            std::io::stdin().read_to_end(&mut buf)?;
+            Ok(buf)
+        }
+    }
+}
+
+fn write_output(args: &Args, data: &[u8]) -> anyhow::Result<()> {
+    match args.get("out") {
+        Some(path) => std::fs::write(path, data)?,
+        None => {
+            std::io::stdout().write_all(data)?;
+            if data.last() != Some(&b'\n') && args.get("in").is_none() {
+                // Friendly newline for terminal use.
+                println!();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn alphabet_arg(args: &Args) -> anyhow::Result<Alphabet> {
+    let name = args.get("alphabet").unwrap_or("standard");
+    Alphabet::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown alphabet '{name}'"))
+}
+
+fn cmd_encode(args: &Args) -> anyhow::Result<()> {
+    let codec = BlockCodec::new(alphabet_arg(args)?);
+    let data = read_input(args)?;
+    write_output(args, &codec.encode(&data))
+}
+
+fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+    let mode = if args.has("forgiving") { Mode::Forgiving } else { Mode::Strict };
+    let codec = BlockCodec::with_mode(alphabet_arg(args)?, mode);
+    let mut data = read_input(args)?;
+    // Terminal convenience: strip one trailing newline.
+    if data.last() == Some(&b'\n') {
+        data.pop();
+        if data.last() == Some(&b'\r') {
+            data.pop();
+        }
+    }
+    let decoded = codec.decode(&data).map_err(|e| anyhow::anyhow!("{e}"))?;
+    write_output(args, &decoded)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let addr: std::net::SocketAddr = args.get("addr").unwrap_or("127.0.0.1:4648").parse()?;
+    let workers: usize = args.get("workers").unwrap_or("2").parse()?;
+    let backend_name = args.get("backend").unwrap_or("pjrt");
+    let factory = match backend_name {
+        "pjrt" => pjrt_factory(Manifest::default_dir()),
+        "rust" => rust_factory(),
+        "native" => native_factory(),
+        other => anyhow::bail!("unknown backend '{other}' (pjrt|rust|native)"),
+    };
+    let mut config = RouterConfig::default();
+    config.scheduler.workers = workers;
+    let router = Arc::new(Router::new(factory, config));
+    let handle = serve(router.clone(), ServerConfig { addr, ..Default::default() })?;
+    eprintln!("b64simd serving on {} (backend={backend_name}, workers={workers})", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(30));
+        eprintln!("{}", router.metrics().report());
+    }
+}
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let rt = Arc::new(Runtime::new(&dir)?);
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", rt.manifest().artifacts.len());
+    let ex = BlockExecutor::new(rt);
+    anyhow::ensure!(ex.selftest()?, "roundtrip selftest FAILED");
+    println!("roundtrip selftest: OK");
+    // Cross-check PJRT against the Rust block codec on random data.
+    let alphabet = Alphabet::standard();
+    let data = b64simd::workload::random_bytes(48 * 100, 7);
+    let pjrt = ex.encode_blocks(&data, alphabet.encode_table().as_bytes())?;
+    let rust = BlockCodec::new(alphabet.clone()).encode(&data);
+    anyhow::ensure!(pjrt == rust, "PJRT/Rust encode mismatch");
+    let dec = ex.decode_blocks(&pjrt, alphabet.decode_table().as_bytes())?;
+    anyhow::ensure!(dec.data == data, "PJRT decode mismatch");
+    anyhow::ensure!(dec.err.iter().all(|e| e & 0x80 == 0), "spurious error flags");
+    println!("PJRT vs Rust differential check: OK (100 blocks)");
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> anyhow::Result<()> {
+    let model = CacheModel::new(Machine::cannon_lake());
+    if args.has("hardware") {
+        let m = model.machine();
+        println!("modeled machine: {} @ {} GHz (paper Table 2)", m.name, m.freq_ghz);
+        for l in &m.levels {
+            println!("  {:<5} {:>12} B  {:>6.1} GB/s", l.name, l.capacity, l.bandwidth_gbps);
+        }
+        return Ok(());
+    }
+    // Fig. 4 shape, modeled with the paper's machine parameters.
+    println!("# modeled Fig.4 ({}), GB/s vs base64 bytes", model.machine().name);
+    let sizes = fig4_sizes();
+    for (label, op) in [("encode", Op::Encode), ("decode", Op::Decode)] {
+        println!("\n## {label}");
+        print!("{:>8}", "size");
+        for name in ["memcpy", "scalar", "avx2", "avx512"] {
+            print!("{name:>10}");
+        }
+        println!();
+        for &s in &sizes {
+            print!("{s:>8}");
+            for name in ["memcpy", "scalar", "avx2", "avx512"] {
+                let op = if name == "memcpy" { Op::Memcpy } else { op };
+                print!("{:>10.2}", model.predict(name, op, s).gbps);
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: b64simd <encode|decode|serve|selftest|model|opcount> [flags]\n\
+         see README.md for details"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "encode" => cmd_encode(&args),
+        "decode" => cmd_decode(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "model" => cmd_model(&args),
+        "opcount" => {
+            print!("{}", opcount::render_table());
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytical performance model + op accounting (DESIGN.md S23/S24).
+//!
+//! Reproduces the *shape* of the paper's Fig. 4 on the paper's own
+//! testbed parameters (Cannon Lake i3-8121U), since the hardware itself
+//! is unavailable here: per-byte instruction costs from the §3 algorithm
+//! and per-cache-level bandwidths bound the achievable throughput.
+
+pub mod cache;
+pub mod opcount;
+
+pub use cache::{CacheModel, Machine, PredictPoint};
+pub use opcount::{CodecOps, OPS};

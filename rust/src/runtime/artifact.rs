@@ -1,0 +1,246 @@
+//! `artifacts/manifest.json` schema — the contract with `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+
+/// What a compiled computation does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(rows,48) u8, (64,) u8 table -> (rows,64) u8`.
+    Encode,
+    /// `(rows,64) u8, (128,) u8 table -> ((rows,48) u8, (rows,1) u8 err)`.
+    Decode,
+    /// `(rows,64) u8, (128,) u8 table -> (rows,1) u8 err`.
+    Validate,
+    /// `(rows,48) u8, tables -> ((rows,48) u8, (rows,1) u8)` self-check.
+    Roundtrip,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "encode" => Some(Self::Encode),
+            "decode" => Some(Self::Decode),
+            "validate" => Some(Self::Validate),
+            "roundtrip" => Some(Self::Roundtrip),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Encode => "encode",
+            Self::Decode => "decode",
+            Self::Validate => "validate",
+            Self::Roundtrip => "roundtrip",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Row-count size class this executable was compiled for.
+    pub rows: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub sha256_16: String,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub dtype: String,
+    pub tile_rows: usize,
+    pub row_classes: Vec<usize>,
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("reading manifest: {0} (run `make artifacts` first?)")]
+    Io(#[from] std::io::Error),
+    #[error("parsing manifest: {0}")]
+    Parse(String),
+    #[error("unsupported manifest: {0}")]
+    Unsupported(String),
+}
+
+fn shape_list(v: &Value, key: &str) -> Result<Vec<Vec<usize>>, ManifestError> {
+    v.req_array(key)
+        .map_err(|e| ManifestError::Parse(e.to_string()))?
+        .iter()
+        .map(|shape| {
+            shape
+                .as_array()
+                .ok_or_else(|| ManifestError::Parse(format!("{key}: expected array of arrays")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| ManifestError::Parse(format!("{key}: non-integer dim")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse a manifest document (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let root = Value::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let p = |e: crate::util::json::JsonError| ManifestError::Parse(e.to_string());
+        let format = root.req_str("format").map_err(p)?.to_string();
+        let dtype = root.req_str("dtype").map_err(p)?.to_string();
+        if format != "hlo-text" {
+            return Err(ManifestError::Unsupported(format!("format={format}")));
+        }
+        if dtype != "u8" {
+            return Err(ManifestError::Unsupported(format!("dtype={dtype}")));
+        }
+        let tile_rows = root.req_usize("tile_rows").map_err(p)?;
+        let row_classes = root
+            .req_array("row_classes")
+            .map_err(p)?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| ManifestError::Parse("bad row class".into())))
+            .collect::<Result<Vec<_>, _>>()?;
+        if row_classes.is_empty() {
+            return Err(ManifestError::Unsupported("empty row_classes".into()));
+        }
+        let artifacts = root
+            .req_array("artifacts")
+            .map_err(p)?
+            .iter()
+            .map(|a| {
+                let kind_str = a.req_str("kind").map_err(p)?;
+                let kind = ArtifactKind::from_str(kind_str)
+                    .ok_or_else(|| ManifestError::Unsupported(format!("kind={kind_str}")))?;
+                Ok(Artifact {
+                    name: a.req_str("name").map_err(p)?.to_string(),
+                    file: a.req_str("file").map_err(p)?.to_string(),
+                    kind,
+                    rows: a.req_usize("rows").map_err(p)?,
+                    inputs: shape_list(a, "inputs")?,
+                    outputs: shape_list(a, "outputs")?,
+                    sha256_16: a
+                        .get("sha256_16")
+                        .and_then(Value::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, ManifestError>>()?;
+        Ok(Self { format, dtype, tile_rows, row_classes, artifacts, dir })
+    }
+
+    /// Load `<dir>/manifest.json` and validate the format announcement.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Default artifact directory: `$B64SIMD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("B64SIMD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find the artifact for (kind, rows).
+    pub fn find(&self, kind: ArtifactKind, rows: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.rows == rows)
+    }
+
+    /// Smallest row class that fits `rows` blocks (else the largest class,
+    /// to be used repeatedly).
+    pub fn row_class_for(&self, rows: usize) -> usize {
+        self.row_classes
+            .iter()
+            .copied()
+            .find(|&c| c >= rows)
+            .unwrap_or_else(|| *self.row_classes.last().expect("non-empty row classes"))
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let json = r#"{
+            "format": "hlo-text", "dtype": "u8", "tile_rows": 16,
+            "row_classes": [16, 64, 256, 1024],
+            "artifacts": [
+                {"name": "encode_r16", "file": "encode_r16.hlo.txt", "kind": "encode",
+                 "rows": 16, "inputs": [[16,48],[64]], "outputs": [[16,64]]},
+                {"name": "decode_r64", "file": "decode_r64.hlo.txt", "kind": "decode",
+                 "rows": 64, "inputs": [[64,64],[128]], "outputs": [[64,48],[64,1]]}
+            ]
+        }"#;
+        Manifest::parse(json, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn find_by_kind_and_rows() {
+        let m = sample();
+        assert!(m.find(ArtifactKind::Encode, 16).is_some());
+        assert!(m.find(ArtifactKind::Encode, 64).is_none());
+        assert!(m.find(ArtifactKind::Decode, 64).is_some());
+        assert_eq!(m.find(ArtifactKind::Decode, 64).unwrap().outputs.len(), 2);
+    }
+
+    #[test]
+    fn row_class_selection() {
+        let m = sample();
+        assert_eq!(m.row_class_for(1), 16);
+        assert_eq!(m.row_class_for(16), 16);
+        assert_eq!(m.row_class_for(17), 64);
+        assert_eq!(m.row_class_for(300), 1024);
+        assert_eq!(m.row_class_for(5000), 1024);
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let json = r#"{"format": "proto", "dtype": "u8", "tile_rows": 16,
+                       "row_classes": [16], "artifacts": []}"#;
+        assert!(matches!(
+            Manifest::parse(json, PathBuf::new()),
+            Err(ManifestError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let json = r#"{"format": "hlo-text", "dtype": "u8", "tile_rows": 16,
+            "row_classes": [16],
+            "artifacts": [{"name":"x","file":"x","kind":"mystery","rows":16,
+                           "inputs":[],"outputs":[]}]}"#;
+        assert!(matches!(
+            Manifest::parse(json, PathBuf::new()),
+            Err(ManifestError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn path_of_joins_dir() {
+        let m = sample();
+        let a = m.find(ArtifactKind::Encode, 16).unwrap();
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/a/encode_r16.hlo.txt"));
+    }
+}

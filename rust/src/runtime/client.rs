@@ -1,0 +1,96 @@
+//! PJRT client wrapper: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::artifact::{Artifact, ArtifactKind, Manifest};
+
+/// A loaded-and-compiled executable plus its manifest entry.
+pub struct Loaded {
+    pub artifact: Artifact,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The process-wide PJRT runtime: one CPU client and a cache of compiled
+/// executables keyed by artifact name. Compilation happens lazily on first
+/// use (or eagerly via [`Runtime::warmup`]) and is thread-safe.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Loaded>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load from [`Manifest::default_dir`].
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for (kind, rows).
+    pub fn load(&self, kind: ArtifactKind, rows: usize) -> anyhow::Result<Arc<Loaded>> {
+        let artifact = self
+            .manifest
+            .find(kind, rows)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for kind={kind} rows={rows}"))?
+            .clone();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(l) = cache.get(&artifact.name) {
+                return Ok(l.clone());
+            }
+        }
+        // Compile outside the lock: compiles of different artifacts can
+        // proceed concurrently; a duplicate compile of the same artifact
+        // is benign (last insert wins).
+        let path = self.manifest.path_of(&artifact);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", artifact.name))?;
+        let loaded = Arc::new(Loaded { artifact: artifact.clone(), exe });
+        self.cache.lock().unwrap().insert(artifact.name.clone(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Eagerly compile every artifact of the given kinds (service startup).
+    pub fn warmup(&self, kinds: &[ArtifactKind]) -> anyhow::Result<usize> {
+        let mut n = 0;
+        let entries: Vec<(ArtifactKind, usize)> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| kinds.contains(&a.kind))
+            .map(|a| (a.kind, a.rows))
+            .collect();
+        for (kind, rows) in entries {
+            self.load(kind, rows)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

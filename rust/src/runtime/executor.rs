@@ -1,0 +1,189 @@
+//! Typed block-level execution over the PJRT runtime.
+//!
+//! The executor owns the byte marshalling: flat `&[u8]` input buffers are
+//! wrapped as u8 literals of the executable's static shape (padding the
+//! final partial batch with zeros — padded rows are discarded on output),
+//! and outputs are copied back into plain `Vec<u8>`. The per-row error
+//! bytes of the decode graph come back alongside the payload so the
+//! coordinator can perform the paper's single end-of-stream check.
+
+use std::sync::Arc;
+
+use super::artifact::ArtifactKind;
+use super::client::{Loaded, Runtime};
+use crate::base64::{B64_BLOCK, RAW_BLOCK};
+
+/// Result of a batched block decode.
+pub struct BlockDecodeOutput {
+    /// `rows * 48` decoded bytes (padded rows already trimmed).
+    pub data: Vec<u8>,
+    /// One error byte per row; MSB set = row contained an invalid char.
+    pub err: Vec<u8>,
+}
+
+/// Encode/decode whole 48/64-byte blocks through the compiled artifacts.
+pub struct BlockExecutor {
+    runtime: Arc<Runtime>,
+}
+
+fn u8_literal(dims: &[usize], data: &[u8]) -> anyhow::Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+        .map_err(|e| anyhow::anyhow!("creating u8 literal {dims:?}: {e:?}"))
+}
+
+impl BlockExecutor {
+    pub fn new(runtime: Arc<Runtime>) -> Self {
+        Self { runtime }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Pick the executable row class for a block count.
+    pub fn row_class_for(&self, rows: usize) -> usize {
+        self.runtime.manifest().row_class_for(rows)
+    }
+
+    fn run(&self, loaded: &Loaded, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", loaded.artifact.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", loaded.artifact.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple, any arity.
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {}: {e:?}", loaded.artifact.name))
+    }
+
+    /// Encode `rows` 48-byte blocks (`input.len() == rows * 48`) with the
+    /// given 64-byte alphabet table. Returns `rows * 64` base64 chars.
+    ///
+    /// `rows` may be smaller than the executable class; the batch is
+    /// zero-padded and the padded rows are trimmed from the output.
+    pub fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        assert!(input.len() % RAW_BLOCK == 0, "input must be whole 48-byte blocks");
+        let rows = input.len() / RAW_BLOCK;
+        let class = self.row_class_for(rows);
+        let loaded = self.runtime.load(ArtifactKind::Encode, class)?;
+        // The table literal is identical for every chunk: create it once.
+        let t = u8_literal(&[64], table)?;
+        let mut out = Vec::with_capacity(rows * B64_BLOCK);
+        for chunk in input.chunks(class * RAW_BLOCK) {
+            let chunk_rows = chunk.len() / RAW_BLOCK;
+            let padded;
+            let chunk = if chunk_rows < class {
+                padded = {
+                    let mut p = chunk.to_vec();
+                    p.resize(class * RAW_BLOCK, 0);
+                    p
+                };
+                &padded[..]
+            } else {
+                chunk
+            };
+            let x = u8_literal(&[class, RAW_BLOCK], chunk)?;
+            let outputs = self.run(&loaded, &[x, t.clone()])?;
+            let chars: Vec<u8> = outputs[0]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow::anyhow!("encode output: {e:?}"))?;
+            out.extend_from_slice(&chars[..chunk_rows * B64_BLOCK]);
+        }
+        Ok(out)
+    }
+
+    /// Decode `rows` 64-char blocks with the 128-byte decode table.
+    /// Padded rows are trimmed from both outputs. Note zero-padding is
+    /// *invalid* base64, so padded rows flag errors — the caller must
+    /// only inspect the first `rows` error bytes (this method already
+    /// trims them).
+    pub fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<BlockDecodeOutput> {
+        assert!(input.len() % B64_BLOCK == 0, "input must be whole 64-char blocks");
+        let rows = input.len() / B64_BLOCK;
+        let class = self.row_class_for(rows);
+        let loaded = self.runtime.load(ArtifactKind::Decode, class)?;
+        let t = u8_literal(&[128], dtable)?;
+        let mut data = Vec::with_capacity(rows * RAW_BLOCK);
+        let mut err = Vec::with_capacity(rows);
+        for chunk in input.chunks(class * B64_BLOCK) {
+            let chunk_rows = chunk.len() / B64_BLOCK;
+            let padded;
+            let chunk = if chunk_rows < class {
+                padded = {
+                    let mut p = chunk.to_vec();
+                    p.resize(class * B64_BLOCK, 0);
+                    p
+                };
+                &padded[..]
+            } else {
+                chunk
+            };
+            let x = u8_literal(&[class, B64_BLOCK], chunk)?;
+            let outputs = self.run(&loaded, &[x, t.clone()])?;
+            let blocks: Vec<u8> = outputs[0]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow::anyhow!("decode output: {e:?}"))?;
+            let flags: Vec<u8> = outputs[1]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow::anyhow!("decode err output: {e:?}"))?;
+            data.extend_from_slice(&blocks[..chunk_rows * RAW_BLOCK]);
+            err.extend_from_slice(&flags[..chunk_rows]);
+        }
+        Ok(BlockDecodeOutput { data, err })
+    }
+
+    /// Validate-only: per-row error bytes for `rows` 64-char blocks.
+    pub fn validate_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<Vec<u8>> {
+        assert!(input.len() % B64_BLOCK == 0);
+        let rows = input.len() / B64_BLOCK;
+        let class = self.row_class_for(rows);
+        let loaded = self.runtime.load(ArtifactKind::Validate, class)?;
+        let t = u8_literal(&[128], dtable)?;
+        let mut err = Vec::with_capacity(rows);
+        for chunk in input.chunks(class * B64_BLOCK) {
+            let chunk_rows = chunk.len() / B64_BLOCK;
+            let padded;
+            let chunk = if chunk_rows < class {
+                padded = {
+                    let mut p = chunk.to_vec();
+                    p.resize(class * B64_BLOCK, 0);
+                    p
+                };
+                &padded[..]
+            } else {
+                chunk
+            };
+            let x = u8_literal(&[class, B64_BLOCK], chunk)?;
+            let outputs = self.run(&loaded, &[x, t.clone()])?;
+            let flags: Vec<u8> = outputs[0]
+                .to_vec::<u8>()
+                .map_err(|e| anyhow::anyhow!("validate output: {e:?}"))?;
+            err.extend_from_slice(&flags[..chunk_rows]);
+        }
+        Ok(err)
+    }
+
+    /// Run the roundtrip self-check artifact (encode ∘ decode == identity).
+    pub fn selftest(&self) -> anyhow::Result<bool> {
+        let manifest = self.runtime.manifest();
+        let rows = manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Roundtrip)
+            .map(|a| a.rows)
+            .ok_or_else(|| anyhow::anyhow!("no roundtrip artifact"))?;
+        let loaded = self.runtime.load(ArtifactKind::Roundtrip, rows)?;
+        let input: Vec<u8> = (0..rows * RAW_BLOCK).map(|i| (i * 131 % 256) as u8).collect();
+        let alphabet = crate::base64::Alphabet::standard();
+        let x = u8_literal(&[rows, RAW_BLOCK], &input)?;
+        let t = u8_literal(&[64], alphabet.encode_table().as_bytes())?;
+        let d = u8_literal(&[128], alphabet.decode_table().as_bytes())?;
+        let outputs = self.run(&loaded, &[x, t, d])?;
+        let back: Vec<u8> = outputs[0].to_vec::<u8>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let err: Vec<u8> = outputs[1].to_vec::<u8>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(back == input && err.iter().all(|&e| e & 0x80 == 0))
+    }
+}

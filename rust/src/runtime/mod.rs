@@ -1,0 +1,22 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire bridge to the compiled computations at serve time:
+//!
+//! * [`artifact`] — `artifacts/manifest.json` schema and discovery;
+//! * [`client`] — `xla` crate wrapper: one [`xla::PjRtClient`], an
+//!   executable cache keyed by artifact name;
+//! * [`executor`] — typed encode/decode entry points marshalling `&[u8]`
+//!   to/from u8 literals (zero format conversion on the hot path).
+//!
+//! The interchange format is HLO *text*: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, Manifest};
+pub use client::Runtime;
+pub use executor::{BlockDecodeOutput, BlockExecutor};

@@ -1,0 +1,127 @@
+//! Blocking client for the codec service (used by examples and benches).
+
+use std::net::{SocketAddr, TcpStream};
+
+use super::proto::{read_frame, write_frame, Message, ProtoError};
+use crate::base64::Mode;
+
+/// Client-side failures.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("proto: {0}")]
+    Proto(#[from] ProtoError),
+    #[error("connection closed")]
+    Closed,
+    #[error("server error: {0}")]
+    Server(String),
+    #[error("unexpected response")]
+    Unexpected,
+}
+
+/// One connection to the service.
+pub struct Client {
+    reader: std::io::BufReader<TcpStream>,
+    writer: std::io::BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Self, ClientError> {
+        let stream = TcpStream::connect(addr).map_err(ProtoError::Io)?;
+        stream.set_nodelay(true).ok();
+        let reader = std::io::BufReader::new(stream.try_clone().map_err(ProtoError::Io)?);
+        let writer = std::io::BufWriter::new(stream);
+        Ok(Self { reader, writer, next_id: 1 })
+    }
+
+    fn call(&mut self, msg: &Message) -> Result<Message, ClientError> {
+        write_frame(&mut self.writer, msg)?;
+        read_frame(&mut self.reader)?.ok_or(ClientError::Closed)
+    }
+
+    fn expect_data(&mut self, msg: &Message) -> Result<Vec<u8>, ClientError> {
+        match self.call(msg)? {
+            Message::RespData { data, .. } => Ok(data),
+            Message::RespError { message, .. } => Err(ClientError::Server(message)),
+            _ => Err(ClientError::Unexpected),
+        }
+    }
+
+    fn id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Encode `data` with the named alphabet (e.g. "standard").
+    pub fn encode(&mut self, data: &[u8], alphabet: &str) -> Result<Vec<u8>, ClientError> {
+        let id = self.id();
+        self.expect_data(&Message::Encode {
+            id,
+            alphabet: alphabet.to_string(),
+            mode: Mode::Strict,
+            data: data.to_vec(),
+        })
+    }
+
+    /// Decode base64 with the named alphabet.
+    pub fn decode(&mut self, data: &[u8], alphabet: &str, mode: Mode) -> Result<Vec<u8>, ClientError> {
+        let id = self.id();
+        self.expect_data(&Message::Decode {
+            id,
+            alphabet: alphabet.to_string(),
+            mode,
+            data: data.to_vec(),
+        })
+    }
+
+    /// Validate base64 without materializing output.
+    pub fn validate(&mut self, data: &[u8], alphabet: &str) -> Result<(), ClientError> {
+        let id = self.id();
+        self.expect_data(&Message::Validate {
+            id,
+            alphabet: alphabet.to_string(),
+            mode: Mode::Strict,
+            data: data.to_vec(),
+        })
+        .map(|_| ())
+    }
+
+    /// Open a chunked stream; returns the stream id.
+    pub fn stream_begin(&mut self, decode: bool, alphabet: &str) -> Result<u64, ClientError> {
+        let id = self.id();
+        self.expect_data(&Message::StreamBegin {
+            id,
+            decode,
+            alphabet: alphabet.to_string(),
+            mode: Mode::Strict,
+        })?;
+        Ok(id)
+    }
+
+    /// Send a chunk; returns bytes produced so far.
+    pub fn stream_chunk(&mut self, stream: u64, data: &[u8]) -> Result<Vec<u8>, ClientError> {
+        self.expect_data(&Message::StreamChunk { id: stream, data: data.to_vec() })
+    }
+
+    /// Close a stream; returns the final bytes.
+    pub fn stream_end(&mut self, stream: u64) -> Result<Vec<u8>, ClientError> {
+        self.expect_data(&Message::StreamEnd { id: stream })
+    }
+
+    /// Fetch the server's metrics report line.
+    pub fn stats(&mut self) -> Result<String, ClientError> {
+        match self.call(&Message::Stats)? {
+            Message::RespStats { report } => Ok(report),
+            _ => Err(ClientError::Unexpected),
+        }
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        match self.call(&Message::Ping)? {
+            Message::Pong => Ok(()),
+            _ => Err(ClientError::Unexpected),
+        }
+    }
+}

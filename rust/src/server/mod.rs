@@ -1,0 +1,12 @@
+//! Threaded TCP service speaking a length-prefixed codec protocol.
+//!
+//! One OS thread per connection (bounded by `max_connections`), a shared
+//! [`crate::coordinator::Router`] underneath — so batching happens
+//! *across* connections, which is where the fixed-shape executables win.
+
+pub mod client;
+pub mod proto;
+pub mod service;
+
+pub use client::Client;
+pub use service::{serve, ServerConfig, ServerHandle};

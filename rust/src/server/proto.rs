@@ -1,0 +1,304 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//! ```text
+//! frame     := u32le payload_len, payload
+//! payload   := tag(u8), body
+//! requests:
+//!   0x01 Encode    { id:u64le, alphabet:str8, mode:u8, data }
+//!   0x02 Decode    { id:u64le, alphabet:str8, mode:u8, data }
+//!   0x03 Validate  { id:u64le, alphabet:str8, mode:u8, data }
+//!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8 }
+//!   0x11 StreamChunk { id:u64le, data }
+//!   0x12 StreamEnd   { id:u64le }
+//!   0x20 Stats     {}
+//!   0x21 Ping      {}
+//! responses:
+//!   0x81 Data      { id:u64le, data }
+//!   0x82 Error     { id:u64le, message }
+//!   0x83 Pong      {}
+//!   0x84 Stats     { report }
+//! str8      := len(u8), utf-8 bytes
+//! mode      := 0 strict, 1 forgiving
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::base64::{Alphabet, Mode};
+
+/// Frames larger than this are rejected (sanity bound, 256 MiB).
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// A parsed protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Encode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
+    Decode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
+    Validate { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
+    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode },
+    StreamChunk { id: u64, data: Vec<u8> },
+    StreamEnd { id: u64 },
+    Stats,
+    Ping,
+    RespData { id: u64, data: Vec<u8> },
+    RespError { id: u64, message: String },
+    Pong,
+    RespStats { report: String },
+}
+
+/// Protocol-level failures.
+#[derive(Debug, thiserror::Error)]
+pub enum ProtoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame too large: {0} bytes")]
+    FrameTooLarge(usize),
+    #[error("malformed frame: {0}")]
+    Malformed(&'static str),
+    #[error("unknown alphabet: {0}")]
+    UnknownAlphabet(String),
+}
+
+fn mode_byte(m: Mode) -> u8 {
+    match m {
+        Mode::Strict => 0,
+        Mode::Forgiving => 1,
+    }
+}
+
+fn byte_mode(b: u8) -> Result<Mode, ProtoError> {
+    match b {
+        0 => Ok(Mode::Strict),
+        1 => Ok(Mode::Forgiving),
+        _ => Err(ProtoError::Malformed("bad mode byte")),
+    }
+}
+
+/// Resolve an alphabet name from the wire.
+pub fn resolve_alphabet(name: &str) -> Result<Alphabet, ProtoError> {
+    Alphabet::by_name(name).ok_or_else(|| ProtoError::UnknownAlphabet(name.to_string()))
+}
+
+impl Message {
+    /// Serialize to a frame body (without the length prefix).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        fn str8(out: &mut Vec<u8>, s: &str) {
+            debug_assert!(s.len() < 256);
+            out.push(s.len() as u8);
+            out.extend_from_slice(s.as_bytes());
+        }
+        let mut out = Vec::new();
+        match self {
+            Message::Encode { id, alphabet, mode, data }
+            | Message::Decode { id, alphabet, mode, data }
+            | Message::Validate { id, alphabet, mode, data } => {
+                out.push(match self {
+                    Message::Encode { .. } => 0x01,
+                    Message::Decode { .. } => 0x02,
+                    _ => 0x03,
+                });
+                out.extend_from_slice(&id.to_le_bytes());
+                str8(&mut out, alphabet);
+                out.push(mode_byte(*mode));
+                out.extend_from_slice(data);
+            }
+            Message::StreamBegin { id, decode, alphabet, mode } => {
+                out.push(0x10);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(*decode as u8);
+                str8(&mut out, alphabet);
+                out.push(mode_byte(*mode));
+            }
+            Message::StreamChunk { id, data } => {
+                out.push(0x11);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(data);
+            }
+            Message::StreamEnd { id } => {
+                out.push(0x12);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            Message::Stats => out.push(0x20),
+            Message::Ping => out.push(0x21),
+            Message::RespData { id, data } => {
+                out.push(0x81);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(data);
+            }
+            Message::RespError { id, message } => {
+                out.push(0x82);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(message.as_bytes());
+            }
+            Message::Pong => out.push(0x83),
+            Message::RespStats { report } => {
+                out.push(0x84);
+                out.extend_from_slice(report.as_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a frame body.
+    pub fn from_bytes(buf: &[u8]) -> Result<Message, ProtoError> {
+        fn take_u64(buf: &[u8]) -> Result<(u64, &[u8]), ProtoError> {
+            if buf.len() < 8 {
+                return Err(ProtoError::Malformed("truncated id"));
+            }
+            Ok((u64::from_le_bytes(buf[..8].try_into().unwrap()), &buf[8..]))
+        }
+        fn take_str8(buf: &[u8]) -> Result<(String, &[u8]), ProtoError> {
+            let n = *buf.first().ok_or(ProtoError::Malformed("truncated str8"))? as usize;
+            if buf.len() < 1 + n {
+                return Err(ProtoError::Malformed("truncated str8"));
+            }
+            let s = std::str::from_utf8(&buf[1..1 + n])
+                .map_err(|_| ProtoError::Malformed("non-utf8 str8"))?;
+            Ok((s.to_string(), &buf[1 + n..]))
+        }
+        let (&tag, rest) = buf.split_first().ok_or(ProtoError::Malformed("empty frame"))?;
+        match tag {
+            0x01 | 0x02 | 0x03 => {
+                let (id, rest) = take_u64(rest)?;
+                let (alphabet, rest) = take_str8(rest)?;
+                let (&mb, data) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
+                let mode = byte_mode(mb)?;
+                let data = data.to_vec();
+                Ok(match tag {
+                    0x01 => Message::Encode { id, alphabet, mode, data },
+                    0x02 => Message::Decode { id, alphabet, mode, data },
+                    _ => Message::Validate { id, alphabet, mode, data },
+                })
+            }
+            0x10 => {
+                let (id, rest) = take_u64(rest)?;
+                let (&d, rest) = rest.split_first().ok_or(ProtoError::Malformed("no dir"))?;
+                let (alphabet, rest) = take_str8(rest)?;
+                let (&mb, _) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
+                Ok(Message::StreamBegin { id, decode: d != 0, alphabet, mode: byte_mode(mb)? })
+            }
+            0x11 => {
+                let (id, rest) = take_u64(rest)?;
+                Ok(Message::StreamChunk { id, data: rest.to_vec() })
+            }
+            0x12 => {
+                let (id, _) = take_u64(rest)?;
+                Ok(Message::StreamEnd { id })
+            }
+            0x20 => Ok(Message::Stats),
+            0x21 => Ok(Message::Ping),
+            0x81 => {
+                let (id, rest) = take_u64(rest)?;
+                Ok(Message::RespData { id, data: rest.to_vec() })
+            }
+            0x82 => {
+                let (id, rest) = take_u64(rest)?;
+                let message = String::from_utf8_lossy(rest).into_owned();
+                Ok(Message::RespError { id, message })
+            }
+            0x83 => Ok(Message::Pong),
+            0x84 => Ok(Message::RespStats {
+                report: String::from_utf8_lossy(rest).into_owned(),
+            }),
+            _ => Err(ProtoError::Malformed("unknown tag")),
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<(), ProtoError> {
+    let body = msg.to_bytes();
+    if body.len() > MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge(body.len()));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Message>, ProtoError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge(len));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(Message::from_bytes(&body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let got = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn all_message_types_roundtrip() {
+        roundtrip(Message::Encode { id: 7, alphabet: "standard".into(), mode: Mode::Strict, data: b"hello".to_vec() });
+        roundtrip(Message::Decode { id: 8, alphabet: "url".into(), mode: Mode::Forgiving, data: b"aGk".to_vec() });
+        roundtrip(Message::Validate { id: 9, alphabet: "imap".into(), mode: Mode::Strict, data: b"AAAA".to_vec() });
+        roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict });
+        roundtrip(Message::StreamChunk { id: 1, data: vec![0, 1, 255] });
+        roundtrip(Message::StreamEnd { id: 1 });
+        roundtrip(Message::Stats);
+        roundtrip(Message::Ping);
+        roundtrip(Message::RespData { id: 7, data: vec![9; 100] });
+        roundtrip(Message::RespError { id: 7, message: "bad byte".into() });
+        roundtrip(Message::Pong);
+        roundtrip(Message::RespStats { report: "req=1".into() });
+    }
+
+    #[test]
+    fn eof_between_frames_is_clean() {
+        let buf: Vec<u8> = Vec::new();
+        assert!(read_frame(&mut buf.as_slice()).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::Ping).unwrap();
+        buf.pop();
+        buf[0] = 2; // claim 2 bytes, provide 0
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(read_frame(&mut buf.as_slice()), Err(ProtoError::FrameTooLarge(_))));
+    }
+
+    #[test]
+    fn malformed_bodies_rejected() {
+        assert!(Message::from_bytes(&[]).is_err());
+        assert!(Message::from_bytes(&[0xFF]).is_err());
+        assert!(Message::from_bytes(&[0x01, 1, 2]).is_err()); // truncated id
+        // Bad mode byte.
+        let mut b = vec![0x01];
+        b.extend_from_slice(&0u64.to_le_bytes());
+        b.push(0); // empty alphabet
+        b.push(9); // invalid mode
+        assert!(Message::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn alphabet_resolution() {
+        assert!(resolve_alphabet("standard").is_ok());
+        assert!(resolve_alphabet("url").is_ok());
+        assert!(matches!(resolve_alphabet("nope"), Err(ProtoError::UnknownAlphabet(_))));
+    }
+}

@@ -1,0 +1,169 @@
+//! The codec service: TCP listener, connection threads, shared router.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::proto::{read_frame, resolve_alphabet, write_frame, Message, ProtoError};
+use crate::coordinator::state::{SessionState, StreamError};
+use crate::coordinator::{Outcome, Request, RequestKind, Router};
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: SocketAddr,
+    /// Maximum concurrent connections; excess connections are refused.
+    pub max_connections: usize,
+    /// Maximum open streams per connection.
+    pub max_streams_per_connection: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:4648".parse().unwrap(), // port = RFC number
+            max_connections: 256,
+            max_streams_per_connection: 16,
+        }
+    }
+}
+
+/// Running server handle. Dropping stops accepting (existing connections
+/// run to completion; use [`ServerHandle::shutdown`] for a joined stop).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Stop accepting and join the acceptor.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the acceptor out of `accept()`.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the service; returns once the listener is bound.
+pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<ServerHandle> {
+    let listener = TcpListener::bind(config.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns = Arc::new(AtomicUsize::new(0));
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            if conns.load(Ordering::SeqCst) >= config.max_connections {
+                drop(stream); // shed
+                continue;
+            }
+            conns.fetch_add(1, Ordering::SeqCst);
+            let router = router.clone();
+            let conns = conns.clone();
+            let max_streams = config.max_streams_per_connection;
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &router, max_streams);
+                conns.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    });
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    max_streams: usize,
+) -> Result<(), ProtoError> {
+    stream.set_nodelay(true).ok();
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut session = SessionState::new(max_streams);
+    while let Some(msg) = read_frame(&mut reader)? {
+        let reply = dispatch(msg, router, &mut session);
+        write_frame(&mut writer, &reply)?;
+    }
+    Ok(())
+}
+
+fn outcome_to_message(id: u64, outcome: Outcome) -> Message {
+    match outcome {
+        Outcome::Data(data) => Message::RespData { id, data },
+        Outcome::Valid => Message::RespData { id, data: Vec::new() },
+        Outcome::Invalid(e) => Message::RespError { id, message: e.to_string() },
+        Outcome::Rejected(r) => Message::RespError { id, message: r.to_string() },
+        Outcome::Internal(m) => Message::RespError { id, message: m },
+    }
+}
+
+fn stream_err(id: u64, e: StreamError) -> Message {
+    Message::RespError { id, message: e.to_string() }
+}
+
+fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
+    let kind = match &msg {
+        Message::Encode { .. } => Some(RequestKind::Encode),
+        Message::Decode { .. } => Some(RequestKind::Decode),
+        Message::Validate { .. } => Some(RequestKind::Validate),
+        _ => None,
+    };
+    match msg {
+        Message::Encode { id, alphabet, mode, data }
+        | Message::Decode { id, alphabet, mode, data }
+        | Message::Validate { id, alphabet, mode, data } => {
+            let kind = kind.expect("kind set for request variants");
+            let alphabet = match resolve_alphabet(&alphabet) {
+                Ok(a) => a,
+                Err(e) => return Message::RespError { id, message: e.to_string() },
+            };
+            let resp = router.process(Request { id, kind, payload: data, alphabet, mode });
+            outcome_to_message(id, resp.outcome)
+        }
+        Message::StreamBegin { id, decode, alphabet, mode } => {
+            let alphabet = match resolve_alphabet(&alphabet) {
+                Ok(a) => a,
+                Err(e) => return Message::RespError { id, message: e.to_string() },
+            };
+            let r = if decode {
+                session.open_decode(id, alphabet, mode)
+            } else {
+                session.open_encode(id, alphabet)
+            };
+            match r {
+                Ok(()) => Message::RespData { id, data: Vec::new() },
+                Err(e) => stream_err(id, e),
+            }
+        }
+        Message::StreamChunk { id, data } => match session.chunk(id, &data) {
+            Ok(out) => Message::RespData { id, data: out },
+            Err(e) => stream_err(id, e),
+        },
+        Message::StreamEnd { id } => match session.finish(id) {
+            Ok(out) => Message::RespData { id, data: out },
+            Err(e) => stream_err(id, e),
+        },
+        Message::Stats => Message::RespStats { report: router.metrics().report() },
+        Message::Ping => Message::Pong,
+        // A server never receives responses; answer with an error frame.
+        other => Message::RespError { id: 0, message: format!("unexpected message {other:?}") },
+    }
+}

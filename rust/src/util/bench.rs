@@ -1,0 +1,168 @@
+//! Benchmark harness mirroring the paper's methodology (§4): "To measure
+//! the speed, we take 10 measures, compute the median time. Our timings
+//! include some fixed overhead costs such as the function call."
+//!
+//! criterion is not available offline, so this is the in-tree equivalent:
+//! warmup, N timed repetitions (each running the closure enough times to
+//! exceed a minimum window), median + MAD, GB/s relative to a caller-
+//! declared byte count (the paper uses *base64* bytes as the reference).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Reference byte count per closure call (base64 bytes, per paper).
+    pub bytes: usize,
+    pub median: Duration,
+    /// Median absolute deviation (robust spread).
+    pub mad: Duration,
+    pub gbps: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<28}{:>12}B {:>12.3?} ±{:>9.3?} {:>9.3} GB/s",
+            self.name, self.bytes, self.median, self.mad, self.gbps
+        )
+    }
+}
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Timed repetitions (the paper uses 10).
+    pub reps: usize,
+    /// Minimum wall time per repetition; the closure is looped to reach it.
+    pub min_rep_time: Duration,
+    pub warmup: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            reps: 10,
+            min_rep_time: Duration::from_millis(10),
+            warmup: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Quick-mode options for CI (`B64SIMD_BENCH_FAST=1`).
+pub fn opts_from_env() -> BenchOpts {
+    if std::env::var_os("B64SIMD_BENCH_FAST").is_some() {
+        BenchOpts {
+            reps: 5,
+            min_rep_time: Duration::from_millis(2),
+            warmup: Duration::from_millis(5),
+        }
+    } else {
+        BenchOpts::default()
+    }
+}
+
+/// Run one benchmark: `f` processes `bytes` reference bytes per call.
+pub fn bench(name: impl Into<String>, bytes: usize, opts: &BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        f();
+    }
+    // Calibrate inner loop count.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let inner = (opts.min_rep_time.as_nanos() / once.as_nanos()).clamp(1, 1 << 24) as usize;
+    // Timed repetitions.
+    let mut samples: Vec<Duration> = (0..opts.reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            for _ in 0..inner {
+                f();
+            }
+            t.elapsed() / inner as u32
+        })
+        .collect();
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|&s| if s > median { s - median } else { median - s })
+        .collect();
+    devs.sort_unstable();
+    let mad = devs[devs.len() / 2];
+    let gbps = bytes as f64 / median.as_nanos().max(1) as f64;
+    BenchResult { name: name.into(), bytes, median, mad, gbps }
+}
+
+/// Simple aligned table printer for a series of results.
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    for r in results {
+        println!("{}", r.row());
+    }
+}
+
+/// Format a series as CSV (size, gbps) for figure regeneration.
+pub fn to_csv(results: &[BenchResult]) -> String {
+    let mut out = String::from("name,bytes,median_ns,gbps\n");
+    for r in results {
+        out.push_str(&format!("{},{},{},{:.4}\n", r.name, r.bytes, r.median.as_nanos(), r.gbps));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> BenchOpts {
+        BenchOpts {
+            reps: 3,
+            min_rep_time: Duration::from_micros(200),
+            warmup: Duration::from_micros(100),
+        }
+    }
+
+    #[test]
+    fn measures_a_memcpy() {
+        let src = vec![1u8; 64 << 10];
+        let mut dst = vec![0u8; 64 << 10];
+        let r = bench("memcpy", src.len(), &fast_opts(), || {
+            dst.copy_from_slice(std::hint::black_box(&src));
+            std::hint::black_box(&dst);
+        });
+        assert!(r.gbps > 0.5, "memcpy measured at {} GB/s", r.gbps);
+        assert!(r.median > Duration::ZERO);
+    }
+
+    #[test]
+    fn csv_format() {
+        let r = BenchResult {
+            name: "x".into(),
+            bytes: 10,
+            median: Duration::from_nanos(100),
+            mad: Duration::ZERO,
+            gbps: 0.1,
+        };
+        let csv = to_csv(&[r]);
+        assert!(csv.starts_with("name,bytes"));
+        assert!(csv.contains("x,10,100,0.1000"));
+    }
+
+    #[test]
+    fn faster_code_scores_higher() {
+        let data = vec![7u8; 32 << 10];
+        let fast = bench("sum", data.len(), &fast_opts(), || {
+            std::hint::black_box(data.iter().map(|&b| b as u64).sum::<u64>());
+        });
+        let slow = bench("sum3", data.len(), &fast_opts(), || {
+            for _ in 0..3 {
+                std::hint::black_box(data.iter().map(|&b| b as u64).sum::<u64>());
+            }
+        });
+        assert!(fast.gbps > slow.gbps);
+    }
+}

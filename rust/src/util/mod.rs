@@ -1,0 +1,7 @@
+//! In-tree utilities: a minimal JSON parser for the artifact manifest, a
+//! benchmark statistics harness mirroring the paper's methodology
+//! (median of 10), and a deterministic property-test toolkit.
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,90 @@
+//! Property-test toolkit: deterministic generators + a forall driver.
+//!
+//! proptest is not available offline; this provides the subset the test
+//! suite needs — seeded random inputs over a size sweep, with the failing
+//! case's (seed, length) reported so a regression test can pin it.
+
+use crate::workload::Rng64;
+
+/// Run `cases` property checks over random byte strings of length
+/// `0..=max_len` (biased toward boundary lengths), panicking with the
+/// reproducing parameters on the first failure.
+pub fn forall_bytes(cases: usize, max_len: usize, seed: u64, prop: impl Fn(&[u8]) -> Result<(), String>) {
+    let mut rng = Rng64::new(seed);
+    // Boundary lengths first: the paper's block geometry edges.
+    let boundaries = [
+        0usize, 1, 2, 3, 4, 47, 48, 49, 63, 64, 65, 95, 96, 97, 127, 128,
+    ];
+    let run = |rng: &mut Rng64, len: usize, case: usize| {
+        let mut data = vec![0u8; len];
+        rng.fill(&mut data);
+        if let Err(msg) = prop(&data) {
+            panic!("property failed (case {case}, len {len}, seed {seed}): {msg}");
+        }
+    };
+    let mut case = 0;
+    for &len in boundaries.iter().filter(|&&l| l <= max_len) {
+        run(&mut rng, len, case);
+        case += 1;
+    }
+    while case < cases {
+        let len = (rng.below(max_len as u64 + 1)) as usize;
+        run(&mut rng, len, case);
+        case += 1;
+    }
+}
+
+/// Like [`forall_bytes`] but the input is valid base64 of the standard
+/// alphabet (unpadded multiple of 4).
+pub fn forall_base64(cases: usize, max_quads: usize, seed: u64, prop: impl Fn(&[u8]) -> Result<(), String>) {
+    let alphabet = crate::base64::Alphabet::standard();
+    let chars = alphabet.chars();
+    let mut rng = Rng64::new(seed);
+    for case in 0..cases {
+        let quads = rng.below(max_quads as u64 + 1) as usize;
+        let data: Vec<u8> = (0..quads * 4).map(|_| chars[rng.below(64) as usize]).collect();
+        if let Err(msg) = prop(&data) {
+            panic!("property failed (case {case}, quads {quads}, seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Check helper: equality with context.
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, what: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall_bytes(50, 100, 1, |data| check_eq(data.len(), data.len(), "len"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall_bytes(50, 100, 2, |data| {
+            if data.len() == 48 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn forall_base64_generates_valid_input() {
+        use crate::base64::{block::BlockCodec, Alphabet, Codec};
+        let codec = BlockCodec::new(Alphabet::standard());
+        forall_base64(30, 64, 3, |b64| {
+            codec.decode(b64).map(|_| ()).map_err(|e| e.to_string())
+        });
+    }
+}

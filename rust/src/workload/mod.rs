@@ -1,0 +1,9 @@
+//! Workload generation: deterministic random payloads, the Fig. 4 size
+//! sweep and the Table 3 corpus (synthetic stand-ins for the paper's
+//! files — see DESIGN.md §2 for the substitution argument).
+
+mod corpus;
+mod rng;
+
+pub use corpus::{fig4_sizes, table3_corpus, CorpusFile};
+pub use rng::{random_base64, random_bytes, Rng64};

@@ -1,0 +1,116 @@
+//! Deterministic pseudo-random data (xoshiro256**, seeded) — no external
+//! RNG crates, reproducible across runs and platforms.
+
+/// xoshiro256** generator.
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    /// Seed via splitmix64 so any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        // Lemire's multiply-shift rejection-free approximation is fine for
+        // workload generation; bias is < 2^-32 for our bounds.
+        ((self.next_u64() >> 32).wrapping_mul(bound)) >> 32
+    }
+
+    pub fn fill(&mut self, buf: &mut [u8]) {
+        let mut chunks = buf.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rest = chunks.into_remainder();
+        if !rest.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rest.copy_from_slice(&b[..rest.len()]);
+        }
+    }
+}
+
+/// `n` uniform random bytes (the paper's "random binary data", §4).
+pub fn random_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng64::new(seed);
+    let mut out = vec![0u8; n];
+    rng.fill(&mut out);
+    out
+}
+
+/// `n` valid base64 chars of the given alphabet (uniform over values),
+/// length rounded down to a multiple of 4; no padding.
+pub fn random_base64(n: usize, seed: u64, alphabet: &crate::base64::Alphabet) -> Vec<u8> {
+    let n = n & !3;
+    let chars = alphabet.chars();
+    let mut rng = Rng64::new(seed);
+    (0..n).map(|_| chars[rng.below(64) as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(random_bytes(64, 42), random_bytes(64, 42));
+        assert_ne!(random_bytes(64, 42), random_bytes(64, 43));
+    }
+
+    #[test]
+    fn fill_handles_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 63] {
+            assert_eq!(random_bytes(n, 1).len(), n);
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut rng = Rng64::new(7);
+        for _ in 0..10_000 {
+            assert!(rng.below(64) < 64);
+        }
+    }
+
+    #[test]
+    fn random_base64_is_decodable() {
+        use crate::base64::{block::BlockCodec, Alphabet, Codec};
+        let a = Alphabet::standard();
+        let payload = random_base64(1000, 9, &a);
+        assert_eq!(payload.len(), 1000);
+        BlockCodec::new(a).decode(&payload).unwrap();
+    }
+
+    #[test]
+    fn bytes_look_uniform() {
+        // Crude sanity: all 256 values appear in 64 kB.
+        let data = random_bytes(65536, 3);
+        let mut seen = [false; 256];
+        for &b in &data {
+            seen[b as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}
