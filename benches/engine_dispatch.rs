@@ -1,0 +1,130 @@
+//! Engine dispatch bench: what the zero-allocation slice path and the
+//! flat function-pointer dispatch buy, per tier, on 64 KiB payloads.
+//!
+//! Series per supported tier:
+//! * `slice`  — `Engine::encode_slice`/`decode_slice` into reused
+//!   buffers (static dispatch through cached fn pointers, no heap);
+//! * `vec`    — the `Vec`-returning wrappers (same kernels, plus an
+//!   allocation + page touch per call);
+//! * `dyn`    — the same tier codec behind `Box<dyn Codec>` using the
+//!   slice API (isolates virtual dispatch from allocation);
+//! * `dynvec` — trait object + `Vec` (the pre-engine configuration).
+//!
+//! The headline number is the slice/vec ratio on the 64 KiB encode —
+//! the acceptance bar is ≥ 1.3×.
+
+use b64simd::base64::{
+    avx2::Avx2Codec, avx512::Avx512Codec, block::BlockCodec, decoded_len_upper, encoded_len,
+    swar::SwarCodec, Alphabet, Codec, Engine, Tier,
+};
+use b64simd::util::bench::{bench, opts_from_env, BenchResult};
+use b64simd::workload::random_bytes;
+
+fn dyn_codec_for(tier: Tier, alphabet: &Alphabet) -> Box<dyn Codec> {
+    match tier {
+        Tier::Avx512 => Box::new(Avx512Codec::new(alphabet.clone())),
+        Tier::Avx2 => Box::new(Avx2Codec::new(alphabet.clone())),
+        Tier::Swar => Box::new(SwarCodec::new(alphabet.clone())),
+        Tier::Scalar => Box::new(BlockCodec::new(alphabet.clone())),
+    }
+}
+
+fn main() {
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    let raw_len = 64 * 1024 / 4 * 3; // 64 KiB of base64 output
+    let data = random_bytes(raw_len, 0x64);
+    let b64_len = encoded_len(raw_len);
+
+    println!("engine dispatch on {} KiB base64 payloads", b64_len / 1024);
+    println!(
+        "{:<24}{:>12}  {:>12}  {}",
+        "series", "enc GB/s", "dec GB/s", "(GB/s of base64 bytes)"
+    );
+
+    let mut headline: Option<(f64, f64)> = None;
+
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(alphabet.clone(), tier);
+        let dyn_codec = dyn_codec_for(tier, &alphabet);
+        let mut enc_buf = vec![0u8; b64_len];
+        let mut dec_buf = vec![0u8; decoded_len_upper(b64_len)];
+        let n = engine.encode_slice(&data, &mut enc_buf);
+        let encoded = enc_buf[..n].to_vec();
+
+        let row = |name: &str, enc: BenchResult, dec: BenchResult| {
+            println!("{:<24}{:>12.3}  {:>12.3}", format!("{}/{name}", tier.name()), enc.gbps, dec.gbps);
+            (enc.gbps, dec.gbps)
+        };
+
+        let slice = row(
+            "slice",
+            bench("enc-slice", b64_len, &opts, || {
+                std::hint::black_box(engine.encode_slice(std::hint::black_box(&data), &mut enc_buf));
+            }),
+            bench("dec-slice", b64_len, &opts, || {
+                std::hint::black_box(
+                    engine.decode_slice(std::hint::black_box(&encoded), &mut dec_buf).unwrap(),
+                );
+            }),
+        );
+        let vec = row(
+            "vec",
+            bench("enc-vec", b64_len, &opts, || {
+                std::hint::black_box(engine.encode(std::hint::black_box(&data)));
+            }),
+            bench("dec-vec", b64_len, &opts, || {
+                std::hint::black_box(engine.decode(std::hint::black_box(&encoded)).unwrap());
+            }),
+        );
+        row(
+            "dyn",
+            bench("enc-dyn", b64_len, &opts, || {
+                std::hint::black_box(
+                    dyn_codec.encode_slice(std::hint::black_box(&data), &mut enc_buf),
+                );
+            }),
+            bench("dec-dyn", b64_len, &opts, || {
+                std::hint::black_box(
+                    dyn_codec.decode_slice(std::hint::black_box(&encoded), &mut dec_buf).unwrap(),
+                );
+            }),
+        );
+        row(
+            "dynvec",
+            bench("enc-dynvec", b64_len, &opts, || {
+                std::hint::black_box(dyn_codec.encode(std::hint::black_box(&data)));
+            }),
+            bench("dec-dynvec", b64_len, &opts, || {
+                std::hint::black_box(dyn_codec.decode(std::hint::black_box(&encoded)).unwrap());
+            }),
+        );
+
+        if tier == *Tier::supported().first().unwrap() {
+            headline = Some((slice.0 / vec.0, slice.1 / vec.1));
+        }
+    }
+
+    if let Some((enc_ratio, dec_ratio)) = headline {
+        println!(
+            "\nbest-tier slice/vec speedup on 64 KiB: encode {enc_ratio:.2}x, decode {dec_ratio:.2}x (target >= 1.3x)"
+        );
+    }
+
+    // Parallel path on a memory-bound payload (beyond one core's L2).
+    let big = random_bytes(32 << 20, 9);
+    let engine = Engine::get();
+    let mut big_out = vec![0u8; encoded_len(big.len())];
+    let serial = bench("enc-32MiB-serial", encoded_len(big.len()), &opts, || {
+        std::hint::black_box(engine.encode_slice(std::hint::black_box(&big), &mut big_out));
+    });
+    let par = bench("enc-32MiB-par", encoded_len(big.len()), &opts, || {
+        std::hint::black_box(engine.encode_par(std::hint::black_box(&big), &mut big_out, 0));
+    });
+    println!(
+        "\n32 MiB encode: serial {:.3} GB/s, parallel {:.3} GB/s ({:.2}x)",
+        serial.gbps,
+        par.gbps,
+        par.gbps / serial.gbps
+    );
+}

@@ -29,8 +29,11 @@ fn main() {
         eprintln!("note: artifacts/ missing; skipping the PJRT series");
     }
 
+    let engine = b64simd::base64::Engine::get();
+    eprintln!("note: engine tier = {}", engine.tier().name());
+
     let mut all: Vec<BenchResult> = Vec::new();
-    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "scalar", "swar", "block", "avx2", "avx512", "pjrt");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "engine", "scalar", "swar", "block", "avx2", "avx512", "pjrt");
     for b64_size in fig4_sizes() {
         let raw = b64_size / 4 * 3;
         let data = random_bytes(raw, b64_size as u64);
@@ -42,6 +45,16 @@ fn main() {
         let r = bench(format!("memcpy/{b64_size}"), b64_size, &opts, || {
             dst.copy_from_slice(std::hint::black_box(&encoded));
             std::hint::black_box(&dst);
+        });
+        row += &format!(" {:>10.2}", r.gbps);
+        all.push(r);
+
+        // The engine's zero-allocation slice path (best tier, reused buffer).
+        let mut eng_out = vec![0u8; engine.decoded_len_of(&encoded)];
+        let r = bench(format!("engine/{b64_size}"), b64_size, &opts, || {
+            std::hint::black_box(
+                engine.decode_slice(std::hint::black_box(&encoded), &mut eng_out).unwrap(),
+            );
         });
         row += &format!(" {:>10.2}", r.gbps);
         all.push(r);
@@ -58,10 +71,11 @@ fn main() {
             codecs.push(("avx512", a5 as &dyn Codec));
         }
         for (name, codec) in codecs {
-            let mut out = Vec::with_capacity(raw + 4);
+            // Preallocated output, exactly the paper's methodology (their
+            // codecs write into caller-provided buffers).
+            let mut out = vec![0u8; b64simd::base64::decoded_len_upper(b64_size)];
             let r = bench(format!("{name}/{b64_size}"), b64_size, &opts, || {
-                out.clear();
-                codec.decode_into(std::hint::black_box(&encoded), &mut out).unwrap();
+                codec.decode_slice(std::hint::black_box(&encoded), &mut out).unwrap();
                 std::hint::black_box(&out);
             });
             row += &format!(" {:>10.2}", r.gbps);

@@ -31,8 +31,11 @@ fn main() {
         eprintln!("note: artifacts/ missing; skipping the PJRT series");
     }
 
+    let engine = b64simd::base64::Engine::get();
+    eprintln!("note: engine tier = {}", engine.tier().name());
+
     let mut all: Vec<BenchResult> = Vec::new();
-    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "scalar", "swar", "block", "avx2", "avx512", "pjrt");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "engine", "scalar", "swar", "block", "avx2", "avx512", "pjrt");
     for b64_size in fig4_sizes() {
         // Paper convention: the x-axis is base64 bytes; raw input is 3/4.
         let raw = b64_size / 4 * 3;
@@ -44,6 +47,14 @@ fn main() {
         let r = bench(format!("memcpy/{b64_size}"), b64_size, &opts, || {
             dst.copy_from_slice(std::hint::black_box(&src));
             std::hint::black_box(&dst);
+        });
+        row += &format!(" {:>10.2}", r.gbps);
+        all.push(r);
+
+        // The engine's zero-allocation slice path (best tier, reused buffer).
+        let mut eng_out = vec![0u8; b64simd::base64::encoded_len(raw)];
+        let r = bench(format!("engine/{b64_size}"), b64_size, &opts, || {
+            std::hint::black_box(engine.encode_slice(std::hint::black_box(&data), &mut eng_out));
         });
         row += &format!(" {:>10.2}", r.gbps);
         all.push(r);
@@ -60,10 +71,11 @@ fn main() {
             codecs.push(("avx512", a5 as &dyn Codec));
         }
         for (name, codec) in codecs {
-            let mut out = Vec::with_capacity(b64_size + 4);
+            // Preallocated output, exactly the paper's methodology (their
+            // codecs write into caller-provided buffers).
+            let mut out = vec![0u8; b64simd::base64::encoded_len(raw)];
             let r = bench(format!("{name}/{b64_size}"), b64_size, &opts, || {
-                out.clear();
-                codec.encode_into(std::hint::black_box(&data), &mut out);
+                codec.encode_slice(std::hint::black_box(&data), &mut out);
                 std::hint::black_box(&out);
             });
             row += &format!(" {:>10.2}", r.gbps);

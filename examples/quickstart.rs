@@ -4,22 +4,34 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Covers: one-shot encode/decode, runtime-swappable variants (the
-//! paper's §5 versatility claim, E8), streaming, error reporting, and —
-//! when `artifacts/` exists — the same operations through the compiled
-//! PJRT executables.
+//! Covers: the zero-allocation engine hot path, one-shot encode/decode,
+//! runtime-swappable variants (the paper's §5 versatility claim, E8),
+//! streaming, error reporting, and — when `artifacts/` exists — the same
+//! operations through the compiled PJRT executables.
 
 use std::sync::Arc;
 
 use b64simd::base64::alphabet::STANDARD;
-use b64simd::base64::{block::BlockCodec, streaming::StreamingEncoder, Alphabet, Codec, DecodeError};
+use b64simd::base64::{
+    block::BlockCodec, encoded_len, streaming::StreamingEncoder, Alphabet, Codec, DecodeError,
+    Engine,
+};
 use b64simd::runtime::{BlockExecutor, Manifest, Runtime};
 
 fn main() -> anyhow::Result<()> {
+    // --- 0. The hot path: tier-dispatched, allocation-free slices.
+    //        Feature detection (AVX-512 VBMI → AVX2 → SWAR → scalar)
+    //        runs once; force a tier with B64SIMD_TIER=swar etc.
+    let engine = Engine::get();
+    let message = b"Many common document formats on the Internet are text-only.";
+    let mut buf = vec![0u8; encoded_len(message.len())];
+    let n = engine.encode_slice(message, &mut buf);
+    println!("engine  : tier={} encoded {n} chars without allocating", engine.tier().name());
+
     // --- 1. One-shot encode/decode with the paper's block algorithm.
     let codec = BlockCodec::new(Alphabet::standard());
-    let message = b"Many common document formats on the Internet are text-only.";
     let encoded = codec.encode(message);
+    assert_eq!(encoded, &buf[..n]);
     println!("encoded : {}", String::from_utf8_lossy(&encoded));
     let decoded = codec.decode(&encoded)?;
     assert_eq!(decoded, message);

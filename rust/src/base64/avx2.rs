@@ -24,7 +24,7 @@
 use std::arch::x86_64::*;
 
 use super::block::BlockCodec;
-use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::validate::{decode_quads_into, decode_tail_into, split_tail, DecodeError, Mode};
 use super::{encoded_len, Alphabet, Codec};
 
 /// Bytes consumed per encode iteration (two 12-byte lane loads).
@@ -69,7 +69,12 @@ impl Avx2Codec {
     /// contiguous A–Z-like, a–z-like and 0–9-like runs (standard/imap
     /// qualify; arbitrary tables do not — use the AVX-512 or block codec).
     pub fn supports(alphabet: &Alphabet) -> bool {
-        let c = alphabet.chars();
+        Self::supports_chars(alphabet.chars())
+    }
+
+    /// [`Self::supports`] on a raw 64-byte alphabet table (the form the
+    /// coordinator backends receive over the wire).
+    pub fn supports_chars(c: &[u8; 64]) -> bool {
         let contiguous = |range: std::ops::Range<usize>| {
             range.clone().skip(1).all(|i| c[i] == c[i - 1] + 1)
         };
@@ -153,16 +158,18 @@ impl Avx2Codec {
 mod kernels {
     use super::*;
 
-    /// Encode whole 24-byte groups; returns bytes consumed.
+    /// Encode whole 24-byte groups into `out[0..]`; returns bytes
+    /// consumed. `out.len()` must be at least `input.len() / 24 * 32`;
+    /// the caller must guarantee 4 spare *readable* bytes past the last
+    /// consumed group (the 12-offset lane load reads `src+12..src+28`).
     #[target_feature(enable = "avx2")]
-    pub unsafe fn encode(input: &[u8], out: &mut Vec<u8>, offsets: &[i8; 16]) -> usize {
+    pub unsafe fn encode(input: &[u8], out: &mut [u8], offsets: &[i8; 16]) -> usize {
         let iters = input.len() / ENC_IN;
         if iters == 0 {
             return 0;
         }
-        let start = out.len();
-        out.resize(start + iters * ENC_OUT, 0);
-        let dst_base = out.as_mut_ptr().add(start);
+        debug_assert!(out.len() >= iters * ENC_OUT);
+        let dst_base = out.as_mut_ptr();
         // In-lane shuffle producing (s2,s1,s3,s2) per 32-bit group from
         // 12 source bytes per 128-bit lane.
         let reshuf = _mm_setr_epi8(1, 0, 2, 1, 4, 3, 5, 4, 7, 6, 8, 7, 10, 9, 11, 10);
@@ -200,24 +207,24 @@ mod kernels {
         iters * ENC_IN
     }
 
-    /// Decode whole 32-char groups. Returns (consumed, first_error_offset).
+    /// Decode whole 32-char groups into `out[0..]`. Each iteration stores
+    /// 32 bytes (8 of slack past its 24 real bytes), so only as many
+    /// groups are vectorized as fit `out` with that slack — the caller
+    /// decodes the remainder through the scalar quad path. Returns
+    /// (consumed, first_error_offset).
     #[target_feature(enable = "avx2")]
     pub unsafe fn decode(
         input: &[u8],
-        out: &mut Vec<u8>,
+        out: &mut [u8],
         lut_lo_row: &[i8; 16],
         roll_row: &[i8; 16],
         c63: u8,
     ) -> (usize, Option<usize>) {
-        let iters = input.len() / DEC_IN;
+        let iters = (input.len() / DEC_IN).min(out.len().saturating_sub(8) / DEC_OUT);
         if iters == 0 {
             return (0, None);
         }
-        let start = out.len();
-        // Each iteration stores 32 bytes (8 of slack); reserve for it and
-        // truncate to the real 24x count afterwards.
-        out.resize(start + iters * DEC_OUT + 8, 0);
-        let dst_base = out.as_mut_ptr().add(start);
+        let dst_base = out.as_mut_ptr();
         // Nibble classification tables (standard ranges; 2018 paper).
         let lut_hi = _mm256_broadcastsi128_si256(_mm_setr_epi8(
             0x10, 0x10, 0x01, 0x02, 0x04, 0x08, 0x04, 0x08,
@@ -258,7 +265,6 @@ mod kernels {
             if bad_mask != 0 {
                 // Report the exact byte (cold path; matches scalar order).
                 let lane = bad_mask.trailing_zeros() as usize;
-                out.truncate(start + i * DEC_OUT);
                 return (i * DEC_IN, Some(i * DEC_IN + lane));
             }
             // -- roll addition: ASCII -> 6-bit value.
@@ -275,8 +281,58 @@ mod kernels {
             let compact = _mm256_permutevar8x32_epi32(shuf, perm);
             _mm256_storeu_si256(dst_base.add(i * DEC_OUT) as *mut _, compact);
         }
-        out.truncate(start + iters * DEC_OUT);
         (iters * DEC_IN, None)
+    }
+}
+
+impl Avx2Codec {
+    /// Bulk slice core: encode whole 24-byte groups into `out[0..]` with
+    /// the SIMD path, returning the bytes consumed (a multiple of 24).
+    /// Stops 4 bytes short of the input end to keep the 16-byte lane
+    /// loads in bounds; the caller's scalar epilogue covers the rest.
+    pub(crate) fn encode_bulk(&self, input: &[u8], out: &mut [u8]) -> usize {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // Keep 16-byte loads in bounds: only iterate while 28 bytes
+            // remain readable (12-offset lane load reads src+12..src+28).
+            let safe_len = input.len().saturating_sub(4) / ENC_IN * ENC_IN;
+            // SAFETY: availability asserted at construction.
+            unsafe { kernels::encode(&input[..safe_len], out, &self.enc_offsets) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (input, out);
+            0
+        }
+    }
+
+    /// Bulk slice core: decode whole 32-char groups (no padding) into
+    /// `out[0..]`, returning the chars consumed. Errors report offsets
+    /// relative to `input`, normalized to scalar (first-byte) order.
+    pub(crate) fn decode_bulk(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // SAFETY: availability asserted at construction.
+            let (consumed, bad) =
+                unsafe { kernels::decode(input, out, &self.dec_lut_lo, &self.dec_roll, self.c63) };
+            if let Some(pos) = bad {
+                // The SIMD path flags the lane; normalize to the first
+                // invalid byte in scalar order for exact reporting.
+                let from = pos / DEC_IN * DEC_IN;
+                let off = input[from..]
+                    .iter()
+                    .position(|&c| self.alphabet.value_of(c).is_none())
+                    .map(|p| from + p)
+                    .expect("flagged group contains an invalid byte");
+                return Err(DecodeError::InvalidByte { offset: off, byte: input[off] });
+            }
+            Ok(consumed)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (input, out);
+            Ok(0)
+        }
     }
 }
 
@@ -285,71 +341,37 @@ impl Codec for Avx2Codec {
         "avx2"
     }
 
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
-        let start = out.len();
-        out.reserve(encoded_len(input.len()) + ENC_OUT);
-        #[cfg(target_arch = "x86_64")]
-        let consumed = {
-            // Keep 16-byte loads in bounds: only iterate while 28 bytes
-            // remain readable (12-offset lane load reads src+12..src+28).
-            let safe_len = input.len().saturating_sub(4) / ENC_IN * ENC_IN;
-            // SAFETY: availability asserted at construction.
-            unsafe { kernels::encode(&input[..safe_len], out, &self.enc_offsets) }
-        };
-        #[cfg(not(target_arch = "x86_64"))]
-        let consumed = 0;
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let consumed = self.encode_bulk(input, out);
+        let w = consumed / 3 * 4;
         // Scalar epilogue (paper's "conventional code path").
-        self.scalar_twin.encode_into(&input[consumed..], out);
-        out.len() - start
+        self.scalar_twin.encode_slice(&input[consumed..], &mut out[w..]);
+        total
     }
 
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
         let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
-        let start = out.len();
-        #[cfg(target_arch = "x86_64")]
-        let consumed = {
-            // SAFETY: availability asserted at construction.
-            let (consumed, bad) =
-                unsafe { kernels::decode(body, out, &self.dec_lut_lo, &self.dec_roll, self.c63) };
-            if let Some(pos) = bad {
-                out.truncate(start);
-                // The SIMD path flags the lane; normalize to the first
-                // invalid byte in scalar order for exact reporting.
-                let from = pos / DEC_IN * DEC_IN;
-                let off = body[from..]
-                    .iter()
-                    .position(|&c| self.alphabet.value_of(c).is_none())
-                    .map(|p| from + p)
-                    .expect("flagged group contains an invalid byte");
-                return Err(DecodeError::InvalidByte { offset: off, byte: body[off] });
-            }
-            consumed
-        };
-        #[cfg(not(target_arch = "x86_64"))]
-        let consumed = 0;
+        let body_out = body.len() / 4 * 3;
+        let consumed = self.decode_bulk(body, &mut out[..body_out])?;
+        let mut w = consumed / 4 * 3;
         // Scalar remainder + tail.
-        let rest = &body[consumed..];
-        for (q, quad) in rest.chunks_exact(4).enumerate() {
-            let mut vals = [0u8; 4];
-            for i in 0..4 {
-                let c = quad[i];
-                match self.alphabet.value_of(c) {
-                    Some(v) => vals[i] = v,
-                    None => {
-                        out.truncate(start);
-                        return Err(DecodeError::InvalidByte {
-                            offset: consumed + q * 4 + i,
-                            byte: c,
-                        });
-                    }
-                }
-            }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
-        }
-        decode_tail(tail, self.alphabet.pad(), self.mode, body.len(), |c| self.alphabet.value_of(c), out)?;
-        Ok(out.len() - start)
+        w += decode_quads_into(
+            &body[consumed..],
+            self.alphabet.decode_table().as_bytes(),
+            consumed,
+            &mut out[w..body_out],
+        )?;
+        let t = decode_tail_into(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            &mut out[w..],
+        )?;
+        Ok(w + t)
     }
 }
 

@@ -23,7 +23,9 @@
 use std::arch::x86_64::*;
 
 use super::block::BlockCodec;
-use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::validate::{
+    decode_quads_into, decode_tail_into, first_invalid, split_tail, DecodeError, Mode,
+};
 use super::{encoded_len, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 
 /// The paper's §3 algorithm on real 512-bit registers.
@@ -175,91 +177,97 @@ pub mod kernels {
     }
 }
 
-impl Codec for Avx512Codec {
-    fn name(&self) -> &'static str {
-        "avx512"
-    }
-
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
-        let start = out.len();
-        out.reserve(encoded_len(input.len()));
+impl Avx512Codec {
+    /// Bulk slice core: encode whole 48-byte blocks into `out[0..]` with
+    /// the §3.1 instruction sequence, returning the bytes consumed.
+    pub(crate) fn encode_bulk(&self, input: &[u8], out: &mut [u8]) -> usize {
         let blocks_len = input.len() / RAW_BLOCK * RAW_BLOCK;
         #[cfg(target_arch = "x86_64")]
         {
-            let out_len = out.len();
-            out.resize(out_len + blocks_len / RAW_BLOCK * B64_BLOCK, 0);
             // SAFETY: availability asserted at construction; slices sized
-            // to whole blocks just above.
+            // to whole blocks.
             unsafe {
                 kernels::encode_blocks(
                     &input[..blocks_len],
-                    &mut out[out_len..],
+                    &mut out[..blocks_len / RAW_BLOCK * B64_BLOCK],
                     self.alphabet.encode_table().as_bytes(),
                 );
             }
         }
         #[cfg(not(target_arch = "x86_64"))]
         {
-            self.scalar_twin.encode_full_blocks(&input[..blocks_len], out);
+            self.scalar_twin.encode_bulk(&input[..blocks_len], out);
         }
-        // Scalar epilogue for the remainder (paper §3.1).
-        self.scalar_twin.encode_into(&input[blocks_len..], out);
-        out.len() - start
+        blocks_len
     }
 
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
-        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
-        let start = out.len();
+    /// Bulk slice core: decode whole 64-char blocks into `out[0..]` with
+    /// the deferred error accumulator (one `vpmovb2m` per stream),
+    /// returning the chars consumed. On failure the input is re-scanned
+    /// for the exact offending byte (cold path).
+    pub(crate) fn decode_bulk(&self, body: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
         let blocks_len = body.len() / B64_BLOCK * B64_BLOCK;
         #[cfg(target_arch = "x86_64")]
         let err_mask = {
-            let out_len = out.len();
-            out.resize(out_len + blocks_len / B64_BLOCK * RAW_BLOCK, 0);
-            // SAFETY: see encode_into.
+            // SAFETY: see encode_bulk.
             unsafe {
                 kernels::decode_blocks(
                     &body[..blocks_len],
-                    &mut out[out_len..],
+                    &mut out[..blocks_len / B64_BLOCK * RAW_BLOCK],
                     self.alphabet.decode_table().as_bytes(),
                 )
             }
         };
         #[cfg(not(target_arch = "x86_64"))]
         let err_mask: u64 = {
-            self.scalar_twin.decode_full_blocks(&body[..blocks_len], out)?;
+            self.scalar_twin.decode_bulk(&body[..blocks_len], out)?;
             0
         };
         if err_mask != 0 {
             // Deferred check fired: re-scan for the exact byte (cold).
-            out.truncate(start);
-            let bad = body[..blocks_len]
-                .iter()
-                .position(|&c| self.alphabet.value_of(c).is_none())
+            let bad = first_invalid(&body[..blocks_len], self.alphabet.decode_table().as_bytes())
                 .expect("vpmovb2m mask set implies an invalid byte");
             return Err(DecodeError::InvalidByte { offset: bad, byte: body[bad] });
         }
+        Ok(blocks_len)
+    }
+}
+
+impl Codec for Avx512Codec {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let consumed = self.encode_bulk(input, out);
+        let w = consumed / 3 * 4;
+        // Scalar epilogue for the remainder (paper §3.1).
+        self.scalar_twin.encode_slice(&input[consumed..], &mut out[w..]);
+        total
+    }
+
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let consumed = self.decode_bulk(body, out)?;
+        let mut w = consumed / 4 * 3;
         // Sub-block remainder + padded tail: scalar path.
-        let rest = &body[blocks_len..];
-        for (q, quad) in rest.chunks_exact(4).enumerate() {
-            let mut vals = [0u8; 4];
-            for i in 0..4 {
-                let c = quad[i];
-                match self.alphabet.value_of(c) {
-                    Some(v) => vals[i] = v,
-                    None => {
-                        return Err(DecodeError::InvalidByte {
-                            offset: blocks_len + q * 4 + i,
-                            byte: c,
-                        })
-                    }
-                }
-            }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
-        }
-        decode_tail(tail, self.alphabet.pad(), self.mode, body.len(), |c| self.alphabet.value_of(c), out)?;
-        Ok(out.len() - start)
+        w += decode_quads_into(
+            &body[consumed..],
+            self.alphabet.decode_table().as_bytes(),
+            consumed,
+            &mut out[w..],
+        )?;
+        let t = decode_tail_into(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            &mut out[w..],
+        )?;
+        Ok(w + t)
     }
 }
 

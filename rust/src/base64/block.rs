@@ -18,7 +18,9 @@
 //! register; here each stage is a 16-iteration lane loop the compiler
 //! auto-vectorizes over the host's widest registers.
 
-use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::validate::{
+    decode_quads_into, decode_tail_into, first_invalid, split_tail, DecodeError, Mode,
+};
 use super::{encoded_len, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 
 /// SIMD instructions per encoded 64-byte register in the paper (§3.1):
@@ -111,57 +113,79 @@ impl BlockCodec {
         *err |= acc;
     }
 
-    /// Encode all whole 48-byte blocks of `input`, returning the number of
-    /// raw bytes consumed. The remainder (< 48 bytes) is the caller's
-    /// scalar epilogue.
-    pub fn encode_full_blocks(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
-        let mut consumed = 0;
-        let start = out.len();
+    /// Bulk slice core: encode all whole 48-byte blocks of `input` into
+    /// `out[0..]` (64 chars per block), returning the raw bytes consumed.
+    /// The remainder (< 48 bytes) is the caller's scalar epilogue.
+    pub(crate) fn encode_bulk(&self, input: &[u8], out: &mut [u8]) -> usize {
         let blocks = input.len() / RAW_BLOCK;
-        out.resize(start + blocks * B64_BLOCK, 0);
-        let out_slice = &mut out[start..];
         for b in 0..blocks {
             let inp: &[u8; RAW_BLOCK] =
                 input[b * RAW_BLOCK..(b + 1) * RAW_BLOCK].try_into().unwrap();
             let dst: &mut [u8; B64_BLOCK] =
-                (&mut out_slice[b * B64_BLOCK..(b + 1) * B64_BLOCK]).try_into().unwrap();
+                (&mut out[b * B64_BLOCK..(b + 1) * B64_BLOCK]).try_into().unwrap();
             self.encode_block(inp, dst);
-            consumed += RAW_BLOCK;
         }
-        consumed
+        blocks * RAW_BLOCK
     }
 
-    /// Decode all whole 64-char blocks, with deferred validation: the
+    /// Bulk slice core: decode all whole 64-char blocks of `body` into
+    /// `out[0..]` (48 bytes per block) with deferred validation — the
     /// error accumulator is checked once at the end (the paper's
     /// `vpmovb2m` + branch per *stream*, not per block). On failure the
-    /// input is re-scanned to report the exact offending byte.
+    /// input is re-scanned to report the exact offending byte. Returns
+    /// the chars consumed.
+    pub(crate) fn decode_bulk(&self, body: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        let blocks = body.len() / B64_BLOCK;
+        let mut err = 0u8;
+        for b in 0..blocks {
+            let inp: &[u8; B64_BLOCK] =
+                body[b * B64_BLOCK..(b + 1) * B64_BLOCK].try_into().unwrap();
+            let dst: &mut [u8; RAW_BLOCK] =
+                (&mut out[b * RAW_BLOCK..(b + 1) * RAW_BLOCK]).try_into().unwrap();
+            self.decode_block(inp, dst, &mut err);
+        }
+        // -- vpmovb2m + branch, once per stream.
+        if err & 0x80 != 0 {
+            let bad = first_invalid(&body[..blocks * B64_BLOCK], &self.dtable256_low())
+                .expect("error accumulator set implies an invalid byte");
+            return Err(DecodeError::InvalidByte { offset: bad, byte: body[bad] });
+        }
+        Ok(blocks * B64_BLOCK)
+    }
+
+    /// The low 128 entries of the folded decode table (the `vpermi2b`
+    /// register pair), for the shared validation helpers.
+    fn dtable256_low(&self) -> [u8; 128] {
+        self.dtable256[..128].try_into().unwrap()
+    }
+
+    /// Encode all whole 48-byte blocks of `input`, appending to `out` and
+    /// returning the number of raw bytes consumed (Vec wrapper over
+    /// [`Self::encode_bulk`]).
+    pub fn encode_full_blocks(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        let blocks = input.len() / RAW_BLOCK;
+        out.resize(start + blocks * B64_BLOCK, 0);
+        self.encode_bulk(input, &mut out[start..])
+    }
+
+    /// Decode all whole 64-char blocks, appending to `out` (Vec wrapper
+    /// over [`Self::decode_bulk`]; `out` is restored on error).
     pub fn decode_full_blocks(
         &self,
         input: &[u8],
         out: &mut Vec<u8>,
     ) -> Result<usize, DecodeError> {
-        let blocks = input.len() / B64_BLOCK;
         let start = out.len();
+        let blocks = input.len() / B64_BLOCK;
         out.resize(start + blocks * RAW_BLOCK, 0);
-        let out_slice = &mut out[start..];
-        let mut err = 0u8;
-        for b in 0..blocks {
-            let inp: &[u8; B64_BLOCK] =
-                input[b * B64_BLOCK..(b + 1) * B64_BLOCK].try_into().unwrap();
-            let dst: &mut [u8; RAW_BLOCK] =
-                (&mut out_slice[b * RAW_BLOCK..(b + 1) * RAW_BLOCK]).try_into().unwrap();
-            self.decode_block(inp, dst, &mut err);
+        match self.decode_bulk(input, &mut out[start..]) {
+            Ok(consumed) => Ok(consumed),
+            Err(e) => {
+                out.truncate(start);
+                Err(e)
+            }
         }
-        // -- vpmovb2m + branch, once per stream.
-        if err & 0x80 != 0 {
-            out.truncate(start);
-            let bad = input[..blocks * B64_BLOCK]
-                .iter()
-                .position(|&c| self.alphabet.value_of(c).is_none())
-                .expect("error accumulator set implies an invalid byte");
-            return Err(DecodeError::InvalidByte { offset: bad, byte: input[bad] });
-        }
-        Ok(blocks * B64_BLOCK)
     }
 }
 
@@ -170,69 +194,65 @@ impl Codec for BlockCodec {
         "block"
     }
 
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
-        let start = out.len();
-        out.reserve(encoded_len(input.len()));
-        let consumed = self.encode_full_blocks(input, out);
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let consumed = self.encode_bulk(input, out);
+        let mut w = consumed / 3 * 4;
         // Scalar epilogue for the sub-block remainder (paper §3.1).
         let table = self.alphabet.encode_table();
         let pad = self.alphabet.pad();
         let mut chunks = input[consumed..].chunks_exact(3);
         for chunk in &mut chunks {
             let (s1, s2, s3) = (chunk[0], chunk[1], chunk[2]);
-            out.push(table.lookup(s1 >> 2));
-            out.push(table.lookup((s1 << 4) | (s2 >> 4)));
-            out.push(table.lookup((s2 << 2) | (s3 >> 6)));
-            out.push(table.lookup(s3));
+            out[w] = table.lookup(s1 >> 2);
+            out[w + 1] = table.lookup((s1 << 4) | (s2 >> 4));
+            out[w + 2] = table.lookup((s2 << 2) | (s3 >> 6));
+            out[w + 3] = table.lookup(s3);
+            w += 4;
         }
         match chunks.remainder() {
             [] => {}
             [s1] => {
-                out.push(table.lookup(s1 >> 2));
-                out.push(table.lookup(s1 << 4));
-                out.push(pad);
-                out.push(pad);
+                out[w] = table.lookup(s1 >> 2);
+                out[w + 1] = table.lookup(s1 << 4);
+                out[w + 2] = pad;
+                out[w + 3] = pad;
+                w += 4;
             }
             [s1, s2] => {
-                out.push(table.lookup(s1 >> 2));
-                out.push(table.lookup((s1 << 4) | (s2 >> 4)));
-                out.push(table.lookup(s2 << 2));
-                out.push(pad);
+                out[w] = table.lookup(s1 >> 2);
+                out[w + 1] = table.lookup((s1 << 4) | (s2 >> 4));
+                out[w + 2] = table.lookup(s2 << 2);
+                out[w + 3] = pad;
+                w += 4;
             }
             _ => unreachable!(),
         }
-        out.len() - start
+        debug_assert_eq!(w, total);
+        w
     }
 
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
         let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
-        let start = out.len();
-        let consumed = self.decode_full_blocks(body, out)?;
+        let consumed = self.decode_bulk(body, out)?;
+        let mut w = consumed / 4 * 3;
         // Sub-block remainder: quantum-at-a-time scalar path.
-        let rest = &body[consumed..];
-        for (q, quad) in rest.chunks_exact(4).enumerate() {
-            let mut vals = [0u8; 4];
-            for i in 0..4 {
-                let c = quad[i];
-                let v = self.alphabet.decode_table().lookup(c);
-                if (c | v) & 0x80 != 0 {
-                    return Err(DecodeError::InvalidByte { offset: consumed + q * 4 + i, byte: c });
-                }
-                vals[i] = v;
-            }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
-        }
-        decode_tail(
+        w += decode_quads_into(
+            &body[consumed..],
+            &self.dtable256_low(),
+            consumed,
+            &mut out[w..],
+        )?;
+        let t = decode_tail_into(
             tail,
             self.alphabet.pad(),
             self.mode,
             body.len(),
             |c| self.alphabet.value_of(c),
-            out,
+            &mut out[w..],
         )?;
-        Ok(out.len() - start)
+        Ok(w + t)
     }
 }
 

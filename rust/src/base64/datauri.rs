@@ -1,7 +1,7 @@
 //! `data:` URI handling — the web workload behind Table 3's Google-logo
 //! row (a base64 data URI embedded in the Google search page).
 
-use super::block::BlockCodec;
+use super::engine::Engine;
 use super::validate::DecodeError;
 use super::{Alphabet, Codec};
 
@@ -42,7 +42,7 @@ impl std::error::Error for DataUriError {}
 
 /// Build a `data:` URI: `data:<mime>;base64,<payload>`.
 pub fn build(mime_type: &str, data: &[u8], alphabet: &Alphabet) -> String {
-    let codec = BlockCodec::new(alphabet.clone());
+    let codec = Engine::new(alphabet.clone());
     let payload = codec.encode(data);
     let mut out = String::with_capacity(5 + mime_type.len() + 8 + payload.len());
     out.push_str("data:");
@@ -65,7 +65,7 @@ pub fn parse(uri: &str, alphabet: &Alphabet) -> Result<DataUri, DataUriError> {
     if !header.split(';').any(|p| p == "base64") {
         return Err(DataUriError::NotBase64);
     }
-    let codec = BlockCodec::new(alphabet.clone());
+    let codec = Engine::new(alphabet.clone());
     let data = codec
         .decode(payload.as_bytes())
         .map_err(DataUriError::Decode)?;

@@ -1,0 +1,633 @@
+//! Zero-allocation engine with tiered runtime dispatch — the facade the
+//! rest of the system encodes and decodes through.
+//!
+//! The paper's headline claim (base64 at almost the speed of `memcpy`)
+//! only survives if the surrounding code adds no memory traffic of its
+//! own. This module removes the two hot-path taxes the `Vec`-returning
+//! codec API carried:
+//!
+//! * **allocation** — [`Engine::encode_slice`] / [`Engine::decode_slice`]
+//!   write into caller-provided buffers and never touch the heap
+//!   (asserted by the counting-allocator test in `rust/tests/alloc.rs`);
+//! * **dynamic dispatch** — CPU feature detection runs exactly once
+//!   (cached in a [`OnceLock`]) and the chosen tier's kernels are held as
+//!   plain function pointers, not `Box<dyn Codec>` vtables.
+//!
+//! ## Tier selection
+//!
+//! Detection order, best first (the middle tiers are the ones both Muła &
+//! Lemire papers treat as essential):
+//!
+//! 1. [`Tier::Avx512`] — `avx512f + avx512bw + avx512vbmi`: the paper's
+//!    §3 instruction sequence ([`Avx512Codec`]);
+//! 2. [`Tier::Avx2`] — the 2018 AVX2 codec ([`Avx2Codec`]); only used
+//!    for alphabets with the 2018 range structure (base64url falls
+//!    through to SWAR — exactly the versatility gap §5 describes);
+//! 3. [`Tier::Swar`] — the wide-table u32 codec ([`SwarCodec`]);
+//! 4. [`Tier::Scalar`] — the scalar block codec ([`BlockCodec`]), the
+//!    portable floor (forced only; SWAR beats it everywhere).
+//!
+//! Set `B64SIMD_TIER=avx512|avx2|swar|scalar` to force a tier (clamped
+//! to what the host supports), or construct one explicitly with
+//! [`Engine::with_tier`].
+//!
+//! ## Parallel path
+//!
+//! For payloads larger than a core's L2 a single stream is memory-bound;
+//! base64 is embarrassingly parallel on 48/64-byte boundaries, so
+//! [`Engine::encode_par`] / [`Engine::decode_par`] split the input on
+//! block boundaries across scoped threads and push aggregate throughput
+//! past a single core's memcpy ceiling.
+
+use std::sync::OnceLock;
+
+use super::avx2::Avx2Codec;
+use super::avx512::Avx512Codec;
+use super::block::BlockCodec;
+use super::swar::SwarCodec;
+use super::validate::{decode_quads_into, decode_tail_into, split_tail};
+use super::{decoded_len, encoded_len, Alphabet, Codec, DecodeError, Mode, B64_BLOCK, RAW_BLOCK};
+
+/// Inputs below this many bytes stay single-threaded in the `_par` paths
+/// (roughly an L2 capacity: smaller payloads are compute- or
+/// cache-resident and forking threads only adds latency).
+pub const PAR_THRESHOLD: usize = 1 << 20;
+
+/// One of the engine's dispatch tiers, best first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// The paper's §3 AVX-512 VBMI instruction sequence.
+    Avx512,
+    /// The 2018 AVX2 codec (standard-structure alphabets only).
+    Avx2,
+    /// Wide-table SWAR on plain u32/u64 registers.
+    Swar,
+    /// The scalar block codec — the portable floor.
+    Scalar,
+}
+
+impl Tier {
+    /// Benchmark/series label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx512 => "avx512",
+            Tier::Avx2 => "avx2",
+            Tier::Swar => "swar",
+            Tier::Scalar => "scalar",
+        }
+    }
+
+    /// Parse a tier name (the `B64SIMD_TIER` env values).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "avx512" => Some(Tier::Avx512),
+            "avx2" => Some(Tier::Avx2),
+            "swar" => Some(Tier::Swar),
+            "scalar" | "block" => Some(Tier::Scalar),
+            _ => None,
+        }
+    }
+
+    /// True iff the host CPU can run this tier.
+    pub fn available(self) -> bool {
+        match self {
+            Tier::Avx512 => Avx512Codec::available(),
+            Tier::Avx2 => Avx2Codec::available(),
+            Tier::Swar | Tier::Scalar => true,
+        }
+    }
+
+    /// Every tier the host supports, best first.
+    pub fn supported() -> Vec<Tier> {
+        [Tier::Avx512, Tier::Avx2, Tier::Swar, Tier::Scalar]
+            .into_iter()
+            .filter(|t| t.available())
+            .collect()
+    }
+
+    /// The next tier down the ladder (used to clamp forced tiers).
+    fn fallback(self) -> Tier {
+        match self {
+            Tier::Avx512 => Tier::Avx2,
+            Tier::Avx2 => Tier::Swar,
+            Tier::Swar | Tier::Scalar => Tier::Scalar,
+        }
+    }
+
+    /// Clamp to host capability: walk down until a tier is available.
+    fn clamp(mut self) -> Tier {
+        while !self.available() {
+            self = self.fallback();
+        }
+        self
+    }
+}
+
+/// One-time tier detection: CPUID probes (plus the `B64SIMD_TIER`
+/// override) run on first call, the answer is cached for the process.
+pub fn detected_tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        if let Ok(forced) = std::env::var("B64SIMD_TIER") {
+            if let Some(t) = Tier::parse(&forced) {
+                return t.clamp();
+            }
+            eprintln!("b64simd: ignoring unknown B64SIMD_TIER value '{forced}'");
+        }
+        if Avx512Codec::available() {
+            Tier::Avx512
+        } else if Avx2Codec::available() {
+            Tier::Avx2
+        } else {
+            Tier::Swar
+        }
+    })
+}
+
+/// The tier kernels as plain function pointers — the flat facade that
+/// replaces `Box<dyn Codec>` dispatch on the hot path. Both pointers
+/// follow the bulk contract: consume a whole-granule prefix of the
+/// input, write its exact output at `out[0..]`, return bytes consumed.
+#[derive(Clone, Copy)]
+struct Kernels {
+    encode_bulk: fn(&Engine, &[u8], &mut [u8]) -> usize,
+    decode_bulk: fn(&Engine, &[u8], &mut [u8]) -> Result<usize, DecodeError>,
+}
+
+fn enc_avx512(e: &Engine, input: &[u8], out: &mut [u8]) -> usize {
+    e.avx512.as_ref().expect("avx512 tier state").encode_bulk(input, out)
+}
+
+fn dec_avx512(e: &Engine, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+    e.avx512.as_ref().expect("avx512 tier state").decode_bulk(input, out)
+}
+
+fn enc_avx2(e: &Engine, input: &[u8], out: &mut [u8]) -> usize {
+    e.avx2.as_ref().expect("avx2 tier state").encode_bulk(input, out)
+}
+
+fn dec_avx2(e: &Engine, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+    e.avx2.as_ref().expect("avx2 tier state").decode_bulk(input, out)
+}
+
+fn enc_swar(e: &Engine, input: &[u8], out: &mut [u8]) -> usize {
+    e.swar.as_ref().expect("swar tier state").encode_bulk(input, out)
+}
+
+fn dec_swar(e: &Engine, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+    e.swar.as_ref().expect("swar tier state").decode_bulk(input, out)
+}
+
+fn enc_scalar(e: &Engine, input: &[u8], out: &mut [u8]) -> usize {
+    e.block.encode_bulk(input, out)
+}
+
+fn dec_scalar(e: &Engine, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+    e.block.decode_bulk(input, out)
+}
+
+fn kernels_for(tier: Tier) -> Kernels {
+    match tier {
+        Tier::Avx512 => Kernels { encode_bulk: enc_avx512, decode_bulk: dec_avx512 },
+        Tier::Avx2 => Kernels { encode_bulk: enc_avx2, decode_bulk: dec_avx2 },
+        Tier::Swar => Kernels { encode_bulk: enc_swar, decode_bulk: dec_swar },
+        Tier::Scalar => Kernels { encode_bulk: enc_scalar, decode_bulk: dec_scalar },
+    }
+}
+
+/// The allocation-free, tier-dispatched codec facade.
+pub struct Engine {
+    alphabet: Alphabet,
+    mode: Mode,
+    tier: Tier,
+    kernels: Kernels,
+    /// Scalar block codec: the epilogue/tail path of every tier and the
+    /// bulk path of [`Tier::Scalar`].
+    block: BlockCodec,
+    swar: Option<SwarCodec>,
+    avx2: Option<Avx2Codec>,
+    avx512: Option<Avx512Codec>,
+}
+
+impl Engine {
+    /// The process-wide engine: standard alphabet, strict mode, best
+    /// tier. Detection and table construction run exactly once.
+    pub fn get() -> &'static Engine {
+        static ENGINE: OnceLock<Engine> = OnceLock::new();
+        ENGINE.get_or_init(|| Engine::new(Alphabet::standard()))
+    }
+
+    /// Engine for an alphabet at the host's best tier, strict mode.
+    pub fn new(alphabet: Alphabet) -> Engine {
+        Self::with_tier_mode(alphabet, Mode::Strict, detected_tier())
+    }
+
+    /// Engine with an explicit strictness mode.
+    pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Engine {
+        Self::with_tier_mode(alphabet, mode, detected_tier())
+    }
+
+    /// Engine pinned to a tier (clamped to host capability — forcing
+    /// `avx512` on a host without VBMI falls down the ladder).
+    pub fn with_tier(alphabet: Alphabet, tier: Tier) -> Engine {
+        Self::with_tier_mode(alphabet, Mode::Strict, tier)
+    }
+
+    /// Full constructor: alphabet + mode + tier.
+    pub fn with_tier_mode(alphabet: Alphabet, mode: Mode, tier: Tier) -> Engine {
+        let mut tier = tier.clamp();
+        // The 2018 AVX2 range arithmetic only fits range-structured
+        // alphabets; fall through to SWAR otherwise (paper §5).
+        if tier == Tier::Avx2 && !Avx2Codec::supports(&alphabet) {
+            tier = Tier::Swar;
+        }
+        let block = BlockCodec::with_mode(alphabet.clone(), mode);
+        let swar = matches!(tier, Tier::Swar)
+            .then(|| SwarCodec::with_mode(alphabet.clone(), mode));
+        let avx2 = matches!(tier, Tier::Avx2)
+            .then(|| Avx2Codec::with_mode(alphabet.clone(), mode));
+        let avx512 = matches!(tier, Tier::Avx512)
+            .then(|| Avx512Codec::with_mode(alphabet.clone(), mode));
+        Engine {
+            kernels: kernels_for(tier),
+            alphabet,
+            mode,
+            tier,
+            block,
+            swar,
+            avx2,
+            avx512,
+        }
+    }
+
+    /// The tier this engine dispatches to.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    pub fn alphabet(&self) -> &Alphabet {
+        &self.alphabet
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Exact output size of [`Self::encode_slice`] for `n` input bytes.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        encoded_len(n)
+    }
+
+    /// Exact output size of [`Self::decode_slice`] for this input
+    /// (counts trailing padding; does not validate).
+    pub fn decoded_len_of(&self, input: &[u8]) -> usize {
+        let pad = self.alphabet.pad();
+        let pads = input.iter().rev().take(2).take_while(|&&c| c == pad).count();
+        decoded_len(input.len(), pads)
+    }
+
+    /// Encode `input` into `out[0..]`, returning the bytes written
+    /// (always `encoded_len(input.len())`). Never allocates; panics if
+    /// `out` is too small.
+    #[inline]
+    pub fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let out = &mut out[..total];
+        let consumed = (self.kernels.encode_bulk)(self, input, out);
+        let w = consumed / 3 * 4;
+        // Epilogue: the paper's conventional path for the sub-granule
+        // remainder and the padded final quantum.
+        self.block.encode_slice(&input[consumed..], &mut out[w..]);
+        total
+    }
+
+    /// Decode `input` into `out[0..]`, returning the bytes written.
+    /// `out` must hold `decoded_len_of(input)` bytes (or the
+    /// `decoded_len_upper` bound). Never allocates; on error the
+    /// contents of `out` are unspecified.
+    #[inline]
+    pub fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let body_out = body.len() / 4 * 3;
+        assert!(out.len() >= body_out, "output buffer too small");
+        let consumed = (self.kernels.decode_bulk)(self, body, &mut out[..body_out])?;
+        let mut w = consumed / 4 * 3;
+        w += decode_quads_into(
+            &body[consumed..],
+            self.alphabet.decode_table().as_bytes(),
+            consumed,
+            &mut out[w..body_out],
+        )?;
+        let t = decode_tail_into(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            &mut out[w..],
+        )?;
+        Ok(w + t)
+    }
+
+    /// Chunked multi-threaded encode for large payloads: splits the
+    /// input on 48-byte block boundaries across `threads` scoped threads
+    /// (0 = one per available core, capped at 8). Falls back to the
+    /// single-threaded path below [`PAR_THRESHOLD`]. Output is
+    /// byte-identical to [`Self::encode_slice`].
+    pub fn encode_par(&self, input: &[u8], out: &mut [u8], threads: usize) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let threads = effective_threads(threads);
+        if threads < 2 || input.len() < PAR_THRESHOLD {
+            return self.encode_slice(input, out);
+        }
+        let blocks = input.len() / RAW_BLOCK;
+        let span = blocks.div_ceil(threads) * RAW_BLOCK; // raw bytes per thread
+        let bulk = blocks * RAW_BLOCK;
+        let (bulk_in, tail_in) = input.split_at(bulk);
+        let (bulk_out, tail_out) = out[..total].split_at_mut(bulk / 3 * 4);
+        std::thread::scope(|s| {
+            let mut rest_in = bulk_in;
+            let mut rest_out = &mut bulk_out[..];
+            while !rest_in.is_empty() {
+                let n = span.min(rest_in.len());
+                let (chunk_in, next_in) = rest_in.split_at(n);
+                let (chunk_out, next_out) = std::mem::take(&mut rest_out).split_at_mut(n / 3 * 4);
+                rest_in = next_in;
+                rest_out = next_out;
+                // Whole-block spans encode with no padding, so the
+                // per-span outputs concatenate exactly.
+                s.spawn(move || self.encode_slice(chunk_in, chunk_out));
+            }
+        });
+        // The sub-block remainder (with padding) runs on this thread.
+        self.block.encode_slice(tail_in, tail_out);
+        total
+    }
+
+    /// Chunked multi-threaded decode: splits the whole-quantum body on
+    /// 64-char block boundaries across scoped threads; the sub-block
+    /// remainder and padded tail decode on the calling thread. Output
+    /// and error reporting are byte-identical to [`Self::decode_slice`]
+    /// except that when *multiple* spans contain invalid bytes the
+    /// reported offset is the smallest among the failing spans' first
+    /// errors (still always a genuinely invalid byte).
+    pub fn decode_par(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        threads: usize,
+    ) -> Result<usize, DecodeError> {
+        let threads = effective_threads(threads);
+        if threads < 2 || input.len() < PAR_THRESHOLD {
+            return self.decode_slice(input, out);
+        }
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        let body_out = body.len() / 4 * 3;
+        assert!(out.len() >= body_out, "output buffer too small");
+        let blocks = body.len() / B64_BLOCK;
+        let span = blocks.div_ceil(threads) * B64_BLOCK; // chars per thread
+        let bulk = blocks * B64_BLOCK;
+        let first_err = std::sync::Mutex::new(None::<DecodeError>);
+        std::thread::scope(|s| {
+            let mut rest_in = &body[..bulk];
+            let mut rest_out = &mut out[..bulk / 4 * 3];
+            let mut base = 0usize;
+            while !rest_in.is_empty() {
+                let n = span.min(rest_in.len());
+                let (chunk_in, next_in) = rest_in.split_at(n);
+                let (chunk_out, next_out) = std::mem::take(&mut rest_out).split_at_mut(n / 4 * 3);
+                rest_in = next_in;
+                rest_out = next_out;
+                let first_err = &first_err;
+                let chunk_base = base;
+                base += n;
+                s.spawn(move || {
+                    if let Err(e) = self.decode_span(chunk_in, chunk_out, chunk_base) {
+                        let mut slot = first_err.lock().unwrap();
+                        let replace = match (&*slot, &e) {
+                            (None, _) => true,
+                            (
+                                Some(DecodeError::InvalidByte { offset: prev, .. }),
+                                DecodeError::InvalidByte { offset: new, .. },
+                            ) => new < prev,
+                            _ => false,
+                        };
+                        if replace {
+                            *slot = Some(e);
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        // Sub-block remainder + tail on the calling thread.
+        let mut w = bulk / 4 * 3;
+        w += decode_quads_into(
+            &body[bulk..],
+            self.alphabet.decode_table().as_bytes(),
+            bulk,
+            &mut out[w..body_out],
+        )?;
+        let t = decode_tail_into(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            body.len(),
+            |c| self.alphabet.value_of(c),
+            &mut out[w..],
+        )?;
+        Ok(w + t)
+    }
+
+    /// Decode one whole-quantum span (no padding) with offsets rebased
+    /// to the original input.
+    fn decode_span(&self, span: &[u8], out: &mut [u8], base: usize) -> Result<(), DecodeError> {
+        let consumed = (self.kernels.decode_bulk)(self, span, out).map_err(|e| rebase(e, base))?;
+        let w = consumed / 4 * 3;
+        decode_quads_into(
+            &span[consumed..],
+            self.alphabet.decode_table().as_bytes(),
+            base + consumed,
+            &mut out[w..],
+        )?;
+        Ok(())
+    }
+}
+
+fn rebase(e: DecodeError, base: usize) -> DecodeError {
+    match e {
+        DecodeError::InvalidByte { offset, byte } => {
+            DecodeError::InvalidByte { offset: base + offset, byte }
+        }
+        other => other,
+    }
+}
+
+fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    }
+}
+
+impl Codec for Engine {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        Engine::encode_slice(self, input, out)
+    }
+
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        Engine::decode_slice(self, input, out)
+    }
+
+    fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
+        // Exact-size allocation via the padding-aware length helper. The
+        // helper over-counts for degenerate forgiving-mode inputs (3+
+        // trailing pads), so trim to what was actually written.
+        let mut out = vec![0u8; self.decoded_len_of(input)];
+        let n = Engine::decode_slice(self, input, &mut out)?;
+        out.truncate(n);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::scalar::ScalarCodec;
+    use crate::workload::random_bytes;
+
+    #[test]
+    fn tier_ladder_clamps_to_host() {
+        for t in [Tier::Avx512, Tier::Avx2, Tier::Swar, Tier::Scalar] {
+            assert!(t.clamp().available());
+        }
+        assert_eq!(Tier::Scalar.clamp(), Tier::Scalar);
+        assert!(Tier::supported().contains(&Tier::Swar));
+        assert!(Tier::supported().contains(&Tier::Scalar));
+    }
+
+    #[test]
+    fn tier_parse_names() {
+        assert_eq!(Tier::parse("avx512"), Some(Tier::Avx512));
+        assert_eq!(Tier::parse("swar"), Some(Tier::Swar));
+        assert_eq!(Tier::parse("block"), Some(Tier::Scalar));
+        assert_eq!(Tier::parse("mmx"), None);
+    }
+
+    #[test]
+    fn get_is_cached_and_usable() {
+        let e1 = Engine::get();
+        let e2 = Engine::get();
+        assert!(std::ptr::eq(e1, e2), "Engine::get must cache");
+        assert_eq!(e1.tier(), detected_tier());
+        let mut out = [0u8; 8];
+        assert_eq!(e1.encode_slice(b"foobar", &mut out), 8);
+        assert_eq!(&out, b"Zm9vYmFy");
+    }
+
+    #[test]
+    fn slice_roundtrip_every_supported_tier() {
+        let oracle = ScalarCodec::new(Alphabet::standard());
+        for tier in Tier::supported() {
+            let e = Engine::with_tier(Alphabet::standard(), tier);
+            assert_eq!(e.tier(), tier);
+            for len in [0usize, 1, 2, 3, 23, 24, 47, 48, 49, 200, 1000] {
+                let data = random_bytes(len, len as u64);
+                let mut enc = vec![0u8; e.encoded_len(len)];
+                let n = e.encode_slice(&data, &mut enc);
+                assert_eq!(&enc[..n], &oracle.encode(&data)[..], "{tier:?} len={len}");
+                let mut dec = vec![0u8; e.decoded_len_of(&enc[..n])];
+                let m = e.decode_slice(&enc[..n], &mut dec).unwrap();
+                assert_eq!(&dec[..m], &data[..], "{tier:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn url_alphabet_on_avx2_tier_falls_back() {
+        if !Tier::Avx2.available() {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        let e = Engine::with_tier(Alphabet::url(), Tier::Avx2);
+        assert_eq!(e.tier(), Tier::Swar, "url lacks the 2018 range structure");
+        let data = random_bytes(100, 9);
+        assert_eq!(e.decode(&e.encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn decode_errors_match_scalar_offsets() {
+        let oracle = ScalarCodec::new(Alphabet::standard());
+        for tier in Tier::supported() {
+            let e = Engine::with_tier(Alphabet::standard(), tier);
+            let mut enc = e.encode(&random_bytes(300, 3));
+            for pos in [0usize, 63, 64, 250] {
+                let orig = enc[pos];
+                enc[pos] = b'!';
+                let want = oracle.decode(&enc).unwrap_err();
+                let mut out = vec![0u8; e.decoded_len_of(&enc)];
+                let got = e.decode_slice(&enc, &mut out).unwrap_err();
+                assert_eq!(got, want, "{tier:?} pos={pos}");
+                enc[pos] = orig;
+            }
+        }
+    }
+
+    #[test]
+    fn par_paths_match_serial() {
+        let e = Engine::get();
+        // Cross the PAR_THRESHOLD so the scoped-thread path actually runs.
+        let data = random_bytes(PAR_THRESHOLD + 12345, 7);
+        let mut serial = vec![0u8; e.encoded_len(data.len())];
+        let mut par = vec![0u8; e.encoded_len(data.len())];
+        e.encode_slice(&data, &mut serial);
+        let n = e.encode_par(&data, &mut par, 4);
+        assert_eq!(n, serial.len());
+        assert_eq!(par, serial);
+        let mut dec = vec![0u8; e.decoded_len_of(&par)];
+        let m = e.decode_par(&par, &mut dec, 4).unwrap();
+        assert_eq!(&dec[..m], &data[..]);
+    }
+
+    #[test]
+    fn par_decode_reports_errors() {
+        let e = Engine::get();
+        let data = random_bytes(PAR_THRESHOLD + 999, 11);
+        let mut enc = e.encode(&data);
+        let n = enc.len();
+        enc[n / 2] = 0x07;
+        let mut out = vec![0u8; e.decoded_len_of(&enc)];
+        match e.decode_par(&enc, &mut out, 4) {
+            Err(DecodeError::InvalidByte { offset, byte: 0x07 }) => assert_eq!(offset, n / 2),
+            other => panic!("expected invalid byte, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_vec_wrappers() {
+        let e = Engine::get();
+        assert_eq!(e.encode(b"foobar"), b"Zm9vYmFy");
+        assert_eq!(e.decode(b"Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(e.decode(b"Zg==").unwrap(), b"f");
+        assert!(e.decode(b"Zg=!").is_err());
+    }
+
+    #[test]
+    fn decoded_len_of_counts_padding() {
+        let e = Engine::get();
+        assert_eq!(e.decoded_len_of(b""), 0);
+        assert_eq!(e.decoded_len_of(b"Zg=="), 1);
+        assert_eq!(e.decoded_len_of(b"Zm8="), 2);
+        assert_eq!(e.decoded_len_of(b"Zm9v"), 3);
+        assert_eq!(e.decoded_len_of(b"Zm8"), 2); // forgiving unpadded
+    }
+}

@@ -2,10 +2,10 @@
 //!
 //! MIME requires encoded lines of at most 76 characters separated by CRLF,
 //! and decoders must ignore line breaks (and, leniently, other whitespace).
-//! The hot path is still the block codec; wrapping is a post-pass on
-//! encode and a strip-pass on decode, both chunk-friendly.
+//! The hot path is the tier-dispatched [`Engine`]; wrapping is a
+//! post-pass on encode and a strip-pass on decode, both chunk-friendly.
 
-use super::block::BlockCodec;
+use super::engine::Engine;
 use super::validate::{DecodeError, Mode};
 use super::{Alphabet, Codec};
 
@@ -15,7 +15,7 @@ pub const MIME_LINE_LEN: usize = 76;
 /// MIME base64 codec: wraps at `line_len`, strips CR/LF (and optionally
 /// all whitespace) on decode.
 pub struct MimeCodec {
-    inner: BlockCodec,
+    inner: Engine,
     line_len: usize,
     /// When true, decode also skips space/tab (lenient MIME bodies).
     skip_all_whitespace: bool,
@@ -24,7 +24,7 @@ pub struct MimeCodec {
 impl MimeCodec {
     pub fn new(alphabet: Alphabet) -> Self {
         Self {
-            inner: BlockCodec::with_mode(alphabet, Mode::Strict),
+            inner: Engine::with_mode(alphabet, Mode::Strict),
             line_len: MIME_LINE_LEN,
             skip_all_whitespace: false,
         }

@@ -7,17 +7,25 @@
 //! | [`block`] | the paper's AVX-512 dataflow in scalar Rust: reference twin of the Pallas kernel and the coordinator's tail path |
 //! | [`avx2`] | the 2018 AVX2 codec with real intrinsics — the paper's comparison baseline |
 //! | [`avx512`] | the paper's actual §3 algorithm with real AVX-512 VBMI intrinsics (runtime-detected) |
+//! | [`engine`] | zero-allocation facade: one-time tier detection (AVX-512 → AVX2 → SWAR → scalar block), cached function pointers, slice + parallel APIs |
 //! | [`alphabet`]/[`tables`] | runtime-swappable variants (paper §5) |
-//! | [`validate`] | RFC 4648 padding/strictness semantics |
+//! | [`validate`] | RFC 4648 padding/strictness semantics + the shared deferred-error re-scan helpers |
 //! | [`streaming`] | incremental encode/decode with carry state |
 //! | [`mime`] | RFC 2045 line-wrapped base64 |
 //! | [`datauri`] | `data:` URI encode/parse |
+//!
+//! The hot path everywhere is the *slice* API: [`Codec::encode_slice`] /
+//! [`Codec::decode_slice`] write into caller-provided buffers and never
+//! allocate. The `Vec`-returning methods are thin wrappers over those
+//! cores. [`engine::Engine`] picks the fastest core the host supports
+//! exactly once and exposes it behind plain function pointers.
 
 pub mod alphabet;
 pub mod avx2;
 pub mod avx512;
 pub mod block;
 pub mod datauri;
+pub mod engine;
 pub mod mime;
 pub mod scalar;
 pub mod streaming;
@@ -26,6 +34,7 @@ pub mod tables;
 pub mod validate;
 
 pub use alphabet::Alphabet;
+pub use engine::{Engine, Tier};
 pub use validate::{DecodeError, Mode};
 
 /// Number of raw bytes consumed per block-codec iteration (paper §3).
@@ -35,30 +44,66 @@ pub const B64_BLOCK: usize = 64;
 
 /// Common interface implemented by every codec in this crate, so the
 /// benchmarks and the coordinator can swap them freely.
+///
+/// The *required* methods are the allocation-free slice cores; the
+/// `Vec`-based conveniences are provided wrappers over them, so every
+/// codec has exactly one hot-path implementation.
 pub trait Codec {
     /// Name used in benchmark output (matches the paper's series labels).
     fn name(&self) -> &'static str;
 
-    /// Encode `input` to base64 with padding, appending to a fresh buffer.
+    /// Encode `input` to padded base64 into `out[0..]`, returning the
+    /// bytes written (always `encoded_len(input.len())`). Panics if `out`
+    /// is shorter than that. Never allocates.
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize;
+
+    /// Decode base64 into `out[0..]`, returning the bytes written.
+    /// `out` must hold at least `decoded_len_upper(input.len())` bytes
+    /// (use [`decoded_len`] for the exact count when the padding is
+    /// known). On error the contents of `out` are unspecified. Never
+    /// allocates.
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError>;
+
+    /// Encode `input` to base64 with padding, returning a fresh buffer.
     fn encode(&self, input: &[u8]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(encoded_len(input.len()));
-        self.encode_into(input, &mut out);
+        let mut out = vec![0u8; encoded_len(input.len())];
+        let n = self.encode_slice(input, &mut out);
+        debug_assert_eq!(n, out.len());
         out
     }
 
     /// Encode into a caller-provided buffer (appends; no allocation if
     /// `out` has capacity). Returns bytes written.
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize;
+    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        out.resize(start + encoded_len(input.len()), 0);
+        self.encode_slice(input, &mut out[start..])
+    }
 
     /// Decode base64 (strict RFC 4648: canonical padding, no whitespace).
     fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
-        let mut out = Vec::with_capacity(decoded_len_upper(input.len()));
-        self.decode_into(input, &mut out)?;
+        let mut out = vec![0u8; decoded_len_upper(input.len())];
+        let n = self.decode_slice(input, &mut out)?;
+        out.truncate(n);
         Ok(out)
     }
 
-    /// Decode into a caller-provided buffer (appends). Returns bytes written.
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError>;
+    /// Decode into a caller-provided buffer (appends). Returns bytes
+    /// written; on error `out` is restored to its original length.
+    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
+        let start = out.len();
+        out.resize(start + decoded_len_upper(input.len()), 0);
+        match self.decode_slice(input, &mut out[start..]) {
+            Ok(n) => {
+                out.truncate(start + n);
+                Ok(n)
+            }
+            Err(e) => {
+                out.truncate(start);
+                Err(e)
+            }
+        }
+    }
 }
 
 /// Exact encoded length (with '=' padding) for `n` raw bytes.
@@ -66,9 +111,27 @@ pub const fn encoded_len(n: usize) -> usize {
     n.div_ceil(3) * 4
 }
 
-/// Upper bound on decoded length for `n` base64 chars (before padding trim).
+/// Tight upper bound on decoded length for `n` base64 chars (before the
+/// padding trim): ceil(n/4)*3. Exact for padded whole-quantum input whose
+/// final quantum carries no '='; at most 2 bytes over otherwise. The old
+/// `(n/4 + 1)*3` formula over-reserved a full 3-byte group for every
+/// whole-block input.
 pub const fn decoded_len_upper(n: usize) -> usize {
-    (n / 4 + 1) * 3
+    n.div_ceil(4) * 3
+}
+
+/// Exact decoded length for `n` base64 chars of which the trailing
+/// `padding` are pad characters. Handles unpadded (forgiving-mode)
+/// lengths too: a 2-char final fragment decodes to 1 byte, a 3-char one
+/// to 2. (A 1-char fragment is invalid and contributes 0.)
+pub const fn decoded_len(n: usize, padding: usize) -> usize {
+    let data = n - padding;
+    data / 4 * 3
+        + match data % 4 {
+            2 => 1,
+            3 => 2,
+            _ => 0,
+        }
 }
 
 #[cfg(test)]
@@ -87,10 +150,31 @@ mod tests {
     }
 
     #[test]
-    fn decoded_upper_bound_is_sufficient() {
+    fn decoded_upper_bound_is_sufficient_and_tight_on_blocks() {
         for n in 0..200 {
             let enc = encoded_len(n);
             assert!(decoded_len_upper(enc) >= n, "n={n}");
         }
+        // Whole-block inputs must not over-reserve (the old formula added
+        // a spurious 3 bytes for every n % 4 == 0 input).
+        assert_eq!(decoded_len_upper(64), 48);
+        assert_eq!(decoded_len_upper(0), 0);
+        assert_eq!(decoded_len_upper(4), 3);
+    }
+
+    #[test]
+    fn decoded_len_exact_against_roundtrip() {
+        use super::scalar::ScalarCodec;
+        let c = ScalarCodec::new(Alphabet::standard());
+        for n in 0..100usize {
+            let data = vec![0xA7u8; n];
+            let enc = c.encode(&data);
+            let pads = enc.iter().rev().take_while(|&&b| b == b'=').count();
+            assert_eq!(decoded_len(enc.len(), pads), n, "n={n}");
+        }
+        // Unpadded forgiving-mode lengths.
+        assert_eq!(decoded_len(3, 0), 2);
+        assert_eq!(decoded_len(2, 0), 1);
+        assert_eq!(decoded_len(6, 0), 4);
     }
 }

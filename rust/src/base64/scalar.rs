@@ -6,7 +6,7 @@
 //! table with a sentinel for invalid bytes. No SWAR, no blocks — this is
 //! the codec the vectorized ones are measured against (Fig. 4, Table 3).
 
-use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::validate::{decode_quads_into, decode_tail_into, split_tail, DecodeError, Mode};
 use super::{encoded_len, Alphabet, Codec};
 
 /// Per-byte table-lookup codec.
@@ -35,67 +35,57 @@ impl Codec for ScalarCodec {
         "scalar"
     }
 
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
         let table = self.alphabet.encode_table();
         let pad = self.alphabet.pad();
-        let start = out.len();
-        out.reserve(encoded_len(input.len()));
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let mut w = 0;
         let mut chunks = input.chunks_exact(3);
         for chunk in &mut chunks {
             let (s1, s2, s3) = (chunk[0], chunk[1], chunk[2]);
-            out.push(table.lookup(s1 >> 2));
-            out.push(table.lookup((s1 << 4) | (s2 >> 4)));
-            out.push(table.lookup((s2 << 2) | (s3 >> 6)));
-            out.push(table.lookup(s3));
+            out[w] = table.lookup(s1 >> 2);
+            out[w + 1] = table.lookup((s1 << 4) | (s2 >> 4));
+            out[w + 2] = table.lookup((s2 << 2) | (s3 >> 6));
+            out[w + 3] = table.lookup(s3);
+            w += 4;
         }
         match chunks.remainder() {
             [] => {}
             [s1] => {
-                out.push(table.lookup(s1 >> 2));
-                out.push(table.lookup(s1 << 4));
-                out.push(pad);
-                out.push(pad);
+                out[w] = table.lookup(s1 >> 2);
+                out[w + 1] = table.lookup(s1 << 4);
+                out[w + 2] = pad;
+                out[w + 3] = pad;
+                w += 4;
             }
             [s1, s2] => {
-                out.push(table.lookup(s1 >> 2));
-                out.push(table.lookup((s1 << 4) | (s2 >> 4)));
-                out.push(table.lookup(s2 << 2));
-                out.push(pad);
+                out[w] = table.lookup(s1 >> 2);
+                out[w + 1] = table.lookup((s1 << 4) | (s2 >> 4));
+                out[w + 2] = table.lookup(s2 << 2);
+                out[w + 3] = pad;
+                w += 4;
             }
             _ => unreachable!(),
         }
-        out.len() - start
+        debug_assert_eq!(w, total);
+        w
     }
 
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
-        let table = self.alphabet.decode_table();
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
         let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
-        let start = out.len();
-        out.reserve(body.len() / 4 * 3 + 3);
-        for (q, quad) in body.chunks_exact(4).enumerate() {
-            let mut vals = [0u8; 4];
-            for i in 0..4 {
-                let c = quad[i];
-                let v = table.lookup(c);
-                // The OR trick covers non-ASCII (c >= 0x80) as well.
-                if (c | v) & 0x80 != 0 {
-                    return Err(DecodeError::InvalidByte { offset: q * 4 + i, byte: c });
-                }
-                vals[i] = v;
-            }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
-        }
-        decode_tail(
+        // The OR trick inside `decode_quads_into` covers non-ASCII bytes
+        // (c >= 0x80) as well.
+        let w = decode_quads_into(body, self.alphabet.decode_table().as_bytes(), 0, out)?;
+        let t = decode_tail_into(
             tail,
             self.alphabet.pad(),
             self.mode,
             body.len(),
             |c| self.alphabet.value_of(c),
-            out,
+            &mut out[w..],
         )?;
-        Ok(out.len() - start)
+        Ok(w + t)
     }
 }
 
@@ -162,5 +152,24 @@ mod tests {
         let n = c.encode_into(b"foo", &mut buf);
         assert_eq!(n, 4);
         assert_eq!(buf, b"prefix:Zm9v");
+    }
+
+    #[test]
+    fn slice_api_roundtrip() {
+        let c = codec();
+        let mut enc = [0u8; 8];
+        let n = c.encode_slice(b"foobar", &mut enc);
+        assert_eq!((n, &enc[..]), (8, &b"Zm9vYmFy"[..]));
+        let mut dec = [0u8; 6];
+        let n = c.decode_slice(&enc, &mut dec).unwrap();
+        assert_eq!((n, &dec[..]), (6, &b"foobar"[..]));
+    }
+
+    #[test]
+    fn decode_into_restores_on_error() {
+        let c = codec();
+        let mut buf = b"keep".to_vec();
+        assert!(c.decode_into(b"AAAA!AAA", &mut buf).is_err());
+        assert_eq!(buf, b"keep");
     }
 }

@@ -16,7 +16,7 @@
 //! Tables are built per [`Alphabet`] at construction time (4.75 kB), the
 //! register-file analog of AVX2's in-register LUTs.
 
-use super::validate::{decode_tail, split_tail, DecodeError, Mode};
+use super::validate::{decode_tail_into, split_tail, DecodeError, Mode};
 use super::{encoded_len, Alphabet, Codec};
 
 /// Sentinel OR-mask marking an invalid character in the decode tables.
@@ -69,19 +69,13 @@ impl SwarCodec {
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }
-}
 
-impl Codec for SwarCodec {
-    fn name(&self) -> &'static str {
-        "swar"
-    }
-
-    fn encode_into(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
-        let start = out.len();
-        let total = encoded_len(input.len());
-        out.reserve(total);
-        let mut chunks = input.chunks_exact(3);
-        for chunk in &mut chunks {
+    /// Bulk slice core: encode all whole 3-byte groups of `input` into
+    /// `out[0..]` (4 chars per group, no padding), returning the bytes
+    /// consumed. `out` must hold `input.len() / 3 * 4` chars.
+    pub(crate) fn encode_bulk(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let mut w = 0;
+        for chunk in input.chunks_exact(3) {
             let (s1, s2, s3) = (chunk[0] as usize, chunk[1] as usize, chunk[2] as usize);
             let quad = [
                 self.e0[s1],
@@ -89,39 +83,23 @@ impl Codec for SwarCodec {
                 self.e1[((s2 & 0x0F) << 2) | (s3 >> 6)],
                 self.e1[s3 & 0x3F],
             ];
-            out.extend_from_slice(&quad);
+            out[w..w + 4].copy_from_slice(&quad);
+            w += 4;
         }
-        let pad = self.alphabet.pad();
-        match chunks.remainder() {
-            [] => {}
-            [s1] => {
-                let s1 = *s1 as usize;
-                out.extend_from_slice(&[self.e0[s1], self.e1[(s1 & 0x03) << 4], pad, pad]);
-            }
-            [s1, s2] => {
-                let (s1, s2) = (*s1 as usize, *s2 as usize);
-                out.extend_from_slice(&[
-                    self.e0[s1],
-                    self.e1[((s1 & 0x03) << 4) | (s2 >> 4)],
-                    self.e1[(s2 & 0x0F) << 2],
-                    pad,
-                ]);
-            }
-            _ => unreachable!(),
-        }
-        out.len() - start
+        input.len() / 3 * 3
     }
 
-    fn decode_into(&self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, DecodeError> {
-        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
-        let start = out.len();
-        out.reserve(body.len() / 4 * 3 + 4);
+    /// Bulk slice core: decode all whole 4-char quanta of `body` (no
+    /// padding) into `out[0..]`, 3 bytes per quantum. Returns the chars
+    /// consumed; errors report offsets relative to `body`.
+    pub(crate) fn decode_bulk(&self, body: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        let mut w = 0;
         for (q, quad) in body.chunks_exact(4).enumerate() {
-            let w = self.d0[quad[0] as usize]
+            let v = self.d0[quad[0] as usize]
                 | self.d1[quad[1] as usize]
                 | self.d2[quad[2] as usize]
                 | self.d3[quad[3] as usize];
-            if w & BAD != 0 {
+            if v & BAD != 0 {
                 // Narrow to the exact byte for the error report (cold path).
                 for (i, &c) in quad.iter().enumerate() {
                     if self.alphabet.value_of(c).is_none() {
@@ -130,17 +108,60 @@ impl Codec for SwarCodec {
                 }
                 unreachable!("sentinel set but all bytes valid");
             }
-            out.extend_from_slice(&w.to_le_bytes()[..3]);
+            out[w..w + 3].copy_from_slice(&v.to_le_bytes()[..3]);
+            w += 3;
         }
-        decode_tail(
+        Ok(body.len() / 4 * 4)
+    }
+}
+
+impl Codec for SwarCodec {
+    fn name(&self) -> &'static str {
+        "swar"
+    }
+
+    fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let consumed = self.encode_bulk(input, out);
+        let mut w = consumed / 3 * 4;
+        let pad = self.alphabet.pad();
+        match &input[consumed..] {
+            [] => {}
+            [s1] => {
+                let s1 = *s1 as usize;
+                out[w..w + 4].copy_from_slice(&[self.e0[s1], self.e1[(s1 & 0x03) << 4], pad, pad]);
+                w += 4;
+            }
+            [s1, s2] => {
+                let (s1, s2) = (*s1 as usize, *s2 as usize);
+                out[w..w + 4].copy_from_slice(&[
+                    self.e0[s1],
+                    self.e1[((s1 & 0x03) << 4) | (s2 >> 4)],
+                    self.e1[(s2 & 0x0F) << 2],
+                    pad,
+                ]);
+                w += 4;
+            }
+            _ => unreachable!("bulk consumes all whole groups"),
+        }
+        debug_assert_eq!(w, total);
+        w
+    }
+
+    fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
+        self.decode_bulk(body, out)?;
+        let w = body.len() / 4 * 3;
+        let t = decode_tail_into(
             tail,
             self.alphabet.pad(),
             self.mode,
             body.len(),
             |c| self.alphabet.value_of(c),
-            out,
+            &mut out[w..],
         )?;
-        Ok(out.len() - start)
+        Ok(w + t)
     }
 }
 

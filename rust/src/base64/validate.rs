@@ -89,20 +89,66 @@ pub fn split_tail<'a>(input: &'a [u8], pad: u8, mode: Mode) -> Result<(&'a [u8],
     }
 }
 
-/// Decode the final quantum (0–4 chars, possibly padded) using `value_of`.
-///
-/// `base_offset` is the quantum's offset in the original input, used for
-/// error reporting. Appends 0–3 bytes to `out`.
-pub fn decode_tail(
+/// The paper's §3.2 validation identity over a 128-entry decode table:
+/// `(c | dtable[c & 0x7F]) & 0x80 != 0` iff `c` is outside the alphabet
+/// (the OR folds non-ASCII bytes, whose MSB the 7-bit lookup would alias,
+/// into the same test). Every deferred-error re-scan routes through here.
+#[inline(always)]
+pub fn byte_is_invalid(c: u8, dtable: &[u8; 128]) -> bool {
+    (c | dtable[(c & 0x7F) as usize]) & 0x80 != 0
+}
+
+/// Offset of the first alphabet-foreign byte in `input`, if any.
+/// This is the cold-path re-scan after a deferred error accumulator fires.
+pub fn first_invalid(input: &[u8], dtable: &[u8; 128]) -> Option<usize> {
+    input.iter().position(|&c| byte_is_invalid(c, dtable))
+}
+
+/// True iff `row` contains at least one alphabet-foreign byte — the
+/// per-row flag contract of the coordinator's batched decode path.
+pub fn row_has_invalid(row: &[u8], dtable: &[u8; 128]) -> bool {
+    row.iter().any(|&c| byte_is_invalid(c, dtable))
+}
+
+/// Decode whole 4-char quanta (no padding allowed) into a caller-provided
+/// slice, writing exactly `body.len() / 4 * 3` bytes at `out[0..]`.
+/// `base_offset` positions error reports in the original input.
+pub fn decode_quads_into(
+    body: &[u8],
+    dtable: &[u8; 128],
+    base_offset: usize,
+    out: &mut [u8],
+) -> Result<usize, DecodeError> {
+    debug_assert_eq!(body.len() % 4, 0);
+    let mut w = 0;
+    for (q, quad) in body.chunks_exact(4).enumerate() {
+        let mut vals = [0u8; 4];
+        for (i, &c) in quad.iter().enumerate() {
+            let v = dtable[(c & 0x7F) as usize];
+            if (c | v) & 0x80 != 0 {
+                return Err(DecodeError::InvalidByte { offset: base_offset + q * 4 + i, byte: c });
+            }
+            vals[i] = v;
+        }
+        out[w] = (vals[0] << 2) | (vals[1] >> 4);
+        out[w + 1] = (vals[1] << 4) | (vals[2] >> 2);
+        out[w + 2] = (vals[2] << 6) | vals[3];
+        w += 3;
+    }
+    Ok(w)
+}
+
+/// Core of the tail decode: resolve the final quantum into up to 3 raw
+/// bytes without touching any output buffer.
+fn decode_tail_parts(
     tail: &[u8],
     pad: u8,
     mode: Mode,
     base_offset: usize,
     value_of: impl Fn(u8) -> Option<u8>,
-    out: &mut Vec<u8>,
-) -> Result<usize, DecodeError> {
+) -> Result<([u8; 3], usize), DecodeError> {
     if tail.is_empty() {
-        return Ok(0);
+        return Ok(([0; 3], 0));
     }
     // Split data chars from padding.
     let data_len = tail.iter().position(|&c| c == pad).unwrap_or(tail.len());
@@ -128,6 +174,7 @@ pub fn decode_tail(
             byte: c,
         })?;
     }
+    let mut bytes = [0u8; 3];
     let written = match data.len() {
         0 => 0,
         1 => return Err(DecodeError::InvalidLength { len: base_offset + 1 }),
@@ -135,26 +182,60 @@ pub fn decode_tail(
             if mode == Mode::Strict && vals[1] & 0x0F != 0 {
                 return Err(DecodeError::TrailingBits { offset: base_offset + 1 });
             }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
+            bytes[0] = (vals[0] << 2) | (vals[1] >> 4);
             1
         }
         3 => {
             if mode == Mode::Strict && vals[2] & 0x03 != 0 {
                 return Err(DecodeError::TrailingBits { offset: base_offset + 2 });
             }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
+            bytes[0] = (vals[0] << 2) | (vals[1] >> 4);
+            bytes[1] = (vals[1] << 4) | (vals[2] >> 2);
             2
         }
         4 => {
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
+            bytes[0] = (vals[0] << 2) | (vals[1] >> 4);
+            bytes[1] = (vals[1] << 4) | (vals[2] >> 2);
+            bytes[2] = (vals[2] << 6) | vals[3];
             3
         }
         _ => unreachable!("tail is at most 4 chars"),
     };
-    Ok(written)
+    Ok((bytes, written))
+}
+
+/// Decode the final quantum (0–4 chars, possibly padded) using `value_of`.
+///
+/// `base_offset` is the quantum's offset in the original input, used for
+/// error reporting. Appends 0–3 bytes to `out`.
+pub fn decode_tail(
+    tail: &[u8],
+    pad: u8,
+    mode: Mode,
+    base_offset: usize,
+    value_of: impl Fn(u8) -> Option<u8>,
+    out: &mut Vec<u8>,
+) -> Result<usize, DecodeError> {
+    let (bytes, n) = decode_tail_parts(tail, pad, mode, base_offset, value_of)?;
+    out.extend_from_slice(&bytes[..n]);
+    Ok(n)
+}
+
+/// Allocation-free variant of [`decode_tail`]: writes the 0–3 tail bytes
+/// at `out[0..]` and returns the count. Panics if `out` is too small for
+/// the bytes actually produced.
+pub fn decode_tail_into(
+    tail: &[u8],
+    pad: u8,
+    mode: Mode,
+    base_offset: usize,
+    value_of: impl Fn(u8) -> Option<u8>,
+    out: &mut [u8],
+) -> Result<usize, DecodeError> {
+    let (bytes, n) = decode_tail_parts(tail, pad, mode, base_offset, value_of)?;
+    assert!(out.len() >= n, "output buffer too small for the decoded tail");
+    out[..n].copy_from_slice(&bytes[..n]);
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -247,6 +328,43 @@ mod tests {
             decode_tail(b"a!==", b'=', Mode::Strict, 100, vo(&a), &mut out),
             Err(DecodeError::InvalidByte { offset: 101, byte: b'!' })
         ));
+    }
+
+    #[test]
+    fn invalid_byte_identity_matches_value_of() {
+        let a = Alphabet::standard();
+        let dtable = a.decode_table().as_bytes();
+        for c in 0..=255u8 {
+            assert_eq!(byte_is_invalid(c, dtable), a.value_of(c).is_none(), "c={c:#x}");
+        }
+    }
+
+    #[test]
+    fn first_invalid_and_row_flags() {
+        let a = Alphabet::standard();
+        let dtable = a.decode_table().as_bytes();
+        assert_eq!(first_invalid(b"AAAA", dtable), None);
+        assert_eq!(first_invalid(b"AA!A", dtable), Some(2));
+        assert!(!row_has_invalid(b"Zm9v", dtable));
+        assert!(row_has_invalid(&[b'Z', 0xC3, b'9', b'v'], dtable));
+    }
+
+    #[test]
+    fn decode_quads_into_slice() {
+        let a = Alphabet::standard();
+        let mut out = [0u8; 6];
+        let n = decode_quads_into(b"Zm9vYmFy", a.decode_table().as_bytes(), 0, &mut out).unwrap();
+        assert_eq!((n, &out[..]), (6, &b"foobar"[..]));
+        let err = decode_quads_into(b"Zm9vY!Fy", a.decode_table().as_bytes(), 100, &mut out);
+        assert_eq!(err, Err(DecodeError::InvalidByte { offset: 105, byte: b'!' }));
+    }
+
+    #[test]
+    fn tail_into_slice_matches_vec_path() {
+        let a = Alphabet::standard();
+        let mut buf = [0u8; 3];
+        let n = decode_tail_into(b"aA==", b'=', Mode::Strict, 0, vo(&a), &mut buf).unwrap();
+        assert_eq!((n, buf[0]), (1, b'h'));
     }
 
     #[test]

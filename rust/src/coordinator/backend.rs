@@ -1,17 +1,29 @@
 //! The block-execution backend abstraction.
 //!
 //! The coordinator batches whole 48/64-byte blocks and hands them to a
-//! [`BlockBackend`]. Production uses the PJRT executables
-//! ([`crate::runtime::BlockExecutor`]); tests and runtime-less deployments
-//! use [`RustBackend`], the in-process block codec. Both consume the same
-//! runtime-supplied tables, preserving the paper's variants-as-data
-//! property across backends.
+//! [`BlockBackend`]. Production uses the tiered native backends (the
+//! same AVX-512 → AVX2 → SWAR → scalar ladder as
+//! [`crate::base64::engine::Engine`], selected once per worker by
+//! [`native_factory`]); the PJRT executables
+//! ([`crate::runtime::BlockExecutor`]) and the in-process [`RustBackend`]
+//! remain for differential testing and runtime-less deployments. All
+//! backends consume the same runtime-supplied tables, preserving the
+//! paper's variants-as-data property.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
+use crate::base64::avx2::Avx2Codec;
+use crate::base64::validate::{decode_quads_into, row_has_invalid};
+use crate::base64::{Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 use crate::runtime::BlockExecutor;
 
 /// Batched whole-block encode/decode over some execution substrate.
+///
+/// The required methods are the `_into` forms, which append to
+/// caller-provided buffers so scheduler workers can reuse scratch
+/// allocations across batches; the `Vec`-returning conveniences are
+/// provided wrappers.
 ///
 /// Deliberately NOT `Send`/`Sync`: the PJRT client is reference-counted
 /// and thread-bound, so each scheduler worker constructs its own backend
@@ -20,11 +32,40 @@ pub trait BlockBackend {
     /// Label used in metrics/benches.
     fn name(&self) -> &'static str;
 
-    /// `input.len() % 48 == 0` -> `input.len() / 48 * 64` chars.
-    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>>;
+    /// `input.len() % 48 == 0` -> appends `input.len() / 48 * 64` chars.
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()>;
 
-    /// `input.len() % 64 == 0` -> (decoded bytes, per-row error bytes).
-    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)>;
+    /// `input.len() % 64 == 0` -> appends `input.len() / 64 * 48` bytes
+    /// to `out` and one error byte per input row to `errs` (MSB set =
+    /// row contains an invalid character; decoded bytes for such rows
+    /// are unspecified).
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()>;
+
+    /// `Vec`-allocating wrapper over [`Self::encode_blocks_into`].
+    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.encode_blocks_into(input, table, &mut out)?;
+        Ok(out)
+    }
+
+    /// `Vec`-allocating wrapper over [`Self::decode_blocks_into`].
+    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+        let mut out = Vec::new();
+        let mut errs = Vec::new();
+        self.decode_blocks_into(input, dtable, &mut out, &mut errs)?;
+        Ok((out, errs))
+    }
 }
 
 /// Constructs one thread-local backend per worker thread.
@@ -44,17 +85,105 @@ pub fn pjrt_factory(dir: std::path::PathBuf) -> BackendFactory {
     })
 }
 
-/// Factory for the fastest native backend: the real AVX-512 VBMI codec
-/// when the CPU has it (the paper's §3 instructions), else the scalar
-/// block codec.
+/// Factory for the fastest native backend the CPU supports, mirroring
+/// the engine's tier ladder: the real AVX-512 VBMI codec (the paper's §3
+/// instructions) when available, else the 2018 AVX2 codec (for tables
+/// with its range structure, per-call fallback otherwise), else the SWAR
+/// wide-table codec — never worse than the scalar block loop.
 pub fn native_factory() -> BackendFactory {
     Arc::new(|| {
-        if crate::base64::avx512::Avx512Codec::available() {
-            Ok(Box::new(NativeBackend) as Box<dyn BlockBackend>)
-        } else {
-            Ok(Box::new(RustBackend) as Box<dyn BlockBackend>)
-        }
+        let backend: Box<dyn BlockBackend> =
+            if crate::base64::avx512::Avx512Codec::available() {
+                Box::new(NativeBackend)
+            } else if Avx2Codec::available() {
+                Box::new(Avx2Backend::default())
+            } else {
+                Box::new(SwarBackend::default())
+            };
+        Ok(backend)
     })
+}
+
+/// Reconstruct an [`Alphabet`] from a wire-supplied 64-byte encode
+/// table. The pad character never appears inside whole blocks, so any
+/// unused ASCII byte serves.
+fn alphabet_from_chars(chars: &[u8; 64]) -> Option<Alphabet> {
+    let pad = (0u8..0x80).find(|c| !chars.contains(c))?;
+    Alphabet::new("wire", *chars, pad).ok()
+}
+
+/// Reconstruct the 64-byte alphabet from a 128-byte decode table by
+/// inverting it; `None` if the table does not describe 64 distinct chars.
+fn chars_from_dtable(dtable: &[u8; 128]) -> Option<[u8; 64]> {
+    let mut chars = [0u8; 64];
+    let mut seen = [false; 64];
+    for (c, &v) in dtable.iter().enumerate() {
+        if v & 0x80 == 0 {
+            // Out-of-range or duplicated values mean the table is not a
+            // bijection onto 0..64 — refuse (the scalar loop handles it).
+            if v >= 64 || seen[v as usize] {
+                return None;
+            }
+            chars[v as usize] = c as u8;
+            seen[v as usize] = true;
+        }
+    }
+    seen.iter().all(|&s| s).then_some(chars)
+}
+
+/// Scalar fallback for a decode batch with invalid rows (cold path): the
+/// plain block loop decodes everything and flags rows via the shared
+/// validation identity.
+fn decode_blocks_scalar(input: &[u8], dtable: &[u8; 128], out: &mut Vec<u8>, errs: &mut Vec<u8>) {
+    let rows = input.len() / B64_BLOCK;
+    let start = out.len();
+    out.resize(start + rows * RAW_BLOCK, 0);
+    let out = &mut out[start..];
+    for ((inp, dst), err_slot) in input
+        .chunks_exact(B64_BLOCK)
+        .zip(out.chunks_exact_mut(RAW_BLOCK))
+        .zip({
+            let e_start = errs.len();
+            errs.resize(e_start + rows, 0);
+            errs[e_start..].iter_mut()
+        })
+    {
+        let mut acc = 0u8;
+        for g in 0..16 {
+            let c = [inp[4 * g], inp[4 * g + 1], inp[4 * g + 2], inp[4 * g + 3]];
+            let v = [
+                dtable[(c[0] & 0x7F) as usize],
+                dtable[(c[1] & 0x7F) as usize],
+                dtable[(c[2] & 0x7F) as usize],
+                dtable[(c[3] & 0x7F) as usize],
+            ];
+            acc |= c[0] | v[0] | c[1] | v[1] | c[2] | v[2] | c[3] | v[3];
+            let ab = ((v[0] as u32) << 6) | v[1] as u32;
+            let cd = ((v[2] as u32) << 6) | v[3] as u32;
+            let w = (ab << 12) | cd;
+            dst[3 * g] = (w >> 16) as u8;
+            dst[3 * g + 1] = (w >> 8) as u8;
+            dst[3 * g + 2] = w as u8;
+        }
+        *err_slot = acc & 0x80;
+    }
+}
+
+/// Scalar fallback for an encode batch (cold path / non-x86).
+fn encode_blocks_scalar(input: &[u8], table: &[u8; 64], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.resize(start + input.len() / RAW_BLOCK * B64_BLOCK, 0);
+    let out = &mut out[start..];
+    for (inp, dst) in input.chunks_exact(RAW_BLOCK).zip(out.chunks_exact_mut(B64_BLOCK)) {
+        for g in 0..16 {
+            let (s1, s2, s3) = (inp[3 * g] as u32, inp[3 * g + 1] as u32, inp[3 * g + 2] as u32);
+            let t = s2 | (s1 << 8) | (s3 << 16) | (s2 << 24);
+            dst[4 * g] = table[((t >> 10) & 0x3F) as usize];
+            dst[4 * g + 1] = table[((t >> 4) & 0x3F) as usize];
+            dst[4 * g + 2] = table[((t >> 22) & 0x3F) as usize];
+            dst[4 * g + 3] = table[((t >> 16) & 0x3F) as usize];
+        }
+    }
 }
 
 /// AVX-512 VBMI block backend (requires [`Avx512Codec::available`]).
@@ -67,48 +196,268 @@ impl BlockBackend for NativeBackend {
         "avx512"
     }
 
-    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
-        anyhow::ensure!(input.len() % 48 == 0, "whole blocks required");
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % RAW_BLOCK == 0, "whole blocks required");
         #[cfg(target_arch = "x86_64")]
         {
-            let mut out = vec![0u8; input.len() / 48 * 64];
+            let start = out.len();
+            out.resize(start + input.len() / RAW_BLOCK * B64_BLOCK, 0);
             // SAFETY: factory only constructs this when VBMI is detected.
-            unsafe { crate::base64::avx512::raw::encode_blocks(input, &mut out, table) };
-            Ok(out)
+            unsafe { crate::base64::avx512::raw::encode_blocks(input, &mut out[start..], table) };
+            Ok(())
         }
         #[cfg(not(target_arch = "x86_64"))]
         {
-            RustBackend.encode_blocks(input, table)
+            encode_blocks_scalar(input, table, out);
+            Ok(())
         }
     }
 
-    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
-        anyhow::ensure!(input.len() % 64 == 0, "whole blocks required");
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % B64_BLOCK == 0, "whole blocks required");
         #[cfg(target_arch = "x86_64")]
         {
             // The AVX-512 path accumulates one error mask per stream, not
             // per row; to report per-row flags (the batcher contract) we
             // decode per stream and only on failure re-scan rows (cold).
-            let rows = input.len() / 64;
-            let mut out = vec![0u8; rows * 48];
-            // SAFETY: see encode_blocks.
-            let mask = unsafe { crate::base64::avx512::raw::decode_blocks(input, &mut out, dtable) };
-            let mut errs = vec![0u8; rows];
+            let rows = input.len() / B64_BLOCK;
+            let start = out.len();
+            out.resize(start + rows * RAW_BLOCK, 0);
+            // SAFETY: see encode_blocks_into.
+            let mask =
+                unsafe { crate::base64::avx512::raw::decode_blocks(input, &mut out[start..], dtable) };
+            let e_start = errs.len();
+            errs.resize(e_start + rows, 0);
             if mask != 0 {
-                for (row, flag) in errs.iter_mut().enumerate() {
-                    let has_bad = input[row * 64..(row + 1) * 64]
-                        .iter()
-                        .any(|&c| (c | dtable[(c & 0x7F) as usize]) & 0x80 != 0);
-                    if has_bad {
+                for (row, flag) in errs[e_start..].iter_mut().enumerate() {
+                    if row_has_invalid(&input[row * B64_BLOCK..(row + 1) * B64_BLOCK], dtable) {
                         *flag = 0x80;
                     }
                 }
             }
-            Ok((out, errs))
+            Ok(())
         }
         #[cfg(not(target_arch = "x86_64"))]
         {
-            RustBackend.decode_blocks(input, dtable)
+            decode_blocks_scalar(input, dtable, out, errs);
+            Ok(())
+        }
+    }
+}
+
+/// Run `f` with the memoized per-table codec, rebuilding the memo when
+/// the wire table changes (tables are stable per worker in practice).
+/// Returns `None` when `build` cannot express the table as a codec —
+/// callers fall back to the scalar block loop.
+fn with_memo<C, R>(
+    cache: &RefCell<Option<(Vec<u8>, Option<C>)>>,
+    key: &[u8],
+    build: impl FnOnce() -> Option<C>,
+    f: impl FnOnce(&C) -> R,
+) -> Option<R> {
+    {
+        let memo = cache.borrow();
+        if let Some((k, codec)) = memo.as_ref() {
+            if k.as_slice() == key {
+                // Negative probes are memoized too (codec = None), so a
+                // steady stream of non-conforming tables does not redo
+                // the table reconstruction per batch.
+                return codec.as_ref().map(f);
+            }
+        }
+    }
+    let codec = build();
+    let mut memo = cache.borrow_mut();
+    *memo = Some((key.to_vec(), codec));
+    memo.as_ref().and_then(|(_, c)| c.as_ref()).map(f)
+}
+
+/// The 2018 AVX2 codec as a block backend. Wire tables are runtime
+/// values, so the per-alphabet range constants are derived on first use
+/// and memoized per (direction, table); tables outside the 2018 range
+/// structure fall back to the scalar block loop for that call.
+#[derive(Default)]
+pub struct Avx2Backend {
+    enc: RefCell<Option<(Vec<u8>, Option<Avx2Codec>)>>,
+    dec: RefCell<Option<(Vec<u8>, Option<Avx2Codec>)>>,
+}
+
+impl BlockBackend for Avx2Backend {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % RAW_BLOCK == 0, "whole blocks required");
+        let vectorized = with_memo(
+            &self.enc,
+            table,
+            || {
+                if !Avx2Codec::available() || !Avx2Codec::supports_chars(table) {
+                    return None;
+                }
+                alphabet_from_chars(table).map(Avx2Codec::new)
+            },
+            |codec| {
+                let start = out.len();
+                out.resize(start + input.len() / RAW_BLOCK * B64_BLOCK, 0);
+                // Whole blocks contain no padding, so encode_slice's
+                // epilogue only runs the last sub-SIMD groups.
+                codec.encode_slice(input, &mut out[start..]);
+            },
+        );
+        if vectorized.is_none() {
+            encode_blocks_scalar(input, table, out);
+        }
+        Ok(())
+    }
+
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % B64_BLOCK == 0, "whole blocks required");
+        let rows = input.len() / B64_BLOCK;
+        let vectorized = with_memo(
+            &self.dec,
+            dtable,
+            || {
+                let chars = chars_from_dtable(dtable)?;
+                if !Avx2Codec::available() || !Avx2Codec::supports_chars(&chars) {
+                    return None;
+                }
+                alphabet_from_chars(&chars).map(Avx2Codec::new)
+            },
+            |codec| {
+                let start = out.len();
+                out.resize(start + rows * RAW_BLOCK, 0);
+                let dst = &mut out[start..];
+                // Use the pad-free bulk core (NOT decode_slice): the
+                // reconstructed alphabet carries a synthetic pad byte
+                // that must never receive tail semantics here.
+                match codec.decode_bulk(input, dst) {
+                    Ok(consumed) => {
+                        let w = consumed / 4 * 3;
+                        decode_quads_into(&input[consumed..], dtable, consumed, &mut dst[w..])
+                            .is_ok()
+                    }
+                    Err(_) => false,
+                }
+            },
+        );
+        match vectorized {
+            Some(true) => {
+                errs.resize(errs.len() + rows, 0);
+                Ok(())
+            }
+            Some(false) => {
+                // Invalid byte somewhere: redo on the scalar loop to
+                // produce per-row flags (cold path).
+                out.truncate(out.len() - rows * RAW_BLOCK);
+                decode_blocks_scalar(input, dtable, out, errs);
+                Ok(())
+            }
+            None => {
+                decode_blocks_scalar(input, dtable, out, errs);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// SWAR wide-table block backend: the middle tier for hosts without
+/// AVX2. Tables are memoized per (direction, table) like [`Avx2Backend`].
+#[derive(Default)]
+pub struct SwarBackend {
+    enc: RefCell<Option<(Vec<u8>, Option<crate::base64::swar::SwarCodec>)>>,
+    dec: RefCell<Option<(Vec<u8>, Option<crate::base64::swar::SwarCodec>)>>,
+}
+
+impl BlockBackend for SwarBackend {
+    fn name(&self) -> &'static str {
+        "swar"
+    }
+
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % RAW_BLOCK == 0, "whole blocks required");
+        let vectorized = with_memo(
+            &self.enc,
+            table,
+            || alphabet_from_chars(table).map(crate::base64::swar::SwarCodec::new),
+            |codec| {
+                let start = out.len();
+                out.resize(start + input.len() / RAW_BLOCK * B64_BLOCK, 0);
+                codec.encode_slice(input, &mut out[start..]);
+            },
+        );
+        if vectorized.is_none() {
+            encode_blocks_scalar(input, table, out);
+        }
+        Ok(())
+    }
+
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % B64_BLOCK == 0, "whole blocks required");
+        let rows = input.len() / B64_BLOCK;
+        let vectorized = with_memo(
+            &self.dec,
+            dtable,
+            || {
+                let chars = chars_from_dtable(dtable)?;
+                alphabet_from_chars(&chars).map(crate::base64::swar::SwarCodec::new)
+            },
+            |codec| {
+                let start = out.len();
+                out.resize(start + rows * RAW_BLOCK, 0);
+                // Pad-free bulk core: the synthetic pad byte must stay an
+                // ordinary invalid character (see Avx2Backend).
+                codec.decode_bulk(input, &mut out[start..]).is_ok()
+            },
+        );
+        match vectorized {
+            Some(true) => {
+                errs.resize(errs.len() + rows, 0);
+                Ok(())
+            }
+            Some(false) => {
+                out.truncate(out.len() - rows * RAW_BLOCK);
+                decode_blocks_scalar(input, dtable, out, errs);
+                Ok(())
+            }
+            None => {
+                decode_blocks_scalar(input, dtable, out, errs);
+                Ok(())
+            }
         }
     }
 }
@@ -118,13 +467,28 @@ impl BlockBackend for BlockExecutor {
         "pjrt"
     }
 
-    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
-        BlockExecutor::encode_blocks(self, input, table)
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        let data = BlockExecutor::encode_blocks(self, input, table)?;
+        out.extend_from_slice(&data);
+        Ok(())
     }
 
-    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
-        let out = BlockExecutor::decode_blocks(self, input, dtable)?;
-        Ok((out.data, out.err))
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        let res = BlockExecutor::decode_blocks(self, input, dtable)?;
+        out.extend_from_slice(&res.data);
+        errs.extend_from_slice(&res.err);
+        Ok(())
     }
 }
 
@@ -138,52 +502,27 @@ impl BlockBackend for RustBackend {
         "rust-block"
     }
 
-    fn encode_blocks(&self, input: &[u8], table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
-        anyhow::ensure!(input.len() % 48 == 0, "whole blocks required");
-        let mut out = vec![0u8; input.len() / 48 * 64];
-        for (inp, dst) in input.chunks_exact(48).zip(out.chunks_exact_mut(64)) {
-            for g in 0..16 {
-                let (s1, s2, s3) = (inp[3 * g] as u32, inp[3 * g + 1] as u32, inp[3 * g + 2] as u32);
-                let t = s2 | (s1 << 8) | (s3 << 16) | (s2 << 24);
-                dst[4 * g] = table[((t >> 10) & 0x3F) as usize];
-                dst[4 * g + 1] = table[((t >> 4) & 0x3F) as usize];
-                dst[4 * g + 2] = table[((t >> 22) & 0x3F) as usize];
-                dst[4 * g + 3] = table[((t >> 16) & 0x3F) as usize];
-            }
-        }
-        Ok(out)
+    fn encode_blocks_into(
+        &self,
+        input: &[u8],
+        table: &[u8; 64],
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % RAW_BLOCK == 0, "whole blocks required");
+        encode_blocks_scalar(input, table, out);
+        Ok(())
     }
 
-    fn decode_blocks(&self, input: &[u8], dtable: &[u8; 128]) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
-        anyhow::ensure!(input.len() % 64 == 0, "whole blocks required");
-        let rows = input.len() / 64;
-        let mut out = vec![0u8; rows * 48];
-        let mut errs = vec![0u8; rows];
-        for ((inp, dst), err) in input
-            .chunks_exact(64)
-            .zip(out.chunks_exact_mut(48))
-            .zip(errs.iter_mut())
-        {
-            let mut acc = 0u8;
-            for g in 0..16 {
-                let c = [inp[4 * g], inp[4 * g + 1], inp[4 * g + 2], inp[4 * g + 3]];
-                let v = [
-                    dtable[(c[0] & 0x7F) as usize],
-                    dtable[(c[1] & 0x7F) as usize],
-                    dtable[(c[2] & 0x7F) as usize],
-                    dtable[(c[3] & 0x7F) as usize],
-                ];
-                acc |= c[0] | v[0] | c[1] | v[1] | c[2] | v[2] | c[3] | v[3];
-                let ab = ((v[0] as u32) << 6) | v[1] as u32;
-                let cd = ((v[2] as u32) << 6) | v[3] as u32;
-                let w = (ab << 12) | cd;
-                dst[3 * g] = (w >> 16) as u8;
-                dst[3 * g + 1] = (w >> 8) as u8;
-                dst[3 * g + 2] = w as u8;
-            }
-            *err = acc;
-        }
-        Ok((out, errs))
+    fn decode_blocks_into(
+        &self,
+        input: &[u8],
+        dtable: &[u8; 128],
+        out: &mut Vec<u8>,
+        errs: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(input.len() % B64_BLOCK == 0, "whole blocks required");
+        decode_blocks_scalar(input, dtable, out, errs);
+        Ok(())
     }
 }
 
@@ -221,5 +560,75 @@ mod tests {
         let a = Alphabet::standard();
         assert!(be.encode_blocks(&[0u8; 47], a.encode_table().as_bytes()).is_err());
         assert!(be.decode_blocks(&[b'A'; 63], a.decode_table().as_bytes()).is_err());
+    }
+
+    #[test]
+    fn into_variants_append_and_reuse() {
+        let a = Alphabet::standard();
+        let be = RustBackend;
+        let data = vec![0x5Au8; 48 * 3];
+        let mut out = Vec::new();
+        let mut errs = Vec::new();
+        be.encode_blocks_into(&data, a.encode_table().as_bytes(), &mut out).unwrap();
+        assert_eq!(out.len(), 64 * 3);
+        let enc = out.clone();
+        out.clear();
+        be.decode_blocks_into(&enc, a.decode_table().as_bytes(), &mut out, &mut errs).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(errs, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn table_reconstruction_roundtrips() {
+        for a in [Alphabet::standard(), Alphabet::url(), Alphabet::imap()] {
+            let chars = chars_from_dtable(a.decode_table().as_bytes()).unwrap();
+            assert_eq!(&chars, a.chars());
+            let rebuilt = alphabet_from_chars(&chars).unwrap();
+            assert_eq!(rebuilt.chars(), a.chars());
+        }
+        // A degenerate table (all invalid) must be rejected.
+        assert!(chars_from_dtable(&[0x80u8; 128]).is_none());
+    }
+
+    fn check_backend_matches_rust(be: &dyn BlockBackend, a: &Alphabet) {
+        let rust = RustBackend;
+        let data: Vec<u8> = (0..48 * 9).map(|i| (i * 53 % 256) as u8).collect();
+        let enc = be.encode_blocks(&data, a.encode_table().as_bytes()).unwrap();
+        assert_eq!(enc, rust.encode_blocks(&data, a.encode_table().as_bytes()).unwrap());
+        let (dec, errs) = be.decode_blocks(&enc, a.decode_table().as_bytes()).unwrap();
+        assert_eq!(dec, data);
+        assert!(errs.iter().all(|e| e & 0x80 == 0));
+        // Corrupt one row: flags must match the rust backend's.
+        let mut bad = enc;
+        bad[64 * 4 + 11] = b'=';
+        let (_, errs) = be.decode_blocks(&bad, a.decode_table().as_bytes()).unwrap();
+        let (_, want) = rust.decode_blocks(&bad, a.decode_table().as_bytes()).unwrap();
+        assert_eq!(errs, want);
+    }
+
+    #[test]
+    fn swar_backend_differential() {
+        for a in [Alphabet::standard(), Alphabet::url(), Alphabet::imap()] {
+            check_backend_matches_rust(&SwarBackend::default(), &a);
+        }
+    }
+
+    #[test]
+    fn avx2_backend_differential() {
+        if !Avx2Codec::available() {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        // url lacks the 2018 structure: exercises the per-call fallback.
+        for a in [Alphabet::standard(), Alphabet::url(), Alphabet::imap()] {
+            check_backend_matches_rust(&Avx2Backend::default(), &a);
+        }
+    }
+
+    #[test]
+    fn native_factory_constructs_a_tier() {
+        let be = native_factory()().unwrap();
+        assert!(["avx512", "avx2", "swar"].contains(&be.name()));
+        check_backend_matches_rust(be.as_ref(), &Alphabet::standard());
     }
 }

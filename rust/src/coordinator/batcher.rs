@@ -143,11 +143,31 @@ impl PendingSet {
     }
 }
 
+/// Reusable per-worker buffers: the coalesced input and the backend's
+/// output/error areas live across batches, so a steady-state worker
+/// performs no per-batch `vec![0u8; …]` allocations (capacity grows to
+/// the largest batch seen and stays).
+#[derive(Default)]
+pub struct Scratch {
+    input: Vec<u8>,
+    data: Vec<u8>,
+    errs: Vec<u8>,
+}
+
 /// Execute one coalesced group on the backend and distribute results.
-pub fn execute_group(backend: &dyn BlockBackend, key: &GroupKey, items: Vec<WorkItem>) -> BatchStats {
+pub fn execute_group(
+    backend: &dyn BlockBackend,
+    key: &GroupKey,
+    items: Vec<WorkItem>,
+    scratch: &mut Scratch,
+) -> BatchStats {
+    let Scratch { input, data, errs } = scratch;
+    input.clear();
+    data.clear();
+    errs.clear();
     let block_len = key.direction.block_len();
     let total: usize = items.iter().map(|i| i.payload.len()).sum();
-    let mut input = Vec::with_capacity(total);
+    input.reserve(total);
     for item in &items {
         input.extend_from_slice(&item.payload);
     }
@@ -155,15 +175,15 @@ pub fn execute_group(backend: &dyn BlockBackend, key: &GroupKey, items: Vec<Work
     let result = match key.direction {
         Direction::Encode => {
             let table: &[u8; 64] = key.table.as_slice().try_into().expect("encode table is 64B");
-            backend.encode_blocks(&input, table).map(|data| (data, Vec::new()))
+            backend.encode_blocks_into(input, table, data)
         }
         Direction::Decode => {
             let table: &[u8; 128] = key.table.as_slice().try_into().expect("decode table is 128B");
-            backend.decode_blocks(&input, table)
+            backend.decode_blocks_into(input, table, data, errs)
         }
     };
     match result {
-        Ok((data, err)) => {
+        Ok(()) => {
             let out_block = match key.direction {
                 Direction::Encode => B64_BLOCK,
                 Direction::Decode => RAW_BLOCK,
@@ -172,10 +192,12 @@ pub fn execute_group(backend: &dyn BlockBackend, key: &GroupKey, items: Vec<Work
             let mut err_off = 0;
             for item in items {
                 let item_rows = item.payload.len() / block_len;
+                // The per-item copies are the responses themselves (they
+                // are sent to another thread and must own their bytes).
                 let chunk = data[data_off..data_off + item_rows * out_block].to_vec();
                 data_off += item_rows * out_block;
                 let err_chunk = if key.direction == Direction::Decode {
-                    let e = err[err_off..err_off + item_rows].to_vec();
+                    let e = errs[err_off..err_off + item_rows].to_vec();
                     err_off += item_rows;
                     e
                 } else {
@@ -219,6 +241,7 @@ pub fn run_batcher(
     on_flush: impl Fn(&BatchStats),
 ) {
     let mut pending = PendingSet::new(config);
+    let mut scratch = Scratch::default();
     loop {
         let timeout = pending
             .next_deadline()
@@ -228,23 +251,23 @@ pub fn run_batcher(
             Ok(BatcherMsg::Submit(key, item)) => {
                 if let Some(full) = pending.push(key, item) {
                     let items = pending.take(&full);
-                    on_flush(&execute_group(backend, &full, items));
+                    on_flush(&execute_group(backend, &full, items, &mut scratch));
                 }
             }
             Ok(BatcherMsg::Flush) => {
                 for (key, items) in pending.drain() {
-                    on_flush(&execute_group(backend, &key, items));
+                    on_flush(&execute_group(backend, &key, items, &mut scratch));
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 for key in pending.expired(Instant::now()) {
                     let items = pending.take(&key);
-                    on_flush(&execute_group(backend, &key, items));
+                    on_flush(&execute_group(backend, &key, items, &mut scratch));
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (key, items) in pending.drain() {
-                    on_flush(&execute_group(backend, &key, items));
+                    on_flush(&execute_group(backend, &key, items, &mut scratch));
                 }
                 return;
             }
@@ -322,7 +345,7 @@ mod tests {
         let backend = RustBackend;
         let (i1, r1) = item(1);
         let (i2, r2) = item(3);
-        let stats = execute_group(&backend, &enc_key(), vec![i1, i2]);
+        let stats = execute_group(&backend, &enc_key(), vec![i1, i2], &mut Scratch::default());
         assert!(stats.ok);
         assert_eq!(stats.rows, 4);
         assert_eq!(r1.recv().unwrap().unwrap().data.len(), 64);
@@ -343,6 +366,7 @@ mod tests {
             &backend,
             &key,
             vec![WorkItem { payload, reply: tx, enqueued: Instant::now() }],
+            &mut Scratch::default(),
         );
         let res = rx.recv().unwrap().unwrap();
         assert_eq!(res.data.len(), 96);

@@ -22,7 +22,7 @@ use super::backpressure::{Gate, Rejected};
 use super::batcher::{BatchResult, Direction, GroupKey, WorkItem};
 use super::metrics::Metrics;
 use super::scheduler::{Scheduler, SchedulerConfig};
-use crate::base64::validate::{decode_tail, split_tail};
+use crate::base64::validate::{decode_quads_into, decode_tail, first_invalid, split_tail};
 use crate::base64::{Alphabet, Codec, DecodeError, Mode, B64_BLOCK, RAW_BLOCK};
 
 /// What the caller wants done.
@@ -212,9 +212,7 @@ impl Router {
         // The paper's single end-of-stream check over the deferred flags.
         if let Some(row) = batch.err.iter().position(|&e| e & 0x80 != 0) {
             let row_bytes = &body[row * B64_BLOCK..(row + 1) * B64_BLOCK];
-            let col = row_bytes
-                .iter()
-                .position(|&c| alphabet.value_of(c).is_none())
+            let col = first_invalid(row_bytes, alphabet.decode_table().as_bytes())
                 .expect("flagged row contains an invalid byte");
             return Outcome::Invalid(DecodeError::InvalidByte {
                 offset: row * B64_BLOCK + col,
@@ -240,21 +238,15 @@ impl Router {
         tail: &[u8],
         out: &mut Vec<u8>,
     ) -> Result<(), DecodeError> {
-        let table = alphabet.decode_table();
-        for (q, quad) in body[blocks_len..].chunks_exact(4).enumerate() {
-            let mut vals = [0u8; 4];
-            for i in 0..4 {
-                let c = quad[i];
-                let v = table.lookup(c);
-                if (c | v) & 0x80 != 0 {
-                    return Err(DecodeError::InvalidByte { offset: blocks_len + q * 4 + i, byte: c });
-                }
-                vals[i] = v;
-            }
-            out.push((vals[0] << 2) | (vals[1] >> 4));
-            out.push((vals[1] << 4) | (vals[2] >> 2));
-            out.push((vals[2] << 6) | vals[3]);
-        }
+        let rest = &body[blocks_len..];
+        let start = out.len();
+        out.resize(start + rest.len() / 4 * 3, 0);
+        decode_quads_into(
+            rest,
+            alphabet.decode_table().as_bytes(),
+            blocks_len,
+            &mut out[start..],
+        )?;
         decode_tail(tail, alphabet.pad(), mode, body.len(), |c| alphabet.value_of(c), out)?;
         Ok(())
     }

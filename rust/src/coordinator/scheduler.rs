@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use super::backend::BackendFactory;
 use super::batcher::{
-    execute_group, BatcherConfig, BatcherMsg, GroupKey, PendingSet, WorkItem,
+    execute_group, BatcherConfig, BatcherMsg, GroupKey, PendingSet, Scratch, WorkItem,
 };
 use super::metrics::Metrics;
 
@@ -55,8 +55,11 @@ impl Scheduler {
                 let metrics = metrics.clone();
                 std::thread::spawn(move || {
                     // Each worker owns a thread-local backend (the PJRT
-                    // client is not Send/Sync).
+                    // client is not Send/Sync) and reusable scratch
+                    // buffers, so steady-state batches allocate nothing
+                    // beyond the per-item reply payloads.
                     let backend = factory().expect("backend construction");
+                    let mut scratch = Scratch::default();
                     loop {
                         let job = job_rx.lock().unwrap().recv();
                         match job {
@@ -65,7 +68,8 @@ impl Scheduler {
                                     .iter()
                                     .map(|i| i.payload.len() / key.direction.block_len())
                                     .sum();
-                                let stats = execute_group(backend.as_ref(), &key, items);
+                                let stats =
+                                    execute_group(backend.as_ref(), &key, items, &mut scratch);
                                 metrics.batches.fetch_add(stats.launches, Ordering::Relaxed);
                                 metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
                                 if !stats.ok {

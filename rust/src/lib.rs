@@ -8,8 +8,9 @@
 //!   Pallas kernels inside batched JAX graphs, AOT-lowered to HLO text in
 //!   `artifacts/` (see `python/compile/`).
 //! * **Layer 3** (this crate): a production-style codec service — PJRT
-//!   [`runtime`], pure-Rust [`base64`] substrate codecs (scalar / SWAR /
-//!   block: the paper's baselines and tail path), a batching
+//!   [`runtime`] (behind the `pjrt` feature), pure-Rust [`base64`]
+//!   substrate codecs (scalar / SWAR / block / AVX2 / AVX-512) behind the
+//!   zero-allocation tier-dispatched [`base64::Engine`], a batching
 //!   [`coordinator`], a threaded [`server`], the [`workload`] generators
 //!   and the [`perfmodel`] used to regenerate the paper's figures.
 //!
@@ -17,6 +18,27 @@
 //! the `b64simd` binary is self-contained.
 //!
 //! ## Quickstart
+//!
+//! The hot path is the allocation-free slice API on the engine, which
+//! performs CPU feature detection exactly once (AVX-512 VBMI → AVX2 →
+//! SWAR → scalar block; force with `B64SIMD_TIER=avx512|avx2|swar|scalar`
+//! or [`base64::Engine::with_tier`]):
+//!
+//! ```
+//! use b64simd::base64::{encoded_len, Engine};
+//!
+//! let engine = Engine::get(); // detection + table setup, once
+//! let mut out = vec![0u8; encoded_len(11)];
+//! let n = engine.encode_slice(b"hello world", &mut out);
+//! assert_eq!(&out[..n], b"aGVsbG8gd29ybGQ=");
+//!
+//! let mut raw = vec![0u8; engine.decoded_len_of(&out)];
+//! let m = engine.decode_slice(&out, &mut raw).unwrap();
+//! assert_eq!(&raw[..m], b"hello world");
+//! ```
+//!
+//! The `Vec`-returning [`base64::Codec`] methods remain as thin wrappers
+//! over the same slice cores:
 //!
 //! ```
 //! use b64simd::base64::{Alphabet, block::BlockCodec, Codec};
@@ -27,6 +49,11 @@
 //! let decoded = codec.decode(&encoded).unwrap();
 //! assert_eq!(decoded, b"hello world");
 //! ```
+
+// The substrate codecs mirror the paper's lane-oriented formulation;
+// index-loop style is deliberate there and clippy's suggestions would
+// obscure the instruction-per-stage mapping.
+#![allow(clippy::needless_range_loop)]
 
 pub mod base64;
 pub mod coordinator;

@@ -3,16 +3,20 @@
 //! ```text
 //! b64simd encode [--alphabet NAME] [--in FILE] [--out FILE]
 //! b64simd decode [--alphabet NAME] [--forgiving] [--in FILE] [--out FILE]
-//! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend pjrt|rust|native]
+//! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
 //! b64simd selftest [--artifacts DIR]
 //! b64simd model  [--figure 4 | --hardware]
 //! b64simd opcount
 //! ```
+//!
+//! Encode/decode run on the tier-dispatched `Engine` (AVX-512 VBMI →
+//! AVX2 → SWAR → scalar block, detected once); set
+//! `B64SIMD_TIER=avx512|avx2|swar|scalar` to force a tier.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
 
-use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Mode};
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Engine, Mode};
 use b64simd::coordinator::backend::{native_factory, pjrt_factory, rust_factory};
 use b64simd::coordinator::{Router, RouterConfig};
 use b64simd::perfmodel::cache::{CacheModel, Machine, Op};
@@ -90,14 +94,14 @@ fn alphabet_arg(args: &Args) -> anyhow::Result<Alphabet> {
 }
 
 fn cmd_encode(args: &Args) -> anyhow::Result<()> {
-    let codec = BlockCodec::new(alphabet_arg(args)?);
+    let codec = Engine::new(alphabet_arg(args)?);
     let data = read_input(args)?;
     write_output(args, &codec.encode(&data))
 }
 
 fn cmd_decode(args: &Args) -> anyhow::Result<()> {
     let mode = if args.has("forgiving") { Mode::Forgiving } else { Mode::Strict };
-    let codec = BlockCodec::with_mode(alphabet_arg(args)?, mode);
+    let codec = Engine::with_mode(alphabet_arg(args)?, mode);
     let mut data = read_input(args)?;
     // Terminal convenience: strip one trailing newline.
     if data.last() == Some(&b'\n') {
@@ -113,12 +117,12 @@ fn cmd_decode(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr: std::net::SocketAddr = args.get("addr").unwrap_or("127.0.0.1:4648").parse()?;
     let workers: usize = args.get("workers").unwrap_or("2").parse()?;
-    let backend_name = args.get("backend").unwrap_or("pjrt");
+    let backend_name = args.get("backend").unwrap_or("native");
     let factory = match backend_name {
         "pjrt" => pjrt_factory(Manifest::default_dir()),
         "rust" => rust_factory(),
         "native" => native_factory(),
-        other => anyhow::bail!("unknown backend '{other}' (pjrt|rust|native)"),
+        other => anyhow::bail!("unknown backend '{other}' (native|rust|pjrt)"),
     };
     let mut config = RouterConfig::default();
     config.scheduler.workers = workers;

@@ -66,14 +66,29 @@ pub struct Manifest {
 }
 
 /// Manifest loading errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("reading manifest: {0} (run `make artifacts` first?)")]
-    Io(#[from] std::io::Error),
-    #[error("parsing manifest: {0}")]
+    Io(std::io::Error),
     Parse(String),
-    #[error("unsupported manifest: {0}")]
     Unsupported(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "reading manifest: {e} (run `make artifacts` first?)"),
+            Self::Parse(m) => write!(f, "parsing manifest: {m}"),
+            Self::Unsupported(m) => write!(f, "unsupported manifest: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 fn shape_list(v: &Value, key: &str) -> Result<Vec<Vec<usize>>, ManifestError> {

@@ -4,19 +4,39 @@
 //! entire bridge to the compiled computations at serve time:
 //!
 //! * [`artifact`] — `artifacts/manifest.json` schema and discovery;
-//! * [`client`] — `xla` crate wrapper: one [`xla::PjRtClient`], an
+//! * `client` — `xla` crate wrapper: one `xla::PjRtClient`, an
 //!   executable cache keyed by artifact name;
-//! * [`executor`] — typed encode/decode entry points marshalling `&[u8]`
+//! * `executor` — typed encode/decode entry points marshalling `&[u8]`
 //!   to/from u8 literals (zero format conversion on the hot path).
 //!
 //! The interchange format is HLO *text*: jax ≥ 0.5 emits protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Feature gating
+//!
+//! The `xla` bindings are only present behind the `pjrt` cargo feature
+//! (the default offline build cannot fetch them). Without the feature,
+//! [`Runtime`] and [`BlockExecutor`] are API-compatible stubs whose
+//! construction fails cleanly, so every caller that probes with
+//! `Runtime::new(..).ok()` falls back to the native SIMD tiers.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
 pub use artifact::{ArtifactKind, Manifest};
+
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use executor::{BlockDecodeOutput, BlockExecutor};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{BlockDecodeOutput, BlockExecutor, Runtime};

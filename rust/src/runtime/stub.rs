@@ -1,0 +1,104 @@
+//! API-compatible stand-in for the PJRT runtime when the `pjrt` feature
+//! is disabled (the default in the offline build, where the `xla`
+//! bindings cannot be fetched).
+//!
+//! [`Runtime::new`] still validates the artifact manifest — so missing
+//! artifacts report the same "run `make artifacts`" error as the real
+//! runtime — but construction always fails with a feature-gate message
+//! afterwards, and every executor entry point is unreachable by
+//! construction. Callers that probe with `Runtime::new(..).ok()` (the
+//! benches, the coordinator's `pjrt_factory`) degrade gracefully to the
+//! native tiers.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::artifact::{ArtifactKind, Manifest};
+use crate::base64::{B64_BLOCK, RAW_BLOCK};
+
+/// Stub of the process-wide PJRT runtime.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Validates the manifest, then reports the missing feature.
+    pub fn new(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let _ = Self { manifest };
+        Err(anyhow::anyhow!(
+            "b64simd was built without the `pjrt` feature; the compiled \
+             artifacts cannot be executed (use the native backend instead)"
+        ))
+    }
+
+    /// Load from [`Manifest::default_dir`].
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Eagerly compile artifacts (unreachable: construction always fails).
+    pub fn warmup(&self, _kinds: &[ArtifactKind]) -> anyhow::Result<usize> {
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+/// Result of a batched block decode (mirrors the real executor).
+pub struct BlockDecodeOutput {
+    /// `rows * 48` decoded bytes.
+    pub data: Vec<u8>,
+    /// One error byte per row; MSB set = row contained an invalid char.
+    pub err: Vec<u8>,
+}
+
+/// Stub of the typed block executor. Constructible in type terms only —
+/// a [`Runtime`] can never actually be obtained without the feature.
+pub struct BlockExecutor {
+    runtime: Arc<Runtime>,
+}
+
+impl BlockExecutor {
+    pub fn new(runtime: Arc<Runtime>) -> Self {
+        Self { runtime }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    pub fn row_class_for(&self, rows: usize) -> usize {
+        self.runtime.manifest().row_class_for(rows)
+    }
+
+    pub fn encode_blocks(&self, input: &[u8], _table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
+        assert!(input.len() % RAW_BLOCK == 0, "input must be whole 48-byte blocks");
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    pub fn decode_blocks(&self, input: &[u8], _dtable: &[u8; 128]) -> anyhow::Result<BlockDecodeOutput> {
+        assert!(input.len() % B64_BLOCK == 0, "input must be whole 64-char blocks");
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    pub fn validate_blocks(&self, input: &[u8], _dtable: &[u8; 128]) -> anyhow::Result<Vec<u8>> {
+        assert!(input.len() % B64_BLOCK == 0);
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    pub fn selftest(&self) -> anyhow::Result<bool> {
+        anyhow::bail!("pjrt feature disabled")
+    }
+}

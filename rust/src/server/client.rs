@@ -6,16 +6,31 @@ use super::proto::{read_frame, write_frame, Message, ProtoError};
 use crate::base64::Mode;
 
 /// Client-side failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ClientError {
-    #[error("proto: {0}")]
-    Proto(#[from] ProtoError),
-    #[error("connection closed")]
+    Proto(ProtoError),
     Closed,
-    #[error("server error: {0}")]
     Server(String),
-    #[error("unexpected response")]
     Unexpected,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Proto(e) => write!(f, "proto: {e}"),
+            Self::Closed => write!(f, "connection closed"),
+            Self::Server(m) => write!(f, "server error: {m}"),
+            Self::Unexpected => write!(f, "unexpected response"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> Self {
+        Self::Proto(e)
+    }
 }
 
 /// One connection to the service.

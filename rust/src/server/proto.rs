@@ -46,16 +46,31 @@ pub enum Message {
 }
 
 /// Protocol-level failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ProtoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("frame too large: {0} bytes")]
+    Io(std::io::Error),
     FrameTooLarge(usize),
-    #[error("malformed frame: {0}")]
     Malformed(&'static str),
-    #[error("unknown alphabet: {0}")]
     UnknownAlphabet(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::FrameTooLarge(n) => write!(f, "frame too large: {n} bytes"),
+            Self::Malformed(m) => write!(f, "malformed frame: {m}"),
+            Self::UnknownAlphabet(a) => write!(f, "unknown alphabet: {a}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 fn mode_byte(m: Mode) -> u8 {

@@ -1,0 +1,107 @@
+//! Counting-allocator proof that the engine's slice hot path is
+//! heap-allocation-free.
+//!
+//! A thread-local counter (no cross-test interference even though the
+//! test harness runs tests on multiple threads) is bumped on every
+//! `alloc`/`realloc` issued by this thread; the assertions measure a
+//! window around `encode_slice`/`decode_slice` calls and require a delta
+//! of exactly zero. The `const`-initialized `Cell<u64>` TLS slot itself
+//! never allocates and registers no destructor, so the allocator hook
+//! cannot recurse.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use b64simd::base64::{encoded_len, Alphabet, Engine, Tier};
+use b64simd::workload::random_bytes;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn engine_slice_hot_path_allocates_nothing() {
+    // All setup — engine construction (tier detection, table building),
+    // input generation, output buffers — happens before the window.
+    let engine = Engine::get();
+    let data = random_bytes(64 * 1024, 42);
+    let mut enc = vec![0u8; encoded_len(data.len())];
+    let n = engine.encode_slice(&data, &mut enc);
+    let mut dec = vec![0u8; engine.decoded_len_of(&enc[..n])];
+
+    let before = allocs_on_this_thread();
+    for _ in 0..32 {
+        let n = engine.encode_slice(&data, &mut enc);
+        let m = engine.decode_slice(&enc[..n], &mut dec).unwrap();
+        assert_eq!(m, data.len());
+    }
+    let delta = allocs_on_this_thread() - before;
+    assert_eq!(delta, 0, "engine slice hot path performed {delta} heap allocations");
+}
+
+#[test]
+fn every_supported_tier_is_allocation_free_on_the_slice_path() {
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        // Odd length: exercises the padded-tail epilogue inside the window.
+        let data = random_bytes(48 * 100 + 29, 7);
+        let mut enc = vec![0u8; encoded_len(data.len())];
+        let n = engine.encode_slice(&data, &mut enc);
+        let mut dec = vec![0u8; engine.decoded_len_of(&enc[..n])];
+
+        let before = allocs_on_this_thread();
+        for _ in 0..8 {
+            let n = engine.encode_slice(&data, &mut enc);
+            let m = engine.decode_slice(&enc[..n], &mut dec).unwrap();
+            assert_eq!(m, data.len());
+        }
+        let delta = allocs_on_this_thread() - before;
+        assert_eq!(delta, 0, "tier {tier:?} allocated {delta} times on the slice path");
+    }
+}
+
+#[test]
+fn vec_path_does_allocate_which_is_what_the_slice_path_saves() {
+    use b64simd::base64::Codec;
+    let engine = Engine::get();
+    let data = random_bytes(4096, 3);
+    let _warm = engine.encode(&data);
+    let before = allocs_on_this_thread();
+    let enc = engine.encode(&data);
+    let dec = engine.decode(&enc).unwrap();
+    assert_eq!(dec, data);
+    assert!(
+        allocs_on_this_thread() - before >= 2,
+        "Vec path should allocate at least the two output buffers"
+    );
+}

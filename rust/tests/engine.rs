@@ -1,0 +1,146 @@
+//! Differential property tests for the tier-dispatched engine: every
+//! tier the host supports must be byte-identical to the scalar oracle on
+//! random inputs across all alphabets and both strictness modes, on both
+//! the slice and the Vec APIs, including the parallel large-input path.
+
+use b64simd::base64::scalar::ScalarCodec;
+use b64simd::base64::{
+    decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, Tier,
+};
+use b64simd::workload::{random_bytes, Rng64};
+
+fn alphabets() -> Vec<Alphabet> {
+    vec![Alphabet::standard(), Alphabet::url(), Alphabet::imap()]
+}
+
+#[test]
+fn every_tier_roundtrips_lengths_0_to_512_all_alphabets_and_modes() {
+    for tier in Tier::supported() {
+        for alphabet in alphabets() {
+            for mode in [Mode::Strict, Mode::Forgiving] {
+                let engine = Engine::with_tier_mode(alphabet.clone(), mode, tier);
+                let oracle = ScalarCodec::with_mode(alphabet.clone(), mode);
+                for len in 0..512usize {
+                    let data = random_bytes(len, ((len as u64) << 8) | tier as u64);
+                    // Slice path against the oracle.
+                    let mut enc = vec![0u8; encoded_len(len)];
+                    let n = engine.encode_slice(&data, &mut enc);
+                    let want = oracle.encode(&data);
+                    assert_eq!(
+                        &enc[..n],
+                        &want[..],
+                        "encode tier={tier:?} alphabet={} mode={mode:?} len={len}",
+                        alphabet.name()
+                    );
+                    let mut dec = vec![0u8; engine.decoded_len_of(&enc[..n])];
+                    let m = engine.decode_slice(&enc[..n], &mut dec).unwrap();
+                    assert_eq!(
+                        &dec[..m],
+                        &data[..],
+                        "decode tier={tier:?} alphabet={} mode={mode:?} len={len}",
+                        alphabet.name()
+                    );
+                    // Vec wrappers route through the same cores.
+                    assert_eq!(engine.encode(&data), want);
+                    assert_eq!(engine.decode(&want).unwrap(), data);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_tier_forgiving_accepts_unpadded_input() {
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier_mode(Alphabet::standard(), Mode::Forgiving, tier);
+        let oracle = ScalarCodec::with_mode(Alphabet::standard(), Mode::Forgiving);
+        for len in [1usize, 2, 3, 50, 100, 200] {
+            let data = random_bytes(len, len as u64);
+            let mut enc = oracle.encode(&data);
+            while enc.last() == Some(&b'=') {
+                enc.pop();
+            }
+            assert_eq!(engine.decode(&enc).unwrap(), data, "tier={tier:?} len={len}");
+        }
+    }
+}
+
+#[test]
+fn every_tier_rejects_corruption_with_scalar_identical_errors() {
+    let mut rng = Rng64::new(0xE22);
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        let oracle = ScalarCodec::new(Alphabet::standard());
+        let data = random_bytes(400, 17);
+        let clean = oracle.encode(&data);
+        for _ in 0..64 {
+            let mut enc = clean.clone();
+            let pos = rng.below(enc.len() as u64) as usize;
+            let bad = match rng.below(3) {
+                0 => b'!',
+                1 => 0xC3,
+                _ => 0x00,
+            };
+            if enc[pos] == bad {
+                continue;
+            }
+            enc[pos] = bad;
+            let want = oracle.decode(&enc).unwrap_err();
+            let mut out = vec![0u8; decoded_len_upper(enc.len())];
+            let got = engine.decode_slice(&enc, &mut out).unwrap_err();
+            assert_eq!(got, want, "tier={tier:?} pos={pos} bad={bad:#x}");
+        }
+    }
+}
+
+#[test]
+fn parallel_paths_match_serial_across_tiers() {
+    use b64simd::base64::engine::PAR_THRESHOLD;
+    let data = random_bytes(PAR_THRESHOLD + 48 * 7 + 5, 23);
+    let oracle = ScalarCodec::new(Alphabet::standard());
+    let want_enc = oracle.encode(&data);
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        let mut enc = vec![0u8; encoded_len(data.len())];
+        let n = engine.encode_par(&data, &mut enc, 3);
+        assert_eq!(&enc[..n], &want_enc[..], "tier={tier:?}");
+        let mut dec = vec![0u8; engine.decoded_len_of(&enc[..n])];
+        let m = engine.decode_par(&enc[..n], &mut dec, 3).unwrap();
+        assert_eq!(&dec[..m], &data[..], "tier={tier:?}");
+        // An error deep in another span is still found and attributed.
+        let mut bad = enc.clone();
+        bad[enc.len() - 10] = 0x01;
+        let mut out = vec![0u8; decoded_len_upper(bad.len())];
+        match engine.decode_par(&bad, &mut out, 3) {
+            Err(DecodeError::InvalidByte { offset, byte: 0x01 }) => {
+                assert_eq!(offset, enc.len() - 10, "tier={tier:?}")
+            }
+            other => panic!("tier={tier:?}: expected invalid byte, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn forgiving_decode_of_degenerate_padding_is_exact() {
+    // decoded_len_of over-counts for 3+ trailing pads; decode must trim.
+    for tier in Tier::supported() {
+        let e = Engine::with_tier_mode(Alphabet::standard(), Mode::Forgiving, tier);
+        assert_eq!(e.decode(b"Zm9v====").unwrap(), b"foo", "tier={tier:?}");
+        assert_eq!(e.decode(b"Zg======").unwrap(), b"f", "tier={tier:?}");
+        assert_eq!(e.decode(b"========").unwrap(), b"", "tier={tier:?}");
+    }
+}
+
+#[test]
+fn forced_tier_env_names_are_all_parseable() {
+    for name in ["avx512", "avx2", "swar", "scalar"] {
+        let t = Tier::parse(name).unwrap();
+        assert!(Engine::with_tier(Alphabet::standard(), t).tier().available());
+    }
+}
+
+#[test]
+fn detected_tier_is_best_available() {
+    let best = *Tier::supported().first().expect("at least scalar");
+    assert_eq!(Engine::get().tier(), best);
+}

@@ -1,0 +1,108 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so external crates cannot be
+//! fetched; this vendored shim provides the small subset of `anyhow` the
+//! workspace uses: [`Error`], [`Result`], and the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros. Like the real crate, `Error` is constructible
+//! from any `std::error::Error` via `?` and does not itself implement
+//! `std::error::Error` (which is what makes the blanket `From` possible).
+
+use std::fmt;
+
+/// A type-erased, message-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}", stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    fn guarded(x: usize) -> Result<usize> {
+        ensure!(x < 10, "too big: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        assert_eq!(io_fail().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("bad {} at {}", "byte", 7);
+        assert_eq!(e.to_string(), "bad byte at 7");
+        assert!(guarded(3).is_ok());
+        assert_eq!(guarded(12).unwrap_err().to_string(), "too big: 12");
+        fn bailer() -> Result<()> {
+            bail!("gone");
+        }
+        assert_eq!(bailer().unwrap_err().to_string(), "gone");
+    }
+}
