@@ -1,0 +1,131 @@
+//! MIME wrapped-workload bench: does the fused whitespace path really
+//! run at engine speed once data leaves L1?
+//!
+//! For raw payloads of 4 KiB / 64 KiB / 4 MiB (the last is the
+//! out-of-cache regime the paper's memcpy-speed claim is about), per
+//! supported tier:
+//!
+//! * `flat`    — the engine's unwrapped `encode_slice` / `decode_slice`
+//!   (the ceiling the fused path is measured against);
+//! * `fused`   — `encode_wrapped_slice` (CRLFs written inline) and
+//!   `decode_slice_ws` (whitespace compacted inside the SIMD loop);
+//! * `twopass` — the old implementation: encode-then-recopy into a
+//!   wrapped `Vec`, and `filter().collect()` strip-then-decode (the
+//!   recorded baseline the fused path replaces).
+//!
+//! Acceptance bar: on the best tier, fused wrapped decode of the 4 MiB
+//! payload ≥ 0.8× the flat decode throughput.
+
+use b64simd::base64::{decoded_len_upper, encoded_len, Alphabet, Engine, Tier, Whitespace};
+use b64simd::util::bench::{bench, opts_from_env};
+use b64simd::workload::random_bytes;
+
+const LINE_LEN: usize = 76;
+
+/// The old MimeCodec::encode: flat encode, then recopy line by line.
+fn twopass_encode(e: &Engine, input: &[u8], flat_buf: &mut [u8], line_len: usize) -> Vec<u8> {
+    let n = e.encode_slice(input, flat_buf);
+    let flat = &flat_buf[..n];
+    let lines = n.div_ceil(line_len);
+    let mut out = Vec::with_capacity(n + lines.saturating_sub(1) * 2);
+    for (i, line) in flat.chunks(line_len).enumerate() {
+        if i > 0 {
+            out.extend_from_slice(b"\r\n");
+        }
+        out.extend_from_slice(line);
+    }
+    out
+}
+
+/// The old MimeCodec::decode: strip into a fresh Vec, then decode.
+fn twopass_decode(e: &Engine, input: &[u8], out: &mut [u8]) -> usize {
+    let stripped: Vec<u8> = input
+        .iter()
+        .copied()
+        .filter(|&c| !(c == b'\r' || c == b'\n'))
+        .collect();
+    e.decode_slice(&stripped, out).unwrap()
+}
+
+fn main() {
+    let opts = opts_from_env();
+    let alphabet = Alphabet::standard();
+    println!("MIME wrapped encode/decode vs flat engine (GB/s of base64 bytes, line length {LINE_LEN})");
+    println!(
+        "{:<30}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}",
+        "tier/size", "enc-flat", "enc-fuse", "enc-2pass", "dec-flat", "dec-fuse", "dec-2pass"
+    );
+
+    let mut headline: Option<f64> = None;
+
+    for tier in Tier::supported() {
+        let e = Engine::with_tier(alphabet.clone(), tier);
+        for (label, raw_len) in [("4KiB", 4usize << 10), ("64KiB", 64 << 10), ("4MiB", 4 << 20)] {
+            let data = random_bytes(raw_len, raw_len as u64);
+            let b64_len = encoded_len(raw_len);
+            let wrapped_len = e.encoded_wrapped_len(raw_len, LINE_LEN);
+            let mut flat_buf = vec![0u8; b64_len];
+            let mut wrapped_buf = vec![0u8; wrapped_len];
+            let mut dec_buf = vec![0u8; decoded_len_upper(wrapped_len)];
+            e.encode_slice(&data, &mut flat_buf);
+            let flat = flat_buf.clone();
+            e.encode_wrapped_slice(&data, &mut wrapped_buf, LINE_LEN);
+            let wrapped = wrapped_buf.clone();
+
+            let enc_flat = bench("enc-flat", b64_len, &opts, || {
+                std::hint::black_box(e.encode_slice(std::hint::black_box(&data), &mut flat_buf));
+            });
+            let enc_fused = bench("enc-fused", b64_len, &opts, || {
+                std::hint::black_box(e.encode_wrapped_slice(
+                    std::hint::black_box(&data),
+                    &mut wrapped_buf,
+                    LINE_LEN,
+                ));
+            });
+            let enc_two = bench("enc-twopass", b64_len, &opts, || {
+                std::hint::black_box(twopass_encode(
+                    &e,
+                    std::hint::black_box(&data),
+                    &mut flat_buf,
+                    LINE_LEN,
+                ));
+            });
+            let dec_flat = bench("dec-flat", b64_len, &opts, || {
+                std::hint::black_box(
+                    e.decode_slice(std::hint::black_box(&flat), &mut dec_buf).unwrap(),
+                );
+            });
+            let dec_fused = bench("dec-fused", b64_len, &opts, || {
+                std::hint::black_box(
+                    e.decode_slice_ws(std::hint::black_box(&wrapped), &mut dec_buf, Whitespace::CrLf)
+                        .unwrap(),
+                );
+            });
+            let dec_two = bench("dec-twopass", b64_len, &opts, || {
+                std::hint::black_box(twopass_decode(&e, std::hint::black_box(&wrapped), &mut dec_buf));
+            });
+
+            println!(
+                "{:<30}{:>10.3}{:>10.3}{:>10.3}{:>10.3}{:>10.3}{:>10.3}",
+                format!("{}/{label}", tier.name()),
+                enc_flat.gbps,
+                enc_fused.gbps,
+                enc_two.gbps,
+                dec_flat.gbps,
+                dec_fused.gbps,
+                dec_two.gbps
+            );
+
+            if label == "4MiB" && headline.is_none() {
+                headline = Some(dec_fused.gbps / dec_flat.gbps);
+            }
+        }
+    }
+
+    if let Some(ratio) = headline {
+        println!(
+            "\nbest-tier 4 MiB wrapped decode: fused/flat = {ratio:.2}x (target >= 0.8x; \
+             twopass column is the recorded strip-pass baseline)"
+        );
+    }
+}

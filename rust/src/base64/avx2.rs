@@ -25,6 +25,8 @@ use std::arch::x86_64::*;
 
 use super::block::BlockCodec;
 use super::validate::{decode_quads_into, decode_tail_into, split_tail, DecodeError, Mode};
+#[cfg(target_arch = "x86_64")]
+use super::validate::Whitespace;
 use super::{encoded_len, Alphabet, Codec};
 
 /// Bytes consumed per encode iteration (two 12-byte lane loads).
@@ -283,6 +285,54 @@ mod kernels {
         }
         (iters * DEC_IN, None)
     }
+
+    /// Movemask-driven whitespace compaction (the engine's fused-decode
+    /// staging step on AVX2-class hosts): 32-byte loads, `vpcmpeqb` per
+    /// whitespace character OR-ed into one register, `vpmovmskb` to a
+    /// 32-bit mask. Clean vectors are copied with a single store; dirty
+    /// ones copy the significant run up to the first skipped byte.
+    /// Returns `(src_consumed, dst_written)`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+        let cr = _mm256_set1_epi8(b'\r' as i8);
+        let lf = _mm256_set1_epi8(b'\n' as i8);
+        let sp = _mm256_set1_epi8(b' ' as i8);
+        let ht = _mm256_set1_epi8(b'\t' as i8);
+        let all = ws == Whitespace::All;
+        let (mut r, mut w) = (0usize, 0usize);
+        while r + 32 <= src.len() && w + 32 <= dst.len() {
+            let v = _mm256_loadu_si256(src.as_ptr().add(r) as *const _);
+            let mut m = _mm256_or_si256(_mm256_cmpeq_epi8(v, cr), _mm256_cmpeq_epi8(v, lf));
+            if all {
+                let m2 = _mm256_or_si256(_mm256_cmpeq_epi8(v, sp), _mm256_cmpeq_epi8(v, ht));
+                m = _mm256_or_si256(m, m2);
+            }
+            let mask = _mm256_movemask_epi8(m) as u32;
+            if mask == 0 {
+                _mm256_storeu_si256(dst.as_mut_ptr().add(w) as *mut _, v);
+                r += 32;
+                w += 32;
+            } else {
+                // Copy the run below the first whitespace byte, skip it.
+                let k = mask.trailing_zeros() as usize;
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(r), dst.as_mut_ptr().add(w), k);
+                w += k;
+                r += k + 1;
+            }
+        }
+        let (rt, wt) = crate::base64::swar::compact_ws(&src[r..], &mut dst[w..], ws);
+        (r + rt, w + wt)
+    }
+}
+
+/// Safe wrapper over [`kernels::compact_ws`]; the engine stores this as
+/// its compaction function on AVX2-class tiers.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+    debug_assert!(Avx2Codec::available());
+    // SAFETY: the engine only selects this function after
+    // `Avx2Codec::available()` returned true.
+    unsafe { kernels::compact_ws(src, dst, ws) }
 }
 
 impl Avx2Codec {
@@ -487,6 +537,39 @@ mod tests {
             enc[pos] = 0xE8;
             assert!(c.decode(&enc).is_err(), "pos={pos}");
             enc[pos] = orig;
+        }
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn movemask_compaction_matches_scalar_reference() {
+        if skip() {
+            return;
+        }
+        use crate::base64::validate::Whitespace;
+        let mut x: u32 = 0x5EED;
+        for len in [0usize, 1, 31, 32, 33, 63, 64, 100, 256, 1000] {
+            let src: Vec<u8> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                    match x >> 29 {
+                        0 => b'\r',
+                        1 => b'\n',
+                        2 => b' ',
+                        _ => b'A' + (x >> 24 & 0x0F) as u8,
+                    }
+                })
+                .collect();
+            for ws in [Whitespace::CrLf, Whitespace::All] {
+                for cap in [len, len / 2, 7] {
+                    let mut a = vec![0u8; cap];
+                    let mut b = vec![0u8; cap];
+                    let got = compact_ws(&src, &mut a, ws);
+                    let want = crate::base64::scalar::compact_ws(&src, &mut b, ws);
+                    assert_eq!(got, want, "len={len} cap={cap} ws={ws:?}");
+                    assert_eq!(a[..got.1], b[..want.1], "len={len} cap={cap} ws={ws:?}");
+                }
+            }
         }
     }
 

@@ -26,6 +26,8 @@ use super::block::BlockCodec;
 use super::validate::{
     decode_quads_into, decode_tail_into, first_invalid, split_tail, DecodeError, Mode,
 };
+#[cfg(target_arch = "x86_64")]
+use super::validate::Whitespace;
 use super::{encoded_len, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 
 /// The paper's §3 algorithm on real 512-bit registers.
@@ -67,6 +69,21 @@ impl Avx512Codec {
 
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
+    }
+
+    /// True iff the host additionally supports AVX-512 VBMI2 — the ISA
+    /// level of `vpcompressb`, which the engine's fused whitespace decode
+    /// uses for in-register compaction (Clausecker & Lemire's AVX-512
+    /// transcoding trick applied to byte removal).
+    pub fn vbmi2_available() -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            Self::available() && is_x86_feature_detected!("avx512vbmi2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
     }
 }
 
@@ -175,6 +192,50 @@ pub mod kernels {
         // -- vpmovb2m, once per stream.
         _mm512_movepi8_mask(error) as u64
     }
+
+    /// Mask-and-compress whitespace compaction: classify the skipped
+    /// bytes with `vpcmpeqb` k-mask compares, then compact the kept
+    /// bytes in-register with `vpcompressb` (`_mm512_maskz_compress_epi8`)
+    /// and advance the destination by the mask popcount — irregular byte
+    /// *removal* fused into the wide loop with no per-byte branches.
+    /// Requires 64 writable bytes of headroom in `dst` per iteration
+    /// (the full register is stored; the slack is overwritten by the
+    /// next store or ignored by the returned count).
+    /// Returns `(src_consumed, dst_written)`.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi2")]
+    pub unsafe fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+        let cr = _mm512_set1_epi8(b'\r' as i8);
+        let lf = _mm512_set1_epi8(b'\n' as i8);
+        let sp = _mm512_set1_epi8(b' ' as i8);
+        let ht = _mm512_set1_epi8(b'\t' as i8);
+        let all = ws == Whitespace::All;
+        let (mut r, mut w) = (0usize, 0usize);
+        while r + 64 <= src.len() && w + 64 <= dst.len() {
+            let v = _mm512_loadu_si512(src.as_ptr().add(r) as *const _);
+            let mut skip: __mmask64 =
+                _mm512_cmpeq_epi8_mask(v, cr) | _mm512_cmpeq_epi8_mask(v, lf);
+            if all {
+                skip |= _mm512_cmpeq_epi8_mask(v, sp) | _mm512_cmpeq_epi8_mask(v, ht);
+            }
+            let keep = !skip;
+            let packed = _mm512_maskz_compress_epi8(keep, v);
+            _mm512_storeu_si512(dst.as_mut_ptr().add(w) as *mut _, packed);
+            w += keep.count_ones() as usize;
+            r += 64;
+        }
+        let (rt, wt) = crate::base64::swar::compact_ws(&src[r..], &mut dst[w..], ws);
+        (r + rt, w + wt)
+    }
+}
+
+/// Safe wrapper over [`kernels::compact_ws`]; the engine stores this as
+/// its compaction function on AVX-512 VBMI2 hosts.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+    debug_assert!(Avx512Codec::vbmi2_available());
+    // SAFETY: the engine only selects this function after
+    // `Avx512Codec::vbmi2_available()` returned true.
+    unsafe { kernels::compact_ws(src, dst, ws) }
 }
 
 impl Avx512Codec {
@@ -376,6 +437,40 @@ mod tests {
             let enc = c.encode(&data);
             assert_eq!(enc, s.encode(&data));
             assert_eq!(c.decode(&enc).unwrap(), data);
+        }
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn vpcompressb_compaction_matches_scalar_reference() {
+        if !Avx512Codec::vbmi2_available() {
+            eprintln!("skipping: no AVX-512 VBMI2 on this host");
+            return;
+        }
+        use crate::base64::validate::Whitespace;
+        let mut x: u32 = 0xACE1;
+        for len in [0usize, 1, 63, 64, 65, 128, 200, 1024] {
+            let src: Vec<u8> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                    match x >> 29 {
+                        0 => b'\r',
+                        1 => b'\n',
+                        2 => b' ',
+                        _ => b'A' + (x >> 24 & 0x0F) as u8,
+                    }
+                })
+                .collect();
+            for ws in [Whitespace::CrLf, Whitespace::All] {
+                for cap in [len, len / 2, 100] {
+                    let mut a = vec![0u8; cap];
+                    let mut b = vec![0u8; cap];
+                    let got = compact_ws(&src, &mut a, ws);
+                    let want = crate::base64::scalar::compact_ws(&src, &mut b, ws);
+                    assert_eq!(got, want, "len={len} cap={cap} ws={ws:?}");
+                    assert_eq!(a[..got.1], b[..want.1], "len={len} cap={cap} ws={ws:?}");
+                }
+            }
         }
     }
 

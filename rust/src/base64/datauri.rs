@@ -1,9 +1,25 @@
 //! `data:` URI handling — the web workload behind Table 3's Google-logo
 //! row (a base64 data URI embedded in the Google search page).
+//!
+//! Both [`build`] and [`parse`] are thin wrappers over the tiered
+//! [`Engine`]: the standard alphabet reuses the process-wide cached
+//! engine, encode writes straight into the URI's single output buffer
+//! (no intermediate payload `Vec`), and decode allocates exactly the
+//! payload's decoded size.
 
 use super::engine::Engine;
 use super::validate::DecodeError;
 use super::{Alphabet, Codec};
+
+/// Run `f` against an engine for `alphabet`, reusing the process-wide
+/// cached engine when the standard variant is requested.
+fn with_engine<R>(alphabet: &Alphabet, f: impl FnOnce(&Engine) -> R) -> R {
+    if *alphabet == Alphabet::standard() {
+        f(Engine::get())
+    } else {
+        f(&Engine::new(alphabet.clone()))
+    }
+}
 
 /// A parsed `data:` URI with a base64 payload.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,16 +56,18 @@ impl std::fmt::Display for DataUriError {
 
 impl std::error::Error for DataUriError {}
 
-/// Build a `data:` URI: `data:<mime>;base64,<payload>`.
+/// Build a `data:` URI: `data:<mime>;base64,<payload>`. The payload is
+/// encoded directly into the URI's buffer — one allocation total.
 pub fn build(mime_type: &str, data: &[u8], alphabet: &Alphabet) -> String {
-    let codec = Engine::new(alphabet.clone());
-    let payload = codec.encode(data);
-    let mut out = String::with_capacity(5 + mime_type.len() + 8 + payload.len());
-    out.push_str("data:");
-    out.push_str(mime_type);
-    out.push_str(";base64,");
-    out.push_str(std::str::from_utf8(&payload).expect("base64 is ASCII"));
-    out
+    with_engine(alphabet, |engine| {
+        let mut out =
+            Vec::with_capacity(5 + mime_type.len() + 8 + engine.encoded_len(data.len()));
+        out.extend_from_slice(b"data:");
+        out.extend_from_slice(mime_type.as_bytes());
+        out.extend_from_slice(b";base64,");
+        engine.encode_into(data, &mut out);
+        String::from_utf8(out).expect("mime type is str and base64 is ASCII")
+    })
 }
 
 /// Parse a base64 `data:` URI and decode its payload.
@@ -65,9 +83,7 @@ pub fn parse(uri: &str, alphabet: &Alphabet) -> Result<DataUri, DataUriError> {
     if !header.split(';').any(|p| p == "base64") {
         return Err(DataUriError::NotBase64);
     }
-    let codec = Engine::new(alphabet.clone());
-    let data = codec
-        .decode(payload.as_bytes())
+    let data = with_engine(alphabet, |engine| engine.decode(payload.as_bytes()))
         .map_err(DataUriError::Decode)?;
     Ok(DataUri { mime_type, data })
 }

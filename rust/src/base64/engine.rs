@@ -45,7 +45,9 @@ use super::avx2::Avx2Codec;
 use super::avx512::Avx512Codec;
 use super::block::BlockCodec;
 use super::swar::SwarCodec;
-use super::validate::{decode_quads_into, decode_tail_into, split_tail};
+use super::validate::{
+    decode_quads_into, decode_tail_into, rebase_ws_error, split_tail, Whitespace,
+};
 use super::{decoded_len, encoded_len, Alphabet, Codec, DecodeError, Mode, B64_BLOCK, RAW_BLOCK};
 
 /// Inputs below this many bytes stay single-threaded in the `_par` paths
@@ -195,12 +197,41 @@ fn kernels_for(tier: Tier) -> Kernels {
     }
 }
 
+/// Whitespace compaction kernel: copy non-skipped bytes from `src` into
+/// `dst` until `src` is exhausted or `dst` is full, returning
+/// `(src_consumed, dst_written)`. This is the staging step of the fused
+/// whitespace decode.
+type CompactFn = fn(&[u8], &mut [u8], Whitespace) -> (usize, usize);
+
+/// Pick the best compaction the tier + host supports. The SIMD tiers
+/// prefer `vpcompressb` (AVX-512 VBMI2) and fall back to AVX2 movemask
+/// compaction, then word-at-a-time SWAR; the forced scalar tier keeps a
+/// byte-at-a-time reference loop so `B64SIMD_TIER=scalar` really is a
+/// fully scalar pipeline.
+fn compact_for(tier: Tier) -> CompactFn {
+    if tier == Tier::Scalar {
+        return super::scalar::compact_ws;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if tier == Tier::Avx512 && Avx512Codec::vbmi2_available() {
+            return super::avx512::compact_ws;
+        }
+        if matches!(tier, Tier::Avx512 | Tier::Avx2) && Avx2Codec::available() {
+            return super::avx2::compact_ws;
+        }
+    }
+    super::swar::compact_ws
+}
+
 /// The allocation-free, tier-dispatched codec facade.
 pub struct Engine {
     alphabet: Alphabet,
     mode: Mode,
     tier: Tier,
     kernels: Kernels,
+    /// Whitespace compaction for the fused decode (tier-matched).
+    compact: CompactFn,
     /// Scalar block codec: the epilogue/tail path of every tier and the
     /// bulk path of [`Tier::Scalar`].
     block: BlockCodec,
@@ -250,6 +281,7 @@ impl Engine {
             .then(|| Avx512Codec::with_mode(alphabet.clone(), mode));
         Engine {
             kernels: kernels_for(tier),
+            compact: compact_for(tier),
             alphabet,
             mode,
             tier,
@@ -328,6 +360,183 @@ impl Engine {
             &mut out[w..],
         )?;
         Ok(w + t)
+    }
+
+    /// Exact output size of [`Self::encode_wrapped_slice`] for `n` input
+    /// bytes at `line_len` characters per line. Panics on the same
+    /// `line_len` values `encode_wrapped_slice` rejects, so a sizing
+    /// mistake surfaces here rather than as a wrong buffer length.
+    pub fn encoded_wrapped_len(&self, n: usize, line_len: usize) -> usize {
+        assert!(
+            line_len >= 4 && line_len % 4 == 0,
+            "line length must be a positive multiple of 4"
+        );
+        let flat = encoded_len(n);
+        if flat == 0 {
+            0
+        } else {
+            flat + (flat - 1) / line_len * 2
+        }
+    }
+
+    /// Encode `input` as CRLF-wrapped base64 (RFC 2045 style) into
+    /// `out[0..]`, returning the bytes written. `line_len` must be a
+    /// positive multiple of 4; the final line carries no trailing CRLF.
+    ///
+    /// The CRLFs are written inline as each line's characters are stored
+    /// — there is no flat-encode-then-recopy pass, and nothing is
+    /// allocated. Each full line is a whole number of 3-byte groups, so
+    /// every line but the last runs the tier's bulk kernel with a short
+    /// scalar epilogue and no padding.
+    pub fn encode_wrapped_slice(&self, input: &[u8], out: &mut [u8], line_len: usize) -> usize {
+        assert!(
+            line_len >= 4 && line_len % 4 == 0,
+            "line length must be a positive multiple of 4"
+        );
+        let total = self.encoded_wrapped_len(input.len(), line_len);
+        assert!(out.len() >= total, "output buffer too small");
+        let raw_per_line = line_len / 4 * 3;
+        let (mut r, mut w) = (0usize, 0usize);
+        while input.len() - r > raw_per_line {
+            self.encode_slice(&input[r..r + raw_per_line], &mut out[w..w + line_len]);
+            r += raw_per_line;
+            w += line_len;
+            out[w] = b'\r';
+            out[w + 1] = b'\n';
+            w += 2;
+        }
+        w += self.encode_slice(&input[r..], &mut out[w..]);
+        debug_assert_eq!(w, total);
+        w
+    }
+
+    /// Decode `input` into `out[0..]`, skipping the bytes `ws` names,
+    /// and return the bytes written. This is the fused single-pass MIME
+    /// decode: whitespace is compacted into an on-stack staging block by
+    /// the tier's compaction kernel (`vpcompressb` / AVX2 movemask /
+    /// SWAR) and the staged characters run the same bulk decode kernels
+    /// as [`Self::decode_slice`] — no allocation, no separate strip pass.
+    ///
+    /// Error offsets refer to the **original** input (not the stripped
+    /// stream); `InvalidLength` counts significant characters. When the
+    /// input carries several independent defects (say, a stray byte *and*
+    /// a bad total length), the fused pass may report a different — but
+    /// still genuine — one than a strip-then-decode pass would, because
+    /// it cannot know the final length while blocks are still streaming.
+    pub fn decode_slice_ws(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        ws: Whitespace,
+    ) -> Result<usize, DecodeError> {
+        if ws == Whitespace::None {
+            return self.decode_slice(input, out);
+        }
+        self.decode_ws_inner(input, out, ws)
+            .map_err(|e| rebase_ws_error(e, input, ws))
+    }
+
+    /// Fused decode core; error offsets are in *stripped* coordinates
+    /// (the public wrapper rebases them onto the original input).
+    fn decode_ws_inner(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        ws: Whitespace,
+    ) -> Result<usize, DecodeError> {
+        // Staging block: 16 decode blocks (1 KiB) on the stack — big
+        // enough to amortize the kernel call, small enough to stay in L1.
+        const STAGE: usize = 16 * B64_BLOCK;
+        let mut stage = [0u8; STAGE];
+        let mut staged = 0usize; // valid chars in `stage`
+        let mut pos = 0usize; // input cursor
+        let mut base = 0usize; // stripped chars already decoded
+        let mut w = 0usize; // bytes written to `out`
+        loop {
+            let (consumed, filled) = (self.compact)(&input[pos..], &mut stage[staged..], ws);
+            pos += consumed;
+            staged += filled;
+            if pos == input.len() {
+                break;
+            }
+            // The stage is full and input remains. Decode all but the
+            // last block: the held-back chars cover the stream's final
+            // (possibly padded) quantum, which must go through the tail
+            // path below, and keep every bulk call block-aligned.
+            debug_assert_eq!(staged, STAGE);
+            let body = STAGE - B64_BLOCK;
+            w += self.decode_ws_batch(&stage[..body], &mut out[w..], base)?;
+            base += body;
+            stage.copy_within(body..STAGE, 0);
+            staged = B64_BLOCK;
+        }
+        // Final batch: apply the stream-level length/padding semantics.
+        let total = base + staged;
+        if self.mode == Mode::Strict && total % 4 != 0 {
+            return Err(DecodeError::InvalidLength { len: total });
+        }
+        let (body, tail) = split_tail(&stage[..staged], self.alphabet.pad(), self.mode)
+            .map_err(|e| match e {
+                // split_tail only sees the residue; report the full count.
+                DecodeError::InvalidLength { .. } => DecodeError::InvalidLength { len: total },
+                other => other,
+            })?;
+        w += self.decode_ws_batch(body, &mut out[w..], base)?;
+        let t = decode_tail_into(
+            tail,
+            self.alphabet.pad(),
+            self.mode,
+            base + body.len(),
+            |c| self.alphabet.value_of(c),
+            &mut out[w..],
+        )?;
+        Ok(w + t)
+    }
+
+    /// Decode a staged whole-quantum span (no padding) through the tier
+    /// kernels; errors are offset by `base` (stripped coordinates).
+    fn decode_ws_batch(
+        &self,
+        body: &[u8],
+        out: &mut [u8],
+        base: usize,
+    ) -> Result<usize, DecodeError> {
+        debug_assert_eq!(body.len() % 4, 0);
+        let body_out = body.len() / 4 * 3;
+        assert!(out.len() >= body_out, "output buffer too small");
+        let out = &mut out[..body_out];
+        let consumed =
+            (self.kernels.decode_bulk)(self, body, out).map_err(|e| rebase(e, base))?;
+        let w = consumed / 4 * 3;
+        decode_quads_into(
+            &body[consumed..],
+            self.alphabet.decode_table().as_bytes(),
+            base + consumed,
+            &mut out[w..],
+        )?;
+        Ok(body_out)
+    }
+
+    /// Decode whole 4-char quanta (no padding expected) from `body`,
+    /// appending to `out`; `out` is restored on error. Errors are
+    /// relative to `body`. This is the bulk step the tiered streaming
+    /// decoder drives between carry refills.
+    pub(crate) fn decode_quanta_into(
+        &self,
+        body: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), DecodeError> {
+        debug_assert_eq!(body.len() % 4, 0);
+        let start = out.len();
+        out.resize(start + body.len() / 4 * 3, 0);
+        let res = self.decode_ws_batch(body, &mut out[start..], 0);
+        match res {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                out.truncate(start);
+                Err(e)
+            }
+        }
     }
 
     /// Chunked multi-threaded encode for large payloads: splits the
@@ -458,13 +667,9 @@ impl Engine {
     }
 }
 
+/// Shift a span-relative error to absolute input coordinates.
 fn rebase(e: DecodeError, base: usize) -> DecodeError {
-    match e {
-        DecodeError::InvalidByte { offset, byte } => {
-            DecodeError::InvalidByte { offset: base + offset, byte }
-        }
-        other => other,
-    }
+    e.map_offset(|offset| base + offset)
 }
 
 fn effective_threads(requested: usize) -> usize {
@@ -610,6 +815,70 @@ mod tests {
             Err(DecodeError::InvalidByte { offset, byte: 0x07 }) => assert_eq!(offset, n / 2),
             other => panic!("expected invalid byte, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn wrapped_encode_matches_manual_wrap() {
+        let e = Engine::get();
+        for (len, line_len) in [(0usize, 76usize), (1, 4), (57, 76), (58, 76), (200, 60), (4096, 76)] {
+            let data = random_bytes(len, len as u64 + 1);
+            let flat = e.encode(&data);
+            let mut want = Vec::new();
+            for (i, line) in flat.chunks(line_len).enumerate() {
+                if i > 0 {
+                    want.extend_from_slice(b"\r\n");
+                }
+                want.extend_from_slice(line);
+            }
+            let mut out = vec![0u8; e.encoded_wrapped_len(len, line_len)];
+            let n = e.encode_wrapped_slice(&data, &mut out, line_len);
+            assert_eq!(n, out.len(), "len={len} line={line_len}");
+            assert_eq!(out, want, "len={len} line={line_len}");
+        }
+    }
+
+    #[test]
+    fn fused_ws_decode_roundtrips_wrapped_input() {
+        for tier in Tier::supported() {
+            let e = Engine::with_tier(Alphabet::standard(), tier);
+            for len in [0usize, 1, 2, 3, 56, 57, 58, 100, 1000, 5000] {
+                let data = random_bytes(len, 31 + len as u64);
+                let mut wrapped = vec![0u8; e.encoded_wrapped_len(len, 76)];
+                e.encode_wrapped_slice(&data, &mut wrapped, 76);
+                let mut out = vec![0u8; super::super::decoded_len_upper(wrapped.len())];
+                let n = e.decode_slice_ws(&wrapped, &mut out, Whitespace::CrLf).unwrap();
+                assert_eq!(&out[..n], &data[..], "{tier:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ws_decode_reports_original_offsets() {
+        let e = Engine::get();
+        // "Zm9v\r\n!mFy": the '!' sits at stripped offset 4 but original
+        // offset 6.
+        let mut out = vec![0u8; 16];
+        let err = e
+            .decode_slice_ws(b"Zm9v\r\n!mFy", &mut out, Whitespace::CrLf)
+            .unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 6, byte: b'!' });
+        // Space rejected under CrLf, skipped under All.
+        let err = e
+            .decode_slice_ws(b"Zm9v YmFy\r\n", &mut out, Whitespace::CrLf)
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::InvalidLength { len: 9 }), "{err:?}");
+        let n = e
+            .decode_slice_ws(b"Zm9v YmFy\r\n", &mut out, Whitespace::All)
+            .unwrap();
+        assert_eq!(&out[..n], b"foobar");
+    }
+
+    #[test]
+    fn fused_ws_decode_all_whitespace_input() {
+        let e = Engine::get();
+        let mut out = [0u8; 4];
+        assert_eq!(e.decode_slice_ws(b"\r\n\r\n", &mut out, Whitespace::CrLf), Ok(0));
+        assert_eq!(e.decode_slice_ws(b"", &mut out, Whitespace::CrLf), Ok(0));
     }
 
     #[test]

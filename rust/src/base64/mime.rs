@@ -2,23 +2,26 @@
 //!
 //! MIME requires encoded lines of at most 76 characters separated by CRLF,
 //! and decoders must ignore line breaks (and, leniently, other whitespace).
-//! The hot path is the tier-dispatched [`Engine`]; wrapping is a
-//! post-pass on encode and a strip-pass on decode, both chunk-friendly.
+//! Both directions are thin zero-copy wrappers over the tier-dispatched
+//! [`Engine`]: encode writes CRLFs inline during the store loop
+//! ([`Engine::encode_wrapped_slice`]) and decode fuses the whitespace
+//! skip into the SIMD loop ([`Engine::decode_slice_ws`]) — there is no
+//! strip pass and no intermediate buffer, so the wrapped workload runs at
+//! engine speed. Decode error offsets refer to the *original* input.
 
 use super::engine::Engine;
-use super::validate::{DecodeError, Mode};
-use super::{Alphabet, Codec};
+use super::validate::{DecodeError, Mode, Whitespace};
+use super::{decoded_len_upper, Alphabet};
 
 /// Maximum encoded line length required by RFC 2045 §6.8.
 pub const MIME_LINE_LEN: usize = 76;
 
-/// MIME base64 codec: wraps at `line_len`, strips CR/LF (and optionally
+/// MIME base64 codec: wraps at `line_len`, skips CR/LF (and optionally
 /// all whitespace) on decode.
 pub struct MimeCodec {
     inner: Engine,
     line_len: usize,
-    /// When true, decode also skips space/tab (lenient MIME bodies).
-    skip_all_whitespace: bool,
+    ws: Whitespace,
 }
 
 impl MimeCodec {
@@ -26,7 +29,7 @@ impl MimeCodec {
         Self {
             inner: Engine::with_mode(alphabet, Mode::Strict),
             line_len: MIME_LINE_LEN,
-            skip_all_whitespace: false,
+            ws: Whitespace::CrLf,
         }
     }
 
@@ -36,38 +39,57 @@ impl MimeCodec {
         self
     }
 
+    /// Also skip space/tab on decode (lenient MIME bodies).
     pub fn lenient_whitespace(mut self) -> Self {
-        self.skip_all_whitespace = true;
+        self.ws = Whitespace::All;
         self
+    }
+
+    /// The whitespace policy the decode path applies.
+    pub fn whitespace(&self) -> Whitespace {
+        self.ws
+    }
+
+    /// The engine this codec dispatches to (tier introspection).
+    pub fn engine(&self) -> &Engine {
+        &self.inner
+    }
+
+    /// Exact output size of [`Self::encode_slice`] for `n` input bytes.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        self.inner.encoded_wrapped_len(n, self.line_len)
+    }
+
+    /// Encode with CRLF wrapping into `out[0..]`, returning the bytes
+    /// written (always [`Self::encoded_len`]). The final line carries no
+    /// trailing CRLF. Never allocates.
+    pub fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        self.inner.encode_wrapped_slice(input, out, self.line_len)
     }
 
     /// Encode with CRLF wrapping. The final line carries no trailing CRLF.
     pub fn encode(&self, input: &[u8]) -> Vec<u8> {
-        let flat = self.inner.encode(input);
-        let lines = flat.len().div_ceil(self.line_len);
-        let mut out = Vec::with_capacity(flat.len() + lines.saturating_sub(1) * 2);
-        for (i, line) in flat.chunks(self.line_len).enumerate() {
-            if i > 0 {
-                out.extend_from_slice(b"\r\n");
-            }
-            out.extend_from_slice(line);
-        }
+        let mut out = vec![0u8; self.encoded_len(input.len())];
+        let n = self.encode_slice(input, &mut out);
+        debug_assert_eq!(n, out.len());
         out
     }
 
-    /// Decode, ignoring CRLF (and all whitespace when lenient). Offsets in
-    /// errors refer to the *stripped* stream.
+    /// Decode into `out[0..]`, ignoring CRLF (and all whitespace when
+    /// lenient), returning the bytes written. `out` must hold
+    /// `decoded_len_upper(input.len())` bytes. Error offsets refer to the
+    /// original input. Never allocates.
+    pub fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        self.inner.decode_slice_ws(input, out, self.ws)
+    }
+
+    /// Decode, ignoring CRLF (and all whitespace when lenient). Error
+    /// offsets refer to the original input.
     pub fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
-        let stripped: Vec<u8> = input
-            .iter()
-            .copied()
-            .filter(|&c| {
-                !(c == b'\r'
-                    || c == b'\n'
-                    || (self.skip_all_whitespace && (c == b' ' || c == b'\t')))
-            })
-            .collect();
-        self.inner.decode(&stripped)
+        let mut out = vec![0u8; decoded_len_upper(input.len())];
+        let n = self.decode_slice(input, &mut out)?;
+        out.truncate(n);
+        Ok(out)
     }
 }
 
@@ -116,6 +138,18 @@ mod tests {
     }
 
     #[test]
+    fn decode_error_offsets_refer_to_original_input() {
+        // '!' at original offset 6 (stripped offset 4): the old strip-pass
+        // implementation reported 4.
+        let err = codec().decode(b"Zm9v\r\n!mFy").unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 6, byte: b'!' });
+        // Lenient: tabs/spaces also shift the mapping.
+        let l = MimeCodec::new(Alphabet::standard()).lenient_whitespace();
+        let err = l.decode(b" Zm9v\t\r\n!mFy").unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 8, byte: b'!' });
+    }
+
+    #[test]
     fn custom_line_len() {
         let c = MimeCodec::new(Alphabet::standard()).with_line_len(8);
         let enc = c.encode(&[0u8; 12]); // 16 chars -> two 8-char lines
@@ -126,6 +160,18 @@ mod tests {
     #[should_panic]
     fn bad_line_len_panics() {
         MimeCodec::new(Alphabet::standard()).with_line_len(7);
+    }
+
+    #[test]
+    fn slice_paths_roundtrip() {
+        let c = codec();
+        let data: Vec<u8> = (0..500u32).map(|i| (i * 7 % 256) as u8).collect();
+        let mut enc = vec![0u8; c.encoded_len(data.len())];
+        let n = c.encode_slice(&data, &mut enc);
+        assert_eq!(n, enc.len());
+        let mut dec = vec![0u8; decoded_len_upper(enc.len())];
+        let m = c.decode_slice(&enc, &mut dec).unwrap();
+        assert_eq!(&dec[..m], &data[..]);
     }
 
     #[test]

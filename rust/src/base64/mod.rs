@@ -19,6 +19,34 @@
 //! allocate. The `Vec`-returning methods are thin wrappers over those
 //! cores. [`engine::Engine`] picks the fastest core the host supports
 //! exactly once and exposes it behind plain function pointers.
+//!
+//! ## Whitespace-tolerant (MIME) decoding
+//!
+//! Line-wrapped base64 is the paper's motivating workload, so the engine
+//! fuses whitespace handling into the wide loop instead of stripping in
+//! a separate pass:
+//!
+//! * [`validate::Whitespace`] (`None | CrLf | All`) names the skip set —
+//!   `CrLf` for RFC 2045 line wrapping, `All` to also skip space/tab;
+//! * [`engine::Engine::decode_slice_ws`] decodes while compacting
+//!   skipped bytes through a tier-matched kernel (AVX-512 VBMI2
+//!   `vpcompressb` mask-compress, AVX2 `vpcmpeqb`+`vpmovmskb` run
+//!   copies, or a SWAR word scan) into an on-stack staging block that
+//!   feeds the same bulk decode kernels as the flat path — single pass,
+//!   zero allocations, error offsets in *original input* coordinates;
+//! * [`engine::Engine::encode_wrapped_slice`] writes CRLF line breaks
+//!   inline during the store loop (no encode-then-recopy);
+//! * [`mime::MimeCodec`] and [`datauri`] are thin wrappers over these
+//!   entry points, and [`streaming`] drives the same tiered kernels with
+//!   a block-aligned carry buffer so chunked sessions decode at engine
+//!   speed too.
+//!
+//! ## Tier override
+//!
+//! Set `B64SIMD_TIER=avx512|avx2|swar|scalar` to clamp the runtime
+//! dispatch (see [`engine::detected_tier`]); the choice applies to the
+//! bulk codecs *and* the whitespace compaction kernels, so
+//! `B64SIMD_TIER=scalar` exercises a fully scalar pipeline end to end.
 
 pub mod alphabet;
 pub mod avx2;
@@ -35,7 +63,7 @@ pub mod validate;
 
 pub use alphabet::Alphabet;
 pub use engine::{Engine, Tier};
-pub use validate::{DecodeError, Mode};
+pub use validate::{DecodeError, Mode, Whitespace};
 
 /// Number of raw bytes consumed per block-codec iteration (paper §3).
 pub const RAW_BLOCK: usize = 48;

@@ -6,8 +6,28 @@
 //! table with a sentinel for invalid bytes. No SWAR, no blocks — this is
 //! the codec the vectorized ones are measured against (Fig. 4, Table 3).
 
-use super::validate::{decode_quads_into, decode_tail_into, split_tail, DecodeError, Mode};
+use super::validate::{decode_quads_into, decode_tail_into, split_tail, DecodeError, Mode, Whitespace};
 use super::{encoded_len, Alphabet, Codec};
+
+/// Byte-at-a-time whitespace compaction — the reference implementation
+/// of the engine's fused-decode staging step (and the compaction used by
+/// the forced [`crate::base64::Tier::Scalar`] tier, so `B64SIMD_TIER=scalar`
+/// exercises a fully scalar pipeline).
+///
+/// Copies non-skipped bytes from `src` to `dst` until `src` is exhausted
+/// or `dst` is full; returns `(src_consumed, dst_written)`.
+pub(crate) fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+    let (mut r, mut w) = (0usize, 0usize);
+    while r < src.len() && w < dst.len() {
+        let c = src[r];
+        r += 1;
+        if !ws.skips(c) {
+            dst[w] = c;
+            w += 1;
+        }
+    }
+    (r, w)
+}
 
 /// Per-byte table-lookup codec.
 #[derive(Debug, Clone)]
@@ -163,6 +183,24 @@ mod tests {
         let mut dec = [0u8; 6];
         let n = c.decode_slice(&enc, &mut dec).unwrap();
         assert_eq!((n, &dec[..]), (6, &b"foobar"[..]));
+    }
+
+    #[test]
+    fn compact_ws_reference_semantics() {
+        let src = b"ab\r\ncd e\tf";
+        let mut dst = [0u8; 16];
+        let (r, w) = compact_ws(src, &mut dst, Whitespace::CrLf);
+        assert_eq!((r, w), (src.len(), 8));
+        assert_eq!(&dst[..w], b"abcd e\tf");
+        let (r, w) = compact_ws(src, &mut dst, Whitespace::All);
+        assert_eq!((r, w), (src.len(), 6));
+        assert_eq!(&dst[..w], b"abcdef");
+        // Stops when dst fills, reporting exactly what was consumed.
+        let mut tiny = [0u8; 3];
+        let (r, w) = compact_ws(src, &mut tiny, Whitespace::All);
+        assert_eq!(w, 3);
+        assert_eq!(&tiny, b"abc");
+        assert_eq!(&src[..r], b"ab\r\nc");
     }
 
     #[test]

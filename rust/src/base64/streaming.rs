@@ -1,22 +1,34 @@
-//! Incremental (chunked) encoding/decoding with carry state.
+//! Incremental (chunked) encoding/decoding on the tiered [`Engine`].
 //!
 //! The paper's codecs are one-shot over a contiguous buffer; a serving
-//! system receives payloads in chunks. These adapters maintain the 0–2
-//! raw-byte (encoder) / 0–3 char (decoder) carry between chunks and drive
-//! the block codec over every full block, so the hot path stays on the
-//! paper's algorithm regardless of how the input is framed. They also
-//! back the per-connection session state in
-//! [`crate::coordinator::state`].
+//! system receives payloads in chunks. These adapters keep a
+//! **block-aligned carry buffer** — up to one raw block (48 bytes) on the
+//! encoder, up to one encoded block (64 chars) plus a held-back padded
+//! quantum on the decoder — and hand every whole block to the same
+//! tier-dispatched SIMD kernels the one-shot calls use, so chunked
+//! sessions (coordinator [`crate::coordinator::state`], server
+//! [`crate::server`]) run at engine speed regardless of how the input is
+//! framed. The decoder also applies a [`Whitespace`] policy, skipping
+//! CR/LF (or all whitespace) without a strip pass, and reports error
+//! offsets in *raw stream* coordinates (whitespace included).
+//!
+//! Validation follows the paper's deferred-error model: bulk bytes are
+//! checked when their block is decoded (which may be a later `update`
+//! call or `finish`, once the carry fills), not on arrival; padding
+//! ordering is enforced eagerly. The hot paths perform no heap
+//! allocation beyond growing the caller's output `Vec` — with reserved
+//! capacity they allocate nothing (asserted in `rust/tests/alloc.rs`).
 
-use super::block::BlockCodec;
-use super::validate::{decode_tail, DecodeError, Mode};
-use super::{Alphabet, Codec};
+use super::engine::Engine;
+use super::swar::find_ws;
+use super::validate::{decode_tail, DecodeError, Mode, Whitespace};
+use super::{Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 
 /// Incremental encoder: feed arbitrary chunks, finish once.
 pub struct StreamingEncoder {
-    codec: BlockCodec,
-    /// 0..3 raw bytes carried until a full 3-byte group is available.
-    carry: [u8; 3],
+    engine: Engine,
+    /// 0..48 raw bytes carried until a full block is available.
+    carry: [u8; RAW_BLOCK],
     carry_len: usize,
     /// Total raw bytes consumed (for observability).
     consumed: u64,
@@ -24,245 +36,285 @@ pub struct StreamingEncoder {
 
 impl StreamingEncoder {
     pub fn new(alphabet: Alphabet) -> Self {
-        Self {
-            codec: BlockCodec::new(alphabet),
-            carry: [0; 3],
-            carry_len: 0,
-            consumed: 0,
-        }
+        Self::from_engine(Engine::new(alphabet))
     }
 
-    /// Encode `chunk`, appending complete quanta to `out`. Bytes that do
-    /// not fill a 3-byte group are carried to the next call.
+    /// Build on an explicitly configured engine (tier pinning, mode).
+    pub fn from_engine(engine: Engine) -> Self {
+        Self { engine, carry: [0; RAW_BLOCK], carry_len: 0, consumed: 0 }
+    }
+
+    /// The engine this stream dispatches to.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Encode `chunk`, appending complete blocks to `out`. Bytes that do
+    /// not fill a 48-byte block are carried to the next call, so all bulk
+    /// work stays on the tier's SIMD kernel.
     pub fn update(&mut self, chunk: &[u8], out: &mut Vec<u8>) {
         self.consumed += chunk.len() as u64;
         let mut chunk = chunk;
-        // Complete the carry group first.
+        // Top the carry up to a whole block first.
         if self.carry_len > 0 {
-            let need = 3 - self.carry_len;
-            let take = need.min(chunk.len());
+            let take = (RAW_BLOCK - self.carry_len).min(chunk.len());
             self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&chunk[..take]);
             self.carry_len += take;
             chunk = &chunk[take..];
-            if self.carry_len < 3 {
+            if self.carry_len < RAW_BLOCK {
                 return;
             }
-            let group = self.carry;
+            let block = self.carry;
             self.carry_len = 0;
-            // A full group encodes without padding.
-            self.codec.encode_into(&group, out);
+            // A whole block encodes without padding.
+            self.engine.encode_into(&block, out);
         }
-        // Bulk: all whole 3-byte groups go through the block codec (whole
-        // 48-byte blocks inside) without padding.
-        let whole = chunk.len() - chunk.len() % 3;
-        self.codec.encode_into(&chunk[..whole], out);
-        // Stash the remainder.
+        // Bulk: whole blocks straight from the chunk.
+        let whole = chunk.len() / RAW_BLOCK * RAW_BLOCK;
+        self.engine.encode_into(&chunk[..whole], out);
+        // Stash the sub-block remainder.
         let rest = &chunk[whole..];
         self.carry[..rest.len()].copy_from_slice(rest);
         self.carry_len = rest.len();
     }
 
-    /// Flush the final partial group (emits padding). Returns total raw
+    /// Flush the final partial block (emits padding). Returns total raw
     /// bytes consumed over the stream's lifetime.
     pub fn finish(mut self, out: &mut Vec<u8>) -> u64 {
         if self.carry_len > 0 {
-            let group = &self.carry[..self.carry_len];
-            self.codec.encode_into(group, out);
+            let n = self.carry_len;
             self.carry_len = 0;
+            self.engine.encode_into(&self.carry[..n], out);
         }
         self.consumed
     }
 }
 
+/// Decoder carry capacity: one encoded block plus a held-back padded
+/// quantum (the stream's final quantum may straddle a block boundary).
+const DEC_CARRY: usize = B64_BLOCK + 4;
+
 /// Incremental decoder: feed arbitrary chunks, finish once.
 ///
-/// Validation is deferred per the paper: each bulk call only checks its
-/// own blocks' accumulated error; `finish` performs the final tail and
-/// padding checks.
+/// Validation is deferred per the paper: a byte is checked when the
+/// block holding it decodes — possibly a later `update` or `finish` —
+/// with error offsets still exact (raw stream coordinates). Padding
+/// ordering is enforced eagerly.
 pub struct StreamingDecoder {
-    codec: BlockCodec,
-    alphabet: Alphabet,
-    mode: Mode,
-    /// 0..4 chars carried until a full quantum is available.
-    carry: [u8; 4],
+    engine: Engine,
+    ws: Whitespace,
+    /// Significant chars awaiting a whole block / stream end.
+    carry: [u8; DEC_CARRY],
+    /// Raw-stream offset of each carried char (whitespace-aware error
+    /// reporting across chunk boundaries).
+    carry_off: [u64; DEC_CARRY],
     carry_len: usize,
-    /// Offset of the next input byte (for error reporting).
-    offset: u64,
+    /// Raw bytes consumed so far (including skipped whitespace).
+    raw_offset: u64,
+    /// Significant (non-skipped) chars seen so far.
+    stripped: u64,
     /// Set once padding has been seen — only more padding may follow.
     saw_pad: bool,
 }
 
 impl StreamingDecoder {
     pub fn new(alphabet: Alphabet) -> Self {
-        Self::with_mode(alphabet, Mode::Strict)
+        Self::with_policy(alphabet, Mode::Strict, Whitespace::None)
     }
 
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
+        Self::with_policy(alphabet, mode, Whitespace::None)
+    }
+
+    /// Full constructor: strictness plus whitespace policy (the chunked
+    /// MIME path).
+    pub fn with_policy(alphabet: Alphabet, mode: Mode, ws: Whitespace) -> Self {
+        Self::from_engine(Engine::with_mode(alphabet, mode), ws)
+    }
+
+    /// Build on an explicitly configured engine (tier pinning).
+    pub fn from_engine(engine: Engine, ws: Whitespace) -> Self {
         Self {
-            codec: BlockCodec::with_mode(alphabet.clone(), mode),
-            alphabet,
-            mode,
-            carry: [0; 4],
+            engine,
+            ws,
+            carry: [0; DEC_CARRY],
+            carry_off: [0; DEC_CARRY],
             carry_len: 0,
-            offset: 0,
+            raw_offset: 0,
+            stripped: 0,
             saw_pad: false,
         }
     }
 
-    fn check_pad_ordering(&mut self, chunk: &[u8]) -> Result<(), DecodeError> {
-        let pad = self.alphabet.pad();
-        for (i, &c) in chunk.iter().enumerate() {
-            if self.saw_pad && c != pad {
-                return Err(DecodeError::InvalidPadding {
-                    offset: (self.offset + i as u64) as usize,
-                });
+    /// The engine this stream dispatches to.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Decode `chunk`, appending raw bytes to `out`. Quanta spanning
+    /// chunk boundaries are carried; whitespace is skipped per the
+    /// policy; padding may only appear at stream end.
+    pub fn update(&mut self, chunk: &[u8], out: &mut Vec<u8>) -> Result<(), DecodeError> {
+        let chunk_base = self.raw_offset;
+        // Split the chunk into significant runs around skipped bytes so
+        // the bulk path below never sees whitespace.
+        let mut rel = 0usize;
+        while rel < chunk.len() {
+            if self.ws.skips(chunk[rel]) {
+                rel += 1;
+                continue;
             }
-            if c == pad {
+            let run_len = find_ws(&chunk[rel..], self.ws).unwrap_or(chunk.len() - rel);
+            self.process_run(&chunk[rel..rel + run_len], chunk_base + rel as u64, out)?;
+            rel += run_len;
+        }
+        self.raw_offset = chunk_base + chunk.len() as u64;
+        Ok(())
+    }
+
+    /// Handle one whitespace-free run starting at raw offset `base`.
+    fn process_run(
+        &mut self,
+        run: &[u8],
+        base: u64,
+        out: &mut Vec<u8>,
+    ) -> Result<(), DecodeError> {
+        self.stripped += run.len() as u64;
+        if self.saw_pad {
+            return self.push_padding(run, base);
+        }
+        let pad = self.engine.alphabet().pad();
+        match run.iter().position(|&c| c == pad) {
+            None => self.process_data(run, base, out),
+            Some(p) => {
+                self.process_data(&run[..p], base, out)?;
                 self.saw_pad = true;
+                self.push_padding(&run[p..], base + p as u64)
             }
+        }
+    }
+
+    /// After the first pad char, only pad chars may follow, and the final
+    /// quantum is bounded — anything else is an ordering error.
+    fn push_padding(&mut self, bytes: &[u8], base: u64) -> Result<(), DecodeError> {
+        let pad = self.engine.alphabet().pad();
+        for (j, &c) in bytes.iter().enumerate() {
+            if c != pad || self.carry_len == DEC_CARRY {
+                return Err(DecodeError::InvalidPadding { offset: (base + j as u64) as usize });
+            }
+            self.carry[self.carry_len] = c;
+            self.carry_off[self.carry_len] = base + j as u64;
+            self.carry_len += 1;
         }
         Ok(())
     }
 
-    /// Decode `chunk`, appending raw bytes to `out`. Quanta spanning chunk
-    /// boundaries are carried. Padding may only appear at stream end.
-    pub fn update(&mut self, chunk: &[u8], out: &mut Vec<u8>) -> Result<(), DecodeError> {
-        self.check_pad_ordering(chunk)?;
-        let pad = self.alphabet.pad();
-        let mut chunk = chunk;
-        // Once padding has started, just accumulate the final quantum.
-        if self.saw_pad {
-            // Move everything (data before pad is still in carry/body).
-            for &c in chunk {
-                if self.carry_len == 4 {
-                    // A padded quantum is at most 4 chars: flush it first.
-                    self.flush_carry(out)?;
-                }
-                self.carry[self.carry_len] = c;
-                self.carry_len += 1;
-                self.offset += 1;
-            }
-            return Ok(());
-        }
-        // Complete the carried quantum.
+    /// Pad-free significant bytes: top the carry up to a whole block,
+    /// bulk-decode whole blocks straight from the run, stash the rest.
+    fn process_data(
+        &mut self,
+        data: &[u8],
+        base: u64,
+        out: &mut Vec<u8>,
+    ) -> Result<(), DecodeError> {
+        let mut data = data;
+        let mut base = base;
         if self.carry_len > 0 {
-            let need = 4 - self.carry_len;
-            let take = need.min(chunk.len());
-            self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&chunk[..take]);
+            let take = (B64_BLOCK - self.carry_len).min(data.len());
+            for j in 0..take {
+                self.carry[self.carry_len + j] = data[j];
+                self.carry_off[self.carry_len + j] = base + j as u64;
+            }
             self.carry_len += take;
-            self.offset += take as u64;
-            chunk = &chunk[take..];
-            if self.carry_len < 4 {
+            data = &data[take..];
+            base += take as u64;
+            if self.carry_len < B64_BLOCK {
                 return Ok(());
             }
-            if self.carry.contains(&pad) {
-                // Leave padded quantum for finish().
-                return self.stash_rest(chunk);
+            // Carry reached a whole block: decode it through the engine.
+            let carried = self.carry_len;
+            self.carry_len = 0;
+            if let Err(e) = self.engine.decode_quanta_into(&self.carry[..carried], out) {
+                return Err(self.rebase_carry_err(e));
             }
-            self.flush_carry(out)?;
         }
-        // Bulk: decode whole quanta that cannot be the padded tail. Keep
-        // the last quantum if it might contain padding (conservatively: if
-        // it contains the pad char) or if the chunk end is mid-quantum.
-        let whole = chunk.len() - chunk.len() % 4;
-        let (body, rest) = chunk.split_at(whole);
-        let (body, held) = match body.chunks_exact(4).rposition(|q| q.contains(&pad)) {
-            Some(_) => {
-                // Some quantum in the body holds padding: it must be the
-                // last one overall; decode up to it, stash it.
-                let cut = body.len() - 4;
-                (&body[..cut], &body[cut..])
-            }
-            None => (body, &[][..]),
-        };
-        let base = self.offset as usize;
-        let mut tmp_err = self
-            .codec
-            .decode_full_blocks(body, out)
-            .and(Ok(()));
-        if let Err(DecodeError::InvalidByte { offset, byte }) = tmp_err {
-            tmp_err = Err(DecodeError::InvalidByte { offset: base + offset, byte });
+        // Bulk: whole blocks directly from the run (block-aligned, so the
+        // tier kernel does all the work).
+        let whole = data.len() / B64_BLOCK * B64_BLOCK;
+        if whole > 0 {
+            self.engine
+                .decode_quanta_into(&data[..whole], out)
+                .map_err(|e| rebase_raw(e, base))?;
         }
-        tmp_err?;
-        // Sub-block remainder of the body (whole quanta, no padding).
-        let consumed_blocks = body.len() / 64 * 64;
-        for (q, quad) in body[consumed_blocks..].chunks_exact(4).enumerate() {
-            self.decode_quad(quad, base + consumed_blocks + q * 4, out)?;
+        // Stash the sub-block remainder with its raw offsets.
+        for (j, &c) in data[whole..].iter().enumerate() {
+            self.carry[j] = c;
+            self.carry_off[j] = base + (whole + j) as u64;
         }
-        self.offset += body.len() as u64;
-        // Stash held padded quantum + trailing partial.
-        for &c in held.iter().chain(rest) {
-            self.carry[self.carry_len] = c;
-            self.carry_len += 1;
-            self.offset += 1;
-        }
+        self.carry_len = data.len() - whole;
         Ok(())
     }
 
-    fn stash_rest(&mut self, chunk: &[u8]) -> Result<(), DecodeError> {
-        for &c in chunk {
-            if self.carry_len == 4 {
-                return Err(DecodeError::InvalidPadding { offset: self.offset as usize });
-            }
-            self.carry[self.carry_len] = c;
-            self.carry_len += 1;
-            self.offset += 1;
-        }
-        Ok(())
+    /// Map an error whose offset indexes the carry buffer back to raw
+    /// stream coordinates.
+    fn rebase_carry_err(&self, e: DecodeError) -> DecodeError {
+        e.map_offset(|offset| self.carry_off[offset] as usize)
     }
 
-    fn flush_carry(&mut self, out: &mut Vec<u8>) -> Result<(), DecodeError> {
-        let quad = self.carry;
-        let base = self.offset as usize - self.carry_len;
-        self.carry_len = 0;
-        self.decode_quad(&quad, base, out)
-    }
-
-    fn decode_quad(&self, quad: &[u8], base: usize, out: &mut Vec<u8>) -> Result<(), DecodeError> {
-        let table = self.alphabet.decode_table();
-        let mut vals = [0u8; 4];
-        for i in 0..4 {
-            let c = quad[i];
-            let v = table.lookup(c);
-            if (c | v) & 0x80 != 0 {
-                return Err(DecodeError::InvalidByte { offset: base + i, byte: c });
-            }
-            vals[i] = v;
-        }
-        out.push((vals[0] << 2) | (vals[1] >> 4));
-        out.push((vals[1] << 4) | (vals[2] >> 2));
-        out.push((vals[2] << 6) | vals[3]);
-        Ok(())
-    }
-
-    /// Finish the stream: decode the final (possibly padded) quantum and
-    /// enforce length/padding rules.
+    /// Finish the stream: decode the carried residue (possibly padded)
+    /// and enforce length/padding rules. Returns total raw bytes
+    /// consumed.
     pub fn finish(mut self, out: &mut Vec<u8>) -> Result<u64, DecodeError> {
-        let tail = &self.carry[..self.carry_len];
-        let base = self.offset as usize - self.carry_len;
-        if tail.is_empty() {
-            return Ok(self.offset);
+        let n = self.carry_len;
+        if n == 0 {
+            return Ok(self.raw_offset);
         }
-        if self.mode == Mode::Strict && self.carry_len != 4 {
-            return Err(DecodeError::InvalidLength { len: self.offset as usize });
+        if self.engine.mode() == Mode::Strict && self.stripped % 4 != 0 {
+            return Err(DecodeError::InvalidLength { len: self.stripped as usize });
         }
-        let tail = tail.to_vec();
+        let carry = self.carry;
+        let (body, tail) = super::validate::split_tail(
+            &carry[..n],
+            self.engine.alphabet().pad(),
+            self.engine.mode(),
+        )
+        .map_err(|e| match e {
+            DecodeError::InvalidLength { .. } => {
+                DecodeError::InvalidLength { len: self.stripped as usize }
+            }
+            other => self.rebase_carry_err(other),
+        })?;
+        if !body.is_empty() {
+            self.engine
+                .decode_quanta_into(body, out)
+                .map_err(|e| self.rebase_carry_err(e))?;
+        }
+        let tail_start = body.len();
         decode_tail(
-            &tail,
-            self.alphabet.pad(),
-            self.mode,
-            base,
-            |c| self.alphabet.value_of(c),
+            tail,
+            self.engine.alphabet().pad(),
+            self.engine.mode(),
+            0,
+            |c| self.engine.alphabet().value_of(c),
             out,
-        )?;
+        )
+        .map_err(|e| match e {
+            DecodeError::InvalidLength { .. } => {
+                DecodeError::InvalidLength { len: self.stripped as usize }
+            }
+            // Offsets from the tail decode index `tail`; shift them into
+            // the carry and map through the recorded raw offsets.
+            other => other.map_offset(|offset| self.carry_off[tail_start + offset] as usize),
+        })?;
         self.carry_len = 0;
-        Ok(self.offset)
+        Ok(self.raw_offset)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::base64::block::BlockCodec;
 
     fn enc_ref(data: &[u8]) -> Vec<u8> {
         BlockCodec::new(Alphabet::standard()).encode(data)
@@ -300,6 +352,26 @@ mod tests {
     }
 
     #[test]
+    fn decoder_ws_policy_chunking_invariance() {
+        // Wrapped MIME text straight through the streaming decoder: the
+        // CRLFs are skipped inline, no pre-stripping.
+        let data: Vec<u8> = (0..=255u8).cycle().take(997).collect();
+        let mime = crate::base64::mime::MimeCodec::new(Alphabet::standard());
+        let wrapped = mime.encode(&data);
+        for chunk_size in [1usize, 3, 4, 5, 63, 64, 65, 76, 78, 256, 333] {
+            let mut dec =
+                StreamingDecoder::with_policy(Alphabet::standard(), Mode::Strict, Whitespace::CrLf);
+            let mut out = vec![];
+            for chunk in wrapped.chunks(chunk_size) {
+                dec.update(chunk, &mut out).unwrap();
+            }
+            let consumed = dec.finish(&mut out).unwrap();
+            assert_eq!(consumed, wrapped.len() as u64);
+            assert_eq!(out, data, "chunk_size={chunk_size}");
+        }
+    }
+
+    #[test]
     fn decoder_rejects_data_after_padding() {
         let mut dec = StreamingDecoder::new(Alphabet::standard());
         let mut out = vec![];
@@ -311,11 +383,41 @@ mod tests {
 
     #[test]
     fn decoder_error_offset_across_chunks() {
+        // Validation is deferred to block granularity (paper §3.2): the
+        // bad byte is reported when its block decodes — here at finish,
+        // since 12 chars never fill the 64-char carry — with the offset
+        // still exact in stream coordinates.
         let mut dec = StreamingDecoder::new(Alphabet::standard());
         let mut out = vec![];
         dec.update(b"AAAABBBB", &mut out).unwrap();
-        let err = dec.update(b"CC!C", &mut out).unwrap_err();
+        dec.update(b"CC!C", &mut out).unwrap();
+        let err = dec.finish(&mut out).unwrap_err();
         assert_eq!(err, DecodeError::InvalidByte { offset: 10, byte: b'!' });
+    }
+
+    #[test]
+    fn decoder_error_offset_in_bulk_block() {
+        // A bad byte inside a whole block is caught by the update that
+        // decodes the block, offset in raw coordinates.
+        let mut dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        let mut chunk = vec![b'A'; 2 * B64_BLOCK];
+        chunk[100] = 0x07;
+        let err = dec.update(&chunk, &mut out).unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 100, byte: 0x07 });
+    }
+
+    #[test]
+    fn decoder_ws_error_offsets_are_raw() {
+        // "Zm9v\r\n!..." — the '!' is at raw offset 6 even though it is
+        // the 5th significant char.
+        let mut dec =
+            StreamingDecoder::with_policy(Alphabet::standard(), Mode::Strict, Whitespace::CrLf);
+        let mut out = vec![];
+        dec.update(b"Zm9v\r\n", &mut out).unwrap();
+        dec.update(b"!mFy", &mut out).unwrap();
+        let err = dec.finish(&mut out).unwrap_err();
+        assert_eq!(err, DecodeError::InvalidByte { offset: 6, byte: b'!' });
     }
 
     #[test]
@@ -325,7 +427,7 @@ mod tests {
         dec.update(b"AAAABB", &mut out).unwrap();
         assert!(matches!(
             dec.finish(&mut out),
-            Err(DecodeError::InvalidLength { .. })
+            Err(DecodeError::InvalidLength { len: 6 })
         ));
     }
 
@@ -339,6 +441,20 @@ mod tests {
     }
 
     #[test]
+    fn decoder_large_stream_hits_bulk_path() {
+        // > one block per update, plus a padded tail quantum.
+        let data: Vec<u8> = (0..100_001).map(|i| (i * 131 % 256) as u8).collect();
+        let encoded = enc_ref(&data);
+        let mut dec = StreamingDecoder::new(Alphabet::standard());
+        let mut out = vec![];
+        for chunk in encoded.chunks(1500) {
+            dec.update(chunk, &mut out).unwrap();
+        }
+        dec.finish(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
     fn empty_stream() {
         let enc = StreamingEncoder::new(Alphabet::standard());
         let mut out = vec![];
@@ -348,4 +464,9 @@ mod tests {
         let mut out = vec![];
         assert_eq!(dec.finish(&mut out).unwrap(), 0);
     }
+}
+
+/// Shift a raw-relative error by `base` (bulk path straight from a run).
+fn rebase_raw(e: DecodeError, base: u64) -> DecodeError {
+    e.map_offset(|offset| (base + offset as u64) as usize)
 }

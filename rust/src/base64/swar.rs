@@ -16,11 +16,84 @@
 //! Tables are built per [`Alphabet`] at construction time (4.75 kB), the
 //! register-file analog of AVX2's in-register LUTs.
 
-use super::validate::{decode_tail_into, split_tail, DecodeError, Mode};
+use super::validate::{decode_tail_into, split_tail, DecodeError, Mode, Whitespace};
 use super::{encoded_len, Alphabet, Codec};
 
 /// Sentinel OR-mask marking an invalid character in the decode tables.
 const BAD: u32 = 0xFF00_0000;
+
+const LANE_LSB: u64 = 0x0101_0101_0101_0101;
+const LANE_MSB: u64 = 0x8080_8080_8080_8080;
+
+/// Per-lane equality detector (the classic SWAR zero-byte test on
+/// `w ^ broadcast(t)`). A lane's high bit is set when its byte equals
+/// `t`; borrow propagation can set *higher* lanes spuriously, so only
+/// "mask is zero" and "index of lowest set bit" are meaningful — which
+/// is exactly how [`ws_mask`]'s callers use it.
+#[inline(always)]
+fn eq_mask(w: u64, t: u8) -> u64 {
+    let x = w ^ (LANE_LSB * t as u64);
+    x.wrapping_sub(LANE_LSB) & !x & LANE_MSB
+}
+
+/// Whitespace detector for one little-endian 8-byte word: lowest set bit
+/// marks the first byte the policy skips (see [`eq_mask`] for why only
+/// the first match is trustworthy).
+#[inline(always)]
+fn ws_mask(w: u64, ws: Whitespace) -> u64 {
+    match ws {
+        Whitespace::None => 0,
+        Whitespace::CrLf => eq_mask(w, b'\r') | eq_mask(w, b'\n'),
+        Whitespace::All => {
+            eq_mask(w, b'\r') | eq_mask(w, b'\n') | eq_mask(w, b' ') | eq_mask(w, b'\t')
+        }
+    }
+}
+
+/// Offset of the first byte the policy skips, or `None`. Word-at-a-time
+/// scan; the streaming decoder uses it to split chunks into significant
+/// runs without copying them.
+pub(crate) fn find_ws(src: &[u8], ws: Whitespace) -> Option<usize> {
+    if ws == Whitespace::None {
+        return None;
+    }
+    let mut r = 0usize;
+    while r + 8 <= src.len() {
+        let word = u64::from_le_bytes(src[r..r + 8].try_into().unwrap());
+        let m = ws_mask(word, ws);
+        if m != 0 {
+            return Some(r + (m.trailing_zeros() >> 3) as usize);
+        }
+        r += 8;
+    }
+    src[r..].iter().position(|&c| ws.skips(c)).map(|p| r + p)
+}
+
+/// Word-at-a-time whitespace compaction: the portable analog of the
+/// AVX2 movemask / AVX-512 `vpcompressb` staging step. Whole words with
+/// no skipped byte are copied with one 8-byte store; words containing
+/// whitespace fall back to a run copy up to the first skipped byte.
+/// Returns `(src_consumed, dst_written)`.
+pub(crate) fn compact_ws(src: &[u8], dst: &mut [u8], ws: Whitespace) -> (usize, usize) {
+    let (mut r, mut w) = (0usize, 0usize);
+    while r + 8 <= src.len() && w + 8 <= dst.len() {
+        let word = u64::from_le_bytes(src[r..r + 8].try_into().unwrap());
+        let m = ws_mask(word, ws);
+        if m == 0 {
+            dst[w..w + 8].copy_from_slice(&src[r..r + 8]);
+            r += 8;
+            w += 8;
+        } else {
+            // Copy the significant run, then skip the one whitespace byte.
+            let k = (m.trailing_zeros() >> 3) as usize;
+            dst[w..w + k].copy_from_slice(&src[r..r + k]);
+            w += k;
+            r += k + 1;
+        }
+    }
+    let (rt, wt) = super::scalar::compact_ws(&src[r..], &mut dst[w..], ws);
+    (r + rt, w + wt)
+}
 
 /// Wide-word table-driven codec (AVX2-class baseline).
 pub struct SwarCodec {
@@ -237,6 +310,53 @@ mod tests {
             quad[pos] = 0x80 + pos as u8;
             assert!(c.decode(&quad).is_err());
         }
+    }
+
+    #[test]
+    fn swar_compaction_matches_scalar_reference() {
+        // Pseudo-random text with whitespace sprinkled at varying density,
+        // across lengths straddling the 8-byte word loop.
+        let mut x: u32 = 0xBEEF;
+        for len in 0..120usize {
+            let src: Vec<u8> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                    match x >> 29 {
+                        0 => b'\r',
+                        1 => b'\n',
+                        2 => b' ',
+                        3 => b'\t',
+                        _ => b'A' + (x >> 24 & 0x0F) as u8,
+                    }
+                })
+                .collect();
+            for ws in [Whitespace::None, Whitespace::CrLf, Whitespace::All] {
+                let mut a = vec![0u8; len];
+                let mut b = vec![0u8; len];
+                let got = compact_ws(&src, &mut a, ws);
+                let want = super::super::scalar::compact_ws(&src, &mut b, ws);
+                assert_eq!(got, want, "len={len} ws={ws:?}");
+                assert_eq!(a[..got.1], b[..want.1], "len={len} ws={ws:?}");
+                // Constrained destination: same consumed/written split.
+                let cap = len / 2;
+                let mut a = vec![0u8; cap];
+                let mut b = vec![0u8; cap];
+                let got = compact_ws(&src, &mut a, ws);
+                let want = super::super::scalar::compact_ws(&src, &mut b, ws);
+                assert_eq!(got, want, "cap len={len} ws={ws:?}");
+                assert_eq!(a[..got.1], b[..want.1], "cap len={len} ws={ws:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn find_ws_first_match() {
+        assert_eq!(find_ws(b"AAAAAAAAAAAA\rB", Whitespace::CrLf), Some(12));
+        assert_eq!(find_ws(b"\nAAAA", Whitespace::CrLf), Some(0));
+        assert_eq!(find_ws(b"AAAA AAAA", Whitespace::CrLf), None);
+        assert_eq!(find_ws(b"AAAA AAAA", Whitespace::All), Some(4));
+        assert_eq!(find_ws(b"anything", Whitespace::None), None);
+        assert_eq!(find_ws(b"", Whitespace::All), None);
     }
 
     #[test]

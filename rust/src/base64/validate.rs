@@ -39,6 +39,87 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
+impl DecodeError {
+    /// Apply `f` to the error's input offset, if it carries one
+    /// (`InvalidLength`/`InvalidBlock` carry a length/row, which is left
+    /// untouched). This is the single place offset rebasing is defined —
+    /// span-relative → absolute, stripped → original, carry-index → raw
+    /// stream — so every variant is covered once.
+    pub fn map_offset(self, f: impl FnOnce(usize) -> usize) -> DecodeError {
+        match self {
+            DecodeError::InvalidByte { offset, byte } => {
+                DecodeError::InvalidByte { offset: f(offset), byte }
+            }
+            DecodeError::InvalidPadding { offset } => {
+                DecodeError::InvalidPadding { offset: f(offset) }
+            }
+            DecodeError::TrailingBits { offset } => {
+                DecodeError::TrailingBits { offset: f(offset) }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Whitespace tolerance of the decode path (the MIME workload's knob).
+///
+/// RFC 2045 wraps encoded lines at 76 characters with CRLF and requires
+/// decoders to ignore the line structure; lenient MIME bodies also carry
+/// space/tab. The engine's fused decode ([`crate::base64::Engine::decode_slice_ws`])
+/// compacts skipped bytes in-register/in-word *inside* the SIMD loop
+/// instead of running a separate strip pass, so the policy costs roughly
+/// one masked compaction per 64 input bytes rather than an extra pass
+/// over memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Whitespace {
+    /// No bytes are skipped (strict RFC 4648; the paper's codecs).
+    #[default]
+    None,
+    /// Skip CR and LF (RFC 2045 line wrapping).
+    CrLf,
+    /// Skip CR, LF, space and horizontal tab (lenient MIME bodies).
+    All,
+}
+
+impl Whitespace {
+    /// True iff the policy skips byte `c`.
+    #[inline(always)]
+    pub fn skips(self, c: u8) -> bool {
+        match self {
+            Whitespace::None => false,
+            Whitespace::CrLf => c == b'\r' || c == b'\n',
+            Whitespace::All => matches!(c, b'\r' | b'\n' | b' ' | b'\t'),
+        }
+    }
+}
+
+/// Offset in `input` of its `n`-th (0-based) non-skipped byte.
+///
+/// Cold-path helper used to translate error offsets from the *stripped*
+/// coordinate space (what the fused whitespace decode works in) back to
+/// the original input. Returns `input.len()` if there are fewer than
+/// `n + 1` significant bytes.
+pub fn nth_significant_offset(input: &[u8], n: usize, ws: Whitespace) -> usize {
+    let mut seen = 0usize;
+    for (i, &c) in input.iter().enumerate() {
+        if !ws.skips(c) {
+            if seen == n {
+                return i;
+            }
+            seen += 1;
+        }
+    }
+    input.len()
+}
+
+/// Translate a [`DecodeError`] whose offsets refer to the stripped stream
+/// into one whose offsets refer to the original (whitespace-bearing)
+/// input. `InvalidLength` carries a *length*, not an offset, and keeps
+/// counting significant characters.
+pub fn rebase_ws_error(e: DecodeError, input: &[u8], ws: Whitespace) -> DecodeError {
+    e.map_offset(|offset| nth_significant_offset(input, offset, ws))
+}
+
 /// Decoding strictness.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Mode {
@@ -365,6 +446,42 @@ mod tests {
         let mut buf = [0u8; 3];
         let n = decode_tail_into(b"aA==", b'=', Mode::Strict, 0, vo(&a), &mut buf).unwrap();
         assert_eq!((n, buf[0]), (1, b'h'));
+    }
+
+    #[test]
+    fn whitespace_policy_membership() {
+        assert!(!Whitespace::None.skips(b'\r'));
+        assert!(Whitespace::CrLf.skips(b'\r'));
+        assert!(Whitespace::CrLf.skips(b'\n'));
+        assert!(!Whitespace::CrLf.skips(b' '));
+        assert!(Whitespace::All.skips(b' '));
+        assert!(Whitespace::All.skips(b'\t'));
+        assert!(!Whitespace::All.skips(b'A'));
+    }
+
+    #[test]
+    fn nth_significant_maps_past_skipped_bytes() {
+        let input = b"ab\r\ncd \te";
+        assert_eq!(nth_significant_offset(input, 0, Whitespace::CrLf), 0);
+        assert_eq!(nth_significant_offset(input, 2, Whitespace::CrLf), 4);
+        assert_eq!(nth_significant_offset(input, 4, Whitespace::All), 8);
+        // ' ' is significant under CrLf but not under All.
+        assert_eq!(nth_significant_offset(input, 4, Whitespace::CrLf), 6);
+        // Out of range clamps to len.
+        assert_eq!(nth_significant_offset(input, 99, Whitespace::All), input.len());
+    }
+
+    #[test]
+    fn rebase_ws_error_translates_offsets_only() {
+        let input = b"Zm9v\r\n!mFy";
+        let e = rebase_ws_error(
+            DecodeError::InvalidByte { offset: 4, byte: b'!' },
+            input,
+            Whitespace::CrLf,
+        );
+        assert_eq!(e, DecodeError::InvalidByte { offset: 6, byte: b'!' });
+        let e = rebase_ws_error(DecodeError::InvalidLength { len: 9 }, input, Whitespace::CrLf);
+        assert_eq!(e, DecodeError::InvalidLength { len: 9 });
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 
 use crate::base64::streaming::{StreamingDecoder, StreamingEncoder};
-use crate::base64::{Alphabet, DecodeError, Mode};
+use crate::base64::{Alphabet, DecodeError, Mode, Whitespace};
 
 /// Direction-specific stream state.
 pub enum StreamState {
@@ -58,7 +58,19 @@ impl SessionState {
     }
 
     pub fn open_decode(&mut self, id: u64, alphabet: Alphabet, mode: Mode) -> Result<(), StreamError> {
-        self.open(id, StreamState::Decode(StreamingDecoder::with_mode(alphabet, mode)))
+        self.open_decode_ws(id, alphabet, mode, Whitespace::None)
+    }
+
+    /// Open a decode stream with a whitespace policy (chunked MIME: the
+    /// decoder skips CR/LF inline on the tiered SIMD path).
+    pub fn open_decode_ws(
+        &mut self,
+        id: u64,
+        alphabet: Alphabet,
+        mode: Mode,
+        ws: Whitespace,
+    ) -> Result<(), StreamError> {
+        self.open(id, StreamState::Decode(StreamingDecoder::with_policy(alphabet, mode, ws)))
     }
 
     fn open(&mut self, id: u64, state: StreamState) -> Result<(), StreamError> {
@@ -172,8 +184,28 @@ mod tests {
     fn decode_error_closes_stream() {
         let mut s = SessionState::new(4);
         s.open_decode(5, Alphabet::standard(), Mode::Strict).unwrap();
-        assert!(matches!(s.chunk(5, b"ab!d"), Err(StreamError::Decode(_))));
+        // A whole decode block with a bad byte: validation fires when the
+        // block decodes (deferred per the paper), and the error closes
+        // the stream.
+        let mut chunk = vec![b'A'; 128];
+        chunk[70] = b'!';
+        assert!(matches!(s.chunk(5, &chunk), Err(StreamError::Decode(_))));
         // Stream is gone after the error.
         assert_eq!(s.chunk(5, b"AAAA"), Err(StreamError::UnknownStream(5)));
+    }
+
+    #[test]
+    fn mime_decode_stream_skips_crlf() {
+        let data = vec![0x5Au8; 300];
+        let wrapped = crate::base64::mime::MimeCodec::new(Alphabet::standard()).encode(&data);
+        let mut s = SessionState::new(4);
+        s.open_decode_ws(3, Alphabet::standard(), Mode::Strict, Whitespace::CrLf)
+            .unwrap();
+        let mut got = Vec::new();
+        for chunk in wrapped.chunks(100) {
+            got.extend(s.chunk(3, chunk).unwrap());
+        }
+        got.extend(s.finish(3).unwrap());
+        assert_eq!(got, data);
     }
 }

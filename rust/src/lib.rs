@@ -37,6 +37,20 @@
 //! assert_eq!(&raw[..m], b"hello world");
 //! ```
 //!
+//! MIME line-wrapped payloads decode in one fused pass — whitespace is
+//! compacted inside the SIMD loop (no strip pass, no allocation), and
+//! wrapped encode writes its CRLFs inline:
+//!
+//! ```
+//! use b64simd::base64::{decoded_len_upper, Engine, Whitespace};
+//!
+//! let engine = Engine::get();
+//! let wrapped = b"aGVs\r\nbG8=";
+//! let mut out = vec![0u8; decoded_len_upper(wrapped.len())];
+//! let n = engine.decode_slice_ws(wrapped, &mut out, Whitespace::CrLf).unwrap();
+//! assert_eq!(&out[..n], b"hello");
+//! ```
+//!
 //! The `Vec`-returning [`base64::Codec`] methods remain as thin wrappers
 //! over the same slice cores:
 //!

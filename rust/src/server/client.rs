@@ -3,7 +3,7 @@
 use std::net::{SocketAddr, TcpStream};
 
 use super::proto::{read_frame, write_frame, Message, ProtoError};
-use crate::base64::Mode;
+use crate::base64::{Mode, Whitespace};
 
 /// Client-side failures.
 #[derive(Debug)]
@@ -104,12 +104,25 @@ impl Client {
 
     /// Open a chunked stream; returns the stream id.
     pub fn stream_begin(&mut self, decode: bool, alphabet: &str) -> Result<u64, ClientError> {
+        self.stream_begin_ws(decode, alphabet, Whitespace::None)
+    }
+
+    /// Open a chunked decode stream with a whitespace policy (MIME
+    /// bodies: the server skips CR/LF inline on its SIMD path, so the
+    /// client does not need to strip line breaks first).
+    pub fn stream_begin_ws(
+        &mut self,
+        decode: bool,
+        alphabet: &str,
+        ws: Whitespace,
+    ) -> Result<u64, ClientError> {
         let id = self.id();
         self.expect_data(&Message::StreamBegin {
             id,
             decode,
             alphabet: alphabet.to_string(),
             mode: Mode::Strict,
+            ws,
         })?;
         Ok(id)
     }

@@ -7,7 +7,7 @@
 //!   0x01 Encode    { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x02 Decode    { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x03 Validate  { id:u64le, alphabet:str8, mode:u8, data }
-//!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8 }
+//!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8, ws:u8 }
 //!   0x11 StreamChunk { id:u64le, data }
 //!   0x12 StreamEnd   { id:u64le }
 //!   0x20 Stats     {}
@@ -19,11 +19,13 @@
 //!   0x84 Stats     { report }
 //! str8      := len(u8), utf-8 bytes
 //! mode      := 0 strict, 1 forgiving
+//! ws        := 0 none, 1 crlf, 2 all — whitespace the decoder skips
+//!              (trailing byte; absent means none, for old clients)
 //! ```
 
 use std::io::{Read, Write};
 
-use crate::base64::{Alphabet, Mode};
+use crate::base64::{Alphabet, Mode, Whitespace};
 
 /// Frames larger than this are rejected (sanity bound, 256 MiB).
 pub const MAX_FRAME: usize = 256 << 20;
@@ -34,7 +36,7 @@ pub enum Message {
     Encode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
     Decode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
     Validate { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
-    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode },
+    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode, ws: Whitespace },
     StreamChunk { id: u64, data: Vec<u8> },
     StreamEnd { id: u64 },
     Stats,
@@ -88,6 +90,23 @@ fn byte_mode(b: u8) -> Result<Mode, ProtoError> {
     }
 }
 
+fn ws_byte(ws: Whitespace) -> u8 {
+    match ws {
+        Whitespace::None => 0,
+        Whitespace::CrLf => 1,
+        Whitespace::All => 2,
+    }
+}
+
+fn byte_ws(b: u8) -> Result<Whitespace, ProtoError> {
+    match b {
+        0 => Ok(Whitespace::None),
+        1 => Ok(Whitespace::CrLf),
+        2 => Ok(Whitespace::All),
+        _ => Err(ProtoError::Malformed("bad whitespace byte")),
+    }
+}
+
 /// Resolve an alphabet name from the wire.
 pub fn resolve_alphabet(name: &str) -> Result<Alphabet, ProtoError> {
     Alphabet::by_name(name).ok_or_else(|| ProtoError::UnknownAlphabet(name.to_string()))
@@ -116,12 +135,13 @@ impl Message {
                 out.push(mode_byte(*mode));
                 out.extend_from_slice(data);
             }
-            Message::StreamBegin { id, decode, alphabet, mode } => {
+            Message::StreamBegin { id, decode, alphabet, mode, ws } => {
                 out.push(0x10);
                 out.extend_from_slice(&id.to_le_bytes());
                 out.push(*decode as u8);
                 str8(&mut out, alphabet);
                 out.push(mode_byte(*mode));
+                out.push(ws_byte(*ws));
             }
             Message::StreamChunk { id, data } => {
                 out.push(0x11);
@@ -188,8 +208,14 @@ impl Message {
                 let (id, rest) = take_u64(rest)?;
                 let (&d, rest) = rest.split_first().ok_or(ProtoError::Malformed("no dir"))?;
                 let (alphabet, rest) = take_str8(rest)?;
-                let (&mb, _) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
-                Ok(Message::StreamBegin { id, decode: d != 0, alphabet, mode: byte_mode(mb)? })
+                let (&mb, rest) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
+                // The whitespace byte is a trailing extension: frames from
+                // older clients simply end after the mode byte.
+                let ws = match rest.first() {
+                    Some(&b) => byte_ws(b)?,
+                    None => Whitespace::None,
+                };
+                Ok(Message::StreamBegin { id, decode: d != 0, alphabet, mode: byte_mode(mb)?, ws })
             }
             0x11 => {
                 let (id, rest) = take_u64(rest)?;
@@ -264,7 +290,9 @@ mod tests {
         roundtrip(Message::Encode { id: 7, alphabet: "standard".into(), mode: Mode::Strict, data: b"hello".to_vec() });
         roundtrip(Message::Decode { id: 8, alphabet: "url".into(), mode: Mode::Forgiving, data: b"aGk".to_vec() });
         roundtrip(Message::Validate { id: 9, alphabet: "imap".into(), mode: Mode::Strict, data: b"AAAA".to_vec() });
-        roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict });
+        roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None });
+        roundtrip(Message::StreamBegin { id: 2, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf });
+        roundtrip(Message::StreamBegin { id: 3, decode: false, alphabet: "url".into(), mode: Mode::Forgiving, ws: Whitespace::All });
         roundtrip(Message::StreamChunk { id: 1, data: vec![0, 1, 255] });
         roundtrip(Message::StreamEnd { id: 1 });
         roundtrip(Message::Stats);
@@ -307,6 +335,32 @@ mod tests {
         b.extend_from_slice(&0u64.to_le_bytes());
         b.push(0); // empty alphabet
         b.push(9); // invalid mode
+        assert!(Message::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn stream_begin_without_ws_byte_defaults_to_none() {
+        // Frames from clients that predate the ws extension end after the
+        // mode byte.
+        let mut b = vec![0x10];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.push(1); // decode
+        b.push(8);
+        b.extend_from_slice(b"standard");
+        b.push(0); // strict
+        let msg = Message::from_bytes(&b).unwrap();
+        assert_eq!(
+            msg,
+            Message::StreamBegin {
+                id: 7,
+                decode: true,
+                alphabet: "standard".into(),
+                mode: Mode::Strict,
+                ws: Whitespace::None,
+            }
+        );
+        // An invalid ws byte is rejected.
+        b.push(9);
         assert!(Message::from_bytes(&b).is_err());
     }
 

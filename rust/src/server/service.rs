@@ -138,13 +138,13 @@ fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Messag
             let resp = router.process(Request { id, kind, payload: data, alphabet, mode });
             outcome_to_message(id, resp.outcome)
         }
-        Message::StreamBegin { id, decode, alphabet, mode } => {
+        Message::StreamBegin { id, decode, alphabet, mode, ws } => {
             let alphabet = match resolve_alphabet(&alphabet) {
                 Ok(a) => a,
                 Err(e) => return Message::RespError { id, message: e.to_string() },
             };
             let r = if decode {
-                session.open_decode(id, alphabet, mode)
+                session.open_decode_ws(id, alphabet, mode, ws)
             } else {
                 session.open_encode(id, alphabet)
             };

@@ -12,7 +12,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use b64simd::base64::{encoded_len, Alphabet, Engine, Tier};
+use b64simd::base64::streaming::{StreamingDecoder, StreamingEncoder};
+use b64simd::base64::{decoded_len_upper, encoded_len, Alphabet, Engine, Mode, Tier, Whitespace};
 use b64simd::workload::random_bytes;
 
 thread_local! {
@@ -88,6 +89,67 @@ fn every_supported_tier_is_allocation_free_on_the_slice_path() {
         let delta = allocs_on_this_thread() - before;
         assert_eq!(delta, 0, "tier {tier:?} allocated {delta} times on the slice path");
     }
+}
+
+#[test]
+fn fused_whitespace_paths_allocate_nothing() {
+    // Wrapped encode + whitespace-tolerant decode: the MIME hot path.
+    let engine = Engine::get();
+    let data = random_bytes(48 * 1024 + 11, 23);
+    let mut wrapped = vec![0u8; engine.encoded_wrapped_len(data.len(), 76)];
+    let n = engine.encode_wrapped_slice(&data, &mut wrapped, 76);
+    let mut dec = vec![0u8; decoded_len_upper(n)];
+
+    let before = allocs_on_this_thread();
+    for _ in 0..16 {
+        let n = engine.encode_wrapped_slice(&data, &mut wrapped, 76);
+        let m = engine
+            .decode_slice_ws(&wrapped[..n], &mut dec, Whitespace::CrLf)
+            .unwrap();
+        assert_eq!(m, data.len());
+    }
+    let delta = allocs_on_this_thread() - before;
+    assert_eq!(delta, 0, "fused whitespace path performed {delta} heap allocations");
+}
+
+#[test]
+fn streaming_update_and_finish_allocate_nothing_with_reserved_output() {
+    // The tiered streaming codecs grow only the caller's output Vec;
+    // with capacity reserved up front, update + finish touch the heap
+    // zero times. (Stream construction — engine tables — happens before
+    // the measurement window; finish deallocates the stream, which the
+    // alloc counter does not count.)
+    let data = random_bytes(48 * 300 + 7, 91);
+    let mut encoder = StreamingEncoder::new(Alphabet::standard());
+    let mut encoded = Vec::with_capacity(encoded_len(data.len()));
+
+    let before = allocs_on_this_thread();
+    for chunk in data.chunks(1500) {
+        encoder.update(chunk, &mut encoded);
+    }
+    let consumed = encoder.finish(&mut encoded);
+    let delta = allocs_on_this_thread() - before;
+    assert_eq!(consumed, data.len() as u64);
+    assert_eq!(delta, 0, "streaming encoder performed {delta} heap allocations");
+    assert_eq!(encoded.len(), encoded_len(data.len()));
+
+    // Decode side, including the whitespace policy: wrap the payload,
+    // then stream the wrapped text back through a CrLf-skipping decoder.
+    let engine = Engine::get();
+    let mut wrapped = vec![0u8; engine.encoded_wrapped_len(data.len(), 76)];
+    engine.encode_wrapped_slice(&data, &mut wrapped, 76);
+    let mut decoder =
+        StreamingDecoder::with_policy(Alphabet::standard(), Mode::Strict, Whitespace::CrLf);
+    let mut decoded = Vec::with_capacity(data.len());
+
+    let before = allocs_on_this_thread();
+    for chunk in wrapped.chunks(1500) {
+        decoder.update(chunk, &mut decoded).unwrap();
+    }
+    decoder.finish(&mut decoded).unwrap();
+    let delta = allocs_on_this_thread() - before;
+    assert_eq!(delta, 0, "streaming decoder performed {delta} heap allocations");
+    assert_eq!(decoded, data);
 }
 
 #[test]
