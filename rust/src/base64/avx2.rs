@@ -286,6 +286,26 @@ mod kernels {
         (iters * DEC_IN, None)
     }
 
+    /// Stream `lines` whole cache lines from `src` to the 64-byte-aligned
+    /// `dst` as two `_mm256_stream_si256` stores per line. No fence —
+    /// see the `sfence` contract in [`crate::base64::stores`].
+    ///
+    /// # Safety
+    /// `dst` must be 64-byte aligned when `lines > 0` (keeping both
+    /// 32-byte halves aligned), both pointers must cover `lines * 64`
+    /// bytes, and the host must support AVX2. A `lines == 0` call is a
+    /// no-op and carries no alignment requirement.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nt_store_lines(dst: *mut u8, src: *const u8, lines: usize) {
+        debug_assert!(lines == 0 || dst as usize % 64 == 0, "NT stores require aligned lines");
+        for i in 0..lines {
+            let lo = _mm256_loadu_si256(src.add(i * 64) as *const _);
+            let hi = _mm256_loadu_si256(src.add(i * 64 + 32) as *const _);
+            _mm256_stream_si256(dst.add(i * 64) as *mut _, lo);
+            _mm256_stream_si256(dst.add(i * 64 + 32) as *mut _, hi);
+        }
+    }
+
     /// Movemask-driven whitespace compaction (the engine's fused-decode
     /// staging step on AVX2-class hosts): 32-byte loads, `vpcmpeqb` per
     /// whitespace character OR-ed into one register, `vpmovmskb` to a
@@ -324,6 +344,11 @@ mod kernels {
         (r + rt, w + wt)
     }
 }
+
+/// Crate-visible handle to [`kernels::nt_store_lines`] for the store
+/// subsystem's per-tier copy kernels (see `base64::stores`).
+#[cfg(target_arch = "x86_64")]
+pub(crate) use kernels::nt_store_lines;
 
 /// Safe wrapper over [`kernels::compact_ws`]; the engine stores this as
 /// its compaction function on AVX2-class tiers.

@@ -193,6 +193,28 @@ pub mod kernels {
         _mm512_movepi8_mask(error) as u64
     }
 
+    /// Stream `lines` whole cache lines from `src` to the 64-byte-aligned
+    /// `dst` with `_mm512_stream_si512` (one non-temporal store per
+    /// line; unaligned loads are fine). No fence is issued — see the
+    /// `sfence` contract in [`crate::base64::stores`]: the caller fences
+    /// once at kernel exit on the issuing thread.
+    ///
+    /// # Safety
+    /// `dst` must be 64-byte aligned when `lines > 0`, both pointers
+    /// must cover `lines * 64` bytes, and the host must support
+    /// AVX-512F (the engine's tier clamp guarantees it on the AVX-512
+    /// tier). A `lines == 0` call is a no-op and carries no alignment
+    /// requirement (the peel of a copy shorter than one line never
+    /// reaches an aligned address).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn nt_store_lines(dst: *mut u8, src: *const u8, lines: usize) {
+        debug_assert!(lines == 0 || dst as usize % 64 == 0, "NT stores require aligned lines");
+        for i in 0..lines {
+            let v = _mm512_loadu_si512(src.add(i * 64) as *const _);
+            _mm512_stream_si512(dst.add(i * 64) as *mut _, v);
+        }
+    }
+
     /// Mask-and-compress whitespace compaction: classify the skipped
     /// bytes with `vpcmpeqb` k-mask compares, then compact the kept
     /// bytes in-register with `vpcompressb` (`_mm512_maskz_compress_epi8`)

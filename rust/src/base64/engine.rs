@@ -38,12 +38,27 @@
 //! [`Engine::encode_par`] / [`Engine::decode_par`] split the input on
 //! block boundaries across scoped threads and push aggregate throughput
 //! past a single core's memcpy ceiling.
+//!
+//! ## Store policy
+//!
+//! Every entry point has a `_policy` twin taking a
+//! [`StorePolicy`] (`Temporal | NonTemporal | Auto(threshold)`); the
+//! plain methods resolve against the engine's default (the
+//! `B64SIMD_STORES` env override, else `Auto` at the detected
+//! last-level-cache size). Non-temporal mode produces into L1-resident
+//! staging blocks and streams them to the destination with the tier's
+//! cache-line stores (`_mm512_stream_si512` / `_mm256_stream_si256`,
+//! plain stores on SWAR/scalar), prefetching the input a tier-scaled
+//! distance ahead — see [`super::stores`] for the alignment-peel
+//! invariant and the `sfence` contract. Output bytes and error offsets
+//! are byte-identical under every policy.
 
 use std::sync::OnceLock;
 
 use super::avx2::Avx2Codec;
 use super::avx512::Avx512Codec;
 use super::block::BlockCodec;
+use super::stores::{self, StorePolicy};
 use super::swar::SwarCodec;
 use super::validate::{
     decode_quads_into, decode_tail_into, rebase_ws_error, split_tail, Whitespace,
@@ -232,6 +247,12 @@ pub struct Engine {
     kernels: Kernels,
     /// Whitespace compaction for the fused decode (tier-matched).
     compact: CompactFn,
+    /// Default store policy for the non-`_policy` entry points
+    /// (`B64SIMD_STORES` override, else `Auto` at the detected LLC).
+    policy: StorePolicy,
+    /// Staged-batch copy kernel for the non-temporal path (tier-matched:
+    /// streaming stores on the SIMD tiers, plain stores below).
+    nt_copy: stores::CopyFn,
     /// Scalar block codec: the epilogue/tail path of every tier and the
     /// bulk path of [`Tier::Scalar`].
     block: BlockCodec,
@@ -282,6 +303,8 @@ impl Engine {
         Engine {
             kernels: kernels_for(tier),
             compact: compact_for(tier),
+            policy: stores::default_policy(),
+            nt_copy: stores::copy_for(tier),
             alphabet,
             mode,
             tier,
@@ -295,6 +318,17 @@ impl Engine {
     /// The tier this engine dispatches to.
     pub fn tier(&self) -> Tier {
         self.tier
+    }
+
+    /// The store policy the non-`_policy` entry points resolve against.
+    pub fn policy(&self) -> StorePolicy {
+        self.policy
+    }
+
+    /// Override the engine's default store policy (the `_policy` entry
+    /// points take a per-call policy instead and ignore this).
+    pub fn set_policy(&mut self, policy: StorePolicy) {
+        self.policy = policy;
     }
 
     pub fn alphabet(&self) -> &Alphabet {
@@ -320,29 +354,122 @@ impl Engine {
 
     /// Encode `input` into `out[0..]`, returning the bytes written
     /// (always `encoded_len(input.len())`). Never allocates; panics if
-    /// `out` is too small.
+    /// `out` is too small. Stores resolve through the engine's default
+    /// [`StorePolicy`] — see [`Self::encode_slice_policy`].
     #[inline]
     pub fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        self.encode_slice_policy(input, out, self.policy)
+    }
+
+    /// [`Self::encode_slice`] with an explicit per-call store policy.
+    /// Output is byte-identical under every policy; `NonTemporal` (or
+    /// `Auto` above its threshold) routes the stores through an
+    /// L1-resident staging block and the tier's streaming-store copy,
+    /// keeping a >LLC output from round-tripping the cache hierarchy.
+    pub fn encode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        policy: StorePolicy,
+    ) -> usize {
         let total = encoded_len(input.len());
         assert!(out.len() >= total, "output buffer too small");
-        let out = &mut out[..total];
+        if policy.use_nontemporal(input.len() + total) {
+            self.encode_slice_nt(input, &mut out[..total]);
+        } else {
+            self.encode_slice_temporal(input, &mut out[..total]);
+        }
+        total
+    }
+
+    /// Temporal encode core (the pre-policy hot path): tier bulk kernel
+    /// plus the scalar epilogue for the sub-granule remainder and the
+    /// padded final quantum. `out.len() == encoded_len(input.len())`.
+    fn encode_slice_temporal(&self, input: &[u8], out: &mut [u8]) {
         let consumed = (self.kernels.encode_bulk)(self, input, out);
         let w = consumed / 3 * 4;
         // Epilogue: the paper's conventional path for the sub-granule
         // remainder and the padded final quantum.
         self.block.encode_slice(&input[consumed..], &mut out[w..]);
-        total
+    }
+
+    /// Streaming-store encode: fill an L1-resident staging block with
+    /// the temporal core, then move each batch to `out` with the tier's
+    /// non-temporal line copy (head/tail peeled to whole aligned cache
+    /// lines), prefetching the next batch's input meanwhile. One
+    /// `sfence` at exit publishes the weakly-ordered stores.
+    fn encode_slice_nt(&self, input: &[u8], out: &mut [u8]) {
+        // Staged output chars per round: a multiple of B64_BLOCK, small
+        // enough that staging + the live input window stay cache-resident.
+        const STAGE_OUT: usize = 4096;
+        const STAGE_RAW: usize = STAGE_OUT / 4 * 3;
+        let mut stage = [0u8; STAGE_OUT];
+        let (mut r, mut w) = (0usize, 0usize);
+        loop {
+            let take = STAGE_RAW.min(input.len() - r);
+            self.prefetch_ahead(input, r + take);
+            // Whole-3-byte-multiple batches encode without padding, so
+            // the staged outputs concatenate exactly; only the final
+            // (short) batch can carry '='.
+            let produced = encoded_len(take);
+            self.encode_slice_temporal(&input[r..r + take], &mut stage[..produced]);
+            (self.nt_copy)(&mut out[w..w + produced], &stage[..produced]);
+            r += take;
+            w += produced;
+            if r == input.len() {
+                break;
+            }
+        }
+        debug_assert_eq!(w, out.len());
+        stores::fence();
+    }
+
+    /// Software-prefetch the input window the *next* staged batch will
+    /// read (tier-scaled distance; no-op on the SWAR/scalar tiers and
+    /// at end of input).
+    #[inline]
+    fn prefetch_ahead(&self, src: &[u8], from: usize) {
+        let d = stores::prefetch_distance(self.tier);
+        if d > 0 && from < src.len() {
+            stores::prefetch_read(&src[from..(from + d).min(src.len())]);
+        }
     }
 
     /// Decode `input` into `out[0..]`, returning the bytes written.
     /// `out` must hold `decoded_len_of(input)` bytes (or the
     /// `decoded_len_upper` bound). Never allocates; on error the
-    /// contents of `out` are unspecified.
+    /// contents of `out` are unspecified. Stores resolve through the
+    /// engine's default [`StorePolicy`].
     #[inline]
     pub fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        self.decode_slice_policy(input, out, self.policy)
+    }
+
+    /// [`Self::decode_slice`] with an explicit per-call store policy.
+    /// Output bytes *and* `DecodeError` offsets are identical under
+    /// every policy (the staged batches are scanned in stream order, so
+    /// the first invalid byte wins exactly as in the one-shot pass).
+    pub fn decode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
         let (body, tail) = split_tail(input, self.alphabet.pad(), self.mode)?;
         let body_out = body.len() / 4 * 3;
         assert!(out.len() >= body_out, "output buffer too small");
+        if policy.use_nontemporal(input.len() + body_out) {
+            self.decode_span_nt(body, &mut out[..body_out], 0)?;
+            let t = decode_tail_into(
+                tail,
+                self.alphabet.pad(),
+                self.mode,
+                body.len(),
+                |c| self.alphabet.value_of(c),
+                &mut out[body_out..],
+            )?;
+            return Ok(body_out + t);
+        }
         let consumed = (self.kernels.decode_bulk)(self, body, &mut out[..body_out])?;
         let mut w = consumed / 4 * 3;
         w += decode_quads_into(
@@ -360,6 +487,35 @@ impl Engine {
             &mut out[w..],
         )?;
         Ok(w + t)
+    }
+
+    /// Decode a whole-quantum span through an L1 staging buffer, moving
+    /// each staged batch to `out` with the tier's non-temporal line
+    /// copy and prefetching the next batch's chars. Error offsets are
+    /// rebased by `base`. Issues the contract `sfence` before returning
+    /// — on success *and* error, and on the calling thread, so the
+    /// parallel paths fence each worker's stores before the scope joins.
+    fn decode_span_nt(&self, span: &[u8], out: &mut [u8], base: usize) -> Result<(), DecodeError> {
+        const STAGE_B64: usize = 4096;
+        const STAGE_RAW: usize = STAGE_B64 / 4 * 3;
+        debug_assert_eq!(span.len() % 4, 0);
+        let mut stage = [0u8; STAGE_RAW];
+        let mut run = || -> Result<(), DecodeError> {
+            let (mut r, mut w) = (0usize, 0usize);
+            while r < span.len() {
+                let take = STAGE_B64.min(span.len() - r);
+                self.prefetch_ahead(span, r + take);
+                let produced = take / 4 * 3;
+                self.decode_span(&span[r..r + take], &mut stage[..produced], base + r)?;
+                (self.nt_copy)(&mut out[w..w + produced], &stage[..produced]);
+                r += take;
+                w += produced;
+            }
+            Ok(())
+        };
+        let res = run();
+        stores::fence();
+        res
     }
 
     /// Exact output size of [`Self::encode_wrapped_slice`] for `n` input
@@ -389,23 +545,94 @@ impl Engine {
     /// every line but the last runs the tier's bulk kernel with a short
     /// scalar epilogue and no padding.
     pub fn encode_wrapped_slice(&self, input: &[u8], out: &mut [u8], line_len: usize) -> usize {
+        self.encode_wrapped_slice_policy(input, out, line_len, self.policy)
+    }
+
+    /// [`Self::encode_wrapped_slice`] with an explicit per-call store
+    /// policy. Under the non-temporal path whole line groups (base64
+    /// chars *and* their CRLFs) are composed in an L1 staging block and
+    /// streamed out together; output is byte-identical either way.
+    /// Degenerate line lengths that cannot fit the staging block fall
+    /// back to the temporal path.
+    pub fn encode_wrapped_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        line_len: usize,
+        policy: StorePolicy,
+    ) -> usize {
         assert!(
             line_len >= 4 && line_len % 4 == 0,
             "line length must be a positive multiple of 4"
         );
         let total = self.encoded_wrapped_len(input.len(), line_len);
         assert!(out.len() >= total, "output buffer too small");
+        const WRAP_STAGE: usize = 4096;
+        if total == 0
+            || line_len + 2 > WRAP_STAGE
+            || !policy.use_nontemporal(input.len() + total)
+        {
+            return self.encode_wrapped_temporal(input, out, line_len, total);
+        }
+        let raw_per_line = line_len / 4 * 3;
+        let lines_per_stage = WRAP_STAGE / (line_len + 2); // >= 1 by the guard above
+        let mut stage = [0u8; WRAP_STAGE];
+        let (mut r, mut w) = (0usize, 0usize);
+        let mut done = false;
+        while !done {
+            let mut s = 0usize;
+            for _ in 0..lines_per_stage {
+                if input.len() - r > raw_per_line {
+                    self.encode_slice_temporal(
+                        &input[r..r + raw_per_line],
+                        &mut stage[s..s + line_len],
+                    );
+                    r += raw_per_line;
+                    s += line_len;
+                    stage[s] = b'\r';
+                    stage[s + 1] = b'\n';
+                    s += 2;
+                } else {
+                    // Final line: no trailing CRLF, possibly padded.
+                    let last = encoded_len(input.len() - r);
+                    self.encode_slice_temporal(&input[r..], &mut stage[s..s + last]);
+                    s += last;
+                    r = input.len();
+                    done = true;
+                    break;
+                }
+            }
+            self.prefetch_ahead(input, r);
+            (self.nt_copy)(&mut out[w..w + s], &stage[..s]);
+            w += s;
+        }
+        debug_assert_eq!(w, total);
+        stores::fence();
+        total
+    }
+
+    /// Temporal wrapped encode (the pre-policy path): CRLFs written
+    /// inline as each line's characters are stored.
+    fn encode_wrapped_temporal(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        line_len: usize,
+        total: usize,
+    ) -> usize {
         let raw_per_line = line_len / 4 * 3;
         let (mut r, mut w) = (0usize, 0usize);
         while input.len() - r > raw_per_line {
-            self.encode_slice(&input[r..r + raw_per_line], &mut out[w..w + line_len]);
+            self.encode_slice_temporal(&input[r..r + raw_per_line], &mut out[w..w + line_len]);
             r += raw_per_line;
             w += line_len;
             out[w] = b'\r';
             out[w + 1] = b'\n';
             w += 2;
         }
-        w += self.encode_slice(&input[r..], &mut out[w..]);
+        let last = encoded_len(input.len() - r);
+        self.encode_slice_temporal(&input[r..], &mut out[w..w + last]);
+        w += last;
         debug_assert_eq!(w, total);
         w
     }
@@ -429,11 +656,33 @@ impl Engine {
         out: &mut [u8],
         ws: Whitespace,
     ) -> Result<usize, DecodeError> {
+        self.decode_slice_ws_policy(input, out, ws, self.policy)
+    }
+
+    /// [`Self::decode_slice_ws`] with an explicit per-call store policy.
+    /// Under the non-temporal path each staged batch decodes into a raw
+    /// staging block and streams to `out`; output bytes and error
+    /// offsets are identical under every policy. The contract `sfence`
+    /// is issued once before returning (also on the error path).
+    pub fn decode_slice_ws_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        ws: Whitespace,
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
         if ws == Whitespace::None {
-            return self.decode_slice(input, out);
+            return self.decode_slice_policy(input, out, policy);
         }
-        self.decode_ws_inner(input, out, ws)
-            .map_err(|e| rebase_ws_error(e, input, ws))
+        // Upper-bound working set: every input byte significant.
+        let nt = policy.use_nontemporal(input.len() + input.len() / 4 * 3);
+        let res = self
+            .decode_ws_inner(input, out, ws, nt)
+            .map_err(|e| rebase_ws_error(e, input, ws));
+        if nt {
+            stores::fence();
+        }
+        res
     }
 
     /// Fused decode core; error offsets are in *stripped* coordinates
@@ -443,11 +692,15 @@ impl Engine {
         input: &[u8],
         out: &mut [u8],
         ws: Whitespace,
+        nt: bool,
     ) -> Result<usize, DecodeError> {
         // Staging block: 16 decode blocks (1 KiB) on the stack — big
         // enough to amortize the kernel call, small enough to stay in L1.
         const STAGE: usize = 16 * B64_BLOCK;
         let mut stage = [0u8; STAGE];
+        // Raw-output staging for the NT path, allocated once beside the
+        // char stage so the per-batch helper does not re-zero it.
+        let mut raw = [0u8; 16 * RAW_BLOCK];
         let mut staged = 0usize; // valid chars in `stage`
         let mut pos = 0usize; // input cursor
         let mut base = 0usize; // stripped chars already decoded
@@ -465,7 +718,7 @@ impl Engine {
             // path below, and keep every bulk call block-aligned.
             debug_assert_eq!(staged, STAGE);
             let body = STAGE - B64_BLOCK;
-            w += self.decode_ws_batch(&stage[..body], &mut out[w..], base)?;
+            w += self.decode_ws_batch_policy(&stage[..body], &mut out[w..], base, nt, &mut raw)?;
             base += body;
             stage.copy_within(body..STAGE, 0);
             staged = B64_BLOCK;
@@ -481,7 +734,7 @@ impl Engine {
                 DecodeError::InvalidLength { .. } => DecodeError::InvalidLength { len: total },
                 other => other,
             })?;
-        w += self.decode_ws_batch(body, &mut out[w..], base)?;
+        w += self.decode_ws_batch_policy(body, &mut out[w..], base, nt, &mut raw)?;
         let t = decode_tail_into(
             tail,
             self.alphabet.pad(),
@@ -491,6 +744,30 @@ impl Engine {
             &mut out[w..],
         )?;
         Ok(w + t)
+    }
+
+    /// [`Self::decode_ws_batch`] behind the store policy: the temporal
+    /// path decodes straight into `out`; the non-temporal path decodes
+    /// into the caller's raw staging block (sized for the 1 KiB char
+    /// stage, zeroed once per stream) and streams it to `out` (no fence
+    /// here — the top-level entry point fences once at exit).
+    fn decode_ws_batch_policy(
+        &self,
+        body: &[u8],
+        out: &mut [u8],
+        base: usize,
+        nt: bool,
+        raw: &mut [u8; 16 * RAW_BLOCK],
+    ) -> Result<usize, DecodeError> {
+        if !nt {
+            return self.decode_ws_batch(body, out, base);
+        }
+        let n = body.len() / 4 * 3;
+        debug_assert!(n <= raw.len());
+        self.decode_ws_batch(body, &mut raw[..n], base)?;
+        assert!(out.len() >= n, "output buffer too small");
+        (self.nt_copy)(&mut out[..n], &raw[..n]);
+        Ok(n)
     }
 
     /// Decode a staged whole-quantum span (no padding) through the tier
@@ -520,18 +797,25 @@ impl Engine {
     /// Decode whole 4-char quanta (no padding expected) from `body`,
     /// appending to `out`; `out` is restored on error. Errors are
     /// relative to `body`. This is the bulk step the tiered streaming
-    /// decoder drives between carry refills.
+    /// decoder drives between carry refills; the engine's `Auto` store
+    /// policy applies, so a single huge streamed chunk bypasses the
+    /// cache hierarchy like the one-shot path would.
     pub(crate) fn decode_quanta_into(
         &self,
         body: &[u8],
         out: &mut Vec<u8>,
     ) -> Result<(), DecodeError> {
         debug_assert_eq!(body.len() % 4, 0);
+        let body_out = body.len() / 4 * 3;
         let start = out.len();
-        out.resize(start + body.len() / 4 * 3, 0);
-        let res = self.decode_ws_batch(body, &mut out[start..], 0);
+        out.resize(start + body_out, 0);
+        let res = if self.policy.use_nontemporal(body.len() + body_out) {
+            self.decode_span_nt(body, &mut out[start..], 0)
+        } else {
+            self.decode_ws_batch(body, &mut out[start..], 0).map(|_| ())
+        };
         match res {
-            Ok(_) => Ok(()),
+            Ok(()) => Ok(()),
             Err(e) => {
                 out.truncate(start);
                 Err(e)
@@ -556,6 +840,15 @@ impl Engine {
         let bulk = blocks * RAW_BLOCK;
         let (bulk_in, tail_in) = input.split_at(bulk);
         let (bulk_out, tail_out) = out[..total].split_at_mut(bulk / 3 * 4);
+        // Resolve the store policy once against the *whole* payload, so
+        // the chunk policy does not depend on the thread count; each
+        // worker's NT entry point fences its own stores before the scope
+        // joins (the stores.rs contract).
+        let chunk_policy = if self.policy.use_nontemporal(input.len() + total) {
+            StorePolicy::NonTemporal
+        } else {
+            StorePolicy::Temporal
+        };
         std::thread::scope(|s| {
             let mut rest_in = bulk_in;
             let mut rest_out = &mut bulk_out[..];
@@ -567,7 +860,7 @@ impl Engine {
                 rest_out = next_out;
                 // Whole-block spans encode with no padding, so the
                 // per-span outputs concatenate exactly.
-                s.spawn(move || self.encode_slice(chunk_in, chunk_out));
+                s.spawn(move || self.encode_slice_policy(chunk_in, chunk_out, chunk_policy));
             }
         });
         // The sub-block remainder (with padding) runs on this thread.
@@ -598,6 +891,9 @@ impl Engine {
         let blocks = body.len() / B64_BLOCK;
         let span = blocks.div_ceil(threads) * B64_BLOCK; // chars per thread
         let bulk = blocks * B64_BLOCK;
+        // Whole-payload policy resolution, as in `encode_par`; NT spans
+        // fence on their own worker thread inside `decode_span_nt`.
+        let nt = self.policy.use_nontemporal(input.len() + body_out);
         let first_err = std::sync::Mutex::new(None::<DecodeError>);
         std::thread::scope(|s| {
             let mut rest_in = &body[..bulk];
@@ -613,7 +909,12 @@ impl Engine {
                 let chunk_base = base;
                 base += n;
                 s.spawn(move || {
-                    if let Err(e) = self.decode_span(chunk_in, chunk_out, chunk_base) {
+                    let r = if nt {
+                        self.decode_span_nt(chunk_in, chunk_out, chunk_base)
+                    } else {
+                        self.decode_span(chunk_in, chunk_out, chunk_base)
+                    };
+                    if let Err(e) = r {
                         let mut slot = first_err.lock().unwrap();
                         let replace = match (&*slot, &e) {
                             (None, _) => true,
@@ -879,6 +1180,58 @@ mod tests {
         let mut out = [0u8; 4];
         assert_eq!(e.decode_slice_ws(b"\r\n\r\n", &mut out, Whitespace::CrLf), Ok(0));
         assert_eq!(e.decode_slice_ws(b"", &mut out, Whitespace::CrLf), Ok(0));
+    }
+
+    #[test]
+    fn store_policies_produce_identical_bytes_and_errors() {
+        // Cross the staging peel edges (cache line, stage, 4 KiB) on the
+        // detected tier; the full tier × policy matrix lives in
+        // rust/tests/stores.rs.
+        let e = Engine::get();
+        assert_eq!(e.policy(), super::stores::default_policy());
+        for len in [0usize, 1, 63, 64, 65, 3071, 3072, 3073, 4095, 4096, 4097, 20_000] {
+            let data = random_bytes(len, 0x57D0 + len as u64);
+            let mut a = vec![0u8; e.encoded_len(len)];
+            let mut b = vec![0u8; e.encoded_len(len)];
+            e.encode_slice_policy(&data, &mut a, StorePolicy::Temporal);
+            e.encode_slice_policy(&data, &mut b, StorePolicy::NonTemporal);
+            assert_eq!(a, b, "encode len={len}");
+            let mut da = vec![0u8; e.decoded_len_of(&a)];
+            let mut db = vec![0u8; e.decoded_len_of(&b)];
+            let na = e.decode_slice_policy(&a, &mut da, StorePolicy::Temporal).unwrap();
+            let nb = e.decode_slice_policy(&b, &mut db, StorePolicy::NonTemporal).unwrap();
+            assert_eq!((na, &da[..na]), (nb, &db[..nb]), "decode len={len}");
+            assert_eq!(&da[..na], &data[..], "roundtrip len={len}");
+        }
+        // Identical error offsets through the NT staging seams.
+        let mut enc = e.encode(&random_bytes(9000, 3));
+        for pos in [0usize, 3071, 3072, 4095, 4096, 11_000] {
+            let orig = enc[pos];
+            enc[pos] = b'!';
+            let mut out = vec![0u8; e.decoded_len_of(&enc)];
+            let want = e.decode_slice_policy(&enc, &mut out, StorePolicy::Temporal).unwrap_err();
+            let got = e.decode_slice_policy(&enc, &mut out, StorePolicy::NonTemporal).unwrap_err();
+            assert_eq!(got, want, "pos={pos}");
+            assert_eq!(got, DecodeError::InvalidByte { offset: pos, byte: b'!' });
+            enc[pos] = orig;
+        }
+    }
+
+    #[test]
+    fn auto_policy_flips_at_its_threshold() {
+        let e = Engine::get();
+        // A threshold small enough that both sides are cheap to test.
+        let policy = StorePolicy::Auto(8192);
+        for len in [1000usize, 3000, 4000, 9000] {
+            let data = random_bytes(len, len as u64);
+            let mut auto_out = vec![0u8; e.encoded_len(len)];
+            let mut temporal = vec![0u8; e.encoded_len(len)];
+            e.encode_slice_policy(&data, &mut auto_out, policy);
+            e.encode_slice_policy(&data, &mut temporal, StorePolicy::Temporal);
+            assert_eq!(auto_out, temporal, "len={len}");
+        }
+        assert!(!policy.use_nontemporal(8192));
+        assert!(policy.use_nontemporal(8193));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! | [`avx2`] | the 2018 AVX2 codec with real intrinsics — the paper's comparison baseline |
 //! | [`avx512`] | the paper's actual §3 algorithm with real AVX-512 VBMI intrinsics (runtime-detected) |
 //! | [`engine`] | zero-allocation facade: one-time tier detection (AVX-512 → AVX2 → SWAR → scalar block), cached function pointers, slice + parallel APIs |
+//! | [`stores`] | store-policy subsystem: non-temporal cache-line stores + software prefetch for >LLC payloads (`Temporal \| NonTemporal \| Auto`) |
 //! | [`alphabet`]/[`tables`] | runtime-swappable variants (paper §5) |
 //! | [`validate`] | RFC 4648 padding/strictness semantics + the shared deferred-error re-scan helpers |
 //! | [`streaming`] | incremental encode/decode with carry state |
@@ -41,12 +42,30 @@
 //!   a block-aligned carry buffer so chunked sessions decode at engine
 //!   speed too.
 //!
+//! ## Store policy (>L2 payloads)
+//!
+//! The memcpy-speed claim stops at the last-level cache: beyond it,
+//! temporal stores pay read-for-ownership traffic and evict the input
+//! stream. [`stores::StorePolicy`] (`Temporal | NonTemporal |
+//! Auto(threshold)`) threads through every engine entry point
+//! (`*_policy` twins); non-temporal mode stages kernel output in L1 and
+//! streams whole aligned cache lines to the destination
+//! (`_mm512_stream_si512` / `_mm256_stream_si256`, plain stores as the
+//! SWAR/scalar fallback) with tier-scaled input prefetch. `Auto` — the
+//! default — flips to streaming stores when a call's working set
+//! exceeds the detected LLC, and drives [`engine::Engine::encode_par`] /
+//! [`engine::Engine::decode_par`], the streaming codecs' bulk path and
+//! the coordinator's block backends. Output bytes and error offsets are
+//! identical under every policy (pinned by `rust/tests/stores.rs`).
+//!
 //! ## Tier override
 //!
 //! Set `B64SIMD_TIER=avx512|avx2|swar|scalar` to clamp the runtime
 //! dispatch (see [`engine::detected_tier`]); the choice applies to the
 //! bulk codecs *and* the whitespace compaction kernels, so
 //! `B64SIMD_TIER=scalar` exercises a fully scalar pipeline end to end.
+//! Set `B64SIMD_STORES=temporal|nontemporal|auto|auto:<bytes>` to clamp
+//! the store policy the same way (see [`stores::default_policy`]).
 
 pub mod alphabet;
 pub mod avx2;
@@ -56,6 +75,7 @@ pub mod datauri;
 pub mod engine;
 pub mod mime;
 pub mod scalar;
+pub mod stores;
 pub mod streaming;
 pub mod swar;
 pub mod tables;
@@ -63,6 +83,7 @@ pub mod validate;
 
 pub use alphabet::Alphabet;
 pub use engine::{Engine, Tier};
+pub use stores::StorePolicy;
 pub use validate::{DecodeError, Mode, Whitespace};
 
 /// Number of raw bytes consumed per block-codec iteration (paper §3).

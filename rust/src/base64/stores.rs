@@ -1,0 +1,387 @@
+//! Store-policy subsystem: non-temporal (streaming) stores and software
+//! prefetch for payloads that overflow the cache hierarchy.
+//!
+//! The paper's memcpy-speed claim is stated for data that does *not* fit
+//! in L1; once the working set overflows the last-level cache, ordinary
+//! (temporal) stores cost twice — the output line is first read into the
+//! cache (read-for-ownership) and later written back — and the freshly
+//! decoded bytes evict the input stream that is still being read. The
+//! AVX-512 transcoding line of work (Muła & Lemire 2019; Clausecker &
+//! Lemire 2022) shows the remaining lever on the >L2 gap is streaming
+//! stores plus software prefetch of the input; this module packages both
+//! behind a [`StorePolicy`] that the [`Engine`](super::engine::Engine)
+//! threads through every encode/decode entry point.
+//!
+//! ## Policy semantics
+//!
+//! * [`StorePolicy::Temporal`] — the pre-policy behaviour: plain stores,
+//!   output travels through the cache hierarchy. Always correct, best
+//!   for cache-resident payloads (the output is often read right back).
+//! * [`StorePolicy::NonTemporal`] — kernels produce into an L1-resident
+//!   staging block and the staged bytes move to the destination with
+//!   cache-line streaming stores (`_mm512_stream_si512` on the AVX-512
+//!   tier, `_mm256_stream_si256` on AVX2, plain copies on the SWAR and
+//!   scalar tiers — the policy *degrades gracefully* where the ISA has
+//!   no streaming store, producing byte-identical output either way).
+//! * [`StorePolicy::Auto`]`(threshold)` — picks per call: non-temporal
+//!   when the call's working set (input + output bytes) exceeds the
+//!   threshold, temporal otherwise. The default threshold comes from the
+//!   detected last-level cache size
+//!   ([`perfmodel::cache::host_caches`](crate::perfmodel::cache::host_caches)):
+//!   working sets beyond the LLC round-trip DRAM anyway, so bypassing
+//!   the caches saves the read-for-ownership traffic without hurting any
+//!   payload that could have stayed resident.
+//!
+//! The process-wide default is [`StorePolicy::auto`], overridable with
+//! `B64SIMD_STORES=temporal|nontemporal|auto|auto:<bytes>` (parsed once,
+//! like `B64SIMD_TIER`).
+//!
+//! ## The alignment-peel invariant
+//!
+//! Streaming stores are only architecturally useful — and on x86 only
+//! *valid* for the 64-byte forms — when they hit **full, cache-line-
+//! aligned lines**: a partial-line streaming write forces the line into
+//! the write-combining buffer twice and `_mm512_stream_si512` requires a
+//! 64-byte-aligned address outright. [`copy_for`]'s kernels therefore
+//! peel the copy into three phases:
+//!
+//! 1. **head** — plain stores up to the first 64-byte-aligned destination
+//!    address (0..63 bytes);
+//! 2. **body** — whole aligned cache lines via the tier's streaming
+//!    store (unaligned *loads* from the staging block are fine);
+//! 3. **tail** — plain stores for the sub-line remainder.
+//!
+//! No byte is ever written by both a streaming and a plain store, and a
+//! destination line that straddles two staged batches is written by two
+//! plain stores (each batch's tail/head peel), never by a partial
+//! streaming store. `align_offset` failure (permitted by its contract)
+//! degrades the whole copy to plain stores.
+//!
+//! ## The `sfence` contract
+//!
+//! Non-temporal stores are weakly ordered: they become globally visible
+//! only after an `sfence`. The rule in this crate is **whoever issues NT
+//! stores fences once at kernel exit, on the issuing thread**:
+//!
+//! * the line-copy kernels behind [`copy_for`] never fence — they are
+//!   called once per staged batch and a fence per batch would serialize
+//!   the write-combining buffers;
+//! * every NT-mode engine entry point (`encode_slice_nt`,
+//!   `decode_span_nt`, `decode_slice_ws_policy`, the wrapped encoder)
+//!   calls [`fence`] exactly once before returning — on success *and* on
+//!   the error path, so a failed decode never leaves unfenced stores
+//!   behind;
+//! * parallel paths (`encode_par`/`decode_par`) run the NT entry points
+//!   on the worker threads, so each worker fences its own stores before
+//!   the scope joins.
+//!
+//! On non-x86 targets every helper here is a plain copy / no-op and the
+//! contract holds vacuously.
+
+use std::sync::OnceLock;
+
+use super::engine::Tier;
+
+/// Cache-line granule of the streaming-store kernels (and a harmless
+/// copy granule on targets without them).
+pub const CACHE_LINE: usize = 64;
+
+/// How engine kernels store their output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorePolicy {
+    /// Plain stores through the cache hierarchy (the pre-policy path).
+    Temporal,
+    /// Streaming stores via an L1 staging block (plain stores where the
+    /// tier has no streaming form).
+    NonTemporal,
+    /// Non-temporal when a call's working set (input + output bytes)
+    /// exceeds this many bytes, temporal otherwise.
+    Auto(usize),
+}
+
+impl StorePolicy {
+    /// [`StorePolicy::Auto`] at the detected host threshold (last-level
+    /// cache size, floored at 1 MiB so a bogus topology reading cannot
+    /// push small payloads off the cache path).
+    pub fn auto() -> StorePolicy {
+        StorePolicy::Auto(auto_threshold())
+    }
+
+    /// Parse a `B64SIMD_STORES` value.
+    pub fn parse(s: &str) -> Option<StorePolicy> {
+        match s {
+            "temporal" => Some(StorePolicy::Temporal),
+            "nontemporal" | "nt" => Some(StorePolicy::NonTemporal),
+            "auto" => Some(StorePolicy::auto()),
+            _ => s
+                .strip_prefix("auto:")
+                .and_then(|t| t.parse().ok())
+                .map(StorePolicy::Auto),
+        }
+    }
+
+    /// Benchmark/series label.
+    pub fn name(self) -> &'static str {
+        match self {
+            StorePolicy::Temporal => "temporal",
+            StorePolicy::NonTemporal => "nontemporal",
+            StorePolicy::Auto(_) => "auto",
+        }
+    }
+
+    /// Resolve the policy for one call: should a working set of
+    /// `working_set` bytes (input + output) use the streaming path?
+    #[inline]
+    pub fn use_nontemporal(self, working_set: usize) -> bool {
+        match self {
+            StorePolicy::Temporal => false,
+            StorePolicy::NonTemporal => true,
+            StorePolicy::Auto(threshold) => working_set > threshold,
+        }
+    }
+}
+
+/// The `Auto` threshold: the detected last-level cache capacity (see
+/// [`crate::perfmodel::cache::host_caches`]), floored at 1 MiB.
+pub fn auto_threshold() -> usize {
+    crate::perfmodel::cache::host_caches().llc.max(1 << 20)
+}
+
+/// Process-wide default policy: the `B64SIMD_STORES` env override if
+/// set and parseable, else [`StorePolicy::auto`]. Parsed exactly once.
+pub fn default_policy() -> StorePolicy {
+    static POLICY: OnceLock<StorePolicy> = OnceLock::new();
+    *POLICY.get_or_init(|| {
+        if let Ok(v) = std::env::var("B64SIMD_STORES") {
+            if let Some(p) = StorePolicy::parse(&v) {
+                return p;
+            }
+            eprintln!("b64simd: ignoring unknown B64SIMD_STORES value '{v}'");
+        }
+        StorePolicy::auto()
+    })
+}
+
+/// A staged-batch copy kernel: `copy(dst, src)` with `dst.len() ==
+/// src.len()`. The tier variants stream whole aligned cache lines (see
+/// the module docs); callers own the exit [`fence`].
+pub(crate) type CopyFn = fn(&mut [u8], &[u8]);
+
+/// The copy kernel matching an engine tier: streaming stores on the
+/// SIMD tiers, plain stores as the SWAR/scalar fallback — so a forced
+/// `B64SIMD_TIER=scalar` pipeline stays fully scalar even under
+/// `B64SIMD_STORES=nontemporal`.
+pub(crate) fn copy_for(tier: Tier) -> CopyFn {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match tier {
+            Tier::Avx512 => return copy_nt_avx512,
+            Tier::Avx2 => return copy_nt_avx2,
+            Tier::Swar | Tier::Scalar => {}
+        }
+    }
+    let _ = tier;
+    copy_plain
+}
+
+/// Plain-store fallback (also the head/tail peel everywhere).
+fn copy_plain(dst: &mut [u8], src: &[u8]) {
+    dst.copy_from_slice(src);
+}
+
+/// Head/tail peel bookkeeping: copy the unaligned head with plain
+/// stores and return `(head, lines)` — the offset of the first aligned
+/// line and the count of whole lines to stream. `lines == 0` when the
+/// span never reaches an aligned line (tiny copies degrade to plain).
+#[cfg(target_arch = "x86_64")]
+fn peel_head(dst: &mut [u8], src: &[u8]) -> (usize, usize) {
+    debug_assert_eq!(dst.len(), src.len());
+    let head = match dst.as_ptr().align_offset(CACHE_LINE) {
+        usize::MAX => dst.len(), // align_offset may refuse; degrade to plain
+        off => off.min(dst.len()),
+    };
+    dst[..head].copy_from_slice(&src[..head]);
+    (head, (dst.len() - head) / CACHE_LINE)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn copy_nt_avx512(dst: &mut [u8], src: &[u8]) {
+    let (head, lines) = peel_head(dst, src);
+    // SAFETY: `copy_for` only hands this out for the (clamped, hence
+    // available) AVX-512 tier; both slices cover `lines * 64` bytes
+    // past `head`, and `dst + head` is 64-byte aligned whenever
+    // `lines > 0` (a copy too short to reach an aligned line peels
+    // entirely into the head and passes `lines == 0`, a no-op).
+    unsafe {
+        super::avx512::raw::nt_store_lines(
+            dst.as_mut_ptr().add(head),
+            src.as_ptr().add(head),
+            lines,
+        );
+    }
+    let tail = head + lines * CACHE_LINE;
+    dst[tail..].copy_from_slice(&src[tail..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn copy_nt_avx2(dst: &mut [u8], src: &[u8]) {
+    let (head, lines) = peel_head(dst, src);
+    // SAFETY: as for `copy_nt_avx512`, with the AVX2 tier clamp; when
+    // `lines > 0` the 64-byte-aligned destination keeps both 32-byte
+    // halves aligned for `_mm256_stream_si256`.
+    unsafe {
+        super::avx2::nt_store_lines(dst.as_mut_ptr().add(head), src.as_ptr().add(head), lines);
+    }
+    let tail = head + lines * CACHE_LINE;
+    dst[tail..].copy_from_slice(&src[tail..]);
+}
+
+/// Copy `src` into `dst` with the best streaming-store kernel the host
+/// supports (plain copy where there is none), then [`fence`]. This is
+/// the standalone "NT memcpy" used by `benches/nt_stores.rs` to measure
+/// the store path in isolation; engine code uses the per-tier
+/// [`copy_for`] kernels and fences once per call instead.
+pub fn nt_memcpy(dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len(), "nt_memcpy requires equal lengths");
+    (best_copy())(dst, src);
+    fence();
+}
+
+fn best_copy() -> CopyFn {
+    static BEST: OnceLock<CopyFn> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx512f") {
+                return copy_nt_avx512;
+            }
+            if is_x86_feature_detected!("avx2") {
+                return copy_nt_avx2;
+            }
+        }
+        copy_plain
+    })
+}
+
+/// Publish all pending non-temporal stores (`sfence`). See the module
+/// docs for who calls this and when; a no-op on targets without
+/// streaming stores.
+#[inline]
+pub fn fence() {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: `sfence` has no preconditions on x86_64 (SSE is baseline).
+    unsafe {
+        std::arch::x86_64::_mm_sfence()
+    };
+}
+
+/// How far ahead of the kernel the input stream is prefetched, per
+/// tier, in bytes. The SIMD tiers chew through a staged batch faster
+/// than DRAM can answer a demand miss, so they look a full batch ahead;
+/// the SWAR/scalar tiers are compute-bound and the hardware prefetcher
+/// already keeps up — software prefetch would only add instructions.
+pub fn prefetch_distance(tier: Tier) -> usize {
+    match tier {
+        Tier::Avx512 => 4096,
+        Tier::Avx2 => 2048,
+        Tier::Swar | Tier::Scalar => 0,
+    }
+}
+
+/// Issue a T0 prefetch for every cache line of `src` (a hint; no-op off
+/// x86_64). Callers bound `src` by [`prefetch_distance`].
+#[inline]
+pub fn prefetch_read(src: &[u8]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let mut p = 0;
+        while p < src.len() {
+            // SAFETY: prefetch never faults; the pointer stays in-slice.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(src.as_ptr().add(p) as *const i8) };
+            p += CACHE_LINE;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = src;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_names() {
+        assert_eq!(StorePolicy::parse("temporal"), Some(StorePolicy::Temporal));
+        assert_eq!(StorePolicy::parse("nontemporal"), Some(StorePolicy::NonTemporal));
+        assert_eq!(StorePolicy::parse("nt"), Some(StorePolicy::NonTemporal));
+        assert_eq!(StorePolicy::parse("auto:12345"), Some(StorePolicy::Auto(12345)));
+        assert!(matches!(StorePolicy::parse("auto"), Some(StorePolicy::Auto(_))));
+        assert_eq!(StorePolicy::parse("mmx"), None);
+        assert_eq!(StorePolicy::parse("auto:x"), None);
+    }
+
+    #[test]
+    fn policy_resolution() {
+        assert!(!StorePolicy::Temporal.use_nontemporal(usize::MAX));
+        assert!(StorePolicy::NonTemporal.use_nontemporal(0));
+        let auto = StorePolicy::Auto(100);
+        assert!(!auto.use_nontemporal(99));
+        assert!(!auto.use_nontemporal(100));
+        assert!(auto.use_nontemporal(101));
+    }
+
+    #[test]
+    fn auto_threshold_is_at_least_a_mebibyte() {
+        assert!(auto_threshold() >= 1 << 20);
+        if let StorePolicy::Auto(t) = StorePolicy::auto() {
+            assert_eq!(t, auto_threshold());
+        } else {
+            panic!("StorePolicy::auto() must be Auto");
+        }
+    }
+
+    /// Every copy kernel must be byte-identical to a plain copy across
+    /// lengths and destination alignments (the peel edges).
+    #[test]
+    fn copy_kernels_match_plain_copy_at_every_alignment() {
+        let kernels: Vec<(&str, CopyFn)> = vec![
+            ("plain", copy_plain as CopyFn),
+            ("tier", copy_for(crate::base64::engine::detected_tier())),
+            ("best", best_copy()),
+        ];
+        for (name, copy) in kernels {
+            for len in [0usize, 1, 63, 64, 65, 127, 128, 200, 4095, 4096, 4097] {
+                let src: Vec<u8> = (0..len).map(|i| (i * 131 % 251) as u8).collect();
+                // Slide the destination across a cache line to hit every
+                // head-peel length.
+                let mut backing = vec![0u8; len + 2 * CACHE_LINE];
+                for off in [0usize, 1, 7, 31, 63] {
+                    let dst = &mut backing[off..off + len];
+                    dst.fill(0xEE);
+                    copy(dst, &src);
+                    assert_eq!(dst, &src[..], "{name} len={len} off={off}");
+                }
+            }
+        }
+        fence();
+    }
+
+    #[test]
+    fn nt_memcpy_roundtrip() {
+        let src: Vec<u8> = (0..10_000).map(|i| (i % 256) as u8).collect();
+        let mut dst = vec![0u8; src.len()];
+        nt_memcpy(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn prefetch_is_safe_on_any_slice() {
+        prefetch_read(&[]);
+        prefetch_read(&[1, 2, 3]);
+        prefetch_read(&vec![7u8; 5000]);
+        assert_eq!(prefetch_distance(Tier::Scalar), 0);
+        assert_eq!(prefetch_distance(Tier::Swar), 0);
+        assert!(prefetch_distance(Tier::Avx512) >= prefetch_distance(Tier::Avx2));
+    }
+}

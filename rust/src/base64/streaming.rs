@@ -18,6 +18,13 @@
 //! ordering is enforced eagerly. The hot paths perform no heap
 //! allocation beyond growing the caller's output `Vec` — with reserved
 //! capacity they allocate nothing (asserted in `rust/tests/alloc.rs`).
+//!
+//! The bulk paths (whole blocks taken straight from a chunk) run the
+//! engine's slice cores, so the engine's `Auto` store policy applies
+//! per chunk: a session fed multi-megabyte chunks streams its output
+//! with non-temporal stores exactly like the one-shot calls, while
+//! small chunks stay on the temporal path
+//! (see [`crate::base64::stores`]).
 
 use super::engine::Engine;
 use super::swar::find_ws;

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::base64::avx2::Avx2Codec;
 use crate::base64::validate::{decode_quads_into, row_has_invalid};
-use crate::base64::{Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
+use crate::base64::{stores, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
 use crate::runtime::BlockExecutor;
 
 /// Batched whole-block encode/decode over some execution substrate.
@@ -186,7 +186,82 @@ fn encode_blocks_scalar(input: &[u8], table: &[u8; 64], out: &mut Vec<u8>) {
     }
 }
 
+/// Tier-scaled software prefetch of the next staged batch's input (the
+/// native backend runs the AVX-512 tier).
+#[cfg(target_arch = "x86_64")]
+fn prefetch_next(src: &[u8], from: usize) {
+    let d = stores::prefetch_distance(crate::base64::Tier::Avx512);
+    if from < src.len() {
+        stores::prefetch_read(&src[from..(from + d).min(src.len())]);
+    }
+}
+
+/// Staged non-temporal encode for [`NativeBackend`]: whole blocks run
+/// through an L1 staging buffer and stream into `dst` as aligned cache
+/// lines. Fences at exit (the stores.rs contract).
+#[cfg(target_arch = "x86_64")]
+fn native_encode_blocks_nt(input: &[u8], table: &[u8; 64], dst: &mut [u8]) {
+    const STAGE_BLOCKS: usize = 64; // 3 KiB raw in, 4 KiB chars out
+    let copy = stores::copy_for(crate::base64::Tier::Avx512);
+    let mut stage = [0u8; STAGE_BLOCKS * B64_BLOCK];
+    let (mut r, mut w) = (0usize, 0usize);
+    while r < input.len() {
+        let take = (STAGE_BLOCKS * RAW_BLOCK).min(input.len() - r);
+        prefetch_next(input, r + take);
+        let produced = take / RAW_BLOCK * B64_BLOCK;
+        // SAFETY: callers hold the NativeBackend invariant (VBMI
+        // detected at construction); slices are whole blocks.
+        unsafe {
+            crate::base64::avx512::raw::encode_blocks(
+                &input[r..r + take],
+                &mut stage[..produced],
+                table,
+            )
+        };
+        copy(&mut dst[w..w + produced], &stage[..produced]);
+        r += take;
+        w += produced;
+    }
+    stores::fence();
+}
+
+/// Staged non-temporal decode for [`NativeBackend`]; returns the OR of
+/// the per-stage deferred error masks. Fences at exit.
+#[cfg(target_arch = "x86_64")]
+fn native_decode_blocks_nt(input: &[u8], dtable: &[u8; 128], dst: &mut [u8]) -> u64 {
+    const STAGE_BLOCKS: usize = 64; // 4 KiB chars in, 3 KiB raw out
+    let copy = stores::copy_for(crate::base64::Tier::Avx512);
+    let mut stage = [0u8; STAGE_BLOCKS * RAW_BLOCK];
+    let mut mask = 0u64;
+    let (mut r, mut w) = (0usize, 0usize);
+    while r < input.len() {
+        let take = (STAGE_BLOCKS * B64_BLOCK).min(input.len() - r);
+        prefetch_next(input, r + take);
+        let produced = take / B64_BLOCK * RAW_BLOCK;
+        // SAFETY: see native_encode_blocks_nt.
+        mask |= unsafe {
+            crate::base64::avx512::raw::decode_blocks(
+                &input[r..r + take],
+                &mut stage[..produced],
+                dtable,
+            )
+        };
+        copy(&mut dst[w..w + produced], &stage[..produced]);
+        r += take;
+        w += produced;
+    }
+    stores::fence();
+    mask
+}
+
 /// AVX-512 VBMI block backend (requires [`Avx512Codec::available`]).
+///
+/// Batches whose working set exceeds the process store-policy threshold
+/// (the `Auto` default: the detected LLC; `B64SIMD_STORES` overrides)
+/// run through an L1 staging block and stream whole cache lines into
+/// the batch buffer with `_mm512_stream_si512` — the coordinator's
+/// answer to multi-megabyte coalesced batches evicting every worker's
+/// cache (see [`crate::base64::stores`]).
 ///
 /// [`Avx512Codec::available`]: crate::base64::avx512::Avx512Codec::available
 pub struct NativeBackend;
@@ -206,9 +281,15 @@ impl BlockBackend for NativeBackend {
         #[cfg(target_arch = "x86_64")]
         {
             let start = out.len();
-            out.resize(start + input.len() / RAW_BLOCK * B64_BLOCK, 0);
-            // SAFETY: factory only constructs this when VBMI is detected.
-            unsafe { crate::base64::avx512::raw::encode_blocks(input, &mut out[start..], table) };
+            let total = input.len() / RAW_BLOCK * B64_BLOCK;
+            out.resize(start + total, 0);
+            let dst = &mut out[start..];
+            if stores::default_policy().use_nontemporal(input.len() + total) {
+                native_encode_blocks_nt(input, table, dst);
+            } else {
+                // SAFETY: factory only constructs this when VBMI is detected.
+                unsafe { crate::base64::avx512::raw::encode_blocks(input, dst, table) };
+            }
             Ok(())
         }
         #[cfg(not(target_arch = "x86_64"))]
@@ -234,9 +315,14 @@ impl BlockBackend for NativeBackend {
             let rows = input.len() / B64_BLOCK;
             let start = out.len();
             out.resize(start + rows * RAW_BLOCK, 0);
-            // SAFETY: see encode_blocks_into.
-            let mask =
-                unsafe { crate::base64::avx512::raw::decode_blocks(input, &mut out[start..], dtable) };
+            let dst = &mut out[start..];
+            let mask = if stores::default_policy().use_nontemporal(input.len() + rows * RAW_BLOCK)
+            {
+                native_decode_blocks_nt(input, dtable, dst)
+            } else {
+                // SAFETY: see encode_blocks_into.
+                unsafe { crate::base64::avx512::raw::decode_blocks(input, dst, dtable) }
+            };
             let e_start = errs.len();
             errs.resize(e_start + rows, 0);
             if mask != 0 {
@@ -630,5 +716,44 @@ mod tests {
         let be = native_factory()().unwrap();
         assert!(["avx512", "avx2", "swar"].contains(&be.name()));
         check_backend_matches_rust(be.as_ref(), &Alphabet::standard());
+    }
+
+    /// The staged non-temporal batch path must be byte- and mask-
+    /// identical to the direct kernel call, across stage-seam sizes.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn native_nt_staging_matches_direct_kernel() {
+        if !crate::base64::avx512::Avx512Codec::available() {
+            eprintln!("skipping: no AVX-512 VBMI");
+            return;
+        }
+        let a = Alphabet::standard();
+        // 63/64/65 blocks straddle the 64-block staging seam.
+        for blocks in [1usize, 63, 64, 65, 200] {
+            let data: Vec<u8> = (0..blocks * RAW_BLOCK).map(|i| (i * 31 % 256) as u8).collect();
+            let mut direct = vec![0u8; blocks * B64_BLOCK];
+            // SAFETY: availability checked above.
+            unsafe {
+                crate::base64::avx512::raw::encode_blocks(
+                    &data,
+                    &mut direct,
+                    a.encode_table().as_bytes(),
+                )
+            };
+            let mut staged = vec![0u8; blocks * B64_BLOCK];
+            native_encode_blocks_nt(&data, a.encode_table().as_bytes(), &mut staged);
+            assert_eq!(staged, direct, "blocks={blocks}");
+
+            let mut dec = vec![0u8; blocks * RAW_BLOCK];
+            let mask = native_decode_blocks_nt(&staged, a.decode_table().as_bytes(), &mut dec);
+            assert_eq!(mask, 0, "blocks={blocks}");
+            assert_eq!(dec, data, "blocks={blocks}");
+            // A corrupt byte in the last stage still sets the mask.
+            let mut bad = staged.clone();
+            let n = bad.len();
+            bad[n - 3] = b'!';
+            let mask = native_decode_blocks_nt(&bad, a.decode_table().as_bytes(), &mut dec);
+            assert_ne!(mask, 0, "blocks={blocks}");
+        }
     }
 }

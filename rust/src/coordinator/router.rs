@@ -23,7 +23,7 @@ use super::batcher::{BatchResult, Direction, GroupKey, WorkItem};
 use super::metrics::Metrics;
 use super::scheduler::{Scheduler, SchedulerConfig};
 use crate::base64::validate::{decode_quads_into, decode_tail, first_invalid, split_tail};
-use crate::base64::{Alphabet, Codec, DecodeError, Mode, B64_BLOCK, RAW_BLOCK};
+use crate::base64::{Alphabet, Codec, DecodeError, Mode, Whitespace, B64_BLOCK, RAW_BLOCK};
 
 /// What the caller wants done.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,15 +41,38 @@ pub struct Request {
     pub payload: Vec<u8>,
     pub alphabet: Alphabet,
     pub mode: Mode,
+    /// Whitespace the decode path skips (one-shot MIME bodies); ignored
+    /// by encode requests. Error offsets always index the *original*
+    /// payload.
+    pub ws: Whitespace,
 }
 
 impl Request {
     pub fn encode(id: u64, payload: Vec<u8>) -> Self {
-        Self { id, kind: RequestKind::Encode, payload, alphabet: Alphabet::standard(), mode: Mode::Strict }
+        Self {
+            id,
+            kind: RequestKind::Encode,
+            payload,
+            alphabet: Alphabet::standard(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+        }
     }
 
     pub fn decode(id: u64, payload: Vec<u8>) -> Self {
-        Self { id, kind: RequestKind::Decode, payload, alphabet: Alphabet::standard(), mode: Mode::Strict }
+        Self {
+            id,
+            kind: RequestKind::Decode,
+            payload,
+            alphabet: Alphabet::standard(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+        }
+    }
+
+    /// A decode request with a whitespace policy (the wire's 0x04 tag).
+    pub fn decode_ws(id: u64, payload: Vec<u8>, ws: Whitespace) -> Self {
+        Self { ws, ..Self::decode(id, payload) }
     }
 }
 
@@ -181,7 +204,36 @@ impl Router {
     }
 
     fn run_decode(&self, request: &Request, validate_only: bool) -> Outcome {
-        let payload = &request.payload;
+        if request.ws == Whitespace::None {
+            return self.run_decode_stripped(&request.payload, request, validate_only);
+        }
+        // One-shot whitespace knob: compact the payload once with the
+        // SWAR word scan, run the batched path on the significant
+        // characters, then rebase any error offset onto the original
+        // (whitespace-bearing) payload.
+        let mut stripped = vec![0u8; request.payload.len()];
+        let (consumed, n) =
+            crate::base64::swar::compact_ws(&request.payload, &mut stripped, request.ws);
+        debug_assert_eq!(consumed, request.payload.len());
+        stripped.truncate(n);
+        match self.run_decode_stripped(&stripped, request, validate_only) {
+            Outcome::Invalid(e) => Outcome::Invalid(crate::base64::validate::rebase_ws_error(
+                e,
+                &request.payload,
+                request.ws,
+            )),
+            other => other,
+        }
+    }
+
+    /// Decode `payload` (already free of skipped whitespace); error
+    /// offsets index `payload`.
+    fn run_decode_stripped(
+        &self,
+        payload: &[u8],
+        request: &Request,
+        validate_only: bool,
+    ) -> Outcome {
         let alphabet = &request.alphabet;
         let codec = crate::base64::block::BlockCodec::with_mode(alphabet.clone(), request.mode);
         if payload.len() < self.inline_threshold {
@@ -364,6 +416,7 @@ mod tests {
             payload: enc.clone(),
             alphabet: Alphabet::standard(),
             mode: Mode::Strict,
+            ws: Whitespace::None,
         });
         assert!(matches!(resp.outcome, Outcome::Valid));
         let mut bad = enc;
@@ -374,6 +427,7 @@ mod tests {
             payload: bad,
             alphabet: Alphabet::standard(),
             mode: Mode::Strict,
+            ws: Whitespace::None,
         });
         assert!(matches!(resp.outcome, Outcome::Invalid(_)));
     }
@@ -389,6 +443,7 @@ mod tests {
             payload: data.clone(),
             alphabet: url.clone(),
             mode: Mode::Strict,
+            ws: Whitespace::None,
         });
         let enc = expect_data(resp);
         assert!(!enc.contains(&b'+') && !enc.contains(&b'/'));
@@ -398,8 +453,52 @@ mod tests {
             payload: enc,
             alphabet: url,
             mode: Mode::Strict,
+            ws: Whitespace::None,
         });
         assert_eq!(expect_data(resp), data);
+    }
+
+    #[test]
+    fn one_shot_ws_decode_matches_strip_oracle_and_rebases_errors() {
+        use crate::workload::random_bytes;
+        let rt = router();
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let e = crate::base64::Engine::get();
+        for len in [0usize, 10, 60, 500, 5000] {
+            let data = random_bytes(len, 7 + len as u64);
+            let mut wrapped = vec![0u8; e.encoded_wrapped_len(len, 76)];
+            e.encode_wrapped_slice(&data, &mut wrapped, 76);
+            // Raw wrapped payload straight into a one-shot decode.
+            let resp = rt.process(Request::decode_ws(1, wrapped.clone(), Whitespace::CrLf));
+            assert_eq!(expect_data(resp), data, "len={len}");
+            // The same payload without the knob fails (CR is not base64).
+            if len > 57 {
+                assert!(matches!(
+                    rt.process(Request::decode(1, wrapped.clone())).outcome,
+                    Outcome::Invalid(_)
+                ));
+            }
+        }
+        // Error offsets index the original wrapped payload.
+        let data = random_bytes(300, 11);
+        let mut wrapped = vec![0u8; e.encoded_wrapped_len(300, 76)];
+        e.encode_wrapped_slice(&data, &mut wrapped, 76);
+        for pos in [0usize, 100, 200, 399] {
+            if Whitespace::CrLf.skips(wrapped[pos]) || wrapped[pos] == b'=' {
+                continue;
+            }
+            let orig = wrapped[pos];
+            wrapped[pos] = b'!';
+            let resp = rt.process(Request::decode_ws(2, wrapped.clone(), Whitespace::CrLf));
+            match resp.outcome {
+                Outcome::Invalid(DecodeError::InvalidByte { offset, byte: b'!' }) => {
+                    assert_eq!(offset, pos, "pos={pos}")
+                }
+                other => panic!("pos={pos}: {other:?}"),
+            }
+            wrapped[pos] = orig;
+        }
+        let _ = reference;
     }
 
     #[test]

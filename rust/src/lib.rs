@@ -22,7 +22,10 @@
 //! The hot path is the allocation-free slice API on the engine, which
 //! performs CPU feature detection exactly once (AVX-512 VBMI → AVX2 →
 //! SWAR → scalar block; force with `B64SIMD_TIER=avx512|avx2|swar|scalar`
-//! or [`base64::Engine::with_tier`]):
+//! or [`base64::Engine::with_tier`]). Payloads that overflow the
+//! last-level cache automatically switch to non-temporal streaming
+//! stores with software prefetch ([`base64::StorePolicy`]; force with
+//! `B64SIMD_STORES=temporal|nontemporal|auto:<bytes>`):
 //!
 //! ```
 //! use b64simd::base64::{encoded_len, Engine};

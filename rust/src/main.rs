@@ -1,8 +1,8 @@
 //! `b64simd` CLI — leader entrypoint for the codec service and tools.
 //!
 //! ```text
-//! b64simd encode [--alphabet NAME] [--in FILE] [--out FILE]
-//! b64simd decode [--alphabet NAME] [--forgiving] [--in FILE] [--out FILE]
+//! b64simd encode [--alphabet NAME] [--stores POLICY] [--in FILE] [--out FILE]
+//! b64simd decode [--alphabet NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
 //! b64simd selftest [--artifacts DIR]
 //! b64simd model  [--figure 4 | --hardware]
@@ -11,7 +11,9 @@
 //!
 //! Encode/decode run on the tier-dispatched `Engine` (AVX-512 VBMI →
 //! AVX2 → SWAR → scalar block, detected once); set
-//! `B64SIMD_TIER=avx512|avx2|swar|scalar` to force a tier.
+//! `B64SIMD_TIER=avx512|avx2|swar|scalar` to force a tier. `--stores
+//! temporal|nontemporal|auto|auto:<bytes>` (or `B64SIMD_STORES`) picks
+//! the store policy for >LLC payloads — see `base64::stores`.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
@@ -93,15 +95,28 @@ fn alphabet_arg(args: &Args) -> anyhow::Result<Alphabet> {
     Alphabet::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown alphabet '{name}'"))
 }
 
+/// Apply a `--stores temporal|nontemporal|auto|auto:<bytes>` override to
+/// a freshly built engine (the env override stays the default).
+fn apply_stores_arg(engine: &mut Engine, args: &Args) -> anyhow::Result<()> {
+    if let Some(v) = args.get("stores") {
+        let policy = b64simd::base64::StorePolicy::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown store policy '{v}'"))?;
+        engine.set_policy(policy);
+    }
+    Ok(())
+}
+
 fn cmd_encode(args: &Args) -> anyhow::Result<()> {
-    let codec = Engine::new(alphabet_arg(args)?);
+    let mut codec = Engine::new(alphabet_arg(args)?);
+    apply_stores_arg(&mut codec, args)?;
     let data = read_input(args)?;
     write_output(args, &codec.encode(&data))
 }
 
 fn cmd_decode(args: &Args) -> anyhow::Result<()> {
     let mode = if args.has("forgiving") { Mode::Forgiving } else { Mode::Strict };
-    let codec = Engine::with_mode(alphabet_arg(args)?, mode);
+    let mut codec = Engine::with_mode(alphabet_arg(args)?, mode);
+    apply_stores_arg(&mut codec, args)?;
     let mut data = read_input(args)?;
     // Terminal convenience: strip one trailing newline.
     if data.last() == Some(&b'\n') {

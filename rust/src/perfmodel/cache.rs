@@ -146,6 +146,97 @@ impl CacheModel {
     }
 }
 
+/// Detected cache capacities of the *host* CPU, in bytes — the runtime
+/// counterpart of the modeled [`Machine`] levels. The store-policy
+/// subsystem ([`crate::base64::stores`]) compares a call's working set
+/// against `llc` to decide when non-temporal stores pay off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostCaches {
+    /// Per-core L1 data cache.
+    pub l1d: usize,
+    /// Per-core L2.
+    pub l2: usize,
+    /// Last-level (shared) cache.
+    pub llc: usize,
+}
+
+impl HostCaches {
+    /// The paper's Cannon Lake testbed (Table 2) — the fallback when the
+    /// host topology cannot be read.
+    pub const FALLBACK: HostCaches =
+        HostCaches { l1d: 32 << 10, l2: 256 << 10, llc: 4 << 20 };
+}
+
+/// Host cache sizes, detected once per process. Linux reads the sysfs
+/// cache topology of cpu0; elsewhere (or when sysfs is absent, e.g. in
+/// minimal containers) the paper's Cannon Lake parameters stand in —
+/// conservative in the right direction, since underestimating the LLC
+/// only flips large payloads to non-temporal stores a little earlier.
+pub fn host_caches() -> HostCaches {
+    use std::sync::OnceLock;
+    static CACHES: OnceLock<HostCaches> = OnceLock::new();
+    *CACHES.get_or_init(|| sysfs_caches().unwrap_or(HostCaches::FALLBACK))
+}
+
+/// Parse a sysfs cache size string ("32K", "8M", plain bytes).
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'M' | b'm' => (&s[..s.len() - 1], 1usize << 20),
+        b'G' | b'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1usize),
+    };
+    digits.parse::<usize>().ok().map(|n| n * mult)
+}
+
+/// Read `/sys/devices/system/cpu/cpu0/cache/index*/{level,type,size}`.
+/// Returns `None` when the directory is absent or yields no data cache.
+fn sysfs_caches() -> Option<HostCaches> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut l1d = None;
+    let mut l2 = None;
+    // LLC: the data/unified cache with the highest level (max size on ties).
+    let mut llc: Option<(u32, usize)> = None;
+    for entry in std::fs::read_dir(base).ok()?.flatten() {
+        let dir = entry.path();
+        if !dir
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("index"))
+        {
+            continue;
+        }
+        let read = |f: &str| std::fs::read_to_string(dir.join(f)).ok();
+        let (Some(level), Some(ty), Some(size)) = (read("level"), read("type"), read("size"))
+        else {
+            continue;
+        };
+        let Ok(level) = level.trim().parse::<u32>() else { continue };
+        if ty.trim() == "Instruction" {
+            continue;
+        }
+        let Some(bytes) = parse_cache_size(&size) else { continue };
+        match level {
+            1 => l1d = Some(bytes),
+            2 => l2 = Some(bytes),
+            _ => {}
+        }
+        if llc.is_none_or(|(bl, bb)| (level, bytes) > (bl, bb)) {
+            llc = Some((level, bytes));
+        }
+    }
+    let fb = HostCaches::FALLBACK;
+    let l2 = l2.unwrap_or(fb.l2);
+    Some(HostCaches {
+        l1d: l1d.unwrap_or(fb.l1d),
+        l2,
+        // The LLC is never smaller than L2 (single-level-cache parts
+        // report L2 as their last level).
+        llc: llc.map(|(_, b)| b).unwrap_or(fb.llc).max(l2),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +307,26 @@ mod tests {
         let tiny = m.predict("avx512", Op::Decode, 256).gbps;
         let l1 = m.predict("avx512", Op::Decode, 8 << 10).gbps;
         assert!(tiny < l1 / 2.0, "tiny={tiny} l1={l1}");
+    }
+
+    #[test]
+    fn cache_size_strings_parse() {
+        assert_eq!(parse_cache_size("32K"), Some(32 << 10));
+        assert_eq!(parse_cache_size(" 3072K\n"), Some(3072 << 10));
+        assert_eq!(parse_cache_size("8M"), Some(8 << 20));
+        assert_eq!(parse_cache_size("1G"), Some(1 << 30));
+        assert_eq!(parse_cache_size("12345"), Some(12345));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("K"), None);
+    }
+
+    #[test]
+    fn host_caches_are_sane_and_cached() {
+        let c = host_caches();
+        assert!(c.l1d >= 4 << 10, "{c:?}");
+        assert!(c.l2 >= c.l1d, "{c:?}");
+        assert!(c.llc >= c.l2, "{c:?}");
+        assert_eq!(host_caches(), c, "must be memoized");
     }
 
     #[test]

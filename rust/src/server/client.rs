@@ -81,11 +81,26 @@ impl Client {
 
     /// Decode base64 with the named alphabet.
     pub fn decode(&mut self, data: &[u8], alphabet: &str, mode: Mode) -> Result<Vec<u8>, ClientError> {
+        self.decode_ws(data, alphabet, mode, Whitespace::None)
+    }
+
+    /// Decode with a whitespace policy: the server skips the named bytes
+    /// inline (one-shot MIME bodies — no client-side strip pass). A
+    /// `None` policy emits the legacy 0x02 frame; anything else rides
+    /// the 0x04 tag, so old servers only ever see frames they know.
+    pub fn decode_ws(
+        &mut self,
+        data: &[u8],
+        alphabet: &str,
+        mode: Mode,
+        ws: Whitespace,
+    ) -> Result<Vec<u8>, ClientError> {
         let id = self.id();
         self.expect_data(&Message::Decode {
             id,
             alphabet: alphabet.to_string(),
             mode,
+            ws,
             data: data.to_vec(),
         })
     }

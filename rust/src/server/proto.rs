@@ -7,6 +7,7 @@
 //!   0x01 Encode    { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x02 Decode    { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x03 Validate  { id:u64le, alphabet:str8, mode:u8, data }
+//!   0x04 DecodeWs  { id:u64le, alphabet:str8, mode:u8, ws:u8, data }
 //!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8, ws:u8 }
 //!   0x11 StreamChunk { id:u64le, data }
 //!   0x12 StreamEnd   { id:u64le }
@@ -20,8 +21,18 @@
 //! str8      := len(u8), utf-8 bytes
 //! mode      := 0 strict, 1 forgiving
 //! ws        := 0 none, 1 crlf, 2 all — whitespace the decoder skips
-//!              (trailing byte; absent means none, for old clients)
+//!              (trailing byte on StreamBegin; absent means none, for
+//!              old clients)
 //! ```
+//!
+//! One-shot decodes carry the whitespace knob too: [`Message::Decode`]
+//! has a `ws` field mirroring `StreamBegin`'s byte (same slot, right
+//! after the mode). Because the `Decode` body ends in variable-length
+//! data, the byte cannot be appended to the 0x02 layout without
+//! ambiguity, so a *non-default* policy upgrades the tag to 0x04 — both
+//! directions stay backward compatible: old clients' 0x02 frames parse
+//! as `ws = None`, and new clients talking to old servers emit 0x04
+//! only when asking for behaviour those servers never had.
 
 use std::io::{Read, Write};
 
@@ -34,7 +45,7 @@ pub const MAX_FRAME: usize = 256 << 20;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     Encode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
-    Decode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
+    Decode { id: u64, alphabet: String, mode: Mode, ws: Whitespace, data: Vec<u8> },
     Validate { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
     StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode, ws: Whitespace },
     StreamChunk { id: u64, data: Vec<u8> },
@@ -123,16 +134,24 @@ impl Message {
         let mut out = Vec::new();
         match self {
             Message::Encode { id, alphabet, mode, data }
-            | Message::Decode { id, alphabet, mode, data }
             | Message::Validate { id, alphabet, mode, data } => {
-                out.push(match self {
-                    Message::Encode { .. } => 0x01,
-                    Message::Decode { .. } => 0x02,
-                    _ => 0x03,
-                });
+                out.push(if matches!(self, Message::Encode { .. }) { 0x01 } else { 0x03 });
                 out.extend_from_slice(&id.to_le_bytes());
                 str8(&mut out, alphabet);
                 out.push(mode_byte(*mode));
+                out.extend_from_slice(data);
+            }
+            Message::Decode { id, alphabet, mode, ws, data } => {
+                // ws = None keeps the legacy 0x02 layout (old servers
+                // parse it); a real policy upgrades the tag to 0x04 and
+                // adds the ws byte in StreamBegin's slot, after the mode.
+                out.push(if *ws == Whitespace::None { 0x02 } else { 0x04 });
+                out.extend_from_slice(&id.to_le_bytes());
+                str8(&mut out, alphabet);
+                out.push(mode_byte(*mode));
+                if *ws != Whitespace::None {
+                    out.push(ws_byte(*ws));
+                }
                 out.extend_from_slice(data);
             }
             Message::StreamBegin { id, decode, alphabet, mode, ws } => {
@@ -192,15 +211,23 @@ impl Message {
         }
         let (&tag, rest) = buf.split_first().ok_or(ProtoError::Malformed("empty frame"))?;
         match tag {
-            0x01 | 0x02 | 0x03 => {
+            0x01 | 0x02 | 0x03 | 0x04 => {
                 let (id, rest) = take_u64(rest)?;
                 let (alphabet, rest) = take_str8(rest)?;
-                let (&mb, data) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
+                let (&mb, rest) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
                 let mode = byte_mode(mb)?;
-                let data = data.to_vec();
+                // 0x04 carries the whitespace byte between mode and data
+                // (the slot StreamBegin uses); 0x02 is the legacy layout.
+                let (ws, data) = if tag == 0x04 {
+                    let (&wb, rest) =
+                        rest.split_first().ok_or(ProtoError::Malformed("no whitespace byte"))?;
+                    (byte_ws(wb)?, rest.to_vec())
+                } else {
+                    (Whitespace::None, rest.to_vec())
+                };
                 Ok(match tag {
                     0x01 => Message::Encode { id, alphabet, mode, data },
-                    0x02 => Message::Decode { id, alphabet, mode, data },
+                    0x02 | 0x04 => Message::Decode { id, alphabet, mode, ws, data },
                     _ => Message::Validate { id, alphabet, mode, data },
                 })
             }
@@ -288,7 +315,9 @@ mod tests {
     #[test]
     fn all_message_types_roundtrip() {
         roundtrip(Message::Encode { id: 7, alphabet: "standard".into(), mode: Mode::Strict, data: b"hello".to_vec() });
-        roundtrip(Message::Decode { id: 8, alphabet: "url".into(), mode: Mode::Forgiving, data: b"aGk".to_vec() });
+        roundtrip(Message::Decode { id: 8, alphabet: "url".into(), mode: Mode::Forgiving, ws: Whitespace::None, data: b"aGk".to_vec() });
+        roundtrip(Message::Decode { id: 8, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf, data: b"Zm9v\r\nYg==".to_vec() });
+        roundtrip(Message::Decode { id: 8, alphabet: "standard".into(), mode: Mode::Forgiving, ws: Whitespace::All, data: b"Zm 9v".to_vec() });
         roundtrip(Message::Validate { id: 9, alphabet: "imap".into(), mode: Mode::Strict, data: b"AAAA".to_vec() });
         roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None });
         roundtrip(Message::StreamBegin { id: 2, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf });
@@ -362,6 +391,42 @@ mod tests {
         // An invalid ws byte is rejected.
         b.push(9);
         assert!(Message::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn decode_ws_none_keeps_the_legacy_tag() {
+        // A ws-less decode must serialize byte-identically to the PR-2
+        // era 0x02 frame so old servers keep parsing new clients.
+        let msg = Message::Decode {
+            id: 3,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+            data: b"Zm9v".to_vec(),
+        };
+        let body = msg.to_bytes();
+        assert_eq!(body[0], 0x02);
+        // And the legacy layout (no ws byte anywhere) parses as ws=None.
+        assert_eq!(Message::from_bytes(&body).unwrap(), msg);
+        // The upgraded tag carries the ws byte right after the mode.
+        let msg_ws = Message::Decode {
+            id: 3,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            ws: Whitespace::CrLf,
+            data: b"Zm9v".to_vec(),
+        };
+        let body = msg_ws.to_bytes();
+        assert_eq!(body[0], 0x04);
+        // id(8) + str8(1+8) + mode(1) = 18 bytes after the tag.
+        assert_eq!(body[19], 1, "ws byte sits in StreamBegin's slot");
+        assert_eq!(Message::from_bytes(&body).unwrap(), msg_ws);
+        // Truncation before the ws byte is malformed, and a bad ws byte
+        // is rejected.
+        assert!(Message::from_bytes(&body[..19]).is_err());
+        let mut bad = body.clone();
+        bad[19] = 9;
+        assert!(Message::from_bytes(&bad).is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::proto::{read_frame, resolve_alphabet, write_frame, Message, ProtoError};
+use crate::base64::{Mode, Whitespace};
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Outcome, Request, RequestKind, Router};
 
@@ -119,24 +120,36 @@ fn stream_err(id: u64, e: StreamError) -> Message {
     Message::RespError { id, message: e.to_string() }
 }
 
-fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
-    let kind = match &msg {
-        Message::Encode { .. } => Some(RequestKind::Encode),
-        Message::Decode { .. } => Some(RequestKind::Decode),
-        Message::Validate { .. } => Some(RequestKind::Validate),
-        _ => None,
+/// Resolve the alphabet and run a one-shot request through the router.
+fn one_shot(
+    router: &Router,
+    id: u64,
+    kind: RequestKind,
+    alphabet: String,
+    mode: Mode,
+    ws: Whitespace,
+    data: Vec<u8>,
+) -> Message {
+    let alphabet = match resolve_alphabet(&alphabet) {
+        Ok(a) => a,
+        Err(e) => return Message::RespError { id, message: e.to_string() },
     };
+    let resp = router.process(Request { id, kind, payload: data, alphabet, mode, ws });
+    outcome_to_message(id, resp.outcome)
+}
+
+fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
     match msg {
-        Message::Encode { id, alphabet, mode, data }
-        | Message::Decode { id, alphabet, mode, data }
-        | Message::Validate { id, alphabet, mode, data } => {
-            let kind = kind.expect("kind set for request variants");
-            let alphabet = match resolve_alphabet(&alphabet) {
-                Ok(a) => a,
-                Err(e) => return Message::RespError { id, message: e.to_string() },
-            };
-            let resp = router.process(Request { id, kind, payload: data, alphabet, mode });
-            outcome_to_message(id, resp.outcome)
+        Message::Encode { id, alphabet, mode, data } => {
+            one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data)
+        }
+        Message::Decode { id, alphabet, mode, ws, data } => {
+            // The one-shot whitespace knob (wire tag 0x04) rides through
+            // to the router, which strips and rebases error offsets.
+            one_shot(router, id, RequestKind::Decode, alphabet, mode, ws, data)
+        }
+        Message::Validate { id, alphabet, mode, data } => {
+            one_shot(router, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data)
         }
         Message::StreamBegin { id, decode, alphabet, mode, ws } => {
             let alphabet = match resolve_alphabet(&alphabet) {

@@ -11,9 +11,13 @@ use crate::workload::Rng64;
 /// reproducing parameters on the first failure.
 pub fn forall_bytes(cases: usize, max_len: usize, seed: u64, prop: impl Fn(&[u8]) -> Result<(), String>) {
     let mut rng = Rng64::new(seed);
-    // Boundary lengths first: the paper's block geometry edges.
+    // Boundary lengths first: the paper's block geometry edges (48/64),
+    // the cache-line ±1 edges of the store subsystem's alignment peel,
+    // and the ±1 edges of its staging granule (3072 raw bytes → 4096
+    // staged chars — see base64::stores).
     let boundaries = [
         0usize, 1, 2, 3, 4, 47, 48, 49, 63, 64, 65, 95, 96, 97, 127, 128,
+        3071, 3072, 3073, 4095, 4096, 4097,
     ];
     let run = |rng: &mut Rng64, len: usize, case: usize| {
         let mut data = vec![0u8; len];

@@ -215,6 +215,33 @@ fn server_streaming_session() {
 }
 
 #[test]
+fn server_one_shot_ws_decode() {
+    use b64simd::base64::{Engine, Whitespace};
+    let (handle, _router) = start_server();
+    let mut client = Client::connect(handle.addr).unwrap();
+    let engine = Engine::get();
+    let data = random_bytes(7000, 0x2045);
+    let mut wrapped = vec![0u8; engine.encoded_wrapped_len(data.len(), 76)];
+    engine.encode_wrapped_slice(&data, &mut wrapped, 76);
+    // Raw MIME body straight through a one-shot decode (wire tag 0x04).
+    let dec = client
+        .decode_ws(&wrapped, "standard", Mode::Strict, Whitespace::CrLf)
+        .unwrap();
+    assert_eq!(dec, data);
+    // Without the knob the CRs are invalid — and the ws=None frame is
+    // the legacy 0x02 layout, so this also exercises the old path.
+    assert!(client.decode(&wrapped, "standard", Mode::Strict).is_err());
+    // Error offsets index the original wrapped payload.
+    let mut bad = wrapped.clone();
+    bad[100] = b'!';
+    let err = client
+        .decode_ws(&bad, "standard", Mode::Strict, Whitespace::CrLf)
+        .unwrap_err();
+    assert!(err.to_string().contains("offset 100"), "{err}");
+    handle.shutdown();
+}
+
+#[test]
 fn server_many_connections() {
     let (handle, router) = start_server();
     std::thread::scope(|s| {

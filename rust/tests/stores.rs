@@ -1,0 +1,261 @@
+//! Differential matrix for the store-policy subsystem: every
+//! `(tier × StorePolicy × alphabet × mode)` cell must produce
+//! byte-identical output and identical `DecodeError` offsets versus the
+//! scalar/Temporal oracle, across the alignment-peel edges (cache line
+//! ±1, staging granule ±1, 4 KiB ±1, Auto threshold ±1). Plus the
+//! `encode_par`/`decode_par` property tests against the serial oracle
+//! across thread counts and split-boundary lengths — NT stores make
+//! seam bugs likelier, so the seams are pinned here.
+
+use b64simd::base64::engine::PAR_THRESHOLD;
+use b64simd::base64::scalar::ScalarCodec;
+use b64simd::base64::{
+    decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, StorePolicy,
+    Tier, Whitespace, RAW_BLOCK,
+};
+use b64simd::util::prop::{check_eq, forall_bytes};
+use b64simd::workload::random_bytes;
+
+fn alphabets() -> Vec<Alphabet> {
+    vec![Alphabet::standard(), Alphabet::url(), Alphabet::imap()]
+}
+
+/// The policy axis of the matrix: both fixed policies plus an `Auto`
+/// whose threshold sits inside the tested length range, so the same
+/// sweep exercises both of its resolutions.
+fn policies() -> Vec<StorePolicy> {
+    vec![
+        StorePolicy::Temporal,
+        StorePolicy::NonTemporal,
+        StorePolicy::Auto(4096),
+    ]
+}
+
+#[test]
+fn matrix_every_cell_matches_the_scalar_temporal_oracle() {
+    for tier in Tier::supported() {
+        for alphabet in alphabets() {
+            for mode in [Mode::Strict, Mode::Forgiving] {
+                let engine = Engine::with_tier_mode(alphabet.clone(), mode, tier);
+                let oracle = ScalarCodec::with_mode(alphabet.clone(), mode);
+                for policy in policies() {
+                    // Boundary lengths (cache line ±1, staging granule
+                    // 3072 ±1, 4 KiB ±1) come first in forall_bytes.
+                    forall_bytes(26, 4200, 0xD1FF + tier as u64, |data| {
+                        let want_enc = oracle.encode(data);
+                        let mut enc = vec![0u8; encoded_len(data.len())];
+                        let n = engine.encode_slice_policy(data, &mut enc, policy);
+                        check_eq(&enc[..n], &want_enc[..], "encode vs oracle")?;
+                        let mut dec = vec![0u8; engine.decoded_len_of(&enc[..n])];
+                        let m = engine
+                            .decode_slice_policy(&enc[..n], &mut dec, policy)
+                            .map_err(|e| format!("decode: {e}"))?;
+                        check_eq(&dec[..m], data, "decode roundtrip")
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_decode_error_offsets_identical_to_oracle() {
+    // Corruption at the staging seams and peel edges: every cell must
+    // report exactly the oracle's error (offset and byte).
+    let seam_positions = [0usize, 1, 63, 64, 65, 4095, 4096, 4097, 5000];
+    for tier in Tier::supported() {
+        for alphabet in alphabets() {
+            let engine = Engine::with_tier(alphabet.clone(), tier);
+            let oracle = ScalarCodec::new(alphabet.clone());
+            let data = random_bytes(3800, 0xE0 + tier as u64); // > one staging round
+            let clean = oracle.encode(&data);
+            for policy in policies() {
+                for &pos in &seam_positions {
+                    let mut enc = clean.clone();
+                    enc[pos] = b'!';
+                    let want = oracle.decode(&enc).unwrap_err();
+                    let mut out = vec![0u8; decoded_len_upper(enc.len())];
+                    let got = engine.decode_slice_policy(&enc, &mut out, policy).unwrap_err();
+                    assert_eq!(
+                        got, want,
+                        "{tier:?} {} {policy:?} pos={pos}",
+                        alphabet.name()
+                    );
+                }
+                // Length and padding defects too.
+                let truncated = &clean[..clean.len() - 1];
+                let mut out = vec![0u8; decoded_len_upper(clean.len())];
+                assert_eq!(
+                    engine.decode_slice_policy(truncated, &mut out, policy).unwrap_err(),
+                    oracle.decode(truncated).unwrap_err(),
+                    "{tier:?} {} {policy:?} truncated",
+                    alphabet.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_wrapped_encode_and_fused_ws_decode_under_every_policy() {
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        let oracle = ScalarCodec::new(Alphabet::standard());
+        for policy in policies() {
+            for len in [0usize, 1, 57, 58, 3071, 3072, 4097, 10_000] {
+                let data = random_bytes(len, 0xACE + len as u64);
+                // Wrapped encode: policy variants must agree with the
+                // temporal engine path (itself pinned to the oracle by
+                // rust/tests/whitespace.rs).
+                let mut want = vec![0u8; engine.encoded_wrapped_len(len, 76)];
+                engine.encode_wrapped_slice_policy(&data, &mut want, 76, StorePolicy::Temporal);
+                let mut got = vec![0u8; want.len()];
+                let n = engine.encode_wrapped_slice_policy(&data, &mut got, 76, policy);
+                assert_eq!(n, want.len(), "{tier:?} {policy:?} len={len}");
+                assert_eq!(got, want, "{tier:?} {policy:?} len={len}");
+                // Fused whitespace decode of the wrapped text.
+                let mut dec = vec![0u8; decoded_len_upper(got.len())];
+                let m = engine
+                    .decode_slice_ws_policy(&got, &mut dec, Whitespace::CrLf, policy)
+                    .unwrap();
+                assert_eq!(&dec[..m], &data[..], "{tier:?} {policy:?} len={len}");
+            }
+        }
+        let _ = oracle;
+    }
+}
+
+#[test]
+fn auto_threshold_edge_is_exact_and_output_invariant() {
+    // Build an Auto policy whose threshold lands exactly on a payload's
+    // working set (input + output), then check the ±1 lengths around it:
+    // resolution flips, bytes never change.
+    let raw = 3000usize;
+    let threshold = raw + encoded_len(raw); // == working set at len 3000
+    let policy = StorePolicy::Auto(threshold);
+    assert!(!policy.use_nontemporal(threshold));
+    assert!(policy.use_nontemporal(threshold + 1));
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        for len in [raw - 1, raw, raw + 1] {
+            let data = random_bytes(len, len as u64);
+            let mut want = vec![0u8; encoded_len(len)];
+            engine.encode_slice_policy(&data, &mut want, StorePolicy::Temporal);
+            let mut got = vec![0u8; encoded_len(len)];
+            engine.encode_slice_policy(&data, &mut got, policy);
+            assert_eq!(got, want, "{tier:?} len={len}");
+            let mut dec = vec![0u8; engine.decoded_len_of(&got)];
+            let m = engine.decode_slice_policy(&got, &mut dec, policy).unwrap();
+            assert_eq!(&dec[..m], &data[..], "{tier:?} len={len}");
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_pipeline_accepts_nontemporal_policy() {
+    // The `B64SIMD_TIER=scalar B64SIMD_STORES=nontemporal` CI cell in
+    // API form: the NT staging loop must run (and stay correct) on
+    // tiers whose line copy is a plain store.
+    for tier in [Tier::Scalar, Tier::Swar] {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        let oracle = ScalarCodec::new(Alphabet::standard());
+        for len in [0usize, 65, 3073, 9000] {
+            let data = random_bytes(len, 77 + len as u64);
+            let mut enc = vec![0u8; encoded_len(len)];
+            engine.encode_slice_policy(&data, &mut enc, StorePolicy::NonTemporal);
+            assert_eq!(enc, oracle.encode(&data), "{tier:?} len={len}");
+            let mut dec = vec![0u8; engine.decoded_len_of(&enc)];
+            let m = engine
+                .decode_slice_policy(&enc, &mut dec, StorePolicy::NonTemporal)
+                .unwrap();
+            assert_eq!(&dec[..m], &data[..], "{tier:?} len={len}");
+        }
+    }
+}
+
+/// Satellite: the `_par` chunk seams against the serial oracle, across
+/// thread counts and split-boundary lengths, under both store policies
+/// (NT spans fence per worker — a missed seam byte or unfenced store
+/// shows up as a mismatch here).
+#[test]
+fn par_paths_match_serial_across_thread_counts_and_seam_lengths() {
+    // Lengths chosen so the per-thread span split lands on/off block
+    // boundaries: exact blocks, one spare byte, and a ragged tail.
+    let lengths = [
+        PAR_THRESHOLD + 1,
+        PAR_THRESHOLD + RAW_BLOCK * 7,
+        PAR_THRESHOLD + RAW_BLOCK * 7 + 5,
+    ];
+    for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal] {
+        let mut engine = Engine::new(Alphabet::standard());
+        engine.set_policy(policy);
+        for &len in &lengths {
+            let data = random_bytes(len, len as u64 ^ 0xBEEF);
+            let mut serial = vec![0u8; encoded_len(len)];
+            engine.encode_slice_policy(&data, &mut serial, policy);
+            let mut dec_serial = vec![0u8; engine.decoded_len_of(&serial)];
+            let dn = engine
+                .decode_slice_policy(&serial, &mut dec_serial, policy)
+                .unwrap();
+            assert_eq!(&dec_serial[..dn], &data[..], "serial {policy:?} len={len}");
+            for threads in [1usize, 2, 3, 7] {
+                let mut par = vec![0u8; encoded_len(len)];
+                let n = engine.encode_par(&data, &mut par, threads);
+                assert_eq!(n, serial.len(), "{policy:?} len={len} threads={threads}");
+                assert_eq!(par, serial, "{policy:?} len={len} threads={threads}");
+                let mut dec = vec![0u8; engine.decoded_len_of(&par)];
+                let m = engine.decode_par(&par, &mut dec, threads).unwrap();
+                assert_eq!(
+                    &dec[..m],
+                    &data[..],
+                    "{policy:?} len={len} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn par_decode_error_offsets_stable_across_policies_and_threads() {
+    let len = PAR_THRESHOLD + RAW_BLOCK * 3 + 2;
+    let data = random_bytes(len, 0x0FF5E7);
+    for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal] {
+        let mut engine = Engine::new(Alphabet::standard());
+        engine.set_policy(policy);
+        let enc = engine.encode(&data);
+        // One corrupt byte deep in a late span: every thread count and
+        // policy must name exactly that byte.
+        for pos in [enc.len() / 2, enc.len() - 20] {
+            let mut bad = enc.clone();
+            bad[pos] = 0x03;
+            for threads in [2usize, 3, 7] {
+                let mut out = vec![0u8; decoded_len_upper(bad.len())];
+                match engine.decode_par(&bad, &mut out, threads) {
+                    Err(DecodeError::InvalidByte { offset, byte: 0x03 }) => {
+                        assert_eq!(offset, pos, "{policy:?} threads={threads}")
+                    }
+                    other => panic!("{policy:?} threads={threads}: {other:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_decoder_bulk_path_honours_the_engine_policy() {
+    use b64simd::base64::streaming::StreamingDecoder;
+    // A single chunk big enough to trip a small Auto threshold: the
+    // streamed output must match the one-shot decode bytes exactly.
+    let data = random_bytes(200_000, 0x5EED);
+    let engine = Engine::new(Alphabet::standard());
+    let enc = engine.encode(&data);
+    for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal, StorePolicy::Auto(4096)] {
+        let mut e = Engine::new(Alphabet::standard());
+        e.set_policy(policy);
+        let mut dec = StreamingDecoder::from_engine(e, Whitespace::None);
+        let mut out = Vec::new();
+        dec.update(&enc, &mut out).unwrap();
+        dec.finish(&mut out).unwrap();
+        assert_eq!(out, data, "{policy:?}");
+    }
+}

@@ -8,7 +8,7 @@ use b64simd::base64::mime::MimeCodec;
 use b64simd::base64::scalar::ScalarCodec;
 use b64simd::base64::streaming::StreamingDecoder;
 use b64simd::base64::{
-    decoded_len_upper, Alphabet, Codec, DecodeError, Engine, Mode, Tier, Whitespace,
+    decoded_len_upper, Alphabet, Codec, DecodeError, Engine, Mode, StorePolicy, Tier, Whitespace,
 };
 use b64simd::workload::random_bytes;
 
@@ -131,6 +131,50 @@ fn fused_decode_error_offsets_match_original_positions() {
                 DecodeError::InvalidByte { offset: pos, byte: b'!' },
                 "{tier:?} pos={pos}"
             );
+            wrapped[pos] = orig;
+        }
+    }
+}
+
+#[test]
+fn corruption_sweep_reports_same_offset_under_both_store_policies() {
+    // Single-byte corruption at *every* offset of a wrapped 3-line
+    // input: the Temporal and NonTemporal fused decodes must fail with
+    // the identical error — same original-input offset, same byte —
+    // whether the corruption lands on a base64 char, a CR/LF, or the
+    // padding.
+    let oracle = ScalarCodec::new(Alphabet::standard());
+    for tier in Tier::supported() {
+        let e = Engine::with_tier(Alphabet::standard(), tier);
+        // 120 raw bytes -> 160 chars -> 3 lines at 60 chars/line.
+        let data = random_bytes(120, 0xC0DE);
+        let mut wrapped = wrap(&oracle.encode(&data), 60);
+        assert_eq!(wrapped.iter().filter(|&&c| c == b'\n').count(), 2, "3 lines");
+        for pos in 0..wrapped.len() {
+            let orig = wrapped[pos];
+            wrapped[pos] = b'!';
+            let mut out = vec![0u8; decoded_len_upper(wrapped.len())];
+            let temporal = e
+                .decode_slice_ws_policy(&wrapped, &mut out, Whitespace::CrLf, StorePolicy::Temporal)
+                .unwrap_err();
+            let nt = e
+                .decode_slice_ws_policy(
+                    &wrapped,
+                    &mut out,
+                    Whitespace::CrLf,
+                    StorePolicy::NonTemporal,
+                )
+                .unwrap_err();
+            assert_eq!(nt, temporal, "{tier:?} pos={pos}");
+            // Where the defect is a plain invalid byte, both must name
+            // the original-input offset exactly.
+            if orig != b'=' && !Whitespace::CrLf.skips(orig) {
+                assert_eq!(
+                    temporal,
+                    DecodeError::InvalidByte { offset: pos, byte: b'!' },
+                    "{tier:?} pos={pos}"
+                );
+            }
             wrapped[pos] = orig;
         }
     }
