@@ -1,0 +1,163 @@
+//! Server transport bench: loadgen-driven connection churn and request
+//! throughput, epoll readiness loop vs thread-per-connection.
+//!
+//! Two numbers per transport:
+//!
+//! * **conns/sec** — connect → ping → close churn, the accept path's
+//!   cost (thread spawn per socket vs slab slot + epoll registration);
+//! * **GB/s** — verified encode traffic over a held set of persistent
+//!   connections (payload + response bytes over the wire), the
+//!   many-streams-one-fast-kernel regime the transport exists to feed.
+//!
+//! `--test` (CI smoke): small counts and sub-second windows, checking
+//! that every cell runs and every response matches the oracle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
+use b64simd::coordinator::backend::native_factory;
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
+use b64simd::workload::random_bytes;
+
+fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Router>) {
+    let router = Arc::new(Router::new(native_factory(), RouterConfig::default()));
+    let handle = serve(
+        router.clone(),
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            max_connections,
+            transport,
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    (handle, router)
+}
+
+/// connect → ping → close churn rate over `window`. Busy refusals are
+/// skipped, not fatal: on the threaded transport a closed connection's
+/// cap slot is released by its detached thread, which can lag the close
+/// under a tight churn loop and transiently fill the admission cap.
+fn churn(addr: std::net::SocketAddr, threads: usize, window: Duration) -> f64 {
+    let opened = AtomicU64::new(0);
+    let deadline = Instant::now() + window;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let opened = &opened;
+            s.spawn(move || {
+                while Instant::now() < deadline {
+                    let mut c = Client::connect(addr).expect("connect");
+                    match c.ping() {
+                        Ok(()) => {
+                            opened.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(b64simd::server::client::ClientError::Busy(_)) => {}
+                        Err(e) => panic!("churn ping: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    opened.load(Ordering::Relaxed) as f64 / window.as_secs_f64()
+}
+
+/// Connect and confirm admission, retrying transient busy refusals
+/// (cap slots from a just-finished churn phase release asynchronously).
+fn connect_admitted(addr: std::net::SocketAddr) -> Client {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = Client::connect(addr).expect("connect");
+        match c.ping() {
+            Ok(()) => return c,
+            Err(b64simd::server::client::ClientError::Busy(_)) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("admitted connect: {e}"),
+        }
+    }
+}
+
+/// Verified encode throughput over `conns` held connections.
+fn throughput(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    threads: usize,
+    payload_len: usize,
+    window: Duration,
+) -> (f64, f64) {
+    let payload = random_bytes(payload_len, payload_len as u64);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+    let requests = AtomicU64::new(0);
+    let deadline = Instant::now() + window;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let share = conns / threads + usize::from(t < conns % threads);
+            let (payload, oracle, requests) = (&payload, &oracle, &requests);
+            s.spawn(move || {
+                let mut clients: Vec<Client> =
+                    (0..share).map(|_| connect_admitted(addr)).collect();
+                let mut i = 0usize;
+                while Instant::now() < deadline && !clients.is_empty() {
+                    let n = clients.len();
+                    let enc = clients[i % n].encode(payload, "standard").expect("encode");
+                    assert_eq!(&enc, oracle, "response mismatch under load");
+                    requests.fetch_add(1, Ordering::Relaxed);
+                    i += 1;
+                }
+            });
+        }
+    });
+    let reqs = requests.load(Ordering::Relaxed) as f64;
+    let secs = window.as_secs_f64();
+    let wire = reqs * (payload_len + oracle.len()) as f64;
+    (reqs / secs, wire / secs / 1e9)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let (conns, threads, window) = if smoke {
+        (32usize, 4usize, Duration::from_millis(300))
+    } else {
+        (256, 8, Duration::from_secs(2))
+    };
+    let payloads: &[usize] =
+        if smoke { &[1 << 10, 64 << 10] } else { &[1 << 10, 64 << 10, 1 << 20] };
+
+    #[cfg(target_os = "linux")]
+    {
+        let _ = b64simd::net::sys::raise_nofile_limit(conns as u64 * 2 + 512);
+    }
+
+    println!(
+        "server throughput: {conns} held conns, {threads} client threads, {}s windows",
+        window.as_secs_f64()
+    );
+    println!(
+        "{:<10}{:>12}{:>12}{:>12}{:>12}",
+        "transport", "payload", "conns/sec", "req/s", "GB/s"
+    );
+    for transport in [Transport::Epoll, Transport::Threaded] {
+        let (handle, router) = start(transport, conns * 2 + 64);
+        let rate = churn(handle.addr, threads, window);
+        println!("{:<10}{:>12}{:>12.0}{:>12}{:>12}", transport.name(), "-", rate, "-", "-");
+        for &p in payloads {
+            let (rps, gbps) = throughput(handle.addr, conns, threads, p, window);
+            println!(
+                "{:<10}{:>12}{:>12}{:>12.0}{:>12.3}",
+                transport.name(),
+                p,
+                "-",
+                rps,
+                gbps
+            );
+        }
+        router.flush();
+        handle.shutdown();
+    }
+    if smoke {
+        println!("\nsmoke mode: all cells ran, every response verified (timings indicative only)");
+    }
+}

@@ -1,0 +1,207 @@
+//! loadgen — prove the connection cap is gone.
+//!
+//! Opens thousands of concurrent connections (4× the old 256-thread
+//! cap by default) against the codec service and drives interleaved
+//! encode traffic over every one of them, verifying each response
+//! against an in-process oracle. Exits non-zero if any connection was
+//! refused, any request went unanswered, or any response mismatched.
+//!
+//! ```text
+//! cargo run --release --example loadgen -- \
+//!     --connections 1000 --seconds 2 [--payload 1024] [--threads 8] \
+//!     [--transport epoll|threaded] [--addr HOST:PORT]
+//! ```
+//!
+//! Without `--addr`, an in-process server is started on the chosen
+//! transport. The client side multiplexes `--connections` sockets over
+//! `--threads` OS threads — the point is that the *server* holds them
+//! all concurrently without a thread apiece.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
+use b64simd::coordinator::backend::native_factory;
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::server::{serve, Client, ServerConfig, Transport};
+use b64simd::workload::random_bytes;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let connections: usize =
+        flag(&args, "--connections").map(|v| v.parse().expect("--connections")).unwrap_or(1000);
+    let seconds: f64 =
+        flag(&args, "--seconds").map(|v| v.parse().expect("--seconds")).unwrap_or(2.0);
+    let payload_len: usize =
+        flag(&args, "--payload").map(|v| v.parse().expect("--payload")).unwrap_or(1024);
+    let threads: usize = flag(&args, "--threads")
+        .map(|v| v.parse().expect("--threads"))
+        .unwrap_or(8)
+        .clamp(1, connections.max(1));
+    let transport = match flag(&args, "--transport") {
+        Some(v) => Transport::parse(&v).expect("--transport epoll|threaded"),
+        None => Transport::from_env(),
+    };
+
+    // Client + (in-process) server sockets both live in this process;
+    // the common 1024-fd soft limit dies long before 1000 connections.
+    #[cfg(target_os = "linux")]
+    {
+        let want = (connections as u64) * 2 + 256;
+        match b64simd::net::sys::raise_nofile_limit(want) {
+            Ok(limit) if limit < want => {
+                eprintln!("loadgen: fd limit {limit} < {want}; connects may fail")
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("loadgen: could not raise fd limit: {e}"),
+        }
+    }
+
+    let mut _server = None;
+    let (addr, router) = match flag(&args, "--addr") {
+        Some(a) => (a.parse().expect("--addr"), None),
+        None => {
+            let router = Arc::new(Router::new(native_factory(), RouterConfig::default()));
+            let handle = serve(
+                router.clone(),
+                ServerConfig {
+                    addr: "127.0.0.1:0".parse().unwrap(),
+                    max_connections: connections + 16,
+                    transport,
+                    ..Default::default()
+                },
+            )
+            .expect("bind in-process server");
+            let addr = handle.addr;
+            _server = Some(handle);
+            (addr, Some(router))
+        }
+    };
+
+    let payload = random_bytes(payload_len, 0x10AD);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+
+    println!(
+        "loadgen: {connections} connections x {threads} client threads, {payload_len}B payloads, transport={}, target={addr}",
+        transport.name()
+    );
+
+    // Phase 1: open every connection and hold it.
+    let refused = Arc::new(AtomicU64::new(0));
+    let io_failed = Arc::new(AtomicU64::new(0));
+    let open_start = Instant::now();
+    let mut pools: Vec<Vec<Client>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let refused = refused.clone();
+            let io_failed = io_failed.clone();
+            let share = connections / threads + usize::from(t < connections % threads);
+            handles.push(s.spawn(move || {
+                let mut clients = Vec::with_capacity(share);
+                for _ in 0..share {
+                    match Client::connect(addr) {
+                        Ok(mut c) => match c.ping() {
+                            Ok(()) => clients.push(c),
+                            Err(b64simd::server::client::ClientError::Busy(_)) => {
+                                refused.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                io_failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => {
+                            io_failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                clients
+            }));
+        }
+        for h in handles {
+            pools.push(h.join().unwrap());
+        }
+    });
+    let opened: usize = pools.iter().map(|p| p.len()).sum();
+    let open_secs = open_start.elapsed().as_secs_f64();
+
+    // Phase 2: interleave verified encode requests across *every*
+    // connection for the test window (each thread round-robins its
+    // share, so every socket serves at least one full pass).
+    let requests = Arc::new(AtomicU64::new(0));
+    let mismatches = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    std::thread::scope(|s| {
+        for pool in pools.iter_mut() {
+            let requests = requests.clone();
+            let mismatches = mismatches.clone();
+            let errors = errors.clone();
+            let payload = &payload;
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut i = 0usize;
+                let mut first_pass_done = pool.is_empty();
+                while !first_pass_done || Instant::now() < deadline {
+                    let n = pool.len();
+                    if n == 0 {
+                        break;
+                    }
+                    match pool[i % n].encode(payload, "standard") {
+                        Ok(enc) => {
+                            requests.fetch_add(1, Ordering::Relaxed);
+                            if &enc != oracle {
+                                mismatches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    i += 1;
+                    if i >= n {
+                        first_pass_done = true;
+                    }
+                }
+            });
+        }
+    });
+
+    let reqs = requests.load(Ordering::Relaxed);
+    let errs = errors.load(Ordering::Relaxed);
+    let miss = mismatches.load(Ordering::Relaxed);
+    let wire_bytes = reqs * (payload_len as u64 + oracle.len() as u64);
+    let opened_of_asked = format!("{opened}/{connections}");
+    println!("{:<22}{:>14}", "connections opened", opened_of_asked);
+    println!("{:<22}{:>14}", "refused (busy)", refused.load(Ordering::Relaxed));
+    println!("{:<22}{:>14}", "connect failures", io_failed.load(Ordering::Relaxed));
+    println!("{:<22}{:>14.0}", "conns/sec (open)", opened as f64 / open_secs.max(1e-9));
+    println!("{:<22}{:>14}", "requests answered", reqs);
+    println!("{:<22}{:>14}", "request errors", errs);
+    println!("{:<22}{:>14}", "response mismatches", miss);
+    println!("{:<22}{:>14.0}", "requests/sec", reqs as f64 / seconds.max(1e-9));
+    println!(
+        "{:<22}{:>14.3}",
+        "payload GB/s (in+out)",
+        wire_bytes as f64 / seconds.max(1e-9) / 1e9
+    );
+    if let Some(router) = router {
+        router.flush();
+        println!("server: {}", router.metrics().report());
+    }
+
+    let complete = opened == connections && errs == 0 && miss == 0 && reqs >= opened as u64;
+    if !complete {
+        eprintln!("loadgen: FAILED (dropped/unanswered/mismatched traffic above)");
+        std::process::exit(1);
+    }
+    println!("loadgen: OK — all {connections} concurrent connections served verified traffic");
+}

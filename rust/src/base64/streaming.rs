@@ -10,7 +10,12 @@
 //! [`crate::server`]) run at engine speed regardless of how the input is
 //! framed. The decoder also applies a [`Whitespace`] policy, skipping
 //! CR/LF (or all whitespace) without a strip pass, and reports error
-//! offsets in *raw stream* coordinates (whitespace included).
+//! offsets in *raw stream* coordinates (whitespace included). The
+//! encoder can CRLF-wrap its output directly
+//! ([`StreamingEncoder::new_wrapped`]) via a line-position carry, so
+//! chunked MIME encodes no longer need a wrapping pass at the framing
+//! layer — the chunked output is byte-identical to the one-shot
+//! [`Engine::encode_wrapped_slice`].
 //!
 //! Validation follows the paper's deferred-error model: bulk bytes are
 //! checked when their block is decoded (which may be a later `update`
@@ -29,9 +34,31 @@
 use super::engine::Engine;
 use super::swar::find_ws;
 use super::validate::{decode_tail, DecodeError, Mode, Whitespace};
-use super::{Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
+use super::{encoded_len, Alphabet, Codec, B64_BLOCK, RAW_BLOCK};
+
+/// Wrapped-encode staging: raw bytes encoded per batch (a multiple of
+/// [`RAW_BLOCK`], so every batch but the last is padding-free) and the
+/// chars they produce.
+const ENC_STAGE_RAW: usize = 3072;
+const ENC_STAGE_B64: usize = 4096;
+
+/// Line-position carry for CRLF-wrapped streaming encode: where on the
+/// current output line the stream stands, preserved across chunks.
+struct Wrap {
+    line_len: usize,
+    line_pos: usize,
+}
 
 /// Incremental encoder: feed arbitrary chunks, finish once.
+///
+/// With [`StreamingEncoder::new_wrapped`] the output is CRLF-wrapped at
+/// a fixed line length (RFC 2045 style) as it is emitted — the
+/// line-position carry spans chunk boundaries, so chunked MIME encodes
+/// produce ready-to-frame text byte-identical to a one-shot
+/// [`Engine::encode_wrapped_slice`] over the concatenated input,
+/// regardless of how the input was chunked. The final line carries no
+/// trailing CRLF (separators are emitted lazily, before the chars that
+/// start the next line).
 pub struct StreamingEncoder {
     engine: Engine,
     /// 0..48 raw bytes carried until a full block is available.
@@ -39,6 +66,8 @@ pub struct StreamingEncoder {
     carry_len: usize,
     /// Total raw bytes consumed (for observability).
     consumed: u64,
+    /// CRLF wrapping state; `None` emits flat base64.
+    wrap: Option<Wrap>,
 }
 
 impl StreamingEncoder {
@@ -48,7 +77,26 @@ impl StreamingEncoder {
 
     /// Build on an explicitly configured engine (tier pinning, mode).
     pub fn from_engine(engine: Engine) -> Self {
-        Self { engine, carry: [0; RAW_BLOCK], carry_len: 0, consumed: 0 }
+        Self { engine, carry: [0; RAW_BLOCK], carry_len: 0, consumed: 0, wrap: None }
+    }
+
+    /// Encoder whose output is CRLF-wrapped at `line_len` chars per
+    /// line. `line_len` must be a positive multiple of 4 (the same
+    /// domain [`Engine::encode_wrapped_slice`] accepts, so the two are
+    /// parity-comparable).
+    pub fn new_wrapped(alphabet: Alphabet, line_len: usize) -> Self {
+        Self::from_engine_wrapped(Engine::new(alphabet), line_len)
+    }
+
+    /// [`Self::new_wrapped`] on an explicitly configured engine.
+    pub fn from_engine_wrapped(engine: Engine, line_len: usize) -> Self {
+        assert!(
+            line_len >= 4 && line_len % 4 == 0,
+            "line length must be a positive multiple of 4"
+        );
+        let mut s = Self::from_engine(engine);
+        s.wrap = Some(Wrap { line_len, line_pos: 0 });
+        s
     }
 
     /// The engine this stream dispatches to.
@@ -74,11 +122,23 @@ impl StreamingEncoder {
             let block = self.carry;
             self.carry_len = 0;
             // A whole block encodes without padding.
-            self.engine.encode_into(&block, out);
+            self.encode_emit(&block, out);
         }
         // Bulk: whole blocks straight from the chunk.
         let whole = chunk.len() / RAW_BLOCK * RAW_BLOCK;
-        self.engine.encode_into(&chunk[..whole], out);
+        if self.wrap.is_none() {
+            self.engine.encode_into(&chunk[..whole], out);
+        } else {
+            // Wrapped: stage a batch of chars, then distribute across
+            // lines. Batches are RAW_BLOCK multiples → padding-free, so
+            // staged outputs concatenate exactly.
+            let mut r = 0;
+            while r < whole {
+                let take = ENC_STAGE_RAW.min(whole - r);
+                self.encode_emit(&chunk[r..r + take], out);
+                r += take;
+            }
+        }
         // Stash the sub-block remainder.
         let rest = &chunk[whole..];
         self.carry[..rest.len()].copy_from_slice(rest);
@@ -91,9 +151,41 @@ impl StreamingEncoder {
         if self.carry_len > 0 {
             let n = self.carry_len;
             self.carry_len = 0;
-            self.engine.encode_into(&self.carry[..n], out);
+            let block = self.carry;
+            self.encode_emit(&block[..n], out);
         }
         self.consumed
+    }
+
+    /// Encode one bounded batch (≤ [`ENC_STAGE_RAW`] bytes) and append
+    /// it flat or line-wrapped.
+    fn encode_emit(&mut self, input: &[u8], out: &mut Vec<u8>) {
+        debug_assert!(input.len() <= ENC_STAGE_RAW);
+        if self.wrap.is_none() {
+            self.engine.encode_into(input, out);
+            return;
+        }
+        let mut stage = [0u8; ENC_STAGE_B64];
+        let n = self.engine.encode_slice(input, &mut stage[..encoded_len(input.len())]);
+        self.emit_wrapped(&stage[..n], out);
+    }
+
+    /// Append `chars` to `out`, inserting a CRLF before the chars that
+    /// start each new line (lazy separators: the stream never ends with
+    /// a dangling CRLF).
+    fn emit_wrapped(&mut self, chars: &[u8], out: &mut Vec<u8>) {
+        let w = self.wrap.as_mut().expect("wrapped emission without wrap state");
+        let mut i = 0;
+        while i < chars.len() {
+            if w.line_pos == w.line_len {
+                out.extend_from_slice(b"\r\n");
+                w.line_pos = 0;
+            }
+            let take = (w.line_len - w.line_pos).min(chars.len() - i);
+            out.extend_from_slice(&chars[i..i + take]);
+            w.line_pos += take;
+            i += take;
+        }
     }
 }
 
@@ -341,6 +433,63 @@ mod tests {
             assert_eq!(consumed, 1000);
             assert_eq!(out, expect, "chunk_size={chunk_size}");
         }
+    }
+
+    #[test]
+    fn wrapped_encoder_parity_with_one_shot_across_chunkings() {
+        // The line-position carry must make chunked wrapped output
+        // byte-identical to Engine::encode_wrapped_slice, for every
+        // chunking and for line lengths crossing the 48-byte block and
+        // 3072-byte stage boundaries.
+        let e = Engine::new(Alphabet::standard());
+        for len in [0usize, 1, 3, 57, 76, 100, 997, 3072, 3073, 10_000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 131 % 256) as u8).collect();
+            for line_len in [4usize, 60, 76] {
+                let mut expect = vec![0u8; e.encoded_wrapped_len(len, line_len)];
+                let n = e.encode_wrapped_slice(&data, &mut expect, line_len);
+                expect.truncate(n);
+                for chunk_size in [1usize, 7, 47, 48, 49, 76, 333, 4096] {
+                    let mut enc = StreamingEncoder::new_wrapped(Alphabet::standard(), line_len);
+                    let mut out = vec![];
+                    for chunk in data.chunks(chunk_size.max(1)) {
+                        enc.update(chunk, &mut out);
+                    }
+                    let consumed = enc.finish(&mut out);
+                    assert_eq!(consumed, len as u64);
+                    assert_eq!(
+                        out, expect,
+                        "len={len} line_len={line_len} chunk={chunk_size}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrapped_encoder_roundtrips_through_ws_decoder() {
+        // Wrapped streaming output feeds straight back through the
+        // whitespace-tolerant streaming decoder.
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        let mut enc = StreamingEncoder::new_wrapped(Alphabet::standard(), 76);
+        let mut wrapped = vec![];
+        for chunk in data.chunks(233) {
+            enc.update(chunk, &mut wrapped);
+        }
+        enc.finish(&mut wrapped);
+        let mut dec =
+            StreamingDecoder::with_policy(Alphabet::standard(), Mode::Strict, Whitespace::CrLf);
+        let mut back = vec![];
+        for chunk in wrapped.chunks(101) {
+            dec.update(chunk, &mut back).unwrap();
+        }
+        dec.finish(&mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn wrapped_encoder_rejects_bad_line_len() {
+        let _ = StreamingEncoder::new_wrapped(Alphabet::standard(), 70);
     }
 
     #[test]

@@ -83,6 +83,51 @@ impl Drop for Permit {
     }
 }
 
+/// Connection-count admission, shared by both transports. Same shape as
+/// [`Gate`] but for long-lived sockets rather than in-flight requests:
+/// `try_acquire` at accept, the RAII [`ConnPermit`] releases at close —
+/// over-cap connections get a typed busy frame instead of the silent
+/// drop the old accept loop performed.
+pub struct ConnLimiter {
+    max: u64,
+    open: AtomicU64,
+}
+
+/// RAII connection slot: releases on drop.
+pub struct ConnPermit {
+    limiter: Arc<ConnLimiter>,
+}
+
+impl ConnLimiter {
+    pub fn new(max: usize) -> Arc<Self> {
+        Arc::new(Self { max: max as u64, open: AtomicU64::new(0) })
+    }
+
+    /// Claim a connection slot, or `None` at the cap.
+    pub fn try_acquire(self: &Arc<Self>) -> Option<ConnPermit> {
+        let n = self.open.fetch_add(1, Ordering::AcqRel) + 1;
+        if n > self.max {
+            self.open.fetch_sub(1, Ordering::AcqRel);
+            return None;
+        }
+        Some(ConnPermit { limiter: self.clone() })
+    }
+
+    pub fn open(&self) -> u64 {
+        self.open.load(Ordering::Acquire)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.limiter.open.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +158,18 @@ mod tests {
             assert_eq!(g.in_flight(), (1, 500));
         }
         assert_eq!(g.in_flight(), (0, 0));
+    }
+
+    #[test]
+    fn conn_limiter_caps_and_releases() {
+        let l = ConnLimiter::new(2);
+        let p1 = l.try_acquire().unwrap();
+        let _p2 = l.try_acquire().unwrap();
+        assert!(l.try_acquire().is_none());
+        assert_eq!(l.open(), 2);
+        drop(p1);
+        assert_eq!(l.open(), 1);
+        assert!(l.try_acquire().is_some());
     }
 
     #[test]

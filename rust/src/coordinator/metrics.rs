@@ -72,6 +72,21 @@ pub struct Metrics {
     /// or runtime-less configuration).
     pub inline_requests: AtomicU64,
     pub latency: LatencyHistogram,
+    // -- transport counters (filled by `crate::server` / `crate::net`) --
+    /// Connections admitted (both transports).
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at the admission cap (busy frame written).
+    pub conns_refused: AtomicU64,
+    /// Currently open connections (gauge: inc on accept, dec on close).
+    pub conns_open: AtomicU64,
+    /// Request frames parsed off sockets.
+    pub frames_in: AtomicU64,
+    /// Response frames queued to sockets.
+    pub frames_out: AtomicU64,
+    /// Raw bytes read from sockets (wire frames, prefix included).
+    pub net_bytes_in: AtomicU64,
+    /// Raw bytes written to sockets.
+    pub net_bytes_out: AtomicU64,
 }
 
 impl Metrics {
@@ -89,10 +104,15 @@ impl Metrics {
         real as f64 / (real + padded) as f64
     }
 
+    /// Gauge decrement (connection close).
+    pub fn dec(counter: &AtomicU64, v: u64) {
+        counter.fetch_sub(v, Ordering::Relaxed);
+    }
+
     /// One-line human-readable snapshot.
     pub fn report(&self) -> String {
         format!(
-            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} p50={}us p99={}us mean={:.0}us",
+            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B p50={}us p99={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -104,6 +124,13 @@ impl Metrics {
             self.padded_rows.load(Ordering::Relaxed),
             self.batch_efficiency() * 100.0,
             self.inline_requests.load(Ordering::Relaxed),
+            self.conns_accepted.load(Ordering::Relaxed),
+            self.conns_refused.load(Ordering::Relaxed),
+            self.conns_open.load(Ordering::Relaxed),
+            self.frames_in.load(Ordering::Relaxed),
+            self.frames_out.load(Ordering::Relaxed),
+            self.net_bytes_in.load(Ordering::Relaxed),
+            self.net_bytes_out.load(Ordering::Relaxed),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.latency.mean_us(),
@@ -148,5 +175,9 @@ mod tests {
         let m = Metrics::default();
         Metrics::inc(&m.requests, 3);
         assert!(m.report().contains("req=3"));
+        Metrics::inc(&m.conns_accepted, 2);
+        Metrics::inc(&m.conns_open, 2);
+        Metrics::dec(&m.conns_open, 1);
+        assert!(m.report().contains("conns=2acc/0ref/1open"), "{}", m.report());
     }
 }

@@ -25,6 +25,9 @@ pub enum StreamError {
     TooManyStreams { limit: usize },
     /// Chunk type does not match the stream direction.
     DirectionMismatch(u64),
+    /// Wrapped-encode line length outside the accepted domain
+    /// (positive multiple of 4).
+    InvalidWrap { line_len: usize },
     Decode(DecodeError),
 }
 
@@ -35,6 +38,9 @@ impl std::fmt::Display for StreamError {
             Self::DuplicateStream(id) => write!(f, "stream {id} already open"),
             Self::TooManyStreams { limit } => write!(f, "too many open streams (limit {limit})"),
             Self::DirectionMismatch(id) => write!(f, "stream {id} direction mismatch"),
+            Self::InvalidWrap { line_len } => {
+                write!(f, "invalid wrap line length {line_len} (want a positive multiple of 4)")
+            }
             Self::Decode(e) => write!(f, "stream decode error: {e}"),
         }
     }
@@ -55,6 +61,22 @@ impl SessionState {
 
     pub fn open_encode(&mut self, id: u64, alphabet: Alphabet) -> Result<(), StreamError> {
         self.open(id, StreamState::Encode(StreamingEncoder::new(alphabet)))
+    }
+
+    /// Open an encode stream whose output is CRLF-wrapped at `line_len`
+    /// chars per line (chunked MIME encode — the line-position carry
+    /// lives in the [`StreamingEncoder`], so chunk boundaries never
+    /// split the wrapping).
+    pub fn open_encode_wrapped(
+        &mut self,
+        id: u64,
+        alphabet: Alphabet,
+        line_len: usize,
+    ) -> Result<(), StreamError> {
+        if line_len < 4 || line_len % 4 != 0 {
+            return Err(StreamError::InvalidWrap { line_len });
+        }
+        self.open(id, StreamState::Encode(StreamingEncoder::new_wrapped(alphabet, line_len)))
     }
 
     pub fn open_decode(&mut self, id: u64, alphabet: Alphabet, mode: Mode) -> Result<(), StreamError> {
@@ -192,6 +214,38 @@ mod tests {
         assert!(matches!(s.chunk(5, &chunk), Err(StreamError::Decode(_))));
         // Stream is gone after the error.
         assert_eq!(s.chunk(5, b"AAAA"), Err(StreamError::UnknownStream(5)));
+    }
+
+    #[test]
+    fn wrapped_encode_stream_matches_one_shot() {
+        use crate::base64::Engine;
+        let e = Engine::new(Alphabet::standard());
+        let data: Vec<u8> = (0..2000u32).map(|i| (i * 31 % 256) as u8).collect();
+        let mut expect = vec![0u8; e.encoded_wrapped_len(data.len(), 76)];
+        let n = e.encode_wrapped_slice(&data, &mut expect, 76);
+        expect.truncate(n);
+        let mut s = SessionState::new(4);
+        s.open_encode_wrapped(8, Alphabet::standard(), 76).unwrap();
+        let mut got = Vec::new();
+        for chunk in data.chunks(173) {
+            got.extend(s.chunk(8, chunk).unwrap());
+        }
+        got.extend(s.finish(8).unwrap());
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn wrapped_encode_stream_rejects_bad_line_len() {
+        let mut s = SessionState::new(4);
+        assert_eq!(
+            s.open_encode_wrapped(1, Alphabet::standard(), 70),
+            Err(StreamError::InvalidWrap { line_len: 70 })
+        );
+        assert_eq!(
+            s.open_encode_wrapped(1, Alphabet::standard(), 0),
+            Err(StreamError::InvalidWrap { line_len: 0 })
+        );
+        assert_eq!(s.open_count(), 0);
     }
 
     #[test]

@@ -11,8 +11,11 @@
 //!   [`runtime`] (behind the `pjrt` feature), pure-Rust [`base64`]
 //!   substrate codecs (scalar / SWAR / block / AVX2 / AVX-512) behind the
 //!   zero-allocation tier-dispatched [`base64::Engine`], a batching
-//!   [`coordinator`], a threaded [`server`], the [`workload`] generators
-//!   and the [`perfmodel`] used to regenerate the paper's figures.
+//!   [`coordinator`], a TCP [`server`] whose default transport is the
+//!   event-driven [`net`] subsystem (epoll readiness loop multiplexing
+//!   thousands of connections onto a fixed worker set; thread-per-conn
+//!   fallback for non-Linux hosts), the [`workload`] generators and the
+//!   [`perfmodel`] used to regenerate the paper's figures.
 //!
 //! Python is never on the request path: once `make artifacts` has run,
 //! the `b64simd` binary is self-contained.
@@ -74,6 +77,7 @@
 
 pub mod base64;
 pub mod coordinator;
+pub mod net;
 pub mod perfmodel;
 pub mod runtime;
 pub mod server;

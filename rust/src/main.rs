@@ -4,6 +4,7 @@
 //! b64simd encode [--alphabet NAME] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd decode [--alphabet NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
+//!                [--transport epoll|threaded] [--net-workers N] [--max-conns N]
 //! b64simd selftest [--artifacts DIR]
 //! b64simd model  [--figure 4 | --hardware]
 //! b64simd opcount
@@ -142,8 +143,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut config = RouterConfig::default();
     config.scheduler.workers = workers;
     let router = Arc::new(Router::new(factory, config));
-    let handle = serve(router.clone(), ServerConfig { addr, ..Default::default() })?;
-    eprintln!("b64simd serving on {} (backend={backend_name}, workers={workers})", handle.addr);
+    let mut server_config = ServerConfig { addr, ..Default::default() };
+    if let Some(t) = args.get("transport") {
+        server_config.transport = b64simd::server::Transport::parse(t)
+            .ok_or_else(|| anyhow::anyhow!("unknown transport '{t}' (epoll|threaded)"))?;
+    }
+    if let Some(n) = args.get("net-workers") {
+        server_config.net_workers = n.parse()?;
+    }
+    if let Some(n) = args.get("max-conns") {
+        server_config.max_connections = n.parse()?;
+    }
+    let transport = server_config.transport;
+    let handle = serve(router.clone(), server_config)?;
+    eprintln!(
+        "b64simd serving on {} (backend={backend_name}, workers={workers}, transport={})",
+        handle.addr,
+        transport.name()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
         eprintln!("{}", router.metrics().report());

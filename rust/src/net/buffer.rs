@@ -1,0 +1,73 @@
+//! Reusable byte-buffer pool for the readiness loop.
+//!
+//! Every connection needs a frame-accumulation buffer and a write
+//! queue; with thousands of mostly-idle connections, allocating them
+//! per connection and freeing on close would churn the allocator on
+//! every accept. The loop is single-threaded, so the pool is a plain
+//! free list — no locks. Buffers that ballooned while carrying a large
+//! frame are dropped rather than retained, bounding the pool's resident
+//! footprint at `max_buffers * retain_cap`.
+
+/// A lock-free-because-single-threaded pool of `Vec<u8>` buffers.
+pub struct BufferPool {
+    free: Vec<Vec<u8>>,
+    /// Most buffers kept on the free list.
+    max_buffers: usize,
+    /// Buffers whose capacity grew beyond this are dropped on `put`.
+    retain_cap: usize,
+}
+
+impl BufferPool {
+    pub fn new(max_buffers: usize, retain_cap: usize) -> BufferPool {
+        BufferPool { free: Vec::with_capacity(max_buffers.min(64)), max_buffers, retain_cap }
+    }
+
+    /// Take a cleared buffer (recycled when one is available).
+    pub fn get(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer. Oversized or surplus buffers are dropped.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if buf.capacity() > self.retain_cap || self.free.len() >= self.max_buffers {
+            return;
+        }
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// Buffers currently parked on the free list.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_buffers() {
+        let mut pool = BufferPool::new(4, 1 << 20);
+        let mut a = pool.get();
+        a.extend_from_slice(b"hello");
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.get();
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b.capacity(), cap, "same allocation reused");
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn drops_oversized_and_surplus() {
+        let mut pool = BufferPool::new(2, 64);
+        pool.put(Vec::with_capacity(1024)); // over retain_cap
+        assert_eq!(pool.idle(), 0);
+        pool.put(Vec::with_capacity(16));
+        pool.put(Vec::with_capacity(16));
+        pool.put(Vec::with_capacity(16)); // over max_buffers
+        assert_eq!(pool.idle(), 2);
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-connection state owned by the readiness loop.
+//!
+//! A connection is a nonblocking socket plus the incremental machinery
+//! the loop needs between readiness events: the [`FrameMachine`]
+//! accumulating torn request frames, the [`WriteQueue`] holding
+//! partially written responses, a bounded inbox of parsed-but-undispatched
+//! requests, and the chunked-stream [`SessionState`] shared with
+//! whichever worker is executing this connection's current request.
+//!
+//! Ordering contract: at most one request per connection is in flight
+//! on the worker pool (`busy`), so responses go out in request order —
+//! the same lockstep semantics the thread-per-connection transport
+//! gives — while *different* connections' requests run concurrently,
+//! which is what feeds the coordinator's cross-request batching.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use super::buffer::BufferPool;
+use super::frame::{FrameMachine, WriteQueue};
+use crate::coordinator::backpressure::ConnPermit;
+use crate::coordinator::state::SessionState;
+use crate::server::proto::{Message, ProtoError};
+
+/// Parsed requests a connection may queue ahead of dispatch (pipelining
+/// depth). Beyond this the loop stops reading the socket — kernel
+/// buffers and TCP flow control push back on the client.
+pub(crate) const INBOX_CAP: usize = 64;
+
+/// Pending response bytes above which the loop stops reading new
+/// requests from this connection until the socket drains (a client that
+/// sends but never reads cannot balloon the write queue).
+pub(crate) const WRITE_HIGH_WATER: usize = 4 << 20;
+
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    pub frames: FrameMachine,
+    pub write: WriteQueue,
+    pub inbox: VecDeque<Message>,
+    /// Stream-session state; locked by at most one worker at a time
+    /// (the single in-flight request) and never by the loop.
+    pub session: Arc<Mutex<SessionState>>,
+    /// Slab generation, folded into the epoll token so completions for
+    /// a closed-and-reused slot are recognized as stale.
+    pub epoch: u32,
+    /// One request is on the worker pool; responses restore order.
+    pub busy: bool,
+    /// Edge-triggered read readiness, latched until `read` says
+    /// `WouldBlock` (backpressure may pause reads while it stays set).
+    pub readable: bool,
+    /// Peer finished sending; close once every queued byte is answered.
+    pub eof: bool,
+    /// A malformed/oversized frame poisoned the stream: stop reading
+    /// and parsing, but still answer the requests parsed before it
+    /// (the threaded transport replies to each frame before reading
+    /// the next, and the transports must answer byte-identically).
+    pub corrupt: bool,
+    /// RAII connection-cap slot ([`ConnPermit`]); released on teardown.
+    _permit: ConnPermit,
+}
+
+impl Conn {
+    pub fn new(
+        stream: TcpStream,
+        epoch: u32,
+        max_streams: usize,
+        pool: &mut BufferPool,
+        permit: ConnPermit,
+    ) -> Conn {
+        Conn {
+            stream,
+            frames: FrameMachine::new(pool.get()),
+            write: WriteQueue::new(pool.get()),
+            inbox: VecDeque::new(),
+            session: Arc::new(Mutex::new(SessionState::new(max_streams))),
+            epoch,
+            busy: false,
+            // Latch optimistically: bytes may have landed between
+            // `accept` and the epoll registration.
+            readable: true,
+            eof: false,
+            corrupt: false,
+            _permit: permit,
+        }
+    }
+
+    /// Peel buffered frames into the inbox (up to [`INBOX_CAP`]);
+    /// returns how many were parsed. Protocol errors are fatal for the
+    /// connection.
+    pub fn parse_into_inbox(&mut self) -> Result<usize, ProtoError> {
+        let mut parsed = 0;
+        while self.inbox.len() < INBOX_CAP {
+            match self.frames.next_frame()? {
+                Some(msg) => {
+                    self.inbox.push_back(msg);
+                    parsed += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(parsed)
+    }
+
+    /// Whether the loop should issue another `read` for this connection.
+    pub fn wants_read(&self) -> bool {
+        self.readable
+            && !self.eof
+            && self.inbox.len() < INBOX_CAP
+            && self.write.pending() < WRITE_HIGH_WATER
+    }
+
+    /// Every parsed request answered and written: with `eof` set this
+    /// is the close condition. A torn frame still sitting in the
+    /// accumulator is *not* counted — the peer can never complete it
+    /// after EOF, so it is discarded with the connection (the pump
+    /// parses before checking this, so the remainder is never a
+    /// complete frame).
+    pub fn drained(&self) -> bool {
+        !self.busy && self.inbox.is_empty() && self.write.pending() == 0
+    }
+
+    /// Return pooled buffers; the socket and the cap permit release on
+    /// drop.
+    pub fn teardown(self, pool: &mut BufferPool) {
+        pool.put(self.frames.into_buf());
+        pool.put(self.write.into_buf());
+    }
+}

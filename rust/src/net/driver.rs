@@ -1,0 +1,407 @@
+//! The epoll transport: one edge-triggered readiness loop multiplexing
+//! every connection, a small worker pool executing requests against the
+//! shared [`Router`].
+//!
+//! ```text
+//!            epoll_wait ──► [readiness loop] ── WorkItem ──► [workers] ─► Router
+//!   accept ───┘   ▲            │ FrameMachine / WriteQueue      │        (batched
+//!   eventfd ◄─────┴────────────┴─◄─ Completion (reply frame) ◄──┘         SIMD)
+//! ```
+//!
+//! The loop never blocks on a socket and never runs codec work; the
+//! workers never touch a socket. The two meet at a completion queue
+//! drained on an [`EventFd`] wakeup. Per-connection request/response
+//! order is preserved by keeping at most one request per connection in
+//! flight (see [`super::conn`]); cross-connection concurrency — the
+//! thing the old thread-per-connection transport capped at 256 threads
+//! — is bounded only by the configured admission cap, since an idle
+//! connection costs one slab slot and two pooled buffers, not a thread.
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::buffer::BufferPool;
+use super::conn::Conn;
+use super::sys::{
+    Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::state::SessionState;
+use crate::coordinator::{Metrics, Router};
+use crate::server::proto::Message;
+use crate::server::service::{dispatch, refuse_busy, ServerConfig};
+
+/// Slab token of the listening socket.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Slab token of the completion-queue eventfd.
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+/// Readiness events fetched per `epoll_wait`.
+const EVENT_BATCH: usize = 1024;
+/// Read scratch shared by every connection (the loop is single-threaded).
+const READ_SCRATCH: usize = 64 << 10;
+
+fn token(idx: usize, epoch: u32) -> u64 {
+    ((epoch as u64) << 32) | idx as u64
+}
+
+fn token_parts(tok: u64) -> (usize, u32) {
+    ((tok & 0xFFFF_FFFF) as usize, (tok >> 32) as u32)
+}
+
+/// One request headed for the worker pool.
+struct WorkItem {
+    token: u64,
+    msg: Message,
+    session: Arc<Mutex<SessionState>>,
+}
+
+/// One executed request headed back to the loop. `frame = None` marks a
+/// reply that could not be framed (oversized) — fatal for the
+/// connection, matching the blocking transport's behaviour.
+struct Completion {
+    token: u64,
+    frame: Option<Vec<u8>>,
+}
+
+/// Handles the spawned transport threads + the loop's wakeup fd.
+pub(crate) struct EpollServer {
+    pub threads: Vec<JoinHandle<()>>,
+    pub wake: Arc<EventFd>,
+}
+
+/// Spawn the readiness loop and its workers on `listener`. The caller
+/// keeps `stop` and signals `wake` to shut the loop down.
+pub(crate) fn spawn(
+    router: Arc<Router>,
+    config: &ServerConfig,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<EpollServer> {
+    listener.set_nonblocking(true)?;
+    let epoll = Epoll::new()?;
+    let wake = Arc::new(EventFd::new()?);
+    epoll.add(listener.as_raw_fd(), EPOLLIN | EPOLLET, TOKEN_LISTENER)?;
+    epoll.add(wake.raw(), EPOLLIN | EPOLLET, TOKEN_WAKE)?;
+
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+
+    let mut threads = Vec::new();
+    let metrics = router.metrics().clone();
+    let lp = Loop {
+        epoll,
+        listener,
+        wake: wake.clone(),
+        metrics,
+        limiter: ConnLimiter::new(config.max_connections),
+        max_streams: config.max_streams_per_connection,
+        conns: Vec::new(),
+        epochs: Vec::new(),
+        free: Vec::new(),
+        pool: BufferPool::new(2048, 256 << 10),
+        scratch: vec![0u8; READ_SCRATCH],
+        work_tx,
+        completions: completions.clone(),
+        stop,
+    };
+    threads.push(
+        std::thread::Builder::new()
+            .name("b64simd-net-loop".into())
+            .spawn(move || lp.run())?,
+    );
+    for i in 0..config.net_workers.max(1) {
+        let rx = work_rx.clone();
+        let router = router.clone();
+        let completions = completions.clone();
+        let wake = wake.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("b64simd-net-worker-{i}"))
+                .spawn(move || worker_loop(rx, router, completions, wake))?,
+        );
+    }
+    Ok(EpollServer { threads, wake })
+}
+
+/// Worker: pull a request, execute it against the router (this is where
+/// the batched SIMD work happens, concurrently across workers), push
+/// the serialized reply frame, wake the loop. Exits when the loop drops
+/// the sending side.
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
+    router: Arc<Router>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    wake: Arc<EventFd>,
+) {
+    loop {
+        // Holding the lock across `recv` just serializes the hand-off,
+        // not the work: the lock drops as soon as an item arrives.
+        let item = { rx.lock().unwrap().recv() };
+        let Ok(item) = item else { break };
+        let reply = {
+            let mut session = item.session.lock().unwrap();
+            dispatch(item.msg, &router, &mut session)
+        };
+        let frame = reply.to_frame_bytes().ok();
+        completions.lock().unwrap().push(Completion { token: item.token, frame });
+        wake.signal();
+    }
+}
+
+/// The single-threaded readiness loop.
+struct Loop {
+    epoll: Epoll,
+    listener: TcpListener,
+    wake: Arc<EventFd>,
+    metrics: Arc<Metrics>,
+    limiter: Arc<ConnLimiter>,
+    max_streams: usize,
+    /// Connection slab, indexed by the token's low 32 bits.
+    conns: Vec<Option<Conn>>,
+    /// Slot generations (guard against stale tokens after reuse).
+    epochs: Vec<u32>,
+    /// Vacant slab slots.
+    free: Vec<usize>,
+    pool: BufferPool,
+    scratch: Vec<u8>,
+    work_tx: mpsc::Sender<WorkItem>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Loop {
+    fn run(mut self) {
+        let mut events = vec![EpollEvent::zeroed(); EVENT_BATCH];
+        'events: loop {
+            let n = match self.epoll.wait(&mut events, -1) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("b64simd: epoll loop failed: {e}");
+                    break 'events;
+                }
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                break 'events;
+            }
+            for ev in &events[..n] {
+                // Copy out of the (packed) record before field access.
+                let (mask, data) = { (ev.events, ev.data) };
+                match data {
+                    TOKEN_WAKE => {
+                        // Drain the counter *before* the queue so a
+                        // completion pushed mid-drain re-arms the edge.
+                        self.wake.drain();
+                        self.drain_completions();
+                    }
+                    TOKEN_LISTENER => self.accept_burst(),
+                    tok => self.conn_event(tok, mask),
+                }
+            }
+        }
+        // Shutdown: tear every connection down so the open-conns gauge
+        // and the buffer pool reflect reality before the loop thread
+        // joins.
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                self.close(idx);
+            }
+        }
+    }
+
+    /// Accept until `WouldBlock` (edge-triggered listener). Per-connection
+    /// failures (a client that reset while queued in the backlog —
+    /// `ECONNABORTED` and friends) must not end the burst: the listener
+    /// only re-edges on a *new* connection, so breaking early would
+    /// strand the established connections still behind the aborted one.
+    /// Persistent failures (fd exhaustion) are bounded so the loop
+    /// cannot spin forever on an error `accept` does not consume.
+    fn accept_burst(&mut self) {
+        let mut hard_errors = 0;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted | std::io::ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => {
+                    hard_errors += 1;
+                    if hard_errors > 64 {
+                        break; // e.g. EMFILE: back off until the next edge
+                    }
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        let Some(permit) = self.limiter.try_acquire() else {
+            Metrics::inc(&self.metrics.conns_refused, 1);
+            refuse_busy(stream, &self.limiter);
+            return;
+        };
+        if stream.set_nonblocking(true).is_err() {
+            return; // permit drops, socket closes
+        }
+        stream.set_nodelay(true).ok();
+        let idx = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.epochs.push(0);
+            self.conns.len() - 1
+        });
+        let epoch = self.epochs[idx];
+        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit);
+        let interest = EPOLLIN | EPOLLOUT | EPOLLRDHUP | EPOLLET;
+        if self
+            .epoll
+            .add(conn.stream.as_raw_fd(), interest, token(idx, epoch))
+            .is_err()
+        {
+            conn.teardown(&mut self.pool);
+            self.free.push(idx);
+            return;
+        }
+        Metrics::inc(&self.metrics.conns_accepted, 1);
+        Metrics::inc(&self.metrics.conns_open, 1);
+        self.conns[idx] = Some(conn);
+        self.pump(idx);
+    }
+
+    fn conn_event(&mut self, tok: u64, mask: u32) {
+        let (idx, epoch) = token_parts(tok);
+        if idx >= self.conns.len() || self.epochs[idx] != epoch {
+            return; // stale: the slot was closed (and possibly reused)
+        }
+        let Some(conn) = self.conns[idx].as_mut() else { return };
+        if mask & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0 {
+            // Latch readability; HUP/ERR also surface through read().
+            conn.readable = true;
+        }
+        // EPOLLOUT needs no flag: pump always starts with a flush.
+        self.pump(idx);
+    }
+
+    /// Drive one connection as far as it will go: flush pending writes,
+    /// parse buffered frames, dispatch if idle, read while the socket
+    /// and the backpressure caps allow, and close once a finished peer
+    /// is fully answered.
+    fn pump(&mut self, idx: usize) {
+        loop {
+            let Some(conn) = self.conns[idx].as_mut() else { return };
+            // 1. Writes first: draining the socket lifts the write-side
+            //    backpressure check below.
+            match conn.write.write_to(&mut conn.stream) {
+                Ok(n) => {
+                    if n > 0 {
+                        Metrics::inc(&self.metrics.net_bytes_out, n as u64);
+                    }
+                }
+                Err(_) => return self.close(idx),
+            }
+            // 2. Peel complete frames into the inbox.
+            if !conn.corrupt {
+                match conn.parse_into_inbox() {
+                    Ok(parsed) => {
+                        if parsed > 0 {
+                            Metrics::inc(&self.metrics.frames_in, parsed as u64);
+                        }
+                    }
+                    // Protocol error: poison the stream. Requests parsed
+                    // *before* the bad frame still get their replies
+                    // (the threaded transport answers each frame before
+                    // reading the next — parity demands the same), then
+                    // the drained connection closes below.
+                    Err(_) => {
+                        conn.corrupt = true;
+                        conn.eof = true;
+                        conn.readable = false;
+                    }
+                }
+            }
+            // 3. Dispatch the next request if none is in flight.
+            if !conn.busy {
+                if let Some(msg) = conn.inbox.pop_front() {
+                    conn.busy = true;
+                    let item = WorkItem {
+                        token: token(idx, conn.epoch),
+                        msg,
+                        session: conn.session.clone(),
+                    };
+                    if self.work_tx.send(item).is_err() {
+                        return self.close(idx); // shutting down
+                    }
+                }
+            }
+            // 4. Read while the latch and the caps allow.
+            if conn.wants_read() {
+                match conn.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        conn.readable = false;
+                    }
+                    Ok(n) => {
+                        Metrics::inc(&self.metrics.net_bytes_in, n as u64);
+                        conn.frames.push(&self.scratch[..n]);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        conn.readable = false;
+                        break;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return self.close(idx),
+                }
+                continue; // new bytes (or EOF): reparse and re-dispatch
+            }
+            break;
+        }
+        let Some(conn) = self.conns[idx].as_ref() else { return };
+        if conn.eof && conn.drained() {
+            self.close(idx);
+        }
+    }
+
+    /// Hand completed replies back to their connections and keep those
+    /// connections moving.
+    fn drain_completions(&mut self) {
+        let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
+        for c in done {
+            let (idx, epoch) = token_parts(c.token);
+            if idx >= self.conns.len() || self.epochs[idx] != epoch {
+                continue; // connection closed while the request ran
+            }
+            let Some(conn) = self.conns[idx].as_mut() else { continue };
+            conn.busy = false;
+            match c.frame {
+                Some(frame) => {
+                    conn.write.push_bytes(&frame);
+                    Metrics::inc(&self.metrics.frames_out, 1);
+                }
+                None => {
+                    self.close(idx);
+                    continue;
+                }
+            }
+            self.pump(idx);
+        }
+    }
+
+    fn close(&mut self, idx: usize) {
+        let Some(conn) = self.conns[idx].take() else { return };
+        self.epochs[idx] = self.epochs[idx].wrapping_add(1);
+        let _ = self.epoll.del(conn.stream.as_raw_fd());
+        conn.teardown(&mut self.pool);
+        self.free.push(idx);
+        Metrics::dec(&self.metrics.conns_open, 1);
+    }
+}

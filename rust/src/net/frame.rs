@@ -1,0 +1,311 @@
+//! Incremental framing over nonblocking sockets.
+//!
+//! The wire protocol ([`crate::server::proto`]) is length-prefixed, so a
+//! blocking transport can just `read_exact` twice. A readiness loop
+//! cannot block: bytes arrive in arbitrary fragments — a frame may be
+//! torn across many reads, or several frames may land in one. The
+//! [`FrameMachine`] accumulates whatever the socket yields and peels
+//! complete frames off the front; the [`WriteQueue`] holds serialized
+//! response frames through partial writes until `EPOLLOUT` says the
+//! socket drained. Both run on pooled buffers
+//! ([`super::buffer::BufferPool`]) and compact lazily: the partial-frame
+//! remainder is only memmoved when it is smaller than the consumed
+//! prefix, so a large frame arriving in many fragments is never
+//! re-copied quadratically.
+
+use std::io::{self, Write};
+
+use crate::server::proto::{Message, ProtoError, MAX_FRAME};
+
+/// Incremental parser: push raw bytes in, pull parsed frames out.
+pub struct FrameMachine {
+    buf: Vec<u8>,
+    /// Parse cursor: everything before it has been consumed.
+    pos: usize,
+}
+
+impl FrameMachine {
+    /// Build on a (pooled) buffer.
+    pub fn new(buf: Vec<u8>) -> FrameMachine {
+        FrameMachine { buf, pos: 0 }
+    }
+
+    /// Append freshly read bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Reclaim the underlying buffer (connection teardown).
+    pub fn into_buf(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+
+    /// Parse the next complete frame, if one is buffered. `Ok(None)`
+    /// means "need more bytes"; protocol errors (oversized length
+    /// prefix, malformed body) are fatal for the connection.
+    pub fn next_frame(&mut self) -> Result<Option<Message>, ProtoError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            self.maybe_compact();
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(ProtoError::FrameTooLarge(len));
+        }
+        if avail < 4 + len {
+            self.maybe_compact();
+            return Ok(None);
+        }
+        let msg = Message::from_bytes(&self.buf[self.pos + 4..self.pos + 4 + len])?;
+        self.pos += 4 + len;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        Ok(Some(msg))
+    }
+
+    /// Drop the consumed prefix when the move is cheaper than the waste:
+    /// only when the live remainder is no larger than the dead prefix,
+    /// so a half-arrived large frame (pos stuck at 0) is never shuffled.
+    fn maybe_compact(&mut self) {
+        let live = self.buf.len() - self.pos;
+        if self.pos > 0 && live <= self.pos {
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(live);
+            self.pos = 0;
+        }
+    }
+}
+
+/// Outgoing bytes awaiting a writable socket. Frames are appended
+/// whole; `write_to` pushes as much as the socket accepts and keeps the
+/// rest for the next `EPOLLOUT`.
+pub struct WriteQueue {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteQueue {
+    /// Build on a (pooled) buffer.
+    pub fn new(buf: Vec<u8>) -> WriteQueue {
+        WriteQueue { buf, pos: 0 }
+    }
+
+    /// Queue a pre-serialized frame (length prefix included).
+    pub fn push_bytes(&mut self, frame: &[u8]) {
+        self.buf.extend_from_slice(frame);
+    }
+
+    /// Serialize and queue a message as one frame.
+    pub fn push_frame(&mut self, msg: &Message) -> Result<(), ProtoError> {
+        let frame = msg.to_frame_bytes()?;
+        self.push_bytes(&frame);
+        Ok(())
+    }
+
+    /// Bytes still waiting to go out.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Reclaim the underlying buffer (connection teardown).
+    pub fn into_buf(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+
+    /// Write until drained or the socket pushes back. Returns
+    /// `Ok(written)` where `written` counts the bytes accepted this
+    /// call; `WouldBlock` is not an error — check [`Self::pending`] to
+    /// see whether an `EPOLLOUT` re-arm is needed.
+    pub fn write_to(&mut self, w: &mut impl Write) -> io::Result<usize> {
+        let mut written = 0usize;
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.pos += n;
+                    written += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= (1 << 20) {
+            // Partially drained but the dead prefix is getting big.
+            let live = self.buf.len() - self.pos;
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(live);
+            self.pos = 0;
+        }
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::{Mode, Whitespace};
+
+    fn sample_messages() -> Vec<Message> {
+        vec![
+            Message::Ping,
+            Message::Encode {
+                id: 1,
+                alphabet: "standard".into(),
+                mode: Mode::Strict,
+                data: vec![0xAB; 100],
+            },
+            Message::Decode {
+                id: 2,
+                alphabet: "url".into(),
+                mode: Mode::Forgiving,
+                ws: Whitespace::CrLf,
+                data: b"Zm9v\r\nYg==".to_vec(),
+            },
+            Message::StreamChunk { id: 3, data: vec![7; 300] },
+            Message::RespData { id: 4, data: vec![1, 2, 3] },
+            Message::Stats,
+        ]
+    }
+
+    fn wire(messages: &[Message]) -> Vec<u8> {
+        let mut all = Vec::new();
+        for m in messages {
+            all.extend_from_slice(&m.to_frame_bytes().unwrap());
+        }
+        all
+    }
+
+    #[test]
+    fn byte_at_a_time_delivery() {
+        let msgs = sample_messages();
+        let stream = wire(&msgs);
+        let mut fm = FrameMachine::new(Vec::new());
+        let mut got = Vec::new();
+        for &b in &stream {
+            fm.push(&[b]);
+            while let Some(m) = fm.next_frame().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, msgs);
+        assert_eq!(fm.buffered(), 0);
+    }
+
+    #[test]
+    fn torn_frames_at_every_split_point() {
+        let msgs = sample_messages();
+        let stream = wire(&msgs);
+        for split in 0..=stream.len() {
+            let mut fm = FrameMachine::new(Vec::new());
+            let mut got = Vec::new();
+            for part in [&stream[..split], &stream[split..]] {
+                fm.push(part);
+                while let Some(m) = fm.next_frame().unwrap() {
+                    got.push(m);
+                }
+            }
+            assert_eq!(got, msgs, "split={split}");
+        }
+    }
+
+    #[test]
+    fn many_frames_in_one_push() {
+        let msgs = sample_messages();
+        let mut fm = FrameMachine::new(Vec::new());
+        fm.push(&wire(&msgs));
+        let mut got = Vec::new();
+        while let Some(m) = fm.next_frame().unwrap() {
+            got.push(m);
+        }
+        assert_eq!(got, msgs);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_fatal() {
+        let mut fm = FrameMachine::new(Vec::new());
+        fm.push(&(u32::MAX).to_le_bytes());
+        assert!(matches!(fm.next_frame(), Err(ProtoError::FrameTooLarge(_))));
+    }
+
+    #[test]
+    fn malformed_body_is_fatal() {
+        let mut fm = FrameMachine::new(Vec::new());
+        fm.push(&2u32.to_le_bytes());
+        fm.push(&[0xFF, 0x00]); // unknown tag
+        assert!(matches!(fm.next_frame(), Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn compaction_keeps_partial_frames_intact() {
+        // Interleave a parsed frame with a torn one so pos > 0, then
+        // force the "need more" path that compacts.
+        let ping = Message::Ping.to_frame_bytes().unwrap();
+        let big = Message::StreamChunk { id: 9, data: vec![0x5A; 10_000] }
+            .to_frame_bytes()
+            .unwrap();
+        let mut fm = FrameMachine::new(Vec::new());
+        fm.push(&ping);
+        fm.push(&big[..5]);
+        assert_eq!(fm.next_frame().unwrap(), Some(Message::Ping));
+        assert!(fm.next_frame().unwrap().is_none()); // compacts here
+        fm.push(&big[5..]);
+        match fm.next_frame().unwrap() {
+            Some(Message::StreamChunk { id: 9, data }) => assert_eq!(data, vec![0x5A; 10_000]),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_queue_partial_writes() {
+        /// Accepts at most `cap` bytes per call, then WouldBlock.
+        struct Throttle {
+            out: Vec<u8>,
+            cap: usize,
+            calls_left: usize,
+        }
+        impl Write for Throttle {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.calls_left == 0 {
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                self.calls_left -= 1;
+                let n = buf.len().min(self.cap);
+                self.out.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let mut q = WriteQueue::new(Vec::new());
+        let frame = Message::RespData { id: 1, data: vec![9; 1000] }.to_frame_bytes().unwrap();
+        q.push_bytes(&frame);
+        q.push_frame(&Message::Pong).unwrap();
+        let total = q.pending();
+        let mut sink = Throttle { out: Vec::new(), cap: 100, calls_left: 3 };
+        q.write_to(&mut sink).unwrap();
+        assert_eq!(q.pending(), total - 300, "three throttled writes landed");
+        sink.calls_left = usize::MAX;
+        q.write_to(&mut sink).unwrap();
+        assert_eq!(q.pending(), 0);
+        let mut expect = frame;
+        expect.extend_from_slice(&Message::Pong.to_frame_bytes().unwrap());
+        assert_eq!(sink.out, expect, "byte order preserved across partial writes");
+    }
+}

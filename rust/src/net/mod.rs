@@ -1,0 +1,78 @@
+//! Event-driven connection subsystem: epoll readiness loop, pooled
+//! nonblocking framing, batched fan-in to the SIMD backend.
+//!
+//! The paper's codecs run at memcpy speed only while they stay fed. The
+//! original transport spawned one blocking thread per TCP connection
+//! and hard-capped at a few hundred — the wrong shape for many
+//! mostly-idle clients, and the wrong shape for batching: work arrived
+//! on as many threads as there were sockets. This module inverts that:
+//! **many streams, one readiness loop, a fixed worker set**, so
+//! thousands of connections multiplex onto the handful of cores doing
+//! actual SIMD work, and concurrent requests from different sockets
+//! coalesce in the coordinator's batcher exactly as they would from a
+//! thread pool.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  clients ──► accept ─► [readiness loop (epoll, edge-triggered)]
+//!                          │  per-conn: FrameMachine ── inbox ─┐ WorkItem
+//!                          │            WriteQueue ◄─ frame ─┐ ▼
+//!                          │                                [workers xN]
+//!                          ◄──────────── eventfd ◄─ Completion │
+//!                                                     Router::process
+//!                                                     (batched SIMD)
+//! ```
+//!
+//! * [`sys`] — direct `extern "C"` bindings to `epoll_create1` /
+//!   `epoll_ctl` / `epoll_wait` / `eventfd` (std already links libc; no
+//!   crates), wrapped in owned-fd types;
+//! * [`buffer`] — a free-list pool of read/write buffers. **Lifetimes:**
+//!   a connection borrows two buffers at accept (frame accumulation +
+//!   write queue) and returns them at close; buffers that ballooned
+//!   past the retain cap are dropped instead of parked, so the pool's
+//!   resident footprint stays bounded while steady-state accept/close
+//!   churn never touches the allocator;
+//! * [`frame`] — incremental framing: [`frame::FrameMachine`] peels
+//!   complete length-prefixed frames out of arbitrarily torn reads,
+//!   [`frame::WriteQueue`] survives partial writes until the next
+//!   `EPOLLOUT`;
+//! * [`conn`] — per-connection state and the backpressure caps
+//!   (pipelining depth, write high-water mark);
+//! * [`driver`] — the loop itself plus the worker pool.
+//!
+//! ## Readiness loop ↔ batcher handoff
+//!
+//! The loop owns every socket and never executes codec work; workers
+//! execute codec work and never touch a socket. A parsed request
+//! travels as a `WorkItem` (connection token + message + shared session
+//! state) over an mpsc channel; the worker runs it through
+//! [`crate::coordinator::Router`] — where cross-connection batching,
+//! admission ([`crate::coordinator::backpressure::Gate`]) and the
+//! deferred-error model live — serializes the reply frame, pushes it on
+//! a completion queue and signals an eventfd. The loop drains
+//! completions on that wakeup, queues the bytes, and re-arms reading.
+//! At most one request per connection is in flight, preserving the
+//! wire's request/response order; connection-level admission is a
+//! [`crate::coordinator::backpressure::ConnLimiter`] whose refusals are
+//! answered with a typed busy frame rather than a silent drop.
+//!
+//! Everything below [`driver`] is Linux-only (`epoll`); the portable
+//! pieces ([`buffer`], [`frame`]) are shared, and non-Linux hosts fall
+//! back to the thread-per-connection transport
+//! ([`crate::server::Transport::Threaded`]).
+
+pub mod buffer;
+pub mod frame;
+
+#[cfg(target_os = "linux")]
+pub mod sys;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod conn;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod driver;
+
+pub use buffer::BufferPool;
+pub use frame::{FrameMachine, WriteQueue};

@@ -1,0 +1,261 @@
+//! Thin Linux syscall layer: `epoll` and `eventfd` via direct
+//! `extern "C"` bindings (std already links libc — no crates).
+//!
+//! Only what the readiness loop needs is bound: `epoll_create1` /
+//! `epoll_ctl` / `epoll_wait`, `eventfd` plus its 8-byte counter
+//! read/write, and `setrlimit` so the load generator can lift the
+//! default 1024-fd soft limit before opening thousands of sockets.
+//! Everything unsafe is confined to this module; the wrappers above the
+//! FFI boundary ([`Epoll`], [`EventFd`]) expose an owned-fd API with
+//! `io::Result` errors and close-on-drop semantics.
+
+use std::io;
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::RawFd;
+
+// ---------------------------------------------------------------------
+// FFI surface (see `man epoll_ctl`, `man eventfd`, `man setrlimit`).
+// ---------------------------------------------------------------------
+
+/// One readiness record. On x86-64 the kernel ABI packs the 12-byte
+/// struct (u32 events + u64 data with no padding); other architectures
+/// use natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+/// One readiness record (naturally aligned ABI, non-x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub const fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int) -> c_int;
+    fn eventfd(initval: u32, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+/// Readiness: data to read.
+pub const EPOLLIN: u32 = 0x001;
+/// Readiness: socket writable again.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported, no need to register).
+pub const EPOLLERR: u32 = 0x008;
+/// Hang-up (always reported, no need to register).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer half-closed its write side.
+pub const EPOLLRDHUP: u32 = 0x2000;
+/// Edge-triggered delivery.
+pub const EPOLLET: u32 = 1 << 31;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+const RLIMIT_NOFILE: c_int = 7;
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Owned-fd wrappers.
+// ---------------------------------------------------------------------
+
+/// An owned epoll instance.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest, data: token };
+        cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) }).map(|_| ())
+    }
+
+    /// Register `fd` with the given interest mask; readiness events carry
+    /// `token` back in [`EpollEvent::data`].
+    pub fn add(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change the interest mask / token of a registered fd.
+    pub fn modify(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Deregister `fd` (kernels before 2.6.9 demand a non-null event
+    /// pointer, which `ctl` already provides).
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block for readiness, filling `events`; returns how many fired.
+    /// Retries on `EINTR`; `timeout_ms < 0` blocks indefinitely.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+/// An owned eventfd used as a cross-thread wakeup: workers [`signal`]
+/// after pushing a completion, the readiness loop [`drain`]s on the
+/// corresponding `EPOLLIN`.
+///
+/// [`signal`]: EventFd::signal
+/// [`drain`]: EventFd::drain
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Add 1 to the counter, waking any epoll watcher. A full counter
+    /// (`EAGAIN`) already guarantees a pending wakeup, so it is ignored.
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        unsafe { write(self.fd, (&one as *const u64).cast::<c_void>(), 8) };
+    }
+
+    /// Reset the counter (nonblocking read; `EAGAIN` means it was
+    /// already zero, which is fine — a spurious wakeup costs nothing).
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe { read(self.fd, (&mut buf as *mut u64).cast::<c_void>(), 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` to at least `want` descriptors
+/// (clamped to the hard limit). Returns the resulting soft limit. The
+/// load generator and soak tests open thousands of sockets from one
+/// process; the common 1024-fd default would otherwise fail `connect`
+/// long before the server's cap is exercised.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) })?;
+    if lim.rlim_cur >= want {
+        return Ok(lim.rlim_cur);
+    }
+    let new = RLimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+    cvt(unsafe { setrlimit(RLIMIT_NOFILE, &new) })?;
+    Ok(new.rlim_cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn eventfd_signal_and_drain() {
+        let efd = EventFd::new().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(efd.raw(), EPOLLIN | EPOLLET, 7).unwrap();
+        efd.signal();
+        efd.signal();
+        let mut events = [EpollEvent::zeroed(); 4];
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (got_events, got_data) = (events[0].events, events[0].data);
+        assert_ne!(got_events & EPOLLIN, 0);
+        assert_eq!(got_data, 7);
+        efd.drain();
+        // Counter reset: no further edge without a new signal.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        efd.signal();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+    }
+
+    #[test]
+    fn epoll_reports_socket_readability() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP | EPOLLET, 42).unwrap();
+        client.write_all(b"ping").unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        let n = ep.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        let data = events[0].data;
+        assert_eq!(data, 42);
+        ep.del(server.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_is_monotone() {
+        let got = raise_nofile_limit(256).unwrap();
+        assert!(got >= 256);
+    }
+}

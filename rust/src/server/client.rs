@@ -11,6 +11,11 @@ pub enum ClientError {
     Proto(ProtoError),
     Closed,
     Server(String),
+    /// The server refused the connection at its admission cap (a
+    /// `RespBusy` frame) — retry later, possibly against another
+    /// replica. Distinct from [`ClientError::Server`] so callers can
+    /// back off instead of failing the request.
+    Busy(String),
     Unexpected,
 }
 
@@ -20,6 +25,7 @@ impl std::fmt::Display for ClientError {
             Self::Proto(e) => write!(f, "proto: {e}"),
             Self::Closed => write!(f, "connection closed"),
             Self::Server(m) => write!(f, "server error: {m}"),
+            Self::Busy(m) => write!(f, "server busy: {m}"),
             Self::Unexpected => write!(f, "unexpected response"),
         }
     }
@@ -51,7 +57,12 @@ impl Client {
 
     fn call(&mut self, msg: &Message) -> Result<Message, ClientError> {
         write_frame(&mut self.writer, msg)?;
-        read_frame(&mut self.reader)?.ok_or(ClientError::Closed)
+        match read_frame(&mut self.reader)?.ok_or(ClientError::Closed)? {
+            // Admission refusal: surface as the typed busy error no
+            // matter what request was in flight.
+            Message::RespBusy { message } => Err(ClientError::Busy(message)),
+            other => Ok(other),
+        }
     }
 
     fn expect_data(&mut self, msg: &Message) -> Result<Vec<u8>, ClientError> {
@@ -138,6 +149,29 @@ impl Client {
             alphabet: alphabet.to_string(),
             mode: Mode::Strict,
             ws,
+            wrap: 0,
+        })?;
+        Ok(id)
+    }
+
+    /// Open a chunked *encode* stream whose output is CRLF-wrapped at
+    /// `line_len` chars per line (chunked MIME encode: the server's
+    /// line-position carry spans chunk boundaries, so the client
+    /// receives ready-to-frame RFC 2045 text). `line_len` must be a
+    /// positive multiple of 4.
+    pub fn stream_begin_wrapped(
+        &mut self,
+        alphabet: &str,
+        line_len: u16,
+    ) -> Result<u64, ClientError> {
+        let id = self.id();
+        self.expect_data(&Message::StreamBegin {
+            id,
+            decode: false,
+            alphabet: alphabet.to_string(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+            wrap: line_len,
         })?;
         Ok(id)
     }

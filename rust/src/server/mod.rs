@@ -1,12 +1,22 @@
-//! Threaded TCP service speaking a length-prefixed codec protocol.
+//! TCP service speaking a length-prefixed codec protocol.
 //!
-//! One OS thread per connection (bounded by `max_connections`), a shared
-//! [`crate::coordinator::Router`] underneath — so batching happens
-//! *across* connections, which is where the fixed-shape executables win.
+//! Two transports behind one [`serve`] entry point (picked by
+//! [`ServerConfig::transport`] / `B64SIMD_TRANSPORT`):
+//!
+//! * **epoll** (Linux default) — the event-driven [`crate::net`]
+//!   readiness loop: thousands of connections multiplexed onto a fixed
+//!   worker set;
+//! * **threaded** — one OS thread per connection (bounded by
+//!   `max_connections`), the portable fallback.
+//!
+//! Both share the [`crate::coordinator::Router`] underneath — so
+//! batching happens *across* connections, which is where the
+//! fixed-shape executables win — and both shed over-cap connections
+//! with a typed busy frame.
 
 pub mod client;
 pub mod proto;
 pub mod service;
 
 pub use client::Client;
-pub use service::{serve, ServerConfig, ServerHandle};
+pub use service::{serve, ServerConfig, ServerHandle, Transport};

@@ -8,7 +8,7 @@
 //!   0x02 Decode    { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x03 Validate  { id:u64le, alphabet:str8, mode:u8, data }
 //!   0x04 DecodeWs  { id:u64le, alphabet:str8, mode:u8, ws:u8, data }
-//!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8, ws:u8 }
+//!   0x10 StreamBegin { id:u64le, dir:u8(0=enc,1=dec), alphabet:str8, mode:u8, ws:u8, wrap:u16le }
 //!   0x11 StreamChunk { id:u64le, data }
 //!   0x12 StreamEnd   { id:u64le }
 //!   0x20 Stats     {}
@@ -18,11 +18,18 @@
 //!   0x82 Error     { id:u64le, message }
 //!   0x83 Pong      {}
 //!   0x84 Stats     { report }
+//!   0x85 Busy      { message } — connection refused at admission; the
+//!                  server closes the socket right after writing it
 //! str8      := len(u8), utf-8 bytes
 //! mode      := 0 strict, 1 forgiving
 //! ws        := 0 none, 1 crlf, 2 all — whitespace the decoder skips
 //!              (trailing byte on StreamBegin; absent means none, for
 //!              old clients)
+//! wrap      := encode streams only: CRLF-wrap output at this many
+//!              chars per line (0 = flat). A second trailing extension
+//!              on StreamBegin: serialized only when non-zero (with the
+//!              ws byte then always present), so old servers never see
+//!              it and old clients' shorter frames still parse.
 //! ```
 //!
 //! One-shot decodes carry the whitespace knob too: [`Message::Decode`]
@@ -47,7 +54,10 @@ pub enum Message {
     Encode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
     Decode { id: u64, alphabet: String, mode: Mode, ws: Whitespace, data: Vec<u8> },
     Validate { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
-    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode, ws: Whitespace },
+    /// `wrap` (encode streams only): CRLF-wrap output at this many chars
+    /// per line; 0 means flat output (the only value decode streams
+    /// accept).
+    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode, ws: Whitespace, wrap: u16 },
     StreamChunk { id: u64, data: Vec<u8> },
     StreamEnd { id: u64 },
     Stats,
@@ -56,6 +66,10 @@ pub enum Message {
     RespError { id: u64, message: String },
     Pong,
     RespStats { report: String },
+    /// Admission refusal: the server is at its connection cap. Written
+    /// once on the fresh socket, which is then closed — the typed
+    /// alternative to the silent drop clients used to see.
+    RespBusy { message: String },
 }
 
 /// Protocol-level failures.
@@ -154,13 +168,18 @@ impl Message {
                 }
                 out.extend_from_slice(data);
             }
-            Message::StreamBegin { id, decode, alphabet, mode, ws } => {
+            Message::StreamBegin { id, decode, alphabet, mode, ws, wrap } => {
                 out.push(0x10);
                 out.extend_from_slice(&id.to_le_bytes());
                 out.push(*decode as u8);
                 str8(&mut out, alphabet);
                 out.push(mode_byte(*mode));
                 out.push(ws_byte(*ws));
+                // Trailing extension: only serialized when requested, so
+                // wrap-less frames stay byte-identical to the old layout.
+                if *wrap != 0 {
+                    out.extend_from_slice(&wrap.to_le_bytes());
+                }
             }
             Message::StreamChunk { id, data } => {
                 out.push(0x11);
@@ -188,8 +207,26 @@ impl Message {
                 out.push(0x84);
                 out.extend_from_slice(report.as_bytes());
             }
+            Message::RespBusy { message } => {
+                out.push(0x85);
+                out.extend_from_slice(message.as_bytes());
+            }
         }
         out
+    }
+
+    /// Serialize as one complete wire frame (length prefix + body), the
+    /// form the nonblocking transport queues. Rejects oversized bodies
+    /// like [`write_frame`] does.
+    pub fn to_frame_bytes(&self) -> Result<Vec<u8>, ProtoError> {
+        let body = self.to_bytes();
+        if body.len() > MAX_FRAME {
+            return Err(ProtoError::FrameTooLarge(body.len()));
+        }
+        let mut frame = Vec::with_capacity(4 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        Ok(frame)
     }
 
     /// Parse a frame body.
@@ -236,13 +273,23 @@ impl Message {
                 let (&d, rest) = rest.split_first().ok_or(ProtoError::Malformed("no dir"))?;
                 let (alphabet, rest) = take_str8(rest)?;
                 let (&mb, rest) = rest.split_first().ok_or(ProtoError::Malformed("no mode"))?;
-                // The whitespace byte is a trailing extension: frames from
-                // older clients simply end after the mode byte.
-                let ws = match rest.first() {
-                    Some(&b) => byte_ws(b)?,
-                    None => Whitespace::None,
+                // Trailing extensions, oldest client first: frames may end
+                // after the mode byte (ws = none), after the ws byte
+                // (wrap = 0), or after the wrap u16.
+                let (ws, wrap) = match rest.len() {
+                    0 => (Whitespace::None, 0u16),
+                    1 => (byte_ws(rest[0])?, 0u16),
+                    3 => (byte_ws(rest[0])?, u16::from_le_bytes([rest[1], rest[2]])),
+                    _ => return Err(ProtoError::Malformed("bad stream-begin tail")),
                 };
-                Ok(Message::StreamBegin { id, decode: d != 0, alphabet, mode: byte_mode(mb)?, ws })
+                Ok(Message::StreamBegin {
+                    id,
+                    decode: d != 0,
+                    alphabet,
+                    mode: byte_mode(mb)?,
+                    ws,
+                    wrap,
+                })
             }
             0x11 => {
                 let (id, rest) = take_u64(rest)?;
@@ -267,6 +314,9 @@ impl Message {
             0x84 => Ok(Message::RespStats {
                 report: String::from_utf8_lossy(rest).into_owned(),
             }),
+            0x85 => Ok(Message::RespBusy {
+                message: String::from_utf8_lossy(rest).into_owned(),
+            }),
             _ => Err(ProtoError::Malformed("unknown tag")),
         }
     }
@@ -286,6 +336,13 @@ pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<(), ProtoError> 
 
 /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Message>, ProtoError> {
+    Ok(read_frame_raw(r)?.map(|(msg, _)| msg))
+}
+
+/// [`read_frame`] that also reports the frame's wire size (length
+/// prefix included) — the blocking transport's hook for byte-level
+/// metrics without re-serializing.
+pub fn read_frame_raw(r: &mut impl Read) -> Result<Option<(Message, usize)>, ProtoError> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -298,7 +355,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Message>, ProtoError> {
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    Ok(Some(Message::from_bytes(&body)?))
+    Ok(Some((Message::from_bytes(&body)?, 4 + len)))
 }
 
 #[cfg(test)]
@@ -319,9 +376,10 @@ mod tests {
         roundtrip(Message::Decode { id: 8, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf, data: b"Zm9v\r\nYg==".to_vec() });
         roundtrip(Message::Decode { id: 8, alphabet: "standard".into(), mode: Mode::Forgiving, ws: Whitespace::All, data: b"Zm 9v".to_vec() });
         roundtrip(Message::Validate { id: 9, alphabet: "imap".into(), mode: Mode::Strict, data: b"AAAA".to_vec() });
-        roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None });
-        roundtrip(Message::StreamBegin { id: 2, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf });
-        roundtrip(Message::StreamBegin { id: 3, decode: false, alphabet: "url".into(), mode: Mode::Forgiving, ws: Whitespace::All });
+        roundtrip(Message::StreamBegin { id: 1, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 0 });
+        roundtrip(Message::StreamBegin { id: 2, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf, wrap: 0 });
+        roundtrip(Message::StreamBegin { id: 3, decode: false, alphabet: "url".into(), mode: Mode::Forgiving, ws: Whitespace::All, wrap: 0 });
+        roundtrip(Message::StreamBegin { id: 4, decode: false, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 76 });
         roundtrip(Message::StreamChunk { id: 1, data: vec![0, 1, 255] });
         roundtrip(Message::StreamEnd { id: 1 });
         roundtrip(Message::Stats);
@@ -330,6 +388,7 @@ mod tests {
         roundtrip(Message::RespError { id: 7, message: "bad byte".into() });
         roundtrip(Message::Pong);
         roundtrip(Message::RespStats { report: "req=1".into() });
+        roundtrip(Message::RespBusy { message: "server busy".into() });
     }
 
     #[test]
@@ -386,11 +445,66 @@ mod tests {
                 alphabet: "standard".into(),
                 mode: Mode::Strict,
                 ws: Whitespace::None,
+                wrap: 0,
             }
         );
         // An invalid ws byte is rejected.
         b.push(9);
         assert!(Message::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn stream_begin_wrap_extension_layout() {
+        // Wrap-less frames keep the PR-2/3 era layout (nothing after the
+        // ws byte), so old servers parse new clients.
+        let flat = Message::StreamBegin {
+            id: 5,
+            decode: false,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+            wrap: 0,
+        };
+        let body = flat.to_bytes();
+        // tag(1) + id(8) + dir(1) + str8(1+8) + mode(1) + ws(1) = 21.
+        assert_eq!(body.len(), 21);
+        assert_eq!(Message::from_bytes(&body).unwrap(), flat);
+        // A wrapped stream appends the u16le line length.
+        let wrapped = Message::StreamBegin {
+            id: 5,
+            decode: false,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            ws: Whitespace::None,
+            wrap: 76,
+        };
+        let body = wrapped.to_bytes();
+        assert_eq!(body.len(), 23);
+        assert_eq!(&body[21..], &76u16.to_le_bytes());
+        assert_eq!(Message::from_bytes(&body).unwrap(), wrapped);
+        // A dangling half-u16 tail is malformed.
+        assert!(Message::from_bytes(&body[..22]).is_err());
+    }
+
+    #[test]
+    fn busy_frame_roundtrips_with_message() {
+        let msg = Message::RespBusy { message: "server busy: 256 connections".into() };
+        let body = msg.to_bytes();
+        assert_eq!(body[0], 0x85);
+        assert_eq!(Message::from_bytes(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn frame_bytes_matches_write_frame() {
+        for msg in [
+            Message::Ping,
+            Message::RespData { id: 3, data: vec![1, 2, 3] },
+            Message::RespBusy { message: "busy".into() },
+        ] {
+            let mut via_writer = Vec::new();
+            write_frame(&mut via_writer, &msg).unwrap();
+            assert_eq!(msg.to_frame_bytes().unwrap(), via_writer);
+        }
     }
 
     #[test]

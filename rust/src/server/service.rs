@@ -1,50 +1,151 @@
-//! The codec service: TCP listener, connection threads, shared router.
+//! The codec service: TCP listener, pluggable transport, shared router.
+//!
+//! Two transports speak the same wire protocol over the same
+//! [`Router`]:
+//!
+//! * [`Transport::Epoll`] (Linux, the default) — the event-driven
+//!   [`crate::net`] subsystem: one edge-triggered readiness loop
+//!   multiplexing every connection onto a fixed worker pool, so
+//!   thousands of mostly-idle clients cost no threads;
+//! * [`Transport::Threaded`] — the original thread-per-connection
+//!   fallback (non-Linux hosts, differential testing).
+//!
+//! Either way, connections beyond `max_connections` receive a typed
+//! [`Message::RespBusy`] frame before the socket closes — load shedding
+//! the client can distinguish from a network failure — and both
+//! transports feed the shared connection/frame/byte counters in
+//! [`crate::coordinator::Metrics`].
 
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::proto::{read_frame, resolve_alphabet, write_frame, Message, ProtoError};
+use super::proto::{read_frame_raw, resolve_alphabet, Message, ProtoError};
 use crate::base64::{Mode, Whitespace};
+use crate::coordinator::backpressure::ConnLimiter;
 use crate::coordinator::state::{SessionState, StreamError};
-use crate::coordinator::{Outcome, Request, RequestKind, Router};
+use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
+
+/// Which connection subsystem `serve` runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Event-driven readiness loop (`crate::net`); Linux only — other
+    /// hosts silently fall back to [`Transport::Threaded`].
+    Epoll,
+    /// One blocking OS thread per connection.
+    Threaded,
+}
+
+impl Transport {
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Epoll => "epoll",
+            Transport::Threaded => "threaded",
+        }
+    }
+
+    /// Parse a transport name (the `B64SIMD_TRANSPORT` env values).
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "epoll" => Some(Transport::Epoll),
+            "threaded" | "threads" => Some(Transport::Threaded),
+            _ => None,
+        }
+    }
+
+    /// `B64SIMD_TRANSPORT` override, else the host default (epoll on
+    /// Linux). The env knob is how CI runs the whole suite against both
+    /// transports.
+    pub fn from_env() -> Transport {
+        if let Ok(v) = std::env::var("B64SIMD_TRANSPORT") {
+            if let Some(t) = Transport::parse(&v) {
+                return t;
+            }
+            eprintln!("b64simd: ignoring unknown B64SIMD_TRANSPORT value '{v}'");
+        }
+        if cfg!(target_os = "linux") {
+            Transport::Epoll
+        } else {
+            Transport::Threaded
+        }
+    }
+}
 
 /// Server tuning.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub addr: SocketAddr,
-    /// Maximum concurrent connections; excess connections are refused.
+    /// Maximum concurrent connections; excess connections get a busy
+    /// frame and are closed.
     pub max_connections: usize,
     /// Maximum open streams per connection.
     pub max_streams_per_connection: usize,
+    /// Connection subsystem (see [`Transport::from_env`]).
+    pub transport: Transport,
+    /// Worker threads executing requests for the epoll transport (the
+    /// threaded transport uses one thread per connection instead).
+    pub net_workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:4648".parse().unwrap(), // port = RFC number
-            max_connections: 256,
+            // The epoll loop holds connections, not threads, so the
+            // default cap is an admission bound, not a thread budget.
+            max_connections: 1024,
             max_streams_per_connection: 16,
+            transport: Transport::from_env(),
+            net_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 8),
         }
     }
 }
 
-/// Running server handle. Dropping stops accepting (existing connections
-/// run to completion; use [`ServerHandle::shutdown`] for a joined stop).
+/// Running server handle. Dropping stops the transport (joined); use
+/// [`ServerHandle::shutdown`] for an explicit stop.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
+    waker: Waker,
+}
+
+/// How to nudge a blocked transport out of its wait.
+enum Waker {
+    /// Connect once to unblock a blocking `accept()`.
+    Connect(SocketAddr),
+    /// Signal the readiness loop's eventfd.
+    #[cfg(target_os = "linux")]
+    Event(Arc<crate::net::sys::EventFd>),
+}
+
+impl Waker {
+    fn wake(&self) {
+        match self {
+            Waker::Connect(addr) => {
+                let _ = TcpStream::connect(addr);
+            }
+            #[cfg(target_os = "linux")]
+            Waker::Event(efd) => efd.signal(),
+        }
+    }
 }
 
 impl ServerHandle {
-    /// Stop accepting and join the acceptor.
+    /// Stop the transport and join its threads.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Nudge the acceptor out of `accept()`.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
+        self.waker.wake();
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -52,11 +153,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -65,43 +162,110 @@ pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<Server
     let listener = TcpListener::bind(config.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let conns = Arc::new(AtomicUsize::new(0));
+    match config.transport {
+        #[cfg(target_os = "linux")]
+        Transport::Epoll => {
+            let srv = crate::net::driver::spawn(router, &config, listener, stop.clone())?;
+            Ok(ServerHandle { addr, stop, threads: srv.threads, waker: Waker::Event(srv.wake) })
+        }
+        #[cfg(not(target_os = "linux"))]
+        Transport::Epoll => serve_threaded(router, config, listener, addr, stop),
+        Transport::Threaded => serve_threaded(router, config, listener, addr, stop),
+    }
+}
+
+/// The thread-per-connection transport.
+fn serve_threaded(
+    router: Arc<Router>,
+    config: ServerConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<ServerHandle> {
     let stop2 = stop.clone();
+    let limiter = ConnLimiter::new(config.max_connections);
+    let metrics = router.metrics().clone();
     let accept_thread = std::thread::spawn(move || {
         for stream in listener.incoming() {
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            if conns.load(Ordering::SeqCst) >= config.max_connections {
-                drop(stream); // shed
+            let Some(permit) = limiter.try_acquire() else {
+                Metrics::inc(&metrics.conns_refused, 1);
+                refuse_busy(stream, &limiter);
                 continue;
-            }
-            conns.fetch_add(1, Ordering::SeqCst);
+            };
+            Metrics::inc(&metrics.conns_accepted, 1);
+            Metrics::inc(&metrics.conns_open, 1);
             let router = router.clone();
-            let conns = conns.clone();
+            let metrics = metrics.clone();
             let max_streams = config.max_streams_per_connection;
             std::thread::spawn(move || {
-                let _ = handle_connection(stream, &router, max_streams);
-                conns.fetch_sub(1, Ordering::SeqCst);
+                let _ = handle_connection(stream, &router, max_streams, &metrics);
+                Metrics::dec(&metrics.conns_open, 1);
+                drop(permit);
             });
         }
     });
-    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+    Ok(ServerHandle { addr, stop, threads: vec![accept_thread], waker: Waker::Connect(addr) })
+}
+
+/// Load-shed an over-cap connection: tell the client why before
+/// closing, instead of the silent drop that used to look identical to a
+/// network failure. Best-effort single nonblocking write — a refusal
+/// path must never be able to stall the acceptor.
+pub(crate) fn refuse_busy(stream: TcpStream, limiter: &ConnLimiter) {
+    let msg = Message::RespBusy {
+        message: format!(
+            "server busy: {} connections open (limit {})",
+            limiter.open(),
+            limiter.max()
+        ),
+    };
+    if let Ok(frame) = msg.to_frame_bytes() {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).ok();
+        // `write_all` on a nonblocking socket errors out (rather than
+        // spinning) if the fresh socket buffer somehow cannot take the
+        // tiny frame — exactly the best-effort semantics wanted here.
+        if (&stream).write_all(&frame).is_err() {
+            return;
+        }
+        // FIN after the frame, then drain whatever request bytes the
+        // client already sent: closing with unread data in the receive
+        // queue makes the kernel send RST, which on some stacks would
+        // discard the busy frame before the client reads it.
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let mut sink = [0u8; 4096];
+        for _ in 0..16 {
+            match (&stream).read(&mut sink) {
+                Ok(0) | Err(_) => break, // EOF, nothing buffered, or reset
+                Ok(_) => {}
+            }
+        }
+    }
 }
 
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
     max_streams: usize,
+    metrics: &Metrics,
 ) -> Result<(), ProtoError> {
     stream.set_nodelay(true).ok();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
     let mut session = SessionState::new(max_streams);
-    while let Some(msg) = read_frame(&mut reader)? {
+    while let Some((msg, wire_len)) = read_frame_raw(&mut reader)? {
+        Metrics::inc(&metrics.frames_in, 1);
+        Metrics::inc(&metrics.net_bytes_in, wire_len as u64);
         let reply = dispatch(msg, router, &mut session);
-        write_frame(&mut writer, &reply)?;
+        let frame = reply.to_frame_bytes()?;
+        writer.write_all(&frame)?;
+        writer.flush()?;
+        Metrics::inc(&metrics.frames_out, 1);
+        Metrics::inc(&metrics.net_bytes_out, frame.len() as u64);
     }
     Ok(())
 }
@@ -138,7 +302,11 @@ fn one_shot(
     outcome_to_message(id, resp.outcome)
 }
 
-fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
+/// Execute one request message against the router / session. Shared by
+/// both transports: the blocking path calls it inline on the connection
+/// thread, the epoll path on a net worker (with the session behind the
+/// connection's mutex).
+pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
             one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data)
@@ -151,13 +319,21 @@ fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Messag
         Message::Validate { id, alphabet, mode, data } => {
             one_shot(router, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data)
         }
-        Message::StreamBegin { id, decode, alphabet, mode, ws } => {
+        Message::StreamBegin { id, decode, alphabet, mode, ws, wrap } => {
             let alphabet = match resolve_alphabet(&alphabet) {
                 Ok(a) => a,
                 Err(e) => return Message::RespError { id, message: e.to_string() },
             };
             let r = if decode {
+                if wrap != 0 {
+                    return Message::RespError {
+                        id,
+                        message: "wrap is only valid on encode streams".into(),
+                    };
+                }
                 session.open_decode_ws(id, alphabet, mode, ws)
+            } else if wrap != 0 {
+                session.open_encode_wrapped(id, alphabet, wrap as usize)
             } else {
                 session.open_encode(id, alphabet)
             };

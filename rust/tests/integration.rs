@@ -509,11 +509,12 @@ fn prop_streaming_invariant_under_random_chunking() {
 fn server_sheds_connections_over_limit() {
     let router = Arc::new(Router::new(rust_factory(), RouterConfig::default()));
     let handle = serve(
-        router,
+        router.clone(),
         b64simd::server::ServerConfig {
             addr: "127.0.0.1:0".parse().unwrap(),
             max_connections: 2,
             max_streams_per_connection: 4,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -521,9 +522,19 @@ fn server_sheds_connections_over_limit() {
     let mut c2 = Client::connect(handle.addr).unwrap();
     c1.ping().unwrap();
     c2.ping().unwrap();
-    // The third connection is dropped by the acceptor; any call fails.
+    // The third connection is refused with a typed busy frame (not the
+    // silent drop the old accept loop performed).
     let mut c3 = Client::connect(handle.addr).unwrap();
-    assert!(c3.ping().is_err());
+    match c3.ping() {
+        Err(b64simd::server::client::ClientError::Busy(m)) => {
+            assert!(m.contains("limit 2"), "{m}")
+        }
+        other => panic!("expected busy refusal, got {other:?}"),
+    }
+    assert_eq!(
+        router.metrics().conns_refused.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
     // Existing connections keep working.
     c1.ping().unwrap();
     handle.shutdown();

@@ -1,0 +1,352 @@
+//! Transport-level tests: the epoll readiness loop against the
+//! thread-per-connection fallback.
+//!
+//! * soak — ≥ 2× the old 256-connection cap held open concurrently,
+//!   interleaving one-shot encode/decode/ws-decode and streaming
+//!   sessions on every connection, all pinned to the `Engine` oracle;
+//! * parity — the same raw request frames produce *byte-identical*
+//!   response frames on both transports;
+//! * framing — torn/pipelined delivery straight against a live socket
+//!   (the `FrameMachine` unit tests live in `rust/src/net/frame.rs`);
+//! * shedding — over-cap connections get the typed busy frame on both
+//!   transports.
+//!
+//! The server helpers honour the explicit `Transport` they are given;
+//! the soak test uses `Transport::from_env()` so the CI matrix
+//! (`B64SIMD_TRANSPORT=epoll|threaded`) runs it against both.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Engine, Mode, Whitespace};
+use b64simd::coordinator::backend::rust_factory;
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::server::client::ClientError;
+use b64simd::server::proto::Message;
+use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
+use b64simd::workload::random_bytes;
+
+fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Router>) {
+    let router = Arc::new(Router::new(rust_factory(), RouterConfig::default()));
+    let handle = serve(
+        router.clone(),
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            max_connections,
+            transport,
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    (handle, router)
+}
+
+/// Lift the fd soft limit (client + server sockets share this process).
+fn want_fds(_n: u64) {
+    #[cfg(target_os = "linux")]
+    {
+        let _ = b64simd::net::sys::raise_nofile_limit(_n);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Soak: 512 concurrent connections (2× the old cap), every workload
+// kind interleaved, every response checked against the Engine oracle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn soak_512_concurrent_connections_mixed_workloads() {
+    const CONNS: usize = 512;
+    const THREADS: usize = 16;
+    want_fds(CONNS as u64 * 2 + 512);
+    let (handle, router) = start(Transport::from_env(), CONNS + 32);
+    let engine = Engine::get();
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let addr = handle.addr;
+            s.spawn(move || {
+                // Open this thread's share up front and *hold* every
+                // socket so all 512 are concurrently connected.
+                let mut clients: Vec<Client> = (0..CONNS / THREADS)
+                    .map(|_| Client::connect(addr).expect("connect under soak"))
+                    .collect();
+                for (c, client) in clients.iter_mut().enumerate() {
+                    let len = 1 + (t * 131 + c * 17) % 4096;
+                    let data = random_bytes(len, (t * 1000 + c) as u64);
+                    // One-shot encode.
+                    let enc = client.encode(&data, "standard").unwrap();
+                    let mut expect = vec![0u8; engine.encoded_len(len)];
+                    engine.encode_slice(&data, &mut expect);
+                    assert_eq!(enc, expect, "t={t} c={c} len={len}");
+                    // One-shot decode.
+                    assert_eq!(
+                        client.decode(&enc, "standard", Mode::Strict).unwrap(),
+                        data,
+                        "t={t} c={c}"
+                    );
+                    // One-shot whitespace-tolerant decode of wrapped text.
+                    let mut wrapped = vec![0u8; engine.encoded_wrapped_len(len, 76)];
+                    let n = engine.encode_wrapped_slice(&data, &mut wrapped, 76);
+                    wrapped.truncate(n);
+                    assert_eq!(
+                        client
+                            .decode_ws(&wrapped, "standard", Mode::Strict, Whitespace::CrLf)
+                            .unwrap(),
+                        data,
+                        "t={t} c={c} ws"
+                    );
+                    // Streaming encode session (chunked).
+                    let sid = client.stream_begin(false, "standard").unwrap();
+                    let mut streamed = Vec::new();
+                    for chunk in data.chunks(97) {
+                        streamed.extend(client.stream_chunk(sid, chunk).unwrap());
+                    }
+                    streamed.extend(client.stream_end(sid).unwrap());
+                    assert_eq!(streamed, expect, "t={t} c={c} stream");
+                    // Streaming ws-decode session over the wrapped text.
+                    let sid = client
+                        .stream_begin_ws(true, "standard", Whitespace::CrLf)
+                        .unwrap();
+                    let mut back = Vec::new();
+                    for chunk in wrapped.chunks(113) {
+                        back.extend(client.stream_chunk(sid, chunk).unwrap());
+                    }
+                    back.extend(client.stream_end(sid).unwrap());
+                    assert_eq!(back, data, "t={t} c={c} ws stream");
+                }
+                // Every connection answers again after the full pass —
+                // nothing was silently shed mid-soak.
+                for client in clients.iter_mut() {
+                    client.ping().unwrap();
+                }
+            });
+        }
+    });
+
+    let m = router.metrics();
+    let accepted = m.conns_accepted.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(accepted >= CONNS as u64, "accepted {accepted} < {CONNS}");
+    assert_eq!(m.conns_refused.load(std::sync::atomic::Ordering::Relaxed), 0);
+    handle.shutdown();
+    // The epoll loop tears every connection down before its thread
+    // joins; threaded connection threads are detached, so poll briefly.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while m.conns_open.load(std::sync::atomic::Ordering::Relaxed) != 0
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(m.conns_open.load(std::sync::atomic::Ordering::Relaxed), 0, "open-conn gauge leaks");
+}
+
+// ---------------------------------------------------------------------
+// Parity: both transports must answer the same bytes.
+// ---------------------------------------------------------------------
+
+/// Write each request frame, read its reply frame raw (prefix + body).
+fn raw_exchange(addr: std::net::SocketAddr, requests: &[Message]) -> Vec<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut replies = Vec::new();
+    for msg in requests {
+        stream.write_all(&msg.to_frame_bytes().unwrap()).unwrap();
+        let mut len_buf = [0u8; 4];
+        stream.read_exact(&mut len_buf).unwrap();
+        let len = u32::from_le_bytes(len_buf) as usize;
+        let mut frame = vec![0u8; 4 + len];
+        frame[..4].copy_from_slice(&len_buf);
+        stream.read_exact(&mut frame[4..]).unwrap();
+        replies.push(frame);
+    }
+    replies
+}
+
+#[test]
+fn transports_answer_byte_identical_frames() {
+    let data = random_bytes(3000, 0xFA11);
+    let enc = BlockCodec::new(Alphabet::standard()).encode(&data);
+    let mut corrupt = enc.clone();
+    corrupt[1234] = b'!';
+    let e = Engine::get();
+    let mut wrapped = vec![0u8; e.encoded_wrapped_len(data.len(), 76)];
+    let n = e.encode_wrapped_slice(&data, &mut wrapped, 76);
+    wrapped.truncate(n);
+
+    let requests = vec![
+        Message::Ping,
+        Message::Encode { id: 1, alphabet: "standard".into(), mode: Mode::Strict, data: data.clone() },
+        Message::Decode { id: 2, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, data: enc.clone() },
+        // Exact error offset through the deferred-error path.
+        Message::Decode { id: 3, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, data: corrupt },
+        // One-shot ws decode (wire tag 0x04) with original-offset rebase.
+        Message::Decode { id: 4, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf, data: wrapped },
+        Message::Validate { id: 5, alphabet: "url".into(), mode: Mode::Strict, data: b"AAAA".to_vec() },
+        Message::Encode { id: 6, alphabet: "nonsense".into(), mode: Mode::Strict, data: vec![1] },
+        // Stream session: begin / chunks / end, flat and wrapped.
+        Message::StreamBegin { id: 10, decode: false, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 0 },
+        Message::StreamChunk { id: 10, data: data[..100].to_vec() },
+        Message::StreamChunk { id: 10, data: data[100..257].to_vec() },
+        Message::StreamEnd { id: 10 },
+        Message::StreamBegin { id: 11, decode: false, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 76 },
+        Message::StreamChunk { id: 11, data: data[..500].to_vec() },
+        Message::StreamEnd { id: 11 },
+        // Error catalogue: unknown stream, wrap on a decode stream,
+        // responses sent to a server.
+        Message::StreamChunk { id: 99, data: vec![1, 2] },
+        Message::StreamBegin { id: 12, decode: true, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 76 },
+        Message::RespData { id: 13, data: vec![] },
+    ];
+
+    let (epoll, _) = start(Transport::Epoll, 64);
+    let (threaded, _) = start(Transport::Threaded, 64);
+    let a = raw_exchange(epoll.addr, &requests);
+    let b = raw_exchange(threaded.addr, &requests);
+    assert_eq!(a.len(), b.len());
+    for (i, (fa, fb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(fa, fb, "response {i} diverged between transports");
+    }
+    // And the wrapped stream really produced wrapped output.
+    let wrapped_begin = &a[11];
+    assert_eq!(Message::from_bytes(&wrapped_begin[4..]).unwrap(), Message::RespData { id: 11, data: vec![] });
+    epoll.shutdown();
+    threaded.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Framing robustness on a live socket.
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_and_pipelined_delivery() {
+    let (handle, _) = start(Transport::from_env(), 16);
+    let data = random_bytes(777, 0x7E42);
+    let expect = BlockCodec::new(Alphabet::standard()).encode(&data);
+
+    // Torn: one request frame dribbled a byte at a time.
+    {
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let frame = Message::Encode {
+            id: 1,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            data: data.clone(),
+        }
+        .to_frame_bytes()
+        .unwrap();
+        for b in frame {
+            stream.write_all(&[b]).unwrap();
+        }
+        let mut len_buf = [0u8; 4];
+        stream.read_exact(&mut len_buf).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+        stream.read_exact(&mut body).unwrap();
+        assert_eq!(
+            Message::from_bytes(&body).unwrap(),
+            Message::RespData { id: 1, data: expect.clone() }
+        );
+    }
+
+    // Pipelined: many requests in one write, replies read afterwards in
+    // order (the inbox queues them; one response per request, FIFO).
+    {
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut batch = Vec::new();
+        for id in 0..20u64 {
+            batch.extend_from_slice(
+                &Message::Encode {
+                    id,
+                    alphabet: "standard".into(),
+                    mode: Mode::Strict,
+                    data: data.clone(),
+                }
+                .to_frame_bytes()
+                .unwrap(),
+            );
+        }
+        stream.write_all(&batch).unwrap();
+        for id in 0..20u64 {
+            let mut len_buf = [0u8; 4];
+            stream.read_exact(&mut len_buf).unwrap();
+            let mut body = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+            stream.read_exact(&mut body).unwrap();
+            assert_eq!(
+                Message::from_bytes(&body).unwrap(),
+                Message::RespData { id, data: expect.clone() },
+                "pipelined reply {id} out of order"
+            );
+        }
+    }
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Shedding: the busy frame on both transports.
+// ---------------------------------------------------------------------
+
+#[test]
+fn busy_frame_on_both_transports() {
+    for transport in [Transport::Epoll, Transport::Threaded] {
+        let (handle, router) = start(transport, 1);
+        let mut c1 = Client::connect(handle.addr).unwrap();
+        c1.ping().unwrap();
+        let mut c2 = Client::connect(handle.addr).unwrap();
+        match c2.ping() {
+            Err(ClientError::Busy(m)) => assert!(m.contains("limit 1"), "{m}"),
+            other => panic!("{}: expected busy, got {other:?}", transport.name()),
+        }
+        assert_eq!(
+            router.metrics().conns_refused.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "{}",
+            transport.name()
+        );
+        // The admitted connection is unaffected, and a slot freed by a
+        // disconnect becomes admittable again.
+        c1.ping().unwrap();
+        drop(c1);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let mut c3 = Client::connect(handle.addr).unwrap();
+            match c3.ping() {
+                Ok(()) => break,
+                Err(ClientError::Busy(_)) if std::time::Instant::now() < deadline => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => panic!("{}: {e}", transport.name()),
+            }
+        }
+        handle.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wrapped streaming sessions over the wire match the one-shot oracle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wrapped_stream_session_matches_one_shot_oracle() {
+    let (handle, _) = start(Transport::from_env(), 16);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let e = Engine::get();
+    for len in [0usize, 1, 57, 76, 500, 5000] {
+        let data = random_bytes(len, len as u64 + 9);
+        let mut expect = vec![0u8; e.encoded_wrapped_len(len, 76)];
+        let n = e.encode_wrapped_slice(&data, &mut expect, 76);
+        expect.truncate(n);
+        let sid = client.stream_begin_wrapped("standard", 76).unwrap();
+        let mut got = Vec::new();
+        for chunk in data.chunks(61) {
+            got.extend(client.stream_chunk(sid, chunk).unwrap());
+        }
+        got.extend(client.stream_end(sid).unwrap());
+        assert_eq!(got, expect, "len={len}");
+    }
+    // Invalid wrap values are refused server-side.
+    let err = client.stream_begin_wrapped("standard", 70).unwrap_err();
+    assert!(err.to_string().contains("invalid wrap"), "{err}");
+    handle.shutdown();
+}
