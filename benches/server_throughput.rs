@@ -1,13 +1,19 @@
 //! Server transport bench: loadgen-driven connection churn and request
-//! throughput, epoll readiness loop vs thread-per-connection.
+//! throughput across the transport matrix — epoll (reactor shards ×
+//! {1, N}, reply path × {zero-copy, copy}) vs thread-per-connection.
 //!
-//! Two numbers per transport:
+//! Two numbers per cell:
 //!
 //! * **conns/sec** — connect → ping → close churn, the accept path's
-//!   cost (thread spawn per socket vs slab slot + epoll registration);
+//!   cost (thread spawn per socket vs slab slot + epoll registration,
+//!   single accept loop vs `SO_REUSEPORT` shards);
 //! * **GB/s** — verified encode traffic over a held set of persistent
 //!   connections (payload + response bytes over the wire), the
 //!   many-streams-one-fast-kernel regime the transport exists to feed.
+//!   The 64 KiB+ payloads cross the router's direct threshold, so the
+//!   zero-copy rows exercise the engine-direct path (NT stores into
+//!   the socket buffer); the copy rows serialize replies through
+//!   `Vec`s — the delta is the reply path's cost.
 //!
 //! `--test` (CI smoke): small counts and sub-second windows, checking
 //! that every cell runs and every response matches the oracle.
@@ -22,7 +28,12 @@ use b64simd::coordinator::{Router, RouterConfig};
 use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
 use b64simd::workload::random_bytes;
 
-fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Router>) {
+fn start(
+    transport: Transport,
+    max_connections: usize,
+    reactors: usize,
+    zero_copy: bool,
+) -> (ServerHandle, Arc<Router>) {
     let router = Arc::new(Router::new(native_factory(), RouterConfig::default()));
     let handle = serve(
         router.clone(),
@@ -30,6 +41,8 @@ fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Rou
             addr: "127.0.0.1:0".parse().unwrap(),
             max_connections,
             transport,
+            reactors,
+            zero_copy,
             ..Default::default()
         },
     )
@@ -125,6 +138,9 @@ fn main() {
     };
     let payloads: &[usize] =
         if smoke { &[1 << 10, 64 << 10] } else { &[1 << 10, 64 << 10, 1 << 20] };
+    // Reactor shards: 1 vs N (the cores the host offers, capped so the
+    // CI smoke stays cheap).
+    let many = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 4);
 
     #[cfg(target_os = "linux")]
     {
@@ -136,18 +152,38 @@ fn main() {
         window.as_secs_f64()
     );
     println!(
-        "{:<10}{:>12}{:>12}{:>12}{:>12}",
-        "transport", "payload", "conns/sec", "req/s", "GB/s"
+        "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12}{:>12}",
+        "transport", "reactors", "reply", "payload", "conns/sec", "req/s", "GB/s"
     );
-    for transport in [Transport::Epoll, Transport::Threaded] {
-        let (handle, router) = start(transport, conns * 2 + 64);
+    // Cells: threaded (reference), then epoll over reactors × reply path.
+    let mut cells: Vec<(Transport, usize, bool)> = vec![(Transport::Threaded, 1, false)];
+    for &reactors in &[1usize, many] {
+        for &zero_copy in &[true, false] {
+            cells.push((Transport::Epoll, reactors, zero_copy));
+        }
+    }
+    for (transport, reactors, zero_copy) in cells {
+        let reply =
+            if zero_copy && transport == Transport::Epoll { "zerocopy" } else { "vec" };
+        let (handle, router) = start(transport, conns * 2 + 64, reactors, zero_copy);
         let rate = churn(handle.addr, threads, window);
-        println!("{:<10}{:>12}{:>12.0}{:>12}{:>12}", transport.name(), "-", rate, "-", "-");
+        println!(
+            "{:<10}{:>9}{:>10}{:>12}{:>12.0}{:>12}{:>12}",
+            transport.name(),
+            reactors,
+            reply,
+            "-",
+            rate,
+            "-",
+            "-"
+        );
         for &p in payloads {
             let (rps, gbps) = throughput(handle.addr, conns, threads, p, window);
             println!(
-                "{:<10}{:>12}{:>12}{:>12.0}{:>12.3}",
+                "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12.0}{:>12.3}",
                 transport.name(),
+                reactors,
+                reply,
                 p,
                 "-",
                 rps,

@@ -9,7 +9,8 @@
 //! ```text
 //! cargo run --release --example loadgen -- \
 //!     --connections 1000 --seconds 2 [--payload 1024] [--threads 8] \
-//!     [--transport epoll|threaded] [--addr HOST:PORT]
+//!     [--transport epoll|threaded] [--reactors N] [--zerocopy 0|1] \
+//!     [--addr HOST:PORT]
 //! ```
 //!
 //! Without `--addr`, an in-process server is started on the chosen
@@ -50,6 +51,16 @@ fn main() {
         Some(v) => Transport::parse(&v).expect("--transport epoll|threaded"),
         None => Transport::from_env(),
     };
+    // Reactor shards / reply path: flags override the env-driven
+    // defaults (B64SIMD_REACTORS / B64SIMD_ZEROCOPY).
+    let defaults = ServerConfig::default();
+    let reactors: usize = flag(&args, "--reactors")
+        .map(|v| v.parse().expect("--reactors"))
+        .unwrap_or(defaults.reactors)
+        .max(1);
+    let zero_copy: bool = flag(&args, "--zerocopy")
+        .map(|v| ServerConfig::parse_switch(&v).expect("--zerocopy 0|1"))
+        .unwrap_or(defaults.zero_copy);
 
     // Client + (in-process) server sockets both live in this process;
     // the common 1024-fd soft limit dies long before 1000 connections.
@@ -76,6 +87,8 @@ fn main() {
                     addr: "127.0.0.1:0".parse().unwrap(),
                     max_connections: connections + 16,
                     transport,
+                    reactors,
+                    zero_copy,
                     ..Default::default()
                 },
             )
@@ -90,8 +103,9 @@ fn main() {
     let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
 
     println!(
-        "loadgen: {connections} connections x {threads} client threads, {payload_len}B payloads, transport={}, target={addr}",
-        transport.name()
+        "loadgen: {connections} connections x {threads} client threads, {payload_len}B payloads, transport={} reactors={reactors} reply={}, target={addr}",
+        transport.name(),
+        if zero_copy { "zerocopy" } else { "vec" },
     );
 
     // Phase 1: open every connection and hold it.

@@ -103,6 +103,7 @@ impl Alphabet {
         }
     }
 
+    /// The alphabet's registry name (`"standard"`, `"url"`, `"imap"`).
     pub fn name(&self) -> &'static str {
         self.name
     }
@@ -122,7 +123,8 @@ impl Alphabet {
         &self.encode
     }
 
-    /// char -> value table (128 entries, [`INVALID`] elsewhere) — the
+    /// char -> value table (128 entries, [`INVALID`](super::tables::INVALID)
+    /// elsewhere) — the
     /// decoder's `vpermi2b` register pair.
     pub fn decode_table(&self) -> &DecodeTable {
         &self.decode

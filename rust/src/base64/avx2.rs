@@ -97,6 +97,7 @@ impl Avx2Codec {
         Self::with_mode(alphabet, Mode::Strict)
     }
 
+    /// [`Self::new`] with an explicit strictness mode.
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         assert!(Self::available(), "AVX2 not available on this CPU");
         assert!(Self::supports(&alphabet), "alphabet lacks the 2018 range structure");
@@ -151,6 +152,7 @@ impl Avx2Codec {
         }
     }
 
+    /// The alphabet this codec was built for.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }

@@ -58,6 +58,7 @@ impl Avx512Codec {
         Self::with_mode(alphabet, Mode::Strict)
     }
 
+    /// [`Self::new`] with an explicit strictness mode.
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         assert!(Self::available(), "AVX-512 VBMI not available on this CPU");
         Self {
@@ -67,6 +68,7 @@ impl Avx512Codec {
         }
     }
 
+    /// The alphabet this codec was built for.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }
@@ -90,6 +92,8 @@ impl Avx512Codec {
 #[cfg(target_arch = "x86_64")]
 pub use kernels as raw;
 
+/// The raw AVX-512 intrinsic kernels (shared with the engine's
+/// dispatch tables and the NT-store line copies).
 #[cfg(target_arch = "x86_64")]
 pub mod kernels {
     use super::*;

@@ -50,10 +50,12 @@ pub struct BlockCodec {
 }
 
 impl BlockCodec {
+    /// Strict-mode codec for an alphabet.
     pub fn new(alphabet: Alphabet) -> Self {
         Self::with_mode(alphabet, Mode::Strict)
     }
 
+    /// [`Self::new`] with an explicit strictness mode.
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         let mut dtable256 = [0x80u8; 256];
         let half = alphabet.decode_table().as_bytes();
@@ -61,6 +63,7 @@ impl BlockCodec {
         Self { alphabet, mode, dtable256 }
     }
 
+    /// The alphabet this codec was built for.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }
@@ -161,7 +164,7 @@ impl BlockCodec {
 
     /// Encode all whole 48-byte blocks of `input`, appending to `out` and
     /// returning the number of raw bytes consumed (Vec wrapper over
-    /// [`Self::encode_bulk`]).
+    /// the crate-internal `encode_bulk` slice core).
     pub fn encode_full_blocks(&self, input: &[u8], out: &mut Vec<u8>) -> usize {
         let start = out.len();
         let blocks = input.len() / RAW_BLOCK;
@@ -170,7 +173,8 @@ impl BlockCodec {
     }
 
     /// Decode all whole 64-char blocks, appending to `out` (Vec wrapper
-    /// over [`Self::decode_bulk`]; `out` is restored on error).
+    /// over the crate-internal `decode_bulk` slice core; `out` is
+    /// restored on error).
     pub fn decode_full_blocks(
         &self,
         input: &[u8],

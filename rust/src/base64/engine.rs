@@ -331,10 +331,12 @@ impl Engine {
         self.policy = policy;
     }
 
+    /// The alphabet this engine encodes/decodes.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }
 
+    /// The strictness mode decode applies.
     pub fn mode(&self) -> Mode {
         self.mode
     }

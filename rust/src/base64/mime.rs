@@ -25,6 +25,7 @@ pub struct MimeCodec {
 }
 
 impl MimeCodec {
+    /// RFC 2045 codec: 76-char lines, CRLF skipped on decode.
     pub fn new(alphabet: Alphabet) -> Self {
         Self {
             inner: Engine::with_mode(alphabet, Mode::Strict),
@@ -33,6 +34,7 @@ impl MimeCodec {
         }
     }
 
+    /// Override the wrap line length (positive multiple of 4).
     pub fn with_line_len(mut self, line_len: usize) -> Self {
         assert!(line_len >= 4 && line_len % 4 == 0, "line length must be a positive multiple of 4");
         self.line_len = line_len;

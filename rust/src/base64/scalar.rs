@@ -37,14 +37,17 @@ pub struct ScalarCodec {
 }
 
 impl ScalarCodec {
+    /// Strict-mode codec for an alphabet.
     pub fn new(alphabet: Alphabet) -> Self {
         Self { alphabet, mode: Mode::Strict }
     }
 
+    /// [`Self::new`] with an explicit strictness mode.
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         Self { alphabet, mode }
     }
 
+    /// The alphabet this codec was built for.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }

@@ -42,7 +42,7 @@
 //! *valid* for the 64-byte forms — when they hit **full, cache-line-
 //! aligned lines**: a partial-line streaming write forces the line into
 //! the write-combining buffer twice and `_mm512_stream_si512` requires a
-//! 64-byte-aligned address outright. [`copy_for`]'s kernels therefore
+//! 64-byte-aligned address outright. `copy_for`'s kernels therefore
 //! peel the copy into three phases:
 //!
 //! 1. **head** — plain stores up to the first 64-byte-aligned destination
@@ -63,7 +63,7 @@
 //! only after an `sfence`. The rule in this crate is **whoever issues NT
 //! stores fences once at kernel exit, on the issuing thread**:
 //!
-//! * the line-copy kernels behind [`copy_for`] never fence — they are
+//! * the line-copy kernels behind `copy_for` never fence — they are
 //!   called once per staged batch and a fence per batch would serialize
 //!   the write-combining buffers;
 //! * every NT-mode engine entry point (`encode_slice_nt`,
@@ -240,7 +240,7 @@ fn copy_nt_avx2(dst: &mut [u8], src: &[u8]) {
 /// supports (plain copy where there is none), then [`fence`]. This is
 /// the standalone "NT memcpy" used by `benches/nt_stores.rs` to measure
 /// the store path in isolation; engine code uses the per-tier
-/// [`copy_for`] kernels and fences once per call instead.
+/// `copy_for` kernels and fences once per call instead.
 pub fn nt_memcpy(dst: &mut [u8], src: &[u8]) {
     assert_eq!(dst.len(), src.len(), "nt_memcpy requires equal lengths");
     (best_copy())(dst, src);

@@ -71,6 +71,7 @@ pub struct StreamingEncoder {
 }
 
 impl StreamingEncoder {
+    /// Flat (unwrapped) encoder at the host's best tier.
     pub fn new(alphabet: Alphabet) -> Self {
         Self::from_engine(Engine::new(alphabet))
     }
@@ -217,10 +218,12 @@ pub struct StreamingDecoder {
 }
 
 impl StreamingDecoder {
+    /// Strict decoder at the host's best tier, no whitespace skipping.
     pub fn new(alphabet: Alphabet) -> Self {
         Self::with_policy(alphabet, Mode::Strict, Whitespace::None)
     }
 
+    /// [`Self::new`] with an explicit strictness mode.
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         Self::with_policy(alphabet, mode, Whitespace::None)
     }

@@ -111,10 +111,13 @@ pub struct SwarCodec {
 }
 
 impl SwarCodec {
+    /// Strict-mode codec for an alphabet.
     pub fn new(alphabet: Alphabet) -> Self {
         Self::with_mode(alphabet, Mode::Strict)
     }
 
+    /// [`Self::new`] with an explicit strictness mode (tables built
+    /// once per codec).
     pub fn with_mode(alphabet: Alphabet, mode: Mode) -> Self {
         let chars = alphabet.chars();
         let mut e0 = [0u8; 256];
@@ -139,6 +142,7 @@ impl SwarCodec {
         Self { alphabet, mode, e0, e1, d0, d1, d2, d3 }
     }
 
+    /// The alphabet this codec was built for.
     pub fn alphabet(&self) -> &Alphabet {
         &self.alphabet
     }

@@ -10,6 +10,7 @@ pub const INVALID: u8 = 0x80;
 pub struct EncodeTable([u8; 64]);
 
 impl EncodeTable {
+    /// Table over the 64 alphabet characters.
     pub fn new(chars: &[u8; 64]) -> Self {
         Self(*chars)
     }
@@ -34,6 +35,7 @@ impl EncodeTable {
 pub struct DecodeTable([u8; 128]);
 
 impl DecodeTable {
+    /// Inverse table of the 64 alphabet characters.
     pub fn new(chars: &[u8; 64]) -> Self {
         let mut t = [INVALID; 128];
         for (value, &c) in chars.iter().enumerate() {

@@ -46,6 +46,7 @@ pub struct Permit {
 }
 
 impl Gate {
+    /// A gate admitting up to `max_requests` / `max_bytes` in flight.
     pub fn new(max_requests: u64, max_bytes: u64) -> Arc<Self> {
         Arc::new(Self {
             max_requests,
@@ -71,6 +72,7 @@ impl Gate {
         Ok(Permit { gate: self.clone(), bytes })
     }
 
+    /// Currently admitted (requests, bytes).
     pub fn in_flight(&self) -> (u64, u64) {
         (self.requests.load(Ordering::Acquire), self.bytes.load(Ordering::Acquire))
     }
@@ -99,6 +101,7 @@ pub struct ConnPermit {
 }
 
 impl ConnLimiter {
+    /// A limiter admitting up to `max` concurrent connections.
     pub fn new(max: usize) -> Arc<Self> {
         Arc::new(Self { max: max as u64, open: AtomicU64::new(0) })
     }
@@ -113,10 +116,12 @@ impl ConnLimiter {
         Some(ConnPermit { limiter: self.clone() })
     }
 
+    /// Connections currently holding a slot.
     pub fn open(&self) -> u64 {
         self.open.load(Ordering::Acquire)
     }
 
+    /// The configured cap.
     pub fn max(&self) -> u64 {
         self.max
     }

@@ -12,6 +12,14 @@
 //! The coalescing core ([`PendingSet`]) is synchronous and fully unit
 //! tested; [`run_batcher`] is the thread driver used by the
 //! [`crate::coordinator::Scheduler`].
+//!
+//! Batching interacts with the reply paths upstream: the router's
+//! zero-copy sink path still submits mid-size payloads here (their
+//! whole blocks coalesce across connections; the batch head is copied
+//! into the reply frame exactly once), but payloads of at least one
+//! full batch (`max_rows` rows) bypass the batcher entirely — they
+//! would flush a batch alone, so the router hands them to the engine's
+//! slice kernels, which write the socket-bound buffer directly.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -23,7 +31,9 @@ use crate::base64::{B64_BLOCK, RAW_BLOCK};
 /// Which direction a work item runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Direction {
+    /// Raw bytes -> base64 characters.
     Encode,
+    /// Base64 characters -> raw bytes.
     Decode,
 }
 
@@ -48,8 +58,11 @@ pub struct BatchResult {
 
 /// One block-aligned unit of work (whole blocks only).
 pub struct WorkItem {
+    /// Whole-block input bytes.
     pub payload: Vec<u8>,
+    /// Where the executed result is delivered.
     pub reply: mpsc::Sender<anyhow::Result<BatchResult>>,
+    /// Submission time (drives the linger deadline).
     pub enqueued: Instant,
 }
 
@@ -57,7 +70,9 @@ pub struct WorkItem {
 /// different base64 variants must not share a launch.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct GroupKey {
+    /// Encode or decode.
     pub direction: Direction,
+    /// The lookup table (encode: 64 chars, decode: 128 entries).
     pub table: Vec<u8>,
 }
 
@@ -84,6 +99,7 @@ pub struct PendingSet {
 }
 
 impl PendingSet {
+    /// An empty pending set with the given flush tuning.
     pub fn new(config: BatcherConfig) -> Self {
         Self { config, groups: HashMap::new() }
     }
@@ -138,6 +154,7 @@ impl PendingSet {
         self.groups.drain().collect()
     }
 
+    /// Whether no group has pending work.
     pub fn is_empty(&self) -> bool {
         self.groups.is_empty()
     }
@@ -220,13 +237,17 @@ pub fn execute_group(
 
 /// Per-flush statistics for metrics.
 pub struct BatchStats {
+    /// Executable launches performed (always 1 per group).
     pub launches: u64,
+    /// Input rows executed.
     pub rows: usize,
+    /// Whether the backend succeeded.
     pub ok: bool,
 }
 
 /// Messages into the batcher thread.
 pub enum BatcherMsg {
+    /// Coalesce this item into its group.
     Submit(GroupKey, WorkItem),
     /// Flush everything now (tests, shutdown barriers).
     Flush,

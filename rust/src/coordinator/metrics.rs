@@ -1,6 +1,8 @@
-//! Service metrics: lock-free counters and a log2 latency histogram.
+//! Service metrics: lock-free counters, a log2 latency histogram, and
+//! per-reactor-shard transport counters rolled up into the global set.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Number of log2 latency buckets (1 µs .. ~1 h).
@@ -15,6 +17,7 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().min(u64::MAX as u128) as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
@@ -23,10 +26,12 @@ impl LatencyHistogram {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in microseconds (0 with no samples).
     pub fn mean_us(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -53,14 +58,38 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-reactor-shard transport counters. Each epoll readiness loop
+/// registers one of these at spawn ([`Metrics::register_shard`]) and
+/// feeds it alongside the global counters — the global set stays the
+/// roll-up across shards, these give the per-shard breakdown shown at
+/// the end of [`Metrics::report`] (load spread across `SO_REUSEPORT`
+/// listeners, per-shard open-connection gauges).
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Connections this shard's listener accepted.
+    pub conns_accepted: AtomicU64,
+    /// Connections currently open on this shard (gauge).
+    pub conns_open: AtomicU64,
+    /// Request frames this shard parsed off its sockets.
+    pub frames_in: AtomicU64,
+    /// Response frames this shard queued to its sockets.
+    pub frames_out: AtomicU64,
+}
+
 /// All coordinator counters. Cheap to share behind an `Arc`.
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests admitted for processing.
     pub requests: AtomicU64,
+    /// Successful responses (data or valid).
     pub responses: AtomicU64,
+    /// Failed requests (invalid input or backend failure).
     pub errors: AtomicU64,
+    /// Requests load-shed at admission.
     pub rejected: AtomicU64,
+    /// Payload bytes received in requests.
     pub bytes_in: AtomicU64,
+    /// Payload bytes returned in responses.
     pub bytes_out: AtomicU64,
     /// Executable launches (batches dispatched to PJRT).
     pub batches: AtomicU64,
@@ -71,6 +100,10 @@ pub struct Metrics {
     /// Requests served entirely by the Rust block codec (below threshold
     /// or runtime-less configuration).
     pub inline_requests: AtomicU64,
+    /// Requests served by the engine-direct zero-copy path (at least
+    /// one full batch of blocks, or a fused whitespace decode).
+    pub direct_requests: AtomicU64,
+    /// Log2 latency histogram over request wall-clock times.
     pub latency: LatencyHistogram,
     // -- transport counters (filled by `crate::server` / `crate::net`) --
     /// Connections admitted (both transports).
@@ -87,11 +120,40 @@ pub struct Metrics {
     pub net_bytes_in: AtomicU64,
     /// Raw bytes written to sockets.
     pub net_bytes_out: AtomicU64,
+    /// Per-shard breakdown (epoll reactors; empty on the threaded
+    /// transport). See [`ShardMetrics`].
+    shards: Mutex<Vec<Arc<ShardMetrics>>>,
 }
 
 impl Metrics {
+    /// Relaxed counter increment (the only ordering metrics need).
     pub fn inc(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Register a reactor shard and get its counter block. Called once
+    /// per epoll loop at spawn; the shard feeds both its own block and
+    /// the global counters, so the globals remain the roll-up.
+    pub fn register_shard(&self) -> Arc<ShardMetrics> {
+        let shard = Arc::new(ShardMetrics::default());
+        self.shards.lock().unwrap().push(shard.clone());
+        shard
+    }
+
+    /// Snapshot of the registered shards (empty for the threaded
+    /// transport or before the loops spawn).
+    pub fn shards(&self) -> Vec<Arc<ShardMetrics>> {
+        self.shards.lock().unwrap().clone()
+    }
+
+    /// Drop every registered shard block. The epoll transport calls
+    /// this at spawn, so a router re-served after a shutdown starts a
+    /// fresh breakdown instead of accumulating dead shards (the global
+    /// counters, being cumulative roll-ups, are kept). With two
+    /// concurrent epoll servers sharing one router, the breakdown
+    /// reflects the most recently spawned one.
+    pub fn reset_shards(&self) {
+        self.shards.lock().unwrap().clear();
     }
 
     /// Padding efficiency: real rows / dispatched rows.
@@ -109,10 +171,11 @@ impl Metrics {
         counter.fetch_sub(v, Ordering::Relaxed);
     }
 
-    /// One-line human-readable snapshot.
+    /// One-line human-readable snapshot. Sharded transports append a
+    /// per-shard `accepted/open/frames-in/frames-out` breakdown.
     pub fn report(&self) -> String {
-        format!(
-            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B p50={}us p99={}us mean={:.0}us",
+        let mut line = format!(
+            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} direct={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B p50={}us p99={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -124,6 +187,7 @@ impl Metrics {
             self.padded_rows.load(Ordering::Relaxed),
             self.batch_efficiency() * 100.0,
             self.inline_requests.load(Ordering::Relaxed),
+            self.direct_requests.load(Ordering::Relaxed),
             self.conns_accepted.load(Ordering::Relaxed),
             self.conns_refused.load(Ordering::Relaxed),
             self.conns_open.load(Ordering::Relaxed),
@@ -134,7 +198,26 @@ impl Metrics {
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.latency.mean_us(),
-        )
+        );
+        let shards = self.shards.lock().unwrap();
+        if !shards.is_empty() {
+            line.push_str(" shards=[");
+            for (i, s) in shards.iter().enumerate() {
+                if i > 0 {
+                    line.push(' ');
+                }
+                line.push_str(&format!(
+                    "{}:{}acc/{}open/{}in/{}out",
+                    i,
+                    s.conns_accepted.load(Ordering::Relaxed),
+                    s.conns_open.load(Ordering::Relaxed),
+                    s.frames_in.load(Ordering::Relaxed),
+                    s.frames_out.load(Ordering::Relaxed),
+                ));
+            }
+            line.push(']');
+        }
+        line
     }
 }
 
@@ -179,5 +262,29 @@ mod tests {
         Metrics::inc(&m.conns_open, 2);
         Metrics::dec(&m.conns_open, 1);
         assert!(m.report().contains("conns=2acc/0ref/1open"), "{}", m.report());
+    }
+
+    #[test]
+    fn shard_breakdown_in_report() {
+        let m = Metrics::default();
+        assert!(!m.report().contains("shards="), "no shards registered yet");
+        let s0 = m.register_shard();
+        let s1 = m.register_shard();
+        Metrics::inc(&s0.conns_accepted, 3);
+        Metrics::inc(&s0.frames_in, 7);
+        Metrics::inc(&s1.conns_accepted, 2);
+        Metrics::inc(&s1.conns_open, 1);
+        let report = m.report();
+        assert!(
+            report.contains("shards=[0:3acc/0open/7in/0out 1:2acc/1open/0in/0out]"),
+            "{report}"
+        );
+        assert_eq!(m.shards().len(), 2);
+        // The globals remain the roll-up: callers feed both levels, so
+        // the sum over shards matches what the shard loops also pushed
+        // into the global counters.
+        let total: u64 =
+            m.shards().iter().map(|s| s.conns_accepted.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 5);
     }
 }

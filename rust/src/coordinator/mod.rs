@@ -7,14 +7,19 @@
 //!                            └─► rust block codec (inline) ◄───┘ results
 //! ```
 //!
-//! * [`backpressure`] — admission control (bounded in-flight bytes/reqs);
-//! * [`router`] — per-request orchestration: inline vs batched path,
-//!   deferred-error resolution, response assembly;
+//! * [`backpressure`] — admission control (bounded in-flight bytes/reqs
+//!   and the cross-shard connection cap);
+//! * [`router`] — per-request orchestration: inline vs batched vs
+//!   engine-direct path, deferred-error resolution, response assembly —
+//!   as a `Vec` ([`Router::process`]) or written straight into a
+//!   transport reply frame ([`Router::process_into`], the zero-copy
+//!   path);
 //! * [`batcher`] — coalesce block work across requests per (direction,
 //!   table) group; size- and deadline-triggered flushes;
 //! * [`scheduler`] — coalescing leader thread + backend worker pool;
 //! * [`state`] — chunked-stream session state (carry bytes);
-//! * [`metrics`] — counters/histograms surfaced by the CLI and server;
+//! * [`metrics`] — counters/histograms surfaced by the CLI and server,
+//!   with per-reactor-shard breakdowns rolled up into the global set;
 //! * [`backend`] — where blocks execute: PJRT executables or in-process
 //!   Rust (the paper's algorithm either way).
 
@@ -28,6 +33,6 @@ pub mod state;
 
 pub use backend::{BlockBackend, RustBackend};
 pub use batcher::{BatcherConfig, Direction};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ShardMetrics};
 pub use router::{Outcome, Request, RequestKind, Response, Router, RouterConfig};
 pub use scheduler::{Scheduler, SchedulerConfig};

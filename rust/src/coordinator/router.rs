@@ -12,9 +12,24 @@
 //! * decode errors follow the paper's deferred model: per-row flags come
 //!   back with the batch; only on failure is the row re-scanned for the
 //!   exact offending byte.
+//!
+//! Two reply paths share this routing. [`Router::process`] materializes
+//! the output as a `Vec` (the reference path, used by the CLI, the
+//! threaded transport and direct API callers). [`Router::process_into`]
+//! writes the complete reply *frame* into a
+//! [`crate::net::frame::ReplySink`] instead — header reserved, payload
+//! written in place by the engine's `_policy` slice kernels, length
+//! prefix backfilled — so the epoll transport's replies are never
+//! serialized through an intermediate `Vec`. Payloads at or above one
+//! full batch ([`RouterConfig::scheduler`]'s `max_rows`) skip the
+//! batcher on that path: they would flush a batch alone anyway, and
+//! going engine-direct lets non-temporal stores target the socket
+//! buffer itself. Both paths produce byte-identical frames (pinned by
+//! the router's parity tests and `rust/tests/transport.rs`).
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use super::backend::BackendFactory;
@@ -22,13 +37,22 @@ use super::backpressure::{Gate, Rejected};
 use super::batcher::{BatchResult, Direction, GroupKey, WorkItem};
 use super::metrics::Metrics;
 use super::scheduler::{Scheduler, SchedulerConfig};
-use crate::base64::validate::{decode_quads_into, decode_tail, first_invalid, split_tail};
-use crate::base64::{Alphabet, Codec, DecodeError, Mode, Whitespace, B64_BLOCK, RAW_BLOCK};
+use crate::base64::validate::{
+    decode_quads_into, decode_tail, decode_tail_into, first_invalid, split_tail,
+};
+use crate::base64::{
+    decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, Whitespace,
+    B64_BLOCK, RAW_BLOCK,
+};
+use crate::net::frame::ReplySink;
+use crate::server::proto::ProtoError;
 
 /// What the caller wants done.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestKind {
+    /// Raw bytes → base64 characters.
     Encode,
+    /// Base64 characters → raw bytes.
     Decode,
     /// Decode-side validation without materializing output.
     Validate,
@@ -36,10 +60,15 @@ pub enum RequestKind {
 
 /// One codec request.
 pub struct Request {
+    /// Caller-chosen id, echoed in the [`Response`].
     pub id: u64,
+    /// Operation to run.
     pub kind: RequestKind,
+    /// Input bytes (raw for encode, base64 characters otherwise).
     pub payload: Vec<u8>,
+    /// Base64 variant.
     pub alphabet: Alphabet,
+    /// Padding strictness for the decode side.
     pub mode: Mode,
     /// Whitespace the decode path skips (one-shot MIME bodies); ignored
     /// by encode requests. Error offsets always index the *original*
@@ -48,6 +77,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A standard-alphabet strict encode request.
     pub fn encode(id: u64, payload: Vec<u8>) -> Self {
         Self {
             id,
@@ -59,6 +89,7 @@ impl Request {
         }
     }
 
+    /// A standard-alphabet strict decode request.
     pub fn decode(id: u64, payload: Vec<u8>) -> Self {
         Self {
             id,
@@ -79,10 +110,13 @@ impl Request {
 /// Request outcome.
 #[derive(Debug)]
 pub enum Outcome {
+    /// Success, with the output bytes.
     Data(Vec<u8>),
     /// Validate requests answer with OK/error only.
     Valid,
+    /// The payload is not valid base64 (offset/byte inside).
     Invalid(DecodeError),
+    /// Load-shed at admission; nothing executed.
     Rejected(Rejected),
     /// Backend failure (e.g. PJRT launch error).
     Internal(String),
@@ -91,18 +125,40 @@ pub enum Outcome {
 /// Response with timing.
 #[derive(Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
+    /// What happened.
     pub outcome: Outcome,
+    /// Wall-clock time from admission to outcome.
     pub elapsed: std::time::Duration,
+}
+
+/// What a sink-path request produced (the metric mirror of [`Outcome`]).
+enum SinkReply {
+    /// A data frame carrying this many payload bytes.
+    Data(usize),
+    /// A validate request's empty data frame.
+    Valid,
+    /// An error frame (invalid input or backend failure).
+    Error,
+}
+
+/// Failure discovered while a sink-path frame was still open.
+enum SinkFail {
+    Invalid(DecodeError),
+    Internal(String),
 }
 
 /// Router/coordinator tuning.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
+    /// Batcher + backend worker pool tuning.
     pub scheduler: SchedulerConfig,
     /// Payloads strictly below this many bytes bypass the batcher.
     pub inline_threshold: usize,
+    /// Admission cap: concurrent in-flight requests.
     pub max_inflight_requests: u64,
+    /// Admission cap: concurrent in-flight payload bytes.
     pub max_inflight_bytes: u64,
 }
 
@@ -123,18 +179,51 @@ pub struct Router {
     gate: Arc<Gate>,
     metrics: Arc<Metrics>,
     inline_threshold: usize,
+    /// Payloads at or above this many bytes take the engine-direct path
+    /// on [`Router::process_into`]: one full batch's worth of blocks
+    /// (`max_rows * B64_BLOCK`) — a payload that large flushes a batch
+    /// alone, so coalescing buys nothing and skipping the batcher saves
+    /// the input and output copies.
+    direct_threshold: usize,
+    /// Memoized engines for the zero-copy path, keyed by the alphabet's
+    /// *table contents* (not its name — `Alphabet::new` allows distinct
+    /// tables under one name) plus the mode. Construction builds lookup
+    /// tables; the handful of wire alphabets × two modes makes this a
+    /// tiny map.
+    engines: Mutex<HashMap<([u8; 64], u8, bool), Arc<Engine>>>,
 }
 
 impl Router {
+    /// Build a router over a backend factory (spawns the scheduler's
+    /// leader + worker threads).
     pub fn new(factory: BackendFactory, config: RouterConfig) -> Self {
         let metrics = Arc::new(Metrics::default());
+        let direct_threshold = config.scheduler.batcher.max_rows * B64_BLOCK;
         let scheduler = Scheduler::new(factory, config.scheduler, metrics.clone());
         let gate = Gate::new(config.max_inflight_requests, config.max_inflight_bytes);
-        Self { scheduler, gate, metrics, inline_threshold: config.inline_threshold }
+        Self {
+            scheduler,
+            gate,
+            metrics,
+            inline_threshold: config.inline_threshold,
+            direct_threshold,
+            engines: Mutex::new(HashMap::new()),
+        }
     }
 
+    /// The router's shared metrics (also fed by the transports).
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// Memoized tier-dispatched engine for (alphabet tables, mode).
+    fn engine_for(&self, alphabet: &Alphabet, mode: Mode) -> Arc<Engine> {
+        let key =
+            (*alphabet.encode_table().as_bytes(), alphabet.pad(), matches!(mode, Mode::Forgiving));
+        let mut map = self.engines.lock().unwrap();
+        map.entry(key)
+            .or_insert_with(|| Arc::new(Engine::with_mode(alphabet.clone(), mode)))
+            .clone()
     }
 
     /// Force pending batches out (benchmarks, shutdown).
@@ -175,6 +264,242 @@ impl Router {
             Outcome::Internal(_) => Metrics::inc(&self.metrics.errors, 1),
         }
         Response { id: request.id, outcome, elapsed }
+    }
+
+    /// [`Self::process`], but writing the complete reply frame — length
+    /// prefix, tag, id and payload — straight into `sink` (the
+    /// zero-copy reply path). Admission, routing, metrics and error
+    /// text are identical to the `Vec` path; the produced frame is
+    /// byte-identical to serializing [`Self::process`]'s reply. The one
+    /// accounting divergence is the unframeable (> `MAX_FRAME`) reply:
+    /// both paths close the connection, but this path tallies it as an
+    /// error, while the `Vec` path counted a response before
+    /// `to_frame_bytes` failed in the transport. Payload
+    /// bytes are written in place by the codec kernels: small requests
+    /// through the inline block codec, mid-size requests through the
+    /// batcher (batch head copied in once, tail decoded in place while
+    /// the batch is in flight), and ≥ one-full-batch requests through
+    /// the engine's `_policy` entry points, whose non-temporal stores
+    /// then target the socket-bound buffer directly.
+    ///
+    /// `Err` means the reply could not be framed (oversized) — fatal
+    /// for the connection, exactly like `to_frame_bytes` failing on the
+    /// `Vec` path.
+    pub fn process_into(&self, request: Request, sink: &mut ReplySink) -> Result<(), ProtoError> {
+        let start = Instant::now();
+        Metrics::inc(&self.metrics.requests, 1);
+        Metrics::inc(&self.metrics.bytes_in, request.payload.len() as u64);
+        let permit = match self.gate.try_acquire(request.payload.len() as u64) {
+            Ok(p) => p,
+            Err(r) => {
+                Metrics::inc(&self.metrics.rejected, 1);
+                return sink.push_error(request.id, &r.to_string());
+            }
+        };
+        let reply = match request.kind {
+            RequestKind::Encode => self.encode_into(&request, sink),
+            RequestKind::Decode => self.decode_into(&request, sink, false),
+            RequestKind::Validate => self.decode_into(&request, sink, true),
+        };
+        let reply = match reply {
+            Ok(r) => r,
+            Err(e) => {
+                // Unframeable reply (> MAX_FRAME): fatal for the
+                // connection; count the request as failed before
+                // propagating.
+                Metrics::inc(&self.metrics.errors, 1);
+                self.metrics.latency.record(start.elapsed());
+                return Err(e);
+            }
+        };
+        drop(permit);
+        let elapsed = start.elapsed();
+        self.metrics.latency.record(elapsed);
+        match reply {
+            SinkReply::Data(n) => {
+                Metrics::inc(&self.metrics.responses, 1);
+                Metrics::inc(&self.metrics.bytes_out, n as u64);
+            }
+            SinkReply::Valid => Metrics::inc(&self.metrics.responses, 1),
+            SinkReply::Error => Metrics::inc(&self.metrics.errors, 1),
+        }
+        Ok(())
+    }
+
+    /// Sink-path encode (see [`Self::process_into`] for the routing).
+    fn encode_into(&self, req: &Request, sink: &mut ReplySink) -> Result<SinkReply, ProtoError> {
+        let payload = &req.payload;
+        let total = encoded_len(payload.len());
+        sink.begin_data_frame(req.id);
+        if payload.len() < self.inline_threshold {
+            Metrics::inc(&self.metrics.inline_requests, 1);
+            let codec = crate::base64::block::BlockCodec::new(req.alphabet.clone());
+            codec.encode_slice(payload, sink.grow(total));
+            sink.end_frame()?;
+            return Ok(SinkReply::Data(total));
+        }
+        if payload.len() >= self.direct_threshold {
+            Metrics::inc(&self.metrics.direct_requests, 1);
+            let engine = self.engine_for(&req.alphabet, Mode::Strict);
+            engine.encode_slice_policy(payload, sink.grow(total), engine.policy());
+            sink.end_frame()?;
+            return Ok(SinkReply::Data(total));
+        }
+        // Batched middle: whole blocks coalesce across requests; the
+        // scalar tail encodes in place while the batch is in flight.
+        let blocks_len = payload.len() / RAW_BLOCK * RAW_BLOCK;
+        let rx = self.submit_blocks(
+            Direction::Encode,
+            req.alphabet.encode_table().as_bytes().to_vec(),
+            payload[..blocks_len].to_vec(),
+        );
+        let head = blocks_len / 3 * 4;
+        let out = sink.grow(total);
+        crate::base64::block::BlockCodec::new(req.alphabet.clone())
+            .encode_slice(&payload[blocks_len..], &mut out[head..]);
+        match rx.recv().expect("scheduler always answers") {
+            Ok(batch) => {
+                out[..head].copy_from_slice(&batch.data);
+                sink.end_frame()?;
+                Ok(SinkReply::Data(total))
+            }
+            Err(e) => {
+                sink.rollback_frame();
+                sink.push_error(req.id, &e.to_string())?;
+                Ok(SinkReply::Error)
+            }
+        }
+    }
+
+    /// Sink-path decode/validate: open a data frame, decode into it,
+    /// then commit (trimmed to the bytes written — validate keeps
+    /// none), or erase it and write the error frame instead.
+    fn decode_into(
+        &self,
+        req: &Request,
+        sink: &mut ReplySink,
+        validate_only: bool,
+    ) -> Result<SinkReply, ProtoError> {
+        sink.begin_data_frame(req.id);
+        let data_start = sink.mark();
+        match self.decode_payload_into(req, sink) {
+            Ok(written) => {
+                let keep = if validate_only { 0 } else { written };
+                sink.truncate_to(data_start + keep);
+                sink.end_frame()?;
+                Ok(if validate_only { SinkReply::Valid } else { SinkReply::Data(written) })
+            }
+            Err(fail) => {
+                sink.rollback_frame();
+                let message = match fail {
+                    SinkFail::Invalid(e) => e.to_string(),
+                    SinkFail::Internal(m) => m,
+                };
+                sink.push_error(req.id, &message)?;
+                Ok(SinkReply::Error)
+            }
+        }
+    }
+
+    /// Decode `req.payload` into the sink's open frame at the current
+    /// cursor, returning the bytes written (not yet trimmed). Mirrors
+    /// [`Self::run_decode`]: a whitespace policy strips once via the
+    /// SWAR scan and rebases error offsets onto the original payload,
+    /// so both reply paths report identical errors in every case.
+    fn decode_payload_into(&self, req: &Request, sink: &mut ReplySink) -> Result<usize, SinkFail> {
+        if req.ws == Whitespace::None {
+            return self.decode_stripped_into(&req.payload, req, sink);
+        }
+        let mut stripped = vec![0u8; req.payload.len()];
+        let (consumed, n) =
+            crate::base64::swar::compact_ws(&req.payload, &mut stripped, req.ws);
+        debug_assert_eq!(consumed, req.payload.len());
+        stripped.truncate(n);
+        self.decode_stripped_into(&stripped, req, sink).map_err(|fail| match fail {
+            SinkFail::Invalid(e) => SinkFail::Invalid(crate::base64::validate::rebase_ws_error(
+                e,
+                &req.payload,
+                req.ws,
+            )),
+            other => other,
+        })
+    }
+
+    /// Sink-path twin of [`Self::run_decode_stripped`]; `payload` is
+    /// already free of skipped whitespace and error offsets index it.
+    fn decode_stripped_into(
+        &self,
+        payload: &[u8],
+        req: &Request,
+        sink: &mut ReplySink,
+    ) -> Result<usize, SinkFail> {
+        let alphabet = &req.alphabet;
+        if payload.len() < self.inline_threshold {
+            Metrics::inc(&self.metrics.inline_requests, 1);
+            let codec =
+                crate::base64::block::BlockCodec::with_mode(alphabet.clone(), req.mode);
+            let out = sink.grow(decoded_len_upper(payload.len()));
+            return codec.decode_slice(payload, out).map_err(SinkFail::Invalid);
+        }
+        if payload.len() >= self.direct_threshold {
+            Metrics::inc(&self.metrics.direct_requests, 1);
+            let engine = self.engine_for(alphabet, req.mode);
+            let out = sink.grow(decoded_len_upper(payload.len()));
+            return engine
+                .decode_slice_policy(payload, out, engine.policy())
+                .map_err(SinkFail::Invalid);
+        }
+        // Batched middle, with the same error precedence as the `Vec`
+        // path: the batch's deferred per-row flags resolve before any
+        // remainder/tail error.
+        let (body, tail) =
+            split_tail(payload, alphabet.pad(), req.mode).map_err(SinkFail::Invalid)?;
+        let blocks_len = body.len() / B64_BLOCK * B64_BLOCK;
+        let rx = self.submit_blocks(
+            Direction::Decode,
+            alphabet.decode_table().as_bytes().to_vec(),
+            body[..blocks_len].to_vec(),
+        );
+        let head = blocks_len / 4 * 3;
+        let out = sink.grow(decoded_len_upper(payload.len()));
+        // Overlap: the sub-block remainder + padded tail decode in
+        // place while the batch is in flight.
+        let rest = &body[blocks_len..];
+        let mut decode_rest = || -> Result<usize, DecodeError> {
+            let mut w = head;
+            w += decode_quads_into(
+                rest,
+                alphabet.decode_table().as_bytes(),
+                blocks_len,
+                &mut out[w..w + rest.len() / 4 * 3],
+            )?;
+            w += decode_tail_into(
+                tail,
+                alphabet.pad(),
+                req.mode,
+                body.len(),
+                |c| alphabet.value_of(c),
+                &mut out[w..],
+            )?;
+            Ok(w)
+        };
+        let rest_result = decode_rest();
+        let batch = rx
+            .recv()
+            .expect("scheduler always answers")
+            .map_err(|e| SinkFail::Internal(e.to_string()))?;
+        if let Some(row) = batch.err.iter().position(|&e| e & 0x80 != 0) {
+            let row_bytes = &body[row * B64_BLOCK..(row + 1) * B64_BLOCK];
+            let col = first_invalid(row_bytes, alphabet.decode_table().as_bytes())
+                .expect("flagged row contains an invalid byte");
+            return Err(SinkFail::Invalid(DecodeError::InvalidByte {
+                offset: row * B64_BLOCK + col,
+                byte: row_bytes[col],
+            }));
+        }
+        let w = rest_result.map_err(SinkFail::Invalid)?;
+        out[..head].copy_from_slice(&batch.data);
+        Ok(w)
     }
 
     fn run_encode(&self, request: &Request) -> Outcome {
@@ -536,6 +861,97 @@ mod tests {
         // Many requests, fewer launches: coalescing happened.
         let m = rt.metrics();
         assert!(m.batches.load(Ordering::Relaxed) < m.requests.load(Ordering::Relaxed));
+    }
+
+    /// The zero-copy-vs-`Vec`-serialization byte-parity oracle: for a
+    /// catalogue spanning every sink routing tier (inline, batched,
+    /// engine-direct), every kind, whitespace policies and error cases,
+    /// `process_into`'s frame must equal serializing `process`'s reply.
+    #[test]
+    fn sink_and_vec_reply_paths_are_byte_identical() {
+        use crate::net::frame::ReplySink;
+        use crate::server::proto::Message;
+        let rt = router(); // inline < 64, batched 64..511, direct >= 512
+        let reference = ScalarCodec::new(Alphabet::standard());
+        let e = crate::base64::Engine::get();
+        let mut catalogue: Vec<Request> = Vec::new();
+        for len in [0usize, 10, 63, 64, 100, 300, 511, 512, 600, 5000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 31 % 256) as u8).collect();
+            catalogue.push(Request::encode(1, data.clone()));
+            let enc = reference.encode(&data);
+            catalogue.push(Request::decode(2, enc.clone()));
+            catalogue.push(Request {
+                id: 3,
+                kind: RequestKind::Validate,
+                payload: enc.clone(),
+                alphabet: Alphabet::standard(),
+                mode: Mode::Strict,
+                ws: Whitespace::None,
+            });
+            if len >= 4 {
+                let mut bad = enc.clone();
+                let n = bad.len();
+                bad[n / 2] = b'#';
+                catalogue.push(Request::decode(4, bad));
+            }
+            if len > 0 {
+                let mut wrapped = vec![0u8; e.encoded_wrapped_len(len, 76)];
+                let n = e.encode_wrapped_slice(&data, &mut wrapped, 76);
+                wrapped.truncate(n);
+                catalogue.push(Request::decode_ws(5, wrapped.clone(), Whitespace::CrLf));
+                // Corrupted wrapped payload: original-offset error parity.
+                if let Some(pos) = wrapped.iter().position(|&c| c == b'A' || c == b'Q') {
+                    wrapped[pos] = b'!';
+                    catalogue.push(Request::decode_ws(6, wrapped, Whitespace::CrLf));
+                }
+            }
+        }
+        for (i, req) in catalogue.into_iter().enumerate() {
+            let copy = Request {
+                id: req.id,
+                kind: req.kind,
+                payload: req.payload.clone(),
+                alphabet: req.alphabet.clone(),
+                mode: req.mode,
+                ws: req.ws,
+            };
+            let resp = rt.process(copy);
+            let reply = match resp.outcome {
+                Outcome::Data(data) => Message::RespData { id: resp.id, data },
+                Outcome::Valid => Message::RespData { id: resp.id, data: Vec::new() },
+                Outcome::Invalid(e) => Message::RespError { id: resp.id, message: e.to_string() },
+                Outcome::Rejected(r) => Message::RespError { id: resp.id, message: r.to_string() },
+                Outcome::Internal(m) => Message::RespError { id: resp.id, message: m },
+            };
+            let expect = reply.to_frame_bytes().unwrap();
+            let mut sink = ReplySink::new();
+            rt.process_into(req, &mut sink).unwrap();
+            assert_eq!(sink.into_buf(), expect, "request {i} diverged between reply paths");
+        }
+        // The catalogue really exercised all three sink routing tiers.
+        let m = rt.metrics();
+        assert!(m.inline_requests.load(Ordering::Relaxed) > 0, "inline tier unexercised");
+        assert!(m.direct_requests.load(Ordering::Relaxed) > 0, "direct tier unexercised");
+        assert!(m.batches.load(Ordering::Relaxed) > 0, "batched tier unexercised");
+    }
+
+    #[test]
+    fn sink_path_rejects_like_vec_path() {
+        use crate::net::frame::ReplySink;
+        use crate::server::proto::Message;
+        let rt = Router::new(
+            rust_factory(),
+            RouterConfig { max_inflight_bytes: 10, inline_threshold: 1, ..Default::default() },
+        );
+        let resp = rt.process(Request::encode(10, vec![0u8; 100]));
+        let Outcome::Rejected(r) = resp.outcome else { panic!("expected rejection") };
+        let expect = Message::RespError { id: 10, message: r.to_string() }
+            .to_frame_bytes()
+            .unwrap();
+        let mut sink = ReplySink::new();
+        rt.process_into(Request::encode(10, vec![0u8; 100]), &mut sink).unwrap();
+        assert_eq!(sink.into_buf(), expect);
+        assert_eq!(rt.metrics().rejected.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use super::metrics::Metrics;
 /// Scheduler tuning.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
+    /// Coalescing (size/linger) tuning for the leader thread.
     pub batcher: BatcherConfig,
     /// Backend worker threads.
     pub workers: usize,
@@ -39,6 +40,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Spawn the coalescing leader and `config.workers` backend workers.
     pub fn new(
         factory: BackendFactory,
         config: SchedulerConfig,

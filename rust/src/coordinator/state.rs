@@ -13,21 +13,33 @@ use crate::base64::{Alphabet, DecodeError, Mode, Whitespace};
 
 /// Direction-specific stream state.
 pub enum StreamState {
+    /// An encode stream (raw bytes in, base64 out).
     Encode(StreamingEncoder),
+    /// A decode stream (base64 in, raw bytes out).
     Decode(StreamingDecoder),
 }
 
 /// Errors from the stream registry.
 #[derive(Debug, PartialEq, Eq)]
 pub enum StreamError {
+    /// No open stream has this id.
     UnknownStream(u64),
+    /// A stream with this id is already open.
     DuplicateStream(u64),
-    TooManyStreams { limit: usize },
+    /// The per-session open-stream cap was hit.
+    TooManyStreams {
+        /// The configured cap.
+        limit: usize,
+    },
     /// Chunk type does not match the stream direction.
     DirectionMismatch(u64),
     /// Wrapped-encode line length outside the accepted domain
     /// (positive multiple of 4).
-    InvalidWrap { line_len: usize },
+    InvalidWrap {
+        /// The rejected line length.
+        line_len: usize,
+    },
+    /// The stream's decoder rejected its input.
     Decode(DecodeError),
 }
 
@@ -55,10 +67,12 @@ pub struct SessionState {
 }
 
 impl SessionState {
+    /// A session allowing up to `max_streams` concurrently open streams.
     pub fn new(max_streams: usize) -> Self {
         Self { streams: HashMap::new(), max_streams }
     }
 
+    /// Open a flat encode stream under `id`.
     pub fn open_encode(&mut self, id: u64, alphabet: Alphabet) -> Result<(), StreamError> {
         self.open(id, StreamState::Encode(StreamingEncoder::new(alphabet)))
     }
@@ -79,6 +93,7 @@ impl SessionState {
         self.open(id, StreamState::Encode(StreamingEncoder::new_wrapped(alphabet, line_len)))
     }
 
+    /// Open a decode stream under `id` (no whitespace skipping).
     pub fn open_decode(&mut self, id: u64, alphabet: Alphabet, mode: Mode) -> Result<(), StreamError> {
         self.open_decode_ws(id, alphabet, mode, Whitespace::None)
     }
@@ -142,6 +157,7 @@ impl SessionState {
         self.streams.remove(&id).is_some()
     }
 
+    /// Streams currently open in this session.
     pub fn open_count(&self) -> usize {
         self.streams.len()
     }

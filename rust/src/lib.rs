@@ -74,6 +74,10 @@
 // index-loop style is deliberate there and clippy's suggestions would
 // obscure the instruction-per-stage mapping.
 #![allow(clippy::needless_range_loop)]
+// Every public item carries documentation; the doc CI job runs
+// `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib`, which turns a
+// missing doc (or a broken intra-doc link) into a build failure.
+#![warn(missing_docs)]
 
 pub mod base64;
 pub mod coordinator;
@@ -83,3 +87,10 @@ pub mod runtime;
 pub mod server;
 pub mod util;
 pub mod workload;
+
+/// Compiles `README.md`'s Rust code blocks as doctests, so the
+/// quickstart in the repository's front page can never rot — CI runs
+/// them with the rest of the doctests via `cargo test`.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;

@@ -5,6 +5,7 @@
 //! b64simd decode [--alphabet NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
 //!                [--transport epoll|threaded] [--net-workers N] [--max-conns N]
+//!                [--reactors N] [--zerocopy 0|1]
 //! b64simd selftest [--artifacts DIR]
 //! b64simd model  [--figure 4 | --hardware]
 //! b64simd opcount
@@ -154,12 +155,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(n) = args.get("max-conns") {
         server_config.max_connections = n.parse()?;
     }
+    if let Some(n) = args.get("reactors") {
+        server_config.reactors = n.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.get("zerocopy") {
+        server_config.zero_copy = ServerConfig::parse_switch(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown zerocopy value '{v}' (0|1)"))?;
+    }
     let transport = server_config.transport;
+    let (reactors, zero_copy) = (server_config.reactors, server_config.zero_copy);
     let handle = serve(router.clone(), server_config)?;
     eprintln!(
-        "b64simd serving on {} (backend={backend_name}, workers={workers}, transport={})",
+        "b64simd serving on {} (backend={backend_name}, workers={workers}, transport={}, reactors={reactors}, reply={})",
         handle.addr,
-        transport.name()
+        transport.name(),
+        if zero_copy { "zerocopy" } else { "vec" }
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));

@@ -3,10 +3,13 @@
 //! Every connection needs a frame-accumulation buffer and a write
 //! queue; with thousands of mostly-idle connections, allocating them
 //! per connection and freeing on close would churn the allocator on
-//! every accept. The loop is single-threaded, so the pool is a plain
-//! free list — no locks. Buffers that ballooned while carrying a large
-//! frame are dropped rather than retained, bounding the pool's resident
-//! footprint at `max_buffers * retain_cap`.
+//! every accept. Each reactor shard owns its own pool and its loop is
+//! single-threaded, so the pool is a plain free list — no locks.
+//! Buffers that ballooned while carrying a large frame are dropped
+//! rather than retained, bounding the pool's resident footprint at
+//! `max_buffers * retain_cap`. The zero-copy reply path also feeds the
+//! pool: when a write queue adopts a finished reply buffer, the spare
+//! buffer from the swap is parked here.
 
 /// A lock-free-because-single-threaded pool of `Vec<u8>` buffers.
 pub struct BufferPool {
@@ -18,6 +21,8 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
+    /// A pool keeping at most `max_buffers` buffers, dropping any whose
+    /// capacity grew past `retain_cap` bytes.
     pub fn new(max_buffers: usize, retain_cap: usize) -> BufferPool {
         BufferPool { free: Vec::with_capacity(max_buffers.min(64)), max_buffers, retain_cap }
     }

@@ -1,17 +1,22 @@
 //! Per-connection state owned by the readiness loop.
 //!
 //! A connection is a nonblocking socket plus the incremental machinery
-//! the loop needs between readiness events: the [`FrameMachine`]
-//! accumulating torn request frames, the [`WriteQueue`] holding
-//! partially written responses, a bounded inbox of parsed-but-undispatched
-//! requests, and the chunked-stream [`SessionState`] shared with
-//! whichever worker is executing this connection's current request.
+//! its owning reactor shard needs between readiness events: the
+//! [`FrameMachine`] accumulating torn request frames, the
+//! [`WriteQueue`] holding partially written responses (replies arrive
+//! as whole adopted buffers on the zero-copy path), a bounded inbox of
+//! parsed-but-undispatched requests, and the chunked-stream
+//! [`SessionState`] shared with whichever worker is executing this
+//! connection's current request. A connection lives and dies on one
+//! shard: its slab slot, buffers and epoll registration never cross
+//! loops.
 //!
 //! Ordering contract: at most one request per connection is in flight
 //! on the worker pool (`busy`), so responses go out in request order —
 //! the same lockstep semantics the thread-per-connection transport
-//! gives — while *different* connections' requests run concurrently,
-//! which is what feeds the coordinator's cross-request batching.
+//! gives — while *different* connections' requests run concurrently
+//! (across shards too, since the worker pool is shared), which is what
+//! feeds the coordinator's cross-request batching.
 
 use std::collections::VecDeque;
 use std::net::TcpStream;

@@ -1,21 +1,35 @@
-//! The epoll transport: one edge-triggered readiness loop multiplexing
-//! every connection, a small worker pool executing requests against the
-//! shared [`Router`].
+//! The epoll transport: a group of edge-triggered readiness loops (one
+//! per reactor shard, each owning a `SO_REUSEPORT` listener, slab,
+//! buffer pool and completion queue), all feeding one worker pool that
+//! executes requests against the shared [`Router`].
 //!
 //! ```text
-//!            epoll_wait ──► [readiness loop] ── WorkItem ──► [workers] ─► Router
-//!   accept ───┘   ▲            │ FrameMachine / WriteQueue      │        (batched
-//!   eventfd ◄─────┴────────────┴─◄─ Completion (reply frame) ◄──┘         SIMD)
+//!   clients ─► SO_REUSEPORT ─► [reactor 0] ──┐
+//!              (kernel hash)   [reactor 1] ──┤ WorkItem ─► [workers] ─► Router
+//!                              [reactor N] ──┘    ▲            │       (batched
+//!                 eventfd ◄── Completion ────────────────────◄─┘        SIMD)
+//!                 (per shard)  (reply frame buffer)
 //! ```
 //!
-//! The loop never blocks on a socket and never runs codec work; the
-//! workers never touch a socket. The two meet at a completion queue
-//! drained on an [`EventFd`] wakeup. Per-connection request/response
-//! order is preserved by keeping at most one request per connection in
-//! flight (see [`super::conn`]); cross-connection concurrency — the
-//! thing the old thread-per-connection transport capped at 256 threads
-//! — is bounded only by the configured admission cap, since an idle
-//! connection costs one slab slot and two pooled buffers, not a thread.
+//! A loop never blocks on a socket and never runs codec work; the
+//! workers never touch a socket. They meet at each shard's completion
+//! queue, drained on that shard's [`EventFd`] wakeup (every `WorkItem`
+//! carries its shard's queue + eventfd, so a shared worker can answer
+//! any shard). Per-connection request/response order is preserved by
+//! keeping at most one request per connection in flight (see
+//! [`super::conn`]); cross-connection concurrency — the thing the old
+//! thread-per-connection transport capped at 256 threads — is bounded
+//! only by the configured admission cap, shared across shards by one
+//! `ConnLimiter`, since an idle connection costs one slab slot and two
+//! pooled buffers, not a thread.
+//!
+//! Replies take the zero-copy path by default
+//! (`ServerConfig::zero_copy`): a worker builds the complete reply
+//! frame in a `ReplySink` — the router's sink entry points let the
+//! codec kernels write the payload in place — and the loop *adopts* the
+//! finished buffer into the connection's `WriteQueue` instead of
+//! memcpying it. The `Vec`-serialization path is kept selectable as the
+//! differential reference.
 
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
@@ -26,14 +40,16 @@ use std::thread::JoinHandle;
 
 use super::buffer::BufferPool;
 use super::conn::Conn;
+use super::frame::ReplySink;
 use super::sys::{
     Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
 use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::state::SessionState;
 use crate::coordinator::{Metrics, Router};
 use crate::server::proto::Message;
-use crate::server::service::{dispatch, refuse_busy, ServerConfig};
+use crate::server::service::{dispatch, dispatch_into, refuse_busy, ServerConfig};
 
 /// Slab token of the listening socket.
 const TOKEN_LISTENER: u64 = u64::MAX;
@@ -53,14 +69,23 @@ fn token_parts(tok: u64) -> (usize, u32) {
     ((tok & 0xFFFF_FFFF) as usize, (tok >> 32) as u32)
 }
 
-/// One request headed for the worker pool.
+/// One request headed for the worker pool. Carries its shard's
+/// completion queue and eventfd so the shared workers can route the
+/// reply back to whichever reactor owns the connection.
 struct WorkItem {
     token: u64,
     msg: Message,
     session: Arc<Mutex<SessionState>>,
+    done: Arc<Mutex<Vec<Completion>>>,
+    wake: Arc<EventFd>,
+    /// A recycled buffer from the shard's pool for the reply sink
+    /// (empty on the `Vec` path), closing the allocation loop: adopt's
+    /// spare buffers return to the pool, the pool feeds the next
+    /// reply's sink.
+    buf: Vec<u8>,
 }
 
-/// One executed request headed back to the loop. `frame = None` marks a
+/// One executed request headed back to its loop. `frame = None` marks a
 /// reply that could not be framed (oversized) — fatal for the
 /// connection, matching the blocking transport's behaviour.
 struct Completion {
@@ -68,100 +93,171 @@ struct Completion {
     frame: Option<Vec<u8>>,
 }
 
-/// Handles the spawned transport threads + the loop's wakeup fd.
+/// Handles the spawned transport threads + each loop's wakeup fd.
 pub(crate) struct EpollServer {
     pub threads: Vec<JoinHandle<()>>,
-    pub wake: Arc<EventFd>,
+    pub wakes: Vec<Arc<EventFd>>,
 }
 
-/// Spawn the readiness loop and its workers on `listener`. The caller
-/// keeps `stop` and signals `wake` to shut the loop down.
+/// Spawn one readiness loop per listener (the reactor shards) plus the
+/// shared worker pool. The caller keeps `stop` and signals every wake
+/// fd to shut the loops down; the workers exit once all loops have
+/// dropped their work senders.
 pub(crate) fn spawn(
     router: Arc<Router>,
     config: &ServerConfig,
-    listener: TcpListener,
+    listeners: Vec<TcpListener>,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<EpollServer> {
+    let limiter = ConnLimiter::new(config.max_connections);
+    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let metrics = router.metrics().clone();
+    // A fresh serve starts a fresh per-shard breakdown; without this a
+    // router re-served after shutdown would report dead shards forever.
+    metrics.reset_shards();
+
+    let mut threads = Vec::new();
+    let mut wakes: Vec<Arc<EventFd>> = Vec::new();
+    let mut built = Ok(());
+    for (shard_id, listener) in listeners.into_iter().enumerate() {
+        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop) {
+            Ok((thread, wake)) => {
+                threads.push(thread);
+                wakes.push(wake);
+            }
+            Err(e) => {
+                built = Err(e);
+                break;
+            }
+        }
+    }
+    // Only the loops may hold work senders: the workers' exit condition
+    // is every sender dropping when the loops stop.
+    drop(work_tx);
+    let zero_copy = config.zero_copy;
+    if built.is_ok() {
+        for i in 0..config.net_workers.max(1) {
+            let rx = work_rx.clone();
+            let router = router.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("b64simd-net-worker-{i}"))
+                .spawn(move || worker_loop(rx, router, zero_copy));
+            match spawned {
+                Ok(t) => threads.push(t),
+                Err(e) => {
+                    built = Err(e);
+                    break;
+                }
+            }
+        }
+    }
+    if let Err(e) = built {
+        // Unwind whatever did spawn before the failure — loop threads
+        // and worker threads alike — so no reactor keeps the listeners
+        // bound behind a failed `serve`.
+        stop.store(true, Ordering::SeqCst);
+        for w in &wakes {
+            w.signal();
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        return Err(e);
+    }
+    Ok(EpollServer { threads, wakes })
+}
+
+/// Set up one reactor shard: its epoll instance, wake fd, completion
+/// queue and loop thread.
+fn spawn_shard(
+    shard_id: usize,
+    listener: TcpListener,
+    config: &ServerConfig,
+    metrics: &Arc<Metrics>,
+    limiter: &Arc<ConnLimiter>,
+    work_tx: &mpsc::Sender<WorkItem>,
+    stop: &Arc<AtomicBool>,
+) -> std::io::Result<(JoinHandle<()>, Arc<EventFd>)> {
     listener.set_nonblocking(true)?;
     let epoll = Epoll::new()?;
     let wake = Arc::new(EventFd::new()?);
     epoll.add(listener.as_raw_fd(), EPOLLIN | EPOLLET, TOKEN_LISTENER)?;
     epoll.add(wake.raw(), EPOLLIN | EPOLLET, TOKEN_WAKE)?;
-
-    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
-    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
-    let work_rx = Arc::new(Mutex::new(work_rx));
-
-    let mut threads = Vec::new();
-    let metrics = router.metrics().clone();
     let lp = Loop {
         epoll,
         listener,
         wake: wake.clone(),
-        metrics,
-        limiter: ConnLimiter::new(config.max_connections),
+        metrics: metrics.clone(),
+        shard: metrics.register_shard(),
+        limiter: limiter.clone(),
         max_streams: config.max_streams_per_connection,
+        zero_copy: config.zero_copy,
         conns: Vec::new(),
         epochs: Vec::new(),
         free: Vec::new(),
         pool: BufferPool::new(2048, 256 << 10),
         scratch: vec![0u8; READ_SCRATCH],
-        work_tx,
-        completions: completions.clone(),
-        stop,
+        work_tx: work_tx.clone(),
+        completions: Arc::new(Mutex::new(Vec::new())),
+        stop: stop.clone(),
     };
-    threads.push(
-        std::thread::Builder::new()
-            .name("b64simd-net-loop".into())
-            .spawn(move || lp.run())?,
-    );
-    for i in 0..config.net_workers.max(1) {
-        let rx = work_rx.clone();
-        let router = router.clone();
-        let completions = completions.clone();
-        let wake = wake.clone();
-        threads.push(
-            std::thread::Builder::new()
-                .name(format!("b64simd-net-worker-{i}"))
-                .spawn(move || worker_loop(rx, router, completions, wake))?,
-        );
-    }
-    Ok(EpollServer { threads, wake })
+    let thread = std::thread::Builder::new()
+        .name(format!("b64simd-net-loop-{shard_id}"))
+        .spawn(move || lp.run())?;
+    Ok((thread, wake))
 }
 
 /// Worker: pull a request, execute it against the router (this is where
 /// the batched SIMD work happens, concurrently across workers), push
-/// the serialized reply frame, wake the loop. Exits when the loop drops
-/// the sending side.
-fn worker_loop(
-    rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
-    router: Arc<Router>,
-    completions: Arc<Mutex<Vec<Completion>>>,
-    wake: Arc<EventFd>,
-) {
+/// the reply frame onto the owning shard's completion queue, wake that
+/// shard. Exits when every loop drops its sending side.
+///
+/// With `zero_copy` set the reply frame is built in place through a
+/// [`ReplySink`] (codec output written directly into the buffer the
+/// loop will adopt into the write queue); otherwise the reply `Message`
+/// is serialized through `to_frame_bytes`, the differential reference
+/// path. A `None` frame (oversized reply) closes the connection either
+/// way.
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, zero_copy: bool) {
     loop {
         // Holding the lock across `recv` just serializes the hand-off,
         // not the work: the lock drops as soon as an item arrives.
         let item = { rx.lock().unwrap().recv() };
-        let Ok(item) = item else { break };
-        let reply = {
-            let mut session = item.session.lock().unwrap();
-            dispatch(item.msg, &router, &mut session)
+        let Ok(WorkItem { token, msg, session, done, wake, buf }) = item else { break };
+        let frame = if zero_copy {
+            let mut sink = ReplySink::with_buf(buf);
+            let framed = {
+                let mut session = session.lock().unwrap();
+                dispatch_into(msg, &router, &mut session, &mut sink)
+            };
+            framed.ok().map(|()| sink.into_buf())
+        } else {
+            drop(buf); // empty on this path
+            let reply = {
+                let mut session = session.lock().unwrap();
+                dispatch(msg, &router, &mut session)
+            };
+            reply.to_frame_bytes().ok()
         };
-        let frame = reply.to_frame_bytes().ok();
-        completions.lock().unwrap().push(Completion { token: item.token, frame });
+        done.lock().unwrap().push(Completion { token, frame });
         wake.signal();
     }
 }
 
-/// The single-threaded readiness loop.
+/// One single-threaded readiness loop (a reactor shard).
 struct Loop {
     epoll: Epoll,
     listener: TcpListener,
     wake: Arc<EventFd>,
     metrics: Arc<Metrics>,
+    /// This shard's slice of the metrics (globals stay the roll-up).
+    shard: Arc<ShardMetrics>,
+    /// Connection cap shared across every shard.
     limiter: Arc<ConnLimiter>,
     max_streams: usize,
+    /// Reply path: pop a pooled sink buffer per request when true.
+    zero_copy: bool,
     /// Connection slab, indexed by the token's low 32 bits.
     conns: Vec<Option<Conn>>,
     /// Slot generations (guard against stale tokens after reuse).
@@ -274,6 +370,8 @@ impl Loop {
         }
         Metrics::inc(&self.metrics.conns_accepted, 1);
         Metrics::inc(&self.metrics.conns_open, 1);
+        Metrics::inc(&self.shard.conns_accepted, 1);
+        Metrics::inc(&self.shard.conns_open, 1);
         self.conns[idx] = Some(conn);
         self.pump(idx);
     }
@@ -315,6 +413,7 @@ impl Loop {
                     Ok(parsed) => {
                         if parsed > 0 {
                             Metrics::inc(&self.metrics.frames_in, parsed as u64);
+                            Metrics::inc(&self.shard.frames_in, parsed as u64);
                         }
                     }
                     // Protocol error: poison the stream. Requests parsed
@@ -333,10 +432,14 @@ impl Loop {
             if !conn.busy {
                 if let Some(msg) = conn.inbox.pop_front() {
                     conn.busy = true;
+                    let buf = if self.zero_copy { self.pool.get() } else { Vec::new() };
                     let item = WorkItem {
                         token: token(idx, conn.epoch),
                         msg,
                         session: conn.session.clone(),
+                        done: self.completions.clone(),
+                        wake: self.wake.clone(),
+                        buf,
                     };
                     if self.work_tx.send(item).is_err() {
                         return self.close(idx); // shutting down
@@ -384,8 +487,13 @@ impl Loop {
             conn.busy = false;
             match c.frame {
                 Some(frame) => {
-                    conn.write.push_bytes(&frame);
+                    // Zero-copy hand-off: a drained queue takes the
+                    // frame buffer whole; either way one spare buffer
+                    // comes back for the pool.
+                    let spare = conn.write.adopt(frame);
+                    self.pool.put(spare);
                     Metrics::inc(&self.metrics.frames_out, 1);
+                    Metrics::inc(&self.shard.frames_out, 1);
                 }
                 None => {
                     self.close(idx);
@@ -403,5 +511,6 @@ impl Loop {
         conn.teardown(&mut self.pool);
         self.free.push(idx);
         Metrics::dec(&self.metrics.conns_open, 1);
+        Metrics::dec(&self.shard.conns_open, 1);
     }
 }

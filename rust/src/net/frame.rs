@@ -12,10 +12,18 @@
 //! remainder is only memmoved when it is smaller than the consumed
 //! prefix, so a large frame arriving in many fragments is never
 //! re-copied quadratically.
+//!
+//! The response side's zero-copy staging lives here too: a
+//! [`ReplySink`] builds complete wire frames in place — reserve the
+//! length prefix, let the codec kernels write the payload directly into
+//! the buffer, backfill the prefix — and [`WriteQueue::adopt`] swaps
+//! the finished buffer in whole when the queue is drained, so a reply
+//! reaches the socket without ever being re-serialized or memcpyed
+//! through an intermediate `Vec`.
 
 use std::io::{self, Write};
 
-use crate::server::proto::{Message, ProtoError, MAX_FRAME};
+use crate::server::proto::{Message, ProtoError, MAX_FRAME, TAG_RESP_DATA, TAG_RESP_ERROR};
 
 /// Incremental parser: push raw bytes in, pull parsed frames out.
 pub struct FrameMachine {
@@ -86,6 +94,184 @@ impl FrameMachine {
     }
 }
 
+/// In-place builder for complete wire frames (length prefix included),
+/// the write end of the zero-copy reply path.
+///
+/// The frame protocol is `u32le length ++ body`, but the body's length
+/// is only known once the codec has run — and the whole point is to let
+/// the codec write *directly* into the outgoing buffer. So the sink
+/// works in three steps: [`begin_frame`] reserves the 4-byte prefix,
+/// the caller appends the body (header fields via [`push`], bulk
+/// payload via the in-place region returned by [`grow`], shrinking an
+/// over-reserved region with [`truncate_to`]), and [`end_frame`]
+/// backfills the prefix from the actual cursor. A frame that must be
+/// abandoned mid-build (a decode error discovered after the payload
+/// region was reserved) is erased with [`rollback_frame`] and replaced
+/// by an error frame — the consumer never sees partial frames.
+///
+/// The finished buffer is handed to the connection's [`WriteQueue`] via
+/// [`WriteQueue::adopt`], completing the path: kernel output lands in
+/// the same allocation the socket write reads from.
+///
+/// [`begin_frame`]: ReplySink::begin_frame
+/// [`push`]: ReplySink::push
+/// [`grow`]: ReplySink::grow
+/// [`truncate_to`]: ReplySink::truncate_to
+/// [`end_frame`]: ReplySink::end_frame
+/// [`rollback_frame`]: ReplySink::rollback_frame
+pub struct ReplySink {
+    buf: Vec<u8>,
+    /// Absolute offset of the open frame's length prefix.
+    frame_start: usize,
+    open: bool,
+}
+
+impl ReplySink {
+    /// An empty sink on a fresh buffer.
+    pub fn new() -> ReplySink {
+        ReplySink::with_buf(Vec::new())
+    }
+
+    /// Build on a (recycled) buffer; its contents are cleared.
+    pub fn with_buf(mut buf: Vec<u8>) -> ReplySink {
+        buf.clear();
+        ReplySink { buf, frame_start: 0, open: false }
+    }
+
+    /// Start a frame: reserves the 4-byte length prefix. Panics if a
+    /// frame is already open.
+    pub fn begin_frame(&mut self) {
+        assert!(!self.open, "previous frame not finished");
+        self.frame_start = self.buf.len();
+        self.buf.extend_from_slice(&[0u8; 4]);
+        self.open = true;
+    }
+
+    /// Append body bytes to the open frame.
+    pub fn push(&mut self, bytes: &[u8]) {
+        debug_assert!(self.open);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extend the open frame by `n` bytes and return the new region for
+    /// in-place writes — this is where the engine's slice kernels (and
+    /// their non-temporal stores) target the socket-bound buffer
+    /// directly.
+    ///
+    /// The region is zero-initialized (`Vec::resize`): handing the
+    /// kernels uninitialized memory through a safe `&mut [u8]` would be
+    /// UB, so one linear zero pass is the price of staying in safe
+    /// Rust. It still removes the reply-`Vec` → frame-`Vec` → queue
+    /// copy chain this type exists to eliminate.
+    pub fn grow(&mut self, n: usize) -> &mut [u8] {
+        debug_assert!(self.open);
+        let start = self.buf.len();
+        self.buf.resize(start + n, 0);
+        &mut self.buf[start..]
+    }
+
+    /// Current absolute cursor; pair with [`Self::truncate_to`] to trim
+    /// an over-reserved payload region to the bytes actually written.
+    pub fn mark(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Shrink the open frame back to an earlier [`Self::mark`].
+    pub fn truncate_to(&mut self, mark: usize) {
+        debug_assert!(self.open && mark >= self.frame_start + 4);
+        self.buf.truncate(mark);
+    }
+
+    /// Backfill the length prefix and close the frame. An oversized
+    /// body fails with [`ProtoError::FrameTooLarge`] (and erases the
+    /// frame), mirroring `Message::to_frame_bytes` on the `Vec` path —
+    /// the caller treats it as fatal for the connection.
+    pub fn end_frame(&mut self) -> Result<(), ProtoError> {
+        debug_assert!(self.open);
+        let body = self.buf.len() - self.frame_start - 4;
+        if body > MAX_FRAME {
+            self.buf.truncate(self.frame_start);
+            self.open = false;
+            return Err(ProtoError::FrameTooLarge(body));
+        }
+        let prefix = (body as u32).to_le_bytes();
+        self.buf[self.frame_start..self.frame_start + 4].copy_from_slice(&prefix);
+        self.open = false;
+        Ok(())
+    }
+
+    /// Erase the open frame entirely (error discovered mid-build).
+    pub fn rollback_frame(&mut self) {
+        debug_assert!(self.open);
+        self.buf.truncate(self.frame_start);
+        self.open = false;
+    }
+
+    /// Open a `RespData` frame — length prefix, tag and id — leaving
+    /// the payload to follow via [`Self::push`] / [`Self::grow`] and a
+    /// closing [`Self::end_frame`]. This (with [`Self::push_error`])
+    /// keeps the reply wire layout in one place; the produced bytes are
+    /// pinned byte-identical to `Message` serialization by the unit
+    /// and parity tests.
+    pub fn begin_data_frame(&mut self, id: u64) {
+        self.begin_frame();
+        self.push(&[TAG_RESP_DATA]);
+        self.push(&id.to_le_bytes());
+    }
+
+    /// Write a complete `RespData` frame from already-materialized
+    /// bytes (stream-session output) — one copy into the sink instead
+    /// of the serialize-then-copy pair `push_message` would pay.
+    pub fn push_data(&mut self, id: u64, data: &[u8]) -> Result<(), ProtoError> {
+        self.begin_data_frame(id);
+        self.push(data);
+        self.end_frame()
+    }
+
+    /// Write a complete `RespError` frame, byte-identical to
+    /// serializing `Message::RespError { id, message }`.
+    pub fn push_error(&mut self, id: u64, message: &str) -> Result<(), ProtoError> {
+        self.begin_frame();
+        self.push(&[TAG_RESP_ERROR]);
+        self.push(&id.to_le_bytes());
+        self.push(message.as_bytes());
+        self.end_frame()
+    }
+
+    /// Serialize a whole message as one frame (the cold replies: stream
+    /// control acks, stats, errors — anything without a payload worth
+    /// writing in place).
+    pub fn push_message(&mut self, msg: &Message) -> Result<(), ProtoError> {
+        self.begin_frame();
+        let body = msg.to_bytes();
+        self.push(&body);
+        self.end_frame()
+    }
+
+    /// Total finished bytes buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Surrender the buffer (all frames complete) for hand-off to the
+    /// connection's write queue.
+    pub fn into_buf(self) -> Vec<u8> {
+        debug_assert!(!self.open, "unfinished frame in sink");
+        self.buf
+    }
+}
+
+impl Default for ReplySink {
+    fn default() -> Self {
+        ReplySink::new()
+    }
+}
+
 /// Outgoing bytes awaiting a writable socket. Frames are appended
 /// whole; `write_to` pushes as much as the socket accepts and keeps the
 /// rest for the next `EPOLLOUT`.
@@ -110,6 +296,24 @@ impl WriteQueue {
         let frame = msg.to_frame_bytes()?;
         self.push_bytes(&frame);
         Ok(())
+    }
+
+    /// Take ownership of a buffer of complete frames (a finished
+    /// [`ReplySink`]). When the queue is drained the buffer is swapped
+    /// in whole — the zero-copy hand-off — and the queue's previous
+    /// (empty) buffer is returned for pooling. With a backlog pending,
+    /// wire order requires appending behind it instead, and the spent
+    /// input buffer is returned. Either way exactly one buffer comes
+    /// back, so the caller's pool stays balanced.
+    pub fn adopt(&mut self, frames: Vec<u8>) -> Vec<u8> {
+        if self.pending() == 0 {
+            self.buf.clear();
+            self.pos = 0;
+            std::mem::replace(&mut self.buf, frames)
+        } else {
+            self.buf.extend_from_slice(&frames);
+            frames
+        }
     }
 
     /// Bytes still waiting to go out.
@@ -307,5 +511,76 @@ mod tests {
         let mut expect = frame;
         expect.extend_from_slice(&Message::Pong.to_frame_bytes().unwrap());
         assert_eq!(sink.out, expect, "byte order preserved across partial writes");
+    }
+
+    #[test]
+    fn reply_sink_matches_message_serialization() {
+        // Building a data frame piecewise through the sink must be
+        // byte-identical to the Vec serialization path.
+        let msg = Message::RespData { id: 42, data: vec![7u8; 300] };
+        let expect = msg.to_frame_bytes().unwrap();
+        let mut sink = ReplySink::new();
+        sink.begin_data_frame(42);
+        let region = sink.grow(300);
+        region.copy_from_slice(&[7u8; 300]);
+        sink.end_frame().unwrap();
+        assert_eq!(sink.into_buf(), expect);
+        // push_data, push_message and push_error all agree with the
+        // Message serialization they stand in for.
+        let mut sink = ReplySink::new();
+        sink.push_data(42, &[7u8; 300]).unwrap();
+        assert_eq!(sink.into_buf(), expect.clone());
+        let mut sink = ReplySink::new();
+        sink.push_message(&msg).unwrap();
+        assert_eq!(sink.into_buf(), expect);
+        let err = Message::RespError { id: 9, message: "bad byte".into() };
+        let mut sink = ReplySink::new();
+        sink.push_error(9, "bad byte").unwrap();
+        assert_eq!(sink.into_buf(), err.to_frame_bytes().unwrap());
+    }
+
+    #[test]
+    fn reply_sink_truncate_and_rollback() {
+        let mut sink = ReplySink::new();
+        // Over-reserve, then trim to the bytes actually produced.
+        sink.begin_data_frame(1);
+        let mark = sink.mark();
+        let region = sink.grow(100);
+        region[..3].copy_from_slice(b"abc");
+        sink.truncate_to(mark + 3);
+        sink.end_frame().unwrap();
+        let expect = Message::RespData { id: 1, data: b"abc".to_vec() }.to_frame_bytes().unwrap();
+        assert_eq!(sink.len(), expect.len());
+        // A rolled-back frame leaves no trace, and the next frame lands
+        // flush against the previous one.
+        sink.begin_frame();
+        sink.grow(50);
+        sink.rollback_frame();
+        sink.push_message(&Message::Pong).unwrap();
+        let mut want = expect;
+        want.extend_from_slice(&Message::Pong.to_frame_bytes().unwrap());
+        assert_eq!(sink.into_buf(), want);
+    }
+
+    #[test]
+    fn write_queue_adopt_swaps_when_drained_appends_when_not() {
+        // Drained queue: the frames buffer is swapped in, the old buffer
+        // comes back (same allocation, cleared).
+        let mut q = WriteQueue::new(Vec::with_capacity(64));
+        let frame = Message::Pong.to_frame_bytes().unwrap();
+        let spare = q.adopt(frame.clone());
+        assert!(spare.capacity() >= 64, "drained queue returns its old buffer");
+        assert!(spare.is_empty());
+        assert_eq!(q.pending(), frame.len());
+        // Pending backlog: bytes are appended behind it (wire order) and
+        // the input buffer is returned instead.
+        let second = Message::RespData { id: 9, data: vec![1, 2, 3] }.to_frame_bytes().unwrap();
+        let spent = q.adopt(second.clone());
+        assert_eq!(spent, second, "backlogged queue returns the spent input");
+        let mut out = Vec::new();
+        q.write_to(&mut out).unwrap();
+        let mut expect = frame;
+        expect.extend_from_slice(&second);
+        assert_eq!(out, expect, "adopted frames drain in order");
     }
 }

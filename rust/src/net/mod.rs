@@ -1,12 +1,13 @@
-//! Event-driven connection subsystem: epoll readiness loop, pooled
-//! nonblocking framing, batched fan-in to the SIMD backend.
+//! Event-driven connection subsystem: sharded epoll readiness loops,
+//! pooled nonblocking framing, zero-copy replies, batched fan-in to the
+//! SIMD backend.
 //!
 //! The paper's codecs run at memcpy speed only while they stay fed. The
 //! original transport spawned one blocking thread per TCP connection
 //! and hard-capped at a few hundred — the wrong shape for many
 //! mostly-idle clients, and the wrong shape for batching: work arrived
 //! on as many threads as there were sockets. This module inverts that:
-//! **many streams, one readiness loop, a fixed worker set**, so
+//! **many streams, a few readiness loops, a fixed worker set**, so
 //! thousands of connections multiplex onto the handful of cores doing
 //! actual SIMD work, and concurrent requests from different sockets
 //! coalesce in the coordinator's batcher exactly as they would from a
@@ -15,49 +16,82 @@
 //! ## Architecture
 //!
 //! ```text
-//!  clients ──► accept ─► [readiness loop (epoll, edge-triggered)]
-//!                          │  per-conn: FrameMachine ── inbox ─┐ WorkItem
-//!                          │            WriteQueue ◄─ frame ─┐ ▼
-//!                          │                                [workers xN]
-//!                          ◄──────────── eventfd ◄─ Completion │
-//!                                                     Router::process
-//!                                                     (batched SIMD)
+//!  clients ──► SO_REUSEPORT ──► [reactor shard × N (epoll, edge-triggered)]
+//!              (kernel hash)      │  per-conn: FrameMachine ── inbox ─┐ WorkItem
+//!                                 │            WriteQueue ◄─ adopt ─┐ ▼
+//!                                 │                              [workers xM]
+//!                                 ◄── per-shard eventfd ◄─ Completion │
+//!                                                          Router::process_into
+//!                                                          (batched / direct SIMD)
 //! ```
 //!
 //! * [`sys`] — direct `extern "C"` bindings to `epoll_create1` /
-//!   `epoll_ctl` / `epoll_wait` / `eventfd` (std already links libc; no
-//!   crates), wrapped in owned-fd types;
+//!   `epoll_ctl` / `epoll_wait`, `eventfd`, and the `SO_REUSEPORT`
+//!   listener group (std already links libc; no crates), wrapped in
+//!   owned-fd types;
 //! * [`buffer`] — a free-list pool of read/write buffers. **Lifetimes:**
 //!   a connection borrows two buffers at accept (frame accumulation +
 //!   write queue) and returns them at close; buffers that ballooned
 //!   past the retain cap are dropped instead of parked, so the pool's
 //!   resident footprint stays bounded while steady-state accept/close
-//!   churn never touches the allocator;
+//!   churn never touches the allocator. Each shard owns its own pool —
+//!   no cross-shard synchronization on the buffer path;
 //! * [`frame`] — incremental framing: [`frame::FrameMachine`] peels
 //!   complete length-prefixed frames out of arbitrarily torn reads,
 //!   [`frame::WriteQueue`] survives partial writes until the next
-//!   `EPOLLOUT`;
-//! * [`conn`] — per-connection state and the backpressure caps
+//!   `EPOLLOUT`, and [`frame::ReplySink`] builds complete reply frames
+//!   in place for the zero-copy response path;
+//! * `conn` — per-connection state and the backpressure caps
 //!   (pipelining depth, write high-water mark);
-//! * [`driver`] — the loop itself plus the worker pool.
+//! * `driver` — the reactor shards plus the shared worker pool.
+//!
+//! ## Reactor shards
+//!
+//! `ServerConfig::reactors` (env `B64SIMD_REACTORS`, default = the
+//! host's cores) readiness loops each own a `SO_REUSEPORT` listener on
+//! the same address; the kernel hashes incoming connections across
+//! them, so there is no shared accept lock and no cross-shard state on
+//! the socket path. Each shard owns its connection slab, buffer pool
+//! and completion queue outright — the only shared pieces are the
+//! worker pool (so cross-connection batching still spans every shard),
+//! the connection-cap `ConnLimiter` (the busy frame fires on the
+//! global cap regardless of which shard a connection hashed to) and
+//! the metrics, where per-shard counters roll up into the global set.
+//! `reactors = 1` is exactly the old single-loop transport.
 //!
 //! ## Readiness loop ↔ batcher handoff
 //!
-//! The loop owns every socket and never executes codec work; workers
+//! A loop owns its sockets and never executes codec work; workers
 //! execute codec work and never touch a socket. A parsed request
 //! travels as a `WorkItem` (connection token + message + shared session
-//! state) over an mpsc channel; the worker runs it through
+//! state + the owning shard's completion queue and eventfd) over one
+//! mpsc channel shared by every shard; the worker runs it through
 //! [`crate::coordinator::Router`] — where cross-connection batching,
 //! admission ([`crate::coordinator::backpressure::Gate`]) and the
-//! deferred-error model live — serializes the reply frame, pushes it on
-//! a completion queue and signals an eventfd. The loop drains
-//! completions on that wakeup, queues the bytes, and re-arms reading.
-//! At most one request per connection is in flight, preserving the
-//! wire's request/response order; connection-level admission is a
+//! deferred-error model live — and pushes the finished reply frame on
+//! the owning shard's completion queue, signalling its eventfd. The
+//! loop drains completions on that wakeup, hands the bytes to the
+//! connection, and re-arms reading. At most one request per connection
+//! is in flight, preserving the wire's request/response order;
+//! connection-level admission is a
 //! [`crate::coordinator::backpressure::ConnLimiter`] whose refusals are
 //! answered with a typed busy frame rather than a silent drop.
 //!
-//! Everything below [`driver`] is Linux-only (`epoll`); the portable
+//! ## Zero-copy replies
+//!
+//! By default (`ServerConfig::zero_copy`, env `B64SIMD_ZEROCOPY`) a
+//! worker does not serialize a reply `Message` at all: it opens a
+//! frame in a [`frame::ReplySink`], reserves the length prefix, and
+//! the router's sink entry points let the engine's `_policy` kernels
+//! encode/decode the payload *in place* — for ≥ one-batch payloads the
+//! non-temporal store path streams cache lines straight into the
+//! socket-bound buffer. The loop then *adopts* the finished buffer
+//! into the connection's [`frame::WriteQueue`] (a pointer swap when
+//! the queue is drained) instead of memcpying it. The `Vec`
+//! serialization path remains selectable as the differential
+//! reference, and both paths produce byte-identical frames.
+//!
+//! Everything below `driver` is Linux-only (`epoll`); the portable
 //! pieces ([`buffer`], [`frame`]) are shared, and non-Linux hosts fall
 //! back to the thread-per-connection transport
 //! ([`crate::server::Transport::Threaded`]).
@@ -75,4 +109,4 @@ pub(crate) mod conn;
 pub(crate) mod driver;
 
 pub use buffer::BufferPool;
-pub use frame::{FrameMachine, WriteQueue};
+pub use frame::{FrameMachine, ReplySink, WriteQueue};

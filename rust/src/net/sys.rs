@@ -1,17 +1,22 @@
-//! Thin Linux syscall layer: `epoll` and `eventfd` via direct
-//! `extern "C"` bindings (std already links libc — no crates).
+//! Thin Linux syscall layer: `epoll`, `eventfd` and `SO_REUSEPORT`
+//! listener groups via direct `extern "C"` bindings (std already links
+//! libc — no crates).
 //!
-//! Only what the readiness loop needs is bound: `epoll_create1` /
-//! `epoll_ctl` / `epoll_wait`, `eventfd` plus its 8-byte counter
-//! read/write, and `setrlimit` so the load generator can lift the
-//! default 1024-fd soft limit before opening thousands of sockets.
-//! Everything unsafe is confined to this module; the wrappers above the
-//! FFI boundary ([`Epoll`], [`EventFd`]) expose an owned-fd API with
-//! `io::Result` errors and close-on-drop semantics.
+//! Only what the sharded readiness loops need is bound:
+//! `epoll_create1` / `epoll_ctl` / `epoll_wait`, `eventfd` plus its
+//! 8-byte counter read/write, `socket`/`setsockopt`/`bind`/`listen` so
+//! a reactor group can share one port with `SO_REUSEPORT` (the kernel
+//! then spreads incoming connections across the group's listeners),
+//! and `setrlimit` so the load generator can lift the default 1024-fd
+//! soft limit before opening thousands of sockets. Everything unsafe is
+//! confined to this module; the wrappers above the FFI boundary
+//! ([`Epoll`], [`EventFd`], [`reuseport_group`]) expose owned-fd APIs
+//! with `io::Result` errors and close-on-drop semantics.
 
 use std::io;
+use std::net::{SocketAddr, TcpListener};
 use std::os::raw::{c_int, c_void};
-use std::os::unix::io::RawFd;
+use std::os::unix::io::{FromRawFd, RawFd};
 
 // ---------------------------------------------------------------------
 // FFI surface (see `man epoll_ctl`, `man eventfd`, `man setrlimit`).
@@ -24,7 +29,9 @@ use std::os::unix::io::RawFd;
 #[repr(C, packed)]
 #[derive(Clone, Copy)]
 pub struct EpollEvent {
+    /// Readiness mask (`EPOLLIN` / `EPOLLOUT` / …).
     pub events: u32,
+    /// The token registered with [`Epoll::add`].
     pub data: u64,
 }
 
@@ -33,11 +40,14 @@ pub struct EpollEvent {
 #[repr(C)]
 #[derive(Clone, Copy)]
 pub struct EpollEvent {
+    /// Readiness mask (`EPOLLIN` / `EPOLLOUT` / …).
     pub events: u32,
+    /// The token registered with [`Epoll::add`].
     pub data: u64,
 }
 
 impl EpollEvent {
+    /// An empty record, for pre-sizing `epoll_wait` buffers.
     pub const fn zeroed() -> EpollEvent {
         EpollEvent { events: 0, data: 0 }
     }
@@ -47,6 +57,26 @@ impl EpollEvent {
 struct RLimit {
     rlim_cur: u64,
     rlim_max: u64,
+}
+
+/// `struct sockaddr_in` (Linux ABI): family, big-endian port, the four
+/// address octets in network order, zero padding.
+#[repr(C)]
+struct SockAddrIn {
+    sin_family: u16,
+    sin_port: u16,
+    sin_addr: [u8; 4],
+    sin_zero: [u8; 8],
+}
+
+/// `struct sockaddr_in6` (Linux ABI).
+#[repr(C)]
+struct SockAddrIn6 {
+    sin6_family: u16,
+    sin6_port: u16,
+    sin6_flowinfo: u32,
+    sin6_addr: [u8; 16],
+    sin6_scope_id: u32,
 }
 
 extern "C" {
@@ -59,6 +89,16 @@ extern "C" {
     fn close(fd: c_int) -> c_int;
     fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
     fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        optname: c_int,
+        optval: *const c_void,
+        optlen: u32,
+    ) -> c_int;
+    fn bind(fd: c_int, addr: *const c_void, addrlen: u32) -> c_int;
+    fn listen(fd: c_int, backlog: c_int) -> c_int;
 }
 
 /// Readiness: data to read.
@@ -81,6 +121,15 @@ const EPOLL_CLOEXEC: c_int = 0o2000000;
 const EFD_CLOEXEC: c_int = 0o2000000;
 const EFD_NONBLOCK: c_int = 0o4000;
 const RLIMIT_NOFILE: c_int = 7;
+const AF_INET: c_int = 2;
+const AF_INET6: c_int = 10;
+const SOCK_STREAM: c_int = 1;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const SO_REUSEPORT: c_int = 15;
+/// Backlog for reuseport listeners (matches std's `TcpListener::bind`).
+const LISTEN_BACKLOG: c_int = 128;
 
 fn cvt(ret: c_int) -> io::Result<c_int> {
     if ret < 0 {
@@ -100,6 +149,7 @@ pub struct Epoll {
 }
 
 impl Epoll {
+    /// Create an epoll instance (`EPOLL_CLOEXEC`).
     pub fn new() -> io::Result<Epoll> {
         let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
         Ok(Epoll { fd })
@@ -162,11 +212,13 @@ pub struct EventFd {
 }
 
 impl EventFd {
+    /// Create a nonblocking eventfd with a zero counter.
     pub fn new() -> io::Result<EventFd> {
         let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
         Ok(EventFd { fd })
     }
 
+    /// The raw descriptor, for epoll registration.
     pub fn raw(&self) -> RawFd {
         self.fd
     }
@@ -206,6 +258,96 @@ pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
     let new = RLimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
     cvt(unsafe { setrlimit(RLIMIT_NOFILE, &new) })?;
     Ok(new.rlim_cur)
+}
+
+/// Close-on-drop guard for a raw fd mid-construction, so every error
+/// path between `socket()` and `TcpListener::from_raw_fd` releases it.
+struct OwnedFd(RawFd);
+
+impl Drop for OwnedFd {
+    fn drop(&mut self) {
+        if self.0 >= 0 {
+            unsafe { close(self.0) };
+        }
+    }
+}
+
+/// Bind one listening socket with `SO_REUSEPORT` (and `SO_REUSEADDR`,
+/// matching std's listener) set *before* `bind`, which std's
+/// `TcpListener::bind` cannot do. Every listener of a reactor group
+/// must carry the option or the kernel refuses the shared bind with
+/// `EADDRINUSE`.
+pub fn listen_reuseport(addr: SocketAddr) -> io::Result<TcpListener> {
+    let domain = match addr {
+        SocketAddr::V4(_) => AF_INET,
+        SocketAddr::V6(_) => AF_INET6,
+    };
+    let fd = OwnedFd(cvt(unsafe { socket(domain, SOCK_STREAM | SOCK_CLOEXEC, 0) })?);
+    let one: c_int = 1;
+    for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+        cvt(unsafe {
+            setsockopt(
+                fd.0,
+                SOL_SOCKET,
+                opt,
+                (&one as *const c_int).cast::<c_void>(),
+                std::mem::size_of::<c_int>() as u32,
+            )
+        })?;
+    }
+    match addr {
+        SocketAddr::V4(a) => {
+            let sa = SockAddrIn {
+                sin_family: AF_INET as u16,
+                sin_port: a.port().to_be(),
+                sin_addr: a.ip().octets(),
+                sin_zero: [0; 8],
+            };
+            cvt(unsafe {
+                bind(
+                    fd.0,
+                    (&sa as *const SockAddrIn).cast::<c_void>(),
+                    std::mem::size_of::<SockAddrIn>() as u32,
+                )
+            })?;
+        }
+        SocketAddr::V6(a) => {
+            let sa = SockAddrIn6 {
+                sin6_family: AF_INET6 as u16,
+                sin6_port: a.port().to_be(),
+                sin6_flowinfo: a.flowinfo(),
+                sin6_addr: a.ip().octets(),
+                sin6_scope_id: a.scope_id(),
+            };
+            cvt(unsafe {
+                bind(
+                    fd.0,
+                    (&sa as *const SockAddrIn6).cast::<c_void>(),
+                    std::mem::size_of::<SockAddrIn6>() as u32,
+                )
+            })?;
+        }
+    }
+    cvt(unsafe { listen(fd.0, LISTEN_BACKLOG) })?;
+    let listener = unsafe { TcpListener::from_raw_fd(fd.0) };
+    std::mem::forget(fd); // ownership transferred to the TcpListener
+    Ok(listener)
+}
+
+/// Bind `n` `SO_REUSEPORT` listeners sharing one address — one per
+/// reactor shard. The first bind resolves a port-0 request to a
+/// concrete ephemeral port; the rest join that port. The kernel then
+/// hashes incoming connections across the group, which is what lets
+/// each shard run its own accept loop with no shared accept lock.
+pub fn reuseport_group(addr: SocketAddr, n: usize) -> io::Result<Vec<TcpListener>> {
+    let first = listen_reuseport(addr)?;
+    let bound = first.local_addr()?;
+    let mut group = Vec::with_capacity(n.max(1));
+    group.push(first);
+    for _ in 1..n {
+        group.push(listen_reuseport(bound)?);
+    }
+    Ok(group)
 }
 
 #[cfg(test)]
@@ -257,5 +399,51 @@ mod tests {
     fn nofile_limit_is_monotone() {
         let got = raise_nofile_limit(256).unwrap();
         assert!(got >= 256);
+    }
+
+    #[test]
+    fn reuseport_group_shares_one_port() {
+        let group = reuseport_group("127.0.0.1:0".parse().unwrap(), 4).unwrap();
+        let addr = group[0].local_addr().unwrap();
+        assert_ne!(addr.port(), 0);
+        for l in &group {
+            assert_eq!(l.local_addr().unwrap(), addr, "all members bind the same port");
+            l.set_nonblocking(true).unwrap();
+        }
+        // The kernel spreads connects across the group; every one must be
+        // accepted by *some* member.
+        let conns: Vec<TcpStream> =
+            (0..32).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        let mut accepted = 0usize;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while accepted < conns.len() && std::time::Instant::now() < deadline {
+            let mut progressed = false;
+            for l in &group {
+                while l.accept().is_ok() {
+                    accepted += 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        assert_eq!(accepted, conns.len(), "every connection reached a group member");
+        drop(conns);
+    }
+
+    #[test]
+    fn reuseport_single_listener_still_accepts() {
+        // A group of one degrades to a plain listener.
+        let group = reuseport_group("127.0.0.1:0".parse().unwrap(), 1).unwrap();
+        assert_eq!(group.len(), 1);
+        let addr = group[0].local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = group[0].accept().unwrap();
+        client.write_all(b"hi").unwrap();
+        let mut buf = [0u8; 2];
+        use std::io::Read as _;
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
     }
 }

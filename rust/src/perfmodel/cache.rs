@@ -25,18 +25,24 @@ use super::opcount::{ops_for, CodecOps};
 /// One cache level: capacity and sustainable bandwidth.
 #[derive(Debug, Clone, Copy)]
 pub struct CacheLevel {
+    /// Level name ("L1", "L2", "LLC", "DRAM").
     pub name: &'static str,
+    /// Capacity in bytes (`usize::MAX` for DRAM).
     pub capacity: usize,
+    /// Sustainable copy bandwidth at this level, GB/s.
     pub bandwidth_gbps: f64,
 }
 
 /// Machine parameters.
 #[derive(Debug, Clone)]
 pub struct Machine {
+    /// Human-readable machine name.
     pub name: &'static str,
+    /// Core frequency the model assumes, GHz.
     pub freq_ghz: f64,
     /// 512-bit-op issue width (ports able to execute the codec's ops).
     pub issue_width: f64,
+    /// Cache levels, innermost first (last entry models DRAM).
     pub levels: Vec<CacheLevel>,
     /// Fixed per-call overhead in nanoseconds (function call + timer).
     pub overhead_ns: f64,
@@ -66,16 +72,22 @@ impl Machine {
 /// Which direction to model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Op {
+    /// Model the encode direction.
     Encode,
+    /// Model the decode direction.
     Decode,
+    /// Model a plain memory copy (the paper's reference line).
     Memcpy,
 }
 
 /// One predicted point.
 #[derive(Debug, Clone, Copy)]
 pub struct PredictPoint {
+    /// Input size in bytes.
     pub size: usize,
+    /// Predicted throughput, GB/s.
     pub gbps: f64,
+    /// Which resource bounds it ("compute", "L2", "DRAM", ...).
     pub bound: &'static str,
 }
 
@@ -85,10 +97,12 @@ pub struct CacheModel {
 }
 
 impl CacheModel {
+    /// A model over the given machine parameters.
     pub fn new(machine: Machine) -> Self {
         Self { machine }
     }
 
+    /// The machine being modelled.
     pub fn machine(&self) -> &Machine {
         &self.machine
     }

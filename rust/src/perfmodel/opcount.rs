@@ -17,6 +17,7 @@
 /// Instruction/op counts for one codec formulation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CodecOps {
+    /// Codec name (matches the paper's series labels).
     pub name: &'static str,
     /// Bytes of *raw* data consumed (encode) per iteration.
     pub enc_bytes_per_iter: usize,

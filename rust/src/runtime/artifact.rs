@@ -44,32 +44,47 @@ impl std::fmt::Display for ArtifactKind {
 /// One compiled HLO module.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Unique artifact name (e.g. `encode_r64`).
     pub name: String,
+    /// HLO text filename relative to the manifest directory.
     pub file: String,
+    /// What computation the module performs.
     pub kind: ArtifactKind,
     /// Row-count size class this executable was compiled for.
     pub rows: usize,
+    /// Input tensor shapes, in argument order.
     pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes.
     pub outputs: Vec<Vec<usize>>,
+    /// First 16 hex chars of the HLO file's SHA-256 (staleness check).
     pub sha256_16: String,
 }
 
 /// The parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Interchange format tag (must be `hlo-text`).
     pub format: String,
+    /// Element dtype of the block tensors (must be `u8`).
     pub dtype: String,
+    /// Rows per Pallas tile the kernels were compiled with.
     pub tile_rows: usize,
+    /// Compiled row-count size classes, ascending.
     pub row_classes: Vec<usize>,
+    /// Every compiled module.
     pub artifacts: Vec<Artifact>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 /// Manifest loading errors.
 #[derive(Debug)]
 pub enum ManifestError {
+    /// The manifest file could not be read.
     Io(std::io::Error),
+    /// The manifest JSON did not parse or lacked fields.
     Parse(String),
+    /// The manifest declares a format/dtype this runtime cannot run.
     Unsupported(String),
 }
 

@@ -7,7 +7,9 @@ use super::artifact::{Artifact, ArtifactKind, Manifest};
 
 /// A loaded-and-compiled executable plus its manifest entry.
 pub struct Loaded {
+    /// The manifest entry this executable was compiled from.
     pub artifact: Artifact,
+    /// The compiled PJRT executable.
     pub exe: xla::PjRtLoadedExecutable,
 }
 
@@ -33,10 +35,12 @@ impl Runtime {
         Self::new(Manifest::default_dir())
     }
 
+    /// The loaded manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -32,10 +32,12 @@ fn u8_literal(dims: &[usize], data: &[u8]) -> anyhow::Result<xla::Literal> {
 }
 
 impl BlockExecutor {
+    /// Wrap a runtime handle.
     pub fn new(runtime: Arc<Runtime>) -> Self {
         Self { runtime }
     }
 
+    /// The underlying runtime.
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.runtime
     }

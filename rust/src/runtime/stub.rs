@@ -37,10 +37,12 @@ impl Runtime {
         Self::new(Manifest::default_dir())
     }
 
+    /// The validated manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Platform name (always `"stub"`).
     pub fn platform(&self) -> String {
         "stub".to_string()
     }
@@ -71,33 +73,40 @@ pub struct BlockExecutor {
 }
 
 impl BlockExecutor {
+    /// Wrap a runtime handle.
     pub fn new(runtime: Arc<Runtime>) -> Self {
         Self { runtime }
     }
 
+    /// The underlying runtime.
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.runtime
     }
 
+    /// Smallest compiled row class holding `rows`.
     pub fn row_class_for(&self, rows: usize) -> usize {
         self.runtime.manifest().row_class_for(rows)
     }
 
+    /// Batched block encode (unreachable without the `pjrt` feature).
     pub fn encode_blocks(&self, input: &[u8], _table: &[u8; 64]) -> anyhow::Result<Vec<u8>> {
         assert!(input.len() % RAW_BLOCK == 0, "input must be whole 48-byte blocks");
         anyhow::bail!("pjrt feature disabled")
     }
 
+    /// Batched block decode (unreachable without the `pjrt` feature).
     pub fn decode_blocks(&self, input: &[u8], _dtable: &[u8; 128]) -> anyhow::Result<BlockDecodeOutput> {
         assert!(input.len() % B64_BLOCK == 0, "input must be whole 64-char blocks");
         anyhow::bail!("pjrt feature disabled")
     }
 
+    /// Batched block validation (unreachable without the `pjrt` feature).
     pub fn validate_blocks(&self, input: &[u8], _dtable: &[u8; 128]) -> anyhow::Result<Vec<u8>> {
         assert!(input.len() % B64_BLOCK == 0);
         anyhow::bail!("pjrt feature disabled")
     }
 
+    /// Round-trip self-check (unreachable without the `pjrt` feature).
     pub fn selftest(&self) -> anyhow::Result<bool> {
         anyhow::bail!("pjrt feature disabled")
     }

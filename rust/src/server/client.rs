@@ -8,14 +8,19 @@ use crate::base64::{Mode, Whitespace};
 /// Client-side failures.
 #[derive(Debug)]
 pub enum ClientError {
+    /// Wire-level failure (I/O error or malformed frame).
     Proto(ProtoError),
+    /// The server closed the connection at a frame boundary.
     Closed,
+    /// The server answered with an error frame (its message inside).
     Server(String),
     /// The server refused the connection at its admission cap (a
     /// `RespBusy` frame) — retry later, possibly against another
     /// replica. Distinct from [`ClientError::Server`] so callers can
     /// back off instead of failing the request.
     Busy(String),
+    /// The server answered with a response type the request never
+    /// solicits.
     Unexpected,
 }
 
@@ -47,6 +52,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a service address (`TCP_NODELAY` set).
     pub fn connect(addr: SocketAddr) -> Result<Self, ClientError> {
         let stream = TcpStream::connect(addr).map_err(ProtoError::Io)?;
         stream.set_nodelay(true).ok();

@@ -1,11 +1,14 @@
-//! TCP service speaking a length-prefixed codec protocol.
+//! TCP service speaking a length-prefixed codec protocol (the wire
+//! format is specified in `docs/PROTOCOL.md`).
 //!
 //! Two transports behind one [`serve`] entry point (picked by
 //! [`ServerConfig::transport`] / `B64SIMD_TRANSPORT`):
 //!
 //! * **epoll** (Linux default) — the event-driven [`crate::net`]
-//!   readiness loop: thousands of connections multiplexed onto a fixed
-//!   worker set;
+//!   subsystem: [`ServerConfig::reactors`] readiness loops sharing one
+//!   port via `SO_REUSEPORT`, thousands of connections multiplexed
+//!   onto a fixed worker set, replies built in place on the zero-copy
+//!   path;
 //! * **threaded** — one OS thread per connection (bounded by
 //!   `max_connections`), the portable fallback.
 //!

@@ -48,36 +48,133 @@ use crate::base64::{Alphabet, Mode, Whitespace};
 /// Frames larger than this are rejected (sanity bound, 256 MiB).
 pub const MAX_FRAME: usize = 256 << 20;
 
-/// A parsed protocol message.
+/// Wire tag of [`Message::RespData`] — referenced by the zero-copy
+/// reply path, which writes the tag byte itself before letting the
+/// codec kernels fill the payload in place.
+pub const TAG_RESP_DATA: u8 = 0x81;
+
+/// Wire tag of [`Message::RespError`] (see [`TAG_RESP_DATA`]).
+pub const TAG_RESP_ERROR: u8 = 0x82;
+
+/// A parsed protocol message. The full wire layout (tags, field order,
+/// trailing extensions and compatibility rules) is specified in
+/// `docs/PROTOCOL.md`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    Encode { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
-    Decode { id: u64, alphabet: String, mode: Mode, ws: Whitespace, data: Vec<u8> },
-    Validate { id: u64, alphabet: String, mode: Mode, data: Vec<u8> },
-    /// `wrap` (encode streams only): CRLF-wrap output at this many chars
-    /// per line; 0 means flat output (the only value decode streams
-    /// accept).
-    StreamBegin { id: u64, decode: bool, alphabet: String, mode: Mode, ws: Whitespace, wrap: u16 },
-    StreamChunk { id: u64, data: Vec<u8> },
-    StreamEnd { id: u64 },
+    /// Tag `0x01`: one-shot encode request.
+    Encode {
+        /// Request id, echoed in the reply.
+        id: u64,
+        /// Alphabet name (`"standard"`, `"url"`, …).
+        alphabet: String,
+        /// Strictness mode (encode requests ignore it on execution).
+        mode: Mode,
+        /// Raw bytes to encode.
+        data: Vec<u8>,
+    },
+    /// Tag `0x02` (legacy, `ws = None`) or `0x04` (whitespace-tolerant):
+    /// one-shot decode request.
+    Decode {
+        /// Request id, echoed in the reply.
+        id: u64,
+        /// Alphabet name.
+        alphabet: String,
+        /// Strictness mode (padding rules).
+        mode: Mode,
+        /// Whitespace the decoder skips; error offsets still index the
+        /// original payload. `None` keeps the legacy `0x02` layout.
+        ws: Whitespace,
+        /// Base64 characters to decode.
+        data: Vec<u8>,
+    },
+    /// Tag `0x03`: decode-side validation without materializing output.
+    Validate {
+        /// Request id, echoed in the reply.
+        id: u64,
+        /// Alphabet name.
+        alphabet: String,
+        /// Strictness mode (padding rules).
+        mode: Mode,
+        /// Base64 characters to validate.
+        data: Vec<u8>,
+    },
+    /// Tag `0x10`: open a chunked stream session.
+    StreamBegin {
+        /// Stream id (scoped to the connection).
+        id: u64,
+        /// Direction: `true` = decode, `false` = encode.
+        decode: bool,
+        /// Alphabet name.
+        alphabet: String,
+        /// Strictness mode (decode streams).
+        mode: Mode,
+        /// Whitespace skipped by decode streams (trailing extension
+        /// byte; absent on the wire means `None`, for old clients).
+        ws: Whitespace,
+        /// Encode streams only: CRLF-wrap output at this many chars per
+        /// line; 0 means flat output (the only value decode streams
+        /// accept). A second trailing extension, serialized only when
+        /// non-zero.
+        wrap: u16,
+    },
+    /// Tag `0x11`: feed a chunk into an open stream.
+    StreamChunk {
+        /// Stream id from [`Message::StreamBegin`].
+        id: u64,
+        /// Raw (encode) or base64 (decode) bytes for this chunk.
+        data: Vec<u8>,
+    },
+    /// Tag `0x12`: close a stream, flushing its carry state.
+    StreamEnd {
+        /// Stream id to finish.
+        id: u64,
+    },
+    /// Tag `0x20`: request the server's metrics report.
     Stats,
+    /// Tag `0x21`: liveness probe.
     Ping,
-    RespData { id: u64, data: Vec<u8> },
-    RespError { id: u64, message: String },
+    /// Tag `0x81`: successful reply carrying output bytes.
+    RespData {
+        /// Id of the request this answers.
+        id: u64,
+        /// Output payload (empty for validate/stream-begin acks).
+        data: Vec<u8>,
+    },
+    /// Tag `0x82`: error reply.
+    RespError {
+        /// Id of the request this answers (0 when unattributable).
+        id: u64,
+        /// Human-readable error, stable across transports and reply
+        /// paths (the parity tests compare it byte-for-byte).
+        message: String,
+    },
+    /// Tag `0x83`: reply to [`Message::Ping`].
     Pong,
-    RespStats { report: String },
-    /// Admission refusal: the server is at its connection cap. Written
-    /// once on the fresh socket, which is then closed — the typed
-    /// alternative to the silent drop clients used to see.
-    RespBusy { message: String },
+    /// Tag `0x84`: reply to [`Message::Stats`].
+    RespStats {
+        /// One-line metrics snapshot (`Metrics::report`).
+        report: String,
+    },
+    /// Tag `0x85` — admission refusal: the server is at its connection
+    /// cap. Written once on the fresh socket, which is then closed —
+    /// the typed alternative to the silent drop clients used to see.
+    RespBusy {
+        /// Why the connection was refused (includes the cap).
+        message: String,
+    },
 }
 
 /// Protocol-level failures.
 #[derive(Debug)]
 pub enum ProtoError {
+    /// Socket-level failure while reading or writing a frame.
     Io(std::io::Error),
+    /// A length prefix (or a reply body) exceeded [`MAX_FRAME`].
     FrameTooLarge(usize),
+    /// A frame body that does not parse (unknown tag, truncated field,
+    /// invalid mode/whitespace byte…). Fatal for the connection.
     Malformed(&'static str),
+    /// A request named an alphabet the server does not know.
     UnknownAlphabet(String),
 }
 
@@ -193,12 +290,12 @@ impl Message {
             Message::Stats => out.push(0x20),
             Message::Ping => out.push(0x21),
             Message::RespData { id, data } => {
-                out.push(0x81);
+                out.push(TAG_RESP_DATA);
                 out.extend_from_slice(&id.to_le_bytes());
                 out.extend_from_slice(data);
             }
             Message::RespError { id, message } => {
-                out.push(0x82);
+                out.push(TAG_RESP_ERROR);
                 out.extend_from_slice(&id.to_le_bytes());
                 out.extend_from_slice(message.as_bytes());
             }

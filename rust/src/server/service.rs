@@ -1,12 +1,14 @@
-//! The codec service: TCP listener, pluggable transport, shared router.
+//! The codec service: TCP listeners, pluggable transport, shared router.
 //!
 //! Two transports speak the same wire protocol over the same
 //! [`Router`]:
 //!
 //! * [`Transport::Epoll`] (Linux, the default) — the event-driven
-//!   [`crate::net`] subsystem: one edge-triggered readiness loop
-//!   multiplexing every connection onto a fixed worker pool, so
-//!   thousands of mostly-idle clients cost no threads;
+//!   [`crate::net`] subsystem, sharded across
+//!   [`ServerConfig::reactors`] edge-triggered readiness loops (one
+//!   `SO_REUSEPORT` listener each) feeding a fixed worker pool, so
+//!   thousands of mostly-idle clients cost no threads and the event
+//!   loop scales with cores;
 //! * [`Transport::Threaded`] — the original thread-per-connection
 //!   fallback (non-Linux hosts, differential testing).
 //!
@@ -27,6 +29,7 @@ use crate::base64::{Mode, Whitespace};
 use crate::coordinator::backpressure::ConnLimiter;
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
+use crate::net::frame::ReplySink;
 
 /// Which connection subsystem `serve` runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +42,8 @@ pub enum Transport {
 }
 
 impl Transport {
+    /// Short name, as used on the wire of the `B64SIMD_TRANSPORT` knob
+    /// and in benchmark tables.
     pub fn name(self) -> &'static str {
         match self {
             Transport::Epoll => "epoll",
@@ -76,24 +81,78 @@ impl Transport {
 /// Server tuning.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Address to bind (every reactor shard binds it via
+    /// `SO_REUSEPORT` when `reactors > 1`).
     pub addr: SocketAddr,
-    /// Maximum concurrent connections; excess connections get a busy
-    /// frame and are closed.
+    /// Maximum concurrent connections across all shards; excess
+    /// connections get a busy frame and are closed.
     pub max_connections: usize,
     /// Maximum open streams per connection.
     pub max_streams_per_connection: usize,
     /// Connection subsystem (see [`Transport::from_env`]).
     pub transport: Transport,
     /// Worker threads executing requests for the epoll transport (the
-    /// threaded transport uses one thread per connection instead).
+    /// threaded transport uses one thread per connection instead). The
+    /// pool is shared by every reactor shard, so cross-connection
+    /// batching spans shards.
     pub net_workers: usize,
+    /// Epoll reactor shards: each runs its own `SO_REUSEPORT` listener,
+    /// readiness loop, slab, buffer pool and completion queue, and the
+    /// kernel spreads incoming connections across them. `1` preserves
+    /// the single-loop behaviour; the default follows
+    /// `B64SIMD_REACTORS`, else the host's available cores. Ignored by
+    /// the threaded transport.
+    pub reactors: usize,
+    /// Reply path for the epoll transport: `true` (default) builds
+    /// reply frames in place and hands the buffer to the write queue
+    /// (zero-copy); `false` serializes replies through `Vec`s — the
+    /// differential reference path. `B64SIMD_ZEROCOPY=0` flips the
+    /// default off.
+    pub zero_copy: bool,
+}
+
+impl ServerConfig {
+    /// Parse an on/off switch value (`1`/`true`/`on` vs `0`/`false`/
+    /// `off`) — the accepted spellings of `B64SIMD_ZEROCOPY` and the
+    /// CLI/loadgen `--zerocopy` flags, kept in one place so they cannot
+    /// drift.
+    pub fn parse_switch(v: &str) -> Option<bool> {
+        match v {
+            "1" | "true" | "on" => Some(true),
+            "0" | "false" | "off" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// `B64SIMD_REACTORS` override, else the host's available cores.
+    fn reactors_from_env() -> usize {
+        if let Ok(v) = std::env::var("B64SIMD_REACTORS") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => return n,
+                _ => eprintln!("b64simd: ignoring invalid B64SIMD_REACTORS value '{v}'"),
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// `B64SIMD_ZEROCOPY` override (`0`/`false`/`off` select the `Vec`
+    /// reference path), else the zero-copy default.
+    fn zero_copy_from_env() -> bool {
+        match std::env::var("B64SIMD_ZEROCOPY") {
+            Err(_) => true,
+            Ok(v) => Self::parse_switch(&v).unwrap_or_else(|| {
+                eprintln!("b64simd: ignoring unknown B64SIMD_ZEROCOPY value '{v}'");
+                true
+            }),
+        }
+    }
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:4648".parse().unwrap(), // port = RFC number
-            // The epoll loop holds connections, not threads, so the
+            // The epoll loops hold connections, not threads, so the
             // default cap is an admission bound, not a thread budget.
             max_connections: 1024,
             max_streams_per_connection: 16,
@@ -102,6 +161,8 @@ impl Default for ServerConfig {
                 .map(|n| n.get())
                 .unwrap_or(4)
                 .clamp(2, 8),
+            reactors: Self::reactors_from_env(),
+            zero_copy: Self::zero_copy_from_env(),
         }
     }
 }
@@ -109,6 +170,7 @@ impl Default for ServerConfig {
 /// Running server handle. Dropping stops the transport (joined); use
 /// [`ServerHandle::shutdown`] for an explicit stop.
 pub struct ServerHandle {
+    /// The bound address (useful with a port-0 request).
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
@@ -119,9 +181,9 @@ pub struct ServerHandle {
 enum Waker {
     /// Connect once to unblock a blocking `accept()`.
     Connect(SocketAddr),
-    /// Signal the readiness loop's eventfd.
+    /// Signal every reactor shard's eventfd.
     #[cfg(target_os = "linux")]
-    Event(Arc<crate::net::sys::EventFd>),
+    Events(Vec<Arc<crate::net::sys::EventFd>>),
 }
 
 impl Waker {
@@ -131,7 +193,11 @@ impl Waker {
                 let _ = TcpStream::connect(addr);
             }
             #[cfg(target_os = "linux")]
-            Waker::Event(efd) => efd.signal(),
+            Waker::Events(efds) => {
+                for efd in efds {
+                    efd.signal();
+                }
+            }
         }
     }
 }
@@ -157,20 +223,36 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Start the service; returns once the listener is bound.
+/// Start the service; returns once the listener(s) are bound. The
+/// epoll transport binds [`ServerConfig::reactors`] `SO_REUSEPORT`
+/// listeners and runs one readiness loop per shard; a single-reactor
+/// configuration keeps the plain listener.
 pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<ServerHandle> {
-    let listener = TcpListener::bind(config.addr)?;
-    let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     match config.transport {
         #[cfg(target_os = "linux")]
         Transport::Epoll => {
-            let srv = crate::net::driver::spawn(router, &config, listener, stop.clone())?;
-            Ok(ServerHandle { addr, stop, threads: srv.threads, waker: Waker::Event(srv.wake) })
+            let shards = config.reactors.max(1);
+            let listeners = if shards > 1 {
+                crate::net::sys::reuseport_group(config.addr, shards)?
+            } else {
+                vec![TcpListener::bind(config.addr)?]
+            };
+            let addr = listeners[0].local_addr()?;
+            let srv = crate::net::driver::spawn(router, &config, listeners, stop.clone())?;
+            Ok(ServerHandle { addr, stop, threads: srv.threads, waker: Waker::Events(srv.wakes) })
         }
         #[cfg(not(target_os = "linux"))]
-        Transport::Epoll => serve_threaded(router, config, listener, addr, stop),
-        Transport::Threaded => serve_threaded(router, config, listener, addr, stop),
+        Transport::Epoll => {
+            let listener = TcpListener::bind(config.addr)?;
+            let addr = listener.local_addr()?;
+            serve_threaded(router, config, listener, addr, stop)
+        }
+        Transport::Threaded => {
+            let listener = TcpListener::bind(config.addr)?;
+            let addr = listener.local_addr()?;
+            serve_threaded(router, config, listener, addr, stop)
+        }
     }
 }
 
@@ -354,5 +436,72 @@ pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState
         Message::Ping => Message::Pong,
         // A server never receives responses; answer with an error frame.
         other => Message::RespError { id: 0, message: format!("unexpected message {other:?}") },
+    }
+}
+
+/// Resolve a one-shot request's alphabet, or the error reply to send.
+fn make_request(
+    id: u64,
+    kind: RequestKind,
+    alphabet: String,
+    mode: Mode,
+    ws: Whitespace,
+    data: Vec<u8>,
+) -> Result<Request, Message> {
+    match resolve_alphabet(&alphabet) {
+        Ok(alphabet) => Ok(Request { id, kind, payload: data, alphabet, mode, ws }),
+        Err(e) => Err(Message::RespError { id, message: e.to_string() }),
+    }
+}
+
+/// [`dispatch`] on the zero-copy reply path: the complete reply frame
+/// is written into `sink` instead of materializing a [`Message`]. The
+/// one-shot hot paths go through [`Router::process_into`], which lets
+/// the codec kernels fill the payload in place; everything else (stream
+/// control, stats, errors) serializes its small reply directly into the
+/// sink. The produced bytes are identical to framing [`dispatch`]'s
+/// reply — pinned by the router's parity tests and
+/// `rust/tests/transport.rs`. `Err` marks an unframeable (oversized)
+/// reply, fatal for the connection on both paths.
+pub(crate) fn dispatch_into(
+    msg: Message,
+    router: &Router,
+    session: &mut SessionState,
+    sink: &mut ReplySink,
+) -> Result<(), ProtoError> {
+    match msg {
+        Message::Encode { id, alphabet, mode, data } => {
+            match make_request(id, RequestKind::Encode, alphabet, mode, Whitespace::None, data) {
+                Ok(req) => router.process_into(req, sink),
+                Err(reply) => sink.push_message(&reply),
+            }
+        }
+        Message::Decode { id, alphabet, mode, ws, data } => {
+            match make_request(id, RequestKind::Decode, alphabet, mode, ws, data) {
+                Ok(req) => router.process_into(req, sink),
+                Err(reply) => sink.push_message(&reply),
+            }
+        }
+        Message::Validate { id, alphabet, mode, data } => {
+            match make_request(id, RequestKind::Validate, alphabet, mode, Whitespace::None, data) {
+                Ok(req) => router.process_into(req, sink),
+                Err(reply) => sink.push_message(&reply),
+            }
+        }
+        // Stream payload replies: the session already materialized the
+        // output bytes, so frame them with one copy into the sink
+        // instead of the serialize-then-copy `push_message` pair.
+        Message::StreamChunk { id, data } => match session.chunk(id, &data) {
+            Ok(out) => sink.push_data(id, &out),
+            Err(e) => sink.push_message(&stream_err(id, e)),
+        },
+        Message::StreamEnd { id } => match session.finish(id) {
+            Ok(out) => sink.push_data(id, &out),
+            Err(e) => sink.push_message(&stream_err(id, e)),
+        },
+        other => {
+            let reply = dispatch(other, router, session);
+            sink.push_message(&reply)
+        }
     }
 }

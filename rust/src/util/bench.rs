@@ -12,16 +12,20 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Series label.
     pub name: String,
     /// Reference byte count per closure call (base64 bytes, per paper).
     pub bytes: usize,
+    /// Median per-call wall time.
     pub median: Duration,
     /// Median absolute deviation (robust spread).
     pub mad: Duration,
+    /// Throughput over the reference byte count.
     pub gbps: f64,
 }
 
 impl BenchResult {
+    /// Format as one aligned table row.
     pub fn row(&self) -> String {
         format!(
             "{:<28}{:>12}B {:>12.3?} ±{:>9.3?} {:>9.3} GB/s",
@@ -37,6 +41,7 @@ pub struct BenchOpts {
     pub reps: usize,
     /// Minimum wall time per repetition; the closure is looped to reach it.
     pub min_rep_time: Duration,
+    /// Untimed warmup before the first repetition.
     pub warmup: Duration,
 }
 

@@ -11,18 +11,26 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (surfaced as `f64`).
     Number(f64),
+    /// A string.
     String(String),
+    /// An array.
     Array(Vec<Value>),
+    /// An object (key-sorted).
     Object(BTreeMap<String, Value>),
 }
 
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input (0 for schema errors).
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 
@@ -47,6 +55,7 @@ impl Value {
         Ok(v)
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::String(s) => Some(s),
@@ -54,6 +63,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Number(n) => Some(*n),
@@ -61,11 +71,13 @@ impl Value {
         }
     }
 
+    /// The numeric payload as a non-negative integer, if exact.
     pub fn as_usize(&self) -> Option<usize> {
         let n = self.as_f64()?;
         (n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64).then_some(n as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -73,6 +85,7 @@ impl Value {
         }
     }
 
+    /// Object field lookup (`None` for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Object(m) => m.get(key),
@@ -87,12 +100,14 @@ impl Value {
             .ok_or_else(|| JsonError { offset: 0, message: format!("missing string field '{key}'") })
     }
 
+    /// [`Value::req_str`]'s integer sibling.
     pub fn req_usize(&self, key: &str) -> Result<usize, JsonError> {
         self.get(key)
             .and_then(Value::as_usize)
             .ok_or_else(|| JsonError { offset: 0, message: format!("missing integer field '{key}'") })
     }
 
+    /// [`Value::req_str`]'s array sibling.
     pub fn req_array(&self, key: &str) -> Result<&[Value], JsonError> {
         self.get(key)
             .and_then(Value::as_array)

@@ -20,6 +20,7 @@ impl Rng64 {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -39,6 +40,7 @@ impl Rng64 {
         ((self.next_u64() >> 32).wrapping_mul(bound)) >> 32
     }
 
+    /// Fill `buf` with random bytes.
     pub fn fill(&mut self, buf: &mut [u8]) {
         let mut chunks = buf.chunks_exact_mut(8);
         for c in &mut chunks {

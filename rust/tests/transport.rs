@@ -1,15 +1,19 @@
-//! Transport-level tests: the epoll readiness loop against the
-//! thread-per-connection fallback.
+//! Transport-level tests: the (sharded) epoll readiness loops against
+//! the thread-per-connection fallback.
 //!
 //! * soak — ≥ 2× the old 256-connection cap held open concurrently,
 //!   interleaving one-shot encode/decode/ws-decode and streaming
 //!   sessions on every connection, all pinned to the `Engine` oracle;
+//!   run at `reactors ∈ {1, 4}`;
 //! * parity — the same raw request frames produce *byte-identical*
-//!   response frames on both transports;
+//!   response frames across both transports, `reactors ∈ {1, 4}` and
+//!   both reply paths (zero-copy sink vs `Vec` serialization);
 //! * framing — torn/pipelined delivery straight against a live socket
-//!   (the `FrameMachine` unit tests live in `rust/src/net/frame.rs`);
+//!   (the `FrameMachine`/`ReplySink` unit tests live in
+//!   `rust/src/net/frame.rs`), at `reactors ∈ {1, 4}`;
 //! * shedding — over-cap connections get the typed busy frame on both
-//!   transports.
+//!   transports, and the cap holds *globally* when connections hash
+//!   onto different `SO_REUSEPORT` shards.
 //!
 //! The server helpers honour the explicit `Transport` they are given;
 //! the soak test uses `Transport::from_env()` so the CI matrix
@@ -27,7 +31,12 @@ use b64simd::server::proto::Message;
 use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
 use b64simd::workload::random_bytes;
 
-fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Router>) {
+fn start_cfg(
+    transport: Transport,
+    max_connections: usize,
+    reactors: usize,
+    zero_copy: bool,
+) -> (ServerHandle, Arc<Router>) {
     let router = Arc::new(Router::new(rust_factory(), RouterConfig::default()));
     let handle = serve(
         router.clone(),
@@ -35,11 +44,19 @@ fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Rou
             addr: "127.0.0.1:0".parse().unwrap(),
             max_connections,
             transport,
+            reactors,
+            zero_copy,
             ..Default::default()
         },
     )
     .expect("bind");
     (handle, router)
+}
+
+fn start(transport: Transport, max_connections: usize) -> (ServerHandle, Arc<Router>) {
+    // Env-default reactors and reply path, like production `serve`.
+    let cfg = ServerConfig::default();
+    start_cfg(transport, max_connections, cfg.reactors, cfg.zero_copy)
 }
 
 /// Lift the fd soft limit (client + server sockets share this process).
@@ -53,14 +70,15 @@ fn want_fds(_n: u64) {
 // ---------------------------------------------------------------------
 // Soak: 512 concurrent connections (2× the old cap), every workload
 // kind interleaved, every response checked against the Engine oracle.
+// Run single-loop and sharded.
 // ---------------------------------------------------------------------
 
-#[test]
-fn soak_512_concurrent_connections_mixed_workloads() {
+fn soak_512_mixed_workloads(reactors: usize) {
     const CONNS: usize = 512;
     const THREADS: usize = 16;
     want_fds(CONNS as u64 * 2 + 512);
-    let (handle, router) = start(Transport::from_env(), CONNS + 32);
+    let zero_copy = ServerConfig::default().zero_copy;
+    let (handle, router) = start_cfg(Transport::from_env(), CONNS + 32, reactors, zero_copy);
     let engine = Engine::get();
 
     std::thread::scope(|s| {
@@ -129,9 +147,28 @@ fn soak_512_concurrent_connections_mixed_workloads() {
     let accepted = m.conns_accepted.load(std::sync::atomic::Ordering::Relaxed);
     assert!(accepted >= CONNS as u64, "accepted {accepted} < {CONNS}");
     assert_eq!(m.conns_refused.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // Per-shard counters roll up to the global ones, and with several
+    // shards the kernel's SO_REUSEPORT hash spread the load (512
+    // connections over 4 shards: an empty shard is astronomically
+    // unlikely).
+    let shards = m.shards();
+    if !shards.is_empty() {
+        let per_shard: Vec<u64> = shards
+            .iter()
+            .map(|s| s.conns_accepted.load(std::sync::atomic::Ordering::Relaxed))
+            .collect();
+        assert_eq!(per_shard.iter().sum::<u64>(), accepted, "shard roll-up mismatch");
+        if reactors > 1 {
+            assert_eq!(per_shard.len(), reactors);
+            assert!(
+                per_shard.iter().all(|&n| n > 0),
+                "a shard accepted nothing: {per_shard:?}"
+            );
+        }
+    }
     handle.shutdown();
-    // The epoll loop tears every connection down before its thread
-    // joins; threaded connection threads are detached, so poll briefly.
+    // The epoll loops tear every connection down before their threads
+    // join; threaded connection threads are detached, so poll briefly.
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
     while m.conns_open.load(std::sync::atomic::Ordering::Relaxed) != 0
         && std::time::Instant::now() < deadline
@@ -139,6 +176,24 @@ fn soak_512_concurrent_connections_mixed_workloads() {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
     assert_eq!(m.conns_open.load(std::sync::atomic::Ordering::Relaxed), 0, "open-conn gauge leaks");
+    for (i, s) in m.shards().iter().enumerate() {
+        assert_eq!(
+            s.conns_open.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "shard {i} open-conn gauge leaks"
+        );
+    }
+}
+
+#[test]
+fn soak_512_concurrent_connections_mixed_workloads() {
+    soak_512_mixed_workloads(1);
+}
+
+#[test]
+fn soak_512_concurrent_connections_mixed_workloads_sharded() {
+    // 4 reactors: meaningful sharding without assuming a big CI host.
+    soak_512_mixed_workloads(4);
 }
 
 // ---------------------------------------------------------------------
@@ -169,6 +224,8 @@ fn transports_answer_byte_identical_frames() {
     let enc = BlockCodec::new(Alphabet::standard()).encode(&data);
     let mut corrupt = enc.clone();
     corrupt[1234] = b'!';
+    let big = random_bytes(100_000, 0xB16);
+    let big_enc = BlockCodec::new(Alphabet::standard()).encode(&big);
     let e = Engine::get();
     let mut wrapped = vec![0u8; e.encoded_wrapped_len(data.len(), 76)];
     let n = e.encode_wrapped_slice(&data, &mut wrapped, 76);
@@ -184,6 +241,9 @@ fn transports_answer_byte_identical_frames() {
         Message::Decode { id: 4, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::CrLf, data: wrapped },
         Message::Validate { id: 5, alphabet: "url".into(), mode: Mode::Strict, data: b"AAAA".to_vec() },
         Message::Encode { id: 6, alphabet: "nonsense".into(), mode: Mode::Strict, data: vec![1] },
+        // ≥ one-full-batch payloads: the zero-copy path goes engine-direct.
+        Message::Encode { id: 7, alphabet: "standard".into(), mode: Mode::Strict, data: big.clone() },
+        Message::Decode { id: 8, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, data: big_enc },
         // Stream session: begin / chunks / end, flat and wrapped.
         Message::StreamBegin { id: 10, decode: false, alphabet: "standard".into(), mode: Mode::Strict, ws: Whitespace::None, wrap: 0 },
         Message::StreamChunk { id: 10, data: data[..100].to_vec() },
@@ -199,19 +259,37 @@ fn transports_answer_byte_identical_frames() {
         Message::RespData { id: 13, data: vec![] },
     ];
 
-    let (epoll, _) = start(Transport::Epoll, 64);
-    let (threaded, _) = start(Transport::Threaded, 64);
-    let a = raw_exchange(epoll.addr, &requests);
-    let b = raw_exchange(threaded.addr, &requests);
-    assert_eq!(a.len(), b.len());
-    for (i, (fa, fb)) in a.iter().zip(&b).enumerate() {
-        assert_eq!(fa, fb, "response {i} diverged between transports");
+    // The full matrix the acceptance pins: both transports, reactors ∈
+    // {1, 4}, and both reply paths (zero-copy sink vs Vec
+    // serialization) must answer byte-identical frames. The threaded
+    // transport (always Vec-serialized) is the reference.
+    let servers: Vec<(String, ServerHandle)> = vec![
+        ("threaded".into(), start_cfg(Transport::Threaded, 64, 1, true).0),
+        ("epoll r1 zerocopy".into(), start_cfg(Transport::Epoll, 64, 1, true).0),
+        ("epoll r1 copy".into(), start_cfg(Transport::Epoll, 64, 1, false).0),
+        ("epoll r4 zerocopy".into(), start_cfg(Transport::Epoll, 64, 4, true).0),
+        ("epoll r4 copy".into(), start_cfg(Transport::Epoll, 64, 4, false).0),
+    ];
+    let reference = raw_exchange(servers[0].1.addr, &requests);
+    // And the wrapped stream really opened (its StreamBegin ack).
+    let wrapped_begin = requests
+        .iter()
+        .position(|m| matches!(m, Message::StreamBegin { wrap: 76, .. }))
+        .unwrap();
+    assert_eq!(
+        Message::from_bytes(&reference[wrapped_begin][4..]).unwrap(),
+        Message::RespData { id: 11, data: vec![] }
+    );
+    for (name, handle) in &servers[1..] {
+        let got = raw_exchange(handle.addr, &requests);
+        assert_eq!(got.len(), reference.len());
+        for (i, (fa, fb)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(fa, fb, "response {i} diverged on {name}");
+        }
     }
-    // And the wrapped stream really produced wrapped output.
-    let wrapped_begin = &a[11];
-    assert_eq!(Message::from_bytes(&wrapped_begin[4..]).unwrap(), Message::RespData { id: 11, data: vec![] });
-    epoll.shutdown();
-    threaded.shutdown();
+    for (_, handle) in servers {
+        handle.shutdown();
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -220,7 +298,14 @@ fn transports_answer_byte_identical_frames() {
 
 #[test]
 fn torn_and_pipelined_delivery() {
-    let (handle, _) = start(Transport::from_env(), 16);
+    for reactors in [1usize, 4] {
+        torn_and_pipelined(reactors);
+    }
+}
+
+fn torn_and_pipelined(reactors: usize) {
+    let zero_copy = ServerConfig::default().zero_copy;
+    let (handle, _) = start_cfg(Transport::from_env(), 16, reactors, zero_copy);
     let data = random_bytes(777, 0x7E42);
     let expect = BlockCodec::new(Alphabet::standard()).encode(&data);
 
@@ -348,5 +433,62 @@ fn wrapped_stream_session_matches_one_shot_oracle() {
     // Invalid wrap values are refused server-side.
     let err = client.stream_begin_wrapped("standard", 70).unwrap_err();
     assert!(err.to_string().contains("invalid wrap"), "{err}");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Cross-shard connection cap: the limiter is global, so the busy frame
+// must fire once the *sum* over shards hits the cap, no matter which
+// SO_REUSEPORT listener each connection hashed to.
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn conn_cap_enforced_across_shards() {
+    const CAP: usize = 8;
+    const ATTEMPTS: usize = 32;
+    let (handle, router) = start_cfg(Transport::Epoll, CAP, 4, true);
+    let mut admitted: Vec<Client> = Vec::new();
+    let mut busy = 0usize;
+    for _ in 0..ATTEMPTS {
+        let mut c = Client::connect(handle.addr).unwrap();
+        match c.ping() {
+            Ok(()) => admitted.push(c),
+            Err(ClientError::Busy(m)) => {
+                assert!(m.contains(&format!("limit {CAP}")), "{m}");
+                busy += 1;
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert_eq!(admitted.len(), CAP, "exactly the global cap admitted");
+    assert_eq!(busy, ATTEMPTS - CAP, "every over-cap connect got the typed busy frame");
+    let m = router.metrics();
+    assert_eq!(m.conns_refused.load(std::sync::atomic::Ordering::Relaxed), busy as u64);
+    // The admitted connections were spread over the shards and still
+    // answer; their per-shard gauges sum to the cap.
+    for c in admitted.iter_mut() {
+        c.ping().unwrap();
+    }
+    let open_sum: u64 = m
+        .shards()
+        .iter()
+        .map(|s| s.conns_open.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(open_sum, CAP as u64, "per-shard open gauges roll up to the cap");
+    // Freeing slots (on whichever shards they live) re-opens admission.
+    admitted.truncate(CAP - 2);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    let mut reopened: Vec<Client> = Vec::new();
+    while reopened.len() < 2 {
+        let mut c = Client::connect(handle.addr).unwrap();
+        match c.ping() {
+            Ok(()) => reopened.push(c),
+            Err(ClientError::Busy(_)) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => panic!("slot did not free: {e}"),
+        }
+    }
     handle.shutdown();
 }
