@@ -19,7 +19,7 @@
 
 use b64simd::base64::stores::nt_memcpy;
 use b64simd::base64::{decoded_len_upper, encoded_len, Alphabet, Engine, StorePolicy};
-use b64simd::util::bench::{bench, opts_from_env, BenchOpts};
+use b64simd::util::bench::{bench, emit_json, opts_from_env, BenchOpts};
 use b64simd::workload::random_bytes;
 
 fn main() {
@@ -58,6 +58,8 @@ fn main() {
     );
 
     let mut four_mib: Option<(f64, f64, f64)> = None; // (dec_t, dec_nt, memcpy)
+    // Machine-readable rows for the BENCH_nt_stores.json artifact.
+    let mut json_rows: Vec<String> = Vec::new();
 
     for &(label, raw_len) in sizes {
         let data = random_bytes(raw_len, raw_len as u64);
@@ -132,10 +134,33 @@ fn main() {
             dec_nt.gbps / dec_t.gbps
         );
 
+        json_rows.push(format!(
+            "{{\"size\":\"{}\",\"raw_bytes\":{},\"b64_bytes\":{},\"enc_t_gbps\":{:.4},\"enc_nt_gbps\":{:.4},\"dec_t_gbps\":{:.4},\"dec_nt_gbps\":{:.4},\"memcpy_gbps\":{:.4},\"nt_memcpy_gbps\":{:.4}}}",
+            label,
+            raw_len,
+            b64_len,
+            enc_t.gbps,
+            enc_nt.gbps,
+            dec_t.gbps,
+            dec_nt.gbps,
+            memcpy.gbps,
+            ntcpy.gbps
+        ));
+
         if label == "4MiB" {
             four_mib = Some((dec_t.gbps, dec_nt.gbps, memcpy.gbps));
         }
     }
+
+    emit_json(
+        "nt_stores",
+        &format!(
+            "{{\"bench\":\"nt_stores\",\"smoke\":{},\"tier\":\"{}\",\"rows\":[\n{}\n]}}\n",
+            smoke,
+            tier.name(),
+            json_rows.join(",\n")
+        ),
+    );
 
     if let Some((t, nt, mc)) = four_mib {
         println!(

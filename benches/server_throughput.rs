@@ -26,6 +26,7 @@ use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
 use b64simd::coordinator::backend::native_factory;
 use b64simd::coordinator::{Router, RouterConfig};
 use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
+use b64simd::util::bench::emit_json;
 use b64simd::workload::random_bytes;
 
 fn start(
@@ -162,6 +163,9 @@ fn main() {
             cells.push((Transport::Epoll, reactors, zero_copy));
         }
     }
+    // Machine-readable rows for the BENCH_server_throughput.json
+    // artifact (see `emit_json`): one object per printed table row.
+    let mut json_rows: Vec<String> = Vec::new();
     for (transport, reactors, zero_copy) in cells {
         let reply =
             if zero_copy && transport == Transport::Epoll { "zerocopy" } else { "vec" };
@@ -177,6 +181,13 @@ fn main() {
             "-",
             "-"
         );
+        json_rows.push(format!(
+            "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"conns_per_sec\",\"value\":{:.1}}}",
+            transport.name(),
+            reactors,
+            reply,
+            rate
+        ));
         for &p in payloads {
             let (rps, gbps) = throughput(handle.addr, conns, threads, p, window);
             println!(
@@ -189,10 +200,29 @@ fn main() {
                 rps,
                 gbps
             );
+            json_rows.push(format!(
+                "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4}}}",
+                transport.name(),
+                reactors,
+                reply,
+                p,
+                rps,
+                gbps
+            ));
         }
         router.flush();
         handle.shutdown();
     }
+    emit_json(
+        "server_throughput",
+        &format!(
+            "{{\"bench\":\"server_throughput\",\"smoke\":{},\"conns\":{},\"window_s\":{},\"rows\":[\n{}\n]}}\n",
+            smoke,
+            conns,
+            window.as_secs_f64(),
+            json_rows.join(",\n")
+        ),
+    );
     if smoke {
         println!("\nsmoke mode: all cells ran, every response verified (timings indicative only)");
     }

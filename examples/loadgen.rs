@@ -17,14 +17,27 @@
 //! transport. The client side multiplexes `--connections` sockets over
 //! `--threads` OS threads — the point is that the *server* holds them
 //! all concurrently without a thread apiece.
+//!
+//! `--chaos torn|slowloris|oversized|corrupt|vanish|all` switches to
+//! the adversarial client: each mode misbehaves in one specific way and
+//! asserts the lifecycle contract from `docs/PROTOCOL.md` — torn frames
+//! are answered normally, stalled partial frames get the typed timeout
+//! notice, oversized/corrupt frames poison only their own connection,
+//! and clients that vanish mid-burst leak nothing. Exits non-zero on
+//! any contract violation. Combine with `--features faults` and a
+//! `B64SIMD_FAULTS` plan to run the same contract checks while the
+//! server's own syscalls misbehave.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Mode};
 use b64simd::coordinator::backend::native_factory;
 use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::server::proto::Message;
 use b64simd::server::{serve, Client, ServerConfig, Transport};
 use b64simd::workload::random_bytes;
 
@@ -33,6 +46,226 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+// ---------------------------------------------------------------------
+// Adversarial chaos client (--chaos MODE).
+// ---------------------------------------------------------------------
+
+/// Read one length-prefixed reply frame; `Ok(None)` on EOF/reset.
+fn read_reply(stream: &mut TcpStream) -> Result<Option<Message>, String> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err("EOF inside a length prefix".into()),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset && got == 0 => {
+                return Ok(None)
+            }
+            Err(e) => return Err(format!("reading reply prefix: {e}")),
+        }
+    }
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    stream
+        .read_exact(&mut body)
+        .map_err(|e| format!("reading reply body: {e}"))?;
+    Message::from_bytes(&body).map(Some).map_err(|e| format!("parsing reply: {e}"))
+}
+
+fn chaos_connect(addr: std::net::SocketAddr) -> Result<TcpStream, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(15)))
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
+    Ok(stream)
+}
+
+fn encode_frame(id: u64, data: Vec<u8>) -> Vec<u8> {
+    Message::Encode { id, alphabet: "standard".into(), mode: Mode::Strict, data }
+        .to_frame_bytes()
+        .expect("frame within MAX_FRAME")
+}
+
+/// Torn delivery: valid frames dribbled a byte (then a half) at a time
+/// must be reassembled and answered normally — byte-granularity arrival
+/// never trips the frame-granularity read deadline.
+fn chaos_torn(addr: std::net::SocketAddr) -> Result<(), String> {
+    let payload = random_bytes(256, 0xC0A7);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+    let mut stream = chaos_connect(addr)?;
+    let frame = encode_frame(1, payload.clone());
+    for b in &frame {
+        stream.write_all(&[*b]).map_err(|e| format!("torn write: {e}"))?;
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    match read_reply(&mut stream)? {
+        Some(Message::RespData { id: 1, data }) if data == oracle => {}
+        other => return Err(format!("torn frame not answered normally: {other:?}")),
+    }
+    // Same again split at an awkward boundary (inside the length prefix).
+    let frame = encode_frame(2, payload);
+    stream.write_all(&frame[..3]).map_err(|e| format!("torn write: {e}"))?;
+    std::thread::sleep(Duration::from_millis(20));
+    stream.write_all(&frame[3..]).map_err(|e| format!("torn write: {e}"))?;
+    match read_reply(&mut stream)? {
+        Some(Message::RespData { id: 2, data }) if data == oracle => Ok(()),
+        other => Err(format!("split frame not answered normally: {other:?}")),
+    }
+}
+
+/// Slow loris: a partial frame that never completes must draw the
+/// normative `timeout: request frame stalled` notice and a close —
+/// dripping header bytes must not refresh the deadline.
+fn chaos_slowloris(addr: std::net::SocketAddr) -> Result<(), String> {
+    let mut stream = chaos_connect(addr)?;
+    stream
+        .write_all(&[64, 0, 0])
+        .map_err(|e| format!("loris write: {e}"))?;
+    match read_reply(&mut stream)? {
+        Some(Message::RespError { id: 0, message })
+            if message == "timeout: request frame stalled" =>
+        {
+            match read_reply(&mut stream)? {
+                None => Ok(()),
+                other => Err(format!("expected EOF after stall notice, got {other:?}")),
+            }
+        }
+        other => Err(format!("expected stall notice, got {other:?}")),
+    }
+}
+
+/// Oversized: a length prefix beyond MAX_FRAME poisons the connection
+/// (no reply, close) and must not take the server with it.
+fn chaos_oversized(addr: std::net::SocketAddr) -> Result<(), String> {
+    let mut stream = chaos_connect(addr)?;
+    stream
+        .write_all(&u32::MAX.to_le_bytes())
+        .map_err(|e| format!("oversized write: {e}"))?;
+    match read_reply(&mut stream)? {
+        None | Some(Message::RespError { .. }) => {}
+        other => return Err(format!("oversized frame answered with {other:?}")),
+    }
+    // The poison stayed on our connection.
+    let mut probe = Client::connect(addr).map_err(|e| format!("probe connect: {e:?}"))?;
+    probe.ping().map_err(|e| format!("probe ping after oversized: {e:?}"))
+}
+
+/// Corrupt: pipelined good requests *before* garbage are answered, the
+/// garbage closes only that connection.
+fn chaos_corrupt(addr: std::net::SocketAddr) -> Result<(), String> {
+    let payload = random_bytes(64, 0xBAD);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+    let mut stream = chaos_connect(addr)?;
+    let mut wire = encode_frame(3, payload);
+    // A plausible length prefix followed by an unknown tag and junk.
+    wire.extend_from_slice(&16u32.to_le_bytes());
+    wire.extend_from_slice(&[0x7F; 16]);
+    stream.write_all(&wire).map_err(|e| format!("corrupt write: {e}"))?;
+    match read_reply(&mut stream)? {
+        Some(Message::RespData { id: 3, data }) if data == oracle => {}
+        other => return Err(format!("request before corruption unanswered: {other:?}")),
+    }
+    loop {
+        // Poison semantics allow one error frame before the close.
+        match read_reply(&mut stream)? {
+            None => break,
+            Some(Message::RespError { .. }) => continue,
+            other => return Err(format!("unexpected reply after corruption: {other:?}")),
+        }
+    }
+    let mut probe = Client::connect(addr).map_err(|e| format!("probe connect: {e:?}"))?;
+    probe.ping().map_err(|e| format!("probe ping after corruption: {e:?}"))
+}
+
+/// Vanish: clients that drop mid-burst with replies unread (the close
+/// turns into RST) must leak nothing — the server keeps serving and its
+/// connection gauge drains.
+fn chaos_vanish(addr: std::net::SocketAddr, router: Option<&Router>) -> Result<(), String> {
+    let before = router.map(|r| r.metrics().conns_open.load(Ordering::Relaxed));
+    for i in 0..32u64 {
+        let mut stream = chaos_connect(addr)?;
+        let mut wire = Vec::new();
+        for j in 0..4 {
+            wire.extend_from_slice(&encode_frame(i * 8 + j, random_bytes(512, i * 31 + j)));
+        }
+        // Half a frame on the end so the server is mid-parse when the
+        // socket dies.
+        wire.extend_from_slice(&[9, 9, 9]);
+        stream.write_all(&wire).map_err(|e| format!("vanish write: {e}"))?;
+        drop(stream); // unread replies => RST at the server
+    }
+    // Server must still be healthy...
+    let payload = random_bytes(128, 0xDEAD);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+    let mut probe = Client::connect(addr).map_err(|e| format!("probe connect: {e:?}"))?;
+    let got = probe
+        .encode(&payload, "standard")
+        .map_err(|e| format!("probe encode after vanish: {e:?}"))?;
+    if got != oracle {
+        return Err("probe encode mismatched after vanish".into());
+    }
+    // ...and (in-process only) the vanished connections must all be
+    // reaped once the dust settles.
+    if let (Some(router), Some(before)) = (router, before) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let open = router.metrics().conns_open.load(Ordering::Relaxed);
+            if open <= before + 1 {
+                break; // +1 = our live probe
+            }
+            if Instant::now() > deadline {
+                return Err(format!("vanished conns leaked: gauge {open} (baseline {before})"));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    Ok(())
+}
+
+/// Run the requested chaos modes; returns the process exit code.
+fn run_chaos(mode: &str, addr: std::net::SocketAddr, router: Option<&Router>) -> i32 {
+    let all = ["torn", "slowloris", "oversized", "corrupt", "vanish"];
+    let selected: Vec<&str> = if mode == "all" {
+        all.to_vec()
+    } else if all.contains(&mode) {
+        vec![mode]
+    } else {
+        eprintln!("loadgen: unknown --chaos mode '{mode}' (torn|slowloris|oversized|corrupt|vanish|all)");
+        return 2;
+    };
+    let mut failures = 0;
+    for m in &selected {
+        let result = match *m {
+            "torn" => chaos_torn(addr),
+            "slowloris" => chaos_slowloris(addr),
+            "oversized" => chaos_oversized(addr),
+            "corrupt" => chaos_corrupt(addr),
+            "vanish" => chaos_vanish(addr, router),
+            _ => unreachable!(),
+        };
+        match result {
+            Ok(()) => println!("chaos {m:<10} OK"),
+            Err(e) => {
+                failures += 1;
+                eprintln!("chaos {m:<10} FAILED: {e}");
+            }
+        }
+    }
+    if let Some(router) = router {
+        router.flush();
+        println!("server: {}", router.metrics().report());
+    }
+    if failures > 0 {
+        eprintln!("loadgen: chaos FAILED ({failures}/{} modes)", selected.len());
+        1
+    } else {
+        println!("loadgen: chaos OK — lifecycle contract held across {} modes", selected.len());
+        0
+    }
 }
 
 fn main() {
@@ -61,6 +294,7 @@ fn main() {
     let zero_copy: bool = flag(&args, "--zerocopy")
         .map(|v| ServerConfig::parse_switch(&v).expect("--zerocopy 0|1"))
         .unwrap_or(defaults.zero_copy);
+    let chaos = flag(&args, "--chaos");
 
     // Client + (in-process) server sockets both live in this process;
     // the common 1024-fd soft limit dies long before 1000 connections.
@@ -81,23 +315,35 @@ fn main() {
         Some(a) => (a.parse().expect("--addr"), None),
         None => {
             let router = Arc::new(Router::new(native_factory(), RouterConfig::default()));
-            let handle = serve(
-                router.clone(),
-                ServerConfig {
-                    addr: "127.0.0.1:0".parse().unwrap(),
-                    max_connections: connections + 16,
-                    transport,
-                    reactors,
-                    zero_copy,
-                    ..Default::default()
-                },
-            )
-            .expect("bind in-process server");
+            let mut config = ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                max_connections: connections + 16,
+                transport,
+                reactors,
+                zero_copy,
+                ..Default::default()
+            };
+            if chaos.is_some() {
+                // Tight lifecycle windows so the slow-loris scenario
+                // resolves in milliseconds, not the production 10s.
+                config.read_timeout = Duration::from_millis(400);
+                config.idle_timeout = Duration::from_secs(5);
+                config.write_timeout = Duration::from_secs(2);
+            }
+            let handle = serve(router.clone(), config).expect("bind in-process server");
             let addr = handle.addr;
             _server = Some(handle);
             (addr, Some(router))
         }
     };
+
+    if let Some(mode) = chaos {
+        let code = run_chaos(&mode, addr, router.as_deref());
+        if let Some(handle) = _server.take() {
+            handle.shutdown(); // graceful drain is part of the contract
+        }
+        std::process::exit(code);
+    }
 
     let payload = random_bytes(payload_len, 0x10AD);
     let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);

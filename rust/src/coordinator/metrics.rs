@@ -120,6 +120,18 @@ pub struct Metrics {
     pub net_bytes_in: AtomicU64,
     /// Raw bytes written to sockets.
     pub net_bytes_out: AtomicU64,
+    /// Connections closed by a lifecycle deadline (idle, read-stall or
+    /// write-stall timeout).
+    pub timeouts: AtomicU64,
+    /// Syscall faults injected by the `faults` test feature (always 0
+    /// in production builds; mirrored from the injection layer when a
+    /// stats report is taken).
+    pub faults_injected: AtomicU64,
+    /// Graceful drains initiated (`ServerHandle::shutdown` / SIGTERM).
+    pub drains: AtomicU64,
+    /// Request-handler panics contained to one connection instead of
+    /// wedging a worker or shard.
+    pub worker_panics: AtomicU64,
     /// Per-shard breakdown (epoll reactors; empty on the threaded
     /// transport). See [`ShardMetrics`].
     shards: Mutex<Vec<Arc<ShardMetrics>>>,
@@ -175,7 +187,7 @@ impl Metrics {
     /// per-shard `accepted/open/frames-in/frames-out` breakdown.
     pub fn report(&self) -> String {
         let mut line = format!(
-            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} direct={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B p50={}us p99={}us mean={:.0}us",
+            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} direct={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B timeouts={} drains={} panics={} faults={} p50={}us p99={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -195,6 +207,10 @@ impl Metrics {
             self.frames_out.load(Ordering::Relaxed),
             self.net_bytes_in.load(Ordering::Relaxed),
             self.net_bytes_out.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.drains.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
+            self.faults_injected.load(Ordering::Relaxed),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.latency.mean_us(),
@@ -262,6 +278,16 @@ mod tests {
         Metrics::inc(&m.conns_open, 2);
         Metrics::dec(&m.conns_open, 1);
         assert!(m.report().contains("conns=2acc/0ref/1open"), "{}", m.report());
+    }
+
+    #[test]
+    fn report_contains_lifecycle_counters() {
+        let m = Metrics::default();
+        Metrics::inc(&m.timeouts, 2);
+        Metrics::inc(&m.drains, 1);
+        Metrics::inc(&m.worker_panics, 3);
+        let report = m.report();
+        assert!(report.contains("timeouts=2 drains=1 panics=3 faults=0"), "{report}");
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! * [`batcher`] — coalesce block work across requests per (direction,
 //!   table) group; size- and deadline-triggered flushes;
 //! * [`scheduler`] — coalescing leader thread + backend worker pool;
+//! * [`sink`] — the coordinator-owned [`ResponseSink`] trait the
+//!   zero-copy reply path writes through (implemented by the net
+//!   layer's `ReplySink`, keeping the layer order acyclic);
 //! * [`state`] — chunked-stream session state (carry bytes);
 //! * [`metrics`] — counters/histograms surfaced by the CLI and server,
 //!   with per-reactor-shard breakdowns rolled up into the global set;
@@ -29,6 +32,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod scheduler;
+pub mod sink;
 pub mod state;
 
 pub use backend::{BlockBackend, RustBackend};
@@ -36,3 +40,4 @@ pub use batcher::{BatcherConfig, Direction};
 pub use metrics::{Metrics, ShardMetrics};
 pub use router::{Outcome, Request, RequestKind, Response, Router, RouterConfig};
 pub use scheduler::{Scheduler, SchedulerConfig};
+pub use sink::{FrameTooLarge, ResponseSink};

@@ -16,8 +16,8 @@
 //! Two reply paths share this routing. [`Router::process`] materializes
 //! the output as a `Vec` (the reference path, used by the CLI, the
 //! threaded transport and direct API callers). [`Router::process_into`]
-//! writes the complete reply *frame* into a
-//! [`crate::net::frame::ReplySink`] instead — header reserved, payload
+//! writes the complete reply *frame* into any
+//! [`ResponseSink`] instead — header reserved, payload
 //! written in place by the engine's `_policy` slice kernels, length
 //! prefix backfilled — so the epoll transport's replies are never
 //! serialized through an intermediate `Vec`. Payloads at or above one
@@ -44,8 +44,7 @@ use crate::base64::{
     decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, Whitespace,
     B64_BLOCK, RAW_BLOCK,
 };
-use crate::net::frame::ReplySink;
-use crate::server::proto::ProtoError;
+use super::sink::{FrameTooLarge, ResponseSink};
 
 /// What the caller wants done.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -285,7 +284,11 @@ impl Router {
     /// `Err` means the reply could not be framed (oversized) — fatal
     /// for the connection, exactly like `to_frame_bytes` failing on the
     /// `Vec` path.
-    pub fn process_into(&self, request: Request, sink: &mut ReplySink) -> Result<(), ProtoError> {
+    pub fn process_into<S: ResponseSink>(
+        &self,
+        request: Request,
+        sink: &mut S,
+    ) -> Result<(), FrameTooLarge> {
         let start = Instant::now();
         Metrics::inc(&self.metrics.requests, 1);
         Metrics::inc(&self.metrics.bytes_in, request.payload.len() as u64);
@@ -293,7 +296,7 @@ impl Router {
             Ok(p) => p,
             Err(r) => {
                 Metrics::inc(&self.metrics.rejected, 1);
-                return sink.push_error(request.id, &r.to_string());
+                return sink.error_reply(request.id, &r.to_string());
             }
         };
         let reply = match request.kind {
@@ -327,22 +330,26 @@ impl Router {
     }
 
     /// Sink-path encode (see [`Self::process_into`] for the routing).
-    fn encode_into(&self, req: &Request, sink: &mut ReplySink) -> Result<SinkReply, ProtoError> {
+    fn encode_into<S: ResponseSink>(
+        &self,
+        req: &Request,
+        sink: &mut S,
+    ) -> Result<SinkReply, FrameTooLarge> {
         let payload = &req.payload;
         let total = encoded_len(payload.len());
-        sink.begin_data_frame(req.id);
+        sink.begin_data(req.id);
         if payload.len() < self.inline_threshold {
             Metrics::inc(&self.metrics.inline_requests, 1);
             let codec = crate::base64::block::BlockCodec::new(req.alphabet.clone());
             codec.encode_slice(payload, sink.grow(total));
-            sink.end_frame()?;
+            sink.commit()?;
             return Ok(SinkReply::Data(total));
         }
         if payload.len() >= self.direct_threshold {
             Metrics::inc(&self.metrics.direct_requests, 1);
             let engine = self.engine_for(&req.alphabet, Mode::Strict);
             engine.encode_slice_policy(payload, sink.grow(total), engine.policy());
-            sink.end_frame()?;
+            sink.commit()?;
             return Ok(SinkReply::Data(total));
         }
         // Batched middle: whole blocks coalesce across requests; the
@@ -360,12 +367,12 @@ impl Router {
         match rx.recv().expect("scheduler always answers") {
             Ok(batch) => {
                 out[..head].copy_from_slice(&batch.data);
-                sink.end_frame()?;
+                sink.commit()?;
                 Ok(SinkReply::Data(total))
             }
             Err(e) => {
-                sink.rollback_frame();
-                sink.push_error(req.id, &e.to_string())?;
+                sink.abort();
+                sink.error_reply(req.id, &e.to_string())?;
                 Ok(SinkReply::Error)
             }
         }
@@ -374,28 +381,28 @@ impl Router {
     /// Sink-path decode/validate: open a data frame, decode into it,
     /// then commit (trimmed to the bytes written — validate keeps
     /// none), or erase it and write the error frame instead.
-    fn decode_into(
+    fn decode_into<S: ResponseSink>(
         &self,
         req: &Request,
-        sink: &mut ReplySink,
+        sink: &mut S,
         validate_only: bool,
-    ) -> Result<SinkReply, ProtoError> {
-        sink.begin_data_frame(req.id);
+    ) -> Result<SinkReply, FrameTooLarge> {
+        sink.begin_data(req.id);
         let data_start = sink.mark();
         match self.decode_payload_into(req, sink) {
             Ok(written) => {
                 let keep = if validate_only { 0 } else { written };
                 sink.truncate_to(data_start + keep);
-                sink.end_frame()?;
+                sink.commit()?;
                 Ok(if validate_only { SinkReply::Valid } else { SinkReply::Data(written) })
             }
             Err(fail) => {
-                sink.rollback_frame();
+                sink.abort();
                 let message = match fail {
                     SinkFail::Invalid(e) => e.to_string(),
                     SinkFail::Internal(m) => m,
                 };
-                sink.push_error(req.id, &message)?;
+                sink.error_reply(req.id, &message)?;
                 Ok(SinkReply::Error)
             }
         }
@@ -406,7 +413,11 @@ impl Router {
     /// [`Self::run_decode`]: a whitespace policy strips once via the
     /// SWAR scan and rebases error offsets onto the original payload,
     /// so both reply paths report identical errors in every case.
-    fn decode_payload_into(&self, req: &Request, sink: &mut ReplySink) -> Result<usize, SinkFail> {
+    fn decode_payload_into<S: ResponseSink>(
+        &self,
+        req: &Request,
+        sink: &mut S,
+    ) -> Result<usize, SinkFail> {
         if req.ws == Whitespace::None {
             return self.decode_stripped_into(&req.payload, req, sink);
         }
@@ -427,11 +438,11 @@ impl Router {
 
     /// Sink-path twin of [`Self::run_decode_stripped`]; `payload` is
     /// already free of skipped whitespace and error offsets index it.
-    fn decode_stripped_into(
+    fn decode_stripped_into<S: ResponseSink>(
         &self,
         payload: &[u8],
         req: &Request,
-        sink: &mut ReplySink,
+        sink: &mut S,
     ) -> Result<usize, SinkFail> {
         let alphabet = &req.alphabet;
         if payload.len() < self.inline_threshold {

@@ -1,0 +1,68 @@
+//! The coordinator's view of a reply destination.
+//!
+//! [`Router::process_into`](super::Router::process_into) writes complete
+//! reply frames in place, but the coordinator must not know *whose*
+//! buffer it is writing into — the documented layer order is
+//! base64 → coordinator → net → server, and a coordinator that imports
+//! `net::frame` types inverts it. This module owns the trait; the net
+//! layer's `ReplySink` implements it (and any future transport, or a
+//! test capture buffer, can too).
+//!
+//! The contract mirrors the frame discipline of `docs/PROTOCOL.md`:
+//! a data frame is opened ([`ResponseSink::begin_data`]), grown in
+//! place ([`ResponseSink::grow`]) so codec kernels write payload bytes
+//! directly, then either committed ([`ResponseSink::commit`]) or erased
+//! ([`ResponseSink::abort`]) and replaced by a typed error frame
+//! ([`ResponseSink::error_reply`]). Implementations must guarantee the
+//! committed bytes are exactly the wire frame — length prefix, tag, id,
+//! payload — so the sink path stays byte-identical to serializing the
+//! `Vec` path's reply.
+
+/// A reply could not be framed: the encoded frame body would exceed the
+/// wire's `MAX_FRAME`. Fatal for the connection, exactly like
+/// `Message::to_frame_bytes` failing on the `Vec` reply path. Carries
+/// the offending body length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameTooLarge(pub usize);
+
+impl std::fmt::Display for FrameTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "frame too large: {} bytes", self.0)
+    }
+}
+
+impl std::error::Error for FrameTooLarge {}
+
+/// Where the router writes a reply frame in place.
+///
+/// One frame is open at a time. The usual lifecycle is
+/// `begin_data` → (`grow` / `mark` / `truncate_to`)* → `commit`; on a
+/// mid-frame failure, `abort` erases the open frame and `error_reply`
+/// writes the error frame that replaces it.
+pub trait ResponseSink {
+    /// Open a data-reply frame for request `id`: length prefix
+    /// reserved, tag and id written, cursor at the payload start.
+    fn begin_data(&mut self, id: u64);
+
+    /// Extend the open frame by `n` zero-initialized bytes and return
+    /// them for in-place writing.
+    fn grow(&mut self, n: usize) -> &mut [u8];
+
+    /// Cursor position (bytes in the sink), for later [`Self::truncate_to`].
+    fn mark(&self) -> usize;
+
+    /// Drop everything past `mark` (trim an over-reserved payload;
+    /// `mark` must not precede the open frame's payload start).
+    fn truncate_to(&mut self, mark: usize);
+
+    /// Seal the open frame: backfill the length prefix. Fails — erasing
+    /// the frame — if the body exceeds the wire's maximum.
+    fn commit(&mut self) -> Result<(), FrameTooLarge>;
+
+    /// Erase the open frame entirely (failure discovered mid-write).
+    fn abort(&mut self);
+
+    /// Append a complete error-reply frame for request `id`. No frame
+    /// may be open ([`Self::abort`] first if one is).
+    fn error_reply(&mut self, id: u64, message: &str) -> Result<(), FrameTooLarge>;
+}

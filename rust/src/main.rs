@@ -171,6 +171,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         transport.name(),
         if zero_copy { "zerocopy" } else { "vec" }
     );
+    // SIGTERM/SIGINT request a graceful drain: stop accepting, answer
+    // everything already parsed off the wire, flush, then exit 0 with a
+    // final metrics report. (Non-Linux hosts keep the run-forever loop;
+    // the handler plumbing lives with the rest of the Linux-only net
+    // code.)
+    #[cfg(target_os = "linux")]
+    {
+        use b64simd::net::sys::{install_term_handler, term_requested};
+        install_term_handler()?;
+        let mut last_report = std::time::Instant::now();
+        while !term_requested() {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            if last_report.elapsed() >= std::time::Duration::from_secs(30) {
+                eprintln!("{}", router.metrics().report());
+                last_report = std::time::Instant::now();
+            }
+        }
+        eprintln!("b64simd: termination signal received, draining connections");
+        handle.shutdown();
+        eprintln!("{}", router.metrics().report());
+        return Ok(());
+    }
+    #[cfg(not(target_os = "linux"))]
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
         eprintln!("{}", router.metrics().report());

@@ -27,8 +27,15 @@ impl BufferPool {
         BufferPool { free: Vec::with_capacity(max_buffers.min(64)), max_buffers, retain_cap }
     }
 
-    /// Take a cleared buffer (recycled when one is available).
+    /// Take a cleared buffer (recycled when one is available). An empty
+    /// free list is not an error — callers get a fresh allocation — so
+    /// the `faults` feature exercises pool exhaustion by pretending the
+    /// list is empty: correctness must not depend on recycling.
     pub fn get(&mut self) -> Vec<u8> {
+        #[cfg(feature = "faults")]
+        if crate::net::faults::pool_exhausted() {
+            return Vec::new();
+        }
         self.free.pop().unwrap_or_default()
     }
 

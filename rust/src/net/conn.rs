@@ -21,6 +21,7 @@
 use std::collections::VecDeque;
 use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use super::buffer::BufferPool;
 use super::frame::{FrameMachine, WriteQueue};
@@ -61,6 +62,19 @@ pub(crate) struct Conn {
     /// (the threaded transport replies to each frame before reading
     /// the next, and the transports must answer byte-identically).
     pub corrupt: bool,
+    /// Last observed progress (bytes read, bytes written, or a reply
+    /// delivered); anchors the idle deadline once the connection is
+    /// quiescent.
+    pub last_activity: Instant,
+    /// When the partial frame at the head of the accumulator started
+    /// arriving. Reset every time a *complete* frame parses — progress
+    /// is measured at frame granularity, so a slow-loris peer dripping
+    /// header bytes cannot refresh the deadline — and cleared when the
+    /// accumulator empties.
+    pub frame_start: Option<Instant>,
+    /// Last time the write queue shrank (or was empty); anchors the
+    /// write-stall deadline while bytes are pending.
+    pub write_progress: Instant,
     /// RAII connection-cap slot ([`ConnPermit`]); released on teardown.
     _permit: ConnPermit,
 }
@@ -73,6 +87,7 @@ impl Conn {
         pool: &mut BufferPool,
         permit: ConnPermit,
     ) -> Conn {
+        let now = Instant::now();
         Conn {
             stream,
             frames: FrameMachine::new(pool.get()),
@@ -86,6 +101,9 @@ impl Conn {
             readable: true,
             eof: false,
             corrupt: false,
+            last_activity: now,
+            frame_start: None,
+            write_progress: now,
             _permit: permit,
         }
     }

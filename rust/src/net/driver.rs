@@ -30,26 +30,49 @@
 //! finished buffer into the connection's `WriteQueue` instead of
 //! memcpying it. The `Vec`-serialization path is kept selectable as the
 //! differential reference.
+//!
+//! ## Connection lifecycle
+//!
+//! Each shard also runs the connection deadlines on a
+//! [`TimerWheel`] whose earliest entry becomes the `epoll_wait`
+//! timeout: idle connections, slow-loris peers dripping a request
+//! frame, and peers that stop reading their replies are shed (the
+//! first two with a typed `RespError` notice; a write-stalled peer
+//! cannot receive one, so it is closed silently). Graceful drain —
+//! the `drain` flag, set by `ServerHandle::shutdown` or a termination
+//! signal — stops accepting and *reading*, answers every request that
+//! was parsed off the wire, flushes, and only then lets the loop
+//! exit; a grace deadline bounds how long a stuck peer can hold
+//! shutdown hostage. Worker panics are caught per request
+//! ([`std::panic::catch_unwind`]): the offending connection gets an
+//! error reply and is closed, every mutex on the path is
+//! poison-tolerant, and the worker survives to serve other
+//! connections.
 
-use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::buffer::BufferPool;
 use super::conn::Conn;
+use super::faults;
 use super::frame::ReplySink;
 use super::sys::{
     Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
+use super::timer::TimerWheel;
 use crate::coordinator::backpressure::ConnLimiter;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::state::SessionState;
 use crate::coordinator::{Metrics, Router};
 use crate::server::proto::Message;
-use crate::server::service::{dispatch, dispatch_into, refuse_busy, ServerConfig};
+use crate::server::service::{
+    dispatch, dispatch_into, idle_timeout_frame, refuse_busy, stall_timeout_frame, ServerConfig,
+};
 
 /// Slab token of the listening socket.
 const TOKEN_LISTENER: u64 = u64::MAX;
@@ -61,12 +84,31 @@ const EVENT_BATCH: usize = 1024;
 /// Read scratch shared by every connection (the loop is single-threaded).
 const READ_SCRATCH: usize = 64 << 10;
 
+/// Re-evaluation cadence for deadlines whose side conditions are not
+/// currently met (e.g. a stalled frame behind an in-flight request):
+/// the wheel keeps one entry per connection at most this far out.
+const HEARTBEAT: Duration = Duration::from_secs(1);
+
+/// `epoll_wait` cap while draining, so the grace deadline and final
+/// flushes are observed promptly even with an empty wheel.
+const DRAIN_POLL_MS: i32 = 25;
+
 fn token(idx: usize, epoch: u32) -> u64 {
     ((epoch as u64) << 32) | idx as u64
 }
 
 fn token_parts(tok: u64) -> (usize, u32) {
     ((tok & 0xFFFF_FFFF) as usize, (tok >> 32) as u32)
+}
+
+/// Poison-tolerant lock. A worker that panicked mid-request may have
+/// poisoned a session or queue mutex on its way out; what these
+/// mutexes guard is either per-connection state that dies with the
+/// connection (the panic path closes it) or a plain queue hand-off, so
+/// later lockers take the inner value instead of wedging the shard on
+/// an `unwrap`.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// One request headed for the worker pool. Carries its shard's
@@ -88,9 +130,12 @@ struct WorkItem {
 /// One executed request headed back to its loop. `frame = None` marks a
 /// reply that could not be framed (oversized) — fatal for the
 /// connection, matching the blocking transport's behaviour.
+/// `close_after` delivers the frame and then closes (the panic path:
+/// one error reply, then the connection is gone).
 struct Completion {
     token: u64,
     frame: Option<Vec<u8>>,
+    close_after: bool,
 }
 
 /// Handles the spawned transport threads + each loop's wakeup fd.
@@ -100,14 +145,16 @@ pub(crate) struct EpollServer {
 }
 
 /// Spawn one readiness loop per listener (the reactor shards) plus the
-/// shared worker pool. The caller keeps `stop` and signals every wake
-/// fd to shut the loops down; the workers exit once all loops have
-/// dropped their work senders.
+/// shared worker pool. The caller keeps `stop` (hard abort) and
+/// `drain` (graceful: answer parsed requests, then exit) and signals
+/// every wake fd after flipping either; the workers exit once all
+/// loops have dropped their work senders.
 pub(crate) fn spawn(
     router: Arc<Router>,
     config: &ServerConfig,
     listeners: Vec<TcpListener>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
 ) -> std::io::Result<EpollServer> {
     let limiter = ConnLimiter::new(config.max_connections);
     let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
@@ -121,7 +168,7 @@ pub(crate) fn spawn(
     let mut wakes: Vec<Arc<EventFd>> = Vec::new();
     let mut built = Ok(());
     for (shard_id, listener) in listeners.into_iter().enumerate() {
-        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop) {
+        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop, &drain) {
             Ok((thread, wake)) => {
                 threads.push(thread);
                 wakes.push(wake);
@@ -170,6 +217,7 @@ pub(crate) fn spawn(
 
 /// Set up one reactor shard: its epoll instance, wake fd, completion
 /// queue and loop thread.
+#[allow(clippy::too_many_arguments)]
 fn spawn_shard(
     shard_id: usize,
     listener: TcpListener,
@@ -178,6 +226,7 @@ fn spawn_shard(
     limiter: &Arc<ConnLimiter>,
     work_tx: &mpsc::Sender<WorkItem>,
     stop: &Arc<AtomicBool>,
+    drain: &Arc<AtomicBool>,
 ) -> std::io::Result<(JoinHandle<()>, Arc<EventFd>)> {
     listener.set_nonblocking(true)?;
     let epoll = Epoll::new()?;
@@ -186,7 +235,7 @@ fn spawn_shard(
     epoll.add(wake.raw(), EPOLLIN | EPOLLET, TOKEN_WAKE)?;
     let lp = Loop {
         epoll,
-        listener,
+        listener: Some(listener),
         wake: wake.clone(),
         metrics: metrics.clone(),
         shard: metrics.register_shard(),
@@ -201,6 +250,14 @@ fn spawn_shard(
         work_tx: work_tx.clone(),
         completions: Arc::new(Mutex::new(Vec::new())),
         stop: stop.clone(),
+        drain: drain.clone(),
+        draining: false,
+        drain_deadline: None,
+        wheel: TimerWheel::new(),
+        idle_timeout: config.idle_timeout,
+        read_timeout: config.read_timeout,
+        write_timeout: config.write_timeout,
+        drain_grace: config.drain_grace,
     };
     let thread = std::thread::Builder::new()
         .name(format!("b64simd-net-loop-{shard_id}"))
@@ -219,28 +276,47 @@ fn spawn_shard(
 /// is serialized through `to_frame_bytes`, the differential reference
 /// path. A `None` frame (oversized reply) closes the connection either
 /// way.
+///
+/// Each request runs under [`std::panic::catch_unwind`]: a panicking
+/// handler costs exactly its own connection — the peer gets a typed
+/// error reply, the connection closes — never the worker thread (and
+/// with it a share of every shard's dispatch capacity).
 fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, zero_copy: bool) {
     loop {
         // Holding the lock across `recv` just serializes the hand-off,
         // not the work: the lock drops as soon as an item arrives.
-        let item = { rx.lock().unwrap().recv() };
+        let item = { lock_clean(&rx).recv() };
         let Ok(WorkItem { token, msg, session, done, wake, buf }) = item else { break };
-        let frame = if zero_copy {
-            let mut sink = ReplySink::with_buf(buf);
-            let framed = {
-                let mut session = session.lock().unwrap();
-                dispatch_into(msg, &router, &mut session, &mut sink)
-            };
-            framed.ok().map(|()| sink.into_buf())
-        } else {
-            drop(buf); // empty on this path
-            let reply = {
-                let mut session = session.lock().unwrap();
-                dispatch(msg, &router, &mut session)
-            };
-            reply.to_frame_bytes().ok()
+        let id = msg.request_id();
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if zero_copy {
+                let mut sink = ReplySink::with_buf(buf);
+                let framed = {
+                    let mut session = lock_clean(&session);
+                    dispatch_into(msg, &router, &mut session, &mut sink)
+                };
+                framed.ok().map(|()| sink.into_buf())
+            } else {
+                drop(buf); // empty on this path
+                let reply = {
+                    let mut session = lock_clean(&session);
+                    dispatch(msg, &router, &mut session)
+                };
+                reply.to_frame_bytes().ok()
+            }
+        }));
+        let (frame, close_after) = match outcome {
+            Ok(frame) => (frame, false),
+            Err(_) => {
+                Metrics::inc(&router.metrics().worker_panics, 1);
+                let reply = Message::RespError {
+                    id,
+                    message: "internal error: request handler panicked".to_string(),
+                };
+                (reply.to_frame_bytes().ok(), true)
+            }
         };
-        done.lock().unwrap().push(Completion { token, frame });
+        lock_clean(&done).push(Completion { token, frame, close_after });
         wake.signal();
     }
 }
@@ -248,7 +324,9 @@ fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, ze
 /// One single-threaded readiness loop (a reactor shard).
 struct Loop {
     epoll: Epoll,
-    listener: TcpListener,
+    /// Dropped (closed) when drain begins, so the kernel stops routing
+    /// new connections to this shard's `SO_REUSEPORT` bucket.
+    listener: Option<TcpListener>,
     wake: Arc<EventFd>,
     metrics: Arc<Metrics>,
     /// This shard's slice of the metrics (globals stay the roll-up).
@@ -269,13 +347,29 @@ struct Loop {
     work_tx: mpsc::Sender<WorkItem>,
     completions: Arc<Mutex<Vec<Completion>>>,
     stop: Arc<AtomicBool>,
+    /// Graceful-shutdown request flag (shared with `ServerHandle`).
+    drain: Arc<AtomicBool>,
+    /// This loop has observed `drain` and is winding down.
+    draining: bool,
+    /// Force-close whatever is still open at this point.
+    drain_deadline: Option<Instant>,
+    /// Connection deadlines; earliest entry = `epoll_wait` timeout.
+    wheel: TimerWheel,
+    idle_timeout: Duration,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    drain_grace: Duration,
 }
 
 impl Loop {
     fn run(mut self) {
         let mut events = vec![EpollEvent::zeroed(); EVENT_BATCH];
         'events: loop {
-            let n = match self.epoll.wait(&mut events, -1) {
+            let mut timeout = self.wheel.next_timeout_ms(Instant::now());
+            if self.draining {
+                timeout = if timeout < 0 { DRAIN_POLL_MS } else { timeout.min(DRAIN_POLL_MS) };
+            }
+            let n = match self.epoll.wait(&mut events, timeout) {
                 Ok(n) => n,
                 Err(e) => {
                     eprintln!("b64simd: epoll loop failed: {e}");
@@ -284,6 +378,9 @@ impl Loop {
             };
             if self.stop.load(Ordering::SeqCst) {
                 break 'events;
+            }
+            if !self.draining && self.drain.load(Ordering::SeqCst) {
+                self.begin_drain();
             }
             for ev in &events[..n] {
                 // Copy out of the (packed) record before field access.
@@ -299,6 +396,20 @@ impl Loop {
                     tok => self.conn_event(tok, mask),
                 }
             }
+            self.service_timers();
+            if self.draining {
+                if self.drain_deadline.map_or(false, |d| Instant::now() >= d) {
+                    // Grace expired: whatever is still open gets cut.
+                    for idx in 0..self.conns.len() {
+                        if self.conns[idx].is_some() {
+                            self.close(idx);
+                        }
+                    }
+                }
+                if self.conns.iter().all(|c| c.is_none()) {
+                    break 'events; // every accepted request answered
+                }
+            }
         }
         // Shutdown: tear every connection down so the open-conns gauge
         // and the buffer pool reflect reality before the loop thread
@@ -306,6 +417,24 @@ impl Loop {
         for idx in 0..self.conns.len() {
             if self.conns[idx].is_some() {
                 self.close(idx);
+            }
+        }
+    }
+
+    /// Flip into drain mode: stop accepting (the listener fd closes, so
+    /// the kernel stops hashing new connections here), start the grace
+    /// clock, and close every already-quiescent connection. Connections
+    /// with a request in flight, queued in the inbox or replies still
+    /// flushing stay until answered; their sockets are read no further.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_deadline = Some(Instant::now() + self.drain_grace);
+        if let Some(listener) = self.listener.take() {
+            let _ = self.epoll.del(listener.as_raw_fd());
+        }
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                self.pump(idx); // flush; pump closes the drained
             }
         }
     }
@@ -320,7 +449,8 @@ impl Loop {
     fn accept_burst(&mut self) {
         let mut hard_errors = 0;
         loop {
-            match self.listener.accept() {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match faults::accept(listener) {
                 Ok((stream, _)) => self.admit(stream),
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e)
@@ -373,6 +503,7 @@ impl Loop {
         Metrics::inc(&self.shard.conns_accepted, 1);
         Metrics::inc(&self.shard.conns_open, 1);
         self.conns[idx] = Some(conn);
+        self.reschedule(idx, Instant::now());
         self.pump(idx);
     }
 
@@ -393,27 +524,50 @@ impl Loop {
     /// Drive one connection as far as it will go: flush pending writes,
     /// parse buffered frames, dispatch if idle, read while the socket
     /// and the backpressure caps allow, and close once a finished peer
-    /// is fully answered.
+    /// is fully answered. While draining, parsing and reading stop —
+    /// "accepted" means parsed, and drain answers exactly the accepted
+    /// requests — and a connection closes as soon as it is drained.
     fn pump(&mut self, idx: usize) {
         loop {
             let Some(conn) = self.conns[idx].as_mut() else { return };
+            let now = Instant::now();
             // 1. Writes first: draining the socket lifts the write-side
             //    backpressure check below.
-            match conn.write.write_to(&mut conn.stream) {
+            let flushed = {
+                let mut w = faults::wrap_write(&mut conn.stream);
+                conn.write.write_to(&mut w)
+            };
+            match flushed {
                 Ok(n) => {
                     if n > 0 {
                         Metrics::inc(&self.metrics.net_bytes_out, n as u64);
+                        conn.last_activity = now;
+                        conn.write_progress = now;
+                    } else if conn.write.pending() == 0 {
+                        // An empty queue is never "stalled".
+                        conn.write_progress = now;
                     }
                 }
                 Err(_) => return self.close(idx),
             }
             // 2. Peel complete frames into the inbox.
-            if !conn.corrupt {
+            if !conn.corrupt && !self.draining {
                 match conn.parse_into_inbox() {
                     Ok(parsed) => {
                         if parsed > 0 {
                             Metrics::inc(&self.metrics.frames_in, parsed as u64);
                             Metrics::inc(&self.shard.frames_in, parsed as u64);
+                        }
+                        // Frame-granularity progress for the read-stall
+                        // deadline: the clock starts when a partial
+                        // frame sits at the head of the accumulator and
+                        // only a *complete* frame resets it, so a
+                        // slow-loris peer dripping bytes cannot refresh
+                        // its own deadline.
+                        if conn.frames.buffered() == 0 {
+                            conn.frame_start = None;
+                        } else if parsed > 0 || conn.frame_start.is_none() {
+                            conn.frame_start = Some(now);
                         }
                     }
                     // Protocol error: poison the stream. Requests parsed
@@ -428,7 +582,8 @@ impl Loop {
                     }
                 }
             }
-            // 3. Dispatch the next request if none is in flight.
+            // 3. Dispatch the next request if none is in flight (drain
+            //    included: accepted requests are answered to the last).
             if !conn.busy {
                 if let Some(msg) = conn.inbox.pop_front() {
                     conn.busy = true;
@@ -446,9 +601,10 @@ impl Loop {
                     }
                 }
             }
-            // 4. Read while the latch and the caps allow.
-            if conn.wants_read() {
-                match conn.stream.read(&mut self.scratch) {
+            // 4. Read while the latch and the caps allow; a draining
+            //    loop takes nothing more off the wire.
+            if conn.wants_read() && !self.draining {
+                match faults::read_stream(&mut conn.stream, &mut self.scratch) {
                     Ok(0) => {
                         conn.eof = true;
                         conn.readable = false;
@@ -456,6 +612,7 @@ impl Loop {
                     Ok(n) => {
                         Metrics::inc(&self.metrics.net_bytes_in, n as u64);
                         conn.frames.push(&self.scratch[..n]);
+                        conn.last_activity = now;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         conn.readable = false;
@@ -469,15 +626,119 @@ impl Loop {
             break;
         }
         let Some(conn) = self.conns[idx].as_ref() else { return };
-        if conn.eof && conn.drained() {
+        if (conn.eof || self.draining) && conn.drained() {
             self.close(idx);
         }
+    }
+
+    /// Pop due wheel entries and act on connection deadlines. Stale
+    /// entries (closed or reused slots) fall to the epoch check; live
+    /// connections re-schedule at their recomputed next deadline, so
+    /// the wheel carries exactly one live entry per connection.
+    fn service_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(tok) = self.wheel.pop_due(now) {
+            let (idx, epoch) = token_parts(tok);
+            if idx >= self.conns.len() || self.epochs[idx] != epoch || self.conns[idx].is_none() {
+                continue;
+            }
+            self.check_deadlines(idx, now);
+            self.reschedule(idx, now);
+        }
+    }
+
+    /// Evaluate the idle / read-stall / write-stall deadlines for one
+    /// connection whose wheel entry came due.
+    fn check_deadlines(&mut self, idx: usize, now: Instant) {
+        // Retry a pending flush first: an injected EAGAIN leaves no
+        // kernel EPOLLOUT edge behind it, so the heartbeat is what
+        // re-drives the write queue under fault injection.
+        if self.conns[idx].as_ref().map_or(false, |c| c.write.pending() > 0) {
+            self.pump(idx);
+        }
+        let Some(conn) = self.conns[idx].as_mut() else { return };
+        // Write stall: the peer stopped reading while replies are
+        // queued. Nothing can be said to a peer that will not read —
+        // close silently.
+        if self.write_timeout != Duration::ZERO
+            && conn.write.pending() > 0
+            && now >= conn.write_progress + self.write_timeout
+        {
+            Metrics::inc(&self.metrics.timeouts, 1);
+            return self.close(idx);
+        }
+        if conn.corrupt || conn.eof {
+            return; // already on its way out
+        }
+        // Read stall (slow loris): the partial frame at the head of the
+        // accumulator has not completed within the window. Evaluated
+        // only once prior requests are answered, so the error notice
+        // cannot overtake a pending reply (the heartbeat re-checks
+        // after the backlog clears).
+        let read_stalled = self.read_timeout != Duration::ZERO
+            && conn.drained()
+            && conn.frame_start.map_or(false, |t| now >= t + self.read_timeout);
+        // Idle: quiescent — nothing in flight, nothing buffered — for
+        // the whole idle window.
+        let idle = self.idle_timeout != Duration::ZERO
+            && conn.drained()
+            && conn.frame_start.is_none()
+            && now >= conn.last_activity + self.idle_timeout;
+        if read_stalled || idle {
+            Metrics::inc(&self.metrics.timeouts, 1);
+            let frame = if read_stalled { stall_timeout_frame() } else { idle_timeout_frame() };
+            if let Some(frame) = frame {
+                conn.write.push_bytes(&frame);
+                conn.write_progress = now;
+                Metrics::inc(&self.metrics.frames_out, 1);
+                Metrics::inc(&self.shard.frames_out, 1);
+            }
+            // Poison like a bad frame: no more reads or parses; close
+            // once the notice flushes (the write-stall deadline still
+            // bounds a peer that refuses to take it).
+            conn.corrupt = true;
+            conn.eof = true;
+            conn.readable = false;
+            self.pump(idx);
+        }
+    }
+
+    /// Schedule this connection's next wheel entry: the nearest
+    /// *currently applicable* deadline, else a coarse heartbeat that
+    /// re-evaluates once conditions change (e.g. a busy connection
+    /// drains and its stalled frame becomes actionable). Deadlines only
+    /// move later, so activity never has to touch the wheel.
+    fn reschedule(&mut self, idx: usize, now: Instant) {
+        if self.idle_timeout == Duration::ZERO
+            && self.read_timeout == Duration::ZERO
+            && self.write_timeout == Duration::ZERO
+        {
+            return; // all deadlines disabled: no wheel entries at all
+        }
+        let Some(conn) = self.conns[idx].as_ref() else { return };
+        let mut next = now + HEARTBEAT;
+        if self.write_timeout != Duration::ZERO && conn.write.pending() > 0 {
+            next = next.min(conn.write_progress + self.write_timeout);
+        }
+        if self.read_timeout != Duration::ZERO && conn.drained() {
+            if let Some(t) = conn.frame_start {
+                next = next.min(t + self.read_timeout);
+            }
+        }
+        if self.idle_timeout != Duration::ZERO && conn.drained() && conn.frame_start.is_none() {
+            next = next.min(conn.last_activity + self.idle_timeout);
+        }
+        // An applicable deadline at or before `now` would have fired in
+        // `check_deadlines`; the clamp only guards clock-edge equality
+        // against re-popping in the same `service_timers` pass.
+        let next = next.max(now + Duration::from_millis(1));
+        self.wheel.schedule(next, token(idx, conn.epoch));
     }
 
     /// Hand completed replies back to their connections and keep those
     /// connections moving.
     fn drain_completions(&mut self) {
-        let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
+        let done: Vec<Completion> = std::mem::take(&mut *lock_clean(&self.completions));
         for c in done {
             let (idx, epoch) = token_parts(c.token);
             if idx >= self.conns.len() || self.epochs[idx] != epoch {
@@ -485,6 +746,7 @@ impl Loop {
             }
             let Some(conn) = self.conns[idx].as_mut() else { continue };
             conn.busy = false;
+            conn.last_activity = Instant::now();
             match c.frame {
                 Some(frame) => {
                     // Zero-copy hand-off: a drained queue takes the
@@ -494,6 +756,17 @@ impl Loop {
                     self.pool.put(spare);
                     Metrics::inc(&self.metrics.frames_out, 1);
                     Metrics::inc(&self.shard.frames_out, 1);
+                    if c.close_after {
+                        // The handler panicked: deliver the error
+                        // reply, then treat the stream as poisoned.
+                        // Pipelined requests behind it are dropped —
+                        // the session state they would run against is
+                        // suspect.
+                        conn.inbox.clear();
+                        conn.corrupt = true;
+                        conn.eof = true;
+                        conn.readable = false;
+                    }
                 }
                 None => {
                     self.close(idx);

@@ -1,0 +1,252 @@
+//! Deterministic syscall fault injection for the transport layer.
+//!
+//! The paper's discipline for inputs — every invalid byte must be
+//! detected, at full speed, on every path — applies equally to the I/O
+//! plane: every error arm in the readiness loop must be reachable and
+//! tested, not just written. This module is a thin shim over the points
+//! where the transport touches the kernel (`read`, `write`, `accept`,
+//! `epoll_wait`, buffer-pool refill). Compiled without the `faults`
+//! cargo feature every helper is an `#[inline(always)]` identity —
+//! zero cost on the hot path. With the feature on, the
+//! `B64SIMD_FAULTS` environment variable selects a *deterministic
+//! seeded plan*:
+//!
+//! ```text
+//! B64SIMD_FAULTS="seed=42,read.eintr=20,read.short=10,write.short=30,\
+//!                 write.eagain=5,accept.fail=2,pool.empty=10,epoll.eintr=5"
+//! ```
+//!
+//! Each `point=percent` entry gives the probability (integer percent)
+//! that the named injection point fires on a given call. Decisions come
+//! from a per-thread xorshift64 generator seeded from `seed` plus a
+//! per-thread counter, so a single-reactor run is exactly reproducible
+//! and a sharded run is reproducible per thread. Injected faults are
+//! *synthesized before* the real syscall (or applied to its buffer
+//! length), so the kernel-visible behaviour stays valid — the server
+//! under faults must still answer byte-identically to the
+//! threaded-transport oracle, just along its error-recovery arms.
+//!
+//! The global injected-fault count is surfaced through
+//! [`injected`] and mirrored into `Metrics::faults_injected` when a
+//! stats report is taken.
+
+#[cfg(feature = "faults")]
+pub(crate) use imp::*;
+
+#[cfg(feature = "faults")]
+mod imp {
+    use std::io::{self, Read};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::OnceLock;
+
+    /// Probability (integer percent) per injection point.
+    #[derive(Default, Debug, Clone, Copy)]
+    struct Plan {
+        seed: u64,
+        read_eintr: u8,
+        read_short: u8,
+        write_short: u8,
+        write_eagain: u8,
+        accept_fail: u8,
+        pool_empty: u8,
+        epoll_eintr: u8,
+    }
+
+    fn plan() -> &'static Plan {
+        static PLAN: OnceLock<Plan> = OnceLock::new();
+        PLAN.get_or_init(|| {
+            let mut p = Plan::default();
+            let Ok(spec) = std::env::var("B64SIMD_FAULTS") else { return p };
+            for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let Some((key, val)) = part.split_once('=') else {
+                    eprintln!("b64simd: ignoring malformed B64SIMD_FAULTS entry '{part}'");
+                    continue;
+                };
+                let Ok(n) = val.trim().parse::<u64>() else {
+                    eprintln!("b64simd: ignoring non-numeric B64SIMD_FAULTS value '{part}'");
+                    continue;
+                };
+                let pct = n.min(100) as u8;
+                match key.trim() {
+                    "seed" => p.seed = n,
+                    "read.eintr" => p.read_eintr = pct,
+                    "read.short" => p.read_short = pct,
+                    "write.short" => p.write_short = pct,
+                    "write.eagain" => p.write_eagain = pct,
+                    "accept.fail" => p.accept_fail = pct,
+                    "pool.empty" => p.pool_empty = pct,
+                    "epoll.eintr" => p.epoll_eintr = pct,
+                    other => eprintln!("b64simd: ignoring unknown B64SIMD_FAULTS key '{other}'"),
+                }
+            }
+            p
+        })
+    }
+
+    /// Total faults injected, process-wide.
+    static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+    /// Distinct seeds per thread so shards do not share one stream.
+    static THREAD_SALT: AtomicU64 = AtomicU64::new(0);
+
+    std::thread_local! {
+        static RNG: std::cell::Cell<u64> = std::cell::Cell::new({
+            let salt = THREAD_SALT.fetch_add(1, Ordering::Relaxed);
+            // Never zero (xorshift's absorbing state).
+            (plan().seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)) | 1
+        });
+    }
+
+    fn next_u64() -> u64 {
+        RNG.with(|cell| {
+            let mut x = cell.get();
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            cell.set(x);
+            x
+        })
+    }
+
+    /// Roll the dice for one injection point; counts a hit.
+    fn fire(percent: u8) -> bool {
+        if percent == 0 {
+            return false;
+        }
+        let hit = next_u64() % 100 < percent as u64;
+        if hit {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Faults injected so far (mirrored into `Metrics::faults_injected`
+    /// by the stats path).
+    pub fn injected() -> u64 {
+        INJECTED.load(Ordering::Relaxed)
+    }
+
+    /// `read(2)` shim: may synthesize `EINTR` before the syscall, or
+    /// truncate the buffer so the real read comes back short (≤ 7
+    /// bytes), tearing frames across reads.
+    pub(crate) fn read_stream(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<usize> {
+        if fire(plan().read_eintr) {
+            return Err(io::ErrorKind::Interrupted.into());
+        }
+        let cap = if !buf.is_empty() && fire(plan().read_short) {
+            buf.len().min(7)
+        } else {
+            buf.len()
+        };
+        stream.read(&mut buf[..cap])
+    }
+
+    /// `accept(2)` shim: may synthesize the transient failures a
+    /// listener backlog really produces (`ECONNABORTED`, `EINTR`).
+    pub(crate) fn accept(listener: &TcpListener) -> io::Result<(TcpStream, SocketAddr)> {
+        if fire(plan().accept_fail) {
+            let kind = if next_u64() % 2 == 0 {
+                io::ErrorKind::ConnectionAborted
+            } else {
+                io::ErrorKind::Interrupted
+            };
+            return Err(kind.into());
+        }
+        listener.accept()
+    }
+
+    /// Should `BufferPool::get` pretend its free list is exhausted?
+    pub(crate) fn pool_exhausted() -> bool {
+        fire(plan().pool_empty)
+    }
+
+    /// Should `Epoll::wait` behave as if a signal interrupted it once?
+    pub(crate) fn epoll_eintr() -> bool {
+        fire(plan().epoll_eintr)
+    }
+
+    /// `write(2)` shim wrapping the socket handed to
+    /// `WriteQueue::write_to`: may synthesize `EAGAIN` (the queue keeps
+    /// the bytes for a retry) or cap a write short (partial-write arm).
+    pub(crate) struct FaultyWrite<'a, W: io::Write>(pub &'a mut W);
+
+    impl<W: io::Write> io::Write for FaultyWrite<'_, W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if fire(plan().write_eagain) {
+                return Err(io::ErrorKind::WouldBlock.into());
+            }
+            let cap = if buf.len() > 1 && fire(plan().write_short) {
+                buf.len() / 2
+            } else {
+                buf.len()
+            };
+            self.0.write(&buf[..cap])
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            self.0.flush()
+        }
+    }
+
+    /// Wrap a socket for fault-injected writes.
+    pub(crate) fn wrap_write<W: io::Write>(w: &mut W) -> FaultyWrite<'_, W> {
+        FaultyWrite(w)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn rng_streams_are_deterministic_per_thread() {
+            // Two draws on this thread advance one xorshift stream;
+            // restarting the process with the same seed would replay it.
+            let a = next_u64();
+            let b = next_u64();
+            assert_ne!(a, b);
+            assert_ne!(a, 0);
+        }
+
+        #[test]
+        fn zero_percent_never_fires() {
+            for _ in 0..1000 {
+                assert!(!fire(0));
+            }
+        }
+    }
+}
+
+/// Zero-cost identities when the `faults` feature is off.
+#[cfg(not(feature = "faults"))]
+mod off {
+    #![allow(dead_code)]
+    use std::io;
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+
+    #[inline(always)]
+    pub(crate) fn read_stream(
+        stream: &mut TcpStream,
+        buf: &mut [u8],
+    ) -> io::Result<usize> {
+        io::Read::read(stream, buf)
+    }
+
+    #[inline(always)]
+    pub(crate) fn accept(listener: &TcpListener) -> io::Result<(TcpStream, SocketAddr)> {
+        listener.accept()
+    }
+
+    #[inline(always)]
+    pub(crate) fn pool_exhausted() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub(crate) fn wrap_write<W: io::Write>(w: &mut W) -> &mut W {
+        w
+    }
+}
+
+#[cfg(not(feature = "faults"))]
+pub(crate) use off::*;

@@ -272,6 +272,53 @@ impl Default for ReplySink {
     }
 }
 
+/// The coordinator writes reply frames through its own
+/// [`ResponseSink`](crate::coordinator::sink::ResponseSink) trait; this
+/// is the transport-side implementation, delegating to the inherent
+/// frame-building methods above. Keeping the impl here (not in
+/// `coordinator`) preserves the base64 → coordinator → net → server
+/// layer order: `net` knows the coordinator's trait, the coordinator
+/// never names a `net` type.
+impl crate::coordinator::sink::ResponseSink for ReplySink {
+    fn begin_data(&mut self, id: u64) {
+        self.begin_data_frame(id);
+    }
+
+    fn grow(&mut self, n: usize) -> &mut [u8] {
+        ReplySink::grow(self, n)
+    }
+
+    fn mark(&self) -> usize {
+        ReplySink::mark(self)
+    }
+
+    fn truncate_to(&mut self, mark: usize) {
+        ReplySink::truncate_to(self, mark);
+    }
+
+    fn commit(&mut self) -> Result<(), crate::coordinator::sink::FrameTooLarge> {
+        self.end_frame().map_err(|e| match e {
+            ProtoError::FrameTooLarge(n) => crate::coordinator::sink::FrameTooLarge(n),
+            other => unreachable!("end_frame only fails with FrameTooLarge, got {other}"),
+        })
+    }
+
+    fn abort(&mut self) {
+        self.rollback_frame();
+    }
+
+    fn error_reply(
+        &mut self,
+        id: u64,
+        message: &str,
+    ) -> Result<(), crate::coordinator::sink::FrameTooLarge> {
+        self.push_error(id, message).map_err(|e| match e {
+            ProtoError::FrameTooLarge(n) => crate::coordinator::sink::FrameTooLarge(n),
+            other => unreachable!("push_error only fails with FrameTooLarge, got {other}"),
+        })
+    }
+}
+
 /// Outgoing bytes awaiting a writable socket. Frames are appended
 /// whole; `write_to` pushes as much as the socket accepts and keeps the
 /// rest for the next `EPOLLOUT`.

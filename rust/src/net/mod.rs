@@ -42,8 +42,15 @@
 //!   `EPOLLOUT`, and [`frame::ReplySink`] builds complete reply frames
 //!   in place for the zero-copy response path;
 //! * `conn` — per-connection state and the backpressure caps
-//!   (pipelining depth, write high-water mark);
-//! * `driver` — the reactor shards plus the shared worker pool.
+//!   (pipelining depth, write high-water mark) plus the lifecycle
+//!   deadline timestamps (idle / read-stall / write-stall);
+//! * `driver` — the reactor shards plus the shared worker pool;
+//! * `timer` — the per-shard deadline wheel whose earliest entry
+//!   becomes that reactor's `epoll_wait` timeout (slow-loris and
+//!   write-stall peers are shed with a typed error frame);
+//! * [`faults`] — deterministic, seeded syscall fault injection
+//!   (`faults` cargo feature + `B64SIMD_FAULTS` plan; zero-cost
+//!   identity shims when the feature is off).
 //!
 //! ## Reactor shards
 //!
@@ -97,6 +104,7 @@
 //! ([`crate::server::Transport::Threaded`]).
 
 pub mod buffer;
+pub mod faults;
 pub mod frame;
 
 #[cfg(target_os = "linux")]
@@ -107,6 +115,9 @@ pub(crate) mod conn;
 
 #[cfg(target_os = "linux")]
 pub(crate) mod driver;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod timer;
 
 pub use buffer::BufferPool;
 pub use frame::{FrameMachine, ReplySink, WriteQueue};

@@ -99,6 +99,7 @@ extern "C" {
     ) -> c_int;
     fn bind(fd: c_int, addr: *const c_void, addrlen: u32) -> c_int;
     fn listen(fd: c_int, backlog: c_int) -> c_int;
+    fn signal(signum: c_int, handler: usize) -> usize;
 }
 
 /// Readiness: data to read.
@@ -178,9 +179,18 @@ impl Epoll {
     }
 
     /// Block for readiness, filling `events`; returns how many fired.
-    /// Retries on `EINTR`; `timeout_ms < 0` blocks indefinitely.
+    /// Retries on `EINTR` (real or injected by the `faults` feature);
+    /// `timeout_ms < 0` blocks indefinitely.
     pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        #[cfg(feature = "faults")]
+        let mut injected_eintr = crate::net::faults::epoll_eintr();
         loop {
+            // A simulated signal interruption takes the same retry edge
+            // a real EINTR would, proving the loop below.
+            #[cfg(feature = "faults")]
+            if std::mem::take(&mut injected_eintr) {
+                continue;
+            }
             let n = unsafe {
                 epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
             };
@@ -223,18 +233,39 @@ impl EventFd {
         self.fd
     }
 
-    /// Add 1 to the counter, waking any epoll watcher. A full counter
-    /// (`EAGAIN`) already guarantees a pending wakeup, so it is ignored.
+    /// Add 1 to the counter, waking any epoll watcher. Retries on
+    /// `EINTR`: an interrupted-and-dropped signal here would silently
+    /// lose a completion wakeup and stall its connection until the next
+    /// unrelated event. A full counter (`EAGAIN`) already guarantees a
+    /// pending wakeup, so that is the one error safely ignored.
     pub fn signal(&self) {
         let one: u64 = 1;
-        unsafe { write(self.fd, (&one as *const u64).cast::<c_void>(), 8) };
+        loop {
+            let n = unsafe { write(self.fd, (&one as *const u64).cast::<c_void>(), 8) };
+            if n >= 0 {
+                return;
+            }
+            if io::Error::last_os_error().kind() != io::ErrorKind::Interrupted {
+                return; // EAGAIN: counter saturated, wakeup already pending
+            }
+        }
     }
 
-    /// Reset the counter (nonblocking read; `EAGAIN` means it was
-    /// already zero, which is fine — a spurious wakeup costs nothing).
+    /// Reset the counter. Retries on `EINTR` — a drain dropped to a
+    /// signal would leave the counter nonzero with the edge already
+    /// consumed, suppressing the next edge-triggered wakeup. `EAGAIN`
+    /// (already zero) is fine: a spurious wakeup costs nothing.
     pub fn drain(&self) {
         let mut buf: u64 = 0;
-        unsafe { read(self.fd, (&mut buf as *mut u64).cast::<c_void>(), 8) };
+        loop {
+            let n = unsafe { read(self.fd, (&mut buf as *mut u64).cast::<c_void>(), 8) };
+            if n >= 0 {
+                return;
+            }
+            if io::Error::last_os_error().kind() != io::ErrorKind::Interrupted {
+                return;
+            }
+        }
     }
 }
 
@@ -242,6 +273,41 @@ impl Drop for EventFd {
     fn drop(&mut self) {
         unsafe { close(self.fd) };
     }
+}
+
+const SIGINT: c_int = 2;
+const SIGTERM: c_int = 15;
+/// `SIG_ERR` — `signal(2)`'s failure return, `(sighandler_t)-1`.
+const SIG_ERR: usize = usize::MAX;
+
+/// Set by [`on_term_signal`]; polled by the serve loop.
+static TERM_REQUESTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// The installed handler. An atomic store is async-signal-safe — no
+/// allocation, no locks, no syscalls — so this is the entire handler;
+/// the serve loop polls [`term_requested`] and runs the actual graceful
+/// drain on a normal thread.
+extern "C" fn on_term_signal(_signum: c_int) {
+    TERM_REQUESTED.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Install the graceful-drain handler for `SIGTERM` and `SIGINT`.
+/// Process-global; meant for the `serve` CLI entry point, not the
+/// library (tests drive drains through `ServerHandle::shutdown`).
+pub fn install_term_handler() -> io::Result<()> {
+    for sig in [SIGTERM, SIGINT] {
+        let prev = unsafe { signal(sig, on_term_signal as usize) };
+        if prev == SIG_ERR {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+/// Whether a termination signal has arrived since
+/// [`install_term_handler`].
+pub fn term_requested() -> bool {
+    TERM_REQUESTED.load(std::sync::atomic::Ordering::SeqCst)
 }
 
 /// Raise the soft `RLIMIT_NOFILE` to at least `want` descriptors

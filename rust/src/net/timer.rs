@@ -1,0 +1,112 @@
+//! Connection deadlines for the readiness loops.
+//!
+//! Each reactor shard owns one [`TimerWheel`] holding `(deadline,
+//! token)` pairs — one live entry per open connection (idle, read-stall
+//! or write-stall deadline, whichever is nearest, or a coarse heartbeat
+//! when none applies). The wheel's next deadline becomes the shard's
+//! `epoll_wait` timeout, so an idle server still blocks indefinitely
+//! and a loaded one wakes exactly when the earliest deadline is due.
+//!
+//! Deadlines only ever move *later* (activity on a connection does not
+//! touch the wheel): when an entry pops, the loop re-evaluates the
+//! connection's actual state and either acts on a due deadline or
+//! re-inserts the entry at the recomputed time. Entries for closed
+//! connections are recognized as stale by the slab-epoch token and
+//! dropped on pop. This keeps every wheel operation O(log n) with no
+//! deletion support needed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// Min-heap of `(deadline, token)` pairs.
+pub(crate) struct TimerWheel {
+    heap: BinaryHeap<Reverse<(Instant, u64)>>,
+}
+
+impl TimerWheel {
+    pub fn new() -> TimerWheel {
+        TimerWheel { heap: BinaryHeap::new() }
+    }
+
+    /// Insert an entry. Duplicates for a token are allowed — stale ones
+    /// are filtered by the caller's epoch check on pop.
+    pub fn schedule(&mut self, deadline: Instant, token: u64) {
+        self.heap.push(Reverse((deadline, token)));
+    }
+
+    /// Milliseconds until the earliest deadline, as an `epoll_wait`
+    /// timeout: `-1` (block indefinitely) when empty, else the
+    /// rounded-up remaining time (≥ 1, capped to `i32::MAX`).
+    pub fn next_timeout_ms(&self, now: Instant) -> i32 {
+        match self.heap.peek() {
+            None => -1,
+            Some(Reverse((deadline, _))) => {
+                let remaining = deadline.saturating_duration_since(now);
+                // Round up so the wait never wakes *before* the
+                // deadline and spins on a not-yet-due entry.
+                let ms = remaining.as_millis().saturating_add(1);
+                ms.min(i32::MAX as u128) as i32
+            }
+        }
+    }
+
+    /// Pop the next entry whose deadline is at or before `now`.
+    pub fn pop_due(&mut self, now: Instant) -> Option<u64> {
+        match self.heap.peek() {
+            Some(Reverse((deadline, _))) if *deadline <= now => {
+                let Reverse((_, token)) = self.heap.pop().unwrap();
+                Some(token)
+            }
+            _ => None,
+        }
+    }
+
+    /// Entries currently scheduled (live + stale).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn pops_in_deadline_order() {
+        let mut w = TimerWheel::new();
+        let base = Instant::now();
+        w.schedule(base + Duration::from_millis(30), 3);
+        w.schedule(base + Duration::from_millis(10), 1);
+        w.schedule(base + Duration::from_millis(20), 2);
+        let later = base + Duration::from_millis(25);
+        assert_eq!(w.pop_due(later), Some(1));
+        assert_eq!(w.pop_due(later), Some(2));
+        assert_eq!(w.pop_due(later), None, "entry 3 not yet due");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.pop_due(base + Duration::from_millis(31)), Some(3));
+    }
+
+    #[test]
+    fn timeout_reflects_earliest_entry() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        assert_eq!(w.next_timeout_ms(now), -1, "empty wheel blocks indefinitely");
+        w.schedule(now + Duration::from_millis(500), 7);
+        let ms = w.next_timeout_ms(now);
+        assert!((1..=502).contains(&ms), "got {ms}");
+        assert_eq!(w.next_timeout_ms(now + Duration::from_secs(1)), 1, "due entries round up to 1ms");
+    }
+
+    #[test]
+    fn duplicate_tokens_coexist() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        w.schedule(now, 9);
+        w.schedule(now, 9);
+        assert_eq!(w.pop_due(now), Some(9));
+        assert_eq!(w.pop_due(now), Some(9));
+        assert_eq!(w.pop_due(now), None);
+    }
+}

@@ -235,6 +235,25 @@ pub fn resolve_alphabet(name: &str) -> Result<Alphabet, ProtoError> {
 }
 
 impl Message {
+    /// The request/stream id this message carries, or `0` for messages
+    /// without one (`Stats`, `Ping`, …). Lets a transport attribute an
+    /// error reply — a timeout notice, a panic report — to the request
+    /// it answers even when the request itself can no longer be asked.
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Message::Encode { id, .. }
+            | Message::Decode { id, .. }
+            | Message::Validate { id, .. }
+            | Message::StreamBegin { id, .. }
+            | Message::StreamChunk { id, .. }
+            | Message::StreamEnd { id }
+            | Message::RespData { id, .. }
+            | Message::RespError { id, .. } => *id,
+            Message::Stats | Message::Ping | Message::Pong => 0,
+            Message::RespStats { .. } | Message::RespBusy { .. } => 0,
+        }
+    }
+
     /// Serialize to a frame body (without the length prefix).
     pub fn to_bytes(&self) -> Vec<u8> {
         fn str8(out: &mut Vec<u8>, s: &str) {

@@ -20,16 +20,18 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use super::proto::{read_frame_raw, resolve_alphabet, Message, ProtoError};
+use super::proto::{resolve_alphabet, Message, ProtoError};
 use crate::base64::{Mode, Whitespace};
 use crate::coordinator::backpressure::ConnLimiter;
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
-use crate::net::frame::ReplySink;
+use crate::net::frame::{FrameMachine, ReplySink};
 
 /// Which connection subsystem `serve` runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,6 +111,25 @@ pub struct ServerConfig {
     /// differential reference path. `B64SIMD_ZEROCOPY=0` flips the
     /// default off.
     pub zero_copy: bool,
+    /// Close a connection that has been fully quiescent (no request in
+    /// flight, nothing buffered) this long. `B64SIMD_TIMEOUT_IDLE`
+    /// (milliseconds; `0` disables), default 60s.
+    pub idle_timeout: Duration,
+    /// Close a connection whose *partial* request frame has not
+    /// completed within this window — the slow-loris shed. Progress is
+    /// counted per complete frame, not per byte, so dripping one header
+    /// byte at a time cannot refresh the deadline.
+    /// `B64SIMD_TIMEOUT_READ` (milliseconds; `0` disables), default 10s.
+    pub read_timeout: Duration,
+    /// Close a connection whose pending replies have made no progress
+    /// onto the socket this long (the peer stopped reading).
+    /// `B64SIMD_TIMEOUT_WRITE` (milliseconds; `0` disables), default
+    /// 10s.
+    pub write_timeout: Duration,
+    /// Graceful-drain grace period: how long `ServerHandle::shutdown`
+    /// waits for in-flight requests to be answered and flushed before
+    /// force-closing what remains. `B64SIMD_DRAIN_MS`, default 5s.
+    pub drain_grace: Duration,
 }
 
 impl ServerConfig {
@@ -146,6 +167,21 @@ impl ServerConfig {
             }),
         }
     }
+
+    /// Millisecond env knob for the lifecycle deadlines; `0` disables
+    /// the deadline it configures.
+    fn timeout_from_env(key: &str, default: Duration) -> Duration {
+        match std::env::var(key) {
+            Err(_) => default,
+            Ok(v) => match v.parse::<u64>() {
+                Ok(ms) => Duration::from_millis(ms),
+                Err(_) => {
+                    eprintln!("b64simd: ignoring invalid {key} value '{v}'");
+                    default
+                }
+            },
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -163,18 +199,25 @@ impl Default for ServerConfig {
                 .clamp(2, 8),
             reactors: Self::reactors_from_env(),
             zero_copy: Self::zero_copy_from_env(),
+            idle_timeout: Self::timeout_from_env("B64SIMD_TIMEOUT_IDLE", Duration::from_secs(60)),
+            read_timeout: Self::timeout_from_env("B64SIMD_TIMEOUT_READ", Duration::from_secs(10)),
+            write_timeout: Self::timeout_from_env("B64SIMD_TIMEOUT_WRITE", Duration::from_secs(10)),
+            drain_grace: Self::timeout_from_env("B64SIMD_DRAIN_MS", Duration::from_secs(5)),
         }
     }
 }
 
-/// Running server handle. Dropping stops the transport (joined); use
-/// [`ServerHandle::shutdown`] for an explicit stop.
+/// Running server handle. Dropping drains and stops the transport
+/// (joined); use [`ServerHandle::shutdown`] for an explicit graceful
+/// stop or [`ServerHandle::abort`] to skip the drain.
 pub struct ServerHandle {
     /// The bound address (useful with a port-0 request).
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
     waker: Waker,
+    metrics: Arc<Metrics>,
 }
 
 /// How to nudge a blocked transport out of its wait.
@@ -203,12 +246,38 @@ impl Waker {
 }
 
 impl ServerHandle {
-    /// Stop the transport and join its threads.
+    /// Gracefully drain and stop: accepting ends at once, every request
+    /// already parsed off the wire is answered and its reply flushed
+    /// (bounded by [`ServerConfig::drain_grace`]), idle connections
+    /// close immediately, and the transport threads join before this
+    /// returns — the `conns_open` gauge is back to zero.
     pub fn shutdown(mut self) {
+        self.drain_and_join();
+    }
+
+    /// Hard stop: abandon open connections without answering what is
+    /// still queued. Exists for tests and for a second, impatient
+    /// signal; prefer [`ServerHandle::shutdown`].
+    pub fn abort(mut self) {
         self.stop_and_join();
     }
 
+    fn drain_and_join(&mut self) {
+        if self.threads.is_empty() {
+            return; // already stopped
+        }
+        Metrics::inc(&self.metrics.drains, 1);
+        self.drain.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
     fn stop_and_join(&mut self) {
+        if self.threads.is_empty() {
+            return;
+        }
         self.stop.store(true, Ordering::SeqCst);
         self.waker.wake();
         for t in self.threads.drain(..) {
@@ -219,7 +288,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop_and_join();
+        self.drain_and_join();
     }
 }
 
@@ -229,6 +298,7 @@ impl Drop for ServerHandle {
 /// configuration keeps the plain listener.
 pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<ServerHandle> {
     let stop = Arc::new(AtomicBool::new(false));
+    let drain = Arc::new(AtomicBool::new(false));
     match config.transport {
         #[cfg(target_os = "linux")]
         Transport::Epoll => {
@@ -239,38 +309,70 @@ pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<Server
                 vec![TcpListener::bind(config.addr)?]
             };
             let addr = listeners[0].local_addr()?;
-            let srv = crate::net::driver::spawn(router, &config, listeners, stop.clone())?;
-            Ok(ServerHandle { addr, stop, threads: srv.threads, waker: Waker::Events(srv.wakes) })
+            let metrics = router.metrics().clone();
+            let srv = crate::net::driver::spawn(
+                router,
+                &config,
+                listeners,
+                stop.clone(),
+                drain.clone(),
+            )?;
+            Ok(ServerHandle {
+                addr,
+                stop,
+                drain,
+                threads: srv.threads,
+                waker: Waker::Events(srv.wakes),
+                metrics,
+            })
         }
         #[cfg(not(target_os = "linux"))]
         Transport::Epoll => {
             let listener = TcpListener::bind(config.addr)?;
             let addr = listener.local_addr()?;
-            serve_threaded(router, config, listener, addr, stop)
+            serve_threaded(router, config, listener, addr, stop, drain)
         }
         Transport::Threaded => {
             let listener = TcpListener::bind(config.addr)?;
             let addr = listener.local_addr()?;
-            serve_threaded(router, config, listener, addr, stop)
+            serve_threaded(router, config, listener, addr, stop, drain)
         }
     }
 }
 
-/// The thread-per-connection transport.
+/// The thread-per-connection transport. The accept thread tracks its
+/// connection threads and joins them before exiting, so a joined
+/// `ServerHandle` means every connection is finished and the
+/// `conns_open` gauge has settled — the same guarantee the epoll
+/// transport's drain gives.
 fn serve_threaded(
     router: Arc<Router>,
     config: ServerConfig,
     listener: TcpListener,
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
 ) -> anyhow::Result<ServerHandle> {
     let stop2 = stop.clone();
+    let drain2 = drain.clone();
     let limiter = ConnLimiter::new(config.max_connections);
     let metrics = router.metrics().clone();
+    let handle_metrics = metrics.clone();
     let accept_thread = std::thread::spawn(move || {
+        let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
         for stream in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) {
+            if stop2.load(Ordering::SeqCst) || drain2.load(Ordering::SeqCst) {
                 break;
+            }
+            // Reap finished connection threads as we go, so a
+            // long-lived server does not accumulate dead handles.
+            let mut i = 0;
+            while i < conn_threads.len() {
+                if conn_threads[i].is_finished() {
+                    let _ = conn_threads.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
             }
             let Ok(stream) = stream else { continue };
             let Some(permit) = limiter.try_acquire() else {
@@ -282,15 +384,41 @@ fn serve_threaded(
             Metrics::inc(&metrics.conns_open, 1);
             let router = router.clone();
             let metrics = metrics.clone();
-            let max_streams = config.max_streams_per_connection;
-            std::thread::spawn(move || {
-                let _ = handle_connection(stream, &router, max_streams, &metrics);
-                Metrics::dec(&metrics.conns_open, 1);
-                drop(permit);
-            });
+            let stop3 = stop2.clone();
+            let drain3 = drain2.clone();
+            let config = config.clone();
+            let spawned = std::thread::Builder::new()
+                .name("b64simd-conn".to_string())
+                .spawn(move || {
+                    let _ = handle_connection(stream, &router, &config, &metrics, &stop3, &drain3);
+                    Metrics::dec(&metrics.conns_open, 1);
+                    drop(permit);
+                });
+            match spawned {
+                Ok(t) => conn_threads.push(t),
+                Err(_) => {
+                    // Thread exhaustion: shed the connection (permit
+                    // and socket drop) rather than killing the acceptor.
+                    Metrics::dec(&metrics.conns_open, 1);
+                }
+            }
+        }
+        // Drain: the connection threads observe the flags themselves
+        // (they poll between reads); joining them here is what makes
+        // `ServerHandle::shutdown` mean "every accepted request
+        // answered".
+        for t in conn_threads {
+            let _ = t.join();
         }
     });
-    Ok(ServerHandle { addr, stop, threads: vec![accept_thread], waker: Waker::Connect(addr) })
+    Ok(ServerHandle {
+        addr,
+        stop,
+        drain,
+        threads: vec![accept_thread],
+        waker: Waker::Connect(addr),
+        metrics: handle_metrics,
+    })
 }
 
 /// Load-shed an over-cap connection: tell the client why before
@@ -329,27 +457,166 @@ pub(crate) fn refuse_busy(stream: TcpStream, limiter: &ConnLimiter) {
     }
 }
 
+/// Serialized close-notice frames for the connection deadlines. The
+/// exact strings are normative (`docs/PROTOCOL.md`, "Timeouts and
+/// close semantics") and shared by both transports, so the parity
+/// oracle holds on the timeout paths too.
+pub(crate) fn idle_timeout_frame() -> Option<Vec<u8>> {
+    Message::RespError { id: 0, message: "timeout: idle connection".into() }
+        .to_frame_bytes()
+        .ok()
+}
+
+/// See [`idle_timeout_frame`]; sent when a partial request frame
+/// stalls (the slow-loris shed).
+pub(crate) fn stall_timeout_frame() -> Option<Vec<u8>> {
+    Message::RespError { id: 0, message: "timeout: request frame stalled".into() }
+        .to_frame_bytes()
+        .ok()
+}
+
+/// One blocking connection, with the same lifecycle rules as the epoll
+/// transport: reads poll on a short timeout so the thread can observe
+/// `stop`/`drain` and the idle / read-stall deadlines; writes are
+/// bounded by the configured write timeout; each request dispatch runs
+/// under `catch_unwind`, so a panicking handler costs this connection
+/// one error reply and a close, never the whole process.
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
-    max_streams: usize,
+    config: &ServerConfig,
     metrics: &Metrics,
+    stop: &AtomicBool,
+    drain: &AtomicBool,
 ) -> Result<(), ProtoError> {
+    let mut stream = stream;
     stream.set_nodelay(true).ok();
-    let mut reader = std::io::BufReader::new(stream.try_clone()?);
-    let mut writer = std::io::BufWriter::new(stream);
-    let mut session = SessionState::new(max_streams);
-    while let Some((msg, wire_len)) = read_frame_raw(&mut reader)? {
-        Metrics::inc(&metrics.frames_in, 1);
-        Metrics::inc(&metrics.net_bytes_in, wire_len as u64);
-        let reply = dispatch(msg, router, &mut session);
-        let frame = reply.to_frame_bytes()?;
-        writer.write_all(&frame)?;
-        writer.flush()?;
-        Metrics::inc(&metrics.frames_out, 1);
-        Metrics::inc(&metrics.net_bytes_out, frame.len() as u64);
+    // The poll tick bounds how stale a stop/drain/deadline check can
+    // get; tighten it under sub-100ms deadlines so tests with tiny
+    // timeouts observe them promptly.
+    let mut tick = Duration::from_millis(100);
+    for t in [config.idle_timeout, config.read_timeout] {
+        if t != Duration::ZERO {
+            tick = tick.min(t);
+        }
     }
-    Ok(())
+    stream.set_read_timeout(Some(tick.max(Duration::from_millis(5))))?;
+    if config.write_timeout != Duration::ZERO {
+        stream.set_write_timeout(Some(config.write_timeout)).ok();
+    }
+    let mut frames = FrameMachine::new(Vec::new());
+    let mut session = SessionState::new(config.max_streams_per_connection);
+    let mut scratch = vec![0u8; 64 << 10];
+    let mut last_activity = Instant::now();
+    // When the partial frame at the head of the accumulator started;
+    // only a *complete* frame resets it (see `ServerConfig::read_timeout`).
+    let mut frame_start: Option<Instant> = None;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match crate::net::faults::read_stream(&mut stream, &mut scratch) {
+            Ok(0) => return Ok(()),
+            Ok(n) => {
+                Metrics::inc(&metrics.net_bytes_in, n as u64);
+                frames.push(&scratch[..n]);
+                last_activity = Instant::now();
+                let mut parsed_any = false;
+                loop {
+                    match frames.next_frame()? {
+                        Some(msg) => {
+                            parsed_any = true;
+                            Metrics::inc(&metrics.frames_in, 1);
+                            if !serve_one(msg, router, &mut session, &stream, metrics)? {
+                                return Ok(()); // handler panicked: close
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                if frames.buffered() == 0 {
+                    frame_start = None;
+                } else if parsed_any || frame_start.is_none() {
+                    frame_start = Some(Instant::now());
+                }
+                if drain.load(Ordering::SeqCst) {
+                    // Every frame parsed so far is answered (just
+                    // above); a draining server reads nothing more.
+                    return Ok(());
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Poll tick: nothing arrived within `tick`.
+                if drain.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                let now = Instant::now();
+                let read_stalled = config.read_timeout != Duration::ZERO
+                    && frame_start.map_or(false, |t| now >= t + config.read_timeout);
+                let idle = config.idle_timeout != Duration::ZERO
+                    && frame_start.is_none()
+                    && now >= last_activity + config.idle_timeout;
+                if read_stalled || idle {
+                    Metrics::inc(&metrics.timeouts, 1);
+                    let frame =
+                        if read_stalled { stall_timeout_frame() } else { idle_timeout_frame() };
+                    if let Some(frame) = frame {
+                        if (&stream).write_all(&frame).is_ok() {
+                            Metrics::inc(&metrics.frames_out, 1);
+                            Metrics::inc(&metrics.net_bytes_out, frame.len() as u64);
+                        }
+                    }
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Dispatch one request on the blocking transport and write its reply.
+/// Returns `Ok(false)` when the handler panicked: the error reply has
+/// been written and the caller must close the connection (pipelined
+/// requests behind the panic are dropped — the session state they
+/// would run against is suspect).
+fn serve_one(
+    msg: Message,
+    router: &Router,
+    session: &mut SessionState,
+    stream: &TcpStream,
+    metrics: &Metrics,
+) -> Result<bool, ProtoError> {
+    let id = msg.request_id();
+    let (reply, keep_going) =
+        match std::panic::catch_unwind(AssertUnwindSafe(|| dispatch(msg, router, session))) {
+            Ok(reply) => (reply, true),
+            Err(_) => {
+                Metrics::inc(&metrics.worker_panics, 1);
+                let reply = Message::RespError {
+                    id,
+                    message: "internal error: request handler panicked".to_string(),
+                };
+                (reply, false)
+            }
+        };
+    let frame = reply.to_frame_bytes()?;
+    if let Err(e) = (&*stream).write_all(&frame) {
+        if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) {
+            // The peer stopped reading its replies: the write-stall
+            // shed, enforced here by the socket write timeout.
+            Metrics::inc(&metrics.timeouts, 1);
+        }
+        return Err(e.into());
+    }
+    Metrics::inc(&metrics.frames_out, 1);
+    Metrics::inc(&metrics.net_bytes_out, frame.len() as u64);
+    Ok(keep_going)
 }
 
 fn outcome_to_message(id: u64, outcome: Outcome) -> Message {
@@ -384,11 +651,31 @@ fn one_shot(
     outcome_to_message(id, resp.outcome)
 }
 
+/// Fault-injection hook for the panic-isolation tests: an `Encode`
+/// request naming the reserved alphabet `__faults_panic` panics inside
+/// the handler, exactly where a codec bug would. Compiled to nothing
+/// without the `faults` feature, so the reserved name cannot be
+/// triggered in production builds (there it is just an unknown
+/// alphabet).
+#[cfg(feature = "faults")]
+fn maybe_injected_panic(msg: &Message) {
+    if let Message::Encode { alphabet, .. } = msg {
+        if alphabet == "__faults_panic" {
+            panic!("injected handler panic (faults test hook)");
+        }
+    }
+}
+
+#[cfg(not(feature = "faults"))]
+#[inline(always)]
+fn maybe_injected_panic(_msg: &Message) {}
+
 /// Execute one request message against the router / session. Shared by
 /// both transports: the blocking path calls it inline on the connection
 /// thread, the epoll path on a net worker (with the session behind the
 /// connection's mutex).
 pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
+    maybe_injected_panic(&msg);
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
             one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data)
@@ -432,7 +719,17 @@ pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState
             Ok(out) => Message::RespData { id, data: out },
             Err(e) => stream_err(id, e),
         },
-        Message::Stats => Message::RespStats { report: router.metrics().report() },
+        Message::Stats => {
+            // Mirror the faults layer's injection counter into the
+            // metrics snapshot so a chaos run can assert its plan
+            // actually fired (always zero without the feature).
+            #[cfg(feature = "faults")]
+            router
+                .metrics()
+                .faults_injected
+                .store(crate::net::faults::injected(), Ordering::Relaxed);
+            Message::RespStats { report: router.metrics().report() }
+        }
         Message::Ping => Message::Pong,
         // A server never receives responses; answer with an error frame.
         other => Message::RespError { id: 0, message: format!("unexpected message {other:?}") },
@@ -469,22 +766,29 @@ pub(crate) fn dispatch_into(
     session: &mut SessionState,
     sink: &mut ReplySink,
 ) -> Result<(), ProtoError> {
+    // The router's sink-path error is the coordinator-owned
+    // `FrameTooLarge`; at this layer it becomes the protocol error the
+    // transports treat as fatal.
+    let framed = |r: Result<(), crate::coordinator::FrameTooLarge>| {
+        r.map_err(|e| ProtoError::FrameTooLarge(e.0))
+    };
+    maybe_injected_panic(&msg);
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
             match make_request(id, RequestKind::Encode, alphabet, mode, Whitespace::None, data) {
-                Ok(req) => router.process_into(req, sink),
+                Ok(req) => framed(router.process_into(req, sink)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Decode { id, alphabet, mode, ws, data } => {
             match make_request(id, RequestKind::Decode, alphabet, mode, ws, data) {
-                Ok(req) => router.process_into(req, sink),
+                Ok(req) => framed(router.process_into(req, sink)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Validate { id, alphabet, mode, data } => {
             match make_request(id, RequestKind::Validate, alphabet, mode, Whitespace::None, data) {
-                Ok(req) => router.process_into(req, sink),
+                Ok(req) => framed(router.process_into(req, sink)),
                 Err(reply) => sink.push_message(&reply),
             }
         }

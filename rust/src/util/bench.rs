@@ -110,6 +110,22 @@ pub fn print_results(title: &str, results: &[BenchResult]) {
     }
 }
 
+/// Write a machine-readable bench artifact next to the human table.
+///
+/// `B64SIMD_BENCH_JSON` turns it on: `1` writes `BENCH_<name>.json`
+/// into the working directory, any other value names the target
+/// directory. CI uploads these as run artifacts so the perf trajectory
+/// becomes tracked files rather than scrollback.
+pub fn emit_json(name: &str, json: &str) {
+    let Some(v) = std::env::var_os("B64SIMD_BENCH_JSON") else { return };
+    let dir = if v == "1" { std::path::PathBuf::from(".") } else { std::path::PathBuf::from(&v) };
+    let path = dir.join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, json) {
+        Ok(()) => eprintln!("bench: wrote {}", path.display()),
+        Err(e) => eprintln!("bench: could not write {}: {e}", path.display()),
+    }
+}
+
 /// Format a series as CSV (size, gbps) for figure regeneration.
 pub fn to_csv(results: &[BenchResult]) -> String {
     let mut out = String::from("name,bytes,median_ns,gbps\n");

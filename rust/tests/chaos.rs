@@ -1,0 +1,408 @@
+//! Chaos tests: connection-lifecycle hardening under adversarial and
+//! mid-flight conditions.
+//!
+//! * drain — `ServerHandle::shutdown` under live load answers every
+//!   request that was parsed off the wire ("accepted") before closing,
+//!   across the epoll transport (1 and 4 reactors, both reply paths)
+//!   and the threaded fallback; `conns_open` settles to zero.
+//! * timeouts — idle connections and stalled request frames
+//!   (slow-loris) get the normative typed `RespError` from
+//!   `docs/PROTOCOL.md` and then a clean EOF; write-stalled peers that
+//!   never read their replies are shed silently.
+//! * panic isolation (`--features faults`) — a worker panic poisons
+//!   exactly one connection: the victim gets a typed error and a close
+//!   (pipelined requests behind the panic are dropped), every other
+//!   connection keeps working, and the `worker_panics` counter trips.
+//!
+//! The deterministic syscall-fault plans (`B64SIMD_FAULTS`) are
+//! exercised by running this whole binary under injection in CI — the
+//! assertions here are exactly the ones that must keep holding when
+//! every read/write/accept path misbehaves.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Mode, Whitespace};
+use b64simd::coordinator::backend::rust_factory;
+use b64simd::coordinator::{Router, RouterConfig};
+use b64simd::server::proto::Message;
+use b64simd::server::{serve, Client, ServerConfig, ServerHandle, Transport};
+use b64simd::workload::random_bytes;
+
+/// Start a server with lifecycle knobs set directly on the config
+/// (never via env vars — tests in this binary run in parallel).
+fn start_with(
+    transport: Transport,
+    max_connections: usize,
+    reactors: usize,
+    zero_copy: bool,
+    tune: impl FnOnce(&mut ServerConfig),
+) -> (ServerHandle, Arc<Router>) {
+    let router = Arc::new(Router::new(rust_factory(), RouterConfig::default()));
+    let mut config = ServerConfig {
+        addr: "127.0.0.1:0".parse().unwrap(),
+        max_connections,
+        transport,
+        reactors,
+        zero_copy,
+        ..Default::default()
+    };
+    tune(&mut config);
+    let handle = serve(router.clone(), config).expect("bind");
+    (handle, router)
+}
+
+/// Lift the fd soft limit (client + server sockets share this process).
+fn want_fds(_n: u64) {
+    #[cfg(target_os = "linux")]
+    {
+        let _ = b64simd::net::sys::raise_nofile_limit(_n);
+    }
+}
+
+/// Read one length-prefixed reply frame; `None` on a clean EOF.
+fn read_reply(stream: &mut TcpStream) -> Option<Message> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) => {
+                assert_eq!(got, 0, "EOF inside a length prefix");
+                return None;
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // A hard close with queued inbound data surfaces as a reset
+            // on some kernels; only a *torn* prefix is a framing bug.
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset && got == 0 => return None,
+            Err(e) => panic!("read reply prefix: {e}"),
+        }
+    }
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    stream.read_exact(&mut body).expect("reply body after prefix");
+    Some(Message::from_bytes(&body).expect("parse reply"))
+}
+
+fn poll_until(what: &str, deadline: Duration, mut done: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !done() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain under load: every accepted (= parsed) request is
+// answered before its connection closes, and the gauges settle.
+// ---------------------------------------------------------------------
+
+fn drain_under_load(transport: Transport, reactors: usize, zero_copy: bool) {
+    const CONNS: usize = 64;
+    const FRAMES_PER_CONN: usize = 4; // encode + stream begin/chunk/end
+    want_fds(CONNS as u64 * 2 + 256);
+    let (handle, router) = start_with(transport, CONNS + 16, reactors, zero_copy, |_| {});
+    let addr = handle.addr;
+    let payload = random_bytes(2048, 0xD12A);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+
+    let workers: Vec<_> = (0..CONNS)
+        .map(|c| {
+            let payload = payload.clone();
+            let oracle = oracle.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .unwrap();
+                // One pipelined burst: a one-shot encode and a full
+                // streaming session, all in flight when the drain hits.
+                let mut wire = Vec::new();
+                for msg in [
+                    Message::Encode {
+                        id: 1,
+                        alphabet: "standard".into(),
+                        mode: Mode::Strict,
+                        data: payload.clone(),
+                    },
+                    Message::StreamBegin {
+                        id: 2,
+                        decode: false,
+                        alphabet: "standard".into(),
+                        mode: Mode::Strict,
+                        ws: Whitespace::None,
+                        wrap: 0,
+                    },
+                    Message::StreamChunk { id: 2, data: payload.clone() },
+                    Message::StreamEnd { id: 2 },
+                ] {
+                    wire.extend_from_slice(&msg.to_frame_bytes().unwrap());
+                }
+                stream.write_all(&wire).expect("send burst");
+                // Collect replies until the drain closes us out.
+                let mut got = Vec::new();
+                while let Some(msg) = read_reply(&mut stream) {
+                    got.push(msg);
+                }
+                assert_eq!(got.len(), FRAMES_PER_CONN, "conn {c}: {got:?}");
+                match &got[0] {
+                    Message::RespData { id: 1, data } => assert_eq!(data, &oracle, "conn {c}"),
+                    other => panic!("conn {c}: want encode reply, got {other:?}"),
+                }
+                assert!(
+                    matches!(&got[1], Message::RespData { id: 2, data } if data.is_empty()),
+                    "conn {c}: want stream ack, got {:?}",
+                    got[1]
+                );
+                let mut streamed = Vec::new();
+                for msg in &got[2..] {
+                    match msg {
+                        Message::RespData { id: 2, data } => streamed.extend_from_slice(data),
+                        other => panic!("conn {c}: want stream data, got {other:?}"),
+                    }
+                }
+                assert_eq!(streamed, oracle, "conn {c}: streamed bytes");
+                got.len()
+            })
+        })
+        .collect();
+
+    // "Accepted" means parsed off the wire. Wait until every frame has
+    // been counted, then pull the rug mid-flight.
+    let want = (CONNS * FRAMES_PER_CONN) as u64;
+    poll_until("all frames parsed", Duration::from_secs(30), || {
+        router.metrics().frames_in.load(Ordering::Relaxed) >= want
+    });
+    handle.shutdown();
+
+    for w in workers {
+        assert_eq!(w.join().unwrap(), FRAMES_PER_CONN);
+    }
+    let m = router.metrics();
+    assert_eq!(m.conns_open.load(Ordering::Relaxed), 0, "conns_open after drain");
+    assert_eq!(m.drains.load(Ordering::Relaxed), 1, "drain counted once");
+}
+
+#[test]
+fn drain_under_load_epoll_single() {
+    drain_under_load(Transport::Epoll, 1, true);
+}
+
+#[test]
+fn drain_under_load_epoll_sharded() {
+    drain_under_load(Transport::Epoll, 4, true);
+}
+
+#[test]
+fn drain_under_load_epoll_vec_reply() {
+    drain_under_load(Transport::Epoll, 4, false);
+}
+
+#[test]
+fn drain_under_load_threaded() {
+    drain_under_load(Transport::Threaded, 1, true);
+}
+
+#[test]
+fn shutdown_with_no_traffic_is_clean() {
+    for transport in [Transport::Epoll, Transport::Threaded] {
+        let (handle, router) = start_with(transport, 8, 2, true, |_| {});
+        handle.shutdown();
+        assert_eq!(router.metrics().conns_open.load(Ordering::Relaxed), 0);
+        assert_eq!(router.metrics().drains.load(Ordering::Relaxed), 1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deadlines: the typed timeout notices from docs/PROTOCOL.md, then EOF.
+// ---------------------------------------------------------------------
+
+fn idle_timeout_notice(transport: Transport) {
+    let (handle, router) = start_with(transport, 8, 1, true, |c| {
+        c.idle_timeout = Duration::from_millis(150);
+        c.read_timeout = Duration::ZERO; // isolate the idle clock
+    });
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match read_reply(&mut stream).expect("typed notice before close") {
+        Message::RespError { id, message } => {
+            assert_eq!(id, 0);
+            assert_eq!(message, "timeout: idle connection");
+        }
+        other => panic!("want RespError, got {other:?}"),
+    }
+    assert!(read_reply(&mut stream).is_none(), "EOF after the notice");
+    assert!(router.metrics().timeouts.load(Ordering::Relaxed) >= 1);
+    handle.shutdown();
+}
+
+#[test]
+fn idle_timeout_notice_epoll() {
+    idle_timeout_notice(Transport::Epoll);
+}
+
+#[test]
+fn idle_timeout_notice_threaded() {
+    idle_timeout_notice(Transport::Threaded);
+}
+
+fn read_stall_notice(transport: Transport) {
+    let (handle, router) = start_with(transport, 8, 1, true, |c| {
+        c.read_timeout = Duration::from_millis(150);
+        c.idle_timeout = Duration::from_secs(60);
+    });
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Three bytes of a length prefix, never completed: a slow loris.
+    // The read deadline is anchored at the first partial byte and only
+    // a *complete* frame may reset it.
+    stream.write_all(&[16, 0, 0]).expect("partial prefix");
+    match read_reply(&mut stream).expect("typed notice before close") {
+        Message::RespError { id, message } => {
+            assert_eq!(id, 0);
+            assert_eq!(message, "timeout: request frame stalled");
+        }
+        other => panic!("want RespError, got {other:?}"),
+    }
+    assert!(read_reply(&mut stream).is_none(), "EOF after the notice");
+    assert!(router.metrics().timeouts.load(Ordering::Relaxed) >= 1);
+    handle.shutdown();
+}
+
+#[test]
+fn read_stall_notice_epoll() {
+    read_stall_notice(Transport::Epoll);
+}
+
+#[test]
+fn read_stall_notice_threaded() {
+    read_stall_notice(Transport::Threaded);
+}
+
+/// A complete request keeps the connection healthy past the idle
+/// window: activity resets the clock, then quiet trips it.
+#[test]
+fn activity_resets_idle_clock() {
+    let (handle, _router) = start_with(Transport::Epoll, 8, 1, true, |c| {
+        c.idle_timeout = Duration::from_millis(800);
+        c.read_timeout = Duration::ZERO;
+    });
+    let mut client = Client::connect(handle.addr).expect("connect");
+    for _ in 0..4 {
+        std::thread::sleep(Duration::from_millis(250));
+        client.ping().expect("ping inside the idle window");
+    }
+    handle.shutdown();
+}
+
+fn write_stall_shed(transport: Transport) {
+    let (handle, router) = start_with(transport, 8, 1, true, |c| {
+        c.write_timeout = Duration::from_millis(200);
+    });
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    // ~8 MiB reply that we never read: the server's send queue jams
+    // against the socket buffer and the write deadline sheds us.
+    let frame = Message::Encode {
+        id: 9,
+        alphabet: "standard".into(),
+        mode: Mode::Strict,
+        data: vec![0x5A; 6 << 20],
+    }
+    .to_frame_bytes()
+    .unwrap();
+    stream.write_all(&frame).expect("send oversized request");
+    poll_until("write-stalled conn shed", Duration::from_secs(20), || {
+        router.metrics().conns_open.load(Ordering::Relaxed) == 0
+    });
+    assert!(router.metrics().timeouts.load(Ordering::Relaxed) >= 1);
+    drop(stream);
+    handle.shutdown();
+}
+
+#[test]
+fn write_stall_shed_epoll() {
+    write_stall_shed(Transport::Epoll);
+}
+
+#[test]
+fn write_stall_shed_threaded() {
+    write_stall_shed(Transport::Threaded);
+}
+
+// ---------------------------------------------------------------------
+// Worker panic isolation (needs the faults feature for the trapdoor).
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "faults")]
+fn panic_is_isolated(transport: Transport, zero_copy: bool) {
+    let (handle, router) = start_with(transport, 8, 1, zero_copy, |_| {});
+    let mut healthy = Client::connect(handle.addr).expect("connect healthy");
+    healthy.ping().expect("healthy ping");
+
+    let mut victim = TcpStream::connect(handle.addr).expect("connect victim");
+    victim.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // The panic request plus a pipelined good one behind it: the whole
+    // poisoned session is torn down, so id 8 must never be answered.
+    let mut wire = Vec::new();
+    for msg in [
+        Message::Encode {
+            id: 7,
+            alphabet: "__faults_panic".into(),
+            mode: Mode::Strict,
+            data: vec![1, 2, 3],
+        },
+        Message::Encode {
+            id: 8,
+            alphabet: "standard".into(),
+            mode: Mode::Strict,
+            data: b"abc".to_vec(),
+        },
+    ] {
+        wire.extend_from_slice(&msg.to_frame_bytes().unwrap());
+    }
+    victim.write_all(&wire).expect("send panic burst");
+    match read_reply(&mut victim).expect("typed panic reply") {
+        Message::RespError { id, message } => {
+            assert_eq!(id, 7);
+            assert_eq!(message, "internal error: request handler panicked");
+        }
+        other => panic!("want RespError, got {other:?}"),
+    }
+    assert!(
+        read_reply(&mut victim).is_none(),
+        "pipelined request behind the panic must be dropped, not answered"
+    );
+
+    // Containment: the other connection and fresh work are unaffected.
+    healthy.ping().expect("healthy ping after panic");
+    assert_eq!(
+        healthy.encode(b"hello", "standard").expect("encode after panic"),
+        BlockCodec::new(Alphabet::standard()).encode(b"hello"),
+    );
+    let mut fresh = Client::connect(handle.addr).expect("fresh connect after panic");
+    fresh.ping().expect("fresh ping");
+    assert!(router.metrics().worker_panics.load(Ordering::Relaxed) >= 1);
+    handle.shutdown();
+    assert_eq!(router.metrics().conns_open.load(Ordering::Relaxed), 0);
+}
+
+#[cfg(feature = "faults")]
+#[test]
+fn panic_is_isolated_epoll_zerocopy() {
+    panic_is_isolated(Transport::Epoll, true);
+}
+
+#[cfg(feature = "faults")]
+#[test]
+fn panic_is_isolated_epoll_vec() {
+    panic_is_isolated(Transport::Epoll, false);
+}
+
+#[cfg(feature = "faults")]
+#[test]
+fn panic_is_isolated_threaded() {
+    panic_is_isolated(Transport::Threaded, true);
+}
