@@ -1,6 +1,9 @@
 //! Server transport bench: loadgen-driven connection churn and request
-//! throughput across the transport matrix — epoll (reactor shards ×
-//! {1, N}, reply path × {zero-copy, copy}) vs thread-per-connection.
+//! throughput across the transport matrix — epoll and io_uring
+//! (reactor shards × {1, N}, reply path × {zero-copy, copy}) vs
+//! thread-per-connection. The uring cells run only on kernels that
+//! pass the io_uring probe; the skip is printed so the artifact
+//! records which matrix actually ran.
 //!
 //! Two numbers per cell:
 //!
@@ -15,11 +18,17 @@
 //!   the socket buffer); the copy rows serialize replies through
 //!   `Vec`s — the delta is the reply path's cost.
 //!
+//! Each throughput cell also reports request-latency percentiles
+//! (p50/p95/p99/p999, microseconds) over every verified round trip —
+//! the tail is where the transports differ: epoll pays per-ready-fd
+//! syscalls, uring amortizes them into one `io_uring_enter` per loop
+//! pass, and the threaded transport pays scheduler wakeups.
+//!
 //! `--test` (CI smoke): small counts and sub-second windows, checking
 //! that every cell runs and every response matches the oracle.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use b64simd::base64::{block::BlockCodec, Alphabet, Codec};
@@ -94,40 +103,73 @@ fn connect_admitted(addr: std::net::SocketAddr) -> Client {
     }
 }
 
-/// Verified encode throughput over `conns` held connections.
+/// Request-latency percentiles (microseconds) over a merged sample
+/// set. Nearest-rank on the sorted samples — exact for the sample, no
+/// histogram binning error — at the cost of holding every latency,
+/// which at bench request rates is a few MB.
+struct Percentiles {
+    p50: u64,
+    p95: u64,
+    p99: u64,
+    p999: u64,
+}
+
+fn percentiles(mut micros: Vec<u64>) -> Percentiles {
+    micros.sort_unstable();
+    let at = |q: f64| {
+        if micros.is_empty() {
+            0
+        } else {
+            micros[((micros.len() - 1) as f64 * q) as usize]
+        }
+    };
+    Percentiles { p50: at(0.50), p95: at(0.95), p99: at(0.99), p999: at(0.999) }
+}
+
+/// Verified encode throughput over `conns` held connections, plus the
+/// per-request round-trip latency sample (each thread records locally,
+/// merged after the window — no shared-state contention inside the
+/// timed loop).
 fn throughput(
     addr: std::net::SocketAddr,
     conns: usize,
     threads: usize,
     payload_len: usize,
     window: Duration,
-) -> (f64, f64) {
+) -> (f64, f64, Percentiles) {
     let payload = random_bytes(payload_len, payload_len as u64);
     let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
     let requests = AtomicU64::new(0);
+    let all_micros: Mutex<Vec<u64>> = Mutex::new(Vec::new());
     let deadline = Instant::now() + window;
     std::thread::scope(|s| {
         for t in 0..threads {
             let share = conns / threads + usize::from(t < conns % threads);
-            let (payload, oracle, requests) = (&payload, &oracle, &requests);
+            let (payload, oracle, requests, all_micros) =
+                (&payload, &oracle, &requests, &all_micros);
             s.spawn(move || {
                 let mut clients: Vec<Client> =
                     (0..share).map(|_| connect_admitted(addr)).collect();
+                let mut micros: Vec<u64> = Vec::with_capacity(4096);
                 let mut i = 0usize;
                 while Instant::now() < deadline && !clients.is_empty() {
                     let n = clients.len();
+                    let t0 = Instant::now();
                     let enc = clients[i % n].encode(payload, "standard").expect("encode");
+                    micros.push(t0.elapsed().as_micros() as u64);
                     assert_eq!(&enc, oracle, "response mismatch under load");
                     requests.fetch_add(1, Ordering::Relaxed);
                     i += 1;
                 }
+                all_micros.lock().unwrap().append(&mut micros);
             });
         }
     });
     let reqs = requests.load(Ordering::Relaxed) as f64;
     let secs = window.as_secs_f64();
     let wire = reqs * (payload_len + oracle.len()) as f64;
-    (reqs / secs, wire / secs / 1e9)
+    let lat = percentiles(all_micros.into_inner().unwrap());
+    (reqs / secs, wire / secs / 1e9, lat)
 }
 
 fn main() {
@@ -153,31 +195,47 @@ fn main() {
         window.as_secs_f64()
     );
     println!(
-        "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12}{:>12}",
-        "transport", "reactors", "reply", "payload", "conns/sec", "req/s", "GB/s"
+        "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12}{:>12}{:>9}{:>9}{:>9}{:>9}",
+        "transport", "reactors", "reply", "payload", "conns/sec", "req/s", "GB/s", "p50us",
+        "p95us", "p99us", "p999us"
     );
-    // Cells: threaded (reference), then epoll over reactors × reply path.
+    // Cells: threaded (reference), then epoll — and, on kernels that
+    // support it, uring — over reactors × reply path.
     let mut cells: Vec<(Transport, usize, bool)> = vec![(Transport::Threaded, 1, false)];
-    for &reactors in &[1usize, many] {
-        for &zero_copy in &[true, false] {
-            cells.push((Transport::Epoll, reactors, zero_copy));
+    let mut evented = vec![Transport::Epoll];
+    #[cfg(target_os = "linux")]
+    if b64simd::net::sys::uring_supported() {
+        evented.push(Transport::Uring);
+    } else {
+        println!("note: kernel lacks io_uring; skipping the uring cells");
+    }
+    #[cfg(not(target_os = "linux"))]
+    println!("note: non-Linux host; epoll cells fall back to the threaded transport");
+    for &transport in &evented {
+        for &reactors in &[1usize, many] {
+            for &zero_copy in &[true, false] {
+                cells.push((transport, reactors, zero_copy));
+            }
         }
     }
     // Machine-readable rows for the BENCH_server_throughput.json
     // artifact (see `emit_json`): one object per printed table row.
     let mut json_rows: Vec<String> = Vec::new();
     for (transport, reactors, zero_copy) in cells {
-        let reply =
-            if zero_copy && transport == Transport::Epoll { "zerocopy" } else { "vec" };
+        let reply = if zero_copy && transport != Transport::Threaded { "zerocopy" } else { "vec" };
         let (handle, router) = start(transport, conns * 2 + 64, reactors, zero_copy);
         let rate = churn(handle.addr, threads, window);
         println!(
-            "{:<10}{:>9}{:>10}{:>12}{:>12.0}{:>12}{:>12}",
+            "{:<10}{:>9}{:>10}{:>12}{:>12.0}{:>12}{:>12}{:>9}{:>9}{:>9}{:>9}",
             transport.name(),
             reactors,
             reply,
             "-",
             rate,
+            "-",
+            "-",
+            "-",
+            "-",
             "-",
             "-"
         );
@@ -189,25 +247,33 @@ fn main() {
             rate
         ));
         for &p in payloads {
-            let (rps, gbps) = throughput(handle.addr, conns, threads, p, window);
+            let (rps, gbps, lat) = throughput(handle.addr, conns, threads, p, window);
             println!(
-                "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12.0}{:>12.3}",
+                "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12.0}{:>12.3}{:>9}{:>9}{:>9}{:>9}",
                 transport.name(),
                 reactors,
                 reply,
                 p,
                 "-",
                 rps,
-                gbps
+                gbps,
+                lat.p50,
+                lat.p95,
+                lat.p99,
+                lat.p999
             );
             json_rows.push(format!(
-                "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4}}}",
+                "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"p999_us\":{}}}",
                 transport.name(),
                 reactors,
                 reply,
                 p,
                 rps,
-                gbps
+                gbps,
+                lat.p50,
+                lat.p95,
+                lat.p99,
+                lat.p999
             ));
         }
         router.flush();

@@ -9,7 +9,7 @@
 //! ```text
 //! cargo run --release --example loadgen -- \
 //!     --connections 1000 --seconds 2 [--payload 1024] [--threads 8] \
-//!     [--transport epoll|threaded] [--reactors N] [--zerocopy 0|1] \
+//!     [--transport epoll|uring|threaded] [--reactors N] [--zerocopy 0|1] \
 //!     [--addr HOST:PORT]
 //! ```
 //!
@@ -281,7 +281,9 @@ fn main() {
         .unwrap_or(8)
         .clamp(1, connections.max(1));
     let transport = match flag(&args, "--transport") {
-        Some(v) => Transport::parse(&v).expect("--transport epoll|threaded"),
+        // Flags parse strictly: a typo should fail loudly with the
+        // accepted set, not silently run the default transport.
+        Some(v) => Transport::parse_strict(&v).unwrap_or_else(|e| panic!("--transport: {e}")),
         None => Transport::from_env(),
     };
     // Reactor shards / reply path: flags override the env-driven

@@ -87,17 +87,17 @@ const READ_SCRATCH: usize = 64 << 10;
 /// Re-evaluation cadence for deadlines whose side conditions are not
 /// currently met (e.g. a stalled frame behind an in-flight request):
 /// the wheel keeps one entry per connection at most this far out.
-const HEARTBEAT: Duration = Duration::from_secs(1);
+pub(crate) const HEARTBEAT: Duration = Duration::from_secs(1);
 
 /// `epoll_wait` cap while draining, so the grace deadline and final
 /// flushes are observed promptly even with an empty wheel.
-const DRAIN_POLL_MS: i32 = 25;
+pub(crate) const DRAIN_POLL_MS: i32 = 25;
 
-fn token(idx: usize, epoch: u32) -> u64 {
+pub(crate) fn token(idx: usize, epoch: u32) -> u64 {
     ((epoch as u64) << 32) | idx as u64
 }
 
-fn token_parts(tok: u64) -> (usize, u32) {
+pub(crate) fn token_parts(tok: u64) -> (usize, u32) {
     ((tok & 0xFFFF_FFFF) as usize, (tok >> 32) as u32)
 }
 
@@ -107,24 +107,24 @@ fn token_parts(tok: u64) -> (usize, u32) {
 /// connection (the panic path closes it) or a plain queue hand-off, so
 /// later lockers take the inner value instead of wedging the shard on
 /// an `unwrap`.
-fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// One request headed for the worker pool. Carries its shard's
 /// completion queue and eventfd so the shared workers can route the
 /// reply back to whichever reactor owns the connection.
-struct WorkItem {
-    token: u64,
-    msg: Message,
-    session: Arc<Mutex<SessionState>>,
-    done: Arc<Mutex<Vec<Completion>>>,
-    wake: Arc<EventFd>,
+pub(crate) struct WorkItem {
+    pub(crate) token: u64,
+    pub(crate) msg: Message,
+    pub(crate) session: Arc<Mutex<SessionState>>,
+    pub(crate) done: Arc<Mutex<Vec<Completion>>>,
+    pub(crate) wake: Arc<EventFd>,
     /// A recycled buffer from the shard's pool for the reply sink
     /// (empty on the `Vec` path), closing the allocation loop: adopt's
     /// spare buffers return to the pool, the pool feeds the next
     /// reply's sink.
-    buf: Vec<u8>,
+    pub(crate) buf: Vec<u8>,
 }
 
 /// One executed request headed back to its loop. `frame = None` marks a
@@ -132,14 +132,14 @@ struct WorkItem {
 /// connection, matching the blocking transport's behaviour.
 /// `close_after` delivers the frame and then closes (the panic path:
 /// one error reply, then the connection is gone).
-struct Completion {
-    token: u64,
-    frame: Option<Vec<u8>>,
-    close_after: bool,
+pub(crate) struct Completion {
+    pub(crate) token: u64,
+    pub(crate) frame: Option<Vec<u8>>,
+    pub(crate) close_after: bool,
 }
 
 /// Handles the spawned transport threads + each loop's wakeup fd.
-pub(crate) struct EpollServer {
+pub(crate) struct NetServer {
     pub threads: Vec<JoinHandle<()>>,
     pub wakes: Vec<Arc<EventFd>>,
 }
@@ -155,7 +155,7 @@ pub(crate) fn spawn(
     listeners: Vec<TcpListener>,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
-) -> std::io::Result<EpollServer> {
+) -> std::io::Result<NetServer> {
     let limiter = ConnLimiter::new(config.max_connections);
     let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
     let work_rx = Arc::new(Mutex::new(work_rx));
@@ -212,7 +212,7 @@ pub(crate) fn spawn(
         }
         return Err(e);
     }
-    Ok(EpollServer { threads, wakes })
+    Ok(NetServer { threads, wakes })
 }
 
 /// Set up one reactor shard: its epoll instance, wake fd, completion
@@ -281,7 +281,7 @@ fn spawn_shard(
 /// handler costs exactly its own connection — the peer gets a typed
 /// error reply, the connection closes — never the worker thread (and
 /// with it a share of every shard's dispatch capacity).
-fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, zero_copy: bool) {
+pub(crate) fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, zero_copy: bool) {
     loop {
         // Holding the lock across `recv` just serializes the hand-off,
         // not the work: the lock drops as soon as an item arrives.

@@ -13,7 +13,8 @@
 //!
 //! ```text
 //! B64SIMD_FAULTS="seed=42,read.eintr=20,read.short=10,write.short=30,\
-//!                 write.eagain=5,accept.fail=2,pool.empty=10,epoll.eintr=5"
+//!                 write.eagain=5,accept.fail=2,pool.empty=10,epoll.eintr=5,\
+//!                 uring.setup.fail=3,uring.enter.eintr=5,cqe.short=25"
 //! ```
 //!
 //! Each `point=percent` entry gives the probability (integer percent)
@@ -51,6 +52,9 @@ mod imp {
         accept_fail: u8,
         pool_empty: u8,
         epoll_eintr: u8,
+        uring_setup_fail: u8,
+        uring_enter_eintr: u8,
+        cqe_short: u8,
     }
 
     fn plan() -> &'static Plan {
@@ -77,6 +81,9 @@ mod imp {
                     "accept.fail" => p.accept_fail = pct,
                     "pool.empty" => p.pool_empty = pct,
                     "epoll.eintr" => p.epoll_eintr = pct,
+                    "uring.setup.fail" => p.uring_setup_fail = pct,
+                    "uring.enter.eintr" => p.uring_enter_eintr = pct,
+                    "cqe.short" => p.cqe_short = pct,
                     other => eprintln!("b64simd: ignoring unknown B64SIMD_FAULTS key '{other}'"),
                 }
             }
@@ -164,6 +171,32 @@ mod imp {
     /// Should `Epoll::wait` behave as if a signal interrupted it once?
     pub(crate) fn epoll_eintr() -> bool {
         fire(plan().epoll_eintr)
+    }
+
+    /// Should the (once-per-process) io_uring probe report the kernel
+    /// unsupported? One roll at the cached probe rather than per setup
+    /// call, so a plan produces a deterministic whole-process fallback
+    /// to epoll instead of per-shard flakiness.
+    pub(crate) fn uring_setup_fail() -> bool {
+        fire(plan().uring_setup_fail)
+    }
+
+    /// Should `io_uring_enter` behave as if a signal interrupted it
+    /// once? Exercises the same EINTR-retry arm `epoll.eintr` covers on
+    /// the readiness loop.
+    pub(crate) fn uring_enter_eintr() -> bool {
+        fire(plan().uring_enter_eintr)
+    }
+
+    /// Truncate a read op's length (≤ 7 bytes) before submission, so
+    /// its completion comes back short and frames tear across reads —
+    /// the CQE-side analogue of `read.short`.
+    pub(crate) fn short_cqe(len: u32) -> u32 {
+        if len > 7 && fire(plan().cqe_short) {
+            7
+        } else {
+            len
+        }
     }
 
     /// `write(2)` shim wrapping the socket handed to

@@ -368,6 +368,19 @@ impl WriteQueue {
         self.buf.len() - self.pos
     }
 
+    /// Swap the queued bytes out for an asynchronous write: returns the
+    /// whole backing buffer plus the offset of the first unsent byte,
+    /// and installs `replacement` as the new (empty) queue. The uring
+    /// transport hands the returned buffer to the kernel — its address
+    /// must stay stable for the life of the write op, which a buffer
+    /// still owned by a growable queue cannot guarantee — while new
+    /// frames keep accumulating in the replacement.
+    pub fn take_pending(&mut self, replacement: Vec<u8>) -> (Vec<u8>, usize) {
+        let pos = self.pos;
+        self.pos = 0;
+        (std::mem::replace(&mut self.buf, replacement), pos)
+    }
+
     /// Reclaim the underlying buffer (connection teardown).
     pub fn into_buf(mut self) -> Vec<u8> {
         self.buf.clear();

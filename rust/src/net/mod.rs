@@ -44,7 +44,12 @@
 //! * `conn` — per-connection state and the backpressure caps
 //!   (pipelining depth, write high-water mark) plus the lifecycle
 //!   deadline timestamps (idle / read-stall / write-stall);
-//! * `driver` — the reactor shards plus the shared worker pool;
+//! * `driver` — the epoll reactor shards plus the shared worker pool;
+//! * `uring` — the io_uring reactor shards: the same shard/worker/
+//!   lifecycle contract driven by submission/completion rings with
+//!   kernel-registered read buffers instead of per-fd readiness
+//!   syscalls (selected with `B64SIMD_TRANSPORT=uring`; falls back to
+//!   epoll, with a logged notice, on kernels without io_uring);
 //! * `timer` — the per-shard deadline wheel whose earliest entry
 //!   becomes that reactor's `epoll_wait` timeout (slow-loris and
 //!   write-stall peers are shed with a typed error frame);
@@ -98,9 +103,9 @@
 //! serialization path remains selectable as the differential
 //! reference, and both paths produce byte-identical frames.
 //!
-//! Everything below `driver` is Linux-only (`epoll`); the portable
-//! pieces ([`buffer`], [`frame`]) are shared, and non-Linux hosts fall
-//! back to the thread-per-connection transport
+//! Everything below `driver` is Linux-only (`epoll` / `io_uring`); the
+//! portable pieces ([`buffer`], [`frame`]) are shared, and non-Linux
+//! hosts fall back to the thread-per-connection transport
 //! ([`crate::server::Transport::Threaded`]).
 
 pub mod buffer;
@@ -115,6 +120,9 @@ pub(crate) mod conn;
 
 #[cfg(target_os = "linux")]
 pub(crate) mod driver;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod uring;
 
 #[cfg(target_os = "linux")]
 pub(crate) mod timer;

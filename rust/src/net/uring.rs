@@ -1,0 +1,1053 @@
+//! The io_uring transport: completion-driven reactor shards on
+//! submission/completion rings, sharing everything above the syscall
+//! boundary with the epoll loop — [`super::driver`]'s worker pool,
+//! `WorkItem`/`Completion` hand-off, framing, buffer pool, connection
+//! limiter and timer wheel — so the two backends answer byte-identical
+//! traffic and differ only in how bytes cross the kernel boundary.
+//!
+//! ```text
+//!   clients ─► SO_REUSEPORT ─► [uring shard 0] ──┐
+//!              (kernel hash)   [uring shard 1] ──┤ WorkItem ─► [workers] ─► Router
+//!                              [uring shard N] ──┘    ▲            │
+//!                 eventfd READ ◄── Completion ──────────────────◄──┘
+//!                 (one armed op per shard)
+//! ```
+//!
+//! Where the epoll loop pays a `read`/`write` syscall pair per ready
+//! connection plus the `epoll_wait`, a uring shard pays one
+//! `io_uring_enter` per loop iteration, amortized over every ready
+//! connection: accepts arrive through a multishot ACCEPT op (one SQE,
+//! many completions; pre-5.19 kernels report `-EINVAL` and the shard
+//! silently re-arms single-shot), reads complete directly into a
+//! kernel-registered buffer arena (`IORING_REGISTER_BUFFERS` +
+//! `READ_FIXED`, so the kernel skips the per-op page lookup; if
+//! registration is refused — `RLIMIT_MEMLOCK` — the shard degrades to
+//! plain `READ` on the same arena), and replies are swapped out of the
+//! `WriteQueue` whole ([`WriteQueue::take_pending`]) and written with
+//! one in-flight WRITE op per connection, which also preserves wire
+//! order without SQE links.
+//!
+//! ## Ownership across the syscall boundary
+//!
+//! The kernel holds raw pointers into the read arena, into a
+//! connection's swapped-out write buffer and into the shard's eventfd
+//! scratch word for as long as an op is in flight. Three rules keep
+//! that sound: a connection close *initiates* (cancels its in-flight
+//! ops) and only *finishes* — freeing the slot, pooling the buffers,
+//! bumping the epoch — once both ops have completed; an arena page is
+//! released only after its completion's bytes have been copied into
+//! the connection's frame accumulator; and shard teardown reaps until
+//! every op has completed, leaking the arena and any stuck write
+//! buffers (with a logged warning) rather than freeing memory the
+//! kernel might still write.
+//!
+//! Stale completions are fenced the same way the epoll loop fences
+//! stale readiness: every `user_data` token carries the slot's epoch,
+//! and the epoch only advances when the slot is truly vacated.
+//!
+//! [`WriteQueue::take_pending`]: super::frame::WriteQueue::take_pending
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, FromRawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::buffer::BufferPool;
+use super::conn::{Conn, WRITE_HIGH_WATER};
+use super::driver::{
+    lock_clean, token, token_parts, worker_loop, Completion, NetServer, WorkItem, DRAIN_POLL_MS,
+    HEARTBEAT,
+};
+use super::sys::{Cqe, EventFd, IoUring, IoVec, Sqe, ECANCELED, EINVAL, IORING_CQE_F_MORE};
+use super::timer::TimerWheel;
+use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::metrics::ShardMetrics;
+use crate::coordinator::{Metrics, Router};
+use crate::server::service::{
+    idle_timeout_frame, refuse_busy, stall_timeout_frame, ServerConfig,
+};
+
+/// One registered read page per in-flight read.
+const READ_PAGE: usize = 16 << 10;
+/// Submission ring size; `IoUring::push` flushes when full, so this
+/// bounds batching, not correctness.
+const SQ_ENTRIES: u32 = 256;
+/// Completion ring size. `IORING_FEAT_NODROP` (required by the probe)
+/// buffers overflow kernel-side, so this is a fast-path size, not a cap.
+const CQ_ENTRIES: u32 = 4096;
+
+/// Transient errno values a read/write op retries instead of closing.
+const EAGAIN: i32 = 11;
+const EINTR: i32 = 4;
+
+// user_data layout: | op:3 | page:12 | epoch:29 | idx:20 |
+//
+// Reads carry their arena page so the completion can both locate the
+// bytes and release the page even when the connection is already gone
+// (a stale epoch must not leak the page). The epoch is the connection
+// slot generation truncated to 29 bits — truncation is safe because a
+// slot's in-flight ops always complete (or cancel) before the slot is
+// vacated and its epoch advances, so no two *concurrently live* tokens
+// for one slot can differ by a multiple of 2^29.
+const OP_READ: u64 = 0;
+const OP_WRITE: u64 = 1;
+const OP_ACCEPT: u64 = 2;
+const OP_WAKE: u64 = 3;
+const OP_CANCEL: u64 = 4;
+const EPOCH_MASK: u32 = 0x1FFF_FFFF;
+
+fn utoken(op: u64, page: usize, epoch: u32, idx: usize) -> u64 {
+    (op << 61)
+        | (((page as u64) & 0xFFF) << 49)
+        | ((u64::from(epoch & EPOCH_MASK)) << 20)
+        | ((idx as u64) & 0xF_FFFF)
+}
+
+fn utoken_parts(tok: u64) -> (u64, usize, u32, usize) {
+    (tok >> 61, ((tok >> 49) & 0xFFF) as usize, ((tok >> 20) & 0x1FFF_FFFF) as u32, (tok & 0xF_FFFF) as usize)
+}
+
+const ACCEPT_TOKEN: u64 = OP_ACCEPT << 61;
+const WAKE_TOKEN: u64 = OP_WAKE << 61;
+const CANCEL_TOKEN: u64 = OP_CANCEL << 61;
+
+/// Spawn one uring shard per listener plus the shared worker pool —
+/// [`super::driver::spawn`]'s contract on a different syscall engine.
+/// The caller must have checked [`super::sys::uring_supported`]; ring
+/// construction can still fail per shard (e.g. locked-memory limits on
+/// the rings themselves), which unwinds every thread spawned so far.
+pub(crate) fn spawn(
+    router: Arc<Router>,
+    config: &ServerConfig,
+    listeners: Vec<TcpListener>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+) -> std::io::Result<NetServer> {
+    let limiter = ConnLimiter::new(config.max_connections);
+    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let metrics = router.metrics().clone();
+    metrics.reset_shards();
+
+    let mut threads = Vec::new();
+    let mut wakes: Vec<Arc<EventFd>> = Vec::new();
+    let mut built = Ok(());
+    for (shard_id, listener) in listeners.into_iter().enumerate() {
+        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop, &drain) {
+            Ok((thread, wake)) => {
+                threads.push(thread);
+                wakes.push(wake);
+            }
+            Err(e) => {
+                built = Err(e);
+                break;
+            }
+        }
+    }
+    drop(work_tx);
+    let zero_copy = config.zero_copy;
+    if built.is_ok() {
+        for i in 0..config.net_workers.max(1) {
+            let rx = work_rx.clone();
+            let router = router.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("b64simd-net-worker-{i}"))
+                .spawn(move || worker_loop(rx, router, zero_copy));
+            match spawned {
+                Ok(t) => threads.push(t),
+                Err(e) => {
+                    built = Err(e);
+                    break;
+                }
+            }
+        }
+    }
+    if let Err(e) = built {
+        stop.store(true, Ordering::SeqCst);
+        for w in &wakes {
+            w.signal();
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        return Err(e);
+    }
+    Ok(NetServer { threads, wakes })
+}
+
+/// Set up one uring shard: its ring, registered read arena, wake fd,
+/// completion queue and loop thread.
+#[allow(clippy::too_many_arguments)]
+fn spawn_shard(
+    shard_id: usize,
+    listener: TcpListener,
+    config: &ServerConfig,
+    metrics: &Arc<Metrics>,
+    limiter: &Arc<ConnLimiter>,
+    work_tx: &mpsc::Sender<WorkItem>,
+    stop: &Arc<AtomicBool>,
+    drain: &Arc<AtomicBool>,
+) -> std::io::Result<(JoinHandle<()>, Arc<EventFd>)> {
+    let wake = Arc::new(EventFd::new()?);
+    let ring = IoUring::new(SQ_ENTRIES, CQ_ENTRIES)?;
+    // One read page per possible connection, capped so the pinned
+    // arena stays modest under RLIMIT_MEMLOCK (256 pages = 4 MiB).
+    let pages = config.max_connections.clamp(64, 256);
+    let mut arena = vec![0u8; pages * READ_PAGE];
+    let iovs: Vec<IoVec> = (0..pages)
+        .map(|p| IoVec { base: arena[p * READ_PAGE..].as_mut_ptr().cast(), len: READ_PAGE })
+        .collect();
+    let fixed = match ring.register_buffers(&iovs) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!(
+                "b64simd: uring shard {shard_id}: buffer registration failed ({e}); \
+                 degrading to unregistered reads"
+            );
+            false
+        }
+    };
+    let lp = ULoop {
+        ring,
+        listener: Some(listener),
+        wake: wake.clone(),
+        wake_buf: Box::new(0),
+        wake_armed: false,
+        metrics: metrics.clone(),
+        shard: metrics.register_shard(),
+        limiter: limiter.clone(),
+        max_streams: config.max_streams_per_connection,
+        zero_copy: config.zero_copy,
+        conns: Vec::new(),
+        epochs: Vec::new(),
+        free: Vec::new(),
+        pool: BufferPool::new(2048, 256 << 10),
+        work_tx: work_tx.clone(),
+        completions: Arc::new(Mutex::new(Vec::new())),
+        stop: stop.clone(),
+        drain: drain.clone(),
+        draining: false,
+        shutting: false,
+        drain_deadline: None,
+        wheel: TimerWheel::new(),
+        idle_timeout: config.idle_timeout,
+        read_timeout: config.read_timeout,
+        write_timeout: config.write_timeout,
+        drain_grace: config.drain_grace,
+        arena,
+        fixed,
+        free_pages: (0..pages).rev().collect(),
+        read_waiters: VecDeque::new(),
+        multishot: true,
+        accept_armed: false,
+        accept_errors: 0,
+        accept_rearm_pending: false,
+    };
+    let thread = std::thread::Builder::new()
+        .name(format!("b64simd-uring-loop-{shard_id}"))
+        .spawn(move || lp.run())?;
+    Ok((thread, wake))
+}
+
+/// Per-connection uring state wrapped around the transport-agnostic
+/// [`Conn`].
+struct UConn {
+    conn: Conn,
+    /// A READ op referencing `read_page` is in flight.
+    read_inflight: bool,
+    read_page: usize,
+    /// Queued in `read_waiters` for a free arena page.
+    read_waiting: bool,
+    /// A WRITE op referencing `wbuf[wpos..]` is in flight.
+    write_inflight: bool,
+    /// Reply bytes swapped out of the `WriteQueue` for the kernel:
+    /// address-stable for the life of the WRITE op.
+    wbuf: Option<Vec<u8>>,
+    wpos: usize,
+    /// Close initiated; the slot is vacated once in-flight ops drain.
+    closing: bool,
+}
+
+impl UConn {
+    /// Reply bytes not yet on the wire: queued plus swapped-out.
+    fn out_pending(&self) -> usize {
+        self.conn.write.pending() + self.wbuf.as_ref().map_or(0, |b| b.len() - self.wpos)
+    }
+
+    /// [`Conn::drained`] extended over the swapped-out write buffer.
+    fn is_drained(&self) -> bool {
+        self.conn.drained() && self.wbuf.is_none() && !self.write_inflight
+    }
+}
+
+/// One single-threaded completion loop (a uring reactor shard).
+struct ULoop {
+    ring: IoUring,
+    /// Dropped when drain begins (its ACCEPT op is cancelled first).
+    listener: Option<TcpListener>,
+    wake: Arc<EventFd>,
+    /// Heap word the armed wake READ lands in (stable address).
+    wake_buf: Box<u64>,
+    wake_armed: bool,
+    metrics: Arc<Metrics>,
+    shard: Arc<ShardMetrics>,
+    limiter: Arc<ConnLimiter>,
+    max_streams: usize,
+    zero_copy: bool,
+    conns: Vec<Option<UConn>>,
+    epochs: Vec<u32>,
+    free: Vec<usize>,
+    pool: BufferPool,
+    work_tx: mpsc::Sender<WorkItem>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    draining: bool,
+    /// Final teardown: reap-only, nothing re-arms.
+    shutting: bool,
+    drain_deadline: Option<Instant>,
+    wheel: TimerWheel,
+    idle_timeout: Duration,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    drain_grace: Duration,
+    /// Read landing area; pages pinned by the kernel when `fixed`.
+    arena: Vec<u8>,
+    /// Registered-buffer reads (`READ_FIXED`) vs the plain-`READ`
+    /// degradation.
+    fixed: bool,
+    free_pages: Vec<usize>,
+    /// Connections waiting for an arena page, woken FIFO.
+    read_waiters: VecDeque<usize>,
+    /// Multishot accept believed supported (cleared on `-EINVAL`).
+    multishot: bool,
+    accept_armed: bool,
+    accept_errors: u32,
+    /// Error-storm backoff: re-arm accept on the next loop pass
+    /// instead of inline.
+    accept_rearm_pending: bool,
+}
+
+impl ULoop {
+    fn run(mut self) {
+        self.arm_wake();
+        self.arm_accept();
+        let mut cqes: Vec<Cqe> = Vec::with_capacity(CQ_ENTRIES as usize);
+        'events: loop {
+            let now = Instant::now();
+            let mut timeout = self.wheel.next_timeout_ms(now);
+            if self.draining {
+                timeout = if timeout < 0 { DRAIN_POLL_MS } else { timeout.min(DRAIN_POLL_MS) };
+            }
+            let wait = if timeout < 0 { None } else { Some(Duration::from_millis(timeout as u64)) };
+            if let Err(e) = self.ring.submit_and_wait(1, wait) {
+                eprintln!("b64simd: uring loop failed: {e}");
+                break 'events;
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break 'events;
+            }
+            if !self.draining && self.drain.load(Ordering::SeqCst) {
+                self.begin_drain();
+            }
+            cqes.clear();
+            self.ring.reap(&mut cqes);
+            for cqe in cqes.drain(..) {
+                self.handle_cqe(cqe);
+            }
+            // Belt and braces: a worker may have pushed between the
+            // wake completing and this pass; the queue take is cheap.
+            self.drain_completions();
+            if self.accept_rearm_pending {
+                self.accept_rearm_pending = false;
+                if !self.draining && !self.accept_armed {
+                    self.arm_accept();
+                }
+            }
+            self.service_timers();
+            if self.draining {
+                if self.drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                    for idx in 0..self.conns.len() {
+                        if self.conns[idx].is_some() {
+                            self.close(idx);
+                        }
+                    }
+                }
+                if self.conns.iter().all(|c| c.is_none()) {
+                    break 'events;
+                }
+            }
+        }
+        self.teardown();
+    }
+
+    fn handle_cqe(&mut self, cqe: Cqe) {
+        let (op, page, epoch, idx) = utoken_parts(cqe.user_data);
+        match op {
+            OP_WAKE => self.on_wake(),
+            OP_ACCEPT => self.on_accept(cqe),
+            OP_READ => self.on_read(idx, epoch, page, cqe.res),
+            OP_WRITE => self.on_write(idx, epoch, cqe.res),
+            // The cancel op's own completion carries nothing to do:
+            // the *cancelled* op completes separately with -ECANCELED.
+            _ => {}
+        }
+    }
+
+    fn on_wake(&mut self) {
+        self.wake_armed = false;
+        // The 8-byte READ consumed the eventfd counter; drain() covers
+        // the race where a signal lands after the read completed but
+        // before re-arming (the counter would otherwise satisfy the
+        // next READ instantly, which is harmless but noisy).
+        self.wake.drain();
+        self.drain_completions();
+        if !self.shutting {
+            self.arm_wake();
+        }
+    }
+
+    fn arm_wake(&mut self) {
+        if self.wake_armed {
+            return;
+        }
+        let buf: *mut u8 = (&mut *self.wake_buf as *mut u64).cast();
+        if self.ring.push(Sqe::read(self.wake.raw(), buf, 8, WAKE_TOKEN)).is_ok() {
+            self.wake_armed = true;
+        }
+    }
+
+    fn arm_accept(&mut self) {
+        let Some(listener) = self.listener.as_ref() else { return };
+        let sqe = Sqe::accept(listener.as_raw_fd(), self.multishot, ACCEPT_TOKEN);
+        if self.ring.push(sqe).is_ok() {
+            self.accept_armed = true;
+        }
+    }
+
+    fn on_accept(&mut self, cqe: Cqe) {
+        if cqe.flags & IORING_CQE_F_MORE == 0 {
+            // Single-shot, or a multishot run ending: the SQE is gone.
+            self.accept_armed = false;
+        }
+        if cqe.res < 0 {
+            let err = -cqe.res;
+            if self.multishot && err == EINVAL {
+                // Pre-5.19 kernel: multishot accept unsupported. Fall
+                // back to re-armed single-shot for the shard's life.
+                self.multishot = false;
+                self.accept_errors = 0;
+                if !self.draining && !self.shutting {
+                    self.arm_accept();
+                }
+                return;
+            }
+            if self.draining || self.shutting || err == ECANCELED {
+                return;
+            }
+            // Transient (ECONNABORTED, EINTR) or hard (EMFILE) — both
+            // need a re-arm, but an error storm is paced to one re-arm
+            // per loop pass so the shard cannot spin on accept errors.
+            self.accept_errors += 1;
+            if self.accept_errors > 64 {
+                self.accept_rearm_pending = true;
+                self.accept_errors = 0;
+            } else if !self.accept_armed {
+                self.arm_accept();
+            }
+            return;
+        }
+        self.accept_errors = 0;
+        // Own the fd immediately so every exit path below closes it.
+        let stream = unsafe { TcpStream::from_raw_fd(cqe.res) };
+        if self.draining || self.shutting {
+            drop(stream);
+            return;
+        }
+        self.admit(stream);
+        if !self.accept_armed {
+            self.arm_accept();
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        let Some(permit) = self.limiter.try_acquire() else {
+            Metrics::inc(&self.metrics.conns_refused, 1);
+            refuse_busy(stream, &self.limiter);
+            return;
+        };
+        // No set_nonblocking: uring ops never block the submitter, and
+        // socket ops poll internally regardless of the fd's flags.
+        stream.set_nodelay(true).ok();
+        let idx = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.epochs.push(0);
+            self.conns.len() - 1
+        });
+        let epoch = self.epochs[idx];
+        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit);
+        Metrics::inc(&self.metrics.conns_accepted, 1);
+        Metrics::inc(&self.metrics.conns_open, 1);
+        Metrics::inc(&self.shard.conns_accepted, 1);
+        Metrics::inc(&self.shard.conns_open, 1);
+        self.conns[idx] = Some(UConn {
+            conn,
+            read_inflight: false,
+            read_page: 0,
+            read_waiting: false,
+            write_inflight: false,
+            wbuf: None,
+            wpos: 0,
+            closing: false,
+        });
+        self.reschedule(idx, Instant::now());
+        self.advance(idx);
+    }
+
+    /// Drive one connection as far as completions allow: parse what the
+    /// last read delivered, dispatch if idle, keep a write and a read
+    /// armed, and close once a finished peer is fully answered. The
+    /// epoll `pump` loops against the socket; here each stage runs once
+    /// per completion — the next CQE re-enters.
+    fn advance(&mut self, idx: usize) {
+        let now = Instant::now();
+        let mut send_failed = false;
+        {
+            let Some(uc) = self.conns[idx].as_mut() else { return };
+            if uc.closing {
+                return;
+            }
+            // 1. Peel complete frames into the inbox.
+            if !uc.conn.corrupt && !self.draining {
+                match uc.conn.parse_into_inbox() {
+                    Ok(parsed) => {
+                        if parsed > 0 {
+                            Metrics::inc(&self.metrics.frames_in, parsed as u64);
+                            Metrics::inc(&self.shard.frames_in, parsed as u64);
+                        }
+                        // Frame-granularity read-stall clock, exactly as
+                        // in the epoll loop.
+                        if uc.conn.frames.buffered() == 0 {
+                            uc.conn.frame_start = None;
+                        } else if parsed > 0 || uc.conn.frame_start.is_none() {
+                            uc.conn.frame_start = Some(now);
+                        }
+                    }
+                    Err(_) => {
+                        uc.conn.corrupt = true;
+                        uc.conn.eof = true;
+                    }
+                }
+            }
+            // 2. Dispatch the next request if none is in flight.
+            if !uc.conn.busy {
+                if let Some(msg) = uc.conn.inbox.pop_front() {
+                    uc.conn.busy = true;
+                    let buf = if self.zero_copy { self.pool.get() } else { Vec::new() };
+                    let item = WorkItem {
+                        token: token(idx, uc.conn.epoch),
+                        msg,
+                        session: uc.conn.session.clone(),
+                        done: self.completions.clone(),
+                        wake: self.wake.clone(),
+                        buf,
+                    };
+                    if self.work_tx.send(item).is_err() {
+                        send_failed = true; // shutting down
+                    }
+                }
+            }
+        }
+        if send_failed {
+            return self.close(idx);
+        }
+        // 3. Keep the kernel busy.
+        self.arm_write(idx);
+        self.arm_read(idx);
+        // 4. Close a finished peer once fully answered. No in-flight
+        //    exemption: close() cancels a read still armed against a
+        //    peer that will never send again.
+        let finished = {
+            let Some(uc) = self.conns[idx].as_ref() else { return };
+            (uc.conn.eof || self.draining) && uc.is_drained()
+        };
+        if finished {
+            self.close(idx);
+        }
+    }
+
+    /// Arm one READ into a free arena page, or queue for a page.
+    fn arm_read(&mut self, idx: usize) {
+        let (fd, epoch, page) = {
+            let Some(uc) = self.conns[idx].as_mut() else { return };
+            if uc.closing || uc.read_inflight || uc.read_waiting || self.draining {
+                return;
+            }
+            if !uc.conn.wants_read() || uc.out_pending() >= WRITE_HIGH_WATER {
+                return;
+            }
+            let Some(page) = self.free_pages.pop() else {
+                uc.read_waiting = true;
+                self.read_waiters.push_back(idx);
+                return;
+            };
+            uc.read_inflight = true;
+            uc.read_page = page;
+            (uc.conn.stream.as_raw_fd(), uc.conn.epoch, page)
+        };
+        let buf = unsafe { self.arena.as_mut_ptr().add(page * READ_PAGE) };
+        #[allow(unused_mut)]
+        let mut len = READ_PAGE as u32;
+        #[cfg(feature = "faults")]
+        {
+            len = crate::net::faults::short_cqe(len);
+        }
+        let tok = utoken(OP_READ, page, epoch, idx);
+        let sqe = if self.fixed {
+            Sqe::read_fixed(fd, buf, len, page as u16, tok)
+        } else {
+            Sqe::read(fd, buf, len, tok)
+        };
+        if self.ring.push(sqe).is_err() {
+            if let Some(uc) = self.conns[idx].as_mut() {
+                uc.read_inflight = false;
+            }
+            self.free_pages.push(page);
+            self.close(idx);
+        }
+    }
+
+    fn on_read(&mut self, idx: usize, epoch: u32, page: usize, res: i32) {
+        // A stale completion still owned its page: release it either way.
+        if idx >= self.conns.len()
+            || (self.epochs[idx] & EPOCH_MASK) != epoch
+            || self.conns[idx].is_none()
+        {
+            self.free_pages.push(page);
+            self.wake_read_waiter();
+            return;
+        }
+        let mut must_close = false;
+        let mut finishing = false;
+        {
+            let uc = self.conns[idx].as_mut().expect("checked above");
+            uc.read_inflight = false;
+            if uc.closing {
+                finishing = true;
+            } else if res < 0 {
+                let err = -res;
+                // EAGAIN/EINTR: spurious, advance() re-arms.
+                if !(err == EAGAIN || err == EINTR || err == ECANCELED) {
+                    must_close = true;
+                }
+            } else if res == 0 {
+                uc.conn.eof = true;
+            } else {
+                // Copy into the frame accumulator BEFORE the page is
+                // released: the free list must never hold a page whose
+                // bytes are still unconsumed.
+                let n = res as usize;
+                let start = page * READ_PAGE;
+                Metrics::inc(&self.metrics.net_bytes_in, n as u64);
+                uc.conn.frames.push(&self.arena[start..start + n]);
+                uc.conn.last_activity = Instant::now();
+            }
+        }
+        self.free_pages.push(page);
+        self.wake_read_waiter();
+        if finishing {
+            return self.maybe_finish_close(idx);
+        }
+        if must_close {
+            return self.close(idx);
+        }
+        self.advance(idx);
+    }
+
+    /// Hand a freed arena page to the longest-waiting connection.
+    fn wake_read_waiter(&mut self) {
+        while let Some(widx) = self.read_waiters.pop_front() {
+            let live = match self.conns[widx].as_mut() {
+                Some(uc) if uc.read_waiting => {
+                    uc.read_waiting = false;
+                    true
+                }
+                _ => false, // closed (or re-armed) while queued
+            };
+            if live {
+                self.arm_read(widx);
+                return;
+            }
+        }
+    }
+
+    /// Arm one WRITE for the connection: continue the in-flight
+    /// buffer's remainder, or swap the queue's backlog out whole. One
+    /// write in flight per connection preserves wire order (the role
+    /// SQE links would otherwise play) and keeps exactly one buffer
+    /// pinned.
+    fn arm_write(&mut self, idx: usize) {
+        let (fd, epoch, ptr, len) = {
+            let Some(uc) = self.conns[idx].as_mut() else { return };
+            if uc.closing || uc.write_inflight {
+                return;
+            }
+            if uc.wbuf.is_none() {
+                if uc.conn.write.pending() == 0 {
+                    return;
+                }
+                // The pooled replacement becomes the live queue buffer;
+                // the swapped-out buffer returns to the pool when its
+                // last byte is written — the pool stays balanced.
+                let replacement = self.pool.get();
+                let (buf, pos) = uc.conn.write.take_pending(replacement);
+                uc.wbuf = Some(buf);
+                uc.wpos = pos;
+            }
+            let buf = uc.wbuf.as_ref().expect("just installed");
+            let remaining = buf.len() - uc.wpos;
+            if remaining == 0 {
+                let mut b = uc.wbuf.take().expect("checked some");
+                b.clear();
+                self.pool.put(b);
+                uc.wpos = 0;
+                return;
+            }
+            uc.write_inflight = true;
+            (
+                uc.conn.stream.as_raw_fd(),
+                uc.conn.epoch,
+                buf[uc.wpos..].as_ptr(),
+                remaining.min(1 << 30) as u32,
+            )
+        };
+        let tok = utoken(OP_WRITE, 0, epoch, idx);
+        if self.ring.push(Sqe::write(fd, ptr, len, tok)).is_err() {
+            if let Some(uc) = self.conns[idx].as_mut() {
+                uc.write_inflight = false;
+            }
+            self.close(idx);
+        }
+    }
+
+    fn on_write(&mut self, idx: usize, epoch: u32, res: i32) {
+        if idx >= self.conns.len()
+            || (self.epochs[idx] & EPOCH_MASK) != epoch
+            || self.conns[idx].is_none()
+        {
+            return;
+        }
+        let mut must_close = false;
+        let mut finishing = false;
+        {
+            let uc = self.conns[idx].as_mut().expect("checked above");
+            uc.write_inflight = false;
+            if uc.closing {
+                finishing = true;
+            } else if res < 0 {
+                let err = -res;
+                if !(err == EAGAIN || err == EINTR || err == ECANCELED) {
+                    must_close = true;
+                }
+            } else if res == 0 {
+                must_close = true; // zero-length write: peer is gone
+            } else {
+                let n = res as usize;
+                let now = Instant::now();
+                Metrics::inc(&self.metrics.net_bytes_out, n as u64);
+                uc.wpos += n;
+                uc.conn.last_activity = now;
+                uc.conn.write_progress = now;
+                if uc.wbuf.as_ref().is_some_and(|b| uc.wpos >= b.len()) {
+                    let mut b = uc.wbuf.take().expect("checked some");
+                    b.clear();
+                    self.pool.put(b);
+                    uc.wpos = 0;
+                }
+            }
+        }
+        if finishing {
+            return self.maybe_finish_close(idx);
+        }
+        if must_close {
+            return self.close(idx);
+        }
+        // Partial writes re-arm in advance(); so does the next backlog.
+        self.advance(idx);
+    }
+
+    /// Hand completed replies back to their connections. Identical to
+    /// the epoll loop's version modulo the slab element type.
+    fn drain_completions(&mut self) {
+        let done: Vec<Completion> = std::mem::take(&mut *lock_clean(&self.completions));
+        for c in done {
+            let (idx, epoch) = token_parts(c.token);
+            if idx >= self.conns.len() || self.epochs[idx] != epoch {
+                continue; // connection closed while the request ran
+            }
+            let mut must_close = false;
+            {
+                let Some(uc) = self.conns[idx].as_mut() else { continue };
+                if uc.closing {
+                    continue; // reply raced the close; the frame drops
+                }
+                uc.conn.busy = false;
+                uc.conn.last_activity = Instant::now();
+                match c.frame {
+                    Some(frame) => {
+                        let spare = uc.conn.write.adopt(frame);
+                        self.pool.put(spare);
+                        Metrics::inc(&self.metrics.frames_out, 1);
+                        Metrics::inc(&self.shard.frames_out, 1);
+                        if c.close_after {
+                            uc.conn.inbox.clear();
+                            uc.conn.corrupt = true;
+                            uc.conn.eof = true;
+                        }
+                    }
+                    None => must_close = true, // unframeable reply
+                }
+            }
+            if must_close {
+                self.close(idx);
+                continue;
+            }
+            self.advance(idx);
+        }
+    }
+
+    fn service_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(tok) = self.wheel.pop_due(now) {
+            let (idx, epoch) = token_parts(tok);
+            if idx >= self.conns.len() || self.epochs[idx] != epoch || self.conns[idx].is_none() {
+                continue;
+            }
+            self.check_deadlines(idx, now);
+            self.reschedule(idx, now);
+        }
+    }
+
+    /// The epoll loop's deadline contract on uring state: write-stall
+    /// counts the swapped-out buffer, and "drained" means the reply has
+    /// fully left the kernel ([`UConn::is_drained`]).
+    fn check_deadlines(&mut self, idx: usize, now: Instant) {
+        let mut must_close = false;
+        let mut poisoned = false;
+        {
+            let Some(uc) = self.conns[idx].as_mut() else { return };
+            if uc.closing {
+                return;
+            }
+            if self.write_timeout != Duration::ZERO
+                && uc.out_pending() > 0
+                && now >= uc.conn.write_progress + self.write_timeout
+            {
+                // The peer stopped reading; nothing can be said to it.
+                Metrics::inc(&self.metrics.timeouts, 1);
+                must_close = true;
+            } else if !(uc.conn.corrupt || uc.conn.eof) {
+                let read_stalled = self.read_timeout != Duration::ZERO
+                    && uc.is_drained()
+                    && uc.conn.frame_start.is_some_and(|t| now >= t + self.read_timeout);
+                let idle = self.idle_timeout != Duration::ZERO
+                    && uc.is_drained()
+                    && uc.conn.frame_start.is_none()
+                    && now >= uc.conn.last_activity + self.idle_timeout;
+                if read_stalled || idle {
+                    Metrics::inc(&self.metrics.timeouts, 1);
+                    let frame =
+                        if read_stalled { stall_timeout_frame() } else { idle_timeout_frame() };
+                    if let Some(frame) = frame {
+                        uc.conn.write.push_bytes(&frame);
+                        uc.conn.write_progress = now;
+                        Metrics::inc(&self.metrics.frames_out, 1);
+                        Metrics::inc(&self.shard.frames_out, 1);
+                    }
+                    uc.conn.corrupt = true;
+                    uc.conn.eof = true;
+                    poisoned = true;
+                }
+            }
+        }
+        if must_close {
+            return self.close(idx);
+        }
+        if poisoned {
+            // Flush the notice; close() (via advance) then cancels the
+            // read still armed against the quiet peer.
+            self.advance(idx);
+        }
+    }
+
+    fn reschedule(&mut self, idx: usize, now: Instant) {
+        if self.idle_timeout == Duration::ZERO
+            && self.read_timeout == Duration::ZERO
+            && self.write_timeout == Duration::ZERO
+        {
+            return;
+        }
+        let Some(uc) = self.conns[idx].as_ref() else { return };
+        if uc.closing {
+            return;
+        }
+        let mut next = now + HEARTBEAT;
+        if self.write_timeout != Duration::ZERO && uc.out_pending() > 0 {
+            next = next.min(uc.conn.write_progress + self.write_timeout);
+        }
+        if self.read_timeout != Duration::ZERO && uc.is_drained() {
+            if let Some(t) = uc.conn.frame_start {
+                next = next.min(t + self.read_timeout);
+            }
+        }
+        if self.idle_timeout != Duration::ZERO && uc.is_drained() && uc.conn.frame_start.is_none()
+        {
+            next = next.min(uc.conn.last_activity + self.idle_timeout);
+        }
+        let next = next.max(now + Duration::from_millis(1));
+        self.wheel.schedule(next, token(idx, uc.conn.epoch));
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_deadline = Some(Instant::now() + self.drain_grace);
+        if self.accept_armed {
+            let _ = self.ring.push(Sqe::cancel(ACCEPT_TOKEN, CANCEL_TOKEN));
+            self.accept_armed = false;
+        }
+        // Closing the listener fd does NOT cancel its armed op (the op
+        // holds a file reference) — hence the explicit cancel above.
+        self.listener = None;
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                self.advance(idx); // answer the accepted, close the done
+            }
+        }
+    }
+
+    /// Initiate a close: cancel in-flight ops and mark the slot; the
+    /// slot is vacated by [`ULoop::maybe_finish_close`] once the kernel
+    /// has let go of every buffer it was handed.
+    fn close(&mut self, idx: usize) {
+        let mut cancels: [Option<u64>; 2] = [None, None];
+        {
+            let Some(uc) = self.conns[idx].as_mut() else { return };
+            if uc.closing {
+                return;
+            }
+            uc.closing = true;
+            uc.read_waiting = false; // any waiter-queue entry goes stale
+            let epoch = uc.conn.epoch;
+            if uc.read_inflight {
+                cancels[0] = Some(utoken(OP_READ, uc.read_page, epoch, idx));
+            }
+            if uc.write_inflight {
+                cancels[1] = Some(utoken(OP_WRITE, 0, epoch, idx));
+            }
+        }
+        for target in cancels.into_iter().flatten() {
+            let _ = self.ring.push(Sqe::cancel(target, CANCEL_TOKEN));
+        }
+        self.maybe_finish_close(idx);
+    }
+
+    /// Vacate a closing slot once no kernel op references its buffers.
+    /// Only now does the epoch advance — earlier, and the in-flight
+    /// completions this close is waiting for would look stale.
+    fn maybe_finish_close(&mut self, idx: usize) {
+        let ready = self.conns[idx]
+            .as_ref()
+            .is_some_and(|uc| uc.closing && !uc.read_inflight && !uc.write_inflight);
+        if !ready {
+            return;
+        }
+        let uc = self.conns[idx].take().expect("checked above");
+        self.epochs[idx] = self.epochs[idx].wrapping_add(1);
+        if let Some(mut b) = uc.wbuf {
+            b.clear();
+            self.pool.put(b);
+        }
+        uc.conn.teardown(&mut self.pool);
+        self.free.push(idx);
+        Metrics::dec(&self.metrics.conns_open, 1);
+        Metrics::dec(&self.shard.conns_open, 1);
+    }
+
+    /// Final teardown: initiate every close, cancel the service ops,
+    /// and reap until the kernel has released every borrowed buffer.
+    /// If ops are still stuck at the deadline the buffers are leaked —
+    /// an unregistered read landing in freed heap memory would be
+    /// undefined behaviour, a leak is just a leak.
+    fn teardown(&mut self) {
+        self.shutting = true;
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                self.close(idx);
+            }
+        }
+        if self.accept_armed {
+            let _ = self.ring.push(Sqe::cancel(ACCEPT_TOKEN, CANCEL_TOKEN));
+            self.accept_armed = false;
+        }
+        if self.wake_armed {
+            let _ = self.ring.push(Sqe::cancel(WAKE_TOKEN, CANCEL_TOKEN));
+        }
+        let deadline = Instant::now() + Duration::from_secs(1);
+        let mut cqes: Vec<Cqe> = Vec::new();
+        while !(self.conns.iter().all(|c| c.is_none()) && !self.wake_armed) {
+            if Instant::now() >= deadline {
+                break;
+            }
+            if self.ring.submit_and_wait(1, Some(Duration::from_millis(50))).is_err() {
+                break;
+            }
+            cqes.clear();
+            self.ring.reap(&mut cqes);
+            for cqe in cqes.drain(..) {
+                match utoken_parts(cqe.user_data).0 {
+                    OP_WAKE => self.wake_armed = false,
+                    OP_READ | OP_WRITE => self.handle_cqe(cqe),
+                    _ => {}
+                }
+            }
+        }
+        if !(self.conns.iter().all(|c| c.is_none()) && !self.wake_armed) {
+            eprintln!(
+                "b64simd: uring shard exiting with ops still in flight; leaking their buffers"
+            );
+            std::mem::forget(std::mem::take(&mut self.arena));
+            std::mem::forget(std::mem::take(&mut self.conns));
+            let stuck = std::mem::replace(&mut self.wake_buf, Box::new(0));
+            std::mem::forget(stuck);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utoken_round_trips_every_field() {
+        let tok = utoken(OP_READ, 0xABC, 0x1ABC_DEF0 & EPOCH_MASK, 0xF_1234);
+        assert_eq!(utoken_parts(tok), (OP_READ, 0xABC, 0x1ABC_DEF0 & EPOCH_MASK, 0xF_1234));
+        let tok = utoken(OP_CANCEL, 0, 0, 0);
+        assert_eq!(tok, CANCEL_TOKEN);
+        assert_eq!(utoken_parts(ACCEPT_TOKEN).0, OP_ACCEPT);
+        assert_eq!(utoken_parts(WAKE_TOKEN).0, OP_WAKE);
+    }
+
+    #[test]
+    fn utoken_epoch_truncation_is_masked_consistently() {
+        // A slot epoch above 29 bits must compare equal through the
+        // token round trip when masked the way the CQE handlers do.
+        let epoch: u32 = 0xDEAD_BEEF;
+        let tok = utoken(OP_WRITE, 0, epoch, 7);
+        let (_, _, tok_epoch, idx) = utoken_parts(tok);
+        assert_eq!(tok_epoch, epoch & EPOCH_MASK);
+        assert_eq!(idx, 7);
+    }
+}

@@ -22,4 +22,4 @@ pub mod proto;
 pub mod service;
 
 pub use client::Client;
-pub use service::{serve, ServerConfig, ServerHandle, Transport};
+pub use service::{serve, ConfigParseError, ServerConfig, ServerHandle, Transport};

@@ -1,6 +1,6 @@
 //! The codec service: TCP listeners, pluggable transport, shared router.
 //!
-//! Two transports speak the same wire protocol over the same
+//! Three transports speak the same wire protocol over the same
 //! [`Router`]:
 //!
 //! * [`Transport::Epoll`] (Linux, the default) — the event-driven
@@ -9,6 +9,14 @@
 //!   `SO_REUSEPORT` listener each) feeding a fixed worker pool, so
 //!   thousands of mostly-idle clients cost no threads and the event
 //!   loop scales with cores;
+//! * [`Transport::Uring`] (Linux 5.11+) — the same shard/worker
+//!   architecture driven by io_uring submission/completion rings with
+//!   kernel-registered read buffers, replacing the per-ready-fd
+//!   `read`/`write` syscall pair with one `io_uring_enter` per loop
+//!   pass. On kernels without io_uring it falls back to epoll with a
+//!   logged notice — unless [`ServerConfig::transport_required`] is
+//!   set, in which case `serve` returns the typed
+//!   [`crate::net::sys::UringUnsupported`] error;
 //! * [`Transport::Threaded`] — the original thread-per-connection
 //!   fallback (non-Linux hosts, differential testing).
 //!
@@ -39,9 +47,26 @@ pub enum Transport {
     /// Event-driven readiness loop (`crate::net`); Linux only — other
     /// hosts silently fall back to [`Transport::Threaded`].
     Epoll,
+    /// io_uring submission/completion rings with registered read
+    /// buffers; Linux 5.11+ only. Kernels without io_uring fall back to
+    /// [`Transport::Epoll`] with a logged notice — unless
+    /// [`ServerConfig::transport_required`] is set, in which case
+    /// `serve` fails with [`crate::net::sys::UringUnsupported`].
+    /// Non-Linux hosts fall back to [`Transport::Threaded`].
+    Uring,
     /// One blocking OS thread per connection.
     Threaded,
 }
+
+/// The accepted spellings of `B64SIMD_TRANSPORT`, for warnings and
+/// typed errors — kept next to [`Transport::parse`] so they cannot
+/// drift.
+pub const TRANSPORT_ACCEPTED: &str = "epoll | uring | threaded";
+
+/// The accepted spellings of the on/off switch knobs
+/// (`B64SIMD_ZEROCOPY`, `B64SIMD_TRANSPORT_REQUIRED`), next to
+/// [`ServerConfig::parse_switch`].
+pub const SWITCH_ACCEPTED: &str = "1 | true | on | 0 | false | off";
 
 impl Transport {
     /// Short name, as used on the wire of the `B64SIMD_TRANSPORT` knob
@@ -49,6 +74,7 @@ impl Transport {
     pub fn name(self) -> &'static str {
         match self {
             Transport::Epoll => "epoll",
+            Transport::Uring => "uring",
             Transport::Threaded => "threaded",
         }
     }
@@ -57,28 +83,74 @@ impl Transport {
     pub fn parse(s: &str) -> Option<Transport> {
         match s {
             "epoll" => Some(Transport::Epoll),
+            "uring" | "io_uring" | "io-uring" => Some(Transport::Uring),
             "threaded" | "threads" => Some(Transport::Threaded),
             _ => None,
         }
     }
 
+    /// Strict variant of [`Transport::parse`]: a typed
+    /// [`ConfigParseError`] naming the accepted set instead of `None`.
+    pub fn parse_strict(s: &str) -> Result<Transport, ConfigParseError> {
+        Transport::parse(s).ok_or_else(|| ConfigParseError {
+            key: "B64SIMD_TRANSPORT",
+            value: s.to_string(),
+            accepted: TRANSPORT_ACCEPTED,
+        })
+    }
+
     /// `B64SIMD_TRANSPORT` override, else the host default (epoll on
-    /// Linux). The env knob is how CI runs the whole suite against both
-    /// transports.
+    /// Linux). The env knob is how CI runs the whole suite against the
+    /// transports. Unknown values warn (naming the accepted set) and
+    /// keep the default rather than panicking at `Default` time.
     pub fn from_env() -> Transport {
-        if let Ok(v) = std::env::var("B64SIMD_TRANSPORT") {
-            if let Some(t) = Transport::parse(&v) {
-                return t;
-            }
-            eprintln!("b64simd: ignoring unknown B64SIMD_TRANSPORT value '{v}'");
-        }
-        if cfg!(target_os = "linux") {
+        let default = if cfg!(target_os = "linux") {
             Transport::Epoll
         } else {
             Transport::Threaded
+        };
+        match std::env::var("B64SIMD_TRANSPORT") {
+            Err(_) => default,
+            Ok(v) => match Transport::parse_strict(&v) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("b64simd: {e}; using '{}'", default.name());
+                    default
+                }
+            },
         }
     }
 }
+
+/// A configuration knob held a value outside its accepted set.
+///
+/// Environment-driven defaults ([`ServerConfig::default`],
+/// [`Transport::from_env`]) deliberately *warn and fall back* rather
+/// than return this — a typo in an env var should not panic a library
+/// `Default` impl — but callers that take config values from flags
+/// (the CLI, loadgen) parse through the strict entry points and get
+/// this typed error to surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigParseError {
+    /// The knob (env var name) whose value failed to parse.
+    pub key: &'static str,
+    /// The offending value.
+    pub value: String,
+    /// Human-readable accepted set, e.g. `"epoll | uring | threaded"`.
+    pub accepted: &'static str,
+}
+
+impl std::fmt::Display for ConfigParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown {} value '{}' (accepted: {})",
+            self.key, self.value, self.accepted
+        )
+    }
+}
+
+impl std::error::Error for ConfigParseError {}
 
 /// Server tuning.
 #[derive(Debug, Clone)]
@@ -93,6 +165,11 @@ pub struct ServerConfig {
     pub max_streams_per_connection: usize,
     /// Connection subsystem (see [`Transport::from_env`]).
     pub transport: Transport,
+    /// Fail startup instead of falling back when the configured
+    /// transport is unavailable on this host (today: `uring` on a
+    /// kernel without io_uring). `B64SIMD_TRANSPORT_REQUIRED=1`;
+    /// default off, i.e. fall back with a logged notice.
+    pub transport_required: bool,
     /// Worker threads executing requests for the epoll transport (the
     /// threaded transport uses one thread per connection instead). The
     /// pool is shared by every reactor shard, so cross-connection
@@ -159,11 +236,23 @@ impl ServerConfig {
     /// `B64SIMD_ZEROCOPY` override (`0`/`false`/`off` select the `Vec`
     /// reference path), else the zero-copy default.
     fn zero_copy_from_env() -> bool {
-        match std::env::var("B64SIMD_ZEROCOPY") {
-            Err(_) => true,
+        Self::switch_from_env("B64SIMD_ZEROCOPY", true)
+    }
+
+    /// On/off env knob through [`ServerConfig::parse_switch`]; unknown
+    /// values warn — naming the accepted spellings — and keep the
+    /// default.
+    fn switch_from_env(key: &'static str, default: bool) -> bool {
+        match std::env::var(key) {
+            Err(_) => default,
             Ok(v) => Self::parse_switch(&v).unwrap_or_else(|| {
-                eprintln!("b64simd: ignoring unknown B64SIMD_ZEROCOPY value '{v}'");
-                true
+                let e = ConfigParseError {
+                    key,
+                    value: v,
+                    accepted: SWITCH_ACCEPTED,
+                };
+                eprintln!("b64simd: {e}; using '{default}'");
+                default
             }),
         }
     }
@@ -193,6 +282,7 @@ impl Default for ServerConfig {
             max_connections: 1024,
             max_streams_per_connection: 16,
             transport: Transport::from_env(),
+            transport_required: Self::switch_from_env("B64SIMD_TRANSPORT_REQUIRED", false),
             net_workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4)
@@ -301,33 +391,24 @@ pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<Server
     let drain = Arc::new(AtomicBool::new(false));
     match config.transport {
         #[cfg(target_os = "linux")]
-        Transport::Epoll => {
-            let shards = config.reactors.max(1);
-            let listeners = if shards > 1 {
-                crate::net::sys::reuseport_group(config.addr, shards)?
+        Transport::Epoll => serve_sharded(router, config, stop, drain, false),
+        #[cfg(target_os = "linux")]
+        Transport::Uring => {
+            if crate::net::sys::uring_supported() {
+                serve_sharded(router, config, stop, drain, true)
+            } else if config.transport_required {
+                Err(crate::net::sys::UringUnsupported.into())
             } else {
-                vec![TcpListener::bind(config.addr)?]
-            };
-            let addr = listeners[0].local_addr()?;
-            let metrics = router.metrics().clone();
-            let srv = crate::net::driver::spawn(
-                router,
-                &config,
-                listeners,
-                stop.clone(),
-                drain.clone(),
-            )?;
-            Ok(ServerHandle {
-                addr,
-                stop,
-                drain,
-                threads: srv.threads,
-                waker: Waker::Events(srv.wakes),
-                metrics,
-            })
+                eprintln!(
+                    "b64simd: {}; falling back to transport 'epoll' \
+                     (set B64SIMD_TRANSPORT_REQUIRED=1 to fail instead)",
+                    crate::net::sys::UringUnsupported
+                );
+                serve_sharded(router, config, stop, drain, false)
+            }
         }
         #[cfg(not(target_os = "linux"))]
-        Transport::Epoll => {
+        Transport::Epoll | Transport::Uring => {
             let listener = TcpListener::bind(config.addr)?;
             let addr = listener.local_addr()?;
             serve_threaded(router, config, listener, addr, stop, drain)
@@ -338,6 +419,42 @@ pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<Server
             serve_threaded(router, config, listener, addr, stop, drain)
         }
     }
+}
+
+/// Shared startup for the sharded Linux transports: bind the
+/// `SO_REUSEPORT` listener group (or a single plain listener), spawn
+/// the reactor shards and worker pool through the chosen driver, and
+/// wrap the result in a [`ServerHandle`] woken via the shards'
+/// eventfds.
+#[cfg(target_os = "linux")]
+fn serve_sharded(
+    router: Arc<Router>,
+    config: ServerConfig,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    uring: bool,
+) -> anyhow::Result<ServerHandle> {
+    let shards = config.reactors.max(1);
+    let listeners = if shards > 1 {
+        crate::net::sys::reuseport_group(config.addr, shards)?
+    } else {
+        vec![TcpListener::bind(config.addr)?]
+    };
+    let addr = listeners[0].local_addr()?;
+    let metrics = router.metrics().clone();
+    let srv = if uring {
+        crate::net::uring::spawn(router, &config, listeners, stop.clone(), drain.clone())?
+    } else {
+        crate::net::driver::spawn(router, &config, listeners, stop.clone(), drain.clone())?
+    };
+    Ok(ServerHandle {
+        addr,
+        stop,
+        drain,
+        threads: srv.threads,
+        waker: Waker::Events(srv.wakes),
+        metrics,
+    })
 }
 
 /// The thread-per-connection transport. The accept thread tracks its
@@ -807,5 +924,64 @@ pub(crate) fn dispatch_into(
             let reply = dispatch(other, router, session);
             sink.push_message(&reply)
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_parse_table() {
+        assert_eq!(Transport::parse("epoll"), Some(Transport::Epoll));
+        assert_eq!(Transport::parse("uring"), Some(Transport::Uring));
+        assert_eq!(Transport::parse("io_uring"), Some(Transport::Uring));
+        assert_eq!(Transport::parse("io-uring"), Some(Transport::Uring));
+        assert_eq!(Transport::parse("threaded"), Some(Transport::Threaded));
+        assert_eq!(Transport::parse("threads"), Some(Transport::Threaded));
+        for bad in ["", "Epoll", "URING", "kqueue", "iouring", " epoll"] {
+            assert_eq!(Transport::parse(bad), None, "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn transport_names_round_trip_through_parse() {
+        for t in [Transport::Epoll, Transport::Uring, Transport::Threaded] {
+            assert_eq!(Transport::parse(t.name()), Some(t));
+        }
+    }
+
+    #[test]
+    fn transport_parse_strict_names_key_value_and_accepted_set() {
+        let err = Transport::parse_strict("kqueue").unwrap_err();
+        assert_eq!(err.key, "B64SIMD_TRANSPORT");
+        assert_eq!(err.value, "kqueue");
+        assert_eq!(err.accepted, TRANSPORT_ACCEPTED);
+        let msg = err.to_string();
+        assert!(msg.contains("B64SIMD_TRANSPORT"), "{msg}");
+        assert!(msg.contains("kqueue"), "{msg}");
+        assert!(msg.contains("epoll | uring | threaded"), "{msg}");
+        assert_eq!(Transport::parse_strict("uring"), Ok(Transport::Uring));
+    }
+
+    #[test]
+    fn switch_parse_table() {
+        for on in ["1", "true", "on"] {
+            assert_eq!(ServerConfig::parse_switch(on), Some(true), "{on}");
+        }
+        for off in ["0", "false", "off"] {
+            assert_eq!(ServerConfig::parse_switch(off), Some(false), "{off}");
+        }
+        for bad in ["", "yes", "no", "ON", "True", "2"] {
+            assert_eq!(ServerConfig::parse_switch(bad), None, "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn config_parse_error_is_a_std_error() {
+        // `serve` surfaces UringUnsupported/ConfigParseError through
+        // anyhow, which requires Error + Send + Sync.
+        fn assert_err<E: std::error::Error + Send + Sync + 'static>() {}
+        assert_err::<ConfigParseError>();
     }
 }

@@ -18,6 +18,10 @@
 //! exercised by running this whole binary under injection in CI — the
 //! assertions here are exactly the ones that must keep holding when
 //! every read/write/accept path misbehaves.
+//!
+//! Each scenario also runs on the uring transport when the host kernel
+//! passes the io_uring probe; otherwise those legs skip with a logged
+//! note (running them would just re-test the epoll fallback).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -61,6 +65,17 @@ fn want_fds(_n: u64) {
     {
         let _ = b64simd::net::sys::raise_nofile_limit(_n);
     }
+}
+
+/// True when the host kernel passes the io_uring probe; uring legs
+/// skip with a logged note otherwise.
+fn uring_available(leg: &str) -> bool {
+    #[cfg(target_os = "linux")]
+    if b64simd::net::sys::uring_supported() {
+        return true;
+    }
+    eprintln!("chaos: kernel lacks io_uring; skipping {leg}");
+    false
 }
 
 /// Read one length-prefixed reply frame; `None` on a clean EOF.
@@ -207,8 +222,27 @@ fn drain_under_load_threaded() {
 }
 
 #[test]
+fn drain_under_load_uring_sharded() {
+    if !uring_available("uring drain (zerocopy)") {
+        return;
+    }
+    drain_under_load(Transport::Uring, 4, true);
+}
+
+#[test]
+fn drain_under_load_uring_vec_reply() {
+    if !uring_available("uring drain (vec reply)") {
+        return;
+    }
+    drain_under_load(Transport::Uring, 4, false);
+}
+
+#[test]
 fn shutdown_with_no_traffic_is_clean() {
-    for transport in [Transport::Epoll, Transport::Threaded] {
+    for transport in [Transport::Epoll, Transport::Uring, Transport::Threaded] {
+        if transport == Transport::Uring && !uring_available("uring no-traffic shutdown") {
+            continue;
+        }
         let (handle, router) = start_with(transport, 8, 2, true, |_| {});
         handle.shutdown();
         assert_eq!(router.metrics().conns_open.load(Ordering::Relaxed), 0);
@@ -249,6 +283,14 @@ fn idle_timeout_notice_threaded() {
     idle_timeout_notice(Transport::Threaded);
 }
 
+#[test]
+fn idle_timeout_notice_uring() {
+    if !uring_available("uring idle timeout") {
+        return;
+    }
+    idle_timeout_notice(Transport::Uring);
+}
+
 fn read_stall_notice(transport: Transport) {
     let (handle, router) = start_with(transport, 8, 1, true, |c| {
         c.read_timeout = Duration::from_millis(150);
@@ -280,6 +322,14 @@ fn read_stall_notice_epoll() {
 #[test]
 fn read_stall_notice_threaded() {
     read_stall_notice(Transport::Threaded);
+}
+
+#[test]
+fn read_stall_notice_uring() {
+    if !uring_available("uring read stall") {
+        return;
+    }
+    read_stall_notice(Transport::Uring);
 }
 
 /// A complete request keeps the connection healthy past the idle
@@ -330,6 +380,14 @@ fn write_stall_shed_epoll() {
 #[test]
 fn write_stall_shed_threaded() {
     write_stall_shed(Transport::Threaded);
+}
+
+#[test]
+fn write_stall_shed_uring() {
+    if !uring_available("uring write stall") {
+        return;
+    }
+    write_stall_shed(Transport::Uring);
 }
 
 // ---------------------------------------------------------------------
@@ -405,4 +463,13 @@ fn panic_is_isolated_epoll_vec() {
 #[test]
 fn panic_is_isolated_threaded() {
     panic_is_isolated(Transport::Threaded, true);
+}
+
+#[cfg(feature = "faults")]
+#[test]
+fn panic_is_isolated_uring() {
+    if !uring_available("uring panic isolation") {
+        return;
+    }
+    panic_is_isolated(Transport::Uring, true);
 }

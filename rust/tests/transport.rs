@@ -17,7 +17,13 @@
 //!
 //! The server helpers honour the explicit `Transport` they are given;
 //! the soak test uses `Transport::from_env()` so the CI matrix
-//! (`B64SIMD_TRANSPORT=epoll|threaded`) runs it against both.
+//! (`B64SIMD_TRANSPORT=epoll|uring|threaded`) runs it against each.
+//!
+//! The explicit uring legs (parity cells, soak/torn/pipelined/busy)
+//! run only when the host kernel passes the io_uring probe; otherwise
+//! they skip with a logged note — running them anyway would silently
+//! re-test the epoll fallback and claim uring coverage that never
+//! happened.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -67,18 +73,43 @@ fn want_fds(_n: u64) {
     }
 }
 
+/// True when the host kernel passes the io_uring probe. The uring legs
+/// skip (with a logged note naming the leg) otherwise: letting them run
+/// would exercise the epoll fallback while reporting uring coverage.
+fn uring_available(leg: &str) -> bool {
+    #[cfg(target_os = "linux")]
+    if b64simd::net::sys::uring_supported() {
+        return true;
+    }
+    eprintln!("transport: kernel lacks io_uring; skipping {leg}");
+    false
+}
+
+/// The probe's answer is logged (so CI records run-vs-skip) and stable
+/// across calls — serve-time fallback decisions and test skips must
+/// agree within a process.
+#[cfg(target_os = "linux")]
+#[test]
+fn uring_probe_is_logged_and_stable() {
+    let first = b64simd::net::sys::uring_supported();
+    println!("uring probe: kernel {} io_uring", if first { "supports" } else { "lacks" });
+    for _ in 0..4 {
+        assert_eq!(b64simd::net::sys::uring_supported(), first);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Soak: 512 concurrent connections (2× the old cap), every workload
 // kind interleaved, every response checked against the Engine oracle.
 // Run single-loop and sharded.
 // ---------------------------------------------------------------------
 
-fn soak_512_mixed_workloads(reactors: usize) {
+fn soak_512_mixed_workloads(transport: Transport, reactors: usize) {
     const CONNS: usize = 512;
     const THREADS: usize = 16;
     want_fds(CONNS as u64 * 2 + 512);
     let zero_copy = ServerConfig::default().zero_copy;
-    let (handle, router) = start_cfg(Transport::from_env(), CONNS + 32, reactors, zero_copy);
+    let (handle, router) = start_cfg(transport, CONNS + 32, reactors, zero_copy);
     let engine = Engine::get();
 
     std::thread::scope(|s| {
@@ -187,13 +218,21 @@ fn soak_512_mixed_workloads(reactors: usize) {
 
 #[test]
 fn soak_512_concurrent_connections_mixed_workloads() {
-    soak_512_mixed_workloads(1);
+    soak_512_mixed_workloads(Transport::from_env(), 1);
 }
 
 #[test]
 fn soak_512_concurrent_connections_mixed_workloads_sharded() {
     // 4 reactors: meaningful sharding without assuming a big CI host.
-    soak_512_mixed_workloads(4);
+    soak_512_mixed_workloads(Transport::from_env(), 4);
+}
+
+#[test]
+fn soak_512_uring_sharded() {
+    if !uring_available("uring soak") {
+        return;
+    }
+    soak_512_mixed_workloads(Transport::Uring, 4);
 }
 
 // ---------------------------------------------------------------------
@@ -263,13 +302,26 @@ fn transports_answer_byte_identical_frames() {
     // {1, 4}, and both reply paths (zero-copy sink vs Vec
     // serialization) must answer byte-identical frames. The threaded
     // transport (always Vec-serialized) is the reference.
-    let servers: Vec<(String, ServerHandle)> = vec![
+    let mut servers: Vec<(String, ServerHandle)> = vec![
         ("threaded".into(), start_cfg(Transport::Threaded, 64, 1, true).0),
         ("epoll r1 zerocopy".into(), start_cfg(Transport::Epoll, 64, 1, true).0),
         ("epoll r1 copy".into(), start_cfg(Transport::Epoll, 64, 1, false).0),
         ("epoll r4 zerocopy".into(), start_cfg(Transport::Epoll, 64, 4, true).0),
         ("epoll r4 copy".into(), start_cfg(Transport::Epoll, 64, 4, false).0),
     ];
+    // The uring cells of the acceptance matrix: reactors ∈ {1, 4} ×
+    // reply ∈ {zerocopy, vec}, byte-identical to the epoll oracle.
+    if uring_available("uring parity cells") {
+        for reactors in [1usize, 4] {
+            for zero_copy in [true, false] {
+                let name = format!(
+                    "uring r{reactors} {}",
+                    if zero_copy { "zerocopy" } else { "copy" }
+                );
+                servers.push((name, start_cfg(Transport::Uring, 64, reactors, zero_copy).0));
+            }
+        }
+    }
     let reference = raw_exchange(servers[0].1.addr, &requests);
     // And the wrapped stream really opened (its StreamBegin ack).
     let wrapped_begin = requests
@@ -299,13 +351,23 @@ fn transports_answer_byte_identical_frames() {
 #[test]
 fn torn_and_pipelined_delivery() {
     for reactors in [1usize, 4] {
-        torn_and_pipelined(reactors);
+        torn_and_pipelined(Transport::from_env(), reactors);
     }
 }
 
-fn torn_and_pipelined(reactors: usize) {
+#[test]
+fn torn_and_pipelined_delivery_uring() {
+    if !uring_available("uring torn/pipelined") {
+        return;
+    }
+    for reactors in [1usize, 4] {
+        torn_and_pipelined(Transport::Uring, reactors);
+    }
+}
+
+fn torn_and_pipelined(transport: Transport, reactors: usize) {
     let zero_copy = ServerConfig::default().zero_copy;
-    let (handle, _) = start_cfg(Transport::from_env(), 16, reactors, zero_copy);
+    let (handle, _) = start_cfg(transport, 16, reactors, zero_copy);
     let data = random_bytes(777, 0x7E42);
     let expect = BlockCodec::new(Alphabet::standard()).encode(&data);
 
@@ -369,12 +431,15 @@ fn torn_and_pipelined(reactors: usize) {
 }
 
 // ---------------------------------------------------------------------
-// Shedding: the busy frame on both transports.
+// Shedding: the busy frame on every transport.
 // ---------------------------------------------------------------------
 
 #[test]
-fn busy_frame_on_both_transports() {
-    for transport in [Transport::Epoll, Transport::Threaded] {
+fn busy_frame_on_every_transport() {
+    for transport in [Transport::Epoll, Transport::Uring, Transport::Threaded] {
+        if transport == Transport::Uring && !uring_available("uring busy frame") {
+            continue;
+        }
         let (handle, router) = start(transport, 1);
         let mut c1 = Client::connect(handle.addr).unwrap();
         c1.ping().unwrap();
