@@ -24,6 +24,13 @@
 //! syscalls, uring amortizes them into one `io_uring_enter` per loop
 //! pass, and the threaded transport pays scheduler wakeups.
 //!
+//! The `reactors=many, zerocopy` cell of each evented transport also
+//! reports an **http** row (printed as `epoll+http` / `uring+http`):
+//! the same verified encode traffic carried over the HTTP/1.1 gateway
+//! (keep-alive `POST /encode`) instead of the native frame protocol —
+//! the delta against the matching native row is the cost of HTTP
+//! parsing and response framing on the same reactor shards.
+//!
 //! `--test` (CI smoke): small counts and sub-second windows, checking
 //! that every cell runs and every response matches the oracle.
 
@@ -43,12 +50,14 @@ fn start(
     max_connections: usize,
     reactors: usize,
     zero_copy: bool,
+    http: bool,
 ) -> (ServerHandle, Arc<Router>) {
     let router = Arc::new(Router::new(native_factory(), RouterConfig::default()));
     let handle = serve(
         router.clone(),
         ServerConfig {
             addr: "127.0.0.1:0".parse().unwrap(),
+            http_addr: http.then(|| "127.0.0.1:0".parse().unwrap()),
             max_connections,
             transport,
             reactors,
@@ -172,6 +181,148 @@ fn throughput(
     (reqs / secs, wire / secs / 1e9, lat)
 }
 
+/// Minimal keep-alive HTTP/1.1 client for the gateway rows. Every
+/// buffered gateway reply (including 503 busy) is `Content-Length`
+/// framed, so that is the only framing this parser speaks.
+struct HttpClient {
+    stream: std::net::TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl HttpClient {
+    fn open(addr: std::net::SocketAddr) -> Self {
+        let stream = std::net::TcpStream::connect(addr).expect("http connect");
+        stream.set_nodelay(true).ok();
+        Self { stream, buf: Vec::new(), pos: 0 }
+    }
+
+    /// Connect and confirm admission via a verified health check,
+    /// retrying transient 503 busy refusals (same contract as
+    /// `connect_admitted`; a 503 closes, so each retry reconnects).
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let mut c = Self::open(addr);
+            match c.exchange("GET", "/healthz", b"") {
+                (200, body) => {
+                    assert_eq!(body, b"ok\n");
+                    return c;
+                }
+                (503, _) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                (status, _) => panic!("http admission answered {status}"),
+            }
+        }
+    }
+
+    fn fill(&mut self) {
+        use std::io::Read;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        let mut tmp = [0u8; 64 << 10];
+        let n = self.stream.read(&mut tmp).expect("http read");
+        assert!(n > 0, "gateway closed mid-response");
+        self.buf.extend_from_slice(&tmp[..n]);
+    }
+
+    /// One CRLF-terminated line, CRLF consumed.
+    fn line(&mut self) -> String {
+        loop {
+            if let Some(i) = self.buf[self.pos..].windows(2).position(|w| w == b"\r\n") {
+                let s = String::from_utf8_lossy(&self.buf[self.pos..self.pos + i]).into_owned();
+                self.pos += i + 2;
+                return s;
+            }
+            self.fill();
+        }
+    }
+
+    /// One request/response round trip.
+    fn exchange(&mut self, method: &str, target: &str, body: &[u8]) -> (u16, Vec<u8>) {
+        use std::io::Write;
+        let mut wire = format!("{method} {target} HTTP/1.1\r\n").into_bytes();
+        if method == "POST" {
+            wire.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+        }
+        wire.extend_from_slice(b"\r\n");
+        wire.extend_from_slice(body);
+        self.stream.write_all(&wire).expect("http send");
+        let status_line = self.line();
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+        let mut len = 0usize;
+        loop {
+            let line = self.line();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().expect("content-length");
+                }
+            }
+        }
+        while self.buf.len() - self.pos < len {
+            self.fill();
+        }
+        let reply = self.buf[self.pos..self.pos + len].to_vec();
+        self.pos += len;
+        (status, reply)
+    }
+}
+
+/// The held-connection verified-encode measurement of `throughput`,
+/// carried over the HTTP/1.1 gateway instead of the frame protocol.
+fn http_throughput(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    threads: usize,
+    payload_len: usize,
+    window: Duration,
+) -> (f64, f64, Percentiles) {
+    let payload = random_bytes(payload_len, payload_len as u64);
+    let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+    let requests = AtomicU64::new(0);
+    let all_micros: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let deadline = Instant::now() + window;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let share = conns / threads + usize::from(t < conns % threads);
+            let (payload, oracle, requests, all_micros) =
+                (&payload, &oracle, &requests, &all_micros);
+            s.spawn(move || {
+                let mut clients: Vec<HttpClient> =
+                    (0..share).map(|_| HttpClient::connect(addr)).collect();
+                let mut micros: Vec<u64> = Vec::with_capacity(4096);
+                let mut i = 0usize;
+                while Instant::now() < deadline && !clients.is_empty() {
+                    let n = clients.len();
+                    let t0 = Instant::now();
+                    let (status, enc) = clients[i % n].exchange("POST", "/encode", payload);
+                    micros.push(t0.elapsed().as_micros() as u64);
+                    assert_eq!(status, 200, "gateway error under load");
+                    assert_eq!(&enc, oracle, "http response mismatch under load");
+                    requests.fetch_add(1, Ordering::Relaxed);
+                    i += 1;
+                }
+                all_micros.lock().unwrap().append(&mut micros);
+            });
+        }
+    });
+    let reqs = requests.load(Ordering::Relaxed) as f64;
+    let secs = window.as_secs_f64();
+    let wire = reqs * (payload_len + oracle.len()) as f64;
+    let lat = percentiles(all_micros.into_inner().unwrap());
+    (reqs / secs, wire / secs / 1e9, lat)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     let (conns, threads, window) = if smoke {
@@ -223,7 +374,10 @@ fn main() {
     let mut json_rows: Vec<String> = Vec::new();
     for (transport, reactors, zero_copy) in cells {
         let reply = if zero_copy && transport != Transport::Threaded { "zerocopy" } else { "vec" };
-        let (handle, router) = start(transport, conns * 2 + 64, reactors, zero_copy);
+        // The gateway comparison row rides on one cell per evented
+        // transport: all shards, zero-copy replies, 64 KiB payloads.
+        let http_row = transport != Transport::Threaded && reactors == many && zero_copy;
+        let (handle, router) = start(transport, conns * 2 + 64, reactors, zero_copy, http_row);
         let rate = churn(handle.addr, threads, window);
         println!(
             "{:<10}{:>9}{:>10}{:>12}{:>12.0}{:>12}{:>12}{:>9}{:>9}{:>9}{:>9}",
@@ -240,7 +394,7 @@ fn main() {
             "-"
         );
         json_rows.push(format!(
-            "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"conns_per_sec\",\"value\":{:.1}}}",
+            "{{\"transport\":\"{}\",\"protocol\":\"native\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"conns_per_sec\",\"value\":{:.1}}}",
             transport.name(),
             reactors,
             reply,
@@ -263,7 +417,39 @@ fn main() {
                 lat.p999
             );
             json_rows.push(format!(
-                "{{\"transport\":\"{}\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"p999_us\":{}}}",
+                "{{\"transport\":\"{}\",\"protocol\":\"native\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"p999_us\":{}}}",
+                transport.name(),
+                reactors,
+                reply,
+                p,
+                rps,
+                gbps,
+                lat.p50,
+                lat.p95,
+                lat.p99,
+                lat.p999
+            ));
+        }
+        if http_row {
+            let http_addr = handle.http_addr.expect("gateway listener");
+            let p = 64 << 10;
+            let (rps, gbps, lat) = http_throughput(http_addr, conns, threads, p, window);
+            println!(
+                "{:<10}{:>9}{:>10}{:>12}{:>12}{:>12.0}{:>12.3}{:>9}{:>9}{:>9}{:>9}",
+                format!("{}+http", transport.name()),
+                reactors,
+                reply,
+                p,
+                "-",
+                rps,
+                gbps,
+                lat.p50,
+                lat.p95,
+                lat.p99,
+                lat.p999
+            );
+            json_rows.push(format!(
+                "{{\"transport\":\"{}\",\"protocol\":\"http\",\"reactors\":{},\"reply\":\"{}\",\"metric\":\"encode_gbps\",\"payload\":{},\"req_per_sec\":{:.1},\"value\":{:.4},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"p999_us\":{}}}",
                 transport.name(),
                 reactors,
                 reply,

@@ -10,8 +10,15 @@
 //! cargo run --release --example loadgen -- \
 //!     --connections 1000 --seconds 2 [--payload 1024] [--threads 8] \
 //!     [--transport epoll|uring|threaded] [--reactors N] [--zerocopy 0|1] \
-//!     [--addr HOST:PORT]
+//!     [--addr HOST:PORT] [--http]
 //! ```
+//!
+//! `--http` drives the HTTP/1.1 gateway instead of the native frame
+//! protocol: every connection is opened with a verified `GET /healthz`,
+//! held, then served verified `POST /encode` traffic, and the run ends
+//! with a `GET /metrics` scrape (printed, and asserted to render). The
+//! in-process server gets a gateway listener automatically; with
+//! `--addr`, point it at the *gateway* address.
 //!
 //! Without `--addr`, an in-process server is started on the chosen
 //! transport. The client side multiplexes `--connections` sockets over
@@ -46,6 +53,264 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+// ---------------------------------------------------------------------
+// HTTP gateway client (--http).
+// ---------------------------------------------------------------------
+
+/// Minimal keep-alive HTTP/1.1 client for the gateway mode.
+struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl HttpConn {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(Self { stream, buf: Vec::new(), pos: 0 })
+    }
+
+    fn fill(&mut self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        let mut tmp = [0u8; 64 << 10];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err("unexpected EOF".into()),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&tmp[..n]);
+                    return Ok(());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("read: {e}")),
+            }
+        }
+    }
+
+    /// One CRLF-terminated line, CRLF consumed.
+    fn line(&mut self) -> Result<String, String> {
+        loop {
+            if let Some(i) = self.buf[self.pos..].windows(2).position(|w| w == b"\r\n") {
+                let line = String::from_utf8_lossy(&self.buf[self.pos..self.pos + i]).into_owned();
+                self.pos += i + 2;
+                return Ok(line);
+            }
+            self.fill()?;
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, String> {
+        while self.buf.len() - self.pos < n {
+            self.fill()?;
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// One request/response exchange (POST bodies use Content-Length;
+    /// replies may be Content-Length or chunked).
+    fn exchange(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>), String> {
+        let mut wire = format!("{method} {target} HTTP/1.1\r\n").into_bytes();
+        if method == "POST" {
+            wire.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+        }
+        wire.extend_from_slice(b"\r\n");
+        wire.extend_from_slice(body);
+        self.stream.write_all(&wire).map_err(|e| format!("send: {e}"))?;
+
+        let status_line = self.line()?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+        let mut content_length = None;
+        let mut chunked = false;
+        loop {
+            let line = self.line()?;
+            if line.is_empty() {
+                break;
+            }
+            let Some((k, v)) = line.split_once(':') else { continue };
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse::<usize>().ok();
+            } else if k.eq_ignore_ascii_case("transfer-encoding")
+                && v.eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+        let mut reply = Vec::new();
+        if chunked {
+            loop {
+                let line = self.line()?;
+                let size = usize::from_str_radix(line.trim(), 16)
+                    .map_err(|_| format!("bad chunk size {line:?}"))?;
+                if size == 0 {
+                    self.line()?; // empty terminator line
+                    break;
+                }
+                reply.extend_from_slice(&self.take(size)?);
+                self.take(2)?; // chunk-data CRLF
+            }
+        } else if let Some(n) = content_length {
+            reply = self.take(n)?;
+        }
+        Ok((status, reply))
+    }
+}
+
+/// The gateway load scenario: verified health checks to open, verified
+/// encodes to drive, a metrics scrape to close. Returns the exit code.
+fn run_http(
+    addr: std::net::SocketAddr,
+    connections: usize,
+    threads: usize,
+    seconds: f64,
+    payload: &[u8],
+    oracle: &[u8],
+    router: Option<&Router>,
+) -> i32 {
+    println!("loadgen: HTTP gateway mode, target={addr}");
+
+    // Phase 1: open every connection with a verified health check, hold.
+    let refused = AtomicU64::new(0);
+    let io_failed = AtomicU64::new(0);
+    let open_start = Instant::now();
+    let mut pools: Vec<Vec<HttpConn>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let refused = &refused;
+            let io_failed = &io_failed;
+            let share = connections / threads + usize::from(t < connections % threads);
+            handles.push(s.spawn(move || {
+                let mut conns = Vec::with_capacity(share);
+                for _ in 0..share {
+                    match HttpConn::connect(addr) {
+                        Ok(mut c) => match c.exchange("GET", "/healthz", b"") {
+                            Ok((200, body)) if body == b"ok\n" => conns.push(c),
+                            Ok((503, _)) => {
+                                refused.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(_) | Err(_) => {
+                                io_failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => {
+                            io_failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                conns
+            }));
+        }
+        for h in handles {
+            pools.push(h.join().unwrap());
+        }
+    });
+    let opened: usize = pools.iter().map(|p| p.len()).sum();
+    let open_secs = open_start.elapsed().as_secs_f64();
+
+    // Phase 2: verified POST /encode round-robined over every socket.
+    let requests = AtomicU64::new(0);
+    let mismatches = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    std::thread::scope(|s| {
+        for pool in pools.iter_mut() {
+            let requests = &requests;
+            let mismatches = &mismatches;
+            let errors = &errors;
+            s.spawn(move || {
+                let mut i = 0usize;
+                let mut first_pass_done = pool.is_empty();
+                while !first_pass_done || Instant::now() < deadline {
+                    let n = pool.len();
+                    if n == 0 {
+                        break;
+                    }
+                    match pool[i % n].exchange("POST", "/encode", payload) {
+                        Ok((200, body)) => {
+                            requests.fetch_add(1, Ordering::Relaxed);
+                            if body != oracle {
+                                mismatches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Ok(_) | Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    i += 1;
+                    if i >= n {
+                        first_pass_done = true;
+                    }
+                }
+            });
+        }
+    });
+
+    // Close with a metrics scrape: the ops surface must render.
+    let mut scrape_ok = false;
+    let scrape = HttpConn::connect(addr)
+        .map_err(|e| e.to_string())
+        .and_then(|mut c| c.exchange("GET", "/metrics", b""));
+    match scrape {
+        Ok((200, body)) => {
+            let text = String::from_utf8_lossy(&body);
+            scrape_ok = text.contains("b64simd_conns_open")
+                && text.contains("b64simd_http_requests_total");
+            for line in text.lines().filter(|l| {
+                l.starts_with("b64simd_http_requests_total")
+                    || l.starts_with("b64simd_conns_open")
+                    || l.starts_with("b64simd_rate_limited_total")
+                    || l.starts_with("b64simd_timeouts_total")
+            }) {
+                println!("metrics: {line}");
+            }
+        }
+        Ok((status, _)) => eprintln!("loadgen: metrics scrape answered {status}"),
+        Err(e) => eprintln!("loadgen: metrics scrape failed: {e}"),
+    }
+
+    let reqs = requests.load(Ordering::Relaxed);
+    let errs = errors.load(Ordering::Relaxed);
+    let miss = mismatches.load(Ordering::Relaxed);
+    let opened_of_asked = format!("{opened}/{connections}");
+    println!("{:<22}{:>14}", "connections opened", opened_of_asked);
+    println!("{:<22}{:>14}", "refused (503 busy)", refused.load(Ordering::Relaxed));
+    println!("{:<22}{:>14}", "connect failures", io_failed.load(Ordering::Relaxed));
+    println!("{:<22}{:>14.0}", "conns/sec (open)", opened as f64 / open_secs.max(1e-9));
+    println!("{:<22}{:>14}", "requests answered", reqs);
+    println!("{:<22}{:>14}", "request errors", errs);
+    println!("{:<22}{:>14}", "response mismatches", miss);
+    println!("{:<22}{:>14.0}", "requests/sec", reqs as f64 / seconds.max(1e-9));
+    if let Some(router) = router {
+        router.flush();
+        println!("server: {}", router.metrics().report());
+    }
+
+    let complete =
+        opened == connections && errs == 0 && miss == 0 && reqs >= opened as u64 && scrape_ok;
+    if !complete {
+        eprintln!("loadgen: FAILED (dropped/unanswered/mismatched HTTP traffic above)");
+        return 1;
+    }
+    println!("loadgen: OK — all {connections} gateway connections served verified traffic");
+    0
 }
 
 // ---------------------------------------------------------------------
@@ -297,6 +562,8 @@ fn main() {
         .map(|v| ServerConfig::parse_switch(&v).expect("--zerocopy 0|1"))
         .unwrap_or(defaults.zero_copy);
     let chaos = flag(&args, "--chaos");
+    // `--http` is a bare switch (`flag` expects a value), so scan for it.
+    let http_mode = args.iter().any(|a| a == "--http");
 
     // Client + (in-process) server sockets both live in this process;
     // the common 1024-fd soft limit dies long before 1000 connections.
@@ -313,6 +580,7 @@ fn main() {
     }
 
     let mut _server = None;
+    let mut http_target = None;
     let (addr, router) = match flag(&args, "--addr") {
         Some(a) => (a.parse().expect("--addr"), None),
         None => {
@@ -332,8 +600,12 @@ fn main() {
                 config.idle_timeout = Duration::from_secs(5);
                 config.write_timeout = Duration::from_secs(2);
             }
+            if http_mode {
+                config.http_addr = Some("127.0.0.1:0".parse().unwrap());
+            }
             let handle = serve(router.clone(), config).expect("bind in-process server");
             let addr = handle.addr;
+            http_target = handle.http_addr;
             _server = Some(handle);
             (addr, Some(router))
         }
@@ -349,6 +621,18 @@ fn main() {
 
     let payload = random_bytes(payload_len, 0x10AD);
     let oracle = BlockCodec::new(Alphabet::standard()).encode(&payload);
+
+    if http_mode {
+        // With `--addr` the caller points us straight at the gateway;
+        // in-process runs got a gateway listener above.
+        let target = http_target.unwrap_or(addr);
+        let code =
+            run_http(target, connections, threads, seconds, &payload, &oracle, router.as_deref());
+        if let Some(handle) = _server.take() {
+            handle.shutdown();
+        }
+        std::process::exit(code);
+    }
 
     println!(
         "loadgen: {connections} connections x {threads} client threads, {payload_len}B payloads, transport={} reactors={reactors} reply={}, target={addr}",

@@ -16,6 +16,22 @@ use super::{decoded_len_upper, Alphabet};
 /// Maximum encoded line length required by RFC 2045 §6.8.
 pub const MIME_LINE_LEN: usize = 76;
 
+/// A wrap line length outside the accepted domain (positive multiple
+/// of 4) was requested via [`MimeCodec::with_line_len`]. Carries the
+/// rejected length. This used to be an `assert!` — a typed error keeps
+/// a hostile or buggy caller (e.g. a wire request carrying `wrap=1`)
+/// from panicking the thread that builds the codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InvalidLineLen(pub usize);
+
+impl std::fmt::Display for InvalidLineLen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid wrap line length {} (want a positive multiple of 4)", self.0)
+    }
+}
+
+impl std::error::Error for InvalidLineLen {}
+
 /// MIME base64 codec: wraps at `line_len`, skips CR/LF (and optionally
 /// all whitespace) on decode.
 pub struct MimeCodec {
@@ -34,11 +50,16 @@ impl MimeCodec {
         }
     }
 
-    /// Override the wrap line length (positive multiple of 4).
-    pub fn with_line_len(mut self, line_len: usize) -> Self {
-        assert!(line_len >= 4 && line_len % 4 == 0, "line length must be a positive multiple of 4");
+    /// Override the wrap line length (positive multiple of 4). Lengths
+    /// outside that domain are rejected with a typed error rather than
+    /// a panic, so untrusted wrap values can be validated by building
+    /// the codec.
+    pub fn with_line_len(mut self, line_len: usize) -> Result<Self, InvalidLineLen> {
+        if line_len < 4 || line_len % 4 != 0 {
+            return Err(InvalidLineLen(line_len));
+        }
         self.line_len = line_len;
-        self
+        Ok(self)
     }
 
     /// Also skip space/tab on decode (lenient MIME bodies).
@@ -153,15 +174,25 @@ mod tests {
 
     #[test]
     fn custom_line_len() {
-        let c = MimeCodec::new(Alphabet::standard()).with_line_len(8);
+        let c = MimeCodec::new(Alphabet::standard()).with_line_len(8).unwrap();
         let enc = c.encode(&[0u8; 12]); // 16 chars -> two 8-char lines
         assert_eq!(enc, b"AAAAAAAA\r\nAAAAAAAA");
     }
 
     #[test]
-    #[should_panic]
-    fn bad_line_len_panics() {
-        MimeCodec::new(Alphabet::standard()).with_line_len(7);
+    fn bad_line_len_is_a_typed_error_not_a_panic() {
+        // Regression: these were `assert!` panics, which let a hostile
+        // wrap value kill the calling thread.
+        assert_eq!(
+            MimeCodec::new(Alphabet::standard()).with_line_len(7).err(),
+            Some(InvalidLineLen(7))
+        );
+        assert_eq!(
+            MimeCodec::new(Alphabet::standard()).with_line_len(0).err(),
+            Some(InvalidLineLen(0))
+        );
+        let msg = InvalidLineLen(1).to_string();
+        assert!(msg.contains("invalid wrap line length 1"), "{msg}");
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! the PJRT workers; requests beyond the configured limits are rejected
 //! up front (load shedding) rather than queued into oblivion.
 
+use std::collections::HashMap;
+use std::net::IpAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Why admission was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -133,6 +136,82 @@ impl Drop for ConnPermit {
     }
 }
 
+/// Eviction threshold for the rate-limiter's per-client table: once it
+/// grows past this many entries, fully-replenished buckets (clients that
+/// have been quiet for at least a burst window) are dropped.
+const RATE_TABLE_HIGH_WATER: usize = 4096;
+
+/// Per-client token-bucket rate limiter for the HTTP gateway.
+///
+/// One bucket per peer IP: capacity `burst = max(rate, 1)` tokens,
+/// refilled continuously at `rate` tokens/second. Each admitted request
+/// spends one token; an empty bucket means `429 Too Many Requests`.
+/// Shared across all reactor shards (a client's connections may land on
+/// different shards under `SO_REUSEPORT`), so the table is a plain
+/// mutex — the critical section is a couple of float ops and the
+/// limiter is only consulted once per parsed request head, not per
+/// byte.
+pub struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<IpAddr, (f64, Instant)>>,
+}
+
+impl RateLimiter {
+    /// A limiter admitting `rate` requests/second (burst `max(rate, 1)`)
+    /// per client IP, or `None` when `rate <= 0` (limiting disabled) so
+    /// callers can hold an `Option<Arc<RateLimiter>>` and skip the
+    /// check entirely in the unlimited configuration.
+    pub fn new(rate: f64) -> Option<Arc<Self>> {
+        if rate.is_nan() || rate <= 0.0 {
+            return None;
+        }
+        Some(Arc::new(Self { rate, burst: rate.max(1.0), buckets: Mutex::new(HashMap::new()) }))
+    }
+
+    /// Spend one token from `ip`'s bucket. `false` means the client is
+    /// over its rate and the request should be refused with `429`.
+    pub fn allow(&self, ip: IpAddr) -> bool {
+        self.allow_at(ip, Instant::now())
+    }
+
+    /// [`Self::allow`] with an explicit clock, for deterministic tests.
+    pub fn allow_at(&self, ip: IpAddr, now: Instant) -> bool {
+        let mut buckets = lock_clean(&self.buckets);
+        if buckets.len() > RATE_TABLE_HIGH_WATER && !buckets.contains_key(&ip) {
+            let (rate, burst) = (self.rate, self.burst);
+            buckets.retain(|_, (tokens, last)| {
+                let refilled = *tokens + now.saturating_duration_since(*last).as_secs_f64() * rate;
+                refilled < burst
+            });
+        }
+        let (tokens, last) = buckets.entry(ip).or_insert((self.burst, now));
+        let elapsed = now.saturating_duration_since(*last).as_secs_f64();
+        *tokens = (*tokens + elapsed * self.rate).min(self.burst);
+        *last = now;
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Client buckets currently tracked (for tests and introspection).
+    pub fn tracked(&self) -> usize {
+        lock_clean(&self.buckets).len()
+    }
+}
+
+/// Lock a mutex, shrugging off poisoning: the guarded state here is
+/// always internally consistent between field writes.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +254,49 @@ mod tests {
         drop(p1);
         assert_eq!(l.open(), 1);
         assert!(l.try_acquire().is_some());
+    }
+
+    #[test]
+    fn rate_limiter_disabled_at_zero_or_negative() {
+        assert!(RateLimiter::new(0.0).is_none());
+        assert!(RateLimiter::new(-3.0).is_none());
+        assert!(RateLimiter::new(f64::NAN).is_none());
+        assert!(RateLimiter::new(5.0).is_some());
+    }
+
+    #[test]
+    fn rate_limiter_burst_then_refill() {
+        use std::net::Ipv4Addr;
+        use std::time::{Duration, Instant};
+        let rl = RateLimiter::new(2.0).unwrap();
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let t0 = Instant::now();
+        // Burst of 2, then dry.
+        assert!(rl.allow_at(ip, t0));
+        assert!(rl.allow_at(ip, t0));
+        assert!(!rl.allow_at(ip, t0));
+        // Half a second at 2 req/s refills one token.
+        let t1 = t0 + Duration::from_millis(500);
+        assert!(rl.allow_at(ip, t1));
+        assert!(!rl.allow_at(ip, t1));
+        // A different client has its own bucket.
+        let other = IpAddr::V4(Ipv4Addr::new(10, 0, 0, 1));
+        assert!(rl.allow_at(other, t1));
+        assert_eq!(rl.tracked(), 2);
+    }
+
+    #[test]
+    fn rate_limiter_tokens_cap_at_burst() {
+        use std::net::Ipv4Addr;
+        use std::time::{Duration, Instant};
+        let rl = RateLimiter::new(1.0).unwrap();
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let t0 = Instant::now();
+        assert!(rl.allow_at(ip, t0));
+        // A long quiet period must not bank more than `burst` tokens.
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(rl.allow_at(ip, t1));
+        assert!(!rl.allow_at(ip, t1), "burst is 1, not 3600");
     }
 
     #[test]

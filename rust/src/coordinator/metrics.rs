@@ -132,6 +132,10 @@ pub struct Metrics {
     /// Request-handler panics contained to one connection instead of
     /// wedging a worker or shard.
     pub worker_panics: AtomicU64,
+    /// HTTP gateway requests dispatched (all routes, both body modes).
+    pub http_requests: AtomicU64,
+    /// HTTP requests refused by the per-client token bucket (`429`).
+    pub rate_limited: AtomicU64,
     /// Per-shard breakdown (epoll reactors; empty on the threaded
     /// transport). See [`ShardMetrics`].
     shards: Mutex<Vec<Arc<ShardMetrics>>>,
@@ -178,16 +182,23 @@ impl Metrics {
         real as f64 / (real + padded) as f64
     }
 
-    /// Gauge decrement (connection close).
+    /// Gauge decrement (connection close), saturating at 0. A raw
+    /// `fetch_sub` here let a double-decrement on any close path (e.g.
+    /// a fault-injected teardown racing a drain) wrap the gauge to
+    /// ~2^64 and poison the report and the soak tests' leak
+    /// assertions; clamping keeps a double-close a ±1 accounting blip
+    /// instead of a catastrophic one.
     pub fn dec(counter: &AtomicU64, v: u64) {
-        counter.fetch_sub(v, Ordering::Relaxed);
+        let _ = counter.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some(cur.saturating_sub(v))
+        });
     }
 
     /// One-line human-readable snapshot. Sharded transports append a
     /// per-shard `accepted/open/frames-in/frames-out` breakdown.
     pub fn report(&self) -> String {
         let mut line = format!(
-            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} direct={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B timeouts={} drains={} panics={} faults={} p50={}us p99={}us mean={:.0}us",
+            "req={} resp={} err={} rejected={} in={}B out={}B batches={} rows={} pad_rows={} eff={:.1}% inline={} direct={} conns={}acc/{}ref/{}open frames={}in/{}out net={}B/{}B timeouts={} drains={} panics={} faults={} http={} ratelimited={} p50={}us p99={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -211,6 +222,8 @@ impl Metrics {
             self.drains.load(Ordering::Relaxed),
             self.worker_panics.load(Ordering::Relaxed),
             self.faults_injected.load(Ordering::Relaxed),
+            self.http_requests.load(Ordering::Relaxed),
+            self.rate_limited.load(Ordering::Relaxed),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.latency.mean_us(),
@@ -234,6 +247,64 @@ impl Metrics {
             line.push(']');
         }
         line
+    }
+
+    /// Plain-text exposition of every counter, one `name value` line
+    /// per metric in the Prometheus text style (`b64simd_` prefix;
+    /// gauges unsuffixed, monotonic counters `_total`). Registered
+    /// reactor shards contribute labelled `b64simd_shard_*` rows whose
+    /// per-metric sums equal the corresponding global roll-up. Served
+    /// by the HTTP gateway's `GET /metrics`.
+    pub fn render_text(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        let counters: [(&str, u64); 23] = [
+            ("requests_total", self.requests.load(Ordering::Relaxed)),
+            ("responses_total", self.responses.load(Ordering::Relaxed)),
+            ("errors_total", self.errors.load(Ordering::Relaxed)),
+            ("rejected_total", self.rejected.load(Ordering::Relaxed)),
+            ("bytes_in_total", self.bytes_in.load(Ordering::Relaxed)),
+            ("bytes_out_total", self.bytes_out.load(Ordering::Relaxed)),
+            ("batches_total", self.batches.load(Ordering::Relaxed)),
+            ("rows_total", self.rows.load(Ordering::Relaxed)),
+            ("padded_rows_total", self.padded_rows.load(Ordering::Relaxed)),
+            ("inline_requests_total", self.inline_requests.load(Ordering::Relaxed)),
+            ("direct_requests_total", self.direct_requests.load(Ordering::Relaxed)),
+            ("conns_accepted_total", self.conns_accepted.load(Ordering::Relaxed)),
+            ("conns_refused_total", self.conns_refused.load(Ordering::Relaxed)),
+            ("conns_open", self.conns_open.load(Ordering::Relaxed)),
+            ("frames_in_total", self.frames_in.load(Ordering::Relaxed)),
+            ("frames_out_total", self.frames_out.load(Ordering::Relaxed)),
+            ("net_bytes_in_total", self.net_bytes_in.load(Ordering::Relaxed)),
+            ("net_bytes_out_total", self.net_bytes_out.load(Ordering::Relaxed)),
+            ("timeouts_total", self.timeouts.load(Ordering::Relaxed)),
+            ("faults_injected_total", self.faults_injected.load(Ordering::Relaxed)),
+            ("drains_total", self.drains.load(Ordering::Relaxed)),
+            ("worker_panics_total", self.worker_panics.load(Ordering::Relaxed)),
+            ("http_requests_total", self.http_requests.load(Ordering::Relaxed)),
+        ];
+        for (name, value) in counters {
+            out.push_str(&format!("b64simd_{name} {value}\n"));
+        }
+        out.push_str(&format!(
+            "b64simd_rate_limited_total {}\n",
+            self.rate_limited.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!("b64simd_latency_p50_us {}\n", self.latency.quantile_us(0.5)));
+        out.push_str(&format!("b64simd_latency_p99_us {}\n", self.latency.quantile_us(0.99)));
+        out.push_str(&format!("b64simd_latency_mean_us {:.0}\n", self.latency.mean_us()));
+        let shards = self.shards.lock().unwrap();
+        for (i, s) in shards.iter().enumerate() {
+            let rows: [(&str, u64); 4] = [
+                ("conns_accepted_total", s.conns_accepted.load(Ordering::Relaxed)),
+                ("conns_open", s.conns_open.load(Ordering::Relaxed)),
+                ("frames_in_total", s.frames_in.load(Ordering::Relaxed)),
+                ("frames_out_total", s.frames_out.load(Ordering::Relaxed)),
+            ];
+            for (name, value) in rows {
+                out.push_str(&format!("b64simd_shard_{name}{{shard=\"{i}\"}} {value}\n"));
+            }
+        }
+        out
     }
 }
 
@@ -288,6 +359,39 @@ mod tests {
         Metrics::inc(&m.worker_panics, 3);
         let report = m.report();
         assert!(report.contains("timeouts=2 drains=1 panics=3 faults=0"), "{report}");
+    }
+
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        // Regression: a double-decrement (double-close on a fault path)
+        // used to wrap the gauge to ~2^64 via raw fetch_sub.
+        let m = Metrics::default();
+        Metrics::inc(&m.conns_open, 1);
+        Metrics::dec(&m.conns_open, 1);
+        Metrics::dec(&m.conns_open, 1);
+        assert_eq!(m.conns_open.load(Ordering::Relaxed), 0);
+        Metrics::dec(&m.conns_open, 5);
+        assert_eq!(m.conns_open.load(Ordering::Relaxed), 0);
+        assert!(m.report().contains("conns=0acc/0ref/0open"), "{}", m.report());
+    }
+
+    #[test]
+    fn render_text_contains_globals_and_shards() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests, 4);
+        Metrics::inc(&m.http_requests, 2);
+        Metrics::inc(&m.conns_open, 3);
+        let s0 = m.register_shard();
+        let s1 = m.register_shard();
+        Metrics::inc(&s0.conns_open, 2);
+        Metrics::inc(&s1.conns_open, 1);
+        let text = m.render_text();
+        assert!(text.contains("b64simd_requests_total 4\n"), "{text}");
+        assert!(text.contains("b64simd_http_requests_total 2\n"), "{text}");
+        assert!(text.contains("b64simd_conns_open 3\n"), "{text}");
+        assert!(text.contains("b64simd_rate_limited_total 0\n"), "{text}");
+        assert!(text.contains("b64simd_shard_conns_open{shard=\"0\"} 2\n"), "{text}");
+        assert!(text.contains("b64simd_shard_conns_open{shard=\"1\"} 1\n"), "{text}");
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! b64simd decode [--alphabet NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
 //!                [--transport epoll|threaded] [--net-workers N] [--max-conns N]
-//!                [--reactors N] [--zerocopy 0|1]
+//!                [--reactors N] [--zerocopy 0|1] [--http HOST:PORT]
+//!                [--ratelimit REQS_PER_SEC]
 //! b64simd selftest [--artifacts DIR]
 //! b64simd model  [--figure 4 | --hardware]
 //! b64simd opcount
@@ -162,6 +163,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         server_config.zero_copy = ServerConfig::parse_switch(v)
             .ok_or_else(|| anyhow::anyhow!("unknown zerocopy value '{v}' (0|1)"))?;
     }
+    if let Some(h) = args.get("http") {
+        server_config.http_addr = Some(h.parse().map_err(|e| {
+            anyhow::anyhow!("invalid --http address '{h}': {e} (want e.g. 127.0.0.1:8040)")
+        })?);
+    }
+    if let Some(r) = args.get("ratelimit") {
+        let rate: f64 = r.parse()?;
+        anyhow::ensure!(
+            rate.is_finite() && rate >= 0.0,
+            "invalid --ratelimit '{r}' (want requests/sec, 0 disables)"
+        );
+        server_config.rate_limit = rate;
+    }
     let transport = server_config.transport;
     let (reactors, zero_copy) = (server_config.reactors, server_config.zero_copy);
     let handle = serve(router.clone(), server_config)?;
@@ -171,6 +185,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         transport.name(),
         if zero_copy { "zerocopy" } else { "vec" }
     );
+    if let Some(http) = handle.http_addr {
+        eprintln!("b64simd http gateway on {http}");
+    }
     // SIGTERM/SIGINT request a graceful drain: stop accepting, answer
     // everything already parsed off the wire, flush, then exit 0 with a
     // final metrics report. (Non-Linux hosts keep the run-forever loop;

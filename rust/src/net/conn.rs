@@ -25,6 +25,7 @@ use std::time::Instant;
 
 use super::buffer::BufferPool;
 use super::frame::{FrameMachine, WriteQueue};
+use super::http::{HttpMachine, HttpWork};
 use crate::coordinator::backpressure::ConnPermit;
 use crate::coordinator::state::SessionState;
 use crate::server::proto::{Message, ProtoError};
@@ -39,11 +40,58 @@ pub(crate) const INBOX_CAP: usize = 64;
 /// sends but never reads cannot balloon the write queue).
 pub(crate) const WRITE_HIGH_WATER: usize = 4 << 20;
 
+/// The per-connection request parser: which wire protocol this socket
+/// speaks. Decided once at accept time by the listener's
+/// [`super::http::Protocol`] tag and fixed for the connection's life;
+/// everything downstream of parsing (inbox, workers, write queue,
+/// deadlines) is protocol-agnostic.
+pub(crate) enum Machine {
+    /// Length-prefixed native frames.
+    Native(FrameMachine),
+    /// Incremental HTTP/1.1 requests (boxed: the HTTP parser state is
+    /// much larger than `FrameMachine`, and native is the common case).
+    Http(Box<HttpMachine>),
+}
+
+impl Machine {
+    /// Feed raw socket bytes to the parser.
+    pub fn push(&mut self, data: &[u8]) {
+        match self {
+            Machine::Native(m) => m.push(data),
+            Machine::Http(m) => m.push(data),
+        }
+    }
+
+    /// Bytes accumulated but not yet consumed as complete requests
+    /// (drives the read-stall deadline at frame granularity).
+    pub fn buffered(&self) -> usize {
+        match self {
+            Machine::Native(m) => m.buffered(),
+            Machine::Http(m) => m.buffered(),
+        }
+    }
+
+    /// Recover the accumulation buffer for the pool.
+    pub fn into_buf(self) -> Vec<u8> {
+        match self {
+            Machine::Native(m) => m.into_buf(),
+            Machine::Http(m) => m.into_buf(),
+        }
+    }
+}
+
+/// One parsed unit of work awaiting dispatch: a native request frame or
+/// an HTTP job. Workers branch on this to pick the reply encoding.
+pub(crate) enum Job {
+    Native(Message),
+    Http(HttpWork),
+}
+
 pub(crate) struct Conn {
     pub stream: TcpStream,
-    pub frames: FrameMachine,
+    pub machine: Machine,
     pub write: WriteQueue,
-    pub inbox: VecDeque<Message>,
+    pub inbox: VecDeque<Job>,
     /// Stream-session state; locked by at most one worker at a time
     /// (the single in-flight request) and never by the loop.
     pub session: Arc<Mutex<SessionState>>,
@@ -86,11 +134,12 @@ impl Conn {
         max_streams: usize,
         pool: &mut BufferPool,
         permit: ConnPermit,
+        machine: Machine,
     ) -> Conn {
         let now = Instant::now();
         Conn {
             stream,
-            frames: FrameMachine::new(pool.get()),
+            machine,
             write: WriteQueue::new(pool.get()),
             inbox: VecDeque::new(),
             session: Arc::new(Mutex::new(SessionState::new(max_streams))),
@@ -108,21 +157,35 @@ impl Conn {
         }
     }
 
-    /// Peel buffered frames into the inbox (up to [`INBOX_CAP`]);
-    /// returns how many were parsed. Protocol errors are fatal for the
-    /// connection.
+    /// Peel buffered requests into the inbox (up to [`INBOX_CAP`]);
+    /// returns how many were parsed. Native protocol errors are fatal
+    /// for the connection; the HTTP machine never errors here — it
+    /// reports malformed input as an in-band error-response job and
+    /// poisons itself.
     pub fn parse_into_inbox(&mut self) -> Result<usize, ProtoError> {
         let mut parsed = 0;
         while self.inbox.len() < INBOX_CAP {
-            match self.frames.next_frame()? {
-                Some(msg) => {
-                    self.inbox.push_back(msg);
+            let job = match &mut self.machine {
+                Machine::Native(m) => m.next_frame()?.map(Job::Native),
+                Machine::Http(m) => m
+                    .next_job()
+                    .map(|job| Job::Http(HttpWork { job, draining: false })),
+            };
+            match job {
+                Some(job) => {
+                    self.inbox.push_back(job);
                     parsed += 1;
                 }
                 None => break,
             }
         }
         Ok(parsed)
+    }
+
+    /// Whether this connection speaks HTTP (controls the encoding of
+    /// loop-originated notices: timeout and refusal responses).
+    pub fn is_http(&self) -> bool {
+        matches!(self.machine, Machine::Http(_))
     }
 
     /// Whether the loop should issue another `read` for this connection.
@@ -146,7 +209,7 @@ impl Conn {
     /// Return pooled buffers; the socket and the cap permit release on
     /// drop.
     pub fn teardown(self, pool: &mut BufferPool) {
-        pool.put(self.frames.into_buf());
+        pool.put(self.machine.into_buf());
         pool.put(self.write.into_buf());
     }
 }

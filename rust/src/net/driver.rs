@@ -49,7 +49,8 @@
 //! poison-tolerant, and the worker survives to serve other
 //! connections.
 
-use std::net::{TcpListener, TcpStream};
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -58,14 +59,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::buffer::BufferPool;
-use super::conn::Conn;
+use super::conn::{Conn, Job, Machine};
 use super::faults;
-use super::frame::ReplySink;
+use super::frame::{FrameMachine, ReplySink};
+use super::http::{busy_response, panic_response, respond, timeout_response, HttpMachine, Protocol};
 use super::sys::{
     Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
 use super::timer::TimerWheel;
-use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::state::SessionState;
 use crate::coordinator::{Metrics, Router};
@@ -111,12 +113,31 @@ pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Peer address for the HTTP rate limiter's per-client buckets. A
+/// socket that cannot report one (already reset) falls into a shared
+/// bucket rather than being refused outright.
+pub(crate) fn peer_ip(stream: &TcpStream) -> IpAddr {
+    stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or(IpAddr::V4(Ipv4Addr::UNSPECIFIED))
+}
+
+/// Over-cap refusal on an HTTP listener: a one-shot `503` instead of
+/// the native busy frame. Best effort, like its native twin — the
+/// socket closes on drop either way.
+pub(crate) fn refuse_busy_http(mut stream: TcpStream, limiter: &ConnLimiter) {
+    let reply = busy_response(limiter.open(), limiter.max());
+    let _ = stream.write_all(&reply);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
 /// One request headed for the worker pool. Carries its shard's
 /// completion queue and eventfd so the shared workers can route the
 /// reply back to whichever reactor owns the connection.
 pub(crate) struct WorkItem {
     pub(crate) token: u64,
-    pub(crate) msg: Message,
+    pub(crate) job: Job,
     pub(crate) session: Arc<Mutex<SessionState>>,
     pub(crate) done: Arc<Mutex<Vec<Completion>>>,
     pub(crate) wake: Arc<EventFd>,
@@ -152,11 +173,14 @@ pub(crate) struct NetServer {
 pub(crate) fn spawn(
     router: Arc<Router>,
     config: &ServerConfig,
-    listeners: Vec<TcpListener>,
+    listeners: Vec<(TcpListener, Protocol)>,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
 ) -> std::io::Result<NetServer> {
     let limiter = ConnLimiter::new(config.max_connections);
+    // One token table across every shard: a client hashing onto a
+    // different reactor must not get a fresh rate budget.
+    let rate = RateLimiter::new(config.rate_limit);
     let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
     let work_rx = Arc::new(Mutex::new(work_rx));
     let metrics = router.metrics().clone();
@@ -168,7 +192,10 @@ pub(crate) fn spawn(
     let mut wakes: Vec<Arc<EventFd>> = Vec::new();
     let mut built = Ok(());
     for (shard_id, listener) in listeners.into_iter().enumerate() {
-        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop, &drain) {
+        let spawned = spawn_shard(
+            shard_id, listener, config, &metrics, &limiter, &rate, &work_tx, &stop, &drain,
+        );
+        match spawned {
             Ok((thread, wake)) => {
                 threads.push(thread);
                 wakes.push(wake);
@@ -220,14 +247,16 @@ pub(crate) fn spawn(
 #[allow(clippy::too_many_arguments)]
 fn spawn_shard(
     shard_id: usize,
-    listener: TcpListener,
+    listener: (TcpListener, Protocol),
     config: &ServerConfig,
     metrics: &Arc<Metrics>,
     limiter: &Arc<ConnLimiter>,
+    rate: &Option<Arc<RateLimiter>>,
     work_tx: &mpsc::Sender<WorkItem>,
     stop: &Arc<AtomicBool>,
     drain: &Arc<AtomicBool>,
 ) -> std::io::Result<(JoinHandle<()>, Arc<EventFd>)> {
+    let (listener, protocol) = listener;
     listener.set_nonblocking(true)?;
     let epoll = Epoll::new()?;
     let wake = Arc::new(EventFd::new()?);
@@ -236,6 +265,8 @@ fn spawn_shard(
     let lp = Loop {
         epoll,
         listener: Some(listener),
+        protocol,
+        rate: rate.clone(),
         wake: wake.clone(),
         metrics: metrics.clone(),
         shard: metrics.register_shard(),
@@ -281,39 +312,63 @@ fn spawn_shard(
 /// handler costs exactly its own connection — the peer gets a typed
 /// error reply, the connection closes — never the worker thread (and
 /// with it a share of every shard's dispatch capacity).
-pub(crate) fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>, router: Arc<Router>, zero_copy: bool) {
+pub(crate) fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
+    router: Arc<Router>,
+    zero_copy: bool,
+) {
     loop {
         // Holding the lock across `recv` just serializes the hand-off,
         // not the work: the lock drops as soon as an item arrives.
         let item = { lock_clean(&rx).recv() };
-        let Ok(WorkItem { token, msg, session, done, wake, buf }) = item else { break };
-        let id = msg.request_id();
-        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            if zero_copy {
-                let mut sink = ReplySink::with_buf(buf);
-                let framed = {
-                    let mut session = lock_clean(&session);
-                    dispatch_into(msg, &router, &mut session, &mut sink)
-                };
-                framed.ok().map(|()| sink.into_buf())
-            } else {
-                drop(buf); // empty on this path
-                let reply = {
-                    let mut session = lock_clean(&session);
-                    dispatch(msg, &router, &mut session)
-                };
-                reply.to_frame_bytes().ok()
+        let Ok(WorkItem { token, job, session, done, wake, buf }) = item else { break };
+        let (frame, close_after) = match job {
+            Job::Native(msg) => {
+                let id = msg.request_id();
+                let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    if zero_copy {
+                        let mut sink = ReplySink::with_buf(buf);
+                        let framed = {
+                            let mut session = lock_clean(&session);
+                            dispatch_into(msg, &router, &mut session, &mut sink)
+                        };
+                        framed.ok().map(|()| sink.into_buf())
+                    } else {
+                        drop(buf); // empty on this path
+                        let reply = {
+                            let mut session = lock_clean(&session);
+                            dispatch(msg, &router, &mut session)
+                        };
+                        reply.to_frame_bytes().ok()
+                    }
+                }));
+                match outcome {
+                    Ok(frame) => (frame, false),
+                    Err(_) => {
+                        Metrics::inc(&router.metrics().worker_panics, 1);
+                        let reply = Message::RespError {
+                            id,
+                            message: "internal error: request handler panicked".to_string(),
+                        };
+                        (reply.to_frame_bytes().ok(), true)
+                    }
+                }
             }
-        }));
-        let (frame, close_after) = match outcome {
-            Ok(frame) => (frame, false),
-            Err(_) => {
-                Metrics::inc(&router.metrics().worker_panics, 1);
-                let reply = Message::RespError {
-                    id,
-                    message: "internal error: request handler panicked".to_string(),
-                };
-                (reply.to_frame_bytes().ok(), true)
+            // HTTP always builds the response in the pooled buffer —
+            // the reply *is* wire bytes either way, so there is no
+            // `Vec`-serialization differential path to preserve.
+            Job::Http(work) => {
+                let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    let mut session = lock_clean(&session);
+                    respond(work, &router, &mut session, buf)
+                }));
+                match outcome {
+                    Ok((frame, close)) => (Some(frame), close),
+                    Err(_) => {
+                        Metrics::inc(&router.metrics().worker_panics, 1);
+                        (Some(panic_response()), true)
+                    }
+                }
             }
         };
         lock_clean(&done).push(Completion { token, frame, close_after });
@@ -327,6 +382,11 @@ struct Loop {
     /// Dropped (closed) when drain begins, so the kernel stops routing
     /// new connections to this shard's `SO_REUSEPORT` bucket.
     listener: Option<TcpListener>,
+    /// Wire protocol of every connection accepted from this listener.
+    protocol: Protocol,
+    /// Per-client token buckets for the HTTP gateway (`None` = off or a
+    /// native shard); shared across shards.
+    rate: Option<Arc<RateLimiter>>,
     wake: Arc<EventFd>,
     metrics: Arc<Metrics>,
     /// This shard's slice of the metrics (globals stay the roll-up).
@@ -474,7 +534,10 @@ impl Loop {
     fn admit(&mut self, stream: TcpStream) {
         let Some(permit) = self.limiter.try_acquire() else {
             Metrics::inc(&self.metrics.conns_refused, 1);
-            refuse_busy(stream, &self.limiter);
+            match self.protocol {
+                Protocol::Native => refuse_busy(stream, &self.limiter),
+                Protocol::Http => refuse_busy_http(stream, &self.limiter),
+            }
             return;
         };
         if stream.set_nonblocking(true).is_err() {
@@ -487,7 +550,15 @@ impl Loop {
             self.conns.len() - 1
         });
         let epoch = self.epochs[idx];
-        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit);
+        let machine = match self.protocol {
+            Protocol::Native => Machine::Native(FrameMachine::new(self.pool.get())),
+            Protocol::Http => Machine::Http(Box::new(HttpMachine::new(
+                self.pool.get(),
+                self.rate.clone(),
+                peer_ip(&stream),
+            ))),
+        };
+        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit, machine);
         let interest = EPOLLIN | EPOLLOUT | EPOLLRDHUP | EPOLLET;
         if self
             .epoll
@@ -564,7 +635,7 @@ impl Loop {
                         // only a *complete* frame resets it, so a
                         // slow-loris peer dripping bytes cannot refresh
                         // its own deadline.
-                        if conn.frames.buffered() == 0 {
+                        if conn.machine.buffered() == 0 {
                             conn.frame_start = None;
                         } else if parsed > 0 || conn.frame_start.is_none() {
                             conn.frame_start = Some(now);
@@ -585,12 +656,22 @@ impl Loop {
             // 3. Dispatch the next request if none is in flight (drain
             //    included: accepted requests are answered to the last).
             if !conn.busy {
-                if let Some(msg) = conn.inbox.pop_front() {
+                if let Some(mut job) = conn.inbox.pop_front() {
+                    // Sample the drain flag as the job leaves the inbox,
+                    // not when it was parsed: responses during drain
+                    // must advertise closure.
+                    if let Job::Http(w) = &mut job {
+                        w.draining = self.draining;
+                    }
                     conn.busy = true;
-                    let buf = if self.zero_copy { self.pool.get() } else { Vec::new() };
+                    // HTTP replies are always built in a pooled buffer;
+                    // `zero_copy` only selects the native differential
+                    // serialization path.
+                    let pooled = self.zero_copy || conn.is_http();
+                    let buf = if pooled { self.pool.get() } else { Vec::new() };
                     let item = WorkItem {
                         token: token(idx, conn.epoch),
-                        msg,
+                        job,
                         session: conn.session.clone(),
                         done: self.completions.clone(),
                         wake: self.wake.clone(),
@@ -611,7 +692,7 @@ impl Loop {
                     }
                     Ok(n) => {
                         Metrics::inc(&self.metrics.net_bytes_in, n as u64);
-                        conn.frames.push(&self.scratch[..n]);
+                        conn.machine.push(&self.scratch[..n]);
                         conn.last_activity = now;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -686,7 +767,19 @@ impl Loop {
             && now >= conn.last_activity + self.idle_timeout;
         if read_stalled || idle {
             Metrics::inc(&self.metrics.timeouts, 1);
-            let frame = if read_stalled { stall_timeout_frame() } else { idle_timeout_frame() };
+            // Same notice semantics on both protocols, different
+            // encodings: a native `0x82` frame vs an HTTP `408`.
+            let frame = if conn.is_http() {
+                Some(timeout_response(if read_stalled {
+                    "timeout: request frame stalled"
+                } else {
+                    "timeout: idle connection"
+                }))
+            } else if read_stalled {
+                stall_timeout_frame()
+            } else {
+                idle_timeout_frame()
+            };
             if let Some(frame) = frame {
                 conn.write.push_bytes(&frame);
                 conn.write_progress = now;
@@ -748,6 +841,19 @@ impl Loop {
             conn.busy = false;
             conn.last_activity = Instant::now();
             match c.frame {
+                Some(frame) if frame.is_empty() => {
+                    // Nothing to send (an HTTP stream chunk swallowed
+                    // after an error, or a truncated-response close):
+                    // recycle the sink buffer without touching the
+                    // write queue or the frame counters.
+                    self.pool.put(frame);
+                    if c.close_after {
+                        conn.inbox.clear();
+                        conn.corrupt = true;
+                        conn.eof = true;
+                        conn.readable = false;
+                    }
+                }
                 Some(frame) => {
                     // Zero-copy hand-off: a drained queue takes the
                     // frame buffer whole; either way one spare buffer
@@ -757,11 +863,10 @@ impl Loop {
                     Metrics::inc(&self.metrics.frames_out, 1);
                     Metrics::inc(&self.shard.frames_out, 1);
                     if c.close_after {
-                        // The handler panicked: deliver the error
-                        // reply, then treat the stream as poisoned.
-                        // Pipelined requests behind it are dropped —
-                        // the session state they would run against is
-                        // suspect.
+                        // Deliver the final reply (a panic notice, a
+                        // `Connection: close` response, or a drain
+                        // notice), then treat the stream as poisoned:
+                        // pipelined requests behind it are dropped.
                         conn.inbox.clear();
                         conn.corrupt = true;
                         conn.eof = true;

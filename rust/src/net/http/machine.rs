@@ -1,0 +1,747 @@
+//! Incremental HTTP/1.1 request parser.
+//!
+//! [`HttpMachine`] is the gateway twin of the native `FrameMachine`:
+//! bytes go in via [`HttpMachine::push`] exactly as the socket delivers
+//! them (torn anywhere, pipelined back-to-back), parsed jobs come out
+//! via [`HttpMachine::next_job`]. The parser is a byte-offset state
+//! machine over one internal buffer — no line splitting allocations on
+//! the hot path, lazy compaction, and a scan hint so a slow-trickling
+//! header is not re-scanned from the start on every read.
+//!
+//! Everything the parser decides — including `400/431/505` protocol
+//! errors, `429` rate-limit refusals and `100 Continue` interim
+//! replies — is emitted as an [`HttpJob`] so responses stay in request
+//! order on pipelined connections. A protocol error poisons the
+//! machine: the error job carries `close` and no further bytes are
+//! parsed (HTTP/1.1 framing cannot be trusted past a malformed head).
+
+use std::collections::VecDeque;
+use std::net::IpAddr;
+use std::sync::Arc;
+
+use super::{HttpJob, HttpRequest, Method, STREAM_THRESHOLD};
+use crate::coordinator::backpressure::RateLimiter;
+
+/// Maximum bytes of one request head (request line + headers).
+pub const HEADER_CAP: usize = 16 << 10;
+
+/// Maximum bytes of one chunk-size line (hex digits + extensions).
+const CHUNK_LINE_CAP: usize = 128;
+
+/// Maximum bytes of one trailer line.
+const TRAILER_LINE_CAP: usize = 4 << 10;
+
+/// Consumed-prefix length that triggers buffer compaction.
+const COMPACT_AT: usize = 32 << 10;
+
+/// Where the parser is between jobs.
+enum State {
+    /// Accumulating a request head.
+    Headers,
+    /// Buffering a `Content-Length` body into the request.
+    Body {
+        /// The parsed head the body belongs to.
+        req: Box<HttpRequest>,
+        /// Body bytes still expected.
+        remaining: usize,
+    },
+    /// Swallowing the body of a request already answered (rate-limited).
+    Discard {
+        /// Body bytes still to swallow.
+        remaining: usize,
+    },
+    /// Relaying a large `Content-Length` body as stream chunks.
+    StreamBody {
+        /// Body bytes still expected.
+        remaining: usize,
+        /// The head's connection disposition, for the `StreamEnd` job.
+        close: bool,
+    },
+    /// Decoding a chunked-transfer body.
+    Chunked {
+        /// Position within the chunk grammar.
+        sub: ChunkState,
+        /// Swallow instead of emitting (rate-limited request).
+        discard: bool,
+        /// The head's connection disposition, for the `StreamEnd` job.
+        close: bool,
+    },
+}
+
+/// Position within a chunked-transfer body.
+enum ChunkState {
+    /// Expecting a `<hex>[;ext]\r\n` size line.
+    Size,
+    /// Inside a chunk's data.
+    Data {
+        /// Data bytes left in this chunk.
+        remaining: usize,
+    },
+    /// Expecting the `\r\n` after a chunk's data.
+    DataEnd,
+    /// Skipping trailer lines up to the empty terminator line.
+    Trailer,
+}
+
+/// Torn-read-tolerant HTTP/1.1 request parser for one connection.
+pub struct HttpMachine {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`.
+    pos: usize,
+    /// Header scan hint: no head terminator ends at or before this
+    /// absolute index, so the next scan resumes here instead of `pos`.
+    scan: usize,
+    state: State,
+    /// Jobs parsed but not yet handed out (a single head can yield two:
+    /// `100 Continue` plus the request itself later).
+    ready: VecDeque<HttpJob>,
+    limiter: Option<Arc<RateLimiter>>,
+    peer: IpAddr,
+    /// Protocol error emitted; no further parsing.
+    dead: bool,
+}
+
+impl HttpMachine {
+    /// A fresh parser over a (pooled) buffer. `limiter`, when present,
+    /// is consulted once per `POST` head against `peer`'s bucket.
+    pub fn new(buf: Vec<u8>, limiter: Option<Arc<RateLimiter>>, peer: IpAddr) -> Self {
+        Self {
+            buf,
+            pos: 0,
+            scan: 0,
+            state: State::Headers,
+            ready: VecDeque::new(),
+            limiter,
+            peer,
+            dead: false,
+        }
+    }
+
+    /// Append bytes exactly as read off the socket.
+    pub fn push(&mut self, data: &[u8]) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+            self.scan = 0;
+        } else if self.pos >= COMPACT_AT {
+            self.buf.drain(..self.pos);
+            self.scan = self.scan.saturating_sub(self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(data);
+    }
+
+    /// Unconsumed bytes waiting on more input (a torn head or chunk
+    /// line). Body bytes are consumed eagerly, so a slow streaming
+    /// upload does not look like a stalled frame to the transport's
+    /// read-stall timer.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Recover the internal buffer (connection teardown → pool).
+    pub fn into_buf(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+
+    /// Parse the next job out of the buffered bytes, or `None` when
+    /// more input is needed (or the machine is poisoned).
+    pub fn next_job(&mut self) -> Option<HttpJob> {
+        loop {
+            if let Some(job) = self.ready.pop_front() {
+                return Some(job);
+            }
+            if self.dead || !self.step() {
+                return None;
+            }
+        }
+    }
+
+    /// Emit a terminal protocol-error response and poison the machine.
+    fn fail(&mut self, status: u16, message: &str) -> bool {
+        self.ready.push_back(HttpJob::Immediate {
+            status,
+            message: format!("{message}\n"),
+            close: true,
+        });
+        self.dead = true;
+        true
+    }
+
+    /// Advance the state machine once. Returns `false` when no progress
+    /// is possible without more input.
+    fn step(&mut self) -> bool {
+        match std::mem::replace(&mut self.state, State::Headers) {
+            State::Headers => self.step_headers(),
+            State::Body { mut req, mut remaining } => {
+                let take = remaining.min(self.buf.len() - self.pos);
+                if take == 0 {
+                    self.state = State::Body { req, remaining };
+                    return false;
+                }
+                req.body.extend_from_slice(&self.buf[self.pos..self.pos + take]);
+                self.pos += take;
+                remaining -= take;
+                if remaining == 0 {
+                    self.ready.push_back(HttpJob::Request(*req));
+                } else {
+                    self.state = State::Body { req, remaining };
+                }
+                true
+            }
+            State::Discard { mut remaining } => {
+                let take = remaining.min(self.buf.len() - self.pos);
+                if take == 0 {
+                    self.state = State::Discard { remaining };
+                    return false;
+                }
+                self.pos += take;
+                remaining -= take;
+                if remaining > 0 {
+                    self.state = State::Discard { remaining };
+                }
+                true
+            }
+            State::StreamBody { mut remaining, close } => {
+                let take = remaining.min(self.buf.len() - self.pos);
+                if take == 0 {
+                    self.state = State::StreamBody { remaining, close };
+                    return false;
+                }
+                self.ready
+                    .push_back(HttpJob::StreamChunk(self.buf[self.pos..self.pos + take].to_vec()));
+                self.pos += take;
+                remaining -= take;
+                if remaining == 0 {
+                    self.ready.push_back(HttpJob::StreamEnd { close });
+                } else {
+                    self.state = State::StreamBody { remaining, close };
+                }
+                true
+            }
+            State::Chunked { sub, discard, close } => self.step_chunked(sub, discard, close),
+        }
+    }
+
+    /// One transition of the chunked-transfer decoder.
+    fn step_chunked(&mut self, sub: ChunkState, discard: bool, close: bool) -> bool {
+        match sub {
+            ChunkState::Size => {
+                let Some(eol) = find_crlf(&self.buf[self.pos..]) else {
+                    if self.buf.len() - self.pos > CHUNK_LINE_CAP {
+                        return self.fail(400, "chunk size line too long");
+                    }
+                    self.state = State::Chunked { sub: ChunkState::Size, discard, close };
+                    return false;
+                };
+                let line = &self.buf[self.pos..self.pos + eol];
+                let Some(size) = parse_chunk_size(line) else {
+                    return self.fail(400, "bad chunk size");
+                };
+                self.pos += eol + 2;
+                let sub = if size == 0 {
+                    ChunkState::Trailer
+                } else {
+                    ChunkState::Data { remaining: size }
+                };
+                self.state = State::Chunked { sub, discard, close };
+                true
+            }
+            ChunkState::Data { mut remaining } => {
+                let take = remaining.min(self.buf.len() - self.pos);
+                if take == 0 {
+                    self.state =
+                        State::Chunked { sub: ChunkState::Data { remaining }, discard, close };
+                    return false;
+                }
+                if !discard {
+                    self.ready.push_back(HttpJob::StreamChunk(
+                        self.buf[self.pos..self.pos + take].to_vec(),
+                    ));
+                }
+                self.pos += take;
+                remaining -= take;
+                let sub = if remaining == 0 {
+                    ChunkState::DataEnd
+                } else {
+                    ChunkState::Data { remaining }
+                };
+                self.state = State::Chunked { sub, discard, close };
+                true
+            }
+            ChunkState::DataEnd => {
+                if self.buf.len() - self.pos < 2 {
+                    self.state = State::Chunked { sub: ChunkState::DataEnd, discard, close };
+                    return false;
+                }
+                if &self.buf[self.pos..self.pos + 2] != b"\r\n" {
+                    return self.fail(400, "bad chunk data terminator");
+                }
+                self.pos += 2;
+                self.state = State::Chunked { sub: ChunkState::Size, discard, close };
+                true
+            }
+            ChunkState::Trailer => {
+                let Some(eol) = find_crlf(&self.buf[self.pos..]) else {
+                    if self.buf.len() - self.pos > TRAILER_LINE_CAP {
+                        return self.fail(431, "trailer line too long");
+                    }
+                    self.state = State::Chunked { sub: ChunkState::Trailer, discard, close };
+                    return false;
+                };
+                self.pos += eol + 2;
+                if eol == 0 {
+                    // Empty line: body complete. A discarded (already
+                    // answered) body ends silently.
+                    if !discard {
+                        self.ready.push_back(HttpJob::StreamEnd { close });
+                    }
+                } else {
+                    self.state = State::Chunked { sub: ChunkState::Trailer, discard, close };
+                }
+                true
+            }
+        }
+    }
+
+    /// Try to complete a request head; on success queue its jobs and
+    /// transition into the body state.
+    fn step_headers(&mut self) -> bool {
+        let from = self.scan.max(self.pos);
+        let Some(at) = self.buf[from..].windows(4).position(|w| w == b"\r\n\r\n") else {
+            if self.buf.len() - self.pos > HEADER_CAP {
+                return self.fail(431, "request header too large");
+            }
+            // A future terminator can straddle the scanned tail by up
+            // to three bytes.
+            self.scan = self.buf.len().saturating_sub(3).max(self.pos);
+            return false;
+        };
+        let head_end = from + at;
+        let head = match parse_head(&self.buf[self.pos..head_end]) {
+            Ok(h) => h,
+            Err((status, message)) => return self.fail(status, message),
+        };
+        self.pos = head_end + 4;
+        self.scan = self.pos;
+
+        let Head {
+            method,
+            path,
+            query,
+            content_type,
+            close,
+            content_length,
+            chunked,
+            expect_continue,
+        } = head;
+        let has_body = chunked || content_length > 0;
+
+        // Rate limit POSTs once per head (the short-circuit keeps GETs
+        // from spending tokens). Refusals still swallow a bounded body
+        // so pipelined requests behind it stay parseable; an oversized
+        // one closes instead of reading it all.
+        let limited =
+            method == Method::Post && self.limiter.as_ref().is_some_and(|l| !l.allow(self.peer));
+        if limited {
+            if !chunked && content_length > STREAM_THRESHOLD {
+                return self.fail(429, "rate limit exceeded");
+            }
+            self.ready.push_back(HttpJob::Immediate {
+                status: 429,
+                message: "rate limit exceeded\n".into(),
+                close,
+            });
+            if chunked {
+                self.state = State::Chunked { sub: ChunkState::Size, discard: true, close };
+            } else if content_length > 0 {
+                self.state = State::Discard { remaining: content_length };
+            }
+            return true;
+        }
+
+        if expect_continue && has_body {
+            self.ready.push_back(HttpJob::Immediate {
+                status: 100,
+                message: String::new(),
+                close: false,
+            });
+        }
+
+        let req = HttpRequest { method, path, query, content_type, close, body: Vec::new() };
+        if chunked {
+            self.ready.push_back(HttpJob::StreamBegin(req));
+            self.state = State::Chunked { sub: ChunkState::Size, discard: false, close };
+        } else if content_length > STREAM_THRESHOLD {
+            self.ready.push_back(HttpJob::StreamBegin(req));
+            self.state = State::StreamBody { remaining: content_length, close };
+        } else if content_length > 0 {
+            let mut req = Box::new(req);
+            req.body.reserve(content_length);
+            self.state = State::Body { req, remaining: content_length };
+        } else {
+            self.ready.push_back(HttpJob::Request(req));
+        }
+        true
+    }
+}
+
+/// A parsed request head, before the body policy is applied.
+struct Head {
+    method: Method,
+    path: String,
+    query: Vec<(String, String)>,
+    content_type: Option<String>,
+    close: bool,
+    content_length: usize,
+    chunked: bool,
+    expect_continue: bool,
+}
+
+/// Index of the first `\r\n` in `buf`, if complete.
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}
+
+/// Parse a chunk-size line: hex digits, optionally followed by
+/// `;extensions` (ignored). `None` on empty/invalid/overflowing sizes.
+fn parse_chunk_size(line: &[u8]) -> Option<usize> {
+    let mut size: usize = 0;
+    let mut digits = 0usize;
+    for &b in line {
+        let v = match b {
+            b'0'..=b'9' => b - b'0',
+            b'a'..=b'f' => b - b'a' + 10,
+            b'A'..=b'F' => b - b'A' + 10,
+            b';' => break,
+            _ => return None,
+        };
+        size = size.checked_mul(16)?.checked_add(v as usize)?;
+        digits += 1;
+    }
+    if digits == 0 {
+        None
+    } else {
+        Some(size)
+    }
+}
+
+/// Parse a request head (`head` excludes the `\r\n\r\n` terminator).
+/// Errors carry the HTTP status + message for the `Immediate` reply.
+fn parse_head(head: &[u8]) -> Result<Head, (u16, &'static str)> {
+    let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+    let request_line = lines.next().unwrap_or(b"");
+    let mut parts = request_line.split(|&b| b == b' ').filter(|t| !t.is_empty());
+    let method = parts.next().ok_or((400, "malformed request line"))?;
+    let target = parts.next().ok_or((400, "malformed request line"))?;
+    let version = parts.next().ok_or((400, "malformed request line"))?;
+    if parts.next().is_some() {
+        return Err((400, "malformed request line"));
+    }
+    let http11 = match version {
+        b"HTTP/1.1" => true,
+        b"HTTP/1.0" => false,
+        v if v.starts_with(b"HTTP/") => return Err((505, "http version not supported")),
+        _ => return Err((400, "malformed request line")),
+    };
+    let method = match method {
+        b"GET" => Method::Get,
+        b"POST" => Method::Post,
+        _ => Method::Other,
+    };
+    if target.first() != Some(&b'/') {
+        return Err((400, "bad request target"));
+    }
+    let target = std::str::from_utf8(target).map_err(|_| (400, "bad request target"))?;
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let query: Vec<(String, String)> = query_str
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect();
+
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    let mut close_header = false;
+    let mut keep_alive = false;
+    let mut content_type = None;
+    let mut expect_continue = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let colon = line
+            .iter()
+            .position(|&b| b == b':')
+            .ok_or((400, "malformed header line"))?;
+        let name = &line[..colon];
+        let value = std::str::from_utf8(&line[colon + 1..])
+            .map_err(|_| (400, "malformed header line"))?
+            .trim();
+        if name.eq_ignore_ascii_case(b"content-length") {
+            let n: usize = value.parse().map_err(|_| (400, "bad content-length"))?;
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err((400, "conflicting content-length"));
+            }
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            if !value.eq_ignore_ascii_case("chunked") {
+                return Err((400, "unsupported transfer-encoding"));
+            }
+            chunked = true;
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            for token in value.split(',') {
+                let token = token.trim();
+                if token.eq_ignore_ascii_case("close") {
+                    close_header = true;
+                } else if token.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+        } else if name.eq_ignore_ascii_case(b"content-type") {
+            content_type = Some(value.to_string());
+        } else if name.eq_ignore_ascii_case(b"expect") && value.eq_ignore_ascii_case("100-continue")
+        {
+            expect_continue = true;
+        }
+    }
+    if chunked && content_length.is_some() {
+        // Request-smuggling guard: refuse double-framed bodies.
+        return Err((400, "both content-length and chunked"));
+    }
+    let close = if http11 { close_header } else { !keep_alive };
+    Ok(Head {
+        method,
+        path: path.to_string(),
+        query,
+        content_type,
+        close,
+        content_length: content_length.unwrap_or(0),
+        chunked,
+        expect_continue,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{IpAddr, Ipv4Addr};
+
+    fn machine() -> HttpMachine {
+        HttpMachine::new(Vec::new(), None, IpAddr::V4(Ipv4Addr::LOCALHOST))
+    }
+
+    /// Drain every currently parseable job.
+    fn drain(m: &mut HttpMachine) -> Vec<HttpJob> {
+        std::iter::from_fn(|| m.next_job()).collect()
+    }
+
+    /// Render a job stream for equality checks, coalescing adjacent
+    /// `StreamChunk`s — tearing legitimately splits a body across more
+    /// chunk jobs, but the concatenated bytes must be identical.
+    fn normalize(jobs: Vec<HttpJob>) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut body: Vec<u8> = Vec::new();
+        for j in jobs {
+            match j {
+                HttpJob::StreamChunk(d) => body.extend_from_slice(&d),
+                other => {
+                    if !body.is_empty() {
+                        out.push(format!("chunk:{}", String::from_utf8_lossy(&body)));
+                        body.clear();
+                    }
+                    out.push(format!("{other:?}"));
+                }
+            }
+        }
+        if !body.is_empty() {
+            out.push(format!("chunk:{}", String::from_utf8_lossy(&body)));
+        }
+        out
+    }
+
+    #[test]
+    fn simple_get_parses() {
+        let mut m = machine();
+        m.push(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        let Some(HttpJob::Request(req)) = m.next_job() else { panic!("expected request") };
+        assert_eq!(req.method, Method::Get);
+        assert_eq!(req.path, "/healthz");
+        assert!(!req.close);
+        assert!(req.body.is_empty());
+        assert!(m.next_job().is_none());
+        assert_eq!(m.buffered(), 0);
+    }
+
+    #[test]
+    fn post_with_body_and_params() {
+        let mut m = machine();
+        m.push(b"POST /encode?alphabet=url&wrap=76 HTTP/1.1\r\n");
+        m.push(b"Content-Length: 5\r\nConnection: close\r\n\r\nhello");
+        let Some(HttpJob::Request(req)) = m.next_job() else { panic!("expected request") };
+        assert_eq!(req.method, Method::Post);
+        assert_eq!(req.path, "/encode");
+        assert_eq!(req.query_param("alphabet"), Some("url"));
+        assert_eq!(req.query_param("wrap"), Some("76"));
+        assert!(req.close);
+        assert_eq!(req.body, b"hello");
+    }
+
+    /// Byte-at-a-time (maximally torn) feeding yields the same job
+    /// stream as a one-shot push — the incremental parser's oracle.
+    #[test]
+    fn torn_feed_matches_one_shot_oracle() {
+        let wire: Vec<u8> = [
+            b"POST /encode HTTP/1.1\r\nContent-Length: 3\r\n\r\nabc".as_slice(),
+            b"GET /metrics?x=1 HTTP/1.1\r\n\r\n",
+            b"POST /decode HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"3\r\nZm9\r\n1\r\nv\r\n0\r\n\r\n",
+            b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n",
+        ]
+        .concat();
+        let mut oracle = machine();
+        oracle.push(&wire);
+        let expect = normalize(drain(&mut oracle));
+        assert!(expect.len() >= 6, "oracle produced {expect:?}");
+
+        for step in [1usize, 2, 3, 7, 64] {
+            let mut m = machine();
+            let mut got = Vec::new();
+            for piece in wire.chunks(step) {
+                m.push(piece);
+                got.extend(drain(&mut m));
+            }
+            assert_eq!(normalize(got), expect, "step={step}");
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_come_out_in_order() {
+        let mut m = machine();
+        m.push(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\nGET /c HTTP/1.1\r\n\r\n");
+        let paths: Vec<String> = std::iter::from_fn(|| m.next_job())
+            .map(|j| match j {
+                HttpJob::Request(r) => r.path,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(paths, ["/a", "/b", "/c"]);
+    }
+
+    #[test]
+    fn chunked_body_streams_with_jobs() {
+        let mut m = machine();
+        m.push(b"POST /decode HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        assert!(matches!(m.next_job(), Some(HttpJob::StreamBegin(_))));
+        m.push(b"4\r\nWxyz\r\n");
+        match m.next_job() {
+            Some(HttpJob::StreamChunk(d)) => assert_eq!(d, b"Wxyz"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(m.next_job().is_none());
+        m.push(b"0\r\nx-trailer: 1\r\n\r\n");
+        assert!(matches!(m.next_job(), Some(HttpJob::StreamEnd { close: false })));
+        assert!(m.next_job().is_none());
+    }
+
+    #[test]
+    fn large_content_length_streams() {
+        let mut m = machine();
+        let n = STREAM_THRESHOLD + 1;
+        m.push(format!("POST /decode HTTP/1.1\r\nContent-Length: {n}\r\n\r\n").as_bytes());
+        assert!(matches!(m.next_job(), Some(HttpJob::StreamBegin(_))));
+        m.push(&vec![b'A'; n - 1]);
+        let mut got = 0usize;
+        while let Some(j) = m.next_job() {
+            match j {
+                HttpJob::StreamChunk(d) => got += d.len(),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, n - 1);
+        m.push(b"A");
+        assert!(matches!(m.next_job(), Some(HttpJob::StreamChunk(_))));
+        assert!(matches!(m.next_job(), Some(HttpJob::StreamEnd { close: false })));
+        // Body bytes were consumed eagerly — nothing pending.
+        assert_eq!(m.buffered(), 0);
+    }
+
+    #[test]
+    fn oversized_header_is_431_and_poisons() {
+        let mut m = machine();
+        m.push(b"GET / HTTP/1.1\r\n");
+        m.push(&vec![b'a'; HEADER_CAP + 1]);
+        match m.next_job() {
+            Some(HttpJob::Immediate { status: 431, close: true, .. }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        m.push(b"\r\n\r\nGET /x HTTP/1.1\r\n\r\n");
+        assert!(m.next_job().is_none(), "poisoned machine must not keep parsing");
+    }
+
+    #[test]
+    fn malformed_requests_are_400() {
+        for wire in [
+            b"BOGUS\r\n\r\n".as_slice(),
+            b"GET /x HTTP/2.0\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+        ] {
+            let mut m = machine();
+            m.push(wire);
+            match m.next_job() {
+                Some(HttpJob::Immediate { status: 400 | 505, close: true, .. }) => {}
+                other => panic!("{}: unexpected {other:?}", String::from_utf8_lossy(wire)),
+            }
+        }
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let mut m = machine();
+        m.push(b"GET / HTTP/1.0\r\n\r\n");
+        let Some(HttpJob::Request(req)) = m.next_job() else { panic!() };
+        assert!(req.close, "HTTP/1.0 without keep-alive closes");
+    }
+
+    #[test]
+    fn expect_continue_emits_interim() {
+        let mut m = machine();
+        m.push(b"POST /encode HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n");
+        assert!(matches!(m.next_job(), Some(HttpJob::Immediate { status: 100, .. })));
+        assert!(m.next_job().is_none());
+        m.push(b"ok");
+        let Some(HttpJob::Request(req)) = m.next_job() else { panic!() };
+        assert_eq!(req.body, b"ok");
+    }
+
+    #[test]
+    fn rate_limited_post_is_429_and_body_swallowed() {
+        let rl = RateLimiter::new(1.0).unwrap();
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let mut m = HttpMachine::new(Vec::new(), Some(rl), ip);
+        // First POST spends the single burst token.
+        m.push(b"POST /encode HTTP/1.1\r\nContent-Length: 2\r\n\r\nok");
+        assert!(matches!(m.next_job(), Some(HttpJob::Request(_))));
+        // Second is refused but its body is swallowed, so the pipelined
+        // GET behind it still parses.
+        m.push(b"POST /encode HTTP/1.1\r\nContent-Length: 2\r\n\r\nok");
+        m.push(b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(matches!(m.next_job(), Some(HttpJob::Immediate { status: 429, .. })));
+        match m.next_job() {
+            Some(HttpJob::Request(r)) => assert_eq!(r.path, "/healthz"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // GETs are never rate limited.
+        m.push(b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(matches!(m.next_job(), Some(HttpJob::Request(_))));
+    }
+}

@@ -1,0 +1,139 @@
+//! HTTP/1.1 gateway: a second wire protocol on the same reactors.
+//!
+//! The paper's motivating workload is text-only web documents — MIME
+//! email and HTML/JSON/XML that embed binary as base64 — so the server
+//! grows a front door that speaks the web's own protocol. A listener
+//! carries a [`Protocol`] tag; accepted connections route to either the
+//! native `FrameMachine` or the [`HttpMachine`] here, and both feed the
+//! same worker pool, session state and metrics.
+//!
+//! Layout:
+//!
+//! * [`machine`] — incremental request parser (torn-read tolerant,
+//!   pipelining-aware) producing a stream of [`HttpJob`]s, including a
+//!   chunked-transfer *decoder* for streamed request bodies;
+//! * [`sink`] — [`HttpSink`], a `ResponseSink` that frames the router's
+//!   in-place reply as a chunked HTTP response instead of a native
+//!   `0x81` frame;
+//! * [`respond`] — routing (`POST /encode|/decode|/datauri`,
+//!   `GET /healthz|/metrics`) and response assembly, run on the worker
+//!   threads.
+//!
+//! Request bodies above [`STREAM_THRESHOLD`] (or with
+//! `Transfer-Encoding: chunked`) never materialize in one buffer: the
+//! machine emits [`HttpJob::StreamBegin`]/[`HttpJob::StreamChunk`]/
+//! [`HttpJob::StreamEnd`] and the responder drives the coordinator's
+//! `SessionState` streaming codecs, so a decode larger than the native
+//! protocol's `MAX_FRAME` completes in bounded memory — the ">256 MiB
+//! payloads hit the frame-size wall" item from the roadmap.
+
+pub mod machine;
+pub mod respond;
+pub mod sink;
+
+pub use machine::HttpMachine;
+pub use respond::{busy_response, panic_response, respond, timeout_response};
+pub use sink::HttpSink;
+
+/// Which wire protocol a listener (and every connection accepted from
+/// it) speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// The native length-prefixed frame protocol (`docs/PROTOCOL.md`).
+    Native,
+    /// The HTTP/1.1 gateway.
+    Http,
+}
+
+/// Buffered bodies are capped here; larger (or chunked) request bodies
+/// take the streaming path through the session codecs.
+pub const STREAM_THRESHOLD: usize = 4 << 20;
+
+/// Reserved `SessionState` stream id for the HTTP gateway's streamed
+/// request body. HTTP/1.1 requests on one connection are strictly
+/// sequential, so a single well-known id suffices; it sits at the top
+/// of the id space where no native client id can collide (native
+/// streams and HTTP never share a connection anyway).
+pub const HTTP_STREAM_ID: u64 = u64::MAX;
+
+/// Request method, as far as the gateway cares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// `GET`.
+    Get,
+    /// `POST`.
+    Post,
+    /// Anything else (answered `405` on known paths).
+    Other,
+}
+
+/// One parsed request head (plus the body, when buffered).
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method.
+    pub method: Method,
+    /// Request path (the target up to `?`), not percent-decoded — the
+    /// gateway's routes and parameters are plain ASCII tokens.
+    pub path: String,
+    /// Query parameters as raw `key=value` pairs, in order, not
+    /// percent-decoded.
+    pub query: Vec<(String, String)>,
+    /// `Content-Type` header value, verbatim.
+    pub content_type: Option<String>,
+    /// Whether the connection must close after this response
+    /// (`Connection: close`, or an HTTP/1.0 request without
+    /// `keep-alive`).
+    pub close: bool,
+    /// The buffered body ([`HttpJob::Request`] only; empty on the
+    /// streaming path).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First query parameter named `key`, if any.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// One unit of work parsed off an HTTP connection. Everything —
+/// including protocol errors — flows through the connection inbox as a
+/// job, so pipelined responses keep request order.
+#[derive(Debug)]
+pub enum HttpJob {
+    /// A complete request with its body buffered.
+    Request(HttpRequest),
+    /// Head of a streamed-body request (body exceeds
+    /// [`STREAM_THRESHOLD`] or uses chunked transfer); `body` is empty.
+    StreamBegin(HttpRequest),
+    /// A slice of a streamed request body.
+    StreamChunk(Vec<u8>),
+    /// End of a streamed request body. `close` carries the request
+    /// head's connection disposition.
+    StreamEnd {
+        /// Close the connection once the response is flushed.
+        close: bool,
+    },
+    /// A response decided during parsing: `100 Continue` interim
+    /// replies, `429` rate-limit refusals, and `400/431/505` parse
+    /// errors.
+    Immediate {
+        /// HTTP status code.
+        status: u16,
+        /// Response body (sent as `text/plain`; ignored for `100`).
+        message: String,
+        /// Close the connection once the response is flushed.
+        close: bool,
+    },
+}
+
+/// An [`HttpJob`] plus the drain flag sampled when the job left the
+/// inbox — during graceful shutdown responses carry
+/// `Connection: close` and `/healthz` flips to `503`.
+#[derive(Debug)]
+pub struct HttpWork {
+    /// The parsed job.
+    pub job: HttpJob,
+    /// Server is draining: advertise closure, fail health checks.
+    pub draining: bool,
+}

@@ -1,0 +1,716 @@
+//! Gateway routing and response assembly (runs on the worker threads).
+//!
+//! [`respond`] turns one [`HttpWork`] into response bytes plus a
+//! close-after-flush flag, mirroring the native protocol's
+//! `dispatch_into`:
+//!
+//! * `POST /encode` / `POST /decode` / `POST /datauri` with a buffered
+//!   body go through `Router::process_into` into an [`HttpSink`], so
+//!   the reply payload is written in place by the same tiered kernels
+//!   as the native zero-copy path;
+//! * the same routes with a streamed body (chunked transfer, or
+//!   `Content-Length` above the buffering threshold) drive the
+//!   session's streaming codecs under the reserved [`HTTP_STREAM_ID`],
+//!   each input slice answered by one output chunk — a decode larger
+//!   than the native `MAX_FRAME` completes in bounded memory;
+//! * `GET /healthz` and `GET /metrics` are the ops surface: the health
+//!   check flips to `503` while draining, the metrics endpoint renders
+//!   the global counters plus the per-shard breakdown as
+//!   `b64simd_*`-prefixed text.
+//!
+//! Query parameters (`alphabet=standard|url|imap`,
+//! `mode=strict|forgiving`, `ws=none|crlf|all`, `wrap=<n>`) are plain
+//! ASCII tokens, deliberately resolved against
+//! [`Alphabet::by_name`] rather than the native protocol's resolver so
+//! the gateway depends on base64 + coordinator only (the documented
+//! layer order).
+//!
+//! Error model: one response per request, always. A request whose
+//! *head* is unroutable or ill-parameterized gets its full error
+//! response at `StreamBegin` time; the body keeps streaming in but
+//! every subsequent chunk finds no open stream and produces no output.
+//! A mid-body codec error cannot be reported in a status line that is
+//! already on the wire, so the connection closes without the terminal
+//! `0\r\n\r\n` chunk — deliberately truncated chunked framing, which
+//! every conforming client treats as a failed transfer.
+
+use crate::base64::mime::MimeCodec;
+use crate::base64::{Alphabet, Mode, Whitespace};
+use crate::coordinator::state::{SessionState, StreamError};
+use crate::coordinator::{Metrics, Request, RequestKind, Router};
+
+use super::sink::HttpSink;
+use super::{HttpJob, HttpRequest, HttpWork, Method, HTTP_STREAM_ID};
+
+/// Produce the response for one job. `buf` is the connection's pooled
+/// response buffer (appended to, returned with the response bytes);
+/// the second return is close-after-flush.
+pub fn respond(
+    work: HttpWork,
+    router: &Router,
+    session: &mut SessionState,
+    mut buf: Vec<u8>,
+) -> (Vec<u8>, bool) {
+    let HttpWork { job, draining } = work;
+    let metrics = router.metrics();
+    match job {
+        HttpJob::Immediate { status, message, close } => {
+            if status == 429 {
+                Metrics::inc(&metrics.rate_limited, 1);
+            }
+            if status == 100 {
+                // Interim reply: bare status line, no body, request
+                // still to come.
+                buf.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                return (buf, false);
+            }
+            let close = close || draining;
+            write_simple(&mut buf, status, reason_for(status), &message, close);
+            (buf, close)
+        }
+        HttpJob::Request(req) => {
+            Metrics::inc(&metrics.http_requests, 1);
+            handle_request(req, router, draining, buf)
+        }
+        HttpJob::StreamBegin(req) => {
+            Metrics::inc(&metrics.http_requests, 1);
+            stream_begin(req, session, draining, buf)
+        }
+        HttpJob::StreamChunk(data) => match session.chunk(HTTP_STREAM_ID, &data) {
+            Ok(out) => {
+                write_chunk(&mut buf, &out);
+                (buf, false)
+            }
+            // Begin was refused (error already answered): swallow.
+            Err(StreamError::UnknownStream(_)) => (buf, false),
+            Err(_) => {
+                // Mid-body codec error after a 200 head is on the wire:
+                // close without the terminal chunk (see module docs).
+                session.abort(HTTP_STREAM_ID);
+                (buf, true)
+            }
+        },
+        HttpJob::StreamEnd { close } => {
+            let close = close || draining;
+            match session.finish(HTTP_STREAM_ID) {
+                Ok(out) => {
+                    write_chunk(&mut buf, &out);
+                    buf.extend_from_slice(b"0\r\n\r\n");
+                    (buf, close)
+                }
+                Err(StreamError::UnknownStream(_)) => (buf, close),
+                Err(_) => (buf, true),
+            }
+        }
+    }
+}
+
+/// Route a buffered request.
+fn handle_request(
+    req: HttpRequest,
+    router: &Router,
+    draining: bool,
+    mut buf: Vec<u8>,
+) -> (Vec<u8>, bool) {
+    let close = req.close || draining;
+    match (req.method, req.path.as_str()) {
+        (Method::Get, "/healthz") => {
+            if draining {
+                write_simple(&mut buf, 503, "Service Unavailable", "draining\n", true);
+                (buf, true)
+            } else {
+                write_simple(&mut buf, 200, "OK", "ok\n", close);
+                (buf, close)
+            }
+        }
+        (Method::Get, "/metrics") => {
+            let body = router.metrics().render_text();
+            let ct = "text/plain; version=0.0.4";
+            write_response(&mut buf, 200, "OK", ct, &[], body.as_bytes(), close);
+            (buf, close)
+        }
+        (Method::Post, "/encode") => codec_request(req, router, CodecRoute::Encode, close, buf),
+        (Method::Post, "/datauri") => codec_request(req, router, CodecRoute::DataUri, close, buf),
+        (Method::Post, "/decode") => codec_request(req, router, CodecRoute::Decode, close, buf),
+        (_, "/healthz" | "/metrics") => {
+            write_response(
+                &mut buf,
+                405,
+                "Method Not Allowed",
+                "text/plain",
+                &[("Allow", "GET")],
+                b"method not allowed\n",
+                close,
+            );
+            (buf, close)
+        }
+        (_, "/encode" | "/decode" | "/datauri") => {
+            write_response(
+                &mut buf,
+                405,
+                "Method Not Allowed",
+                "text/plain",
+                &[("Allow", "POST")],
+                b"method not allowed\n",
+                close,
+            );
+            (buf, close)
+        }
+        _ => {
+            write_simple(&mut buf, 404, "Not Found", "not found\n", close);
+            (buf, close)
+        }
+    }
+}
+
+/// The three codec routes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CodecRoute {
+    Encode,
+    Decode,
+    DataUri,
+}
+
+/// Dispatch a buffered codec request through the router into an
+/// [`HttpSink`].
+fn codec_request(
+    req: HttpRequest,
+    router: &Router,
+    route: CodecRoute,
+    close: bool,
+    mut buf: Vec<u8>,
+) -> (Vec<u8>, bool) {
+    let params = match Params::of(&req, route) {
+        Ok(p) => p,
+        Err(message) => {
+            write_simple(&mut buf, 400, "Bad Request", &format!("{message}\n"), close);
+            return (buf, close);
+        }
+    };
+    if let Some(wrap) = params.wrap {
+        // Wrapped (MIME) encode: the router has no wrap notion, so this
+        // path encodes via the codec directly. Bodies here are bounded
+        // by the buffering threshold, so a Content-Length response is
+        // simplest. Building the codec validates the wrap value.
+        let codec = match MimeCodec::new(params.alphabet).with_line_len(wrap) {
+            Ok(c) => c,
+            Err(e) => {
+                write_simple(&mut buf, 400, "Bad Request", &format!("{e}\n"), close);
+                return (buf, close);
+            }
+        };
+        let body = codec.encode(&req.body);
+        write_response(&mut buf, 200, "OK", "text/plain", &[], &body, close);
+        return (buf, close);
+    }
+    let (kind, content_type) = match route {
+        CodecRoute::Encode | CodecRoute::DataUri => (RequestKind::Encode, "text/plain"),
+        CodecRoute::Decode => (RequestKind::Decode, "application/octet-stream"),
+    };
+    let prefix = (route == CodecRoute::DataUri).then(|| format!("data:{};base64,", mime_of(&req)));
+    let mut sink = HttpSink::new(buf, content_type, close, prefix);
+    let request = Request {
+        id: 0,
+        kind,
+        payload: req.body,
+        alphabet: params.alphabet,
+        mode: params.mode,
+        ws: params.ws,
+    };
+    match router.process_into(request, &mut sink) {
+        Ok(()) => (sink.into_buf(), close),
+        Err(_) => {
+            // Reply would not fit the sink's framing; connection-fatal,
+            // same as the native path's oversized frame.
+            let mut buf = sink.into_buf();
+            write_simple(&mut buf, 500, "Internal Server Error", "response too large\n", true);
+            (buf, true)
+        }
+    }
+}
+
+/// Open the session stream for a streamed-body request and put the
+/// response head on the wire, or answer the error for an unroutable
+/// head (the connection then swallows the body; see module docs).
+fn stream_begin(
+    req: HttpRequest,
+    session: &mut SessionState,
+    draining: bool,
+    mut buf: Vec<u8>,
+) -> (Vec<u8>, bool) {
+    // A defunct stream can linger if a peer vanished mid-body and the
+    // connection is being reused (it cannot, but stay defensive).
+    session.abort(HTTP_STREAM_ID);
+    let close = req.close || draining;
+    let route = match (req.method, req.path.as_str()) {
+        (Method::Post, "/encode") => CodecRoute::Encode,
+        (Method::Post, "/datauri") => CodecRoute::DataUri,
+        (Method::Post, "/decode") => CodecRoute::Decode,
+        (_, "/encode" | "/decode" | "/datauri" | "/healthz" | "/metrics") => {
+            write_simple(&mut buf, 405, "Method Not Allowed", "method not allowed\n", close);
+            return (buf, false);
+        }
+        _ => {
+            write_simple(&mut buf, 404, "Not Found", "not found\n", close);
+            return (buf, false);
+        }
+    };
+    let params = match Params::of(&req, route) {
+        Ok(p) => p,
+        Err(message) => {
+            write_simple(&mut buf, 400, "Bad Request", &format!("{message}\n"), close);
+            return (buf, false);
+        }
+    };
+    let opened = match (route, params.wrap) {
+        (CodecRoute::Encode, Some(wrap)) => {
+            session.open_encode_wrapped(HTTP_STREAM_ID, params.alphabet, wrap)
+        }
+        (CodecRoute::Encode | CodecRoute::DataUri, None) => {
+            session.open_encode(HTTP_STREAM_ID, params.alphabet)
+        }
+        (CodecRoute::Decode, None) => {
+            session.open_decode_ws(HTTP_STREAM_ID, params.alphabet, params.mode, params.ws)
+        }
+        (CodecRoute::DataUri | CodecRoute::Decode, Some(_)) => unreachable!("Params rejects wrap"),
+    };
+    if let Err(e) = opened {
+        write_simple(&mut buf, 400, "Bad Request", &format!("{e}\n"), close);
+        return (buf, false);
+    }
+    let content_type = match route {
+        CodecRoute::Decode => "application/octet-stream",
+        _ => "text/plain",
+    };
+    buf.extend_from_slice(b"HTTP/1.1 200 OK\r\nContent-Type: ");
+    buf.extend_from_slice(content_type.as_bytes());
+    buf.extend_from_slice(b"\r\nTransfer-Encoding: chunked\r\n");
+    if close {
+        buf.extend_from_slice(b"Connection: close\r\n");
+    }
+    buf.extend_from_slice(b"\r\n");
+    if route == CodecRoute::DataUri {
+        write_chunk(&mut buf, format!("data:{};base64,", mime_of(&req)).as_bytes());
+    }
+    (buf, false)
+}
+
+/// Validated query parameters of a codec request.
+struct Params {
+    alphabet: Alphabet,
+    mode: Mode,
+    ws: Whitespace,
+    wrap: Option<usize>,
+}
+
+impl Params {
+    fn of(req: &HttpRequest, route: CodecRoute) -> Result<Params, String> {
+        let alphabet = match req.query_param("alphabet") {
+            None => Alphabet::standard(),
+            Some(name) => {
+                Alphabet::by_name(name).ok_or_else(|| format!("unknown alphabet: {name}"))?
+            }
+        };
+        let mode = match req.query_param("mode") {
+            None | Some("strict") => Mode::Strict,
+            Some("forgiving") => Mode::Forgiving,
+            Some(m) => return Err(format!("unknown mode: {m}")),
+        };
+        let ws = match req.query_param("ws") {
+            None | Some("none") => Whitespace::None,
+            Some("crlf") => Whitespace::CrLf,
+            Some("all") => Whitespace::All,
+            Some(w) => return Err(format!("unknown ws policy: {w}")),
+        };
+        let wrap = match req.query_param("wrap") {
+            None => None,
+            Some(v) => Some(v.parse::<usize>().map_err(|_| format!("bad wrap value: {v}"))?),
+        };
+        if wrap.is_some() && route != CodecRoute::Encode {
+            return Err("wrap is only valid on /encode".to_string());
+        }
+        if route == CodecRoute::Decode {
+            Ok(Params { alphabet, mode, ws, wrap })
+        } else {
+            if req.query_param("mode").is_some() || req.query_param("ws").is_some() {
+                return Err("mode/ws are only valid on /decode".to_string());
+            }
+            Ok(Params { alphabet, mode: Mode::Strict, ws: Whitespace::None, wrap })
+        }
+    }
+}
+
+/// The data URI's media type: the request's `Content-Type`, default
+/// `application/octet-stream`.
+fn mime_of(req: &HttpRequest) -> &str {
+    req.content_type.as_deref().unwrap_or("application/octet-stream")
+}
+
+/// Append one chunked-transfer chunk (no-op for empty `data` — an
+/// empty chunk would terminate the body).
+fn write_chunk(buf: &mut Vec<u8>, data: &[u8]) {
+    if data.is_empty() {
+        return;
+    }
+    buf.extend_from_slice(format!("{:x}\r\n", data.len()).as_bytes());
+    buf.extend_from_slice(data);
+    buf.extend_from_slice(b"\r\n");
+}
+
+/// The `408 Request Timeout` notice the reactors send in place of the
+/// native protocol's `0x82` timeout frames.
+pub fn timeout_response(message: &str) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_simple(&mut buf, 408, "Request Timeout", &format!("{message}\n"), true);
+    buf
+}
+
+/// The `500` sent when a worker panics mid-request (native twin: the
+/// `0x82` "request handler panicked" frame). Always closes.
+pub fn panic_response() -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_simple(
+        &mut buf,
+        500,
+        "Internal Server Error",
+        "internal error: request handler panicked\n",
+        true,
+    );
+    buf
+}
+
+/// The `503` refusal for an accept over the connection cap — the
+/// gateway's analogue of the native busy frame. Always closes.
+pub fn busy_response(open: usize, max: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let body = format!("busy: {open} connections open (limit {max})\n");
+    write_simple(&mut buf, 503, "Service Unavailable", &body, true);
+    buf
+}
+
+/// Append a complete `text/plain` response with a `Content-Length`
+/// body.
+pub(crate) fn write_simple(buf: &mut Vec<u8>, status: u16, reason: &str, body: &str, close: bool) {
+    write_response(buf, status, reason, "text/plain", &[], body.as_bytes(), close);
+}
+
+/// Append a complete response: status line, `Content-Type`,
+/// `Content-Length`, extra headers, optional `Connection: close`, body.
+fn write_response(
+    buf: &mut Vec<u8>,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+    close: bool,
+) {
+    buf.extend_from_slice(format!("HTTP/1.1 {status} {reason}\r\n").as_bytes());
+    buf.extend_from_slice(format!("Content-Type: {content_type}\r\n").as_bytes());
+    buf.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    for (name, value) in extra {
+        buf.extend_from_slice(format!("{name}: {value}\r\n").as_bytes());
+    }
+    if close {
+        buf.extend_from_slice(b"Connection: close\r\n");
+    }
+    buf.extend_from_slice(b"\r\n");
+    buf.extend_from_slice(body);
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base64::block::BlockCodec;
+    use crate::coordinator::backend::rust_factory;
+    use crate::coordinator::RouterConfig;
+
+    fn router() -> Router {
+        Router::new(rust_factory(), RouterConfig::default())
+    }
+
+    fn get(path: &str) -> HttpRequest {
+        HttpRequest {
+            method: Method::Get,
+            path: path.to_string(),
+            query: Vec::new(),
+            content_type: None,
+            close: false,
+            body: Vec::new(),
+        }
+    }
+
+    fn post(target: &str, body: &[u8]) -> HttpRequest {
+        let (path, query_str) = target.split_once('?').unwrap_or((target, ""));
+        HttpRequest {
+            method: Method::Post,
+            path: path.to_string(),
+            query: query_str
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| {
+                    let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+                    (k.to_string(), v.to_string())
+                })
+                .collect(),
+            content_type: None,
+            close: false,
+            body: body.to_vec(),
+        }
+    }
+
+    fn run(router: &Router, req: HttpRequest) -> (String, Vec<u8>, bool) {
+        let mut session = SessionState::new(4);
+        let work = HttpWork { job: HttpJob::Request(req), draining: false };
+        let (out, close) = respond(work, router, &mut session, Vec::new());
+        let (head, body) = split_response(&out);
+        (head, body, close)
+    }
+
+    /// Split one response into head text and de-framed body bytes
+    /// (handles both Content-Length and single-chunk chunked replies).
+    fn split_response(out: &[u8]) -> (String, Vec<u8>) {
+        let at = out.windows(4).position(|w| w == b"\r\n\r\n").expect("complete head") + 4;
+        let head = String::from_utf8(out[..at - 4].to_vec()).unwrap();
+        let mut body = Vec::new();
+        if head.contains("Transfer-Encoding: chunked") {
+            let mut rest = &out[at..];
+            loop {
+                let eol = rest.windows(2).position(|w| w == b"\r\n").expect("chunk size line");
+                let size =
+                    usize::from_str_radix(std::str::from_utf8(&rest[..eol]).unwrap(), 16).unwrap();
+                rest = &rest[eol + 2..];
+                if size == 0 {
+                    assert_eq!(rest, b"\r\n", "terminal chunk ends the response");
+                    break;
+                }
+                body.extend_from_slice(&rest[..size]);
+                assert_eq!(&rest[size..size + 2], b"\r\n");
+                rest = &rest[size + 2..];
+            }
+        } else {
+            body.extend_from_slice(&out[at..]);
+        }
+        (head, body)
+    }
+
+    #[test]
+    fn healthz_ok_and_draining() {
+        let rt = router();
+        let (head, body, close) = run(&rt, get("/healthz"));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(body, b"ok\n");
+        assert!(!close);
+        let mut session = SessionState::new(4);
+        let work = HttpWork { job: HttpJob::Request(get("/healthz")), draining: true };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        let (head, body) = split_response(&out);
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert_eq!(body, b"draining\n");
+        assert!(close, "draining health check closes");
+    }
+
+    #[test]
+    fn encode_roundtrips_against_block_codec() {
+        let rt = router();
+        let data = b"hello, gateway".to_vec();
+        let (head, body, _) = run(&rt, post("/encode", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(body, BlockCodec::new(Alphabet::standard()).encode(&data));
+        let (head, decoded, _) = run(&rt, post("/decode", &body));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(decoded, data);
+    }
+
+    #[test]
+    fn decode_error_is_422() {
+        let rt = router();
+        let (head, body, close) = run(&rt, post("/decode", b"not!!base64"));
+        assert!(head.starts_with("HTTP/1.1 422"), "{head}");
+        assert!(String::from_utf8_lossy(&body).contains("invalid byte"), "{body:?}");
+        assert!(!close, "a 422 keeps the connection");
+    }
+
+    #[test]
+    fn datauri_prefixes_mime() {
+        let rt = router();
+        let mut req = post("/datauri", b"\x89PNG");
+        req.content_type = Some("image/png".to_string());
+        let (head, body, _) = run(&rt, req);
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        let expect = format!(
+            "data:image/png;base64,{}",
+            String::from_utf8(BlockCodec::new(Alphabet::standard()).encode(b"\x89PNG")).unwrap()
+        );
+        assert_eq!(String::from_utf8(body).unwrap(), expect);
+    }
+
+    #[test]
+    fn wrapped_encode_and_invalid_wrap() {
+        let rt = router();
+        let data = vec![0xA5u8; 100];
+        let (head, body, _) = run(&rt, post("/encode?wrap=8", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        let oracle = MimeCodec::new(Alphabet::standard()).with_line_len(8).unwrap().encode(&data);
+        assert_eq!(body, oracle);
+        let (head, body, _) = run(&rt, post("/encode?wrap=7", &data));
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        assert!(
+            String::from_utf8_lossy(&body).contains("invalid wrap line length 7"),
+            "{body:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_route_and_method() {
+        let rt = router();
+        let (head, _, _) = run(&rt, get("/nope"));
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        let (head, _, _) = run(&rt, get("/encode"));
+        assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+        assert!(head.contains("Allow: POST"), "{head}");
+        let (head, _, _) = run(&rt, post("/metrics", b""));
+        assert!(head.contains("Allow: GET"), "{head}");
+    }
+
+    #[test]
+    fn bad_params_are_400() {
+        let rt = router();
+        for target in [
+            "/encode?alphabet=rot13",
+            "/decode?mode=wat",
+            "/decode?ws=vertical",
+            "/decode?wrap=76",
+            "/encode?mode=forgiving",
+        ] {
+            let (head, _, _) = run(&rt, post(target, b"AAAA"));
+            assert!(head.starts_with("HTTP/1.1 400"), "{target}: {head}");
+        }
+    }
+
+    #[test]
+    fn metrics_endpoint_renders_text() {
+        let rt = router();
+        let _ = run(&rt, post("/encode", b"count me"));
+        let (head, body, _) = run(&rt, get("/metrics"));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("b64simd_requests_total"), "{text}");
+        assert!(text.contains("b64simd_http_requests_total"), "{text}");
+    }
+
+    #[test]
+    fn streamed_encode_roundtrip() {
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let mut wire = Vec::new();
+        let work = HttpWork { job: HttpJob::StreamBegin(post("/encode", b"")), draining: false };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        wire.extend_from_slice(&out);
+        for piece in data.chunks(7777) {
+            let work =
+                HttpWork { job: HttpJob::StreamChunk(piece.to_vec()), draining: false };
+            let (out, close) = respond(work, &rt, &mut session, Vec::new());
+            assert!(!close);
+            wire.extend_from_slice(&out);
+        }
+        let work = HttpWork { job: HttpJob::StreamEnd { close: false }, draining: false };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        wire.extend_from_slice(&out);
+        let (head, body) = split_response(&wire);
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+        assert_eq!(body, BlockCodec::new(Alphabet::standard()).encode(&data));
+        assert_eq!(session.open_count(), 0, "stream closed");
+    }
+
+    #[test]
+    fn streamed_decode_error_truncates() {
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let work = HttpWork { job: HttpJob::StreamBegin(post("/decode", b"")), draining: false };
+        let (_, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        let work =
+            HttpWork { job: HttpJob::StreamChunk(b"!!!!not base64".to_vec()), draining: false };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(close, "mid-stream decode error closes");
+        assert!(out.is_empty(), "no terminal chunk after a mid-stream error");
+        assert_eq!(session.open_count(), 0);
+    }
+
+    #[test]
+    fn streamed_begin_error_swallows_body() {
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let work = HttpWork {
+            job: HttpJob::StreamBegin(post("/decode?mode=wat", b"")),
+            draining: false,
+        };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close, "keep reading the body");
+        let (head, _) = split_response(&out);
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        // Body chunks find no stream and answer nothing.
+        let work = HttpWork { job: HttpJob::StreamChunk(b"AAAA".to_vec()), draining: false };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(out.is_empty() && !close);
+        let work = HttpWork { job: HttpJob::StreamEnd { close: false }, draining: false };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(out.is_empty() && !close, "exactly one response per request");
+    }
+
+    #[test]
+    fn rate_limited_immediate_counts_metric() {
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let work = HttpWork {
+            job: HttpJob::Immediate {
+                status: 429,
+                message: "rate limit exceeded\n".into(),
+                close: false,
+            },
+            draining: false,
+        };
+        let (out, close) = respond(work, &rt, &mut session, Vec::new());
+        let (head, _) = split_response(&out);
+        assert!(head.starts_with("HTTP/1.1 429"), "{head}");
+        assert!(!close);
+        assert_eq!(
+            rt.metrics().rate_limited.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn timeout_and_panic_responses_close() {
+        let t = String::from_utf8(timeout_response("timeout: idle connection")).unwrap();
+        assert!(t.starts_with("HTTP/1.1 408"), "{t}");
+        assert!(t.contains("Connection: close"), "{t}");
+        let p = String::from_utf8(panic_response()).unwrap();
+        assert!(p.starts_with("HTTP/1.1 500"), "{p}");
+        assert!(p.contains("Connection: close"), "{p}");
+    }
+}

@@ -1,0 +1,221 @@
+//! [`HttpSink`]: the router's in-place reply path, framed as HTTP.
+//!
+//! `Router::process_into` writes reply payloads straight into the
+//! socket-bound buffer through the `ResponseSink` trait; the native
+//! transport's `ReplySink` frames them as `0x81` data frames, this sink
+//! frames the *same* in-place bytes as a `200 OK` chunked response. The
+//! whole payload becomes one chunk: the head ends with an 8-hex-digit
+//! chunk-size placeholder (`00000000\r\n` — leading zeros are valid
+//! chunk sizes per RFC 7230 §4.1) that [`HttpSink::commit`] backfills
+//! once the payload length is known, so commit stays O(1) with no
+//! memmove of a multi-megabyte body. Chunked framing is used even
+//! though the length is known at commit time because the router may
+//! abort and replace the frame mid-write — a `Content-Length` head
+//! would have to be rewritten, a chunked head is simply truncated.
+
+use crate::coordinator::{FrameTooLarge, ResponseSink};
+
+/// Width of the backfilled chunk-size field.
+const SIZE_DIGITS: usize = 8;
+
+/// Placeholder bytes between head and payload: 8 hex digits + CRLF.
+const PLACEHOLDER: usize = SIZE_DIGITS + 2;
+
+/// A `ResponseSink` producing one chunked HTTP/1.1 response in a
+/// reusable connection buffer.
+pub struct HttpSink {
+    buf: Vec<u8>,
+    /// Offset where this response began (everything before is earlier
+    /// pipelined output).
+    start: usize,
+    /// Offset of the first payload byte (just past the placeholder).
+    payload_start: usize,
+    /// `Content-Type` for the data reply.
+    content_type: &'static str,
+    /// Response-body prefix written before the router's payload (the
+    /// `data:<mime>;base64,` head of a data URI).
+    prefix: Option<String>,
+    /// Advertise `Connection: close` (request asked, or draining).
+    close: bool,
+}
+
+impl HttpSink {
+    /// A sink appending to `buf`. `prefix` bytes, when present, are
+    /// emitted as payload ahead of whatever the router writes.
+    pub fn new(
+        buf: Vec<u8>,
+        content_type: &'static str,
+        close: bool,
+        prefix: Option<String>,
+    ) -> Self {
+        let start = buf.len();
+        Self { buf, start, payload_start: start, content_type, prefix, close }
+    }
+
+    /// Recover the buffer (now holding the complete response).
+    pub fn into_buf(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl ResponseSink for HttpSink {
+    fn begin_data(&mut self, _id: u64) {
+        self.buf.extend_from_slice(b"HTTP/1.1 200 OK\r\nContent-Type: ");
+        self.buf.extend_from_slice(self.content_type.as_bytes());
+        self.buf.extend_from_slice(b"\r\nTransfer-Encoding: chunked\r\n");
+        if self.close {
+            self.buf.extend_from_slice(b"Connection: close\r\n");
+        }
+        self.buf.extend_from_slice(b"\r\n00000000\r\n");
+        self.payload_start = self.buf.len();
+        if let Some(prefix) = &self.prefix {
+            self.buf.extend_from_slice(prefix.as_bytes());
+        }
+    }
+
+    fn grow(&mut self, n: usize) -> &mut [u8] {
+        let at = self.buf.len();
+        self.buf.resize(at + n, 0);
+        &mut self.buf[at..]
+    }
+
+    fn mark(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn truncate_to(&mut self, mark: usize) {
+        self.buf.truncate(mark);
+    }
+
+    fn commit(&mut self) -> Result<(), FrameTooLarge> {
+        let n = self.buf.len() - self.payload_start;
+        if n >= 1 << (4 * SIZE_DIGITS) {
+            // Payload would not fit the fixed-width size field. A
+            // buffered body is capped far below this; treat it like the
+            // native path's oversized frame (connection-fatal).
+            self.buf.truncate(self.start);
+            return Err(FrameTooLarge(n));
+        }
+        if n == 0 {
+            // `chunked` forbids an empty data chunk (it terminates the
+            // body), so drop the placeholder and go straight to the
+            // terminal chunk.
+            self.buf.truncate(self.payload_start - PLACEHOLDER);
+        } else {
+            let at = self.payload_start - PLACEHOLDER;
+            for i in 0..SIZE_DIGITS {
+                let nibble = (n >> (4 * (SIZE_DIGITS - 1 - i))) & 0xF;
+                self.buf[at + i] = b"0123456789abcdef"[nibble];
+            }
+            self.buf.extend_from_slice(b"\r\n");
+        }
+        self.buf.extend_from_slice(b"0\r\n\r\n");
+        Ok(())
+    }
+
+    fn abort(&mut self) {
+        self.buf.truncate(self.start);
+    }
+
+    fn error_reply(&mut self, _id: u64, message: &str) -> Result<(), FrameTooLarge> {
+        self.buf.truncate(self.start);
+        // Admission rejections ("busy: ...") are retryable server
+        // pressure; everything else is a fault of the request payload.
+        let (status, reason) = if message.starts_with("busy") {
+            (503, "Service Unavailable")
+        } else {
+            (422, "Unprocessable Entity")
+        };
+        super::respond::write_simple(&mut self.buf, status, reason, message, self.close);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn committed(payload: &[u8], prefix: Option<&str>) -> Vec<u8> {
+        let mut sink = HttpSink::new(Vec::new(), "text/plain", false, prefix.map(String::from));
+        sink.begin_data(7);
+        sink.grow(payload.len()).copy_from_slice(payload);
+        sink.commit().unwrap();
+        sink.into_buf()
+    }
+
+    #[test]
+    fn single_chunk_framing_with_backfilled_size() {
+        let out = committed(b"aGVsbG8=", None);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n00000008\r\naGVsbG8=\r\n0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn prefix_counts_as_payload() {
+        let out = committed(b"AAAA", Some("data:text/plain;base64,"));
+        let text = String::from_utf8(out).unwrap();
+        // 23 prefix bytes + 4 payload = 0x1b.
+        assert!(text.ends_with("0000001b\r\ndata:text/plain;base64,AAAA\r\n0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn empty_payload_has_no_empty_chunk() {
+        let out = committed(b"", None);
+        let text = String::from_utf8(out).unwrap();
+        // An empty data chunk would terminate the body early; the
+        // placeholder must vanish entirely.
+        assert!(text.ends_with("\r\n\r\n0\r\n\r\n"), "{text}");
+        assert!(!text.contains("00000000"), "{text}");
+    }
+
+    #[test]
+    fn truncate_trims_overreserved_payload() {
+        let mut sink = HttpSink::new(Vec::new(), "application/octet-stream", false, None);
+        sink.begin_data(1);
+        let m = sink.mark();
+        sink.grow(64);
+        sink.truncate_to(m + 3);
+        let end = sink.mark();
+        sink.buf[end - 3..].copy_from_slice(b"abc");
+        sink.commit().unwrap();
+        let text = String::from_utf8(sink.into_buf()).unwrap();
+        assert!(text.ends_with("00000003\r\nabc\r\n0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn abort_then_error_replaces_frame_in_place() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"PRIOR");
+        let mut sink = HttpSink::new(buf, "text/plain", false, None);
+        sink.begin_data(1);
+        sink.grow(100);
+        sink.abort();
+        sink.error_reply(1, "invalid byte 0x21 at offset 3").unwrap();
+        let out = sink.into_buf();
+        assert_eq!(&out[..5], b"PRIOR", "earlier pipelined output untouched");
+        let text = String::from_utf8_lossy(&out[5..]);
+        assert!(text.starts_with("HTTP/1.1 422 Unprocessable Entity\r\n"), "{text}");
+        assert!(text.contains("invalid byte 0x21 at offset 3"), "{text}");
+    }
+
+    #[test]
+    fn busy_maps_to_503() {
+        let mut sink = HttpSink::new(Vec::new(), "text/plain", true, None);
+        sink.error_reply(1, "busy: 4096 requests in flight (limit 4096)").unwrap();
+        let text = String::from_utf8(sink.into_buf()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn close_flag_advertises_connection_close() {
+        let mut sink = HttpSink::new(Vec::new(), "text/plain", true, None);
+        sink.begin_data(1);
+        sink.grow(1)[0] = b'x';
+        sink.commit().unwrap();
+        let text = String::from_utf8(sink.into_buf()).unwrap();
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+}

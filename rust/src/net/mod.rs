@@ -41,6 +41,11 @@
 //!   [`frame::WriteQueue`] survives partial writes until the next
 //!   `EPOLLOUT`, and [`frame::ReplySink`] builds complete reply frames
 //!   in place for the zero-copy response path;
+//! * [`http`] — the HTTP/1.1 gateway: a second wire protocol on the
+//!   same shards. Listeners carry a [`http::Protocol`] tag; accepted
+//!   connections route to either the native `FrameMachine` or the
+//!   gateway's `HttpMachine`, and both feed the same workers, session
+//!   streaming state and metrics;
 //! * `conn` — per-connection state and the backpressure caps
 //!   (pipelining depth, write high-water mark) plus the lifecycle
 //!   deadline timestamps (idle / read-stall / write-stall);
@@ -111,6 +116,7 @@
 pub mod buffer;
 pub mod faults;
 pub mod frame;
+pub mod http;
 
 #[cfg(target_os = "linux")]
 pub mod sys;

@@ -36,15 +36,21 @@ impl TimerWheel {
     }
 
     /// Milliseconds until the earliest deadline, as an `epoll_wait`
-    /// timeout: `-1` (block indefinitely) when empty, else the
-    /// rounded-up remaining time (≥ 1, capped to `i32::MAX`).
+    /// timeout: `-1` (block indefinitely) when empty, `0` when the
+    /// earliest entry is already due (the wait must poll, not sleep —
+    /// a ≥1 ms floor here made every timeout pass on a loaded shard
+    /// oversleep past a due deadline), else the rounded-up remaining
+    /// time (≥ 1, capped to `i32::MAX`).
     pub fn next_timeout_ms(&self, now: Instant) -> i32 {
         match self.heap.peek() {
             None => -1,
             Some(Reverse((deadline, _))) => {
                 let remaining = deadline.saturating_duration_since(now);
-                // Round up so the wait never wakes *before* the
-                // deadline and spins on a not-yet-due entry.
+                if remaining.is_zero() {
+                    return 0;
+                }
+                // Round *future* deadlines up so the wait never wakes
+                // before the deadline and spins on a not-yet-due entry.
                 let ms = remaining.as_millis().saturating_add(1);
                 ms.min(i32::MAX as u128) as i32
             }
@@ -96,7 +102,21 @@ mod tests {
         w.schedule(now + Duration::from_millis(500), 7);
         let ms = w.next_timeout_ms(now);
         assert!((1..=502).contains(&ms), "got {ms}");
-        assert_eq!(w.next_timeout_ms(now + Duration::from_secs(1)), 1, "due entries round up to 1ms");
+        // A due (or past-due) entry must yield a zero timeout — the
+        // wait polls and the deadline is acted on immediately. The old
+        // behaviour returned ≥ 1 ms here, oversleeping a due deadline
+        // on every pass.
+        assert_eq!(w.next_timeout_ms(now + Duration::from_millis(500)), 0, "due entry polls");
+        assert_eq!(w.next_timeout_ms(now + Duration::from_secs(1)), 0, "past-due entry polls");
+    }
+
+    #[test]
+    fn future_deadlines_round_up_never_zero() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        w.schedule(now + Duration::from_micros(300), 1);
+        let ms = w.next_timeout_ms(now);
+        assert!((1..=2).contains(&ms), "sub-ms future deadline rounds up to ≥1, got {ms}");
     }
 
     #[test]

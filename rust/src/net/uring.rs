@@ -56,14 +56,16 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::buffer::BufferPool;
-use super::conn::{Conn, WRITE_HIGH_WATER};
+use super::conn::{Conn, Job, Machine, WRITE_HIGH_WATER};
 use super::driver::{
-    lock_clean, token, token_parts, worker_loop, Completion, NetServer, WorkItem, DRAIN_POLL_MS,
-    HEARTBEAT,
+    lock_clean, peer_ip, refuse_busy_http, token, token_parts, worker_loop, Completion, NetServer,
+    WorkItem, DRAIN_POLL_MS, HEARTBEAT,
 };
+use super::frame::FrameMachine;
+use super::http::{timeout_response, HttpMachine, Protocol};
 use super::sys::{Cqe, EventFd, IoUring, IoVec, Sqe, ECANCELED, EINVAL, IORING_CQE_F_MORE};
 use super::timer::TimerWheel;
-use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::{Metrics, Router};
 use crate::server::service::{
@@ -122,11 +124,13 @@ const CANCEL_TOKEN: u64 = OP_CANCEL << 61;
 pub(crate) fn spawn(
     router: Arc<Router>,
     config: &ServerConfig,
-    listeners: Vec<TcpListener>,
+    listeners: Vec<(TcpListener, Protocol)>,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
 ) -> std::io::Result<NetServer> {
     let limiter = ConnLimiter::new(config.max_connections);
+    // One token table across every shard, as in the epoll transport.
+    let rate = RateLimiter::new(config.rate_limit);
     let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
     let work_rx = Arc::new(Mutex::new(work_rx));
     let metrics = router.metrics().clone();
@@ -136,7 +140,10 @@ pub(crate) fn spawn(
     let mut wakes: Vec<Arc<EventFd>> = Vec::new();
     let mut built = Ok(());
     for (shard_id, listener) in listeners.into_iter().enumerate() {
-        match spawn_shard(shard_id, listener, config, &metrics, &limiter, &work_tx, &stop, &drain) {
+        let spawned = spawn_shard(
+            shard_id, listener, config, &metrics, &limiter, &rate, &work_tx, &stop, &drain,
+        );
+        match spawned {
             Ok((thread, wake)) => {
                 threads.push(thread);
                 wakes.push(wake);
@@ -183,14 +190,16 @@ pub(crate) fn spawn(
 #[allow(clippy::too_many_arguments)]
 fn spawn_shard(
     shard_id: usize,
-    listener: TcpListener,
+    listener: (TcpListener, Protocol),
     config: &ServerConfig,
     metrics: &Arc<Metrics>,
     limiter: &Arc<ConnLimiter>,
+    rate: &Option<Arc<RateLimiter>>,
     work_tx: &mpsc::Sender<WorkItem>,
     stop: &Arc<AtomicBool>,
     drain: &Arc<AtomicBool>,
 ) -> std::io::Result<(JoinHandle<()>, Arc<EventFd>)> {
+    let (listener, protocol) = listener;
     let wake = Arc::new(EventFd::new()?);
     let ring = IoUring::new(SQ_ENTRIES, CQ_ENTRIES)?;
     // One read page per possible connection, capped so the pinned
@@ -213,6 +222,8 @@ fn spawn_shard(
     let lp = ULoop {
         ring,
         listener: Some(listener),
+        protocol,
+        rate: rate.clone(),
         wake: wake.clone(),
         wake_buf: Box::new(0),
         wake_armed: false,
@@ -288,6 +299,11 @@ struct ULoop {
     ring: IoUring,
     /// Dropped when drain begins (its ACCEPT op is cancelled first).
     listener: Option<TcpListener>,
+    /// Wire protocol of every connection accepted from this listener.
+    protocol: Protocol,
+    /// Per-client token buckets for the HTTP gateway (`None` = off or a
+    /// native shard); shared across shards.
+    rate: Option<Arc<RateLimiter>>,
     wake: Arc<EventFd>,
     /// Heap word the armed wake READ lands in (stable address).
     wake_buf: Box<u64>,
@@ -476,7 +492,10 @@ impl ULoop {
     fn admit(&mut self, stream: TcpStream) {
         let Some(permit) = self.limiter.try_acquire() else {
             Metrics::inc(&self.metrics.conns_refused, 1);
-            refuse_busy(stream, &self.limiter);
+            match self.protocol {
+                Protocol::Native => refuse_busy(stream, &self.limiter),
+                Protocol::Http => refuse_busy_http(stream, &self.limiter),
+            }
             return;
         };
         // No set_nonblocking: uring ops never block the submitter, and
@@ -488,7 +507,15 @@ impl ULoop {
             self.conns.len() - 1
         });
         let epoch = self.epochs[idx];
-        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit);
+        let machine = match self.protocol {
+            Protocol::Native => Machine::Native(FrameMachine::new(self.pool.get())),
+            Protocol::Http => Machine::Http(Box::new(HttpMachine::new(
+                self.pool.get(),
+                self.rate.clone(),
+                peer_ip(&stream),
+            ))),
+        };
+        let conn = Conn::new(stream, epoch, self.max_streams, &mut self.pool, permit, machine);
         Metrics::inc(&self.metrics.conns_accepted, 1);
         Metrics::inc(&self.metrics.conns_open, 1);
         Metrics::inc(&self.shard.conns_accepted, 1);
@@ -530,7 +557,7 @@ impl ULoop {
                         }
                         // Frame-granularity read-stall clock, exactly as
                         // in the epoll loop.
-                        if uc.conn.frames.buffered() == 0 {
+                        if uc.conn.machine.buffered() == 0 {
                             uc.conn.frame_start = None;
                         } else if parsed > 0 || uc.conn.frame_start.is_none() {
                             uc.conn.frame_start = Some(now);
@@ -544,12 +571,18 @@ impl ULoop {
             }
             // 2. Dispatch the next request if none is in flight.
             if !uc.conn.busy {
-                if let Some(msg) = uc.conn.inbox.pop_front() {
+                if let Some(mut job) = uc.conn.inbox.pop_front() {
+                    // Sample the drain flag as the job leaves the
+                    // inbox, exactly as in the epoll loop.
+                    if let Job::Http(w) = &mut job {
+                        w.draining = self.draining;
+                    }
                     uc.conn.busy = true;
-                    let buf = if self.zero_copy { self.pool.get() } else { Vec::new() };
+                    let pooled = self.zero_copy || uc.conn.is_http();
+                    let buf = if pooled { self.pool.get() } else { Vec::new() };
                     let item = WorkItem {
                         token: token(idx, uc.conn.epoch),
-                        msg,
+                        job,
                         session: uc.conn.session.clone(),
                         done: self.completions.clone(),
                         wake: self.wake.clone(),
@@ -652,7 +685,7 @@ impl ULoop {
                 let n = res as usize;
                 let start = page * READ_PAGE;
                 Metrics::inc(&self.metrics.net_bytes_in, n as u64);
-                uc.conn.frames.push(&self.arena[start..start + n]);
+                uc.conn.machine.push(&self.arena[start..start + n]);
                 uc.conn.last_activity = Instant::now();
             }
         }
@@ -797,6 +830,17 @@ impl ULoop {
                 uc.conn.busy = false;
                 uc.conn.last_activity = Instant::now();
                 match c.frame {
+                    Some(frame) if frame.is_empty() => {
+                        // Nothing to send (an HTTP stream chunk
+                        // swallowed after an error): recycle the sink
+                        // buffer, skip the frame counters.
+                        self.pool.put(frame);
+                        if c.close_after {
+                            uc.conn.inbox.clear();
+                            uc.conn.corrupt = true;
+                            uc.conn.eof = true;
+                        }
+                    }
                     Some(frame) => {
                         let spare = uc.conn.write.adopt(frame);
                         self.pool.put(spare);
@@ -859,8 +903,19 @@ impl ULoop {
                     && now >= uc.conn.last_activity + self.idle_timeout;
                 if read_stalled || idle {
                     Metrics::inc(&self.metrics.timeouts, 1);
-                    let frame =
-                        if read_stalled { stall_timeout_frame() } else { idle_timeout_frame() };
+                    // Native `0x82` frame vs HTTP `408`, as in the
+                    // epoll loop.
+                    let frame = if uc.conn.is_http() {
+                        Some(timeout_response(if read_stalled {
+                            "timeout: request frame stalled"
+                        } else {
+                            "timeout: idle connection"
+                        }))
+                    } else if read_stalled {
+                        stall_timeout_frame()
+                    } else {
+                        idle_timeout_frame()
+                    };
                     if let Some(frame) = frame {
                         uc.conn.write.push_bytes(&frame);
                         uc.conn.write_progress = now;

@@ -36,10 +36,13 @@ use std::time::{Duration, Instant};
 
 use super::proto::{resolve_alphabet, Message, ProtoError};
 use crate::base64::{Mode, Whitespace};
-use crate::coordinator::backpressure::ConnLimiter;
+use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
 use crate::net::frame::{FrameMachine, ReplySink};
+use crate::net::http::{
+    busy_response, panic_response, respond, timeout_response, HttpMachine, HttpWork,
+};
 
 /// Which connection subsystem `serve` runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -207,6 +210,20 @@ pub struct ServerConfig {
     /// waits for in-flight requests to be answered and flushed before
     /// force-closing what remains. `B64SIMD_DRAIN_MS`, default 5s.
     pub drain_grace: Duration,
+    /// HTTP/1.1 gateway bind address ([`crate::net::http`]). On the
+    /// sharded transports every reactor also binds this address via
+    /// `SO_REUSEPORT` and routes its connections through the gateway's
+    /// request machine; the threaded transport runs a second accept
+    /// loop. `B64SIMD_HTTP` (e.g. `127.0.0.1:8040`); `None` (the
+    /// default — unset or invalid, with a warning) disables the
+    /// gateway.
+    pub http_addr: Option<SocketAddr>,
+    /// Per-client-IP rate limit for HTTP `POST` requests, in requests
+    /// per second (fractional rates allowed; burst = one second's
+    /// worth). Refusals are `429` responses that count into the
+    /// `rate_limited` metric. `B64SIMD_RATELIMIT`; `0` (the default)
+    /// disables. Native-protocol listeners are never rate limited.
+    pub rate_limit: f64,
 }
 
 impl ServerConfig {
@@ -257,6 +274,40 @@ impl ServerConfig {
         }
     }
 
+    /// `B64SIMD_HTTP` gateway address; unset disables, invalid warns
+    /// and disables (same warn-don't-panic contract as the other env
+    /// defaults).
+    fn http_addr_from_env() -> Option<SocketAddr> {
+        match std::env::var("B64SIMD_HTTP") {
+            Err(_) => None,
+            Ok(v) => match v.parse::<SocketAddr>() {
+                Ok(a) => Some(a),
+                Err(_) => {
+                    eprintln!(
+                        "b64simd: ignoring invalid B64SIMD_HTTP value '{v}' \
+                         (want an address like 127.0.0.1:8040)"
+                    );
+                    None
+                }
+            },
+        }
+    }
+
+    /// `B64SIMD_RATELIMIT` requests/second; `0` (and unset) disables,
+    /// invalid or negative warns and disables.
+    fn rate_limit_from_env() -> f64 {
+        match std::env::var("B64SIMD_RATELIMIT") {
+            Err(_) => 0.0,
+            Ok(v) => match v.parse::<f64>() {
+                Ok(r) if r.is_finite() && r >= 0.0 => r,
+                _ => {
+                    eprintln!("b64simd: ignoring invalid B64SIMD_RATELIMIT value '{v}'");
+                    0.0
+                }
+            },
+        }
+    }
+
     /// Millisecond env knob for the lifecycle deadlines; `0` disables
     /// the deadline it configures.
     fn timeout_from_env(key: &str, default: Duration) -> Duration {
@@ -293,6 +344,8 @@ impl Default for ServerConfig {
             read_timeout: Self::timeout_from_env("B64SIMD_TIMEOUT_READ", Duration::from_secs(10)),
             write_timeout: Self::timeout_from_env("B64SIMD_TIMEOUT_WRITE", Duration::from_secs(10)),
             drain_grace: Self::timeout_from_env("B64SIMD_DRAIN_MS", Duration::from_secs(5)),
+            http_addr: Self::http_addr_from_env(),
+            rate_limit: Self::rate_limit_from_env(),
         }
     }
 }
@@ -303,6 +356,10 @@ impl Default for ServerConfig {
 pub struct ServerHandle {
     /// The bound address (useful with a port-0 request).
     pub addr: SocketAddr,
+    /// The HTTP gateway's bound address, when
+    /// [`ServerConfig::http_addr`] enabled it (useful with a port-0
+    /// request).
+    pub http_addr: Option<SocketAddr>,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
@@ -312,8 +369,10 @@ pub struct ServerHandle {
 
 /// How to nudge a blocked transport out of its wait.
 enum Waker {
-    /// Connect once to unblock a blocking `accept()`.
-    Connect(SocketAddr),
+    /// Connect once to each listed address to unblock its blocking
+    /// `accept()` loop (the native listener, plus the HTTP gateway's
+    /// when enabled).
+    Connect(Vec<SocketAddr>),
     /// Signal every reactor shard's eventfd.
     #[cfg(target_os = "linux")]
     Events(Vec<Arc<crate::net::sys::EventFd>>),
@@ -322,8 +381,10 @@ enum Waker {
 impl Waker {
     fn wake(&self) {
         match self {
-            Waker::Connect(addr) => {
-                let _ = TcpStream::connect(addr);
+            Waker::Connect(addrs) => {
+                for addr in addrs {
+                    let _ = TcpStream::connect(addr);
+                }
             }
             #[cfg(target_os = "linux")]
             Waker::Events(efds) => {
@@ -434,13 +495,30 @@ fn serve_sharded(
     drain: Arc<AtomicBool>,
     uring: bool,
 ) -> anyhow::Result<ServerHandle> {
+    use crate::net::http::Protocol;
     let shards = config.reactors.max(1);
-    let listeners = if shards > 1 {
-        crate::net::sys::reuseport_group(config.addr, shards)?
-    } else {
-        vec![TcpListener::bind(config.addr)?]
+    let bind_group = |addr: SocketAddr| -> std::io::Result<Vec<TcpListener>> {
+        if shards > 1 {
+            crate::net::sys::reuseport_group(addr, shards)
+        } else {
+            Ok(vec![TcpListener::bind(addr)?])
+        }
     };
-    let addr = listeners[0].local_addr()?;
+    let mut listeners: Vec<(TcpListener, Protocol)> = bind_group(config.addr)?
+        .into_iter()
+        .map(|l| (l, Protocol::Native))
+        .collect();
+    let addr = listeners[0].0.local_addr()?;
+    // The gateway gets its own listener group on the same shard count.
+    // One shard = one listener, so this adds `shards` HTTP reactors
+    // alongside the native ones — all feeding the same worker pool,
+    // connection limiter and metrics.
+    let mut http_addr = None;
+    if let Some(ha) = config.http_addr {
+        let group = bind_group(ha)?;
+        http_addr = Some(group[0].local_addr()?);
+        listeners.extend(group.into_iter().map(|l| (l, Protocol::Http)));
+    }
     let metrics = router.metrics().clone();
     let srv = if uring {
         crate::net::uring::spawn(router, &config, listeners, stop.clone(), drain.clone())?
@@ -449,6 +527,7 @@ fn serve_sharded(
     };
     Ok(ServerHandle {
         addr,
+        http_addr,
         stop,
         drain,
         threads: srv.threads,
@@ -470,15 +549,70 @@ fn serve_threaded(
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
 ) -> anyhow::Result<ServerHandle> {
-    let stop2 = stop.clone();
-    let drain2 = drain.clone();
+    // One connection cap across both listeners, as on the sharded
+    // transports; the rate limiter only ever gates HTTP connections.
     let limiter = ConnLimiter::new(config.max_connections);
+    let rate = RateLimiter::new(config.rate_limit);
+    let handle_metrics = router.metrics().clone();
+    let mut threads = Vec::new();
+    let mut wake_addrs = vec![addr];
+    let mut http_addr = None;
+    if let Some(ha) = config.http_addr {
+        let http_listener = TcpListener::bind(ha)?;
+        let bound = http_listener.local_addr()?;
+        http_addr = Some(bound);
+        wake_addrs.push(bound);
+        threads.push(accept_loop(
+            router.clone(),
+            config.clone(),
+            http_listener,
+            true,
+            rate.clone(),
+            limiter.clone(),
+            stop.clone(),
+            drain.clone(),
+        ));
+    }
+    threads.push(accept_loop(
+        router,
+        config,
+        listener,
+        false,
+        rate,
+        limiter,
+        stop.clone(),
+        drain.clone(),
+    ));
+    Ok(ServerHandle {
+        addr,
+        http_addr,
+        stop,
+        drain,
+        threads,
+        waker: Waker::Connect(wake_addrs),
+        metrics: handle_metrics,
+    })
+}
+
+/// One blocking accept loop (native or HTTP), spawning a thread per
+/// admitted connection. The accept thread tracks its connection
+/// threads and joins them before exiting (see [`serve_threaded`]).
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    router: Arc<Router>,
+    config: ServerConfig,
+    listener: TcpListener,
+    http: bool,
+    rate: Option<Arc<RateLimiter>>,
+    limiter: Arc<ConnLimiter>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+) -> JoinHandle<()> {
     let metrics = router.metrics().clone();
-    let handle_metrics = metrics.clone();
-    let accept_thread = std::thread::spawn(move || {
+    std::thread::spawn(move || {
         let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
         for stream in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) || drain2.load(Ordering::SeqCst) {
+            if stop.load(Ordering::SeqCst) || drain.load(Ordering::SeqCst) {
                 break;
             }
             // Reap finished connection threads as we go, so a
@@ -494,20 +628,32 @@ fn serve_threaded(
             let Ok(stream) = stream else { continue };
             let Some(permit) = limiter.try_acquire() else {
                 Metrics::inc(&metrics.conns_refused, 1);
-                refuse_busy(stream, &limiter);
+                if http {
+                    refuse_busy_over_http(stream, &limiter);
+                } else {
+                    refuse_busy(stream, &limiter);
+                }
                 continue;
             };
             Metrics::inc(&metrics.conns_accepted, 1);
             Metrics::inc(&metrics.conns_open, 1);
             let router = router.clone();
             let metrics = metrics.clone();
-            let stop3 = stop2.clone();
-            let drain3 = drain2.clone();
+            let rate = rate.clone();
+            let stop2 = stop.clone();
+            let drain2 = drain.clone();
             let config = config.clone();
             let spawned = std::thread::Builder::new()
                 .name("b64simd-conn".to_string())
                 .spawn(move || {
-                    let _ = handle_connection(stream, &router, &config, &metrics, &stop3, &drain3);
+                    if http {
+                        let _ = handle_http_connection(
+                            stream, &router, &config, &rate, &metrics, &stop2, &drain2,
+                        );
+                    } else {
+                        let _ =
+                            handle_connection(stream, &router, &config, &metrics, &stop2, &drain2);
+                    }
                     Metrics::dec(&metrics.conns_open, 1);
                     drop(permit);
                 });
@@ -527,14 +673,6 @@ fn serve_threaded(
         for t in conn_threads {
             let _ = t.join();
         }
-    });
-    Ok(ServerHandle {
-        addr,
-        stop,
-        drain,
-        threads: vec![accept_thread],
-        waker: Waker::Connect(addr),
-        metrics: handle_metrics,
     })
 }
 
@@ -572,6 +710,164 @@ pub(crate) fn refuse_busy(stream: TcpStream, limiter: &ConnLimiter) {
             }
         }
     }
+}
+
+/// [`refuse_busy`]'s HTTP twin: a one-shot `503` with the same
+/// best-effort nonblocking-write semantics.
+fn refuse_busy_over_http(stream: TcpStream, limiter: &ConnLimiter) {
+    let reply = busy_response(limiter.open(), limiter.max());
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(true).ok();
+    if (&stream).write_all(&reply).is_err() {
+        return;
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut sink = [0u8; 4096];
+    for _ in 0..16 {
+        match (&stream).read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// One blocking HTTP gateway connection: the threaded-transport twin of
+/// the reactors' `HttpMachine` + worker path, with the same lifecycle
+/// rules as [`handle_connection`] — poll-tick reads observing
+/// `stop`/`drain` and the idle / read-stall deadlines (answered with a
+/// `408` instead of the native timeout frames), write timeouts on the
+/// socket, and `catch_unwind` around each response.
+fn handle_http_connection(
+    stream: TcpStream,
+    router: &Router,
+    config: &ServerConfig,
+    rate: &Option<Arc<RateLimiter>>,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    drain: &AtomicBool,
+) -> std::io::Result<()> {
+    let mut stream = stream;
+    stream.set_nodelay(true).ok();
+    let mut tick = Duration::from_millis(100);
+    for t in [config.idle_timeout, config.read_timeout] {
+        if t != Duration::ZERO {
+            tick = tick.min(t);
+        }
+    }
+    stream.set_read_timeout(Some(tick.max(Duration::from_millis(5))))?;
+    if config.write_timeout != Duration::ZERO {
+        stream.set_write_timeout(Some(config.write_timeout)).ok();
+    }
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or(std::net::IpAddr::V4(std::net::Ipv4Addr::UNSPECIFIED));
+    let mut machine = HttpMachine::new(Vec::new(), rate.clone(), peer);
+    let mut session = SessionState::new(config.max_streams_per_connection);
+    let mut scratch = vec![0u8; 64 << 10];
+    let mut last_activity = Instant::now();
+    let mut frame_start: Option<Instant> = None;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match crate::net::faults::read_stream(&mut stream, &mut scratch) {
+            Ok(0) => return Ok(()),
+            Ok(n) => {
+                Metrics::inc(&metrics.net_bytes_in, n as u64);
+                machine.push(&scratch[..n]);
+                last_activity = Instant::now();
+                let mut parsed_any = false;
+                while let Some(job) = machine.next_job() {
+                    parsed_any = true;
+                    Metrics::inc(&metrics.frames_in, 1);
+                    let work = HttpWork { job, draining: drain.load(Ordering::SeqCst) };
+                    if !serve_one_http(work, router, &mut session, &stream, metrics)? {
+                        return Ok(()); // close-after response delivered
+                    }
+                }
+                if machine.buffered() == 0 {
+                    frame_start = None;
+                } else if parsed_any || frame_start.is_none() {
+                    frame_start = Some(Instant::now());
+                }
+                if drain.load(Ordering::SeqCst) {
+                    // Every request parsed so far is answered (just
+                    // above); a draining server reads nothing more.
+                    return Ok(());
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Poll tick: nothing arrived within `tick`.
+                if drain.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                let now = Instant::now();
+                let read_stalled = config.read_timeout != Duration::ZERO
+                    && frame_start.map_or(false, |t| now >= t + config.read_timeout);
+                let idle = config.idle_timeout != Duration::ZERO
+                    && frame_start.is_none()
+                    && now >= last_activity + config.idle_timeout;
+                if read_stalled || idle {
+                    Metrics::inc(&metrics.timeouts, 1);
+                    let notice = timeout_response(if read_stalled {
+                        "timeout: request frame stalled"
+                    } else {
+                        "timeout: idle connection"
+                    });
+                    if (&stream).write_all(&notice).is_ok() {
+                        Metrics::inc(&metrics.frames_out, 1);
+                        Metrics::inc(&metrics.net_bytes_out, notice.len() as u64);
+                    }
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Build and write the response for one HTTP job on the blocking
+/// transport. Returns `Ok(false)` when the connection must close (the
+/// response said so, or the handler panicked).
+fn serve_one_http(
+    work: HttpWork,
+    router: &Router,
+    session: &mut SessionState,
+    stream: &TcpStream,
+    metrics: &Metrics,
+) -> std::io::Result<bool> {
+    let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        respond(work, router, session, Vec::new())
+    }));
+    let (reply, close) = match outcome {
+        Ok((reply, close)) => (reply, close),
+        Err(_) => {
+            Metrics::inc(&metrics.worker_panics, 1);
+            (panic_response(), true)
+        }
+    };
+    if reply.is_empty() {
+        // A swallowed stream job (error already answered): no bytes.
+        return Ok(!close);
+    }
+    if let Err(e) = (&*stream).write_all(&reply) {
+        if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) {
+            // The peer stopped reading its replies: the write-stall
+            // shed, enforced here by the socket write timeout.
+            Metrics::inc(&metrics.timeouts, 1);
+        }
+        return Err(e);
+    }
+    Metrics::inc(&metrics.frames_out, 1);
+    Metrics::inc(&metrics.net_bytes_out, reply.len() as u64);
+    Ok(!close)
 }
 
 /// Serialized close-notice frames for the connection deadlines. The
@@ -975,6 +1271,38 @@ mod tests {
         for bad in ["", "yes", "no", "ON", "True", "2"] {
             assert_eq!(ServerConfig::parse_switch(bad), None, "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn stream_begin_with_invalid_wrap_is_a_typed_error() {
+        // Regression: `MimeCodec::with_line_len` used to assert on a
+        // bad line length, so a StreamBegin frame carrying `wrap = 1`
+        // panicked the handler (an `0x82` only via the catch_unwind
+        // backstop). It must be an ordinary typed error reply.
+        use crate::coordinator::backend::rust_factory;
+        use crate::coordinator::RouterConfig;
+        let router = Router::new(rust_factory(), RouterConfig::default());
+        let mut session = SessionState::new(4);
+        let reply = dispatch(
+            Message::StreamBegin {
+                id: 9,
+                decode: false,
+                alphabet: "standard".into(),
+                mode: Mode::Strict,
+                ws: Whitespace::None,
+                wrap: 1,
+            },
+            &router,
+            &mut session,
+        );
+        match reply {
+            Message::RespError { id, message } => {
+                assert_eq!(id, 9);
+                assert!(message.contains("invalid wrap line length 1"), "{message}");
+            }
+            other => panic!("want RespError, got {other:?}"),
+        }
+        assert_eq!(session.open_count(), 0, "failed open must not leak a stream slot");
     }
 
     #[test]

@@ -473,3 +473,38 @@ fn panic_is_isolated_uring() {
     }
     panic_is_isolated(Transport::Uring, true);
 }
+
+// ---------------------------------------------------------------------
+// Gauge integrity under injected faults: a teardown path that
+// decremented twice used to wrap `conns_open` to u64::MAX, and the
+// wrapped gauge made every later admission look over-cap. The decrement
+// now saturates at zero; this churn keeps holding that under CI's
+// syscall fault plans, where error-path teardowns actually run.
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "faults")]
+#[test]
+fn conns_open_gauge_never_wraps_under_faulty_churn() {
+    const ROUNDS: usize = 200;
+    let (handle, router) = start_with(Transport::Epoll, 32, 2, true, |_| {});
+    let m = router.metrics();
+    for i in 0..ROUNDS {
+        // Mix clean closes, mid-frame drops and silent connects so
+        // every teardown path (answered, torn, never-spoke) cycles.
+        let mut stream = TcpStream::connect(handle.addr).expect("connect");
+        if i % 3 == 0 {
+            let _ = stream.write_all(&Message::Ping.to_frame_bytes().unwrap());
+            let _ = read_reply(&mut stream);
+        } else if i % 3 == 1 {
+            let _ = stream.write_all(&[7, 0, 0]); // torn length prefix
+        }
+        drop(stream);
+        let open = m.conns_open.load(Ordering::Relaxed);
+        assert!(open <= ROUNDS as u64, "conns_open gauge wrapped: {open}");
+    }
+    poll_until("open-conn gauge settles", Duration::from_secs(10), || {
+        m.conns_open.load(Ordering::Relaxed) == 0
+    });
+    handle.shutdown();
+    assert_eq!(m.conns_open.load(Ordering::Relaxed), 0);
+}
