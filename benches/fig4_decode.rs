@@ -20,17 +20,17 @@ fn main() {
     let avx2 = Avx2Codec::available().then(|| Avx2Codec::new(alphabet.clone()));
     let avx512 = Avx512Codec::available().then(|| Avx512Codec::new(alphabet.clone()));
     if avx512.is_none() {
-        eprintln!("note: no AVX-512 VBMI on this host; skipping the real-ISA series");
+        b64simd::log_info!("bench", "no AVX-512 VBMI on this host; skipping the real-ISA series");
     }
     let pjrt = Runtime::new(Manifest::default_dir())
         .ok()
         .map(|rt| BlockExecutor::new(Arc::new(rt)));
     if pjrt.is_none() {
-        eprintln!("note: artifacts/ missing; skipping the PJRT series");
+        b64simd::log_info!("bench", "artifacts/ missing; skipping the PJRT series");
     }
 
     let engine = b64simd::base64::Engine::get();
-    eprintln!("note: engine tier = {}", engine.tier().name());
+    b64simd::log_info!("bench", "engine tier = {}", engine.tier().name());
 
     let mut all: Vec<BenchResult> = Vec::new();
     println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}   (GB/s, base64 bytes)", "b64size", "memcpy", "engine", "scalar", "swar", "block", "avx2", "avx512", "pjrt");

@@ -173,6 +173,51 @@ impl HttpConn {
     }
 }
 
+/// Assert the per-stage latency histograms on a `/metrics` scrape are
+/// present for every stage on the gateway protocol, cumulative-monotone
+/// in `le`, agree with `_count` at `+Inf`, and actually counted the
+/// traffic just driven.
+fn check_stage_histograms(text: &str) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut buckets: HashMap<String, Vec<u64>> = HashMap::new();
+    let mut counts: HashMap<String, u64> = HashMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("b64simd_stage_latency_us_bucket{") {
+            let (labels, value) =
+                rest.split_once("} ").ok_or_else(|| format!("bad bucket line {line:?}"))?;
+            let series = labels
+                .split(',')
+                .filter(|kv| !kv.starts_with("le="))
+                .collect::<Vec<_>>()
+                .join(",");
+            let value: u64 =
+                value.trim().parse().map_err(|_| format!("bad bucket value {line:?}"))?;
+            buckets.entry(series).or_default().push(value);
+        } else if let Some(rest) = line.strip_prefix("b64simd_stage_latency_us_count{") {
+            let (labels, value) =
+                rest.split_once("} ").ok_or_else(|| format!("bad count line {line:?}"))?;
+            let value: u64 =
+                value.trim().parse().map_err(|_| format!("bad count value {line:?}"))?;
+            counts.insert(labels.to_string(), value);
+        }
+    }
+    for stage in ["queue", "kernel", "sink", "flush"] {
+        let series = format!("stage=\"{stage}\",proto=\"http\"");
+        let b = buckets.get(&series).ok_or_else(|| format!("missing bucket series {series}"))?;
+        if b.windows(2).any(|w| w[0] > w[1]) {
+            return Err(format!("buckets for {series} are not cumulative-monotone: {b:?}"));
+        }
+        let count = *counts.get(&series).ok_or_else(|| format!("missing _count for {series}"))?;
+        if b.last() != Some(&count) {
+            return Err(format!("+Inf bucket {:?} != _count {count} for {series}", b.last()));
+        }
+        if count == 0 {
+            return Err(format!("{series} recorded no samples after the gateway run"));
+        }
+    }
+    Ok(())
+}
+
 /// The gateway load scenario: verified health checks to open, verified
 /// encodes to drive, a metrics scrape to close. Returns the exit code.
 fn run_http(
@@ -263,7 +308,8 @@ fn run_http(
         }
     });
 
-    // Close with a metrics scrape: the ops surface must render.
+    // Close with a metrics scrape: the ops surface must render, and the
+    // per-stage histograms must cover the traffic we just drove.
     let mut scrape_ok = false;
     let scrape = HttpConn::connect(addr)
         .map_err(|e| e.to_string())
@@ -273,17 +319,25 @@ fn run_http(
             let text = String::from_utf8_lossy(&body);
             scrape_ok = text.contains("b64simd_conns_open")
                 && text.contains("b64simd_http_requests_total");
+            match check_stage_histograms(&text) {
+                Ok(()) => {}
+                Err(e) => {
+                    scrape_ok = false;
+                    b64simd::log_error!("loadgen", "stage histogram check failed: {e}");
+                }
+            }
             for line in text.lines().filter(|l| {
                 l.starts_with("b64simd_http_requests_total")
                     || l.starts_with("b64simd_conns_open")
                     || l.starts_with("b64simd_rate_limited_total")
                     || l.starts_with("b64simd_timeouts_total")
+                    || l.starts_with("b64simd_stage_latency_us_count")
             }) {
                 println!("metrics: {line}");
             }
         }
-        Ok((status, _)) => eprintln!("loadgen: metrics scrape answered {status}"),
-        Err(e) => eprintln!("loadgen: metrics scrape failed: {e}"),
+        Ok((status, _)) => b64simd::log_error!("loadgen", "metrics scrape answered {status}"),
+        Err(e) => b64simd::log_error!("loadgen", "metrics scrape failed: {e}"),
     }
 
     let reqs = requests.load(Ordering::Relaxed);
@@ -306,7 +360,7 @@ fn run_http(
     let complete =
         opened == connections && errs == 0 && miss == 0 && reqs >= opened as u64 && scrape_ok;
     if !complete {
-        eprintln!("loadgen: FAILED (dropped/unanswered/mismatched HTTP traffic above)");
+        b64simd::log_error!("loadgen", "FAILED (dropped/unanswered/mismatched HTTP traffic above)");
         return 1;
     }
     println!("loadgen: OK — all {connections} gateway connections served verified traffic");
@@ -499,7 +553,7 @@ fn run_chaos(mode: &str, addr: std::net::SocketAddr, router: Option<&Router>) ->
     } else if all.contains(&mode) {
         vec![mode]
     } else {
-        eprintln!("loadgen: unknown --chaos mode '{mode}' (torn|slowloris|oversized|corrupt|vanish|all)");
+        b64simd::log_error!("loadgen", "unknown --chaos mode '{mode}' (torn|slowloris|oversized|corrupt|vanish|all)");
         return 2;
     };
     let mut failures = 0;
@@ -516,7 +570,7 @@ fn run_chaos(mode: &str, addr: std::net::SocketAddr, router: Option<&Router>) ->
             Ok(()) => println!("chaos {m:<10} OK"),
             Err(e) => {
                 failures += 1;
-                eprintln!("chaos {m:<10} FAILED: {e}");
+                b64simd::log_error!("loadgen", "chaos {m:<10} FAILED: {e}");
             }
         }
     }
@@ -525,7 +579,7 @@ fn run_chaos(mode: &str, addr: std::net::SocketAddr, router: Option<&Router>) ->
         println!("server: {}", router.metrics().report());
     }
     if failures > 0 {
-        eprintln!("loadgen: chaos FAILED ({failures}/{} modes)", selected.len());
+        b64simd::log_error!("loadgen", "chaos FAILED ({failures}/{} modes)", selected.len());
         1
     } else {
         println!("loadgen: chaos OK — lifecycle contract held across {} modes", selected.len());
@@ -572,10 +626,10 @@ fn main() {
         let want = (connections as u64) * 2 + 256;
         match b64simd::net::sys::raise_nofile_limit(want) {
             Ok(limit) if limit < want => {
-                eprintln!("loadgen: fd limit {limit} < {want}; connects may fail")
+                b64simd::log_warn!("loadgen", "fd limit {limit} < {want}; connects may fail")
             }
             Ok(_) => {}
-            Err(e) => eprintln!("loadgen: could not raise fd limit: {e}"),
+            Err(e) => b64simd::log_warn!("loadgen", "could not raise fd limit: {e}"),
         }
     }
 
@@ -746,7 +800,7 @@ fn main() {
 
     let complete = opened == connections && errs == 0 && miss == 0 && reqs >= opened as u64;
     if !complete {
-        eprintln!("loadgen: FAILED (dropped/unanswered/mismatched traffic above)");
+        b64simd::log_error!("loadgen", "FAILED (dropped/unanswered/mismatched traffic above)");
         std::process::exit(1);
     }
     println!("loadgen: OK — all {connections} concurrent connections served verified traffic");

@@ -149,7 +149,7 @@ pub fn detected_tier() -> Tier {
             if let Some(t) = Tier::parse(&forced) {
                 return t.clamp();
             }
-            eprintln!("b64simd: ignoring unknown B64SIMD_TIER value '{forced}'");
+            crate::log_warn!("engine", "ignoring unknown B64SIMD_TIER value '{forced}'");
         }
         if Avx512Codec::available() {
             Tier::Avx512

@@ -156,7 +156,7 @@ pub fn default_policy() -> StorePolicy {
             if let Some(p) = StorePolicy::parse(&v) {
                 return p;
             }
-            eprintln!("b64simd: ignoring unknown B64SIMD_STORES value '{v}'");
+            crate::log_warn!("stores", "ignoring unknown B64SIMD_STORES value '{v}'");
         }
         StorePolicy::auto()
     })

@@ -1,14 +1,21 @@
-//! Service metrics: lock-free counters, a log2 latency histogram, and
-//! per-reactor-shard transport counters rolled up into the global set.
+//! Service metrics: lock-free counters, log2 latency histograms
+//! (whole-request plus per-stage × per-protocol × per-routing-path),
+//! and per-reactor-shard transport counters rolled up into the global
+//! set.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Number of log2 latency buckets (1 µs .. ~1 h).
-const BUCKETS: usize = 32;
+use crate::obs::clock::{Proto, ReqClock, RoutePath, Stage};
+
+/// Number of log2 latency buckets (1 µs .. ~1 h; the last bucket is
+/// open-ended).
+pub const BUCKETS: usize = 32;
 
 /// A histogram over microsecond latencies with power-of-two buckets.
+/// Bucket `i` holds samples in `[2^i, 2^(i+1) - 1]` µs (bucket 0 also
+/// absorbs sub-microsecond samples); the last bucket is open-ended.
 #[derive(Default)]
 pub struct LatencyHistogram {
     buckets: [AtomicU64; BUCKETS],
@@ -19,7 +26,11 @@ pub struct LatencyHistogram {
 impl LatencyHistogram {
     /// Record one latency sample.
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one latency sample given directly in microseconds.
+    pub fn record_us(&self, us: u64) {
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -31,6 +42,23 @@ impl LatencyHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of all recorded samples, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// A snapshot of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Inclusive upper bound of bucket `i` in µs (`2^(i+1) - 1`; bucket
+    /// 0 → 1). The last bucket is conceptually unbounded — exposition
+    /// renders it as `+Inf`.
+    pub fn bucket_upper_us(i: usize) -> u64 {
+        (1u64 << (i + 1)) - 1
+    }
+
     /// Mean latency in microseconds (0 with no samples).
     pub fn mean_us(&self) -> f64 {
         let n = self.count();
@@ -40,7 +68,10 @@ impl LatencyHistogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
-    /// Approximate quantile from the log2 buckets (upper bucket bound).
+    /// Approximate quantile from the log2 buckets: the *inclusive
+    /// upper bound* of the bucket containing the q-th sample, i.e. the
+    /// tightest "≤ this many µs" statement the buckets support. (A
+    /// single 1 µs sample reports p50 = 1, not 2 — regression-pinned.)
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -51,10 +82,10 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (i + 1);
+                return Self::bucket_upper_us(i);
             }
         }
-        1u64 << BUCKETS
+        Self::bucket_upper_us(BUCKETS - 1)
     }
 }
 
@@ -105,6 +136,15 @@ pub struct Metrics {
     pub direct_requests: AtomicU64,
     /// Log2 latency histogram over request wall-clock times.
     pub latency: LatencyHistogram,
+    /// Per-stage × per-protocol latency histograms, indexed
+    /// `stage.index() * 2 + proto.index()` — use
+    /// [`Metrics::stage_hist`]. Fed by the transports from each
+    /// request's [`ReqClock`].
+    pub stage_latency: [LatencyHistogram; 8],
+    /// Per-routing-path × per-protocol latency histograms
+    /// (read-complete → sink-serialized), indexed
+    /// `path.index() * 2 + proto.index()` — use [`Metrics::path_hist`].
+    pub path_latency: [LatencyHistogram; 6],
     // -- transport counters (filled by `crate::server` / `crate::net`) --
     /// Connections admitted (both transports).
     pub conns_accepted: AtomicU64,
@@ -145,6 +185,42 @@ impl Metrics {
     /// Relaxed counter increment (the only ordering metrics need).
     pub fn inc(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// The per-stage × per-protocol histogram for `(stage, proto)`.
+    pub fn stage_hist(&self, stage: Stage, proto: Proto) -> &LatencyHistogram {
+        &self.stage_latency[stage.index() * 2 + proto.index()]
+    }
+
+    /// The per-routing-path × per-protocol histogram for `(path, proto)`.
+    pub fn path_hist(&self, path: RoutePath, proto: Proto) -> &LatencyHistogram {
+        &self.path_latency[path.index() * 2 + proto.index()]
+    }
+
+    /// Record the queue/kernel/sink stage durations — and, when the
+    /// router classified the request, the routing-path histogram — of
+    /// a request clock. Transports call this once per request when its
+    /// completion is drained; the flush stage is recorded separately
+    /// by [`Metrics::record_clock_flush`] when the reply leaves for
+    /// the socket.
+    pub fn record_clock_stages(&self, clock: &ReqClock) {
+        let proto = clock.proto();
+        for stage in [Stage::Queue, Stage::Kernel, Stage::Sink] {
+            if let Some(us) = clock.stage_us(stage) {
+                self.stage_hist(stage, proto).record_us(us);
+            }
+        }
+        if let Some(path) = clock.path() {
+            self.path_hist(path, proto).record_us(clock.sink_offset_us());
+        }
+    }
+
+    /// Record the flush stage of a request whose reply just finished
+    /// flushing to its socket, and fire the `B64SIMD_SLOW_US`
+    /// slow-request hook with the full stage breakdown.
+    pub fn record_clock_flush(&self, clock: &ReqClock, target: &str) {
+        self.stage_hist(Stage::Flush, clock.proto()).record_us(clock.flush_us_now());
+        crate::obs::clock::maybe_log_slow(clock, target);
     }
 
     /// Register a reactor shard and get its counter block. Called once
@@ -249,62 +325,151 @@ impl Metrics {
         line
     }
 
-    /// Plain-text exposition of every counter, one `name value` line
-    /// per metric in the Prometheus text style (`b64simd_` prefix;
-    /// gauges unsuffixed, monotonic counters `_total`). Registered
-    /// reactor shards contribute labelled `b64simd_shard_*` rows whose
-    /// per-metric sums equal the corresponding global roll-up. Served
-    /// by the HTTP gateway's `GET /metrics`.
+    /// Prometheus text exposition (text format 0.0.4): every counter
+    /// with `# HELP` / `# TYPE` metadata, full cumulative histograms
+    /// (`_bucket{le=…}` / `_sum` / `_count`) for the whole-request,
+    /// per-stage × per-protocol and per-routing-path × per-protocol
+    /// latencies, and labelled `b64simd_shard_*` rows whose per-metric
+    /// sums equal the corresponding global roll-up. Served by the HTTP
+    /// gateway's `GET /metrics`.
     pub fn render_text(&self) -> String {
-        let mut out = String::with_capacity(2048);
-        let counters: [(&str, u64); 23] = [
-            ("requests_total", self.requests.load(Ordering::Relaxed)),
-            ("responses_total", self.responses.load(Ordering::Relaxed)),
-            ("errors_total", self.errors.load(Ordering::Relaxed)),
-            ("rejected_total", self.rejected.load(Ordering::Relaxed)),
-            ("bytes_in_total", self.bytes_in.load(Ordering::Relaxed)),
-            ("bytes_out_total", self.bytes_out.load(Ordering::Relaxed)),
-            ("batches_total", self.batches.load(Ordering::Relaxed)),
-            ("rows_total", self.rows.load(Ordering::Relaxed)),
-            ("padded_rows_total", self.padded_rows.load(Ordering::Relaxed)),
-            ("inline_requests_total", self.inline_requests.load(Ordering::Relaxed)),
-            ("direct_requests_total", self.direct_requests.load(Ordering::Relaxed)),
-            ("conns_accepted_total", self.conns_accepted.load(Ordering::Relaxed)),
-            ("conns_refused_total", self.conns_refused.load(Ordering::Relaxed)),
-            ("conns_open", self.conns_open.load(Ordering::Relaxed)),
-            ("frames_in_total", self.frames_in.load(Ordering::Relaxed)),
-            ("frames_out_total", self.frames_out.load(Ordering::Relaxed)),
-            ("net_bytes_in_total", self.net_bytes_in.load(Ordering::Relaxed)),
-            ("net_bytes_out_total", self.net_bytes_out.load(Ordering::Relaxed)),
-            ("timeouts_total", self.timeouts.load(Ordering::Relaxed)),
-            ("faults_injected_total", self.faults_injected.load(Ordering::Relaxed)),
-            ("drains_total", self.drains.load(Ordering::Relaxed)),
-            ("worker_panics_total", self.worker_panics.load(Ordering::Relaxed)),
-            ("http_requests_total", self.http_requests.load(Ordering::Relaxed)),
+        let mut out = String::with_capacity(16384);
+        let counters: [(&str, &str, &str, u64); 24] = [
+            ("requests_total", "counter", "Requests admitted for processing.",
+             self.requests.load(Ordering::Relaxed)),
+            ("responses_total", "counter", "Successful responses (data or valid).",
+             self.responses.load(Ordering::Relaxed)),
+            ("errors_total", "counter", "Failed requests (invalid input or backend failure).",
+             self.errors.load(Ordering::Relaxed)),
+            ("rejected_total", "counter", "Requests load-shed at admission.",
+             self.rejected.load(Ordering::Relaxed)),
+            ("bytes_in_total", "counter", "Payload bytes received in requests.",
+             self.bytes_in.load(Ordering::Relaxed)),
+            ("bytes_out_total", "counter", "Payload bytes returned in responses.",
+             self.bytes_out.load(Ordering::Relaxed)),
+            ("batches_total", "counter", "Executable launches (batches dispatched).",
+             self.batches.load(Ordering::Relaxed)),
+            ("rows_total", "counter", "Rows of real data dispatched.",
+             self.rows.load(Ordering::Relaxed)),
+            ("padded_rows_total", "counter", "Rows of zero padding dispatched.",
+             self.padded_rows.load(Ordering::Relaxed)),
+            ("inline_requests_total", "counter", "Requests served inline by the block codec.",
+             self.inline_requests.load(Ordering::Relaxed)),
+            ("direct_requests_total", "counter", "Requests served engine-direct (zero-copy).",
+             self.direct_requests.load(Ordering::Relaxed)),
+            ("conns_accepted_total", "counter", "Connections accepted.",
+             self.conns_accepted.load(Ordering::Relaxed)),
+            ("conns_refused_total", "counter", "Connections refused at the admission cap.",
+             self.conns_refused.load(Ordering::Relaxed)),
+            ("conns_open", "gauge", "Currently open connections.",
+             self.conns_open.load(Ordering::Relaxed)),
+            ("frames_in_total", "counter", "Request frames parsed off sockets.",
+             self.frames_in.load(Ordering::Relaxed)),
+            ("frames_out_total", "counter", "Response frames queued to sockets.",
+             self.frames_out.load(Ordering::Relaxed)),
+            ("net_bytes_in_total", "counter", "Raw bytes read from sockets.",
+             self.net_bytes_in.load(Ordering::Relaxed)),
+            ("net_bytes_out_total", "counter", "Raw bytes written to sockets.",
+             self.net_bytes_out.load(Ordering::Relaxed)),
+            ("timeouts_total", "counter", "Connections closed by a lifecycle deadline.",
+             self.timeouts.load(Ordering::Relaxed)),
+            ("faults_injected_total", "counter", "Syscall faults injected (test feature).",
+             self.faults_injected.load(Ordering::Relaxed)),
+            ("drains_total", "counter", "Graceful drains initiated.",
+             self.drains.load(Ordering::Relaxed)),
+            ("worker_panics_total", "counter", "Request-handler panics contained.",
+             self.worker_panics.load(Ordering::Relaxed)),
+            ("http_requests_total", "counter", "HTTP gateway requests dispatched.",
+             self.http_requests.load(Ordering::Relaxed)),
+            ("rate_limited_total", "counter", "HTTP requests refused by the token bucket (429).",
+             self.rate_limited.load(Ordering::Relaxed)),
         ];
-        for (name, value) in counters {
+        for (name, kind, help, value) in counters {
+            out.push_str(&format!("# HELP b64simd_{name} {help}\n"));
+            out.push_str(&format!("# TYPE b64simd_{name} {kind}\n"));
             out.push_str(&format!("b64simd_{name} {value}\n"));
         }
-        out.push_str(&format!(
-            "b64simd_rate_limited_total {}\n",
-            self.rate_limited.load(Ordering::Relaxed)
-        ));
-        out.push_str(&format!("b64simd_latency_p50_us {}\n", self.latency.quantile_us(0.5)));
-        out.push_str(&format!("b64simd_latency_p99_us {}\n", self.latency.quantile_us(0.99)));
-        out.push_str(&format!("b64simd_latency_mean_us {:.0}\n", self.latency.mean_us()));
+        out.push_str(
+            "# HELP b64simd_latency_us Whole-request wall-clock latency in microseconds.\n\
+             # TYPE b64simd_latency_us histogram\n",
+        );
+        Self::render_histogram(&mut out, "latency_us", "", &self.latency);
+        out.push_str(
+            "# HELP b64simd_stage_latency_us Per-pipeline-stage request latency in microseconds, by protocol.\n\
+             # TYPE b64simd_stage_latency_us histogram\n",
+        );
+        for stage in Stage::ALL {
+            for proto in Proto::ALL {
+                let labels = format!("stage=\"{}\",proto=\"{}\"", stage.name(), proto.name());
+                Self::render_histogram(
+                    &mut out,
+                    "stage_latency_us",
+                    &labels,
+                    self.stage_hist(stage, proto),
+                );
+            }
+        }
+        out.push_str(
+            "# HELP b64simd_path_latency_us Request latency to sink-serialized in microseconds, by routing path and protocol.\n\
+             # TYPE b64simd_path_latency_us histogram\n",
+        );
+        for path in RoutePath::ALL {
+            for proto in Proto::ALL {
+                let labels = format!("path=\"{}\",proto=\"{}\"", path.name(), proto.name());
+                Self::render_histogram(
+                    &mut out,
+                    "path_latency_us",
+                    &labels,
+                    self.path_hist(path, proto),
+                );
+            }
+        }
         let shards = self.shards.lock().unwrap();
-        for (i, s) in shards.iter().enumerate() {
-            let rows: [(&str, u64); 4] = [
-                ("conns_accepted_total", s.conns_accepted.load(Ordering::Relaxed)),
-                ("conns_open", s.conns_open.load(Ordering::Relaxed)),
-                ("frames_in_total", s.frames_in.load(Ordering::Relaxed)),
-                ("frames_out_total", s.frames_out.load(Ordering::Relaxed)),
+        if !shards.is_empty() {
+            let shard_rows: [(&str, &str, &str); 4] = [
+                ("conns_accepted_total", "counter", "Connections accepted by this shard."),
+                ("conns_open", "gauge", "Connections currently open on this shard."),
+                ("frames_in_total", "counter", "Request frames parsed by this shard."),
+                ("frames_out_total", "counter", "Response frames queued by this shard."),
             ];
-            for (name, value) in rows {
-                out.push_str(&format!("b64simd_shard_{name}{{shard=\"{i}\"}} {value}\n"));
+            for (name, kind, help) in shard_rows {
+                out.push_str(&format!("# HELP b64simd_shard_{name} {help}\n"));
+                out.push_str(&format!("# TYPE b64simd_shard_{name} {kind}\n"));
+                for (i, s) in shards.iter().enumerate() {
+                    let value = match name {
+                        "conns_accepted_total" => s.conns_accepted.load(Ordering::Relaxed),
+                        "conns_open" => s.conns_open.load(Ordering::Relaxed),
+                        "frames_in_total" => s.frames_in.load(Ordering::Relaxed),
+                        _ => s.frames_out.load(Ordering::Relaxed),
+                    };
+                    out.push_str(&format!("b64simd_shard_{name}{{shard=\"{i}\"}} {value}\n"));
+                }
             }
         }
         out
+    }
+
+    /// Append one histogram's cumulative `_bucket` / `_sum` / `_count`
+    /// rows. `labels` is either empty or `k="v",k2="v2"` (no braces,
+    /// no trailing comma). The `+Inf` bucket and `_count` come from
+    /// the same bucket snapshot, so `_count` always equals the top
+    /// bucket even while other threads are recording.
+    fn render_histogram(out: &mut String, name: &str, labels: &str, h: &LatencyHistogram) {
+        let counts = h.bucket_counts();
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate().take(BUCKETS - 1) {
+            cum += c;
+            out.push_str(&format!(
+                "b64simd_{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}\n",
+                LatencyHistogram::bucket_upper_us(i)
+            ));
+        }
+        cum += counts[BUCKETS - 1];
+        out.push_str(&format!("b64simd_{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}\n"));
+        let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        out.push_str(&format!("b64simd_{name}_sum{brace} {}\n", h.sum_us()));
+        out.push_str(&format!("b64simd_{name}_count{brace} {cum}\n"));
     }
 }
 
@@ -325,10 +490,54 @@ mod tests {
     }
 
     #[test]
+    fn quantile_returns_inclusive_bucket_upper_bound() {
+        // Regression: quantile_us used to return `1 << (i + 1)` — the
+        // power of two *above* the matched bucket — so a single 1 µs
+        // sample reported p50 = 2 µs. It must report the bucket's
+        // inclusive upper bound instead.
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.quantile_us(0.5), 1);
+        assert_eq!(h.quantile_us(1.0), 1);
+
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1000)); // bucket 9: [512, 1023]
+        assert_eq!(h.quantile_us(0.5), 1023);
+
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        // p50 target = 3rd sample → bucket 2 ([4,7]) → 7.
+        assert_eq!(h.quantile_us(0.5), 7);
+        // p100 → 10 000 lands in bucket 13 ([8192, 16383]).
+        assert_eq!(h.quantile_us(1.0), 16_383);
+        // Sub-µs samples clamp into bucket 0, upper bound 1.
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(10));
+        assert_eq!(h.quantile_us(1.0), 1);
+    }
+
+    #[test]
     fn empty_histogram() {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn record_us_and_bucket_snapshot() {
+        let h = LatencyHistogram::default();
+        h.record_us(0);
+        h.record_us(1);
+        h.record_us(3);
+        h.record_us(1 << 40); // clamps into the open-ended top bucket
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[BUCKETS - 1], 1);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 4 + (1u64 << 40));
     }
 
     #[test]
@@ -416,5 +625,177 @@ mod tests {
         let total: u64 =
             m.shards().iter().map(|s| s.conns_accepted.load(Ordering::Relaxed)).sum();
         assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn stage_and_path_histograms_index_correctly() {
+        use crate::obs::clock::{Proto, RoutePath, Stage};
+        let m = Metrics::default();
+        m.stage_hist(Stage::Kernel, Proto::Http).record_us(50);
+        assert_eq!(m.stage_hist(Stage::Kernel, Proto::Http).count(), 1);
+        assert_eq!(m.stage_hist(Stage::Kernel, Proto::Native).count(), 0);
+        assert_eq!(m.stage_hist(Stage::Queue, Proto::Http).count(), 0);
+        m.path_hist(RoutePath::Direct, Proto::Native).record_us(9);
+        assert_eq!(m.path_hist(RoutePath::Direct, Proto::Native).count(), 1);
+        assert_eq!(m.path_hist(RoutePath::Direct, Proto::Http).count(), 0);
+        // Every (stage, proto) and (path, proto) pair maps to a
+        // distinct histogram.
+        let mut seen = std::collections::HashSet::new();
+        for s in Stage::ALL {
+            for p in Proto::ALL {
+                assert!(seen.insert(m.stage_hist(s, p) as *const _ as usize));
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for r in RoutePath::ALL {
+            for p in Proto::ALL {
+                assert!(seen.insert(m.path_hist(r, p) as *const _ as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn clock_recording_feeds_stage_and_path_histograms() {
+        use crate::obs::clock::{Proto, ReqClock, RoutePath, Stage};
+        let m = Metrics::default();
+        let c = ReqClock::new(Proto::Native);
+        c.stamp_parse();
+        c.stamp_dequeue();
+        c.stamp_kernel();
+        c.stamp_sink();
+        c.set_path(RoutePath::Inline);
+        m.record_clock_stages(&c);
+        for stage in [Stage::Queue, Stage::Kernel, Stage::Sink] {
+            assert_eq!(m.stage_hist(stage, Proto::Native).count(), 1, "{}", stage.name());
+        }
+        assert_eq!(m.path_hist(RoutePath::Inline, Proto::Native).count(), 1);
+        assert_eq!(m.stage_hist(Stage::Flush, Proto::Native).count(), 0);
+        m.record_clock_flush(&c, "test");
+        assert_eq!(m.stage_hist(Stage::Flush, Proto::Native).count(), 1);
+    }
+
+    /// Satellite: exposition consistency. Every counter appears in
+    /// both `report()` and `render_text()` with the same (distinct)
+    /// value, shard rows sum to their global roll-ups, `# TYPE` /
+    /// `# HELP` metadata precedes every family, and histogram buckets
+    /// are cumulative-monotone with `_count` equal to the top bucket.
+    #[test]
+    fn exposition_is_consistent_across_report_and_render() {
+        let m = Metrics::default();
+        // Give every counter a distinct, searchable value.
+        let fields: [(&AtomicU64, &str, u64); 24] = [
+            (&m.requests, "requests_total", 101),
+            (&m.responses, "responses_total", 102),
+            (&m.errors, "errors_total", 103),
+            (&m.rejected, "rejected_total", 104),
+            (&m.bytes_in, "bytes_in_total", 105),
+            (&m.bytes_out, "bytes_out_total", 106),
+            (&m.batches, "batches_total", 107),
+            (&m.rows, "rows_total", 108),
+            (&m.padded_rows, "padded_rows_total", 109),
+            (&m.inline_requests, "inline_requests_total", 110),
+            (&m.direct_requests, "direct_requests_total", 111),
+            (&m.conns_accepted, "conns_accepted_total", 112),
+            (&m.conns_refused, "conns_refused_total", 113),
+            (&m.conns_open, "conns_open", 114),
+            (&m.frames_in, "frames_in_total", 115),
+            (&m.frames_out, "frames_out_total", 116),
+            (&m.net_bytes_in, "net_bytes_in_total", 117),
+            (&m.net_bytes_out, "net_bytes_out_total", 118),
+            (&m.timeouts, "timeouts_total", 119),
+            (&m.faults_injected, "faults_injected_total", 120),
+            (&m.drains, "drains_total", 121),
+            (&m.worker_panics, "worker_panics_total", 122),
+            (&m.http_requests, "http_requests_total", 123),
+            (&m.rate_limited, "rate_limited_total", 124),
+        ];
+        for (counter, _, v) in &fields {
+            Metrics::inc(counter, *v);
+        }
+        let report = m.report();
+        let text = m.render_text();
+        for (_, name, v) in &fields {
+            assert!(
+                text.contains(&format!("b64simd_{name} {v}\n")),
+                "render_text missing {name}={v}"
+            );
+            assert!(
+                text.contains(&format!("# TYPE b64simd_{name} ")),
+                "render_text missing TYPE for {name}"
+            );
+            assert!(
+                text.contains(&format!("# HELP b64simd_{name} ")),
+                "render_text missing HELP for {name}"
+            );
+            // report() uses compound fields (conns=Aacc/Bref/Copen), so
+            // match on the distinct value rather than "=value".
+            assert!(report.contains(&v.to_string()), "report missing value {v} ({name})");
+        }
+        // Shard rows sum to the roll-up the shards also fed globally.
+        let s0 = m.register_shard();
+        let s1 = m.register_shard();
+        Metrics::inc(&s0.frames_in, 40);
+        Metrics::inc(&s1.frames_in, 75); // 115 total = global frames_in
+        let text = m.render_text();
+        let shard_sum: u64 = (0..2)
+            .map(|i| {
+                let needle = format!("b64simd_shard_frames_in_total{{shard=\"{i}\"}} ");
+                let at = text.find(&needle).expect("shard row present") + needle.len();
+                text[at..].split_whitespace().next().unwrap().parse::<u64>().unwrap()
+            })
+            .sum();
+        assert_eq!(shard_sum, m.frames_in.load(Ordering::Relaxed));
+        // Histogram structure: cumulative-monotone buckets, +Inf ==
+        // _count, for every emitted family.
+        m.latency.record(Duration::from_micros(3));
+        m.latency.record(Duration::from_micros(700));
+        m.latency.record(Duration::from_micros(9_000_000));
+        let text = m.render_text();
+        for family in ["b64simd_latency_us", "b64simd_stage_latency_us", "b64simd_path_latency_us"]
+        {
+            assert!(
+                text.contains(&format!("# TYPE {family} histogram")),
+                "missing histogram TYPE for {family}"
+            );
+        }
+        let mut checked = 0;
+        // series key ("metric|labels-without-le") → (top value, saw +Inf)
+        let mut series: std::collections::HashMap<(String, String), (u64, bool)> =
+            std::collections::HashMap::new();
+        for line in text.lines() {
+            let Some((name_labels, value)) = line.rsplit_once(' ') else { continue };
+            if !name_labels.contains("_bucket{") {
+                continue;
+            }
+            let value: u64 = value.parse().expect("bucket values are integers");
+            let (metric, labels) = name_labels.split_once('{').unwrap();
+            let labels = labels.trim_end_matches('}');
+            // No label value in this exposition contains a comma, so a
+            // plain split isolates the le pair.
+            let kept: Vec<&str> =
+                labels.split(',').filter(|kv| !kv.starts_with("le=")).collect();
+            let is_inf = labels.split(',').any(|kv| kv == "le=\"+Inf\"");
+            let key = (metric.to_string(), kept.join(","));
+            let entry = series.entry(key).or_insert((0, false));
+            assert!(value >= entry.0, "bucket series must be cumulative-monotone: {line}");
+            entry.0 = value;
+            entry.1 = is_inf;
+            checked += 1;
+        }
+        assert!(checked > 32, "expected many bucket rows, saw {checked}");
+        for ((metric, labels), (top, saw_inf)) in &series {
+            assert!(saw_inf, "series {metric}{{{labels}}} must end at le=\"+Inf\"");
+            // The matching _count row equals the top (+Inf) bucket.
+            let base = metric.trim_end_matches("_bucket");
+            let count_line = if labels.is_empty() {
+                format!("{base}_count {top}\n")
+            } else {
+                format!("{base}_count{{{labels}}} {top}\n")
+            };
+            assert!(
+                text.contains(&count_line),
+                "missing or mismatched count row: want {count_line:?}"
+            );
+        }
     }
 }

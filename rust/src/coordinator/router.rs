@@ -45,6 +45,7 @@ use crate::base64::{
     B64_BLOCK, RAW_BLOCK,
 };
 use super::sink::{FrameTooLarge, ResponseSink};
+use crate::obs::clock::{ReqClock, RoutePath};
 
 /// What the caller wants done.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -234,6 +235,14 @@ impl Router {
     /// request per thread; cross-request batching happens in the
     /// scheduler underneath.
     pub fn process(&self, request: Request) -> Response {
+        self.process_clocked(request, None)
+    }
+
+    /// [`Self::process`] with an optional request-lifecycle clock: the
+    /// routing tier is recorded and the kernel stamp taken once the
+    /// codec work completes (the `Vec` path serializes its reply in the
+    /// transport, which takes the sink stamp there).
+    pub fn process_clocked(&self, request: Request, clock: Option<&ReqClock>) -> Response {
         let start = Instant::now();
         Metrics::inc(&self.metrics.requests, 1);
         Metrics::inc(&self.metrics.bytes_in, request.payload.len() as u64);
@@ -244,11 +253,24 @@ impl Router {
                 return Response { id: request.id, outcome: Outcome::Rejected(r), elapsed: start.elapsed() };
             }
         };
+        if let Some(c) = clock {
+            // Mirror of the routing conditions below: the `Vec` path has
+            // no engine-direct tier, so everything at or above the
+            // inline threshold coalesces through the batcher.
+            c.set_path(if request.payload.len() < self.inline_threshold {
+                RoutePath::Inline
+            } else {
+                RoutePath::Batched
+            });
+        }
         let outcome = match request.kind {
             RequestKind::Encode => self.run_encode(&request),
             RequestKind::Decode => self.run_decode(&request, false),
             RequestKind::Validate => self.run_decode(&request, true),
         };
+        if let Some(c) = clock {
+            c.stamp_kernel();
+        }
         drop(permit);
         let elapsed = start.elapsed();
         self.metrics.latency.record(elapsed);
@@ -289,6 +311,20 @@ impl Router {
         request: Request,
         sink: &mut S,
     ) -> Result<(), FrameTooLarge> {
+        self.process_into_clocked(request, sink, None)
+    }
+
+    /// [`Self::process_into`] with an optional request-lifecycle clock:
+    /// each routing branch records its tier and takes the kernel stamp
+    /// when the codec kernels finish, and the sink stamp lands once the
+    /// reply frame commits — feeding the per-stage histograms in
+    /// [`Metrics`].
+    pub fn process_into_clocked<S: ResponseSink>(
+        &self,
+        request: Request,
+        sink: &mut S,
+        clock: Option<&ReqClock>,
+    ) -> Result<(), FrameTooLarge> {
         let start = Instant::now();
         Metrics::inc(&self.metrics.requests, 1);
         Metrics::inc(&self.metrics.bytes_in, request.payload.len() as u64);
@@ -300,9 +336,9 @@ impl Router {
             }
         };
         let reply = match request.kind {
-            RequestKind::Encode => self.encode_into(&request, sink),
-            RequestKind::Decode => self.decode_into(&request, sink, false),
-            RequestKind::Validate => self.decode_into(&request, sink, true),
+            RequestKind::Encode => self.encode_into(&request, sink, clock),
+            RequestKind::Decode => self.decode_into(&request, sink, false, clock),
+            RequestKind::Validate => self.decode_into(&request, sink, true, clock),
         };
         let reply = match reply {
             Ok(r) => r,
@@ -334,6 +370,7 @@ impl Router {
         &self,
         req: &Request,
         sink: &mut S,
+        clock: Option<&ReqClock>,
     ) -> Result<SinkReply, FrameTooLarge> {
         let payload = &req.payload;
         let total = encoded_len(payload.len());
@@ -342,14 +379,28 @@ impl Router {
             Metrics::inc(&self.metrics.inline_requests, 1);
             let codec = crate::base64::block::BlockCodec::new(req.alphabet.clone());
             codec.encode_slice(payload, sink.grow(total));
+            if let Some(c) = clock {
+                c.set_path(RoutePath::Inline);
+                c.stamp_kernel();
+            }
             sink.commit()?;
+            if let Some(c) = clock {
+                c.stamp_sink();
+            }
             return Ok(SinkReply::Data(total));
         }
         if payload.len() >= self.direct_threshold {
             Metrics::inc(&self.metrics.direct_requests, 1);
             let engine = self.engine_for(&req.alphabet, Mode::Strict);
             engine.encode_slice_policy(payload, sink.grow(total), engine.policy());
+            if let Some(c) = clock {
+                c.set_path(RoutePath::Direct);
+                c.stamp_kernel();
+            }
             sink.commit()?;
+            if let Some(c) = clock {
+                c.stamp_sink();
+            }
             return Ok(SinkReply::Data(total));
         }
         // Batched middle: whole blocks coalesce across requests; the
@@ -367,7 +418,14 @@ impl Router {
         match rx.recv().expect("scheduler always answers") {
             Ok(batch) => {
                 out[..head].copy_from_slice(&batch.data);
+                if let Some(c) = clock {
+                    c.set_path(RoutePath::Batched);
+                    c.stamp_kernel();
+                }
                 sink.commit()?;
+                if let Some(c) = clock {
+                    c.stamp_sink();
+                }
                 Ok(SinkReply::Data(total))
             }
             Err(e) => {
@@ -386,14 +444,18 @@ impl Router {
         req: &Request,
         sink: &mut S,
         validate_only: bool,
+        clock: Option<&ReqClock>,
     ) -> Result<SinkReply, FrameTooLarge> {
         sink.begin_data(req.id);
         let data_start = sink.mark();
-        match self.decode_payload_into(req, sink) {
+        match self.decode_payload_into(req, sink, clock) {
             Ok(written) => {
                 let keep = if validate_only { 0 } else { written };
                 sink.truncate_to(data_start + keep);
                 sink.commit()?;
+                if let Some(c) = clock {
+                    c.stamp_sink();
+                }
                 Ok(if validate_only { SinkReply::Valid } else { SinkReply::Data(written) })
             }
             Err(fail) => {
@@ -417,16 +479,17 @@ impl Router {
         &self,
         req: &Request,
         sink: &mut S,
+        clock: Option<&ReqClock>,
     ) -> Result<usize, SinkFail> {
         if req.ws == Whitespace::None {
-            return self.decode_stripped_into(&req.payload, req, sink);
+            return self.decode_stripped_into(&req.payload, req, sink, clock);
         }
         let mut stripped = vec![0u8; req.payload.len()];
         let (consumed, n) =
             crate::base64::swar::compact_ws(&req.payload, &mut stripped, req.ws);
         debug_assert_eq!(consumed, req.payload.len());
         stripped.truncate(n);
-        self.decode_stripped_into(&stripped, req, sink).map_err(|fail| match fail {
+        self.decode_stripped_into(&stripped, req, sink, clock).map_err(|fail| match fail {
             SinkFail::Invalid(e) => SinkFail::Invalid(crate::base64::validate::rebase_ws_error(
                 e,
                 &req.payload,
@@ -443,6 +506,7 @@ impl Router {
         payload: &[u8],
         req: &Request,
         sink: &mut S,
+        clock: Option<&ReqClock>,
     ) -> Result<usize, SinkFail> {
         let alphabet = &req.alphabet;
         if payload.len() < self.inline_threshold {
@@ -450,15 +514,25 @@ impl Router {
             let codec =
                 crate::base64::block::BlockCodec::with_mode(alphabet.clone(), req.mode);
             let out = sink.grow(decoded_len_upper(payload.len()));
-            return codec.decode_slice(payload, out).map_err(SinkFail::Invalid);
+            let written = codec.decode_slice(payload, out).map_err(SinkFail::Invalid)?;
+            if let Some(c) = clock {
+                c.set_path(RoutePath::Inline);
+                c.stamp_kernel();
+            }
+            return Ok(written);
         }
         if payload.len() >= self.direct_threshold {
             Metrics::inc(&self.metrics.direct_requests, 1);
             let engine = self.engine_for(alphabet, req.mode);
             let out = sink.grow(decoded_len_upper(payload.len()));
-            return engine
+            let written = engine
                 .decode_slice_policy(payload, out, engine.policy())
-                .map_err(SinkFail::Invalid);
+                .map_err(SinkFail::Invalid)?;
+            if let Some(c) = clock {
+                c.set_path(RoutePath::Direct);
+                c.stamp_kernel();
+            }
+            return Ok(written);
         }
         // Batched middle, with the same error precedence as the `Vec`
         // path: the batch's deferred per-row flags resolve before any
@@ -510,6 +584,10 @@ impl Router {
         }
         let w = rest_result.map_err(SinkFail::Invalid)?;
         out[..head].copy_from_slice(&batch.data);
+        if let Some(c) = clock {
+            c.set_path(RoutePath::Batched);
+            c.stamp_kernel();
+        }
         Ok(w)
     }
 

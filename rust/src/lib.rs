@@ -82,6 +82,7 @@
 pub mod base64;
 pub mod coordinator;
 pub mod net;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod server;

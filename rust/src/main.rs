@@ -179,41 +179,53 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let transport = server_config.transport;
     let (reactors, zero_copy) = (server_config.reactors, server_config.zero_copy);
     let handle = serve(router.clone(), server_config)?;
-    eprintln!(
-        "b64simd serving on {} (backend={backend_name}, workers={workers}, transport={}, reactors={reactors}, reply={})",
+    b64simd::log_info!(
+        "serve",
+        "serving on {} (backend={backend_name}, workers={workers}, transport={}, reactors={reactors}, reply={})",
         handle.addr,
         transport.name(),
         if zero_copy { "zerocopy" } else { "vec" }
     );
     if let Some(http) = handle.http_addr {
-        eprintln!("b64simd http gateway on {http}");
+        b64simd::log_info!("serve", "http gateway on {http}");
     }
     // SIGTERM/SIGINT request a graceful drain: stop accepting, answer
     // everything already parsed off the wire, flush, then exit 0 with a
-    // final metrics report. (Non-Linux hosts keep the run-forever loop;
-    // the handler plumbing lives with the rest of the Linux-only net
-    // code.)
+    // final metrics report. SIGUSR1 dumps the per-shard flight-recorder
+    // rings to stderr as JSON without disturbing the server. (Non-Linux
+    // hosts keep the run-forever loop; the handler plumbing lives with
+    // the rest of the Linux-only net code.)
     #[cfg(target_os = "linux")]
     {
-        use b64simd::net::sys::{install_term_handler, term_requested};
+        use b64simd::net::sys::{
+            install_term_handler, install_usr1_handler, term_requested, usr1_requested,
+        };
         install_term_handler()?;
+        install_usr1_handler()?;
         let mut last_report = std::time::Instant::now();
         while !term_requested() {
             std::thread::sleep(std::time::Duration::from_millis(100));
+            if usr1_requested() {
+                b64simd::log_info!("serve", "SIGUSR1 received, dumping flight recorders");
+                let dump = b64simd::obs::recorder::dump_json(128);
+                let mut line = dump.into_bytes();
+                line.push(b'\n');
+                let _ = std::io::stderr().write_all(&line);
+            }
             if last_report.elapsed() >= std::time::Duration::from_secs(30) {
-                eprintln!("{}", router.metrics().report());
+                b64simd::log_info!("serve", "{}", router.metrics().report());
                 last_report = std::time::Instant::now();
             }
         }
-        eprintln!("b64simd: termination signal received, draining connections");
+        b64simd::log_info!("serve", "termination signal received, draining connections");
         handle.shutdown();
-        eprintln!("{}", router.metrics().report());
+        b64simd::log_info!("serve", "{}", router.metrics().report());
         return Ok(());
     }
     #[cfg(not(target_os = "linux"))]
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
-        eprintln!("{}", router.metrics().report());
+        b64simd::log_info!("serve", "{}", router.metrics().report());
     }
 }
 
@@ -274,9 +286,10 @@ fn cmd_model(args: &Args) -> anyhow::Result<()> {
 }
 
 fn usage() -> ! {
-    eprintln!(
-        "usage: b64simd <encode|decode|serve|selftest|model|opcount> [flags]\n\
-         see README.md for details"
+    // CLI usage text, not a log line: plain stderr, no level/timestamp.
+    let _ = std::io::stderr().write_all(
+        b"usage: b64simd <encode|decode|serve|selftest|model|opcount> [flags]\n\
+          see README.md for details\n",
     );
     std::process::exit(2)
 }

@@ -28,6 +28,7 @@ use super::frame::{FrameMachine, WriteQueue};
 use super::http::{HttpMachine, HttpWork};
 use crate::coordinator::backpressure::ConnPermit;
 use crate::coordinator::state::SessionState;
+use crate::obs::clock::{Proto, ReqClock};
 use crate::server::proto::{Message, ProtoError};
 
 /// Parsed requests a connection may queue ahead of dispatch (pipelining
@@ -87,11 +88,22 @@ pub(crate) enum Job {
     Http(HttpWork),
 }
 
+/// A parsed job paired with its request-lifecycle clock. The clock is
+/// born (and parse-stamped) the moment the job leaves the protocol
+/// machine, rides to the worker inside the [`super::driver`] work item,
+/// and comes back with the completion so the drain step can record
+/// stage latencies and park it on the [`WriteQueue`] for flush
+/// attribution.
+pub(crate) struct Inbound {
+    pub job: Job,
+    pub clock: ReqClock,
+}
+
 pub(crate) struct Conn {
     pub stream: TcpStream,
     pub machine: Machine,
     pub write: WriteQueue,
-    pub inbox: VecDeque<Job>,
+    pub inbox: VecDeque<Inbound>,
     /// Stream-session state; locked by at most one worker at a time
     /// (the single in-flight request) and never by the loop.
     pub session: Arc<Mutex<SessionState>>,
@@ -165,15 +177,19 @@ impl Conn {
     pub fn parse_into_inbox(&mut self) -> Result<usize, ProtoError> {
         let mut parsed = 0;
         while self.inbox.len() < INBOX_CAP {
-            let job = match &mut self.machine {
-                Machine::Native(m) => m.next_frame()?.map(Job::Native),
-                Machine::Http(m) => m
-                    .next_job()
-                    .map(|job| Job::Http(HttpWork { job, draining: false })),
+            let (job, proto) = match &mut self.machine {
+                Machine::Native(m) => (m.next_frame()?.map(Job::Native), Proto::Native),
+                Machine::Http(m) => (
+                    m.next_job()
+                        .map(|job| Job::Http(HttpWork { job, draining: false })),
+                    Proto::Http,
+                ),
             };
             match job {
                 Some(job) => {
-                    self.inbox.push_back(job);
+                    let clock = ReqClock::new(proto);
+                    clock.stamp_parse();
+                    self.inbox.push_back(Inbound { job, clock });
                     parsed += 1;
                 }
                 None => break,

@@ -59,10 +59,12 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::buffer::BufferPool;
-use super::conn::{Conn, Job, Machine};
+use super::conn::{Conn, Inbound, Job, Machine};
 use super::faults;
 use super::frame::{FrameMachine, ReplySink};
-use super::http::{busy_response, panic_response, respond, timeout_response, HttpMachine, Protocol};
+use super::http::{
+    busy_response, panic_response, respond_clocked, timeout_response, HttpMachine, Protocol,
+};
 use super::sys::{
     Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
@@ -71,9 +73,12 @@ use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::state::SessionState;
 use crate::coordinator::{Metrics, Router};
+use crate::obs::clock::ReqClock;
+use crate::obs::recorder::{EventKind, FlightRecorder};
 use crate::server::proto::Message;
 use crate::server::service::{
-    dispatch, dispatch_into, idle_timeout_frame, refuse_busy, stall_timeout_frame, ServerConfig,
+    dispatch_clocked, dispatch_into_clocked, idle_timeout_frame, refuse_busy, stall_timeout_frame,
+    ServerConfig,
 };
 
 /// Slab token of the listening socket.
@@ -101,6 +106,21 @@ pub(crate) fn token(idx: usize, epoch: u32) -> u64 {
 
 pub(crate) fn token_parts(tok: u64) -> (usize, u32) {
     ((tok & 0xFFFF_FFFF) as usize, (tok >> 32) as u32)
+}
+
+/// Sniff an HTTP error status (4xx/5xx) from a finished reply frame, if
+/// it is one. The loops record these as flight-recorder events centrally
+/// — the status line is `HTTP/1.1 NNN ...`, so the code sits at bytes
+/// 9..12 — instead of threading the recorder into the response builder.
+pub(crate) fn http_error_status(frame: &[u8]) -> Option<u16> {
+    let digits = frame.strip_prefix(b"HTTP/1.1 ")?.get(..3)?;
+    if !digits.iter().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    let status = (digits[0] - b'0') as u16 * 100
+        + (digits[1] - b'0') as u16 * 10
+        + (digits[2] - b'0') as u16;
+    (status >= 400).then_some(status)
 }
 
 /// Poison-tolerant lock. A worker that panicked mid-request may have
@@ -146,6 +166,9 @@ pub(crate) struct WorkItem {
     /// spare buffers return to the pool, the pool feeds the next
     /// reply's sink.
     pub(crate) buf: Vec<u8>,
+    /// The request's stage clock (parse-stamped by the loop); the
+    /// worker stamps dequeue and the dispatch path stamps kernel/sink.
+    pub(crate) clock: ReqClock,
 }
 
 /// One executed request headed back to its loop. `frame = None` marks a
@@ -157,6 +180,13 @@ pub(crate) struct Completion {
     pub(crate) token: u64,
     pub(crate) frame: Option<Vec<u8>>,
     pub(crate) close_after: bool,
+    /// The request's stage clock, returned so the loop can record
+    /// queue/kernel/sink durations and park it on the write queue for
+    /// flush attribution.
+    pub(crate) clock: ReqClock,
+    /// The handler panicked serving this request (the frame is the
+    /// error notice) — recorded as a flight-recorder event.
+    pub(crate) panicked: bool,
 }
 
 /// Handles the spawned transport threads + each loop's wakeup fd.
@@ -186,6 +216,8 @@ pub(crate) fn spawn(
     let metrics = router.metrics().clone();
     // A fresh serve starts a fresh per-shard breakdown; without this a
     // router re-served after shutdown would report dead shards forever.
+    // (The flight-recorder registry self-prunes: its entries are weak
+    // and die with each shard's reactor loop.)
     metrics.reset_shards();
 
     let mut threads = Vec::new();
@@ -262,10 +294,13 @@ fn spawn_shard(
     let wake = Arc::new(EventFd::new()?);
     epoll.add(listener.as_raw_fd(), EPOLLIN | EPOLLET, TOKEN_LISTENER)?;
     epoll.add(wake.raw(), EPOLLIN | EPOLLET, TOKEN_WAKE)?;
+    let recorder = Arc::new(FlightRecorder::new(format!("epoll-{shard_id}")));
+    crate::obs::recorder::register(&recorder);
     let lp = Loop {
         epoll,
         listener: Some(listener),
         protocol,
+        recorder,
         rate: rate.clone(),
         wake: wake.clone(),
         metrics: metrics.clone(),
@@ -321,8 +356,9 @@ pub(crate) fn worker_loop(
         // Holding the lock across `recv` just serializes the hand-off,
         // not the work: the lock drops as soon as an item arrives.
         let item = { lock_clean(&rx).recv() };
-        let Ok(WorkItem { token, job, session, done, wake, buf }) = item else { break };
-        let (frame, close_after) = match job {
+        let Ok(WorkItem { token, job, session, done, wake, buf, clock }) = item else { break };
+        clock.stamp_dequeue();
+        let (frame, close_after, panicked) = match job {
             Job::Native(msg) => {
                 let id = msg.request_id();
                 let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -330,27 +366,29 @@ pub(crate) fn worker_loop(
                         let mut sink = ReplySink::with_buf(buf);
                         let framed = {
                             let mut session = lock_clean(&session);
-                            dispatch_into(msg, &router, &mut session, &mut sink)
+                            dispatch_into_clocked(msg, &router, &mut session, &mut sink, Some(&clock))
                         };
                         framed.ok().map(|()| sink.into_buf())
                     } else {
                         drop(buf); // empty on this path
                         let reply = {
                             let mut session = lock_clean(&session);
-                            dispatch(msg, &router, &mut session)
+                            dispatch_clocked(msg, &router, &mut session, Some(&clock))
                         };
-                        reply.to_frame_bytes().ok()
+                        let frame = reply.to_frame_bytes().ok();
+                        clock.stamp_sink();
+                        frame
                     }
                 }));
                 match outcome {
-                    Ok(frame) => (frame, false),
+                    Ok(frame) => (frame, false, false),
                     Err(_) => {
                         Metrics::inc(&router.metrics().worker_panics, 1);
                         let reply = Message::RespError {
                             id,
                             message: "internal error: request handler panicked".to_string(),
                         };
-                        (reply.to_frame_bytes().ok(), true)
+                        (reply.to_frame_bytes().ok(), true, true)
                     }
                 }
             }
@@ -360,18 +398,18 @@ pub(crate) fn worker_loop(
             Job::Http(work) => {
                 let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
                     let mut session = lock_clean(&session);
-                    respond(work, &router, &mut session, buf)
+                    respond_clocked(work, &router, &mut session, buf, Some(&clock))
                 }));
                 match outcome {
-                    Ok((frame, close)) => (Some(frame), close),
+                    Ok((frame, close)) => (Some(frame), close, false),
                     Err(_) => {
                         Metrics::inc(&router.metrics().worker_panics, 1);
-                        (Some(panic_response()), true)
+                        (Some(panic_response()), true, true)
                     }
                 }
             }
         };
-        lock_clean(&done).push(Completion { token, frame, close_after });
+        lock_clean(&done).push(Completion { token, frame, close_after, clock, panicked });
         wake.signal();
     }
 }
@@ -384,6 +422,9 @@ struct Loop {
     listener: Option<TcpListener>,
     /// Wire protocol of every connection accepted from this listener.
     protocol: Protocol,
+    /// This shard's flight recorder (registered in the process-wide
+    /// registry for `/debug/trace` and SIGUSR1 dumps).
+    recorder: Arc<FlightRecorder>,
     /// Per-client token buckets for the HTTP gateway (`None` = off or a
     /// native shard); shared across shards.
     rate: Option<Arc<RateLimiter>>,
@@ -423,6 +464,7 @@ struct Loop {
 
 impl Loop {
     fn run(mut self) {
+        crate::obs::recorder::set_thread_recorder(Some(self.recorder.clone()));
         let mut events = vec![EpollEvent::zeroed(); EVENT_BATCH];
         'events: loop {
             let mut timeout = self.wheel.next_timeout_ms(Instant::now());
@@ -432,7 +474,7 @@ impl Loop {
             let n = match self.epoll.wait(&mut events, timeout) {
                 Ok(n) => n,
                 Err(e) => {
-                    eprintln!("b64simd: epoll loop failed: {e}");
+                    crate::log_error!("driver", "epoll loop failed: {e}");
                     break 'events;
                 }
             };
@@ -489,6 +531,9 @@ impl Loop {
     fn begin_drain(&mut self) {
         self.draining = true;
         self.drain_deadline = Some(Instant::now() + self.drain_grace);
+        let open = self.conns.iter().filter(|c| c.is_some()).count() as u64;
+        self.recorder.record(EventKind::Drain, 0, open);
+        crate::log_info!("driver", "shard {} draining ({open} connections open)", self.recorder.label());
         if let Some(listener) = self.listener.take() {
             let _ = self.epoll.del(listener.as_raw_fd());
         }
@@ -573,6 +618,11 @@ impl Loop {
         Metrics::inc(&self.metrics.conns_open, 1);
         Metrics::inc(&self.shard.conns_accepted, 1);
         Metrics::inc(&self.shard.conns_open, 1);
+        self.recorder.record(
+            EventKind::Accept,
+            token(idx, epoch),
+            self.shard.conns_open.load(Ordering::Relaxed),
+        );
         self.conns[idx] = Some(conn);
         self.reschedule(idx, Instant::now());
         self.pump(idx);
@@ -614,6 +664,16 @@ impl Loop {
                         Metrics::inc(&self.metrics.net_bytes_out, n as u64);
                         conn.last_activity = now;
                         conn.write_progress = now;
+                        // Replies whose bytes have now fully drained:
+                        // close out their stage clocks.
+                        for clock in conn.write.take_flushed() {
+                            self.recorder.record(
+                                EventKind::Reply,
+                                token(idx, conn.epoch),
+                                clock.total_us_now(),
+                            );
+                            self.metrics.record_clock_flush(&clock, "driver");
+                        }
                     } else if conn.write.pending() == 0 {
                         // An empty queue is never "stalled".
                         conn.write_progress = now;
@@ -628,6 +688,11 @@ impl Loop {
                         if parsed > 0 {
                             Metrics::inc(&self.metrics.frames_in, parsed as u64);
                             Metrics::inc(&self.shard.frames_in, parsed as u64);
+                            self.recorder.record(
+                                EventKind::Frame,
+                                token(idx, conn.epoch),
+                                parsed as u64,
+                            );
                         }
                         // Frame-granularity progress for the read-stall
                         // deadline: the clock starts when a partial
@@ -656,7 +721,7 @@ impl Loop {
             // 3. Dispatch the next request if none is in flight (drain
             //    included: accepted requests are answered to the last).
             if !conn.busy {
-                if let Some(mut job) = conn.inbox.pop_front() {
+                if let Some(Inbound { mut job, clock }) = conn.inbox.pop_front() {
                     // Sample the drain flag as the job leaves the inbox,
                     // not when it was parsed: responses during drain
                     // must advertise closure.
@@ -664,6 +729,8 @@ impl Loop {
                         w.draining = self.draining;
                     }
                     conn.busy = true;
+                    self.recorder
+                        .record(EventKind::Dispatch, token(idx, conn.epoch), 0);
                     // HTTP replies are always built in a pooled buffer;
                     // `zero_copy` only selects the native differential
                     // serialization path.
@@ -676,6 +743,7 @@ impl Loop {
                         done: self.completions.clone(),
                         wake: self.wake.clone(),
                         buf,
+                        clock,
                     };
                     if self.work_tx.send(item).is_err() {
                         return self.close(idx); // shutting down
@@ -746,6 +814,12 @@ impl Loop {
             && now >= conn.write_progress + self.write_timeout
         {
             Metrics::inc(&self.metrics.timeouts, 1);
+            self.recorder.record(
+                EventKind::Timeout,
+                token(idx, conn.epoch),
+                conn.write.pending() as u64,
+            );
+            crate::log_debug!("driver", "write-stalled peer closed (pending={})", conn.write.pending());
             return self.close(idx);
         }
         if conn.corrupt || conn.eof {
@@ -767,6 +841,8 @@ impl Loop {
             && now >= conn.last_activity + self.idle_timeout;
         if read_stalled || idle {
             Metrics::inc(&self.metrics.timeouts, 1);
+            self.recorder
+                .record(EventKind::Timeout, token(idx, conn.epoch), 0);
             // Same notice semantics on both protocols, different
             // encodings: a native `0x82` frame vs an HTTP `408`.
             let frame = if conn.is_http() {
@@ -840,6 +916,15 @@ impl Loop {
             let Some(conn) = self.conns[idx].as_mut() else { continue };
             conn.busy = false;
             conn.last_activity = Instant::now();
+            if c.panicked {
+                self.recorder.record(EventKind::Panic, c.token, 0);
+                crate::log_error!("driver", "request handler panicked; closing connection");
+            }
+            // Queue/kernel/sink stage durations are known as soon as the
+            // worker hands the reply back; only the flush stage waits
+            // for the socket (recorded when the write queue releases the
+            // clock in `pump`).
+            self.metrics.record_clock_stages(&c.clock);
             match c.frame {
                 Some(frame) if frame.is_empty() => {
                     // Nothing to send (an HTTP stream chunk swallowed
@@ -855,11 +940,17 @@ impl Loop {
                     }
                 }
                 Some(frame) => {
+                    if let Some(status) = http_error_status(&frame) {
+                        self.recorder
+                            .record(EventKind::HttpError, c.token, status as u64);
+                    }
                     // Zero-copy hand-off: a drained queue takes the
                     // frame buffer whole; either way one spare buffer
-                    // comes back for the pool.
+                    // comes back for the pool. The clock parks *after*
+                    // adopt so its due mark covers the adopted bytes.
                     let spare = conn.write.adopt(frame);
                     self.pool.put(spare);
+                    conn.write.push_clock(c.clock);
                     Metrics::inc(&self.metrics.frames_out, 1);
                     Metrics::inc(&self.shard.frames_out, 1);
                     if c.close_after {

@@ -64,11 +64,11 @@ mod imp {
             let Ok(spec) = std::env::var("B64SIMD_FAULTS") else { return p };
             for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
                 let Some((key, val)) = part.split_once('=') else {
-                    eprintln!("b64simd: ignoring malformed B64SIMD_FAULTS entry '{part}'");
+                    crate::log_warn!("faults", "ignoring malformed B64SIMD_FAULTS entry '{part}'");
                     continue;
                 };
                 let Ok(n) = val.trim().parse::<u64>() else {
-                    eprintln!("b64simd: ignoring non-numeric B64SIMD_FAULTS value '{part}'");
+                    crate::log_warn!("faults", "ignoring non-numeric B64SIMD_FAULTS value '{part}'");
                     continue;
                 };
                 let pct = n.min(100) as u8;
@@ -84,7 +84,9 @@ mod imp {
                     "uring.setup.fail" => p.uring_setup_fail = pct,
                     "uring.enter.eintr" => p.uring_enter_eintr = pct,
                     "cqe.short" => p.cqe_short = pct,
-                    other => eprintln!("b64simd: ignoring unknown B64SIMD_FAULTS key '{other}'"),
+                    other => {
+                        crate::log_warn!("faults", "ignoring unknown B64SIMD_FAULTS key '{other}'")
+                    }
                 }
             }
             p
@@ -116,14 +118,34 @@ mod imp {
         })
     }
 
-    /// Roll the dice for one injection point; counts a hit.
-    fn fire(percent: u8) -> bool {
+    /// Stable FNV-1a hash of an injection-site name, recorded as the
+    /// Fault event's `detail` so a trace dump identifies which site
+    /// fired without carrying strings through the ring.
+    pub(crate) fn site_hash(site: &str) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for b in site.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01B3);
+        }
+        h
+    }
+
+    /// Roll the dice for one injection point; counts a hit and records
+    /// it as a flight-recorder Fault event on the calling shard's
+    /// ambient recorder (workers have none; the count still advances).
+    fn fire(percent: u8, site: &str) -> bool {
         if percent == 0 {
             return false;
         }
         let hit = next_u64() % 100 < percent as u64;
         if hit {
             INJECTED.fetch_add(1, Ordering::Relaxed);
+            crate::obs::recorder::record_here(
+                crate::obs::recorder::EventKind::Fault,
+                0,
+                site_hash(site),
+            );
+            crate::log_debug!("faults", "injected fault at {site}");
         }
         hit
     }
@@ -138,10 +160,10 @@ mod imp {
     /// truncate the buffer so the real read comes back short (≤ 7
     /// bytes), tearing frames across reads.
     pub(crate) fn read_stream(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<usize> {
-        if fire(plan().read_eintr) {
+        if fire(plan().read_eintr, "read.eintr") {
             return Err(io::ErrorKind::Interrupted.into());
         }
-        let cap = if !buf.is_empty() && fire(plan().read_short) {
+        let cap = if !buf.is_empty() && fire(plan().read_short, "read.short") {
             buf.len().min(7)
         } else {
             buf.len()
@@ -152,7 +174,7 @@ mod imp {
     /// `accept(2)` shim: may synthesize the transient failures a
     /// listener backlog really produces (`ECONNABORTED`, `EINTR`).
     pub(crate) fn accept(listener: &TcpListener) -> io::Result<(TcpStream, SocketAddr)> {
-        if fire(plan().accept_fail) {
+        if fire(plan().accept_fail, "accept.fail") {
             let kind = if next_u64() % 2 == 0 {
                 io::ErrorKind::ConnectionAborted
             } else {
@@ -165,12 +187,12 @@ mod imp {
 
     /// Should `BufferPool::get` pretend its free list is exhausted?
     pub(crate) fn pool_exhausted() -> bool {
-        fire(plan().pool_empty)
+        fire(plan().pool_empty, "pool.empty")
     }
 
     /// Should `Epoll::wait` behave as if a signal interrupted it once?
     pub(crate) fn epoll_eintr() -> bool {
-        fire(plan().epoll_eintr)
+        fire(plan().epoll_eintr, "epoll.eintr")
     }
 
     /// Should the (once-per-process) io_uring probe report the kernel
@@ -178,21 +200,21 @@ mod imp {
     /// call, so a plan produces a deterministic whole-process fallback
     /// to epoll instead of per-shard flakiness.
     pub(crate) fn uring_setup_fail() -> bool {
-        fire(plan().uring_setup_fail)
+        fire(plan().uring_setup_fail, "uring.setup.fail")
     }
 
     /// Should `io_uring_enter` behave as if a signal interrupted it
     /// once? Exercises the same EINTR-retry arm `epoll.eintr` covers on
     /// the readiness loop.
     pub(crate) fn uring_enter_eintr() -> bool {
-        fire(plan().uring_enter_eintr)
+        fire(plan().uring_enter_eintr, "uring.enter.eintr")
     }
 
     /// Truncate a read op's length (≤ 7 bytes) before submission, so
     /// its completion comes back short and frames tear across reads —
     /// the CQE-side analogue of `read.short`.
     pub(crate) fn short_cqe(len: u32) -> u32 {
-        if len > 7 && fire(plan().cqe_short) {
+        if len > 7 && fire(plan().cqe_short, "cqe.short") {
             7
         } else {
             len
@@ -206,10 +228,10 @@ mod imp {
 
     impl<W: io::Write> io::Write for FaultyWrite<'_, W> {
         fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
-            if fire(plan().write_eagain) {
+            if fire(plan().write_eagain, "write.eagain") {
                 return Err(io::ErrorKind::WouldBlock.into());
             }
-            let cap = if buf.len() > 1 && fire(plan().write_short) {
+            let cap = if buf.len() > 1 && fire(plan().write_short, "write.short") {
                 buf.len() / 2
             } else {
                 buf.len()
@@ -244,8 +266,14 @@ mod imp {
         #[test]
         fn zero_percent_never_fires() {
             for _ in 0..1000 {
-                assert!(!fire(0));
+                assert!(!fire(0, "test.site"));
             }
+        }
+
+        #[test]
+        fn site_hash_is_stable_and_distinct() {
+            assert_eq!(site_hash("read.eintr"), site_hash("read.eintr"));
+            assert_ne!(site_hash("read.eintr"), site_hash("write.short"));
         }
     }
 }

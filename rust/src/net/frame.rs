@@ -21,8 +21,10 @@
 //! reaches the socket without ever being re-serialized or memcpyed
 //! through an intermediate `Vec`.
 
+use std::collections::VecDeque;
 use std::io::{self, Write};
 
+use crate::obs::clock::ReqClock;
 use crate::server::proto::{Message, ProtoError, MAX_FRAME, TAG_RESP_DATA, TAG_RESP_ERROR};
 
 /// Incremental parser: push raw bytes in, pull parsed frames out.
@@ -322,19 +324,36 @@ impl crate::coordinator::sink::ResponseSink for ReplySink {
 /// Outgoing bytes awaiting a writable socket. Frames are appended
 /// whole; `write_to` pushes as much as the socket accepts and keeps the
 /// rest for the next `EPOLLOUT`.
+///
+/// The queue also tracks first-flush attribution for the stage clocks:
+/// it keeps monotone totals of bytes ever queued and bytes ever
+/// written, and a [`ReqClock`] parked with [`Self::push_clock`] is
+/// surfaced by [`Self::take_flushed`] once the write totals prove its
+/// reply bytes reached the socket. The epoll path advances the written
+/// total inside [`Self::write_to`]; the uring path, whose writes
+/// complete asynchronously after [`Self::take_pending`], reports them
+/// with [`Self::note_written`] when the completion arrives.
 pub struct WriteQueue {
     buf: Vec<u8>,
     pos: usize,
+    /// Cumulative bytes ever queued (monotone, survives buffer swaps).
+    total_queued: u64,
+    /// Cumulative bytes the socket has accepted (monotone).
+    total_written: u64,
+    /// Stage clocks waiting for their reply to flush, each due once
+    /// `total_written` reaches the `total_queued` at park time.
+    clocks: VecDeque<(u64, ReqClock)>,
 }
 
 impl WriteQueue {
     /// Build on a (pooled) buffer.
     pub fn new(buf: Vec<u8>) -> WriteQueue {
-        WriteQueue { buf, pos: 0 }
+        WriteQueue { buf, pos: 0, total_queued: 0, total_written: 0, clocks: VecDeque::new() }
     }
 
     /// Queue a pre-serialized frame (length prefix included).
     pub fn push_bytes(&mut self, frame: &[u8]) {
+        self.total_queued += frame.len() as u64;
         self.buf.extend_from_slice(frame);
     }
 
@@ -353,6 +372,7 @@ impl WriteQueue {
     /// input buffer is returned. Either way exactly one buffer comes
     /// back, so the caller's pool stays balanced.
     pub fn adopt(&mut self, frames: Vec<u8>) -> Vec<u8> {
+        self.total_queued += frames.len() as u64;
         if self.pending() == 0 {
             self.buf.clear();
             self.pos = 0;
@@ -366,6 +386,39 @@ impl WriteQueue {
     /// Bytes still waiting to go out.
     pub fn pending(&self) -> usize {
         self.buf.len() - self.pos
+    }
+
+    /// Park a request's stage clock until everything queued so far —
+    /// its reply included — has been written. Call right after queueing
+    /// the reply's frames.
+    pub fn push_clock(&mut self, clock: ReqClock) {
+        self.clocks.push_back((self.total_queued, clock));
+    }
+
+    /// Report `n` bytes accepted by the socket outside
+    /// [`Self::write_to`] (the uring transport's asynchronous write
+    /// completions).
+    pub fn note_written(&mut self, n: u64) {
+        self.total_written += n;
+    }
+
+    /// Clocks whose reply bytes have fully reached the socket since
+    /// the last call, in queue order. The caller records their flush
+    /// stage (and fires the slow-request hook).
+    pub fn take_flushed(&mut self) -> Vec<ReqClock> {
+        let mut out = Vec::new();
+        while let Some((due, _)) = self.clocks.front() {
+            if *due > self.total_written {
+                break;
+            }
+            out.push(self.clocks.pop_front().unwrap().1);
+        }
+        out
+    }
+
+    /// Whether any parked clock is still waiting on a flush.
+    pub fn has_waiting_clocks(&self) -> bool {
+        !self.clocks.is_empty()
     }
 
     /// Swap the queued bytes out for an asynchronous write: returns the
@@ -398,6 +451,7 @@ impl WriteQueue {
                 Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
                 Ok(n) => {
                     self.pos += n;
+                    self.total_written += n as u64;
                     written += n;
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -620,6 +674,76 @@ mod tests {
         let mut want = expect;
         want.extend_from_slice(&Message::Pong.to_frame_bytes().unwrap());
         assert_eq!(sink.into_buf(), want);
+    }
+
+    #[test]
+    fn write_queue_flush_clocks_fire_only_after_their_bytes_drain() {
+        use crate::obs::clock::{Proto, ReqClock};
+        let mut q = WriteQueue::new(Vec::new());
+        // First reply: 10 bytes, clock parked behind them.
+        q.push_bytes(&[1u8; 10]);
+        q.push_clock(ReqClock::new(Proto::Native));
+        // Second reply: 20 more bytes, its own clock behind all 30.
+        q.push_bytes(&[2u8; 20]);
+        q.push_clock(ReqClock::new(Proto::Http));
+        assert!(q.has_waiting_clocks());
+        assert!(q.take_flushed().is_empty(), "nothing written yet");
+
+        /// Accepts at most `cap` bytes per call, then WouldBlock.
+        struct Throttle(usize);
+        impl Write for Throttle {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.0 == 0 {
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                let n = buf.len().min(self.0);
+                self.0 = 0;
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        // A 5-byte partial write releases neither clock.
+        q.write_to(&mut Throttle(5)).unwrap();
+        assert!(q.take_flushed().is_empty());
+        // 10 more bytes (15 total) covers the first reply only.
+        q.write_to(&mut Throttle(10)).unwrap();
+        let flushed = q.take_flushed();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].proto(), Proto::Native);
+        // Draining the rest releases the second.
+        q.write_to(&mut Throttle(usize::MAX)).unwrap();
+        assert_eq!(q.pending(), 0);
+        let flushed = q.take_flushed();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].proto(), Proto::Http);
+        assert!(!q.has_waiting_clocks());
+    }
+
+    #[test]
+    fn write_queue_async_writes_release_clocks_via_note_written() {
+        use crate::obs::clock::{Proto, ReqClock};
+        // The uring path: bytes leave via take_pending and complete
+        // later; note_written is the flush signal.
+        let mut q = WriteQueue::new(Vec::new());
+        q.push_bytes(&[7u8; 12]);
+        q.push_clock(ReqClock::new(Proto::Native));
+        let (buf, pos) = q.take_pending(Vec::new());
+        assert_eq!((buf.len(), pos), (12, 0));
+        assert!(q.take_flushed().is_empty(), "take_pending is not a flush");
+        q.note_written(8); // short write completion
+        assert!(q.take_flushed().is_empty());
+        q.note_written(4); // remainder lands
+        assert_eq!(q.take_flushed().len(), 1);
+        // Clocks parked while an async write is in flight wait for
+        // their own bytes, not the in-flight ones.
+        q.push_bytes(&[8u8; 3]);
+        q.push_clock(ReqClock::new(Proto::Native));
+        q.note_written(2);
+        assert!(q.take_flushed().is_empty());
+        q.note_written(1);
+        assert_eq!(q.take_flushed().len(), 1);
     }
 
     #[test]

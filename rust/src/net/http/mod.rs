@@ -32,7 +32,7 @@ pub mod respond;
 pub mod sink;
 
 pub use machine::HttpMachine;
-pub use respond::{busy_response, panic_response, respond, timeout_response};
+pub use respond::{busy_response, panic_response, respond, respond_clocked, timeout_response};
 pub use sink::HttpSink;
 
 /// Which wire protocol a listener (and every connection accepted from

@@ -2,7 +2,7 @@
 //!
 //! [`respond`] turns one [`HttpWork`] into response bytes plus a
 //! close-after-flush flag, mirroring the native protocol's
-//! `dispatch_into`:
+//! `dispatch_into_clocked`:
 //!
 //! * `POST /encode` / `POST /decode` / `POST /datauri` with a buffered
 //!   body go through `Router::process_into` into an [`HttpSink`], so
@@ -13,10 +13,12 @@
 //!   session's streaming codecs under the reserved [`HTTP_STREAM_ID`],
 //!   each input slice answered by one output chunk — a decode larger
 //!   than the native `MAX_FRAME` completes in bounded memory;
-//! * `GET /healthz` and `GET /metrics` are the ops surface: the health
-//!   check flips to `503` while draining, the metrics endpoint renders
-//!   the global counters plus the per-shard breakdown as
-//!   `b64simd_*`-prefixed text.
+//! * `GET /healthz`, `GET /metrics` and `GET /debug/trace` are the ops
+//!   surface: the health check flips to `503` while draining, the
+//!   metrics endpoint renders the global counters plus the per-shard
+//!   breakdown as `b64simd_*`-prefixed text, and the trace endpoint
+//!   dumps every shard's flight recorder as JSON (`?n=` caps events
+//!   per shard).
 //!
 //! Query parameters (`alphabet=standard|url|imap`,
 //! `mode=strict|forgiving`, `ws=none|crlf|all`, `wrap=<n>`) are plain
@@ -34,22 +36,40 @@
 //! `0\r\n\r\n` chunk — deliberately truncated chunked framing, which
 //! every conforming client treats as a failed transfer.
 
+use std::time::Instant;
+
 use crate::base64::mime::MimeCodec;
 use crate::base64::{Alphabet, Mode, Whitespace};
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Request, RequestKind, Router};
+use crate::obs::clock::ReqClock;
 
 use super::sink::HttpSink;
 use super::{HttpJob, HttpRequest, HttpWork, Method, HTTP_STREAM_ID};
 
 /// Produce the response for one job. `buf` is the connection's pooled
 /// response buffer (appended to, returned with the response bytes);
-/// the second return is close-after-flush.
+/// the second return is close-after-flush. Unclocked convenience
+/// wrapper over [`respond_clocked`].
 pub fn respond(
     work: HttpWork,
     router: &Router,
     session: &mut SessionState,
+    buf: Vec<u8>,
+) -> (Vec<u8>, bool) {
+    respond_clocked(work, router, session, buf, None)
+}
+
+/// [`respond`] with an optional request stage clock: codec routes
+/// stamp kernel/sink inside the router, everything else (ops routes,
+/// immediates, stream plumbing) stamps here, so every job that
+/// produces bytes attributes its time to a stage.
+pub fn respond_clocked(
+    work: HttpWork,
+    router: &Router,
+    session: &mut SessionState,
     mut buf: Vec<u8>,
+    clock: Option<&ReqClock>,
 ) -> (Vec<u8>, bool) {
     let HttpWork { job, draining } = work;
     let metrics = router.metrics();
@@ -66,36 +86,66 @@ pub fn respond(
             }
             let close = close || draining;
             write_simple(&mut buf, status, reason_for(status), &message, close);
+            if let Some(c) = clock {
+                c.stamp_kernel();
+                c.stamp_sink();
+            }
             (buf, close)
         }
         HttpJob::Request(req) => {
             Metrics::inc(&metrics.http_requests, 1);
-            handle_request(req, router, draining, buf)
+            handle_request(req, router, draining, buf, clock)
         }
         HttpJob::StreamBegin(req) => {
             Metrics::inc(&metrics.http_requests, 1);
-            stream_begin(req, session, draining, buf)
+            let out = stream_begin(req, session, draining, buf);
+            if let Some(c) = clock {
+                c.stamp_kernel();
+                c.stamp_sink();
+            }
+            out
         }
-        HttpJob::StreamChunk(data) => match session.chunk(HTTP_STREAM_ID, &data) {
-            Ok(out) => {
-                write_chunk(&mut buf, &out);
-                (buf, false)
+        HttpJob::StreamChunk(data) => {
+            let start = Instant::now();
+            match session.chunk(HTTP_STREAM_ID, &data) {
+                Ok(out) => {
+                    if let Some(c) = clock {
+                        c.stamp_kernel();
+                    }
+                    write_chunk(&mut buf, &out);
+                    if let Some(c) = clock {
+                        c.stamp_sink();
+                    }
+                    // Streamed bodies never pass through the router, so
+                    // the per-request latency histogram is fed here —
+                    // one sample per body slice.
+                    metrics.latency.record(start.elapsed());
+                    (buf, false)
+                }
+                // Begin was refused (error already answered): swallow.
+                Err(StreamError::UnknownStream(_)) => (buf, false),
+                Err(_) => {
+                    // Mid-body codec error after a 200 head is on the wire:
+                    // close without the terminal chunk (see module docs).
+                    session.abort(HTTP_STREAM_ID);
+                    (buf, true)
+                }
             }
-            // Begin was refused (error already answered): swallow.
-            Err(StreamError::UnknownStream(_)) => (buf, false),
-            Err(_) => {
-                // Mid-body codec error after a 200 head is on the wire:
-                // close without the terminal chunk (see module docs).
-                session.abort(HTTP_STREAM_ID);
-                (buf, true)
-            }
-        },
+        }
         HttpJob::StreamEnd { close } => {
             let close = close || draining;
+            let start = Instant::now();
             match session.finish(HTTP_STREAM_ID) {
                 Ok(out) => {
+                    if let Some(c) = clock {
+                        c.stamp_kernel();
+                    }
                     write_chunk(&mut buf, &out);
                     buf.extend_from_slice(b"0\r\n\r\n");
+                    if let Some(c) = clock {
+                        c.stamp_sink();
+                    }
+                    metrics.latency.record(start.elapsed());
                     (buf, close)
                 }
                 Err(StreamError::UnknownStream(_)) => (buf, close),
@@ -111,15 +161,24 @@ fn handle_request(
     router: &Router,
     draining: bool,
     mut buf: Vec<u8>,
+    clock: Option<&ReqClock>,
 ) -> (Vec<u8>, bool) {
     let close = req.close || draining;
+    let stamp = |c: Option<&ReqClock>| {
+        if let Some(c) = c {
+            c.stamp_kernel();
+            c.stamp_sink();
+        }
+    };
     match (req.method, req.path.as_str()) {
         (Method::Get, "/healthz") => {
             if draining {
                 write_simple(&mut buf, 503, "Service Unavailable", "draining\n", true);
+                stamp(clock);
                 (buf, true)
             } else {
                 write_simple(&mut buf, 200, "OK", "ok\n", close);
+                stamp(clock);
                 (buf, close)
             }
         }
@@ -127,12 +186,31 @@ fn handle_request(
             let body = router.metrics().render_text();
             let ct = "text/plain; version=0.0.4";
             write_response(&mut buf, 200, "OK", ct, &[], body.as_bytes(), close);
+            stamp(clock);
             (buf, close)
         }
-        (Method::Post, "/encode") => codec_request(req, router, CodecRoute::Encode, close, buf),
-        (Method::Post, "/datauri") => codec_request(req, router, CodecRoute::DataUri, close, buf),
-        (Method::Post, "/decode") => codec_request(req, router, CodecRoute::Decode, close, buf),
-        (_, "/healthz" | "/metrics") => {
+        (Method::Get, "/debug/trace") => {
+            // Recent flight-recorder events from every registered shard,
+            // merged and time-ordered; `n` caps events per shard.
+            let per_shard = req
+                .query_param("n")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(128);
+            let body = crate::obs::recorder::dump_json(per_shard);
+            write_response(&mut buf, 200, "OK", "application/json", &[], body.as_bytes(), close);
+            stamp(clock);
+            (buf, close)
+        }
+        (Method::Post, "/encode") => {
+            codec_request(req, router, CodecRoute::Encode, close, buf, clock)
+        }
+        (Method::Post, "/datauri") => {
+            codec_request(req, router, CodecRoute::DataUri, close, buf, clock)
+        }
+        (Method::Post, "/decode") => {
+            codec_request(req, router, CodecRoute::Decode, close, buf, clock)
+        }
+        (_, "/healthz" | "/metrics" | "/debug/trace") => {
             write_response(
                 &mut buf,
                 405,
@@ -142,6 +220,7 @@ fn handle_request(
                 b"method not allowed\n",
                 close,
             );
+            stamp(clock);
             (buf, close)
         }
         (_, "/encode" | "/decode" | "/datauri") => {
@@ -154,10 +233,12 @@ fn handle_request(
                 b"method not allowed\n",
                 close,
             );
+            stamp(clock);
             (buf, close)
         }
         _ => {
             write_simple(&mut buf, 404, "Not Found", "not found\n", close);
+            stamp(clock);
             (buf, close)
         }
     }
@@ -179,6 +260,7 @@ fn codec_request(
     route: CodecRoute,
     close: bool,
     mut buf: Vec<u8>,
+    clock: Option<&ReqClock>,
 ) -> (Vec<u8>, bool) {
     let params = match Params::of(&req, route) {
         Ok(p) => p,
@@ -199,8 +281,18 @@ fn codec_request(
                 return (buf, close);
             }
         };
+        let start = Instant::now();
         let body = codec.encode(&req.body);
+        if let Some(c) = clock {
+            c.stamp_kernel();
+        }
         write_response(&mut buf, 200, "OK", "text/plain", &[], &body, close);
+        if let Some(c) = clock {
+            c.stamp_sink();
+        }
+        // Wrapped encodes bypass the router, so feed the request
+        // latency histogram here (the audit twin of the streamed path).
+        router.metrics().latency.record(start.elapsed());
         return (buf, close);
     }
     let (kind, content_type) = match route {
@@ -217,7 +309,7 @@ fn codec_request(
         mode: params.mode,
         ws: params.ws,
     };
-    match router.process_into(request, &mut sink) {
+    match router.process_into_clocked(request, &mut sink, clock) {
         Ok(()) => (sink.into_buf(), close),
         Err(_) => {
             // Reply would not fit the sink's framing; connection-fatal,
@@ -702,6 +794,49 @@ mod tests {
             rt.metrics().rate_limited.load(std::sync::atomic::Ordering::Relaxed),
             1
         );
+    }
+
+    #[test]
+    fn debug_trace_returns_json() {
+        let rt = router();
+        let (head, body, _) = run(&rt, get("/debug/trace"));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("Content-Type: application/json"), "{head}");
+        let text = String::from_utf8(body).unwrap();
+        assert!(
+            text.trim_start().starts_with('['),
+            "trace body is a JSON array: {text}"
+        );
+        // Method guard matches the other ops routes.
+        let (head, _, _) = run(&rt, post("/debug/trace", b""));
+        assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+    }
+
+    #[test]
+    fn streamed_requests_feed_the_latency_histogram() {
+        // The coverage-audit regression: bodies on the streaming path
+        // bypass the router, so `respond` itself must record latency.
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let before = rt.metrics().latency.count();
+        let work = HttpWork { job: HttpJob::StreamBegin(post("/decode", b"")), draining: false };
+        let (_, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        let work = HttpWork { job: HttpJob::StreamChunk(b"aGVsbG8=".to_vec()), draining: false };
+        let (_, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        let work = HttpWork { job: HttpJob::StreamEnd { close: false }, draining: false };
+        let (_, close) = respond(work, &rt, &mut session, Vec::new());
+        assert!(!close);
+        assert!(
+            rt.metrics().latency.count() > before,
+            "streamed gateway requests must advance the latency count"
+        );
+        // The wrapped-encode bypass records too.
+        let before = rt.metrics().latency.count();
+        let (head, _, _) = run(&rt, post("/encode?wrap=76", &[0xA5u8; 64]));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(rt.metrics().latency.count() > before);
     }
 
     #[test]

@@ -315,6 +315,34 @@ pub fn term_requested() -> bool {
     TERM_REQUESTED.load(std::sync::atomic::Ordering::SeqCst)
 }
 
+const SIGUSR1: c_int = 10;
+
+/// Set by [`on_usr1_signal`]; taken (cleared) by [`usr1_requested`].
+static USR1_REQUESTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// `SIGUSR1` handler — same async-signal-safe atomic-store-only shape
+/// as [`on_term_signal`]; the serve loop polls and does the work.
+extern "C" fn on_usr1_signal(_signum: c_int) {
+    USR1_REQUESTED.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Install the `SIGUSR1` handler used by `b64simd serve` to dump the
+/// flight-recorder rings to stderr on demand. Process-global, CLI-only,
+/// like [`install_term_handler`].
+pub fn install_usr1_handler() -> io::Result<()> {
+    let prev = unsafe { signal(SIGUSR1, on_usr1_signal as usize) };
+    if prev == SIG_ERR {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Take (and clear) the pending `SIGUSR1` flag, so each signal produces
+/// exactly one trace dump.
+pub fn usr1_requested() -> bool {
+    USR1_REQUESTED.swap(false, std::sync::atomic::Ordering::SeqCst)
+}
+
 /// Raise the soft `RLIMIT_NOFILE` to at least `want` descriptors
 /// (clamped to the hard limit). Returns the resulting soft limit. The
 /// load generator and soak tests open thousands of sockets from one
@@ -1066,7 +1094,7 @@ fn probe_uring() -> bool {
         // Injected at the cached probe, not per setup call: one roll
         // decides for the whole process, so a fault plan yields a
         // deterministic fallback instead of per-shard flakiness.
-        eprintln!("b64simd: injected uring.setup.fail — reporting io_uring unsupported");
+        crate::log_warn!("sys", "injected uring.setup.fail — reporting io_uring unsupported");
         return false;
     }
     let Ok(mut ring) = IoUring::new(8, 0) else { return false };

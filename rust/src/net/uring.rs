@@ -56,10 +56,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::buffer::BufferPool;
-use super::conn::{Conn, Job, Machine, WRITE_HIGH_WATER};
+use super::conn::{Conn, Inbound, Job, Machine, WRITE_HIGH_WATER};
 use super::driver::{
-    lock_clean, peer_ip, refuse_busy_http, token, token_parts, worker_loop, Completion, NetServer,
-    WorkItem, DRAIN_POLL_MS, HEARTBEAT,
+    http_error_status, lock_clean, peer_ip, refuse_busy_http, token, token_parts, worker_loop,
+    Completion, NetServer, WorkItem, DRAIN_POLL_MS, HEARTBEAT,
 };
 use super::frame::FrameMachine;
 use super::http::{timeout_response, HttpMachine, Protocol};
@@ -68,6 +68,7 @@ use super::timer::TimerWheel;
 use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::{Metrics, Router};
+use crate::obs::recorder::{EventKind, FlightRecorder};
 use crate::server::service::{
     idle_timeout_frame, refuse_busy, stall_timeout_frame, ServerConfig,
 };
@@ -212,17 +213,21 @@ fn spawn_shard(
     let fixed = match ring.register_buffers(&iovs) {
         Ok(()) => true,
         Err(e) => {
-            eprintln!(
-                "b64simd: uring shard {shard_id}: buffer registration failed ({e}); \
+            crate::log_warn!(
+                "uring",
+                "shard {shard_id}: buffer registration failed ({e}); \
                  degrading to unregistered reads"
             );
             false
         }
     };
+    let recorder = Arc::new(FlightRecorder::new(format!("uring-{shard_id}")));
+    crate::obs::recorder::register(&recorder);
     let lp = ULoop {
         ring,
         listener: Some(listener),
         protocol,
+        recorder,
         rate: rate.clone(),
         wake: wake.clone(),
         wake_buf: Box::new(0),
@@ -301,6 +306,9 @@ struct ULoop {
     listener: Option<TcpListener>,
     /// Wire protocol of every connection accepted from this listener.
     protocol: Protocol,
+    /// This shard's flight recorder (registered in the process-wide
+    /// registry for `/debug/trace` and SIGUSR1 dumps).
+    recorder: Arc<FlightRecorder>,
     /// Per-client token buckets for the HTTP gateway (`None` = off or a
     /// native shard); shared across shards.
     rate: Option<Arc<RateLimiter>>,
@@ -349,6 +357,7 @@ struct ULoop {
 
 impl ULoop {
     fn run(mut self) {
+        crate::obs::recorder::set_thread_recorder(Some(self.recorder.clone()));
         self.arm_wake();
         self.arm_accept();
         let mut cqes: Vec<Cqe> = Vec::with_capacity(CQ_ENTRIES as usize);
@@ -360,7 +369,7 @@ impl ULoop {
             }
             let wait = if timeout < 0 { None } else { Some(Duration::from_millis(timeout as u64)) };
             if let Err(e) = self.ring.submit_and_wait(1, wait) {
-                eprintln!("b64simd: uring loop failed: {e}");
+                crate::log_error!("uring", "uring loop failed: {e}");
                 break 'events;
             }
             if self.stop.load(Ordering::SeqCst) {
@@ -520,6 +529,11 @@ impl ULoop {
         Metrics::inc(&self.metrics.conns_open, 1);
         Metrics::inc(&self.shard.conns_accepted, 1);
         Metrics::inc(&self.shard.conns_open, 1);
+        self.recorder.record(
+            EventKind::Accept,
+            token(idx, epoch),
+            self.shard.conns_open.load(Ordering::Relaxed),
+        );
         self.conns[idx] = Some(UConn {
             conn,
             read_inflight: false,
@@ -554,6 +568,11 @@ impl ULoop {
                         if parsed > 0 {
                             Metrics::inc(&self.metrics.frames_in, parsed as u64);
                             Metrics::inc(&self.shard.frames_in, parsed as u64);
+                            self.recorder.record(
+                                EventKind::Frame,
+                                token(idx, uc.conn.epoch),
+                                parsed as u64,
+                            );
                         }
                         // Frame-granularity read-stall clock, exactly as
                         // in the epoll loop.
@@ -571,13 +590,15 @@ impl ULoop {
             }
             // 2. Dispatch the next request if none is in flight.
             if !uc.conn.busy {
-                if let Some(mut job) = uc.conn.inbox.pop_front() {
+                if let Some(Inbound { mut job, clock }) = uc.conn.inbox.pop_front() {
                     // Sample the drain flag as the job leaves the
                     // inbox, exactly as in the epoll loop.
                     if let Job::Http(w) = &mut job {
                         w.draining = self.draining;
                     }
                     uc.conn.busy = true;
+                    self.recorder
+                        .record(EventKind::Dispatch, token(idx, uc.conn.epoch), 0);
                     let pooled = self.zero_copy || uc.conn.is_http();
                     let buf = if pooled { self.pool.get() } else { Vec::new() };
                     let item = WorkItem {
@@ -587,6 +608,7 @@ impl ULoop {
                         done: self.completions.clone(),
                         wake: self.wake.clone(),
                         buf,
+                        clock,
                     };
                     if self.work_tx.send(item).is_err() {
                         send_failed = true; // shutting down
@@ -794,6 +816,17 @@ impl ULoop {
                 uc.wpos += n;
                 uc.conn.last_activity = now;
                 uc.conn.write_progress = now;
+                // The async write landed: advance the queue's written
+                // total and close out any clocks it released.
+                uc.conn.write.note_written(n as u64);
+                for clock in uc.conn.write.take_flushed() {
+                    self.recorder.record(
+                        EventKind::Reply,
+                        token(idx, uc.conn.epoch),
+                        clock.total_us_now(),
+                    );
+                    self.metrics.record_clock_flush(&clock, "uring");
+                }
                 if uc.wbuf.as_ref().is_some_and(|b| uc.wpos >= b.len()) {
                     let mut b = uc.wbuf.take().expect("checked some");
                     b.clear();
@@ -829,6 +862,13 @@ impl ULoop {
                 }
                 uc.conn.busy = false;
                 uc.conn.last_activity = Instant::now();
+                if c.panicked {
+                    self.recorder.record(EventKind::Panic, c.token, 0);
+                    crate::log_error!("uring", "request handler panicked; closing connection");
+                }
+                // Queue/kernel/sink durations are final here; the flush
+                // stage is recorded when `on_write` releases the clock.
+                self.metrics.record_clock_stages(&c.clock);
                 match c.frame {
                     Some(frame) if frame.is_empty() => {
                         // Nothing to send (an HTTP stream chunk
@@ -842,8 +882,13 @@ impl ULoop {
                         }
                     }
                     Some(frame) => {
+                        if let Some(status) = http_error_status(&frame) {
+                            self.recorder
+                                .record(EventKind::HttpError, c.token, status as u64);
+                        }
                         let spare = uc.conn.write.adopt(frame);
                         self.pool.put(spare);
+                        uc.conn.write.push_clock(c.clock);
                         Metrics::inc(&self.metrics.frames_out, 1);
                         Metrics::inc(&self.shard.frames_out, 1);
                         if c.close_after {
@@ -892,6 +937,12 @@ impl ULoop {
             {
                 // The peer stopped reading; nothing can be said to it.
                 Metrics::inc(&self.metrics.timeouts, 1);
+                self.recorder.record(
+                    EventKind::Timeout,
+                    token(idx, uc.conn.epoch),
+                    uc.out_pending() as u64,
+                );
+                crate::log_debug!("uring", "write-stalled peer closed (pending={})", uc.out_pending());
                 must_close = true;
             } else if !(uc.conn.corrupt || uc.conn.eof) {
                 let read_stalled = self.read_timeout != Duration::ZERO
@@ -903,6 +954,8 @@ impl ULoop {
                     && now >= uc.conn.last_activity + self.idle_timeout;
                 if read_stalled || idle {
                     Metrics::inc(&self.metrics.timeouts, 1);
+                    self.recorder
+                        .record(EventKind::Timeout, token(idx, uc.conn.epoch), 0);
                     // Native `0x82` frame vs HTTP `408`, as in the
                     // epoll loop.
                     let frame = if uc.conn.is_http() {
@@ -969,6 +1022,13 @@ impl ULoop {
     fn begin_drain(&mut self) {
         self.draining = true;
         self.drain_deadline = Some(Instant::now() + self.drain_grace);
+        let open = self.conns.iter().filter(|c| c.is_some()).count() as u64;
+        self.recorder.record(EventKind::Drain, 0, open);
+        crate::log_info!(
+            "uring",
+            "shard {} draining ({open} connections open)",
+            self.recorder.label()
+        );
         if self.accept_armed {
             let _ = self.ring.push(Sqe::cancel(ACCEPT_TOKEN, CANCEL_TOKEN));
             self.accept_armed = false;
@@ -1070,8 +1130,9 @@ impl ULoop {
             }
         }
         if !(self.conns.iter().all(|c| c.is_none()) && !self.wake_armed) {
-            eprintln!(
-                "b64simd: uring shard exiting with ops still in flight; leaking their buffers"
+            crate::log_warn!(
+                "uring",
+                "shard exiting with ops still in flight; leaking their buffers"
             );
             std::mem::forget(std::mem::take(&mut self.arena));
             std::mem::forget(std::mem::take(&mut self.conns));

@@ -1,0 +1,376 @@
+//! Per-request stage clocks: where did the microseconds go?
+//!
+//! A [`ReqClock`] is created when a request's bytes are off the wire
+//! (read-complete) and stamped at each pipeline boundary:
+//!
+//! ```text
+//! read-complete ─ parse ─ worker-dequeue ─ kernel-done ─ sink-serialized ─ first-flush
+//!        └─ parse ─┘└─── queue ────┘└── kernel ──┘└─── sink ────┘└─── flush ────┘
+//! ```
+//!
+//! The derived stage durations — **queue** (parsed frame waiting for a
+//! worker), **kernel** (codec compute), **sink** (reply framing /
+//! commit), **flush** (reply bytes sitting in the write queue until
+//! the socket took them) — feed the per-stage × per-protocol
+//! histograms in `coordinator::metrics`, so a slow p99 is attributable
+//! to a specific stage instead of being one opaque wall-clock number.
+//!
+//! The clock is plain data: `Cell<u32>` microsecond offsets from its
+//! origin instant. It is `Send` (moved through the work channel with
+//! its request and back with the completion) but deliberately not
+//! `Sync`; exactly one thread owns it at a time.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// Pipeline stage of a derived duration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Parsed frame waiting in the inbox + work channel for a worker.
+    Queue,
+    /// Codec compute (router admission through kernel writes).
+    Kernel,
+    /// Reply serialization: framing, commit, backfill.
+    Sink,
+    /// Committed reply waiting in the write queue for the socket.
+    Flush,
+}
+
+impl Stage {
+    /// All stages, in pipeline order (exposition iterates this).
+    pub const ALL: [Stage; 4] = [Stage::Queue, Stage::Kernel, Stage::Sink, Stage::Flush];
+
+    /// Label value used in metric exposition and slow-request logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Kernel => "kernel",
+            Stage::Sink => "sink",
+            Stage::Flush => "flush",
+        }
+    }
+
+    /// Dense index for histogram arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Queue => 0,
+            Stage::Kernel => 1,
+            Stage::Sink => 2,
+            Stage::Flush => 3,
+        }
+    }
+}
+
+/// Wire protocol a request arrived on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    /// The native length-prefixed frame protocol.
+    Native,
+    /// The HTTP/1.1 gateway.
+    Http,
+}
+
+impl Proto {
+    /// Both protocols (exposition iterates this).
+    pub const ALL: [Proto; 2] = [Proto::Native, Proto::Http];
+
+    /// Label value used in metric exposition.
+    pub fn name(self) -> &'static str {
+        match self {
+            Proto::Native => "native",
+            Proto::Http => "http",
+        }
+    }
+
+    /// Dense index for histogram arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Proto::Native => 0,
+            Proto::Http => 1,
+        }
+    }
+}
+
+/// Routing tier the coordinator chose for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePath {
+    /// Below the inline threshold: served on the block codec in place.
+    Inline,
+    /// Coalesced through the batcher with the shared worker pool.
+    Batched,
+    /// At least one full batch: engine-direct `_policy` kernels.
+    Direct,
+}
+
+impl RoutePath {
+    /// All routing tiers (exposition iterates this).
+    pub const ALL: [RoutePath; 3] = [RoutePath::Inline, RoutePath::Batched, RoutePath::Direct];
+
+    /// Label value used in metric exposition.
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePath::Inline => "inline",
+            RoutePath::Batched => "batched",
+            RoutePath::Direct => "direct",
+        }
+    }
+
+    /// Dense index for histogram arrays.
+    pub fn index(self) -> usize {
+        match self {
+            RoutePath::Inline => 0,
+            RoutePath::Batched => 1,
+            RoutePath::Direct => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<RoutePath> {
+        match v {
+            1 => Some(RoutePath::Inline),
+            2 => Some(RoutePath::Batched),
+            3 => Some(RoutePath::Direct),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel for "stamp not taken yet".
+const UNSET: u32 = u32::MAX;
+
+/// A compact per-request stage clock (see the module docs for the
+/// stage model). Microsecond offsets are saturated into `u32` —
+/// anything past ~71 minutes is pinned, far beyond every timeout.
+#[derive(Debug)]
+pub struct ReqClock {
+    /// Read-complete instant — the clock's zero.
+    origin: Instant,
+    proto: Proto,
+    parse: Cell<u32>,
+    dequeue: Cell<u32>,
+    kernel: Cell<u32>,
+    sink: Cell<u32>,
+    /// Routing tier, recorded by the router branch that served the
+    /// request (0 = not routed, e.g. a health check).
+    path: Cell<u8>,
+}
+
+impl ReqClock {
+    /// Start a clock for a request whose bytes completed reading *now*.
+    pub fn new(proto: Proto) -> ReqClock {
+        ReqClock::with_origin(Instant::now(), proto)
+    }
+
+    /// Start a clock with an explicit read-complete instant (the
+    /// transports note the instant a read drained the socket, then
+    /// construct the clock when a frame parses out of the buffer).
+    pub fn with_origin(origin: Instant, proto: Proto) -> ReqClock {
+        ReqClock {
+            origin,
+            proto,
+            parse: Cell::new(UNSET),
+            dequeue: Cell::new(UNSET),
+            kernel: Cell::new(UNSET),
+            sink: Cell::new(UNSET),
+            path: Cell::new(0),
+        }
+    }
+
+    /// Protocol this request arrived on.
+    pub fn proto(&self) -> Proto {
+        self.proto
+    }
+
+    fn elapsed_us(&self) -> u32 {
+        u64::min(self.origin.elapsed().as_micros() as u64, (UNSET - 1) as u64) as u32
+    }
+
+    /// Stamp "frame parsed".
+    pub fn stamp_parse(&self) {
+        self.parse.set(self.elapsed_us());
+    }
+
+    /// Stamp "a worker picked the request up".
+    pub fn stamp_dequeue(&self) {
+        self.dequeue.set(self.elapsed_us());
+    }
+
+    /// Stamp "codec kernel finished computing".
+    pub fn stamp_kernel(&self) {
+        self.kernel.set(self.elapsed_us());
+    }
+
+    /// Stamp "reply fully serialized into the sink".
+    pub fn stamp_sink(&self) {
+        self.sink.set(self.elapsed_us());
+    }
+
+    /// Record the routing tier the coordinator chose.
+    pub fn set_path(&self, path: RoutePath) {
+        self.path.set(match path {
+            RoutePath::Inline => 1,
+            RoutePath::Batched => 2,
+            RoutePath::Direct => 3,
+        });
+    }
+
+    /// The recorded routing tier, if the request went through the
+    /// router.
+    pub fn path(&self) -> Option<RoutePath> {
+        RoutePath::from_u8(self.path.get())
+    }
+
+    fn get(cell: &Cell<u32>) -> Option<u32> {
+        let v = cell.get();
+        (v != UNSET).then_some(v)
+    }
+
+    /// Duration of a completed (non-flush) stage, if both of its
+    /// bounding stamps were taken. Missing earlier stamps fall back to
+    /// the clock origin, so a partially-stamped request still
+    /// attributes its time somewhere rather than vanishing.
+    pub fn stage_us(&self, stage: Stage) -> Option<u64> {
+        let parse = Self::get(&self.parse).unwrap_or(0);
+        let dequeue = Self::get(&self.dequeue);
+        let kernel = Self::get(&self.kernel);
+        let sink = Self::get(&self.sink);
+        let d = match stage {
+            Stage::Queue => dequeue?.saturating_sub(parse),
+            Stage::Kernel => kernel?.saturating_sub(dequeue.unwrap_or(parse)),
+            Stage::Sink => sink?.saturating_sub(kernel.or(dequeue).unwrap_or(parse)),
+            Stage::Flush => return None, // derived at flush time, not stored
+        };
+        Some(d as u64)
+    }
+
+    /// Microseconds from origin to the sink stamp (the last stored
+    /// stamp), used as the flush baseline.
+    pub fn sink_offset_us(&self) -> u64 {
+        Self::get(&self.sink)
+            .or(Self::get(&self.kernel))
+            .or(Self::get(&self.dequeue))
+            .or(Self::get(&self.parse))
+            .unwrap_or(0) as u64
+    }
+
+    /// Flush-stage duration if the reply finished flushing *now*.
+    pub fn flush_us_now(&self) -> u64 {
+        (self.elapsed_us() as u64).saturating_sub(self.sink_offset_us())
+    }
+
+    /// Total microseconds from read-complete to *now*.
+    pub fn total_us_now(&self) -> u64 {
+        self.elapsed_us() as u64
+    }
+
+    /// One-line stage breakdown for slow-request logging, e.g.
+    /// `total=1234us queue=10 kernel=900 sink=4 flush=320 proto=native path=direct`.
+    pub fn breakdown(&self) -> String {
+        let part = |s: Stage| {
+            self.stage_us(s).map(|d| d.to_string()).unwrap_or_else(|| "-".to_string())
+        };
+        format!(
+            "total={}us queue={} kernel={} sink={} flush={} proto={} path={}",
+            self.total_us_now(),
+            part(Stage::Queue),
+            part(Stage::Kernel),
+            part(Stage::Sink),
+            self.flush_us_now(),
+            self.proto.name(),
+            self.path().map(RoutePath::name).unwrap_or("-"),
+        )
+    }
+}
+
+/// The `B64SIMD_SLOW_US` slow-request threshold (µs), read once.
+/// `None` (unset, `0`, or unparseable) disables the hook.
+pub fn slow_threshold_us() -> Option<u64> {
+    static SLOW: std::sync::OnceLock<Option<u64>> = std::sync::OnceLock::new();
+    *SLOW.get_or_init(|| {
+        std::env::var("B64SIMD_SLOW_US")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&v| v > 0)
+    })
+}
+
+/// If the request's total latency crossed the `B64SIMD_SLOW_US`
+/// threshold, log its full stage breakdown at `warn` on `target`.
+/// Call once, when the reply's flush completes.
+pub fn maybe_log_slow(clock: &ReqClock, target: &str) {
+    if let Some(limit) = slow_threshold_us() {
+        if clock.total_us_now() >= limit {
+            crate::log_warn!(target, "slow request: {}", clock.breakdown());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stages_derive_from_stamps() {
+        let t0 = Instant::now() - Duration::from_micros(1000);
+        let c = ReqClock::with_origin(t0, Proto::Native);
+        c.parse.set(10);
+        c.dequeue.set(50);
+        c.kernel.set(300);
+        c.sink.set(310);
+        assert_eq!(c.stage_us(Stage::Queue), Some(40));
+        assert_eq!(c.stage_us(Stage::Kernel), Some(250));
+        assert_eq!(c.stage_us(Stage::Sink), Some(10));
+        assert_eq!(c.stage_us(Stage::Flush), None);
+        assert_eq!(c.sink_offset_us(), 310);
+        assert!(c.flush_us_now() >= 1000 - 310 - 1);
+        assert_eq!(c.proto(), Proto::Native);
+    }
+
+    #[test]
+    fn missing_stamps_fall_back_not_panic() {
+        let c = ReqClock::new(Proto::Http);
+        assert_eq!(c.stage_us(Stage::Queue), None);
+        assert_eq!(c.stage_us(Stage::Kernel), None);
+        c.stamp_kernel();
+        // Kernel measured from origin when parse/dequeue are missing.
+        assert!(c.stage_us(Stage::Kernel).is_some());
+        assert_eq!(c.stage_us(Stage::Queue), None);
+        assert!(c.sink_offset_us() >= 1 || c.sink_offset_us() == 0);
+    }
+
+    #[test]
+    fn path_round_trips() {
+        let c = ReqClock::new(Proto::Native);
+        assert_eq!(c.path(), None);
+        c.set_path(RoutePath::Batched);
+        assert_eq!(c.path(), Some(RoutePath::Batched));
+        assert_eq!(RoutePath::Batched.name(), "batched");
+    }
+
+    #[test]
+    fn breakdown_mentions_every_stage() {
+        let c = ReqClock::new(Proto::Http);
+        c.stamp_parse();
+        c.stamp_dequeue();
+        c.stamp_kernel();
+        c.stamp_sink();
+        c.set_path(RoutePath::Inline);
+        let b = c.breakdown();
+        for needle in ["total=", "queue=", "kernel=", "sink=", "flush=", "proto=http", "path=inline"]
+        {
+            assert!(b.contains(needle), "breakdown missing {needle}: {b}");
+        }
+    }
+
+    #[test]
+    fn stamps_are_monotone_helpers() {
+        let c = ReqClock::new(Proto::Native);
+        c.stamp_parse();
+        c.stamp_dequeue();
+        c.stamp_kernel();
+        c.stamp_sink();
+        for s in [Stage::Queue, Stage::Kernel, Stage::Sink] {
+            assert!(c.stage_us(s).is_some());
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Structured, leveled logging for every production stderr line.
+//!
+//! Configuration is read once from the environment:
+//!
+//! * `B64SIMD_LOG` — minimum level, optionally with per-target
+//!   overrides: `error|warn|info|debug`, e.g. `B64SIMD_LOG=info` or
+//!   `B64SIMD_LOG=warn,uring=debug,http=info`. A bare token sets the
+//!   default level; `target=level` pairs override it for a log target
+//!   and anything nested under it (`uring=debug` also covers
+//!   `uring::cqe` — see [`LogConfig::enabled`]). Unset means `info`.
+//! * `B64SIMD_LOG_FORMAT` — `text` (default) or `json`. JSON lines
+//!   are one object per line: `{"ts_us":…,"level":"…","target":"…",
+//!   "msg":"…"}` with RFC 8259 string escaping, so a log collector
+//!   (or the CI `obs` job) can parse every line.
+//!
+//! Use the crate-level macros, not [`emit`] directly:
+//!
+//! ```ignore
+//! crate::log_info!("driver", "shard {shard} listening on {addr}");
+//! crate::log_warn!("uring", "probe failed: {e}; falling back to epoll");
+//! ```
+
+use std::fmt;
+use std::io::Write as _;
+use std::sync::OnceLock;
+
+/// Log severity, ordered: `Error < Warn < Info < Debug` (a level is
+/// enabled when it is ≤ the configured maximum verbosity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// The process or a connection is failing.
+    Error,
+    /// Unexpected but survivable (fallbacks, rejected config).
+    Warn,
+    /// Lifecycle milestones (startup, drain, shutdown).
+    Info,
+    /// Per-event detail for debugging.
+    Debug,
+}
+
+impl Level {
+    /// Lower-case name as it appears in env config and output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse an env token (case-insensitive); `None` if unknown.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Output line format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// `[  123456us warn  uring] message` — human-readable.
+    Text,
+    /// One JSON object per line — machine-readable.
+    Json,
+}
+
+/// Parsed logger configuration (from `B64SIMD_LOG` +
+/// `B64SIMD_LOG_FORMAT`, or built directly in tests).
+#[derive(Debug, Clone)]
+pub struct LogConfig {
+    /// Default maximum verbosity.
+    pub default: Level,
+    /// Per-target overrides, first match wins.
+    pub targets: Vec<(String, Level)>,
+    /// Line format.
+    pub format: Format,
+}
+
+impl LogConfig {
+    /// Parse the `B64SIMD_LOG` grammar: a comma-separated list where a
+    /// bare level sets the default and `target=level` pairs override
+    /// per target. Unknown tokens are ignored (config must never take
+    /// the server down). `spec = None` means the variable was unset.
+    pub fn parse(spec: Option<&str>, format: Option<&str>) -> LogConfig {
+        let mut cfg = LogConfig {
+            default: Level::Info,
+            targets: Vec::new(),
+            format: match format.map(str::trim) {
+                Some(f) if f.eq_ignore_ascii_case("json") => Format::Json,
+                _ => Format::Text,
+            },
+        };
+        let Some(spec) = spec else { return cfg };
+        for token in spec.split(',') {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            match token.split_once('=') {
+                None => {
+                    if let Some(level) = Level::parse(token) {
+                        cfg.default = level;
+                    }
+                }
+                Some((target, level)) => {
+                    if let Some(level) = Level::parse(level) {
+                        cfg.targets.push((target.trim().to_string(), level));
+                    }
+                }
+            }
+        }
+        cfg
+    }
+
+    /// Is `level` enabled for `target`? A target override matches when
+    /// it equals the target or a leading `::`-separated prefix of it
+    /// (`uring` matches both `uring` and `uring::cqe`).
+    pub fn enabled(&self, level: Level, target: &str) -> bool {
+        for (t, max) in &self.targets {
+            if target == t || target.strip_prefix(t.as_str()).is_some_and(|r| r.starts_with("::"))
+            {
+                return level <= *max;
+            }
+        }
+        level <= self.default
+    }
+}
+
+/// The process-wide config, read from the environment once on first
+/// use.
+pub fn config() -> &'static LogConfig {
+    static CONFIG: OnceLock<LogConfig> = OnceLock::new();
+    CONFIG.get_or_init(|| {
+        let spec = std::env::var("B64SIMD_LOG").ok();
+        let format = std::env::var("B64SIMD_LOG_FORMAT").ok();
+        LogConfig::parse(spec.as_deref(), format.as_deref())
+    })
+}
+
+/// True when `level` would be emitted for `target` — cheap guard for
+/// call sites whose message formatting is itself expensive.
+pub fn enabled(level: Level, target: &str) -> bool {
+    config().enabled(level, target)
+}
+
+/// Escape `s` into `out` as the *contents* of a JSON string literal
+/// (RFC 8259 §7: `"`, `\` and control characters).
+pub fn json_escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render one log line (no trailing newline) — the pure core of
+/// [`emit`], separated so tests can pin both formats exactly.
+pub fn format_line(format: Format, ts_us: u64, level: Level, target: &str, msg: &str) -> String {
+    match format {
+        Format::Text => format!("[{ts_us:>9}us {:<5} {target}] {msg}", level.name()),
+        Format::Json => {
+            let mut out = String::with_capacity(msg.len() + target.len() + 48);
+            out.push_str("{\"ts_us\":");
+            out.push_str(&ts_us.to_string());
+            out.push_str(",\"level\":\"");
+            out.push_str(level.name());
+            out.push_str("\",\"target\":\"");
+            json_escape_into(&mut out, target);
+            out.push_str("\",\"msg\":\"");
+            json_escape_into(&mut out, msg);
+            out.push_str("\"}");
+            out
+        }
+    }
+}
+
+/// Emit one log record if enabled. Call through the `log_*!` macros.
+/// The line is written with a single `write_all` so concurrent shards
+/// do not interleave mid-line.
+pub fn emit(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    let cfg = config();
+    if !cfg.enabled(level, target) {
+        return;
+    }
+    let mut line = format_line(cfg.format, super::now_us(), level, target, &args.to_string());
+    line.push('\n');
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// Log at [`Level::Error`]: `log_error!("target", "fmt", args…)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`]: `log_warn!("target", "fmt", args…)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`]: `log_info!("target", "fmt", args…)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`]: `log_debug!("target", "fmt", args…)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse(" warn "), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn config_grammar() {
+        let cfg = LogConfig::parse(Some("warn,uring=debug,http=error"), Some("json"));
+        assert_eq!(cfg.default, Level::Warn);
+        assert_eq!(cfg.format, Format::Json);
+        assert!(cfg.enabled(Level::Debug, "uring"));
+        assert!(cfg.enabled(Level::Debug, "uring::cqe"));
+        assert!(!cfg.enabled(Level::Warn, "http"));
+        assert!(cfg.enabled(Level::Error, "http"));
+        assert!(cfg.enabled(Level::Warn, "driver"));
+        assert!(!cfg.enabled(Level::Info, "driver"));
+        // "uringx" must not match the "uring" override.
+        assert!(!cfg.enabled(Level::Debug, "uringx"));
+    }
+
+    #[test]
+    fn config_defaults_and_junk_tolerance() {
+        let cfg = LogConfig::parse(None, None);
+        assert_eq!(cfg.default, Level::Info);
+        assert_eq!(cfg.format, Format::Text);
+        assert!(cfg.enabled(Level::Info, "anything"));
+        assert!(!cfg.enabled(Level::Debug, "anything"));
+        let cfg = LogConfig::parse(Some("bogus,=,x=,=y,debug"), Some("yaml"));
+        assert_eq!(cfg.default, Level::Debug);
+        assert_eq!(cfg.format, Format::Text);
+    }
+
+    #[test]
+    fn text_format_exact() {
+        let line = format_line(Format::Text, 42, Level::Warn, "driver", "hello");
+        assert_eq!(line, "[       42us warn  driver] hello");
+    }
+
+    #[test]
+    fn json_format_parses_and_escapes() {
+        let line = format_line(
+            Format::Json,
+            7,
+            Level::Info,
+            "net::uring",
+            "quote \" slash \\ newline \n ctrl \u{1} done",
+        );
+        let v = Value::parse(&line).expect("log line must be valid JSON");
+        assert_eq!(v.get("level").and_then(Value::as_str), Some("info"));
+        assert_eq!(v.get("target").and_then(Value::as_str), Some("net::uring"));
+        assert_eq!(v.get("ts_us").and_then(Value::as_f64), Some(7.0));
+        assert_eq!(
+            v.get("msg").and_then(Value::as_str),
+            Some("quote \" slash \\ newline \n ctrl \u{1} done")
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Observability: structured logging, stage-decomposed request clocks,
+//! and per-shard flight recorders.
+//!
+//! This module is a *leaf* — it depends only on `std` — so every other
+//! layer (base64 kernels, coordinator, net, server, CLI) can use it
+//! without bending the documented base64 → coordinator → net → server
+//! dependency order.
+//!
+//! Three cooperating pieces:
+//!
+//! * [`log`] — a leveled, structured logger (`B64SIMD_LOG`,
+//!   `B64SIMD_LOG_FORMAT`) behind the crate-level `log_error!` /
+//!   `log_warn!` / `log_info!` / `log_debug!` macros. All production
+//!   stderr goes through it; `eprintln!` survives only inside the
+//!   logger itself and `#[cfg(test)]` code.
+//! * [`clock`] — [`clock::ReqClock`], a compact per-request stage
+//!   clock stamped at read-complete, parse, worker-dequeue,
+//!   kernel-done, sink-serialized and first-flush. The transports
+//!   thread it through `WorkItem`/`HttpWork` → dispatch →
+//!   `ResponseSink` → `WriteQueue`, and its stage durations feed the
+//!   per-stage × per-protocol histograms in `coordinator::metrics`.
+//! * [`recorder`] — [`recorder::FlightRecorder`], a per-shard
+//!   lock-free ring of recent connection/request events with
+//!   sequence-stamped slots, dumped as JSON by `GET /debug/trace?n=`
+//!   and on `SIGUSR1` from `b64simd serve`.
+//!
+//! All timestamps are microseconds since one shared process
+//! [`origin`], so events from different shards order correctly in a
+//! merged dump.
+
+pub mod clock;
+pub mod log;
+pub mod recorder;
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process-wide timestamp origin. First call pins it; every
+/// logger line, recorder event and request clock measures from here,
+/// so cross-shard timestamps are directly comparable.
+pub fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// Microseconds elapsed since the process [`origin`].
+pub fn now_us() -> u64 {
+    origin().elapsed().as_micros() as u64
+}

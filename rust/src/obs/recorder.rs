@@ -1,0 +1,444 @@
+//! Per-shard lock-free flight recorders: the last N connection and
+//! request events, always on, dumpable on demand.
+//!
+//! Each reactor shard (epoll, uring, or the threaded accept loop)
+//! owns a [`FlightRecorder`] — a fixed-size ring of sequence-stamped
+//! slots. Recording is wait-free (one atomic fetch-add plus atomic
+//! stores); readers take a torn-read-proof snapshot at any time
+//! without stopping the shard, in the seqlock style: a writer zeroes
+//! a slot's sequence word, writes the fields, then publishes the new
+//! sequence last, and a reader only keeps a slot whose sequence word
+//! was identical (and valid) on both sides of its field reads.
+//!
+//! All recorders register in a process-wide registry, so
+//! `GET /debug/trace?n=` and the `SIGUSR1` handler can dump one merged
+//! JSON array ordered by the shared [`super::origin`] timestamp.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::log::json_escape_into;
+
+/// Default ring capacity per shard (slots, i.e. retained events).
+pub const DEFAULT_CAPACITY: usize = 512;
+
+/// What happened. The discriminant is stored in the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A connection was accepted (`detail` = open connections).
+    Accept,
+    /// Complete native frames or HTTP requests parsed off one read
+    /// (`detail` = how many).
+    Frame,
+    /// A request was handed to the worker pool (`detail` unused).
+    Dispatch,
+    /// A reply finished flushing to the socket (`detail` = total
+    /// request microseconds).
+    Reply,
+    /// A connection hit a lifecycle deadline (`detail` = pending
+    /// write-queue bytes on a write stall, else 0).
+    Timeout,
+    /// The HTTP gateway answered 4xx/5xx (`detail` = status code).
+    HttpError,
+    /// A worker panicked serving the request.
+    Panic,
+    /// The shard began (or finished) a graceful drain.
+    Drain,
+    /// The fault-injection layer fired (`detail` = site hash).
+    Fault,
+}
+
+impl EventKind {
+    /// Stable lower-case name used in the JSON dump.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Accept => "accept",
+            EventKind::Frame => "frame",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Reply => "reply",
+            EventKind::Timeout => "timeout",
+            EventKind::HttpError => "http_error",
+            EventKind::Panic => "panic",
+            EventKind::Drain => "drain",
+            EventKind::Fault => "fault",
+        }
+    }
+
+    fn to_u64(self) -> u64 {
+        match self {
+            EventKind::Accept => 1,
+            EventKind::Frame => 2,
+            EventKind::Dispatch => 3,
+            EventKind::Reply => 4,
+            EventKind::Timeout => 5,
+            EventKind::HttpError => 6,
+            EventKind::Panic => 7,
+            EventKind::Drain => 8,
+            EventKind::Fault => 9,
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Accept,
+            2 => EventKind::Frame,
+            3 => EventKind::Dispatch,
+            4 => EventKind::Reply,
+            5 => EventKind::Timeout,
+            6 => EventKind::HttpError,
+            7 => EventKind::Panic,
+            8 => EventKind::Drain,
+            9 => EventKind::Fault,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded event out of a snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Monotone per-recorder sequence number (1-based).
+    pub seq: u64,
+    /// Microseconds since the process [`super::origin`].
+    pub ts_us: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Connection token (transport-specific; 0 when not tied to one).
+    pub token: u64,
+    /// Kind-specific payload (bytes, status code, µs — see
+    /// [`EventKind`]).
+    pub detail: u64,
+}
+
+/// One ring slot. `seq == 0` means "never written"; otherwise `seq`
+/// is the 1-based event sequence, stored last with `Release`.
+struct Slot {
+    seq: AtomicU64,
+    ts_us: AtomicU64,
+    kind: AtomicU64,
+    token: AtomicU64,
+    detail: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts_us: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            token: AtomicU64::new(0),
+            detail: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A fixed-size ring of recent events for one shard.
+pub struct FlightRecorder {
+    /// Shard label in dumps, e.g. `epoll-0`, `uring-2`, `threaded`.
+    label: String,
+    slots: Box<[Slot]>,
+    next: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A recorder with [`DEFAULT_CAPACITY`] slots.
+    pub fn new(label: impl Into<String>) -> FlightRecorder {
+        FlightRecorder::with_capacity(label, DEFAULT_CAPACITY)
+    }
+
+    /// A recorder with a specific ring capacity (≥ 1).
+    pub fn with_capacity(label: impl Into<String>, capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            label: label.into(),
+            slots: (0..capacity.max(1)).map(|_| Slot::empty()).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// The shard label this recorder dumps under.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Total events ever recorded (≥ retained).
+    pub fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Wait-free; overwrites the oldest slot once
+    /// the ring is full.
+    ///
+    /// Slot protocol (all `SeqCst`, so readers are linearizable):
+    /// invalidate the sequence word, write the fields, publish the new
+    /// sequence last. A reader whose bracketing sequence loads both
+    /// return the sequence it expected is guaranteed its field reads
+    /// fell entirely before this writer's invalidation in the total
+    /// order — no torn event can be returned.
+    pub fn record(&self, kind: EventKind, token: u64, detail: u64) {
+        let i = self.next.fetch_add(1, Ordering::SeqCst);
+        let slot = &self.slots[(i % self.slots.len() as u64) as usize];
+        slot.seq.store(0, Ordering::SeqCst);
+        slot.ts_us.store(super::now_us(), Ordering::SeqCst);
+        slot.kind.store(kind.to_u64(), Ordering::SeqCst);
+        slot.token.store(token, Ordering::SeqCst);
+        slot.detail.store(detail, Ordering::SeqCst);
+        slot.seq.store(i + 1, Ordering::SeqCst);
+    }
+
+    /// Snapshot up to `max` most-recent events, oldest first. Slots
+    /// caught mid-write (sequence changed around the field reads) are
+    /// dropped rather than returned torn.
+    pub fn snapshot(&self, max: usize) -> Vec<Event> {
+        let cap = self.slots.len() as u64;
+        let head = self.next.load(Ordering::SeqCst); // next unwritten seq (0-based)
+        let want = (max as u64).min(cap).min(head);
+        let mut out = Vec::with_capacity(want as usize);
+        for seq0 in head.saturating_sub(want)..head {
+            let slot = &self.slots[(seq0 % cap) as usize];
+            let s1 = slot.seq.load(Ordering::SeqCst);
+            if s1 != seq0 + 1 {
+                continue; // overwritten by a newer lap, or not yet published
+            }
+            let ev = Event {
+                seq: s1,
+                ts_us: slot.ts_us.load(Ordering::SeqCst),
+                kind: match EventKind::from_u64(slot.kind.load(Ordering::SeqCst)) {
+                    Some(k) => k,
+                    None => continue,
+                },
+                token: slot.token.load(Ordering::SeqCst),
+                detail: slot.detail.load(Ordering::SeqCst),
+            };
+            // Re-check: a writer that lapped us mid-read first zeroed
+            // the sequence word, so matching bracketing loads prove
+            // the field reads were not torn — otherwise discard.
+            if slot.seq.load(Ordering::SeqCst) != s1 {
+                continue;
+            }
+            out.push(ev);
+        }
+        out
+    }
+}
+
+/// The process-wide recorder registry (mirrors
+/// `Metrics::register_shard`). Entries are weak: a shard's recorder
+/// lives exactly as long as its reactor loop, so dumps only ever see
+/// live shards and concurrent servers in one process (tests) coexist
+/// without clearing each other's entries.
+fn registry() -> &'static Mutex<Vec<std::sync::Weak<FlightRecorder>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<std::sync::Weak<FlightRecorder>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a shard's recorder so dumps include it. Dead entries
+/// (shut-down servers) are pruned on the way in, bounding growth.
+pub fn register(recorder: &Arc<FlightRecorder>) {
+    let mut reg = registry().lock().unwrap();
+    reg.retain(|w| w.strong_count() > 0);
+    reg.push(Arc::downgrade(recorder));
+}
+
+std::thread_local! {
+    /// The calling thread's ambient recorder (its reactor shard's), so
+    /// deep layers — fault injection, buffer pools — can record events
+    /// without threading a recorder handle through every signature.
+    static CURRENT: std::cell::RefCell<Option<Arc<FlightRecorder>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the calling thread's ambient
+/// recorder. Each reactor loop installs its shard's recorder at the
+/// top of its run loop; worker threads leave it unset.
+pub fn set_thread_recorder(recorder: Option<Arc<FlightRecorder>>) {
+    CURRENT.with(|c| *c.borrow_mut() = recorder);
+}
+
+/// Record an event on the calling thread's ambient recorder; a no-op
+/// on threads without one (workers, tests).
+pub fn record_here(kind: EventKind, token: u64, detail: u64) {
+    CURRENT.with(|c| {
+        if let Some(r) = c.borrow().as_ref() {
+            r.record(kind, token, detail);
+        }
+    });
+}
+
+/// Drop every registry entry. Rarely needed — entries are weak and
+/// self-prune — but lets a test pin an exactly-empty dump.
+pub fn reset_registry() {
+    registry().lock().unwrap().clear();
+}
+
+/// Render one event as a JSON object under a shard label.
+fn event_json(out: &mut String, shard: &str, ev: &Event) {
+    out.push_str("{\"shard\":\"");
+    json_escape_into(out, shard);
+    out.push_str("\",\"seq\":");
+    out.push_str(&ev.seq.to_string());
+    out.push_str(",\"ts_us\":");
+    out.push_str(&ev.ts_us.to_string());
+    out.push_str(",\"event\":\"");
+    out.push_str(ev.kind.name());
+    out.push_str("\",\"token\":");
+    out.push_str(&ev.token.to_string());
+    out.push_str(",\"detail\":");
+    out.push_str(&ev.detail.to_string());
+    out.push('}');
+}
+
+/// Dump up to `per_shard` recent events from every registered
+/// recorder as one JSON array, merged and ordered by `ts_us` (ties by
+/// sequence).
+pub fn dump_json(per_shard: usize) -> String {
+    let recorders: Vec<Arc<FlightRecorder>> =
+        registry().lock().unwrap().iter().filter_map(std::sync::Weak::upgrade).collect();
+    dump_json_for(&recorders, per_shard)
+}
+
+/// [`dump_json`] over an explicit recorder set (the global dump and
+/// tests share this core).
+pub fn dump_json_for(recorders: &[Arc<FlightRecorder>], per_shard: usize) -> String {
+    let mut events: Vec<(String, Event)> = Vec::new();
+    for r in recorders {
+        for ev in r.snapshot(per_shard) {
+            events.push((r.label().to_string(), ev));
+        }
+    }
+    events.sort_by(|a, b| a.1.ts_us.cmp(&b.1.ts_us).then(a.1.seq.cmp(&b.1.seq)));
+    let mut out = String::with_capacity(events.len() * 96 + 2);
+    out.push('[');
+    for (i, (shard, ev)) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        event_json(&mut out, shard, ev);
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn ring_retains_most_recent_events() {
+        let r = FlightRecorder::with_capacity("t", 4);
+        for i in 0..10u64 {
+            r.record(EventKind::Frame, i, i * 100);
+        }
+        let evs = r.snapshot(16);
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.token).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(evs[0].seq, 7);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(r.recorded(), 10);
+    }
+
+    #[test]
+    fn snapshot_respects_max_and_empty_ring() {
+        let r = FlightRecorder::with_capacity("t", 8);
+        assert!(r.snapshot(4).is_empty());
+        for i in 0..3u64 {
+            r.record(EventKind::Accept, i, 0);
+        }
+        assert_eq!(r.snapshot(2).len(), 2);
+        assert_eq!(r.snapshot(2)[0].token, 1);
+        assert_eq!(r.snapshot(100).len(), 3);
+    }
+
+    #[test]
+    fn kinds_round_trip() {
+        for kind in [
+            EventKind::Accept,
+            EventKind::Frame,
+            EventKind::Dispatch,
+            EventKind::Reply,
+            EventKind::Timeout,
+            EventKind::HttpError,
+            EventKind::Panic,
+            EventKind::Drain,
+            EventKind::Fault,
+        ] {
+            assert_eq!(EventKind::from_u64(kind.to_u64()), Some(kind));
+            assert!(!kind.name().is_empty());
+        }
+        assert_eq!(EventKind::from_u64(0), None);
+        assert_eq!(EventKind::from_u64(99), None);
+    }
+
+    #[test]
+    fn concurrent_writers_and_readers_stay_sane() {
+        let r = Arc::new(FlightRecorder::with_capacity("t", 32));
+        let writer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for i in 0..5000u64 {
+                    r.record(EventKind::Dispatch, i, i);
+                }
+            })
+        };
+        for _ in 0..200 {
+            for ev in r.snapshot(32) {
+                // Torn slots must be dropped, so every surviving event
+                // is internally consistent.
+                assert_eq!(ev.token, ev.detail);
+                assert_eq!(ev.kind, EventKind::Dispatch);
+            }
+        }
+        writer.join().unwrap();
+        let evs = r.snapshot(32);
+        assert_eq!(evs.len(), 32);
+        assert_eq!(evs.last().unwrap().token, 4999);
+    }
+
+    #[test]
+    fn dump_json_is_parseable_and_ordered() {
+        let a = Arc::new(FlightRecorder::new("shard-a"));
+        let b = Arc::new(FlightRecorder::new("shard-b"));
+        a.record(EventKind::Accept, 1, 2);
+        b.record(EventKind::HttpError, 3, 404);
+        a.record(EventKind::Reply, 1, 1234);
+        let dump = dump_json_for(&[a, b], 16);
+        let v = Value::parse(&dump).expect("trace dump must parse as JSON");
+        let arr = v.as_array().expect("dump is a JSON array");
+        assert_eq!(arr.len(), 3);
+        let mut last_ts = 0.0;
+        for ev in arr {
+            let ts = ev.get("ts_us").and_then(Value::as_f64).expect("ts_us");
+            assert!(ts >= last_ts, "events must be time-ordered");
+            last_ts = ts;
+            let shard = ev.get("shard").and_then(Value::as_str).expect("shard");
+            assert!(shard.starts_with("shard-"));
+            ev.get("event").and_then(Value::as_str).expect("event kind");
+            ev.get("seq").and_then(Value::as_f64).expect("seq");
+            ev.get("token").and_then(Value::as_f64).expect("token");
+            ev.get("detail").and_then(Value::as_f64).expect("detail");
+        }
+        assert!(dump.contains("\"event\":\"http_error\""));
+        assert!(dump.contains("\"detail\":404"));
+    }
+
+    #[test]
+    fn thread_recorder_is_per_thread_and_optional() {
+        record_here(EventKind::Fault, 0, 1); // no recorder installed: no-op
+        let r = Arc::new(FlightRecorder::with_capacity("tl", 8));
+        set_thread_recorder(Some(r.clone()));
+        record_here(EventKind::Fault, 7, 42);
+        set_thread_recorder(None);
+        record_here(EventKind::Fault, 8, 43); // cleared: dropped
+        let evs = r.snapshot(8);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert_eq!(evs[0].detail, 42);
+    }
+
+    #[test]
+    fn empty_recorder_set_dumps_empty_array() {
+        assert_eq!(dump_json_for(&[], 8), "[]");
+        let quiet = Arc::new(FlightRecorder::new("quiet"));
+        assert_eq!(dump_json_for(&[quiet], 8), "[]");
+    }
+}

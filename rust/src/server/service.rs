@@ -41,8 +41,9 @@ use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
 use crate::net::frame::{FrameMachine, ReplySink};
 use crate::net::http::{
-    busy_response, panic_response, respond, timeout_response, HttpMachine, HttpWork,
+    busy_response, panic_response, respond_clocked, timeout_response, HttpMachine, HttpWork,
 };
+use crate::obs::clock::{Proto, ReqClock};
 
 /// Which connection subsystem `serve` runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,7 +118,7 @@ impl Transport {
             Ok(v) => match Transport::parse_strict(&v) {
                 Ok(t) => t,
                 Err(e) => {
-                    eprintln!("b64simd: {e}; using '{}'", default.name());
+                    crate::log_warn!("config", "{e}; using '{}'", default.name());
                     default
                 }
             },
@@ -244,7 +245,7 @@ impl ServerConfig {
         if let Ok(v) = std::env::var("B64SIMD_REACTORS") {
             match v.parse::<usize>() {
                 Ok(n) if n >= 1 => return n,
-                _ => eprintln!("b64simd: ignoring invalid B64SIMD_REACTORS value '{v}'"),
+                _ => crate::log_warn!("config", "ignoring invalid B64SIMD_REACTORS value '{v}'"),
             }
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -268,7 +269,7 @@ impl ServerConfig {
                     value: v,
                     accepted: SWITCH_ACCEPTED,
                 };
-                eprintln!("b64simd: {e}; using '{default}'");
+                crate::log_warn!("config", "{e}; using '{default}'");
                 default
             }),
         }
@@ -283,8 +284,9 @@ impl ServerConfig {
             Ok(v) => match v.parse::<SocketAddr>() {
                 Ok(a) => Some(a),
                 Err(_) => {
-                    eprintln!(
-                        "b64simd: ignoring invalid B64SIMD_HTTP value '{v}' \
+                    crate::log_warn!(
+                        "config",
+                        "ignoring invalid B64SIMD_HTTP value '{v}' \
                          (want an address like 127.0.0.1:8040)"
                     );
                     None
@@ -301,7 +303,7 @@ impl ServerConfig {
             Ok(v) => match v.parse::<f64>() {
                 Ok(r) if r.is_finite() && r >= 0.0 => r,
                 _ => {
-                    eprintln!("b64simd: ignoring invalid B64SIMD_RATELIMIT value '{v}'");
+                    crate::log_warn!("config", "ignoring invalid B64SIMD_RATELIMIT value '{v}'");
                     0.0
                 }
             },
@@ -316,7 +318,7 @@ impl ServerConfig {
             Ok(v) => match v.parse::<u64>() {
                 Ok(ms) => Duration::from_millis(ms),
                 Err(_) => {
-                    eprintln!("b64simd: ignoring invalid {key} value '{v}'");
+                    crate::log_warn!("config", "ignoring invalid {key} value '{v}'");
                     default
                 }
             },
@@ -460,8 +462,9 @@ pub fn serve(router: Arc<Router>, config: ServerConfig) -> anyhow::Result<Server
             } else if config.transport_required {
                 Err(crate::net::sys::UringUnsupported.into())
             } else {
-                eprintln!(
-                    "b64simd: {}; falling back to transport 'epoll' \
+                crate::log_warn!(
+                    "service",
+                    "{}; falling back to transport 'epoll' \
                      (set B64SIMD_TRANSPORT_REQUIRED=1 to fail instead)",
                     crate::net::sys::UringUnsupported
                 );
@@ -843,8 +846,13 @@ fn serve_one_http(
     stream: &TcpStream,
     metrics: &Metrics,
 ) -> std::io::Result<bool> {
+    // See `serve_one`: no worker hand-off on this transport, so the
+    // parse and dequeue stamps coincide.
+    let clock = ReqClock::new(Proto::Http);
+    clock.stamp_parse();
+    clock.stamp_dequeue();
     let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
-        respond(work, router, session, Vec::new())
+        respond_clocked(work, router, session, Vec::new(), Some(&clock))
     }));
     let (reply, close) = match outcome {
         Ok((reply, close)) => (reply, close),
@@ -867,6 +875,8 @@ fn serve_one_http(
     }
     Metrics::inc(&metrics.frames_out, 1);
     Metrics::inc(&metrics.net_bytes_out, reply.len() as u64);
+    metrics.record_clock_stages(&clock);
+    metrics.record_clock_flush(&clock, "service");
     Ok(!close)
 }
 
@@ -1005,20 +1015,29 @@ fn serve_one(
     stream: &TcpStream,
     metrics: &Metrics,
 ) -> Result<bool, ProtoError> {
+    // The blocking transport has no worker hand-off: the request
+    // dequeues the instant it parses, so queue time is ~0 by
+    // construction and the clock feeds the same stage histograms the
+    // sharded transports do.
+    let clock = ReqClock::new(Proto::Native);
+    clock.stamp_parse();
+    clock.stamp_dequeue();
     let id = msg.request_id();
-    let (reply, keep_going) =
-        match std::panic::catch_unwind(AssertUnwindSafe(|| dispatch(msg, router, session))) {
-            Ok(reply) => (reply, true),
-            Err(_) => {
-                Metrics::inc(&metrics.worker_panics, 1);
-                let reply = Message::RespError {
-                    id,
-                    message: "internal error: request handler panicked".to_string(),
-                };
-                (reply, false)
-            }
-        };
+    let (reply, keep_going) = match std::panic::catch_unwind(AssertUnwindSafe(|| {
+        dispatch_clocked(msg, router, session, Some(&clock))
+    })) {
+        Ok(reply) => (reply, true),
+        Err(_) => {
+            Metrics::inc(&metrics.worker_panics, 1);
+            let reply = Message::RespError {
+                id,
+                message: "internal error: request handler panicked".to_string(),
+            };
+            (reply, false)
+        }
+    };
     let frame = reply.to_frame_bytes()?;
+    clock.stamp_sink();
     if let Err(e) = (&*stream).write_all(&frame) {
         if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) {
             // The peer stopped reading its replies: the write-stall
@@ -1029,6 +1048,8 @@ fn serve_one(
     }
     Metrics::inc(&metrics.frames_out, 1);
     Metrics::inc(&metrics.net_bytes_out, frame.len() as u64);
+    metrics.record_clock_stages(&clock);
+    metrics.record_clock_flush(&clock, "service");
     Ok(keep_going)
 }
 
@@ -1047,6 +1068,7 @@ fn stream_err(id: u64, e: StreamError) -> Message {
 }
 
 /// Resolve the alphabet and run a one-shot request through the router.
+#[allow(clippy::too_many_arguments)]
 fn one_shot(
     router: &Router,
     id: u64,
@@ -1055,12 +1077,14 @@ fn one_shot(
     mode: Mode,
     ws: Whitespace,
     data: Vec<u8>,
+    clock: Option<&ReqClock>,
 ) -> Message {
     let alphabet = match resolve_alphabet(&alphabet) {
         Ok(a) => a,
         Err(e) => return Message::RespError { id, message: e.to_string() },
     };
-    let resp = router.process(Request { id, kind, payload: data, alphabet, mode, ws });
+    let resp =
+        router.process_clocked(Request { id, kind, payload: data, alphabet, mode, ws }, clock);
     outcome_to_message(id, resp.outcome)
 }
 
@@ -1086,20 +1110,29 @@ fn maybe_injected_panic(_msg: &Message) {}
 /// Execute one request message against the router / session. Shared by
 /// both transports: the blocking path calls it inline on the connection
 /// thread, the epoll path on a net worker (with the session behind the
-/// connection's mutex).
-pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState) -> Message {
+/// connection's mutex). The optional request-lifecycle clock is stamped
+/// by the router's codec branches; streaming session work stamps its
+/// own kernel here, and records its wall clock into the overall latency
+/// histogram — stream chunks never pass through the router. `None`
+/// skips stage attribution without branching the request path.
+pub(crate) fn dispatch_clocked(
+    msg: Message,
+    router: &Router,
+    session: &mut SessionState,
+    clock: Option<&ReqClock>,
+) -> Message {
     maybe_injected_panic(&msg);
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
-            one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data)
+            one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data, clock)
         }
         Message::Decode { id, alphabet, mode, ws, data } => {
             // The one-shot whitespace knob (wire tag 0x04) rides through
             // to the router, which strips and rebases error offsets.
-            one_shot(router, id, RequestKind::Decode, alphabet, mode, ws, data)
+            one_shot(router, id, RequestKind::Decode, alphabet, mode, ws, data, clock)
         }
         Message::Validate { id, alphabet, mode, data } => {
-            one_shot(router, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data)
+            one_shot(router, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data, clock)
         }
         Message::StreamBegin { id, decode, alphabet, mode, ws, wrap } => {
             let alphabet = match resolve_alphabet(&alphabet) {
@@ -1124,14 +1157,34 @@ pub(crate) fn dispatch(msg: Message, router: &Router, session: &mut SessionState
                 Err(e) => stream_err(id, e),
             }
         }
-        Message::StreamChunk { id, data } => match session.chunk(id, &data) {
-            Ok(out) => Message::RespData { id, data: out },
-            Err(e) => stream_err(id, e),
-        },
-        Message::StreamEnd { id } => match session.finish(id) {
-            Ok(out) => Message::RespData { id, data: out },
-            Err(e) => stream_err(id, e),
-        },
+        // Stream payload work never passes through the router, so it
+        // records its wall clock into the overall latency histogram
+        // here (the sharded transports' stage histograms get their
+        // stamps from the same clock).
+        Message::StreamChunk { id, data } => {
+            let start = Instant::now();
+            let reply = match session.chunk(id, &data) {
+                Ok(out) => Message::RespData { id, data: out },
+                Err(e) => stream_err(id, e),
+            };
+            if let Some(c) = clock {
+                c.stamp_kernel();
+            }
+            router.metrics().latency.record(start.elapsed());
+            reply
+        }
+        Message::StreamEnd { id } => {
+            let start = Instant::now();
+            let reply = match session.finish(id) {
+                Ok(out) => Message::RespData { id, data: out },
+                Err(e) => stream_err(id, e),
+            };
+            if let Some(c) = clock {
+                c.stamp_kernel();
+            }
+            router.metrics().latency.record(start.elapsed());
+            reply
+        }
         Message::Stats => {
             // Mirror the faults layer's injection counter into the
             // metrics snapshot so a chaos run can assert its plan
@@ -1164,20 +1217,24 @@ fn make_request(
     }
 }
 
-/// [`dispatch`] on the zero-copy reply path: the complete reply frame
-/// is written into `sink` instead of materializing a [`Message`]. The
-/// one-shot hot paths go through [`Router::process_into`], which lets
-/// the codec kernels fill the payload in place; everything else (stream
-/// control, stats, errors) serializes its small reply directly into the
-/// sink. The produced bytes are identical to framing [`dispatch`]'s
-/// reply — pinned by the router's parity tests and
+/// [`dispatch_clocked`] on the zero-copy reply path: the complete reply
+/// frame is written into `sink` instead of materializing a [`Message`].
+/// The one-shot hot paths go through [`Router::process_into`], which
+/// lets the codec kernels fill the payload in place; everything else
+/// (stream control, stats, errors) serializes its small reply directly
+/// into the sink. The produced bytes are identical to framing the
+/// [`Message`] reply — pinned by the router's parity tests and
 /// `rust/tests/transport.rs`. `Err` marks an unframeable (oversized)
-/// reply, fatal for the connection on both paths.
-pub(crate) fn dispatch_into(
+/// reply, fatal for the connection on both paths. The clock works as in
+/// [`dispatch_clocked`]: the router's sink branches stamp kernel and
+/// sink; stream payload replies stamp their own boundaries here, since
+/// they bypass the router.
+pub(crate) fn dispatch_into_clocked(
     msg: Message,
     router: &Router,
     session: &mut SessionState,
     sink: &mut ReplySink,
+    clock: Option<&ReqClock>,
 ) -> Result<(), ProtoError> {
     // The router's sink-path error is the coordinator-owned
     // `FrameTooLarge`; at this layer it becomes the protocol error the
@@ -1189,36 +1246,66 @@ pub(crate) fn dispatch_into(
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
             match make_request(id, RequestKind::Encode, alphabet, mode, Whitespace::None, data) {
-                Ok(req) => framed(router.process_into(req, sink)),
+                Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Decode { id, alphabet, mode, ws, data } => {
             match make_request(id, RequestKind::Decode, alphabet, mode, ws, data) {
-                Ok(req) => framed(router.process_into(req, sink)),
+                Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Validate { id, alphabet, mode, data } => {
             match make_request(id, RequestKind::Validate, alphabet, mode, Whitespace::None, data) {
-                Ok(req) => framed(router.process_into(req, sink)),
+                Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         // Stream payload replies: the session already materialized the
         // output bytes, so frame them with one copy into the sink
         // instead of the serialize-then-copy `push_message` pair.
-        Message::StreamChunk { id, data } => match session.chunk(id, &data) {
-            Ok(out) => sink.push_data(id, &out),
-            Err(e) => sink.push_message(&stream_err(id, e)),
-        },
-        Message::StreamEnd { id } => match session.finish(id) {
-            Ok(out) => sink.push_data(id, &out),
-            Err(e) => sink.push_message(&stream_err(id, e)),
-        },
+        Message::StreamChunk { id, data } => {
+            let start = Instant::now();
+            let r = match session.chunk(id, &data) {
+                Ok(out) => {
+                    if let Some(c) = clock {
+                        c.stamp_kernel();
+                    }
+                    sink.push_data(id, &out)
+                }
+                Err(e) => sink.push_message(&stream_err(id, e)),
+            };
+            if let Some(c) = clock {
+                c.stamp_sink();
+            }
+            router.metrics().latency.record(start.elapsed());
+            r
+        }
+        Message::StreamEnd { id } => {
+            let start = Instant::now();
+            let r = match session.finish(id) {
+                Ok(out) => {
+                    if let Some(c) = clock {
+                        c.stamp_kernel();
+                    }
+                    sink.push_data(id, &out)
+                }
+                Err(e) => sink.push_message(&stream_err(id, e)),
+            };
+            if let Some(c) = clock {
+                c.stamp_sink();
+            }
+            router.metrics().latency.record(start.elapsed());
+            r
+        }
         other => {
-            let reply = dispatch(other, router, session);
-            sink.push_message(&reply)
+            let reply = dispatch_clocked(other, router, session, clock);
+            let r = sink.push_message(&reply);
+            if let Some(c) = clock {
+                c.stamp_sink();
+            }
+            r
         }
     }
 }
@@ -1283,7 +1370,7 @@ mod tests {
         use crate::coordinator::RouterConfig;
         let router = Router::new(rust_factory(), RouterConfig::default());
         let mut session = SessionState::new(4);
-        let reply = dispatch(
+        let reply = dispatch_clocked(
             Message::StreamBegin {
                 id: 9,
                 decode: false,
@@ -1294,6 +1381,7 @@ mod tests {
             },
             &router,
             &mut session,
+            None,
         );
         match reply {
             Message::RespError { id, message } => {

@@ -121,8 +121,8 @@ pub fn emit_json(name: &str, json: &str) {
     let dir = if v == "1" { std::path::PathBuf::from(".") } else { std::path::PathBuf::from(&v) };
     let path = dir.join(format!("BENCH_{name}.json"));
     match std::fs::write(&path, json) {
-        Ok(()) => eprintln!("bench: wrote {}", path.display()),
-        Err(e) => eprintln!("bench: could not write {}: {e}", path.display()),
+        Ok(()) => crate::log_info!("bench", "wrote {}", path.display()),
+        Err(e) => crate::log_warn!("bench", "could not write {}: {e}", path.display()),
     }
 }
 

@@ -565,6 +565,57 @@ fn metrics_scrape_reports_per_shard_breakdown() {
     handle.shutdown();
 }
 
+/// `GET /debug/trace` dumps the per-shard flight recorders as JSON, and
+/// the dump contains events from this server's shards for traffic
+/// served just before the scrape. Other live servers in the test
+/// process may contribute events too (the registry is process-wide),
+/// so the assertions are scoped to this transport's shard labels.
+fn debug_trace_over_gateway(transport: Transport, shard_prefix: &str) {
+    let (handle, _router) = start_http(transport, 2, true, |_| {});
+    let mut c = Http::connect(handle.http_addr.unwrap());
+    let r = c.roundtrip("POST", "/encode", &[], b"trace me");
+    assert_eq!(r.status, 200);
+    let r = c.roundtrip("GET", "/debug/trace?n=128", &[], b"");
+    assert_eq!(r.status, 200);
+    let text = String::from_utf8(r.body).unwrap();
+    let v = b64simd::util::json::Value::parse(&text).expect("trace dump parses as JSON");
+    let events = v.as_array().expect("dump is a JSON array");
+    let mut saw_accept = false;
+    let mut saw_frame = false;
+    let mut saw_dispatch = false;
+    for ev in events {
+        let shard = ev.get("shard").and_then(|s| s.as_str()).expect("shard label");
+        let kind = ev.get("event").and_then(|s| s.as_str()).expect("event kind");
+        ev.get("seq").and_then(|s| s.as_f64()).expect("seq");
+        ev.get("ts_us").and_then(|s| s.as_f64()).expect("ts_us");
+        ev.get("token").and_then(|s| s.as_f64()).expect("token");
+        ev.get("detail").and_then(|s| s.as_f64()).expect("detail");
+        if shard.starts_with(shard_prefix) {
+            saw_accept |= kind == "accept";
+            saw_frame |= kind == "frame";
+            saw_dispatch |= kind == "dispatch";
+        }
+    }
+    assert!(
+        saw_accept && saw_frame && saw_dispatch,
+        "expected accept/frame/dispatch on {shard_prefix}* shards in:\n{text}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn debug_trace_epoll() {
+    debug_trace_over_gateway(Transport::Epoll, "epoll-");
+}
+
+#[test]
+fn debug_trace_uring() {
+    if !uring_available("uring debug trace") {
+        return;
+    }
+    debug_trace_over_gateway(Transport::Uring, "uring-");
+}
+
 #[test]
 fn over_cap_connect_gets_busy_503() {
     let (handle, router) = start_http(Transport::Epoll, 1, true, |c| c.max_connections = 1);
