@@ -17,7 +17,7 @@ use b64simd::base64::{
     avx2::Avx2Codec, avx512::Avx512Codec, block::BlockCodec, decoded_len_upper, encoded_len,
     swar::SwarCodec, Alphabet, Codec, Engine, Tier,
 };
-use b64simd::util::bench::{bench, opts_from_env, BenchResult};
+use b64simd::util::bench::{bench, emit_json, opts_from_env, BenchResult};
 use b64simd::workload::random_bytes;
 
 fn dyn_codec_for(tier: Tier, alphabet: &Alphabet) -> Box<dyn Codec> {
@@ -43,6 +43,9 @@ fn main() {
     );
 
     let mut headline: Option<(f64, f64)> = None;
+    // Machine-readable rows (gbps + latency percentiles per series) for
+    // the BENCH_engine_dispatch.json artifact.
+    let mut json_rows: Vec<String> = Vec::new();
 
     for tier in Tier::supported() {
         let engine = Engine::with_tier(alphabet.clone(), tier);
@@ -52,8 +55,14 @@ fn main() {
         let n = engine.encode_slice(&data, &mut enc_buf);
         let encoded = enc_buf[..n].to_vec();
 
-        let row = |name: &str, enc: BenchResult, dec: BenchResult| {
+        let mut row = |name: &str, enc: BenchResult, dec: BenchResult| {
             println!("{:<24}{:>12.3}  {:>12.3}", format!("{}/{name}", tier.name()), enc.gbps, dec.gbps);
+            json_rows.push(format!(
+                "{{\"tier\":\"{}\",\"series\":\"{name}\",\"enc\":{},\"dec\":{}}}",
+                tier.name(),
+                enc.json_obj(),
+                dec.json_obj()
+            ));
             (enc.gbps, dec.gbps)
         };
 
@@ -126,5 +135,20 @@ fn main() {
         serial.gbps,
         par.gbps,
         par.gbps / serial.gbps
+    );
+
+    json_rows.push(format!(
+        "{{\"tier\":\"{}\",\"series\":\"enc-32MiB\",\"serial\":{},\"par\":{}}}",
+        engine.tier().name(),
+        serial.json_obj(),
+        par.json_obj()
+    ));
+    emit_json(
+        "engine_dispatch",
+        &format!(
+            "{{\"bench\":\"engine_dispatch\",\"b64_bytes\":{},\"rows\":[\n{}\n]}}\n",
+            b64_len,
+            json_rows.join(",\n")
+        ),
     );
 }

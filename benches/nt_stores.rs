@@ -134,8 +134,15 @@ fn main() {
             dec_nt.gbps / dec_t.gbps
         );
 
+        // Flat gbps keys stay for older artifact consumers; the full
+        // per-series rows (with p50/p90/p99 latency) ride alongside.
+        let series = [&enc_t, &enc_nt, &dec_t, &dec_nt, &memcpy, &ntcpy]
+            .iter()
+            .map(|r| r.json_obj())
+            .collect::<Vec<_>>()
+            .join(",");
         json_rows.push(format!(
-            "{{\"size\":\"{}\",\"raw_bytes\":{},\"b64_bytes\":{},\"enc_t_gbps\":{:.4},\"enc_nt_gbps\":{:.4},\"dec_t_gbps\":{:.4},\"dec_nt_gbps\":{:.4},\"memcpy_gbps\":{:.4},\"nt_memcpy_gbps\":{:.4}}}",
+            "{{\"size\":\"{}\",\"raw_bytes\":{},\"b64_bytes\":{},\"enc_t_gbps\":{:.4},\"enc_nt_gbps\":{:.4},\"dec_t_gbps\":{:.4},\"dec_nt_gbps\":{:.4},\"memcpy_gbps\":{:.4},\"nt_memcpy_gbps\":{:.4},\"series\":[{}]}}",
             label,
             raw_len,
             b64_len,
@@ -144,7 +151,8 @@ fn main() {
             dec_t.gbps,
             dec_nt.gbps,
             memcpy.gbps,
-            ntcpy.gbps
+            ntcpy.gbps,
+            series
         ));
 
         if label == "4MiB" {

@@ -1,0 +1,275 @@
+//! fuzz_codecs: deterministic structure-aware differential fuzzer for
+//! every codec in the registry.
+//!
+//! Each iteration draws a random buffer from a seeded xoshiro corpus
+//! and, for every codec (the three base64 alphabets, hex, and both
+//! base32 variants):
+//!
+//! 1. encodes it on every supported tier and compares byte-for-byte
+//!    against the scalar reference;
+//! 2. round-trips the decode on every tier;
+//! 3. pushes random chunk splits through the streaming encoder/decoder
+//!    and compares against the one-shot output (carry machinery);
+//! 4. mutates the valid encoding — truncation, out-of-alphabet byte
+//!    swap, padding corruption — and asserts every tier returns the
+//!    *same* `Result` as the scalar path, including the exact error
+//!    variant and offset.
+//!
+//! The run is fully deterministic: `B64SIMD_FUZZ_SEED` picks the
+//! corpus (default below), `B64SIMD_FUZZ_ITERS` bounds the budget
+//! (default 256; CI runs a smoke budget per pinned tier). Any
+//! divergence panics with the tier, codec and input length, so a
+//! failing seed reproduces with a plain re-run.
+//!
+//! ```sh
+//! B64SIMD_FUZZ_ITERS=64 cargo run --release --example fuzz_codecs
+//! ```
+
+use std::env;
+
+use b64simd::base64::streaming::{StreamingDecoder, StreamingEncoder};
+use b64simd::base64::{Alphabet, Codec, Engine, Mode, Tier, Whitespace};
+use b64simd::codec::{
+    Base32Codec, Base32Variant, CodecStreamDecoder, CodecStreamEncoder, HexCodec,
+};
+use b64simd::workload::Rng64;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Structure-aware mutants of one valid encoding: a strict-prefix
+/// truncation, an out-of-alphabet byte swap, and (for padded codecs)
+/// two flavors of padding corruption. Empty encodings have no
+/// structure to break, so they yield no mutants.
+fn mutations(rng: &mut Rng64, golden: &[u8], alphabet: &[u8], pad: Option<u8>) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    if golden.is_empty() {
+        return out;
+    }
+    // Truncation: any strictly shorter prefix. Prefixes that land on a
+    // group boundary stay valid — the parity assertion covers Ok too.
+    out.push(golden[..rng.below(golden.len() as u64) as usize].to_vec());
+
+    // Alphabet swap: overwrite one position with a byte no table in
+    // this codec maps (covers both the foreign-alphabet and garbage
+    // cases; the pool avoids every builtin table in both cases).
+    const POOL: [u8; 8] = [b'!', b'#', b'~', b'\t', 0x00, 0x7F, 0x80, 0xFF];
+    let bad = POOL
+        .iter()
+        .copied()
+        .find(|b| !alphabet.contains(b) && Some(*b) != pad)
+        .expect("pool always holds an out-of-alphabet byte");
+    let mut swapped = golden.to_vec();
+    swapped[rng.below(golden.len() as u64) as usize] = bad;
+    out.push(swapped);
+
+    if let Some(pad) = pad {
+        // Pad corruption: a pad byte dropped somewhere inside the body…
+        let mut padded = golden.to_vec();
+        padded[rng.below(golden.len() as u64) as usize] = pad;
+        out.push(padded);
+        // …and, when the tail is padded, a data byte where a pad belongs.
+        if golden.last() == Some(&pad) {
+            let mut flipped = golden.to_vec();
+            flipped[golden.len() - 1] = alphabet[rng.below(alphabet.len() as u64) as usize];
+            out.push(flipped);
+        }
+    }
+    out
+}
+
+/// Split `data` into random-size chunks (1..=97 bytes), exercising
+/// every carry length in the streaming codecs.
+fn random_chunks<'a>(rng: &mut Rng64, mut rest: &'a [u8]) -> Vec<&'a [u8]> {
+    let mut out = Vec::new();
+    while !rest.is_empty() {
+        let take = 1 + rng.below(rest.len().min(97) as u64) as usize;
+        let (head, tail) = rest.split_at(take);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+fn fuzz_base64(rng: &mut Rng64, data: &[u8]) -> u64 {
+    let mut checks = 0;
+    for alphabet in [Alphabet::standard(), Alphabet::url(), Alphabet::imap()] {
+        let scalar = Engine::with_tier(alphabet.clone(), Tier::Scalar);
+        let golden = scalar.encode(data);
+        for tier in Tier::supported() {
+            let engine = Engine::with_tier(alphabet.clone(), tier);
+            assert_eq!(
+                engine.encode(data),
+                golden,
+                "base64/{} encode diverges, tier={tier:?} len={}",
+                alphabet.name(),
+                data.len()
+            );
+            assert_eq!(
+                engine.decode(&golden).as_deref(),
+                Ok(data),
+                "base64/{} round-trip fails, tier={tier:?} len={}",
+                alphabet.name(),
+                data.len()
+            );
+            checks += 2;
+        }
+
+        let mut streamed = Vec::new();
+        let mut enc = StreamingEncoder::from_engine(Engine::new(alphabet.clone()));
+        for chunk in random_chunks(rng, data) {
+            enc.update(chunk, &mut streamed);
+        }
+        enc.finish(&mut streamed);
+        assert_eq!(streamed, golden, "base64/{} streaming encode", alphabet.name());
+        let mut back = Vec::new();
+        let mut dec = StreamingDecoder::from_engine(Engine::new(alphabet.clone()), Whitespace::None);
+        for chunk in random_chunks(rng, &golden) {
+            dec.update(chunk, &mut back).expect("valid input");
+        }
+        dec.finish(&mut back).expect("valid input");
+        assert_eq!(back, data, "base64/{} streaming decode", alphabet.name());
+        checks += 2;
+
+        for mutant in mutations(rng, &golden, alphabet.chars(), Some(alphabet.pad())) {
+            let want = scalar.decode(&mutant);
+            for tier in Tier::supported() {
+                let got = Engine::with_tier(alphabet.clone(), tier).decode(&mutant);
+                assert_eq!(
+                    got,
+                    want,
+                    "base64/{} mutant parity, tier={tier:?} input={:?}",
+                    alphabet.name(),
+                    String::from_utf8_lossy(&mutant)
+                );
+                checks += 1;
+            }
+        }
+    }
+    checks
+}
+
+fn fuzz_hex(rng: &mut Rng64, data: &[u8]) -> u64 {
+    let mut checks = 0;
+    let scalar = HexCodec::with_tier(Tier::Scalar);
+    let golden = scalar.encode(data);
+    let lower = golden.to_ascii_lowercase();
+    for tier in Tier::supported() {
+        let codec = HexCodec::with_tier(tier);
+        assert_eq!(codec.encode(data), golden, "hex encode diverges, tier={tier:?}");
+        assert_eq!(codec.decode(&golden).as_deref(), Ok(data), "hex round-trip, tier={tier:?}");
+        // §8 case-insensitive decode must hold on every tier too.
+        assert_eq!(codec.decode(&lower).as_deref(), Ok(data), "hex lowercase, tier={tier:?}");
+        checks += 3;
+    }
+
+    let mut streamed = Vec::new();
+    let mut enc = CodecStreamEncoder::hex();
+    for chunk in random_chunks(rng, data) {
+        enc.update(chunk, &mut streamed);
+    }
+    enc.finish(&mut streamed);
+    assert_eq!(streamed, golden, "hex streaming encode");
+    let mut back = Vec::new();
+    let mut dec = CodecStreamDecoder::hex(Whitespace::None);
+    for chunk in random_chunks(rng, &golden) {
+        dec.update(chunk, &mut back).expect("valid input");
+    }
+    dec.finish(&mut back).expect("valid input");
+    assert_eq!(back, data, "hex streaming decode");
+    checks += 2;
+
+    // Hex decodes both cases, so the swap pool sees the union table.
+    for mutant in mutations(rng, &golden, b"0123456789ABCDEFabcdef", None) {
+        let want = scalar.decode(&mutant);
+        for tier in Tier::supported() {
+            let got = HexCodec::with_tier(tier).decode(&mutant);
+            assert_eq!(
+                got,
+                want,
+                "hex mutant parity, tier={tier:?} input={:?}",
+                String::from_utf8_lossy(&mutant)
+            );
+            checks += 1;
+        }
+    }
+    checks
+}
+
+fn fuzz_base32(rng: &mut Rng64, data: &[u8]) -> u64 {
+    let mut checks = 0;
+    for variant in [Base32Variant::Std, Base32Variant::Hex] {
+        let scalar = Base32Codec::with_tier(variant, Tier::Scalar);
+        let golden = scalar.encode(data);
+        for tier in Tier::supported() {
+            let codec = Base32Codec::with_tier(variant, tier);
+            assert_eq!(codec.encode(data), golden, "{variant:?} encode diverges, tier={tier:?}");
+            assert_eq!(
+                codec.decode(&golden, Mode::Strict).as_deref(),
+                Ok(data),
+                "{variant:?} round-trip, tier={tier:?}"
+            );
+            checks += 2;
+        }
+
+        let mut streamed = Vec::new();
+        let mut enc = CodecStreamEncoder::base32(variant);
+        for chunk in random_chunks(rng, data) {
+            enc.update(chunk, &mut streamed);
+        }
+        enc.finish(&mut streamed);
+        assert_eq!(streamed, golden, "{variant:?} streaming encode");
+        let mut back = Vec::new();
+        let mut dec = CodecStreamDecoder::base32(variant, Mode::Strict, Whitespace::None);
+        for chunk in random_chunks(rng, &golden) {
+            dec.update(chunk, &mut back).expect("valid input");
+        }
+        dec.finish(&mut back).expect("valid input");
+        assert_eq!(back, data, "{variant:?} streaming decode");
+        checks += 2;
+
+        for mutant in mutations(rng, &golden, variant.chars(), Some(b'=')) {
+            let want = scalar.decode(&mutant, Mode::Strict);
+            for tier in Tier::supported() {
+                let got = Base32Codec::with_tier(variant, tier).decode(&mutant, Mode::Strict);
+                assert_eq!(
+                    got,
+                    want,
+                    "{variant:?} mutant parity, tier={tier:?} input={:?}",
+                    String::from_utf8_lossy(&mutant)
+                );
+                checks += 1;
+            }
+        }
+    }
+    checks
+}
+
+fn main() {
+    let iters = env_u64("B64SIMD_FUZZ_ITERS", 256);
+    let seed = env_u64("B64SIMD_FUZZ_SEED", 0x4648_B64D);
+    println!(
+        "fuzz_codecs: iters={iters} seed={seed:#x} tiers={:?} (B64SIMD_FUZZ_ITERS / \
+         B64SIMD_FUZZ_SEED to vary)",
+        Tier::supported()
+    );
+    let mut rng = Rng64::new(seed);
+    let mut checks: u64 = 0;
+    for i in 0..iters {
+        // Mixed length profile: mostly small buffers (tail and carry
+        // structure lives there), a quarter at kernel-loop sizes.
+        let len = match i % 4 {
+            0 => rng.below(48) as usize,
+            1 => rng.below(512) as usize,
+            2 => rng.below(4096) as usize,
+            _ => rng.below(65536) as usize,
+        };
+        let mut data = vec![0u8; len];
+        rng.fill(&mut data);
+        checks += fuzz_base64(&mut rng, &data);
+        checks += fuzz_hex(&mut rng, &data);
+        checks += fuzz_base32(&mut rng, &data);
+    }
+    println!("fuzz_codecs: OK — {checks} differential checks, 0 divergences");
+}

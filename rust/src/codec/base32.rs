@@ -1,0 +1,784 @@
+//! Base32 (RFC 4648 §6 standard, §7 extended-hex) with tiered kernels.
+//!
+//! The 40-bit group geometry (5 raw bytes ↔ 8 chars) slots into the
+//! same shape as the base64 engine: a scalar reference, a
+//! word-at-a-time SWAR path with deferred validation, and an AVX-512
+//! VBMI pipeline built from the `vpermb`/`vpmultishiftqb`/`vpmaddubsw`
+//! idioms in `base64::avx512` (40 raw bytes ↔ 64 chars per vector).
+//! The AVX2 tier aliases the SWAR path — without `vpermb` the 5-byte
+//! group shuffles don't beat the word kernels. Decoding accepts the
+//! uppercase RFC alphabets only (matching GNU `base32 -d`); strict mode
+//! enforces canonical `=` padding and zero trailing bits exactly like
+//! the base64 engine's tail rules.
+
+use crate::base64::engine::detected_tier;
+use crate::base64::stores::{copy_for, fence, CopyFn};
+use crate::base64::validate::rebase_ws_error;
+use crate::base64::{DecodeError, Mode, StorePolicy, Tier, Whitespace};
+
+/// Which RFC 4648 base32 alphabet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Base32Variant {
+    /// §6 standard alphabet `A–Z2–7`.
+    Std,
+    /// §7 "extended hex" alphabet `0–9A–V` (preserves raw sort order).
+    Hex,
+}
+
+impl Base32Variant {
+    /// The 32-char alphabet.
+    pub fn chars(self) -> &'static [u8; 32] {
+        match self {
+            Base32Variant::Std => b"ABCDEFGHIJKLMNOPQRSTUVWXYZ234567",
+            Base32Variant::Hex => b"0123456789ABCDEFGHIJKLMNOPQRSTUV",
+        }
+    }
+
+    /// Wire/CLI name (`base32` / `base32hex`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Base32Variant::Std => "base32",
+            Base32Variant::Hex => "base32hex",
+        }
+    }
+
+    fn tables(self) -> &'static Tables {
+        match self {
+            Base32Variant::Std => &STD_TABLES,
+            Base32Variant::Hex => &HEX_TABLES,
+        }
+    }
+}
+
+/// Exact encoded length (including padding) for `n` raw bytes.
+pub const fn encoded_len(n: usize) -> usize {
+    n.div_ceil(5) * 8
+}
+
+/// Upper bound on decoded bytes for `n` base32 chars.
+pub const fn decoded_len_upper(n: usize) -> usize {
+    n.div_ceil(8) * 5
+}
+
+/// Per-variant lookup tables, const-built from the 32-char alphabet.
+struct Tables {
+    /// value → char.
+    enc: [u8; 32],
+    /// char → value, `0xFF` invalid (uppercase only).
+    dec: [u8; 256],
+    /// Low half of `dec` with the AVX-512 `0x80` invalid sentinel, laid
+    /// out for a two-register `vpermi2b` lookup.
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    dec128: [u8; 128],
+}
+
+const fn build_tables(chars: &[u8; 32]) -> Tables {
+    let mut dec = [0xFFu8; 256];
+    let mut dec128 = [0x80u8; 128];
+    let mut i = 0;
+    while i < 32 {
+        dec[chars[i] as usize] = i as u8;
+        dec128[chars[i] as usize] = i as u8;
+        i += 1;
+    }
+    Tables { enc: *chars, dec, dec128 }
+}
+
+static STD_TABLES: Tables = build_tables(Base32Variant::Std.chars_const());
+static HEX_TABLES: Tables = build_tables(Base32Variant::Hex.chars_const());
+
+impl Base32Variant {
+    /// `chars()` usable in const context (match in const position).
+    const fn chars_const(self) -> &'static [u8; 32] {
+        match self {
+            Base32Variant::Std => b"ABCDEFGHIJKLMNOPQRSTUVWXYZ234567",
+            Base32Variant::Hex => b"0123456789ABCDEFGHIJKLMNOPQRSTUV",
+        }
+    }
+}
+
+/// Bulk encoder over a 5-multiple of raw bytes (no padding involved).
+type EncodeFn = fn(&[u8], &mut [u8], &Tables);
+/// Bulk decoder over whole pad-free 8-char groups; returns `false` on
+/// any invalid byte (deferred — the caller re-scans for the offset).
+type DecodeFn = fn(&[u8], &mut [u8], &Tables) -> bool;
+
+/// Tier-dispatched base32 codec with the engine's policy-aware API.
+pub struct Base32Codec {
+    variant: Base32Variant,
+    tier: Tier,
+    tables: &'static Tables,
+    encode_bulk: EncodeFn,
+    decode_bulk: DecodeFn,
+    nt_copy: CopyFn,
+}
+
+impl Base32Codec {
+    /// Codec on the detected tier (`B64SIMD_TIER` honored).
+    pub fn new(variant: Base32Variant) -> Self {
+        Self::with_tier(variant, detected_tier())
+    }
+
+    /// Codec pinned to `tier`, clamped to what the host supports; the
+    /// AVX2 tier clamps to SWAR (see the module docs).
+    pub fn with_tier(variant: Base32Variant, tier: Tier) -> Self {
+        let tier = if tier.available() { tier } else { Tier::Swar };
+        let (encode_bulk, decode_bulk): (EncodeFn, DecodeFn) = match tier {
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx512 => (encode_avx512, decode_avx512),
+            Tier::Scalar => (encode_scalar, decode_scalar),
+            _ => (encode_swar, decode_swar),
+        };
+        Self { variant, tier, tables: variant.tables(), encode_bulk, decode_bulk, nt_copy: copy_for(tier) }
+    }
+
+    /// The variant this codec encodes/decodes.
+    pub fn variant(&self) -> Base32Variant {
+        self.variant
+    }
+
+    /// The tier this codec dispatches to.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Encode `input` into `out[..encoded_len(input.len())]` (padded);
+    /// returns the count.
+    pub fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        self.encode_slice_policy(input, out, StorePolicy::Temporal)
+    }
+
+    /// [`Self::encode_slice`] with an explicit store policy.
+    pub fn encode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        policy: StorePolicy,
+    ) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let bulk = input.len() / 5 * 5;
+        let bulk_out = bulk / 5 * 8;
+        if !policy.use_nontemporal(total) {
+            (self.encode_bulk)(&input[..bulk], &mut out[..bulk_out], self.tables);
+        } else {
+            // Stage in L1, stream out with non-temporal stores.
+            const STAGE_RAW: usize = 2560; // 512 groups → 4 KiB of chars
+            let mut stage = [0u8; STAGE_RAW / 5 * 8];
+            let mut done = 0;
+            while done < bulk {
+                let n = (bulk - done).min(STAGE_RAW);
+                let m = n / 5 * 8;
+                (self.encode_bulk)(&input[done..done + n], &mut stage[..m], self.tables);
+                (self.nt_copy)(&mut out[done / 5 * 8..done / 5 * 8 + m], &stage[..m]);
+                done += n;
+            }
+            fence();
+        }
+        if bulk < input.len() {
+            encode_group(&input[bulk..], &mut out[bulk_out..bulk_out + 8], &self.tables.enc);
+        }
+        total
+    }
+
+    /// Decode `input` into `out`; returns the byte count. Strict mode
+    /// requires canonical padding to a multiple of 8 chars and zero
+    /// trailing bits in the final data char; forgiving mode accepts
+    /// unpadded input.
+    pub fn decode_slice(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        mode: Mode,
+    ) -> Result<usize, DecodeError> {
+        self.decode_slice_policy(input, out, mode, StorePolicy::Temporal)
+    }
+
+    /// [`Self::decode_slice`] with an explicit store policy.
+    pub fn decode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        mode: Mode,
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
+        let (body, tail) = split_tail32(input, mode)?;
+        let body_out = body.len() / 8 * 5;
+        assert!(out.len() >= decoded_len_upper(input.len()), "output buffer too small");
+        let clean = if !policy.use_nontemporal(body_out) {
+            (self.decode_bulk)(body, &mut out[..body_out], self.tables)
+        } else {
+            const STAGE_CHARS: usize = 6400; // 800 groups → 4000 output bytes
+            let mut stage = [0u8; STAGE_CHARS / 8 * 5];
+            let mut clean = true;
+            let mut done = 0;
+            while clean && done < body.len() {
+                let n = (body.len() - done).min(STAGE_CHARS);
+                let m = n / 8 * 5;
+                clean = (self.decode_bulk)(&body[done..done + n], &mut stage[..m], self.tables);
+                (self.nt_copy)(&mut out[done / 8 * 5..done / 8 * 5 + m], &stage[..m]);
+                done += n;
+            }
+            // The sfence contract holds on the error path too.
+            fence();
+            clean
+        };
+        if !clean {
+            return Err(first_invalid(body, self.tables));
+        }
+        let n = decode_tail(tail, mode, body.len(), self.tables, &mut out[body_out..])?;
+        Ok(body_out + n)
+    }
+
+    /// Decode with a whitespace policy: skipped bytes are stripped once
+    /// (SWAR word scan) and error offsets rebased onto the original
+    /// payload, matching the base64 engine's `decode_slice_ws` contract.
+    pub fn decode_slice_ws(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        ws: Whitespace,
+        mode: Mode,
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
+        if ws == Whitespace::None {
+            return self.decode_slice_policy(input, out, mode, policy);
+        }
+        let mut stripped = vec![0u8; input.len()];
+        let (_, n) = crate::base64::swar::compact_ws(input, &mut stripped, ws);
+        stripped.truncate(n);
+        self.decode_slice_policy(&stripped, out, mode, policy)
+            .map_err(|e| rebase_ws_error(e, input, ws))
+    }
+
+    /// Encode to a fresh `Vec`.
+    pub fn encode(&self, input: &[u8]) -> Vec<u8> {
+        let mut v = vec![0u8; encoded_len(input.len())];
+        self.encode_slice(input, &mut v);
+        v
+    }
+
+    /// Decode to a fresh `Vec`.
+    pub fn decode(&self, input: &[u8], mode: Mode) -> Result<Vec<u8>, DecodeError> {
+        let mut v = vec![0u8; decoded_len_upper(input.len())];
+        let n = self.decode_slice(input, &mut v, mode)?;
+        v.truncate(n);
+        Ok(v)
+    }
+}
+
+/// Raw-byte count produced by a final group with `data` significant
+/// chars (1, 3 and 6 cannot close out on a byte boundary).
+const TAIL_BYTES: [usize; 9] = [0, usize::MAX, 1, usize::MAX, 2, 3, usize::MAX, 4, 5];
+
+/// Bits of the final data char that must be zero in strict mode, by
+/// data-char count.
+const TAIL_EXCESS: [u32; 9] = [0, 0, 2, 0, 4, 1, 0, 3, 0];
+
+/// Encode a final 1–5 byte group into exactly 8 chars with padding.
+fn encode_group(group: &[u8], out: &mut [u8], enc: &[u8; 32]) {
+    debug_assert!(!group.is_empty() && group.len() <= 5);
+    let mut v = 0u64;
+    for (i, &b) in group.iter().enumerate() {
+        v |= (b as u64) << (32 - 8 * i);
+    }
+    let data = match group.len() {
+        1 => 2,
+        2 => 4,
+        3 => 5,
+        4 => 7,
+        _ => 8,
+    };
+    for (k, slot) in out.iter_mut().take(8).enumerate() {
+        *slot = if k < data { enc[((v >> (35 - 5 * k)) & 31) as usize] } else { b'=' };
+    }
+}
+
+/// Split a decode payload into pad-free whole groups and a final
+/// (possibly padded) group, mirroring `base64::validate::split_tail`.
+fn split_tail32(input: &[u8], mode: Mode) -> Result<(&[u8], &[u8]), DecodeError> {
+    match mode {
+        Mode::Strict => {
+            if input.len() % 8 != 0 {
+                return Err(DecodeError::InvalidLength { len: input.len() });
+            }
+            if input.is_empty() {
+                return Ok((input, &[]));
+            }
+            let last = &input[input.len() - 8..];
+            if last.contains(&b'=') {
+                Ok((&input[..input.len() - 8], last))
+            } else {
+                Ok((input, &[]))
+            }
+        }
+        Mode::Forgiving => {
+            let body_len = match input.iter().position(|&c| c == b'=') {
+                Some(p) => p / 8 * 8,
+                None => input.len() / 8 * 8,
+            };
+            Ok((&input[..body_len], &input[body_len..]))
+        }
+    }
+}
+
+/// Decode the final group (0–8 data chars, possibly padded); writes
+/// the 0–5 raw bytes at `out[0..]` and returns the count.
+/// `base_offset` positions error reports in the stripped input.
+fn decode_tail(
+    tail: &[u8],
+    mode: Mode,
+    base_offset: usize,
+    t: &Tables,
+    out: &mut [u8],
+) -> Result<usize, DecodeError> {
+    if tail.is_empty() {
+        return Ok(0);
+    }
+    let data_len = tail.iter().position(|&c| c == b'=').unwrap_or(tail.len());
+    let data = &tail[..data_len];
+    let padding = &tail[data_len..];
+    // Everything after the first pad must be pad, and strict mode
+    // requires the padding to complete exactly one 8-char group.
+    if !padding.iter().all(|&c| c == b'=') {
+        return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+    }
+    if mode == Mode::Strict {
+        if !padding.is_empty() && tail.len() != 8 {
+            return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+        }
+        if padding.len() > 6 {
+            return Err(DecodeError::InvalidPadding { offset: base_offset + data_len });
+        }
+    }
+    let mut v = 0u64;
+    for (i, &c) in data.iter().enumerate() {
+        let x = t.dec[c as usize];
+        if x == 0xFF {
+            return Err(DecodeError::InvalidByte { offset: base_offset + i, byte: c });
+        }
+        v = (v << 5) | x as u64;
+    }
+    if data.is_empty() {
+        return Ok(0);
+    }
+    let written = TAIL_BYTES[data.len()];
+    if written == usize::MAX {
+        return Err(DecodeError::InvalidLength { len: base_offset + data.len() });
+    }
+    if mode == Mode::Strict && v & ((1u64 << TAIL_EXCESS[data.len()]) - 1) != 0 {
+        return Err(DecodeError::TrailingBits { offset: base_offset + data.len() - 1 });
+    }
+    // Left-align the 5·data bits into the 40-bit group and take the
+    // whole raw bytes off the top.
+    let full = v << (40 - 5 * data.len());
+    assert!(out.len() >= written, "output buffer too small for the decoded tail");
+    out[..written].copy_from_slice(&full.to_be_bytes()[3..3 + written]);
+    Ok(written)
+}
+
+/// Decode a final (possibly padded) group with carry-relative error
+/// offsets — the streaming decoder's tail path (`codec::stream`).
+pub(crate) fn decode_tail_group(
+    tail: &[u8],
+    mode: Mode,
+    variant: Base32Variant,
+    out: &mut [u8],
+) -> Result<usize, DecodeError> {
+    decode_tail(tail, mode, 0, variant.tables(), out)
+}
+
+/// Cold path: exact position of the first invalid byte in `body`.
+fn first_invalid(body: &[u8], t: &Tables) -> DecodeError {
+    for (i, &c) in body.iter().enumerate() {
+        if t.dec[c as usize] == 0xFF {
+            return DecodeError::InvalidByte { offset: i, byte: c };
+        }
+    }
+    unreachable!("decode kernel flagged an error but every byte is valid base32")
+}
+
+fn encode_scalar(input: &[u8], out: &mut [u8], t: &Tables) {
+    debug_assert_eq!(input.len() % 5, 0);
+    for (g, ch) in input.chunks_exact(5).enumerate() {
+        let v = ((ch[0] as u64) << 32)
+            | ((ch[1] as u64) << 24)
+            | ((ch[2] as u64) << 16)
+            | ((ch[3] as u64) << 8)
+            | ch[4] as u64;
+        let o = &mut out[g * 8..g * 8 + 8];
+        for (k, slot) in o.iter_mut().enumerate() {
+            *slot = t.enc[((v >> (35 - 5 * k)) & 31) as usize];
+        }
+    }
+}
+
+/// Word-at-a-time encode: one 8-byte big-endian load covers a whole
+/// 5-byte group (the final group falls back to the scalar assembly to
+/// stay inside the slice).
+fn encode_swar(input: &[u8], out: &mut [u8], t: &Tables) {
+    debug_assert_eq!(input.len() % 5, 0);
+    let groups = input.len() / 5;
+    let mut g = 0;
+    while g < groups && g * 5 + 8 <= input.len() {
+        let v = u64::from_be_bytes(input[g * 5..g * 5 + 8].try_into().unwrap()) >> 24;
+        let o = &mut out[g * 8..g * 8 + 8];
+        o[0] = t.enc[((v >> 35) & 31) as usize];
+        o[1] = t.enc[((v >> 30) & 31) as usize];
+        o[2] = t.enc[((v >> 25) & 31) as usize];
+        o[3] = t.enc[((v >> 20) & 31) as usize];
+        o[4] = t.enc[((v >> 15) & 31) as usize];
+        o[5] = t.enc[((v >> 10) & 31) as usize];
+        o[6] = t.enc[((v >> 5) & 31) as usize];
+        o[7] = t.enc[(v & 31) as usize];
+        g += 1;
+    }
+    encode_scalar(&input[g * 5..], &mut out[g * 8..], t);
+}
+
+fn decode_scalar(input: &[u8], out: &mut [u8], t: &Tables) -> bool {
+    debug_assert_eq!(input.len() % 8, 0);
+    for (g, ch) in input.chunks_exact(8).enumerate() {
+        let mut v = 0u64;
+        for &c in ch {
+            let x = t.dec[c as usize];
+            if x == 0xFF {
+                return false;
+            }
+            v = (v << 5) | x as u64;
+        }
+        out[g * 5..g * 5 + 5].copy_from_slice(&v.to_be_bytes()[3..8]);
+    }
+    true
+}
+
+/// Word-at-a-time decode with the deferred validity accumulator.
+fn decode_swar(input: &[u8], out: &mut [u8], t: &Tables) -> bool {
+    debug_assert_eq!(input.len() % 8, 0);
+    let mut bad = 0u8;
+    for (g, ch) in input.chunks_exact(8).enumerate() {
+        let mut v = 0u64;
+        for &c in ch {
+            let x = t.dec[c as usize];
+            bad |= x;
+            v = (v << 5) | (x & 0x1F) as u64;
+        }
+        out[g * 5..g * 5 + 5].copy_from_slice(&v.to_be_bytes()[3..8]);
+    }
+    bad & 0x80 == 0
+}
+
+#[cfg(target_arch = "x86_64")]
+fn encode_avx512(input: &[u8], out: &mut [u8], t: &Tables) {
+    debug_assert_eq!(input.len() % 5, 0);
+    let chunks = input.len() / 40 * 40;
+    // Safety: selected only when Tier::Avx512 is available
+    // (avx512f + avx512bw + avx512vbmi).
+    unsafe { avx512::encode(&input[..chunks], out, &t.enc) };
+    encode_swar(&input[chunks..], &mut out[chunks / 5 * 8..], t);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn decode_avx512(input: &[u8], out: &mut [u8], t: &Tables) -> bool {
+    debug_assert_eq!(input.len() % 8, 0);
+    let chunks = input.len() / 64 * 64;
+    // Safety: selected only when Tier::Avx512 is available.
+    let clean = unsafe { avx512::decode(&input[..chunks], out, &t.dec128) };
+    clean && decode_swar(&input[chunks..], &mut out[chunks / 8 * 5..], t)
+}
+
+/// AVX-512 VBMI kernels: 40 raw bytes ↔ 64 chars per vector, using the
+/// same shuffle/multishift/madd toolbox as `base64::avx512`.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use core::arch::x86_64::*;
+
+    /// `vpermb` index building one big-endian 40-bit group per output
+    /// qword: qword `j` gets bytes `in[5j+4] … in[5j]` (LSB→MSB); the
+    /// three spare byte slots point at the masked-load zero tail.
+    const GROUP_BE: [u8; 64] = {
+        let mut t = [63u8; 64];
+        let mut j = 0;
+        while j < 8 {
+            let mut k = 0;
+            while k < 5 {
+                t[8 * j + k] = (5 * j + (4 - k)) as u8;
+                k += 1;
+            }
+            j += 1;
+        }
+        t
+    };
+
+    /// Per-qword `vpmultishiftqb` controls extracting the eight 5-bit
+    /// fields of the 40-bit group, MSB field first.
+    const ENC_SHIFTS: [u8; 8] = [35, 30, 25, 20, 15, 10, 5, 0];
+
+    /// Per-qword controls slicing the reassembled 40-bit value into its
+    /// five big-endian raw bytes (spare slots are dropped by the gather).
+    const DEC_SHIFTS: [u8; 8] = [32, 24, 16, 8, 0, 0, 0, 0];
+
+    /// `vpermb` index compacting the five live bytes of each qword into
+    /// 40 contiguous output bytes.
+    const PACK: [u8; 64] = {
+        let mut t = [0u8; 64];
+        let mut m = 0;
+        while m < 40 {
+            t[m] = (8 * (m / 5) + m % 5) as u8;
+            m += 1;
+        }
+        t
+    };
+
+    /// Encode 40 raw bytes → 64 chars per iteration; `input` must be a
+    /// multiple of 40 bytes.
+    ///
+    /// # Safety
+    /// Requires avx512f, avx512bw and avx512vbmi.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub(super) unsafe fn encode(input: &[u8], out: &mut [u8], enc: &[u8; 32]) {
+        debug_assert_eq!(input.len() % 40, 0);
+        let group = _mm512_loadu_si512(GROUP_BE.as_ptr() as *const i32);
+        let shifts = _mm512_set1_epi64(i64::from_le_bytes(ENC_SHIFTS));
+        let lut = _mm512_maskz_loadu_epi8(0xFFFF_FFFF, enc.as_ptr() as *const i8);
+        let low = _mm512_set1_epi8(0x1F);
+        for (i, ch) in input.chunks_exact(40).enumerate() {
+            let src = _mm512_maskz_loadu_epi8((1u64 << 40) - 1, ch.as_ptr() as *const i8);
+            let grouped = _mm512_permutexvar_epi8(group, src);
+            let fields = _mm512_and_si512(_mm512_multishift_epi64_epi8(shifts, grouped), low);
+            let chars = _mm512_permutexvar_epi8(fields, lut);
+            _mm512_storeu_si512(out.as_mut_ptr().add(64 * i) as *mut i32, chars);
+        }
+    }
+
+    /// Decode 64 chars → 40 raw bytes per iteration with deferred
+    /// validation; `input` must be a multiple of 64 chars. Returns
+    /// `false` if any byte was invalid (caller re-scans for the offset).
+    ///
+    /// # Safety
+    /// Requires avx512f, avx512bw and avx512vbmi.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub(super) unsafe fn decode(input: &[u8], out: &mut [u8], dec128: &[u8; 128]) -> bool {
+        debug_assert_eq!(input.len() % 64, 0);
+        let lut_lo = _mm512_loadu_si512(dec128.as_ptr() as *const i32);
+        let lut_hi = _mm512_loadu_si512(dec128.as_ptr().add(64) as *const i32);
+        let pack = _mm512_loadu_si512(PACK.as_ptr() as *const i32);
+        // Per 16-bit lane: first char value * 32 + second.
+        let madd1 = _mm512_set1_epi16(0x0120);
+        // Per 32-bit lane: first 10-bit pair * 1024 + second.
+        let madd2 = _mm512_set1_epi32(0x0001_0400);
+        let shifts = _mm512_set1_epi64(i64::from_le_bytes(DEC_SHIFTS));
+        let mask32 = _mm512_set1_epi64(0xFFFF_FFFF);
+        let mut error = _mm512_setzero_si512();
+        for (i, ch) in input.chunks_exact(64).enumerate() {
+            let chars = _mm512_loadu_si512(ch.as_ptr() as *const i32);
+            let vals = _mm512_permutex2var_epi8(lut_lo, chars, lut_hi);
+            // error |= chars | vals — flags bit 7 for non-ASCII input
+            // and for the 0x80 invalid sentinel.
+            error = _mm512_ternarylogic_epi32(error, chars, vals, 0xFE);
+            let words = _mm512_maddubs_epi16(vals, madd1);
+            let dwords = _mm512_madd_epi16(words, madd2);
+            // Each qword holds two 20-bit halves (chars 0–3 in the low
+            // dword); fuse them into the 40-bit group value.
+            let v40 = _mm512_or_si512(
+                _mm512_slli_epi64::<20>(_mm512_and_si512(dwords, mask32)),
+                _mm512_srli_epi64::<32>(dwords),
+            );
+            let bytes = _mm512_multishift_epi64_epi8(shifts, v40);
+            let packed = _mm512_permutexvar_epi8(pack, bytes);
+            _mm512_mask_storeu_epi8(
+                out.as_mut_ptr().add(40 * i) as *mut i8,
+                (1u64 << 40) - 1,
+                packed,
+            );
+        }
+        _mm512_movepi8_mask(error) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(len: usize) -> Vec<u8> {
+        (0..len).map(|i| (i * 131 % 256) as u8).collect()
+    }
+
+    /// Group-by-group reference built only from the tail encoder.
+    fn reference_encode(input: &[u8], variant: Base32Variant) -> Vec<u8> {
+        let enc = variant.chars();
+        let mut out = vec![0u8; encoded_len(input.len())];
+        for (g, group) in input.chunks(5).enumerate() {
+            encode_group(group, &mut out[g * 8..g * 8 + 8], enc);
+        }
+        out
+    }
+
+    #[test]
+    fn rfc4648_vectors_std() {
+        let c = Base32Codec::new(Base32Variant::Std);
+        for (raw, b32) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"MY======"),
+            (b"fo", b"MZXQ===="),
+            (b"foo", b"MZXW6==="),
+            (b"foob", b"MZXW6YQ="),
+            (b"fooba", b"MZXW6YTB"),
+            (b"foobar", b"MZXW6YTBOI======"),
+        ] {
+            assert_eq!(c.encode(raw), b32);
+            assert_eq!(c.decode(b32, Mode::Strict).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn rfc4648_vectors_hex() {
+        let c = Base32Codec::new(Base32Variant::Hex);
+        for (raw, b32) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"CO======"),
+            (b"fo", b"CPNG===="),
+            (b"foo", b"CPNMU==="),
+            (b"foob", b"CPNMUOG="),
+            (b"fooba", b"CPNMUOJ1"),
+            (b"foobar", b"CPNMUOJ1E8======"),
+        ] {
+            assert_eq!(c.encode(raw), b32);
+            assert_eq!(c.decode(b32, Mode::Strict).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn all_tiers_match_scalar() {
+        for variant in [Base32Variant::Std, Base32Variant::Hex] {
+            for tier in Tier::supported() {
+                let c = Base32Codec::with_tier(variant, tier);
+                for len in [0usize, 1, 4, 5, 6, 39, 40, 41, 100, 1000, 5003] {
+                    let raw = data(len);
+                    let enc = c.encode(&raw);
+                    assert_eq!(
+                        enc,
+                        reference_encode(&raw, variant),
+                        "variant={variant:?} tier={tier:?} len={len}"
+                    );
+                    assert_eq!(
+                        c.decode(&enc, Mode::Strict).unwrap(),
+                        raw,
+                        "variant={variant:?} tier={tier:?} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policies_match_temporal() {
+        for tier in Tier::supported() {
+            let c = Base32Codec::with_tier(Base32Variant::Std, tier);
+            for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal, StorePolicy::auto()] {
+                for len in [0usize, 100, 2559, 2560, 2561, 6399, 6400, 50_000] {
+                    let raw = data(len);
+                    let mut enc = vec![0u8; encoded_len(len)];
+                    let n = c.encode_slice_policy(&raw, &mut enc, policy);
+                    assert_eq!(n, encoded_len(len));
+                    assert_eq!(enc, reference_encode(&raw, Base32Variant::Std), "tier={tier:?} len={len}");
+                    let mut dec = vec![0u8; decoded_len_upper(enc.len())];
+                    let n = c.decode_slice_policy(&enc, &mut dec, Mode::Strict, policy).unwrap();
+                    assert_eq!(&dec[..n], raw, "tier={tier:?} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_offsets_match_across_tiers() {
+        let raw = data(400); // 640 chars, no padding
+        let reference = reference_encode(&raw, Base32Variant::Std);
+        for pos in [0usize, 1, 63, 64, 65, 300, 639] {
+            let mut bad = reference.clone();
+            bad[pos] = b'!';
+            for tier in Tier::supported() {
+                let c = Base32Codec::with_tier(Base32Variant::Std, tier);
+                match c.decode(&bad, Mode::Strict) {
+                    Err(DecodeError::InvalidByte { offset, byte }) => {
+                        assert_eq!((offset, byte), (pos, b'!'), "tier={tier:?} pos={pos}")
+                    }
+                    other => panic!("tier={tier:?} pos={pos}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strict_rejects_trailing_bits() {
+        let c = Base32Codec::new(Base32Variant::Std);
+        // "MY======" is canonical for "f"; 'Z' = 0b11001 leaks 2 bits.
+        match c.decode(b"MZ======", Mode::Strict) {
+            Err(DecodeError::TrailingBits { offset: 1 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.decode(b"MZ======", Mode::Forgiving).unwrap(), b"f");
+    }
+
+    #[test]
+    fn strict_rejects_bad_lengths_and_padding() {
+        let c = Base32Codec::new(Base32Variant::Std);
+        assert!(matches!(
+            c.decode(b"MZXW6", Mode::Strict),
+            Err(DecodeError::InvalidLength { len: 5 })
+        ));
+        // 7 pads can never be canonical.
+        assert!(matches!(
+            c.decode(b"M=======", Mode::Strict),
+            Err(DecodeError::InvalidPadding { .. })
+        ));
+        // Data resumed after padding.
+        assert!(matches!(
+            c.decode(b"MY====Y=", Mode::Strict),
+            Err(DecodeError::InvalidPadding { offset: 2 })
+        ));
+        // Lowercase is not accepted (GNU base32 -d parity).
+        assert!(matches!(
+            c.decode(b"mzxw6ytb", Mode::Strict),
+            Err(DecodeError::InvalidByte { offset: 0, byte: b'm' })
+        ));
+    }
+
+    #[test]
+    fn forgiving_accepts_unpadded() {
+        let c = Base32Codec::new(Base32Variant::Std);
+        assert_eq!(c.decode(b"MZXW6", Mode::Forgiving).unwrap(), b"foo");
+        assert_eq!(c.decode(b"MZXW6YTBOI", Mode::Forgiving).unwrap(), b"foobar");
+        // 1/3/6 dangling data chars never close a byte boundary.
+        assert!(matches!(
+            c.decode(b"MZXW6YTBO", Mode::Forgiving),
+            Err(DecodeError::InvalidLength { .. })
+        ));
+    }
+
+    #[test]
+    fn ws_decode_rebases_offsets() {
+        let c = Base32Codec::new(Base32Variant::Std);
+        let mut out = vec![0u8; 16];
+        let n = c
+            .decode_slice_ws(
+                b"MZXW\r\n6YTB",
+                &mut out,
+                Whitespace::CrLf,
+                Mode::Strict,
+                StorePolicy::Temporal,
+            )
+            .unwrap();
+        assert_eq!(&out[..n], b"fooba");
+        match c.decode_slice_ws(
+            b"MZXW\r\n6YT!",
+            &mut out,
+            Whitespace::CrLf,
+            Mode::Strict,
+            StorePolicy::Temporal,
+        ) {
+            Err(DecodeError::InvalidByte { offset: 9, byte: b'!' }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

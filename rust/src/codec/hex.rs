@@ -1,0 +1,558 @@
+//! Hexadecimal (base16, RFC 4648 §8) with the base64 engine's toolbox.
+//!
+//! Encoding emits the uppercase digits RFC 4648 §10 prints; decoding
+//! accepts both cases. The kernels reuse the idioms of the base64
+//! engine one layer down: a branchless SWAR nibble→ASCII word trick, an
+//! AVX2 `vpshufb` nibble LUT, and an AVX-512 VBMI
+//! `vpermb`+`vpmultishiftqb` pipeline mirroring `base64::avx512`, with
+//! deferred error detection and a cold re-scan for the exact offending
+//! offset. The policy-aware `_slice_policy` entry points stage through
+//! an L1-resident buffer and stream out with the same non-temporal copy
+//! kernels ([`crate::base64::stores`]) the base64 engine uses, so large
+//! replies can bypass the cache on the way to a socket buffer.
+
+use crate::base64::engine::detected_tier;
+use crate::base64::stores::{copy_for, fence, CopyFn};
+use crate::base64::validate::rebase_ws_error;
+use crate::base64::{DecodeError, StorePolicy, Tier, Whitespace};
+
+/// RFC 4648 §8 digit set (§10 prints base16 vectors uppercase).
+const ENCODE: &[u8; 16] = b"0123456789ABCDEF";
+
+/// Case-insensitive nibble values; `0xFF` marks an invalid byte.
+const DECODE: [u8; 256] = decode_table();
+
+const fn decode_table() -> [u8; 256] {
+    let mut t = [0xFFu8; 256];
+    let mut i = 0;
+    while i < 10 {
+        t[b'0' as usize + i] = i as u8;
+        i += 1;
+    }
+    let mut i = 0;
+    while i < 6 {
+        t[b'A' as usize + i] = 10 + i as u8;
+        t[b'a' as usize + i] = 10 + i as u8;
+        i += 1;
+    }
+    t
+}
+
+/// Low half of [`DECODE`] with the AVX-512 sentinel convention: invalid
+/// entries carry `0x80`, so a single `vpternlogd` OR-accumulation over
+/// (chars | values) flags both non-ASCII input and non-hex ASCII.
+#[cfg(target_arch = "x86_64")]
+const DECODE128: [u8; 128] = decode_table_128();
+
+#[cfg(target_arch = "x86_64")]
+const fn decode_table_128() -> [u8; 128] {
+    let mut t = [0x80u8; 128];
+    let mut i = 0;
+    while i < 128 {
+        if DECODE[i] != 0xFF {
+            t[i] = DECODE[i];
+        }
+        i += 1;
+    }
+    t
+}
+
+/// Exact encoded length for `n` raw bytes.
+pub const fn encoded_len(n: usize) -> usize {
+    n * 2
+}
+
+/// Exact decoded length for `n` hex digits (`n` must be even to decode).
+pub const fn decoded_len(n: usize) -> usize {
+    n / 2
+}
+
+/// Bulk encoder: writes `input.len() * 2` chars.
+type EncodeFn = fn(&[u8], &mut [u8]);
+/// Bulk decoder over an even-length char slice: writes `len / 2` bytes,
+/// returns `false` if any byte was invalid (deferred — caller re-scans
+/// for the exact offset on the cold path).
+type DecodeFn = fn(&[u8], &mut [u8]) -> bool;
+
+/// Tier-dispatched hex codec with the engine's policy-aware slice API.
+pub struct HexCodec {
+    tier: Tier,
+    encode_bulk: EncodeFn,
+    decode_bulk: DecodeFn,
+    nt_copy: CopyFn,
+}
+
+impl Default for HexCodec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HexCodec {
+    /// Codec on the detected tier (`B64SIMD_TIER` honored).
+    pub fn new() -> Self {
+        Self::with_tier(detected_tier())
+    }
+
+    /// Codec pinned to `tier`, clamped to what the host supports. The
+    /// AVX2 tier uses the `vpshufb` LUT for encode and the SWAR path
+    /// for decode (the table lookups dominate either way).
+    pub fn with_tier(tier: Tier) -> Self {
+        let tier = if tier.available() { tier } else { Tier::Swar };
+        let (encode_bulk, decode_bulk): (EncodeFn, DecodeFn) = match tier {
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx512 => (encode_avx512, decode_avx512),
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => (encode_avx2, decode_swar),
+            Tier::Swar => (encode_swar, decode_swar),
+            _ => (encode_scalar, decode_scalar),
+        };
+        Self { tier, encode_bulk, decode_bulk, nt_copy: copy_for(tier) }
+    }
+
+    /// The tier this codec dispatches to.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Encode `input` into `out[..input.len() * 2]`; returns the count.
+    pub fn encode_slice(&self, input: &[u8], out: &mut [u8]) -> usize {
+        self.encode_slice_policy(input, out, StorePolicy::Temporal)
+    }
+
+    /// [`Self::encode_slice`] with an explicit store policy.
+    pub fn encode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        policy: StorePolicy,
+    ) -> usize {
+        let total = encoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        if !policy.use_nontemporal(total) {
+            (self.encode_bulk)(input, &mut out[..total]);
+            return total;
+        }
+        // Stage in L1, stream to `out` with non-temporal stores.
+        const STAGE_RAW: usize = 2048;
+        let mut stage = [0u8; STAGE_RAW * 2];
+        let mut done = 0;
+        while done < input.len() {
+            let n = (input.len() - done).min(STAGE_RAW);
+            (self.encode_bulk)(&input[done..done + n], &mut stage[..n * 2]);
+            (self.nt_copy)(&mut out[done * 2..(done + n) * 2], &stage[..n * 2]);
+            done += n;
+        }
+        fence();
+        total
+    }
+
+    /// Decode `input` into `out[..input.len() / 2]`; returns the count.
+    /// Odd input lengths are always `InvalidLength` (there is no
+    /// forgiving nibble-drop mode).
+    pub fn decode_slice(&self, input: &[u8], out: &mut [u8]) -> Result<usize, DecodeError> {
+        self.decode_slice_policy(input, out, StorePolicy::Temporal)
+    }
+
+    /// [`Self::decode_slice`] with an explicit store policy.
+    pub fn decode_slice_policy(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
+        if input.len() % 2 != 0 {
+            return Err(DecodeError::InvalidLength { len: input.len() });
+        }
+        let total = decoded_len(input.len());
+        assert!(out.len() >= total, "output buffer too small");
+        let clean = if !policy.use_nontemporal(total) {
+            (self.decode_bulk)(input, &mut out[..total])
+        } else {
+            const STAGE_CHARS: usize = 8192;
+            let mut stage = [0u8; STAGE_CHARS / 2];
+            let mut clean = true;
+            let mut done = 0;
+            while clean && done < input.len() {
+                let n = (input.len() - done).min(STAGE_CHARS);
+                clean = (self.decode_bulk)(&input[done..done + n], &mut stage[..n / 2]);
+                (self.nt_copy)(&mut out[done / 2..(done + n) / 2], &stage[..n / 2]);
+                done += n;
+            }
+            // The sfence contract holds on the error path too.
+            fence();
+            clean
+        };
+        if clean {
+            Ok(total)
+        } else {
+            Err(first_invalid(input))
+        }
+    }
+
+    /// Decode with a whitespace policy: skipped bytes are stripped once
+    /// (SWAR word scan), and error offsets are rebased onto the original
+    /// payload, matching the base64 engine's `decode_slice_ws` contract.
+    pub fn decode_slice_ws(
+        &self,
+        input: &[u8],
+        out: &mut [u8],
+        ws: Whitespace,
+        policy: StorePolicy,
+    ) -> Result<usize, DecodeError> {
+        if ws == Whitespace::None {
+            return self.decode_slice_policy(input, out, policy);
+        }
+        let mut stripped = vec![0u8; input.len()];
+        let (_, n) = crate::base64::swar::compact_ws(input, &mut stripped, ws);
+        stripped.truncate(n);
+        self.decode_slice_policy(&stripped, out, policy)
+            .map_err(|e| rebase_ws_error(e, input, ws))
+    }
+
+    /// Encode to a fresh `Vec`.
+    pub fn encode(&self, input: &[u8]) -> Vec<u8> {
+        let mut v = vec![0u8; encoded_len(input.len())];
+        self.encode_slice(input, &mut v);
+        v
+    }
+
+    /// Decode to a fresh `Vec`.
+    pub fn decode(&self, input: &[u8]) -> Result<Vec<u8>, DecodeError> {
+        let mut v = vec![0u8; decoded_len(input.len())];
+        let n = self.decode_slice(input, &mut v)?;
+        v.truncate(n);
+        Ok(v)
+    }
+}
+
+/// Cold path: exact position of the first non-hex byte.
+fn first_invalid(input: &[u8]) -> DecodeError {
+    for (i, &c) in input.iter().enumerate() {
+        if DECODE[c as usize] == 0xFF {
+            return DecodeError::InvalidByte { offset: i, byte: c };
+        }
+    }
+    unreachable!("decode kernel flagged an error but every byte is valid hex")
+}
+
+fn encode_scalar(input: &[u8], out: &mut [u8]) {
+    for (i, &b) in input.iter().enumerate() {
+        out[2 * i] = ENCODE[(b >> 4) as usize];
+        out[2 * i + 1] = ENCODE[(b & 0x0F) as usize];
+    }
+}
+
+/// Branchless packed nibble→ASCII over eight lanes: digits land on
+/// `'0' + n`; lanes holding 10–15 carry out of `n + 6` into bit 4,
+/// selecting the extra `'A' - '9' - 1 = 7` hop over the punctuation.
+fn nibbles_to_ascii(n: u64) -> u64 {
+    let mask = ((n + 0x0606_0606_0606_0606) & 0x1010_1010_1010_1010) >> 4;
+    n + 0x3030_3030_3030_3030 + mask * 0x07
+}
+
+fn encode_swar(input: &[u8], out: &mut [u8]) {
+    const LOW_NIBBLES: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+    let mut chunks = input.chunks_exact(8);
+    let mut o = 0;
+    for ch in &mut chunks {
+        let v = u64::from_le_bytes(ch.try_into().unwrap());
+        let ha = nibbles_to_ascii((v >> 4) & LOW_NIBBLES).to_le_bytes();
+        let la = nibbles_to_ascii(v & LOW_NIBBLES).to_le_bytes();
+        for i in 0..8 {
+            out[o + 2 * i] = ha[i];
+            out[o + 2 * i + 1] = la[i];
+        }
+        o += 16;
+    }
+    encode_scalar(chunks.remainder(), &mut out[o..]);
+}
+
+fn decode_scalar(input: &[u8], out: &mut [u8]) -> bool {
+    debug_assert_eq!(input.len() % 2, 0);
+    let mut bad = 0u8;
+    for (i, pair) in input.chunks_exact(2).enumerate() {
+        let h = DECODE[pair[0] as usize];
+        let l = DECODE[pair[1] as usize];
+        bad |= h | l;
+        out[i] = (h << 4) | (l & 0x0F);
+    }
+    bad & 0x80 == 0
+}
+
+/// Word-at-a-time decode: eight output bytes assembled per iteration
+/// with one deferred validity accumulator.
+fn decode_swar(input: &[u8], out: &mut [u8]) -> bool {
+    debug_assert_eq!(input.len() % 2, 0);
+    let mut bad = 0u8;
+    let mut o = 0;
+    let mut chunks = input.chunks_exact(16);
+    for ch in &mut chunks {
+        let mut w = 0u64;
+        for i in 0..8 {
+            let h = DECODE[ch[2 * i] as usize];
+            let l = DECODE[ch[2 * i + 1] as usize];
+            bad |= h | l;
+            w |= ((((h << 4) | (l & 0x0F)) as u64) & 0xFF) << (8 * i);
+        }
+        out[o..o + 8].copy_from_slice(&w.to_le_bytes());
+        o += 8;
+    }
+    bad & 0x80 == 0 && decode_scalar(chunks.remainder(), &mut out[o..])
+}
+
+#[cfg(target_arch = "x86_64")]
+fn encode_avx2(input: &[u8], out: &mut [u8]) {
+    let chunks = input.len() / 16 * 16;
+    // Safety: selected only when Tier::Avx2 is available on this host.
+    unsafe { avx2::encode(&input[..chunks], out) };
+    encode_scalar(&input[chunks..], &mut out[chunks * 2..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn encode_avx512(input: &[u8], out: &mut [u8]) {
+    let chunks = input.len() / 32 * 32;
+    // Safety: selected only when Tier::Avx512 is available
+    // (avx512f + avx512bw + avx512vbmi).
+    unsafe { avx512::encode(&input[..chunks], out) };
+    encode_scalar(&input[chunks..], &mut out[chunks * 2..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn decode_avx512(input: &[u8], out: &mut [u8]) -> bool {
+    debug_assert_eq!(input.len() % 2, 0);
+    let chunks = input.len() / 64 * 64;
+    // Safety: selected only when Tier::Avx512 is available.
+    let clean = unsafe { avx512::decode(&input[..chunks], out) };
+    clean && decode_swar(&input[chunks..], &mut out[chunks / 2..])
+}
+
+/// AVX2 (128-bit `vpshufb`) nibble LUT encode.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::ENCODE;
+    use core::arch::x86_64::*;
+
+    /// Encode 16 raw bytes → 32 hex chars per iteration; `input` must
+    /// be a multiple of 16 bytes.
+    ///
+    /// # Safety
+    /// Requires AVX2 (the 128-bit ops compile to VEX forms).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn encode(input: &[u8], out: &mut [u8]) {
+        debug_assert_eq!(input.len() % 16, 0);
+        let lut = _mm_loadu_si128(ENCODE.as_ptr() as *const __m128i);
+        let low = _mm_set1_epi8(0x0F);
+        for (i, ch) in input.chunks_exact(16).enumerate() {
+            let v = _mm_loadu_si128(ch.as_ptr() as *const __m128i);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), low);
+            let lo = _mm_and_si128(v, low);
+            let hc = _mm_shuffle_epi8(lut, hi);
+            let lc = _mm_shuffle_epi8(lut, lo);
+            let dst = out.as_mut_ptr().add(32 * i);
+            _mm_storeu_si128(dst as *mut __m128i, _mm_unpacklo_epi8(hc, lc));
+            _mm_storeu_si128(dst.add(16) as *mut __m128i, _mm_unpackhi_epi8(hc, lc));
+        }
+    }
+}
+
+/// AVX-512 VBMI kernels, mirroring the structure of `base64::avx512`:
+/// `vpermb` shuffles, `vpmultishiftqb` bit-field extraction, a
+/// two-register `vpermi2b` decode table with `0x80` sentinels, and one
+/// deferred `vpternlogd`-accumulated error check per stream.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use super::{DECODE128, ENCODE};
+    use core::arch::x86_64::*;
+
+    /// `vpermb` index duplicating each input byte into a char pair.
+    const DUP: [u8; 64] = {
+        let mut t = [0u8; 64];
+        let mut i = 0;
+        while i < 64 {
+            t[i] = (i / 2) as u8;
+            i += 1;
+        }
+        t
+    };
+
+    /// Per-qword `vpmultishiftqb` controls: with byte pairs
+    /// `in[2j] in[2j]` along each qword, offsets 4/8 (then +16) land the
+    /// high and low nibble of each source byte in the low 4 bits of the
+    /// right output char slot.
+    const ENC_SHIFTS: [u8; 8] = [4, 8, 20, 24, 36, 40, 52, 56];
+
+    /// `vpermb` index gathering the low byte of each 16-bit madd lane.
+    const EVEN: [u8; 64] = {
+        let mut t = [0u8; 64];
+        let mut i = 0;
+        while i < 32 {
+            t[i] = (2 * i) as u8;
+            i += 1;
+        }
+        t
+    };
+
+    /// Encode 32 raw bytes → 64 hex chars per iteration; `input` must
+    /// be a multiple of 32 bytes.
+    ///
+    /// # Safety
+    /// Requires avx512f, avx512bw and avx512vbmi.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub(super) unsafe fn encode(input: &[u8], out: &mut [u8]) {
+        debug_assert_eq!(input.len() % 32, 0);
+        let dup = _mm512_loadu_si512(DUP.as_ptr() as *const i32);
+        let shifts = _mm512_set1_epi64(i64::from_le_bytes(ENC_SHIFTS));
+        let lut = _mm512_maskz_loadu_epi8(0xFFFF, ENCODE.as_ptr() as *const i8);
+        let low = _mm512_set1_epi8(0x0F);
+        for (i, ch) in input.chunks_exact(32).enumerate() {
+            let src = _mm512_maskz_loadu_epi8(0xFFFF_FFFF, ch.as_ptr() as *const i8);
+            let pairs = _mm512_permutexvar_epi8(dup, src);
+            let nibbles = _mm512_and_si512(_mm512_multishift_epi64_epi8(shifts, pairs), low);
+            let chars = _mm512_permutexvar_epi8(nibbles, lut);
+            _mm512_storeu_si512(out.as_mut_ptr().add(64 * i) as *mut i32, chars);
+        }
+    }
+
+    /// Decode 64 hex chars → 32 raw bytes per iteration with deferred
+    /// validation; `input` must be a multiple of 64 chars. Returns
+    /// `false` if any byte was invalid (caller re-scans for the offset).
+    ///
+    /// # Safety
+    /// Requires avx512f, avx512bw and avx512vbmi.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub(super) unsafe fn decode(input: &[u8], out: &mut [u8]) -> bool {
+        debug_assert_eq!(input.len() % 64, 0);
+        let lut_lo = _mm512_loadu_si512(DECODE128.as_ptr() as *const i32);
+        let lut_hi = _mm512_loadu_si512(DECODE128.as_ptr().add(64) as *const i32);
+        let gather = _mm512_loadu_si512(EVEN.as_ptr() as *const i32);
+        // Per 16-bit lane: high-nibble char value * 16 + low-nibble value.
+        let madd = _mm512_set1_epi16(0x0110);
+        let mut error = _mm512_setzero_si512();
+        for (i, ch) in input.chunks_exact(64).enumerate() {
+            let chars = _mm512_loadu_si512(ch.as_ptr() as *const i32);
+            let vals = _mm512_permutex2var_epi8(lut_lo, chars, lut_hi);
+            // error |= chars | vals — flags bit 7 for non-ASCII input
+            // and for the 0x80 invalid sentinel.
+            error = _mm512_ternarylogic_epi32(error, chars, vals, 0xFE);
+            let words = _mm512_maddubs_epi16(vals, madd);
+            let packed = _mm512_permutexvar_epi8(gather, words);
+            _mm512_mask_storeu_epi8(
+                out.as_mut_ptr().add(32 * i) as *mut i8,
+                0xFFFF_FFFF,
+                packed,
+            );
+        }
+        _mm512_movepi8_mask(error) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference_encode(input: &[u8]) -> Vec<u8> {
+        let mut v = vec![0u8; encoded_len(input.len())];
+        encode_scalar(input, &mut v);
+        v
+    }
+
+    fn data(len: usize) -> Vec<u8> {
+        (0..len).map(|i| (i * 89 % 256) as u8).collect()
+    }
+
+    #[test]
+    fn rfc4648_vectors() {
+        let c = HexCodec::new();
+        for (raw, hex) in [
+            (&b""[..], &b""[..]),
+            (b"f", b"66"),
+            (b"fo", b"666F"),
+            (b"foo", b"666F6F"),
+            (b"foob", b"666F6F62"),
+            (b"fooba", b"666F6F6261"),
+            (b"foobar", b"666F6F626172"),
+        ] {
+            assert_eq!(c.encode(raw), hex);
+            assert_eq!(c.decode(hex).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn lowercase_accepted() {
+        let c = HexCodec::new();
+        assert_eq!(c.decode(b"666f6f626172").unwrap(), b"foobar");
+        assert_eq!(c.decode(b"deadBEEF").unwrap(), [0xDE, 0xAD, 0xBE, 0xEF]);
+    }
+
+    #[test]
+    fn all_tiers_match_scalar() {
+        for tier in Tier::supported() {
+            let c = HexCodec::with_tier(tier);
+            for len in [0usize, 1, 7, 8, 15, 16, 31, 32, 33, 63, 64, 100, 1000, 5000] {
+                let raw = data(len);
+                let enc = c.encode(&raw);
+                assert_eq!(enc, reference_encode(&raw), "tier={tier:?} len={len}");
+                assert_eq!(c.decode(&enc).unwrap(), raw, "tier={tier:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn policies_match_temporal() {
+        for tier in Tier::supported() {
+            let c = HexCodec::with_tier(tier);
+            for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal, StorePolicy::auto()] {
+                for len in [0usize, 100, 2047, 2048, 2049, 8191, 8192, 50_000] {
+                    let raw = data(len);
+                    let mut enc = vec![0u8; encoded_len(len)];
+                    let n = c.encode_slice_policy(&raw, &mut enc, policy);
+                    assert_eq!(n, encoded_len(len));
+                    assert_eq!(enc, reference_encode(&raw), "tier={tier:?} len={len}");
+                    let mut dec = vec![0u8; decoded_len(enc.len())];
+                    let n = c.decode_slice_policy(&enc, &mut dec, policy).unwrap();
+                    assert_eq!(&dec[..n], raw, "tier={tier:?} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_offsets_match_across_tiers() {
+        let raw = data(700);
+        let enc = reference_encode(&raw);
+        for pos in [0usize, 1, 63, 64, 65, 700, 1399] {
+            let mut bad = enc.clone();
+            bad[pos] = b'!';
+            for tier in Tier::supported() {
+                let c = HexCodec::with_tier(tier);
+                match c.decode(&bad) {
+                    Err(DecodeError::InvalidByte { offset, byte }) => {
+                        assert_eq!((offset, byte), (pos, b'!'), "tier={tier:?} pos={pos}")
+                    }
+                    other => panic!("tier={tier:?} pos={pos}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_length_rejected() {
+        let c = HexCodec::new();
+        assert!(matches!(c.decode(b"ABC"), Err(DecodeError::InvalidLength { len: 3 })));
+    }
+
+    #[test]
+    fn ws_decode_rebases_offsets() {
+        let c = HexCodec::new();
+        let mut out = vec![0u8; 16];
+        let n = c
+            .decode_slice_ws(b"66 6F\r\n6F", &mut out, Whitespace::All, StorePolicy::Temporal)
+            .unwrap();
+        assert_eq!(&out[..n], b"foo");
+        match c.decode_slice_ws(b"66 6!", &mut out, Whitespace::All, StorePolicy::Temporal) {
+            Err(DecodeError::InvalidByte { offset: 4, byte: b'!' }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

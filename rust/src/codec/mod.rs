@@ -1,0 +1,89 @@
+//! Multi-codec engine: tiered hex and base32 kernels plus the
+//! name↔id registry behind wire-level codec negotiation.
+//!
+//! The base64 engine stays where it is (`crate::base64`); this module
+//! generalizes the surrounding machinery — tier dispatch, store
+//! policies, whitespace stripping, streaming carries — to the other
+//! RFC 4648 encodings. The same `vpermb`/multishift toolbox the paper
+//! builds for base64 drives the AVX-512 hex and base32 kernels, with
+//! SWAR and scalar fallbacks sharing one set of reference semantics.
+//!
+//! [`CodecSel`] is the routing currency: the coordinator resolves a
+//! wire codec name through a per-connection [`CodecRegistry`] into a
+//! `CodecSel` and hands it to the router, which picks the matching
+//! kernel family without the reply paths caring which codec ran.
+
+pub mod base32;
+pub mod hex;
+pub mod registry;
+pub mod stream;
+
+pub use base32::{Base32Codec, Base32Variant};
+pub use hex::HexCodec;
+pub use registry::{CodecRegistry, RegisterError, DYNAMIC_BASE};
+pub use stream::{CodecStreamDecoder, CodecStreamEncoder};
+
+use crate::base64::Alphabet;
+
+/// A resolved codec selection: which encoding family a request runs,
+/// carrying the family-specific configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecSel {
+    /// Base64 with the given alphabet (built-in or custom-registered).
+    Base64(Alphabet),
+    /// Base16 (hex): uppercase encode, case-insensitive decode.
+    Hex,
+    /// Base32 in the given variant (standard or extended-hex).
+    Base32(Base32Variant),
+}
+
+impl CodecSel {
+    /// Canonical wire name for this selection.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSel::Base64(a) => a.name(),
+            CodecSel::Hex => "hex",
+            CodecSel::Base32(v) => v.name(),
+        }
+    }
+
+    /// Exact encoded size of `n` raw bytes under this codec.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        match self {
+            CodecSel::Base64(_) => n.div_ceil(3) * 4,
+            CodecSel::Hex => hex::encoded_len(n),
+            CodecSel::Base32(_) => base32::encoded_len(n),
+        }
+    }
+
+    /// Upper bound on the decoded size of `n` encoded bytes.
+    pub fn decoded_len_upper(&self, n: usize) -> usize {
+        match self {
+            CodecSel::Base64(_) => n.div_ceil(4) * 3,
+            CodecSel::Hex => hex::decoded_len(n),
+            CodecSel::Base32(_) => base32::decoded_len_upper(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sel_len_helpers() {
+        let b64 = CodecSel::Base64(Alphabet::standard());
+        assert_eq!(b64.encoded_len(3), 4);
+        assert_eq!(b64.encoded_len(4), 8);
+        assert_eq!(b64.decoded_len_upper(8), 6);
+        assert_eq!(CodecSel::Hex.encoded_len(5), 10);
+        assert_eq!(CodecSel::Hex.decoded_len_upper(10), 5);
+        let b32 = CodecSel::Base32(Base32Variant::Std);
+        assert_eq!(b32.encoded_len(5), 8);
+        assert_eq!(b32.encoded_len(6), 16);
+        assert_eq!(b32.decoded_len_upper(8), 5);
+        assert_eq!(b64.name(), "standard");
+        assert_eq!(CodecSel::Hex.name(), "hex");
+        assert_eq!(b32.name(), "base32");
+    }
+}

@@ -1,0 +1,216 @@
+//! Bidirectional name↔id codec registry — the per-connection map
+//! behind the wire protocol's `CodecHello`/`CodecRegister` negotiation.
+//!
+//! Built-in codecs occupy the low id space; dynamically registered
+//! custom base64 alphabets start at [`DYNAMIC_BASE`]. Both directions
+//! of the mapping are kept (name→id for request resolution, id→name
+//! for the `RespCodecs` listing), mirroring the `CodecMapper` design
+//! the negotiation extension is modeled on. The registry is
+//! per-connection state: one client's custom alphabet never leaks into
+//! another connection's namespace.
+
+use std::collections::HashMap;
+
+use super::{Base32Variant, CodecSel};
+use crate::base64::alphabet::AlphabetError;
+use crate::base64::Alphabet;
+
+/// First id handed to a dynamically registered codec; ids below this
+/// are reserved for built-ins.
+pub const DYNAMIC_BASE: u16 = 64;
+
+/// Per-connection cap on dynamic registrations (bounds session memory).
+const MAX_DYNAMIC: u16 = 64;
+
+/// Why a `CodecRegister` was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegisterError {
+    /// Empty, oversized (> 255 bytes) or non-graphic-ASCII name.
+    InvalidName,
+    /// The name is already taken (built-in alias or earlier dynamic).
+    DuplicateName(String),
+    /// The per-connection dynamic-codec budget is exhausted.
+    Full,
+    /// The 64-char table failed [`Alphabet::new`] validation.
+    Alphabet(AlphabetError),
+}
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::InvalidName => write!(f, "invalid codec name"),
+            Self::DuplicateName(name) => write!(f, "codec name already registered: {name}"),
+            Self::Full => write!(f, "codec registry full"),
+            Self::Alphabet(e) => write!(f, "invalid alphabet: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+/// Bidirectional name↔id codec map with dynamic registration.
+pub struct CodecRegistry {
+    by_name: HashMap<String, u16>,
+    by_id: HashMap<u16, (String, CodecSel)>,
+    next_id: u16,
+}
+
+impl Default for CodecRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CodecRegistry {
+    /// A registry holding the built-in codecs and their aliases.
+    pub fn new() -> Self {
+        let mut r = Self { by_name: HashMap::new(), by_id: HashMap::new(), next_id: DYNAMIC_BASE };
+        let builtins: [(u16, &str, CodecSel); 6] = [
+            (0, "standard", CodecSel::Base64(Alphabet::standard())),
+            (1, "url", CodecSel::Base64(Alphabet::url())),
+            (2, "imap", CodecSel::Base64(Alphabet::imap())),
+            (3, "hex", CodecSel::Hex),
+            (4, "base32", CodecSel::Base32(Base32Variant::Std)),
+            (5, "base32hex", CodecSel::Base32(Base32Variant::Hex)),
+        ];
+        for (id, name, sel) in builtins {
+            r.by_name.insert(name.to_string(), id);
+            r.by_id.insert(id, (name.to_string(), sel));
+        }
+        // Aliases resolve but don't occupy ids of their own.
+        r.by_name.insert("base64".to_string(), 0);
+        r.by_name.insert("base64url".to_string(), 1);
+        r.by_name.insert("base16".to_string(), 3);
+        r
+    }
+
+    /// Resolve a codec by wire name (built-in, alias or dynamic).
+    pub fn resolve(&self, name: &str) -> Option<CodecSel> {
+        let id = *self.by_name.get(name)?;
+        Some(self.by_id[&id].1.clone())
+    }
+
+    /// Resolve a codec by id.
+    pub fn resolve_id(&self, id: u16) -> Option<CodecSel> {
+        self.by_id.get(&id).map(|(_, sel)| sel.clone())
+    }
+
+    /// The id a name maps to (aliases resolve to the canonical id).
+    pub fn id_of(&self, name: &str) -> Option<u16> {
+        self.by_name.get(name).copied()
+    }
+
+    /// The canonical name for an id.
+    pub fn name_of(&self, id: u16) -> Option<&str> {
+        self.by_id.get(&id).map(|(name, _)| name.as_str())
+    }
+
+    /// Register a custom base64 alphabet under `name`, returning the
+    /// assigned id. The table is validated exactly like any other
+    /// [`Alphabet`]; the name must be 1–255 bytes of graphic ASCII and
+    /// not already taken.
+    pub fn register(
+        &mut self,
+        name: &str,
+        chars: &[u8; 64],
+        pad: u8,
+    ) -> Result<u16, RegisterError> {
+        if name.is_empty() || name.len() > 255 || !name.bytes().all(|b| b.is_ascii_graphic()) {
+            return Err(RegisterError::InvalidName);
+        }
+        if self.by_name.contains_key(name) {
+            return Err(RegisterError::DuplicateName(name.to_string()));
+        }
+        if self.next_id >= DYNAMIC_BASE + MAX_DYNAMIC {
+            return Err(RegisterError::Full);
+        }
+        // Dynamic names are runtime strings; `Alphabet` carries a
+        // static display name, so all customs share one. The registry
+        // keeps the real name for the listing.
+        let alphabet = Alphabet::new("custom", *chars, pad).map_err(RegisterError::Alphabet)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.by_name.insert(name.to_string(), id);
+        self.by_id.insert(id, (name.to_string(), CodecSel::Base64(alphabet)));
+        Ok(id)
+    }
+
+    /// All registered codecs as `(id, name)`, ordered by id (aliases
+    /// are not listed separately).
+    pub fn list(&self) -> Vec<(u16, String)> {
+        let mut v: Vec<(u16, String)> =
+            self.by_id.iter().map(|(&id, (name, _))| (id, name.clone())).collect();
+        v.sort_unstable_by_key(|&(id, _)| id);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_and_aliases_resolve() {
+        let r = CodecRegistry::new();
+        assert!(matches!(r.resolve("standard"), Some(CodecSel::Base64(_))));
+        assert_eq!(r.id_of("base64"), Some(0));
+        assert_eq!(r.id_of("base64url"), Some(1));
+        assert_eq!(r.id_of("base16"), r.id_of("hex"));
+        assert!(matches!(r.resolve("hex"), Some(CodecSel::Hex)));
+        assert!(matches!(r.resolve("base32"), Some(CodecSel::Base32(Base32Variant::Std))));
+        assert!(matches!(r.resolve("base32hex"), Some(CodecSel::Base32(Base32Variant::Hex))));
+        assert!(r.resolve("nope").is_none());
+        assert_eq!(r.list().len(), 6);
+    }
+
+    #[test]
+    fn register_and_resolve_custom() {
+        let mut r = CodecRegistry::new();
+        let mut chars = *Alphabet::standard().chars();
+        chars.swap(0, 1); // distinct table, still valid
+        let id = r.register("swapped", &chars, b'=').unwrap();
+        assert_eq!(id, DYNAMIC_BASE);
+        assert_eq!(r.name_of(id), Some("swapped"));
+        let Some(CodecSel::Base64(a)) = r.resolve("swapped") else { panic!() };
+        assert_eq!(a.chars(), &chars);
+        assert_eq!(r.list().len(), 7);
+        // Ids keep increasing.
+        let mut chars2 = chars;
+        chars2.swap(2, 3);
+        assert_eq!(r.register("swapped2", &chars2, b'=').unwrap(), DYNAMIC_BASE + 1);
+    }
+
+    #[test]
+    fn register_rejections() {
+        let mut r = CodecRegistry::new();
+        let chars = *Alphabet::standard().chars();
+        assert_eq!(r.register("", &chars, b'='), Err(RegisterError::InvalidName));
+        assert_eq!(r.register("has space", &chars, b'='), Err(RegisterError::InvalidName));
+        assert!(matches!(
+            r.register("standard", &chars, b'='),
+            Err(RegisterError::DuplicateName(_))
+        ));
+        assert!(matches!(
+            r.register("base64", &chars, b'='),
+            Err(RegisterError::DuplicateName(_))
+        ));
+        // Duplicate char in the table.
+        let mut bad = chars;
+        bad[1] = bad[0];
+        assert!(matches!(r.register("dup", &bad, b'='), Err(RegisterError::Alphabet(_))));
+        // Pad colliding with a table char.
+        assert!(matches!(r.register("padclash", &chars, b'A'), Err(RegisterError::Alphabet(_))));
+    }
+
+    #[test]
+    fn registry_fills_up() {
+        let mut r = CodecRegistry::new();
+        let base = *Alphabet::standard().chars();
+        for i in 0..MAX_DYNAMIC {
+            let mut chars = base;
+            chars.swap(0, 1 + (i as usize % 60));
+            r.register(&format!("c{i}"), &chars, b'=').unwrap();
+        }
+        assert_eq!(r.register("one-too-many", &base, b'='), Err(RegisterError::Full));
+    }
+}

@@ -41,10 +41,11 @@ use crate::base64::validate::{
     decode_quads_into, decode_tail, decode_tail_into, first_invalid, split_tail,
 };
 use crate::base64::{
-    decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, Whitespace,
-    B64_BLOCK, RAW_BLOCK,
+    decoded_len_upper, encoded_len, Alphabet, Codec, DecodeError, Engine, Mode, StorePolicy,
+    Whitespace, B64_BLOCK, RAW_BLOCK,
 };
 use super::sink::{FrameTooLarge, ResponseSink};
+use crate::codec::{Base32Codec, CodecSel, HexCodec};
 use crate::obs::clock::{ReqClock, RoutePath};
 
 /// What the caller wants done.
@@ -64,10 +65,11 @@ pub struct Request {
     pub id: u64,
     /// Operation to run.
     pub kind: RequestKind,
-    /// Input bytes (raw for encode, base64 characters otherwise).
+    /// Input bytes (raw for encode, encoded characters otherwise).
     pub payload: Vec<u8>,
-    /// Base64 variant.
-    pub alphabet: Alphabet,
+    /// Which codec runs the request (base64 variants ride the batcher;
+    /// hex/base32 route inline or engine-direct).
+    pub codec: CodecSel,
     /// Padding strictness for the decode side.
     pub mode: Mode,
     /// Whitespace the decode path skips (one-shot MIME bodies); ignored
@@ -83,7 +85,7 @@ impl Request {
             id,
             kind: RequestKind::Encode,
             payload,
-            alphabet: Alphabet::standard(),
+            codec: CodecSel::Base64(Alphabet::standard()),
             mode: Mode::Strict,
             ws: Whitespace::None,
         }
@@ -95,7 +97,7 @@ impl Request {
             id,
             kind: RequestKind::Decode,
             payload,
-            alphabet: Alphabet::standard(),
+            codec: CodecSel::Base64(Alphabet::standard()),
             mode: Mode::Strict,
             ws: Whitespace::None,
         }
@@ -104,6 +106,12 @@ impl Request {
     /// A decode request with a whitespace policy (the wire's 0x04 tag).
     pub fn decode_ws(id: u64, payload: Vec<u8>, ws: Whitespace) -> Self {
         Self { ws, ..Self::decode(id, payload) }
+    }
+
+    /// A strict request on an arbitrary codec (hex, base32, custom
+    /// base64 alphabets) — what the wire's codec negotiation resolves to.
+    pub fn with_codec(id: u64, kind: RequestKind, payload: Vec<u8>, codec: CodecSel) -> Self {
+        Self { id, kind, payload, codec, mode: Mode::Strict, ws: Whitespace::None }
     }
 }
 
@@ -231,6 +239,24 @@ impl Router {
         self.scheduler.flush();
     }
 
+    /// Tier choice for the non-batched codecs (hex/base32): below the
+    /// inline threshold run the temporal kernels (a store-policy dance
+    /// is not worth one small request, matching base64's inline block
+    /// codec); everything else goes engine-direct under the
+    /// environment's store policy. Returns `(policy, inline)` and
+    /// bumps the matching tier counter, so both reply paths report the
+    /// same metrics and `RoutePath`.
+    fn codec_tier(&self, len: usize) -> (StorePolicy, bool) {
+        let inline = len < self.inline_threshold;
+        Metrics::inc(
+            if inline { &self.metrics.inline_requests } else { &self.metrics.direct_requests },
+            1,
+        );
+        let policy =
+            if inline { StorePolicy::Temporal } else { crate::base64::stores::default_policy() };
+        (policy, inline)
+    }
+
     /// Process one request to completion (blocking). Callers run one
     /// request per thread; cross-request batching happens in the
     /// scheduler underneath.
@@ -255,12 +281,16 @@ impl Router {
         };
         if let Some(c) = clock {
             // Mirror of the routing conditions below: the `Vec` path has
-            // no engine-direct tier, so everything at or above the
-            // inline threshold coalesces through the batcher.
+            // no engine-direct tier for base64, so everything at or
+            // above the inline threshold coalesces through the batcher;
+            // hex/base32 never batch, so their large payloads go
+            // engine-direct on both paths.
             c.set_path(if request.payload.len() < self.inline_threshold {
                 RoutePath::Inline
-            } else {
+            } else if matches!(request.codec, CodecSel::Base64(_)) {
                 RoutePath::Batched
+            } else {
+                RoutePath::Direct
             });
         }
         let outcome = match request.kind {
@@ -372,12 +402,16 @@ impl Router {
         sink: &mut S,
         clock: Option<&ReqClock>,
     ) -> Result<SinkReply, FrameTooLarge> {
+        let alphabet = match &req.codec {
+            CodecSel::Base64(a) => a.clone(),
+            _ => return self.encode_codec_into(req, sink, clock),
+        };
         let payload = &req.payload;
         let total = encoded_len(payload.len());
         sink.begin_data(req.id);
         if payload.len() < self.inline_threshold {
             Metrics::inc(&self.metrics.inline_requests, 1);
-            let codec = crate::base64::block::BlockCodec::new(req.alphabet.clone());
+            let codec = crate::base64::block::BlockCodec::new(alphabet.clone());
             codec.encode_slice(payload, sink.grow(total));
             if let Some(c) = clock {
                 c.set_path(RoutePath::Inline);
@@ -391,7 +425,7 @@ impl Router {
         }
         if payload.len() >= self.direct_threshold {
             Metrics::inc(&self.metrics.direct_requests, 1);
-            let engine = self.engine_for(&req.alphabet, Mode::Strict);
+            let engine = self.engine_for(&alphabet, Mode::Strict);
             engine.encode_slice_policy(payload, sink.grow(total), engine.policy());
             if let Some(c) = clock {
                 c.set_path(RoutePath::Direct);
@@ -408,12 +442,12 @@ impl Router {
         let blocks_len = payload.len() / RAW_BLOCK * RAW_BLOCK;
         let rx = self.submit_blocks(
             Direction::Encode,
-            req.alphabet.encode_table().as_bytes().to_vec(),
+            alphabet.encode_table().as_bytes().to_vec(),
             payload[..blocks_len].to_vec(),
         );
         let head = blocks_len / 3 * 4;
         let out = sink.grow(total);
-        crate::base64::block::BlockCodec::new(req.alphabet.clone())
+        crate::base64::block::BlockCodec::new(alphabet)
             .encode_slice(&payload[blocks_len..], &mut out[head..]);
         match rx.recv().expect("scheduler always answers") {
             Ok(batch) => {
@@ -434,6 +468,67 @@ impl Router {
                 Ok(SinkReply::Error)
             }
         }
+    }
+
+    /// Sink-path hex/base32 encode: exact output size is known up
+    /// front, so the kernel fills the open frame in place exactly like
+    /// the base64 inline/direct tiers (non-temporal stores target the
+    /// socket-bound buffer on large payloads).
+    fn encode_codec_into<S: ResponseSink>(
+        &self,
+        req: &Request,
+        sink: &mut S,
+        clock: Option<&ReqClock>,
+    ) -> Result<SinkReply, FrameTooLarge> {
+        let payload = &req.payload;
+        let total = req.codec.encoded_len(payload.len());
+        let (policy, inline) = self.codec_tier(payload.len());
+        sink.begin_data(req.id);
+        let out = sink.grow(total);
+        match &req.codec {
+            CodecSel::Hex => {
+                HexCodec::new().encode_slice_policy(payload, out, policy);
+            }
+            CodecSel::Base32(v) => {
+                Base32Codec::new(*v).encode_slice_policy(payload, out, policy);
+            }
+            CodecSel::Base64(_) => unreachable!("base64 encodes on the batcher path"),
+        }
+        if let Some(c) = clock {
+            c.set_path(if inline { RoutePath::Inline } else { RoutePath::Direct });
+            c.stamp_kernel();
+        }
+        sink.commit()?;
+        if let Some(c) = clock {
+            c.stamp_sink();
+        }
+        Ok(SinkReply::Data(total))
+    }
+
+    /// Sink-path hex/base32 decode body (frame bracketing and the
+    /// validate trim live in [`Self::decode_into`], shared with base64).
+    fn decode_codec_into<S: ResponseSink>(
+        &self,
+        req: &Request,
+        sink: &mut S,
+        clock: Option<&ReqClock>,
+    ) -> Result<usize, SinkFail> {
+        let payload = &req.payload;
+        let (policy, inline) = self.codec_tier(payload.len());
+        let out = sink.grow(req.codec.decoded_len_upper(payload.len()));
+        let written = match &req.codec {
+            CodecSel::Hex => HexCodec::new().decode_slice_ws(payload, out, req.ws, policy),
+            CodecSel::Base32(v) => {
+                Base32Codec::new(*v).decode_slice_ws(payload, out, req.ws, req.mode, policy)
+            }
+            CodecSel::Base64(_) => unreachable!("base64 decodes on the batcher path"),
+        }
+        .map_err(SinkFail::Invalid)?;
+        if let Some(c) = clock {
+            c.set_path(if inline { RoutePath::Inline } else { RoutePath::Direct });
+            c.stamp_kernel();
+        }
+        Ok(written)
     }
 
     /// Sink-path decode/validate: open a data frame, decode into it,
@@ -481,6 +576,12 @@ impl Router {
         sink: &mut S,
         clock: Option<&ReqClock>,
     ) -> Result<usize, SinkFail> {
+        if !matches!(req.codec, CodecSel::Base64(_)) {
+            // Hex/base32: the codec's `decode_slice_ws` strips and
+            // rebases internally, so both reply paths share one code
+            // path and report identical errors.
+            return self.decode_codec_into(req, sink, clock);
+        }
         if req.ws == Whitespace::None {
             return self.decode_stripped_into(&req.payload, req, sink, clock);
         }
@@ -508,7 +609,9 @@ impl Router {
         sink: &mut S,
         clock: Option<&ReqClock>,
     ) -> Result<usize, SinkFail> {
-        let alphabet = &req.alphabet;
+        let CodecSel::Base64(alphabet) = &req.codec else {
+            unreachable!("non-base64 codecs branch off in decode_payload_into")
+        };
         if payload.len() < self.inline_threshold {
             Metrics::inc(&self.metrics.inline_requests, 1);
             let codec =
@@ -591,9 +694,56 @@ impl Router {
         Ok(w)
     }
 
-    fn run_encode(&self, request: &Request) -> Outcome {
+    /// `Vec`-path hex/base32 encode (no batcher tier — see
+    /// [`Self::codec_tier`]).
+    fn run_codec_encode(&self, request: &Request) -> Outcome {
         let payload = &request.payload;
-        let codec = crate::base64::block::BlockCodec::new(request.alphabet.clone());
+        let (policy, _) = self.codec_tier(payload.len());
+        let mut out = vec![0u8; request.codec.encoded_len(payload.len())];
+        match &request.codec {
+            CodecSel::Hex => {
+                HexCodec::new().encode_slice_policy(payload, &mut out, policy);
+            }
+            CodecSel::Base32(v) => {
+                Base32Codec::new(*v).encode_slice_policy(payload, &mut out, policy);
+            }
+            CodecSel::Base64(_) => unreachable!("base64 encodes on the batcher path"),
+        }
+        Outcome::Data(out)
+    }
+
+    /// `Vec`-path hex/base32 decode/validate.
+    fn run_codec_decode(&self, request: &Request, validate_only: bool) -> Outcome {
+        let payload = &request.payload;
+        let (policy, _) = self.codec_tier(payload.len());
+        let mut out = vec![0u8; request.codec.decoded_len_upper(payload.len())];
+        let r = match &request.codec {
+            CodecSel::Hex => HexCodec::new().decode_slice_ws(payload, &mut out, request.ws, policy),
+            CodecSel::Base32(v) => Base32Codec::new(*v).decode_slice_ws(
+                payload,
+                &mut out,
+                request.ws,
+                request.mode,
+                policy,
+            ),
+            CodecSel::Base64(_) => unreachable!("base64 decodes on the batcher path"),
+        };
+        match r {
+            Ok(_) if validate_only => Outcome::Valid,
+            Ok(n) => {
+                out.truncate(n);
+                Outcome::Data(out)
+            }
+            Err(e) => Outcome::Invalid(e),
+        }
+    }
+
+    fn run_encode(&self, request: &Request) -> Outcome {
+        let CodecSel::Base64(alphabet) = &request.codec else {
+            return self.run_codec_encode(request);
+        };
+        let payload = &request.payload;
+        let codec = crate::base64::block::BlockCodec::new(alphabet.clone());
         if payload.len() < self.inline_threshold {
             Metrics::inc(&self.metrics.inline_requests, 1);
             return Outcome::Data(codec.encode(payload));
@@ -601,7 +751,7 @@ impl Router {
         let blocks_len = payload.len() / RAW_BLOCK * RAW_BLOCK;
         let rx = self.submit_blocks(
             Direction::Encode,
-            request.alphabet.encode_table().as_bytes().to_vec(),
+            alphabet.encode_table().as_bytes().to_vec(),
             payload[..blocks_len].to_vec(),
         );
         // Overlap: compute the scalar epilogue while the batch is in flight.
@@ -618,6 +768,9 @@ impl Router {
     }
 
     fn run_decode(&self, request: &Request, validate_only: bool) -> Outcome {
+        if !matches!(request.codec, CodecSel::Base64(_)) {
+            return self.run_codec_decode(request, validate_only);
+        }
         if request.ws == Whitespace::None {
             return self.run_decode_stripped(&request.payload, request, validate_only);
         }
@@ -648,7 +801,9 @@ impl Router {
         request: &Request,
         validate_only: bool,
     ) -> Outcome {
-        let alphabet = &request.alphabet;
+        let CodecSel::Base64(alphabet) = &request.codec else {
+            unreachable!("non-base64 codecs branch off in run_decode")
+        };
         let codec = crate::base64::block::BlockCodec::with_mode(alphabet.clone(), request.mode);
         if payload.len() < self.inline_threshold {
             Metrics::inc(&self.metrics.inline_requests, 1);
@@ -828,7 +983,7 @@ mod tests {
             id: 5,
             kind: RequestKind::Validate,
             payload: enc.clone(),
-            alphabet: Alphabet::standard(),
+            codec: CodecSel::Base64(Alphabet::standard()),
             mode: Mode::Strict,
             ws: Whitespace::None,
         });
@@ -839,7 +994,7 @@ mod tests {
             id: 6,
             kind: RequestKind::Validate,
             payload: bad,
-            alphabet: Alphabet::standard(),
+            codec: CodecSel::Base64(Alphabet::standard()),
             mode: Mode::Strict,
             ws: Whitespace::None,
         });
@@ -855,7 +1010,7 @@ mod tests {
             id: 7,
             kind: RequestKind::Encode,
             payload: data.clone(),
-            alphabet: url.clone(),
+            codec: CodecSel::Base64(url.clone()),
             mode: Mode::Strict,
             ws: Whitespace::None,
         });
@@ -865,7 +1020,7 @@ mod tests {
             id: 8,
             kind: RequestKind::Decode,
             payload: enc,
-            alphabet: url,
+            codec: CodecSel::Base64(url),
             mode: Mode::Strict,
             ws: Whitespace::None,
         });
@@ -913,6 +1068,66 @@ mod tests {
             wrapped[pos] = orig;
         }
         let _ = reference;
+    }
+
+    #[test]
+    fn hex_and_base32_requests_round_trip() {
+        use crate::codec::Base32Variant;
+        let rt = router();
+        for len in [0usize, 1, 4, 63, 64, 500, 5000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 29 % 256) as u8).collect();
+            let hexed = expect_data(rt.process(Request::with_codec(
+                1,
+                RequestKind::Encode,
+                data.clone(),
+                CodecSel::Hex,
+            )));
+            assert_eq!(hexed, HexCodec::new().encode(&data), "len={len}");
+            let back = expect_data(rt.process(Request::with_codec(
+                2,
+                RequestKind::Decode,
+                hexed,
+                CodecSel::Hex,
+            )));
+            assert_eq!(back, data, "len={len}");
+            for v in [Base32Variant::Std, Base32Variant::Hex] {
+                let enc = expect_data(rt.process(Request::with_codec(
+                    3,
+                    RequestKind::Encode,
+                    data.clone(),
+                    CodecSel::Base32(v),
+                )));
+                assert_eq!(enc, Base32Codec::new(v).encode(&data), "len={len}");
+                let back = expect_data(rt.process(Request::with_codec(
+                    4,
+                    RequestKind::Decode,
+                    enc,
+                    CodecSel::Base32(v),
+                )));
+                assert_eq!(back, data, "len={len} variant={v:?}");
+            }
+        }
+        // Never batched: every request above lands inline or direct.
+        let m = rt.metrics();
+        assert_eq!(m.batches.load(Ordering::Relaxed), 0);
+        assert!(m.direct_requests.load(Ordering::Relaxed) > 0);
+        // Errors carry exact offsets through the router.
+        let resp = rt.process(Request::with_codec(
+            5,
+            RequestKind::Decode,
+            b"66 6F".to_vec(),
+            CodecSel::Hex,
+        ));
+        match resp.outcome {
+            Outcome::Invalid(DecodeError::InvalidByte { offset: 2, byte: b' ' }) => {}
+            other => panic!("{other:?}"),
+        }
+        // ...and whitespace policies rebase onto the original payload.
+        let req = Request {
+            ws: Whitespace::All,
+            ..Request::with_codec(6, RequestKind::Decode, b"66 6F 6F".to_vec(), CodecSel::Hex)
+        };
+        assert_eq!(expect_data(rt.process(req)), b"foo");
     }
 
     #[test]
@@ -973,7 +1188,7 @@ mod tests {
                 id: 3,
                 kind: RequestKind::Validate,
                 payload: enc.clone(),
-                alphabet: Alphabet::standard(),
+                codec: CodecSel::Base64(Alphabet::standard()),
                 mode: Mode::Strict,
                 ws: Whitespace::None,
             });
@@ -982,6 +1197,27 @@ mod tests {
                 let n = bad.len();
                 bad[n / 2] = b'#';
                 catalogue.push(Request::decode(4, bad));
+            }
+            // Hex and base32 ride the same sink machinery (inline and
+            // engine-direct tiers only); the frames must stay identical
+            // too, including error frames.
+            catalogue.push(Request::with_codec(7, RequestKind::Encode, data.clone(), CodecSel::Hex));
+            let hexed = crate::codec::HexCodec::new().encode(&data);
+            catalogue.push(Request::with_codec(7, RequestKind::Decode, hexed.clone(), CodecSel::Hex));
+            catalogue.push(Request::with_codec(7, RequestKind::Validate, hexed.clone(), CodecSel::Hex));
+            let b32sel = CodecSel::Base32(crate::codec::Base32Variant::Std);
+            catalogue.push(Request::with_codec(8, RequestKind::Encode, data.clone(), b32sel.clone()));
+            let b32 = Base32Codec::new(crate::codec::Base32Variant::Std).encode(&data);
+            catalogue.push(Request::with_codec(8, RequestKind::Decode, b32.clone(), b32sel.clone()));
+            if len >= 4 {
+                let mut bad = hexed;
+                let n = bad.len();
+                bad[n / 2] = b'#';
+                catalogue.push(Request::with_codec(7, RequestKind::Decode, bad, CodecSel::Hex));
+                let mut bad = b32;
+                let n = bad.len();
+                bad[n / 2] = b'!';
+                catalogue.push(Request::with_codec(8, RequestKind::Decode, bad, b32sel));
             }
             if len > 0 {
                 let mut wrapped = vec![0u8; e.encoded_wrapped_len(len, 76)];
@@ -1000,7 +1236,7 @@ mod tests {
                 id: req.id,
                 kind: req.kind,
                 payload: req.payload.clone(),
-                alphabet: req.alphabet.clone(),
+                codec: req.codec.clone(),
                 mode: req.mode,
                 ws: req.ws,
             };

@@ -10,6 +10,7 @@ use std::collections::HashMap;
 
 use crate::base64::streaming::{StreamingDecoder, StreamingEncoder};
 use crate::base64::{Alphabet, DecodeError, Mode, Whitespace};
+use crate::codec::{CodecRegistry, CodecSel, CodecStreamDecoder, CodecStreamEncoder};
 
 /// Direction-specific stream state.
 pub enum StreamState {
@@ -17,6 +18,10 @@ pub enum StreamState {
     Encode(StreamingEncoder),
     /// A decode stream (base64 in, raw bytes out).
     Decode(StreamingDecoder),
+    /// A hex/base32 encode stream.
+    CodecEncode(CodecStreamEncoder),
+    /// A hex/base32 decode stream.
+    CodecDecode(CodecStreamDecoder),
 }
 
 /// Errors from the stream registry.
@@ -39,6 +44,12 @@ pub enum StreamError {
         /// The rejected line length.
         line_len: usize,
     },
+    /// CRLF wrapping was requested on a codec that does not support it
+    /// (only base64 encode streams wrap).
+    WrapUnsupported {
+        /// The codec's wire name.
+        codec: &'static str,
+    },
     /// The stream's decoder rejected its input.
     Decode(DecodeError),
 }
@@ -53,6 +64,9 @@ impl std::fmt::Display for StreamError {
             Self::InvalidWrap { line_len } => {
                 write!(f, "invalid wrap line length {line_len} (want a positive multiple of 4)")
             }
+            Self::WrapUnsupported { codec } => {
+                write!(f, "codec {codec} does not support wrapped output")
+            }
             Self::Decode(e) => write!(f, "stream decode error: {e}"),
         }
     }
@@ -60,16 +74,30 @@ impl std::fmt::Display for StreamError {
 
 impl std::error::Error for StreamError {}
 
-/// Open streams of one session/connection.
+/// Open streams of one session/connection, plus the connection's codec
+/// registry (built-ins and dynamically registered alphabets — wire
+/// names resolve against this, so one client's custom codec never leaks
+/// into another connection).
 pub struct SessionState {
     streams: HashMap<u64, StreamState>,
     max_streams: usize,
+    codecs: CodecRegistry,
 }
 
 impl SessionState {
     /// A session allowing up to `max_streams` concurrently open streams.
     pub fn new(max_streams: usize) -> Self {
-        Self { streams: HashMap::new(), max_streams }
+        Self { streams: HashMap::new(), max_streams, codecs: CodecRegistry::new() }
+    }
+
+    /// The connection's codec registry (name→codec resolution).
+    pub fn codecs(&self) -> &CodecRegistry {
+        &self.codecs
+    }
+
+    /// Mutable registry access (`CodecRegister` handling).
+    pub fn codecs_mut(&mut self) -> &mut CodecRegistry {
+        &mut self.codecs
     }
 
     /// Open a flat encode stream under `id`.
@@ -110,6 +138,58 @@ impl SessionState {
         self.open(id, StreamState::Decode(StreamingDecoder::with_policy(alphabet, mode, ws)))
     }
 
+    /// Open an encode stream on an arbitrary codec — the
+    /// negotiated-codec generalization of [`Self::open_encode`].
+    /// `line_len` non-zero requests CRLF wrapping, which only base64
+    /// encode streams support.
+    pub fn open_codec_encode(
+        &mut self,
+        id: u64,
+        codec: CodecSel,
+        line_len: usize,
+    ) -> Result<(), StreamError> {
+        match codec {
+            CodecSel::Base64(a) => {
+                if line_len != 0 {
+                    self.open_encode_wrapped(id, a, line_len)
+                } else {
+                    self.open_encode(id, a)
+                }
+            }
+            CodecSel::Hex => {
+                if line_len != 0 {
+                    return Err(StreamError::WrapUnsupported { codec: "hex" });
+                }
+                self.open(id, StreamState::CodecEncode(CodecStreamEncoder::hex()))
+            }
+            CodecSel::Base32(v) => {
+                if line_len != 0 {
+                    return Err(StreamError::WrapUnsupported { codec: v.name() });
+                }
+                self.open(id, StreamState::CodecEncode(CodecStreamEncoder::base32(v)))
+            }
+        }
+    }
+
+    /// Decode-direction twin of [`Self::open_codec_encode`].
+    pub fn open_codec_decode(
+        &mut self,
+        id: u64,
+        codec: CodecSel,
+        mode: Mode,
+        ws: Whitespace,
+    ) -> Result<(), StreamError> {
+        match codec {
+            CodecSel::Base64(a) => self.open_decode_ws(id, a, mode, ws),
+            CodecSel::Hex => {
+                self.open(id, StreamState::CodecDecode(CodecStreamDecoder::hex(ws)))
+            }
+            CodecSel::Base32(v) => {
+                self.open(id, StreamState::CodecDecode(CodecStreamDecoder::base32(v, mode, ws)))
+            }
+        }
+    }
+
     fn open(&mut self, id: u64, state: StreamState) -> Result<(), StreamError> {
         if self.streams.len() >= self.max_streams {
             return Err(StreamError::TooManyStreams { limit: self.max_streams });
@@ -127,7 +207,14 @@ impl SessionState {
         let mut out = Vec::new();
         match state {
             StreamState::Encode(enc) => enc.update(data, &mut out),
+            StreamState::CodecEncode(enc) => enc.update(data, &mut out),
             StreamState::Decode(dec) => {
+                if let Err(e) = dec.update(data, &mut out) {
+                    self.streams.remove(&id);
+                    return Err(StreamError::Decode(e));
+                }
+            }
+            StreamState::CodecDecode(dec) => {
                 if let Err(e) = dec.update(data, &mut out) {
                     self.streams.remove(&id);
                     return Err(StreamError::Decode(e));
@@ -145,7 +232,13 @@ impl SessionState {
             StreamState::Encode(enc) => {
                 enc.finish(&mut out);
             }
+            StreamState::CodecEncode(enc) => {
+                enc.finish(&mut out);
+            }
             StreamState::Decode(dec) => {
+                dec.finish(&mut out).map_err(StreamError::Decode)?;
+            }
+            StreamState::CodecDecode(dec) => {
                 dec.finish(&mut out).map_err(StreamError::Decode)?;
             }
         }
@@ -262,6 +355,60 @@ mod tests {
             Err(StreamError::InvalidWrap { line_len: 0 })
         );
         assert_eq!(s.open_count(), 0);
+    }
+
+    #[test]
+    fn codec_streams_round_trip_and_reject_wrap() {
+        use crate::codec::{Base32Codec, Base32Variant, HexCodec};
+        let data: Vec<u8> = (0..700u32).map(|i| (i * 11 % 256) as u8).collect();
+        let mut s = SessionState::new(8);
+        s.open_codec_encode(1, CodecSel::Hex, 0).unwrap();
+        s.open_codec_encode(2, CodecSel::Base32(Base32Variant::Std), 0).unwrap();
+        let (mut hexed, mut b32) = (Vec::new(), Vec::new());
+        for chunk in data.chunks(13) {
+            hexed.extend(s.chunk(1, chunk).unwrap());
+            b32.extend(s.chunk(2, chunk).unwrap());
+        }
+        hexed.extend(s.finish(1).unwrap());
+        b32.extend(s.finish(2).unwrap());
+        assert_eq!(hexed, HexCodec::new().encode(&data));
+        assert_eq!(b32, Base32Codec::new(Base32Variant::Std).encode(&data));
+
+        s.open_codec_decode(3, CodecSel::Hex, Mode::Strict, Whitespace::None).unwrap();
+        s.open_codec_decode(4, CodecSel::Base32(Base32Variant::Std), Mode::Strict, Whitespace::None)
+            .unwrap();
+        let (mut d1, mut d2) = (Vec::new(), Vec::new());
+        for chunk in hexed.chunks(17) {
+            d1.extend(s.chunk(3, chunk).unwrap());
+        }
+        for chunk in b32.chunks(17) {
+            d2.extend(s.chunk(4, chunk).unwrap());
+        }
+        d1.extend(s.finish(3).unwrap());
+        d2.extend(s.finish(4).unwrap());
+        assert_eq!(d1, data);
+        assert_eq!(d2, data);
+
+        // Wrap requests on non-base64 codecs are typed errors, and a
+        // base64 codec selection still wraps.
+        assert_eq!(
+            s.open_codec_encode(5, CodecSel::Hex, 76),
+            Err(StreamError::WrapUnsupported { codec: "hex" })
+        );
+        assert_eq!(
+            s.open_codec_encode(5, CodecSel::Base32(Base32Variant::Hex), 76),
+            Err(StreamError::WrapUnsupported { codec: "base32hex" })
+        );
+        assert!(s.open_codec_encode(5, CodecSel::Base64(Alphabet::standard()), 76).is_ok());
+        assert_eq!(s.open_count(), 1);
+    }
+
+    #[test]
+    fn codec_decode_stream_error_closes_stream() {
+        let mut s = SessionState::new(4);
+        s.open_codec_decode(6, CodecSel::Hex, Mode::Strict, Whitespace::None).unwrap();
+        assert!(matches!(s.chunk(6, b"6fZZ"), Err(StreamError::Decode(_))));
+        assert_eq!(s.chunk(6, b"6f"), Err(StreamError::UnknownStream(6)));
     }
 
     #[test]

@@ -80,6 +80,7 @@
 #![warn(missing_docs)]
 
 pub mod base64;
+pub mod codec;
 pub mod coordinator;
 pub mod net;
 pub mod obs;

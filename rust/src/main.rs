@@ -1,8 +1,8 @@
 //! `b64simd` CLI — leader entrypoint for the codec service and tools.
 //!
 //! ```text
-//! b64simd encode [--alphabet NAME] [--stores POLICY] [--in FILE] [--out FILE]
-//! b64simd decode [--alphabet NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
+//! b64simd encode [--alphabet NAME | --codec NAME] [--stores POLICY] [--in FILE] [--out FILE]
+//! b64simd decode [--alphabet NAME | --codec NAME] [--forgiving] [--stores POLICY] [--in FILE] [--out FILE]
 //! b64simd serve  [--addr HOST:PORT] [--workers N] [--backend native|rust|pjrt]
 //!                [--transport epoll|threaded] [--net-workers N] [--max-conns N]
 //!                [--reactors N] [--zerocopy 0|1] [--http HOST:PORT]
@@ -17,11 +17,17 @@
 //! `B64SIMD_TIER=avx512|avx2|swar|scalar` to force a tier. `--stores
 //! temporal|nontemporal|auto|auto:<bytes>` (or `B64SIMD_STORES`) picks
 //! the store policy for >LLC payloads — see `base64::stores`.
+//!
+//! `--codec NAME` selects any built-in registry codec — `standard`,
+//! `url`, `imap`, `base64`, `base64url`, `hex`/`base16`, `base32`,
+//! `base32hex` — through the same tier-dispatched kernels; `--alphabet`
+//! keeps its base64-only meaning.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
 
 use b64simd::base64::{block::BlockCodec, Alphabet, Codec, Engine, Mode};
+use b64simd::codec::{Base32Codec, CodecRegistry, CodecSel, HexCodec};
 use b64simd::coordinator::backend::{native_factory, pjrt_factory, rust_factory};
 use b64simd::coordinator::{Router, RouterConfig};
 use b64simd::perfmodel::cache::{CacheModel, Machine, Op};
@@ -98,6 +104,29 @@ fn alphabet_arg(args: &Args) -> anyhow::Result<Alphabet> {
     Alphabet::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown alphabet '{name}'"))
 }
 
+/// Resolve `--codec` / `--alphabet` into a codec selector. `--codec`
+/// accepts every built-in registry name (including `hex` and the two
+/// base32 variants); `--alphabet` keeps its base64-only behaviour.
+fn codec_arg(args: &Args) -> anyhow::Result<CodecSel> {
+    match (args.get("codec"), args.get("alphabet")) {
+        (Some(_), Some(_)) => anyhow::bail!("pass --alphabet or --codec, not both"),
+        (Some(name), None) => CodecRegistry::new()
+            .resolve(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown codec '{name}'")),
+        (None, _) => Ok(CodecSel::Base64(alphabet_arg(args)?)),
+    }
+}
+
+/// The `--stores` override for the non-base64 codecs, else the
+/// process-wide default (`B64SIMD_STORES` / auto-at-LLC).
+fn stores_arg(args: &Args) -> anyhow::Result<b64simd::base64::StorePolicy> {
+    match args.get("stores") {
+        Some(v) => b64simd::base64::StorePolicy::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown store policy '{v}'")),
+        None => Ok(b64simd::base64::stores::default_policy()),
+    }
+}
+
 /// Apply a `--stores temporal|nontemporal|auto|auto:<bytes>` override to
 /// a freshly built engine (the env override stays the default).
 fn apply_stores_arg(engine: &mut Engine, args: &Args) -> anyhow::Result<()> {
@@ -110,16 +139,35 @@ fn apply_stores_arg(engine: &mut Engine, args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_encode(args: &Args) -> anyhow::Result<()> {
-    let mut codec = Engine::new(alphabet_arg(args)?);
-    apply_stores_arg(&mut codec, args)?;
+    let sel = codec_arg(args)?;
     let data = read_input(args)?;
-    write_output(args, &codec.encode(&data))
+    let out = match sel {
+        CodecSel::Base64(alphabet) => {
+            let mut codec = Engine::new(alphabet);
+            apply_stores_arg(&mut codec, args)?;
+            codec.encode(&data)
+        }
+        CodecSel::Hex => {
+            let codec = HexCodec::new();
+            let mut out = vec![0u8; b64simd::codec::hex::encoded_len(data.len())];
+            let n = codec.encode_slice_policy(&data, &mut out, stores_arg(args)?);
+            out.truncate(n);
+            out
+        }
+        CodecSel::Base32(variant) => {
+            let codec = Base32Codec::new(variant);
+            let mut out = vec![0u8; b64simd::codec::base32::encoded_len(data.len())];
+            let n = codec.encode_slice_policy(&data, &mut out, stores_arg(args)?);
+            out.truncate(n);
+            out
+        }
+    };
+    write_output(args, &out)
 }
 
 fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+    let sel = codec_arg(args)?;
     let mode = if args.has("forgiving") { Mode::Forgiving } else { Mode::Strict };
-    let mut codec = Engine::with_mode(alphabet_arg(args)?, mode);
-    apply_stores_arg(&mut codec, args)?;
     let mut data = read_input(args)?;
     // Terminal convenience: strip one trailing newline.
     if data.last() == Some(&b'\n') {
@@ -128,7 +176,31 @@ fn cmd_decode(args: &Args) -> anyhow::Result<()> {
             data.pop();
         }
     }
-    let decoded = codec.decode(&data).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let decoded = match sel {
+        CodecSel::Base64(alphabet) => {
+            let mut codec = Engine::with_mode(alphabet, mode);
+            apply_stores_arg(&mut codec, args)?;
+            codec.decode(&data).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+        CodecSel::Hex => {
+            let codec = HexCodec::new();
+            let mut out = vec![0u8; b64simd::codec::hex::decoded_len(data.len())];
+            let n = codec
+                .decode_slice_policy(&data, &mut out, stores_arg(args)?)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            out.truncate(n);
+            out
+        }
+        CodecSel::Base32(variant) => {
+            let codec = Base32Codec::new(variant);
+            let mut out = vec![0u8; b64simd::codec::base32::decoded_len_upper(data.len())];
+            let n = codec
+                .decode_slice_policy(&data, &mut out, mode, stores_arg(args)?)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            out.truncate(n);
+            out
+        }
+    };
     write_output(args, &decoded)
 }
 

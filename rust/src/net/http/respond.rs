@@ -21,11 +21,14 @@
 //!   per shard).
 //!
 //! Query parameters (`alphabet=standard|url|imap`,
-//! `mode=strict|forgiving`, `ws=none|crlf|all`, `wrap=<n>`) are plain
-//! ASCII tokens, deliberately resolved against
-//! [`Alphabet::by_name`] rather than the native protocol's resolver so
-//! the gateway depends on base64 + coordinator only (the documented
-//! layer order).
+//! `codec=<registry name>`, `mode=strict|forgiving`, `ws=none|crlf|all`,
+//! `wrap=<n>`) are plain ASCII tokens. `alphabet=` keeps resolving
+//! against [`Alphabet::by_name`] exactly as before; the `codec=`
+//! parameter resolves against the connection's
+//! [`crate::codec::CodecRegistry`] instead, which adds `hex`, the two
+//! base32 variants, and any alphabets registered on this connection via
+//! `POST /codecs` (`?name=<name>&pad=<byte>` with the 64-byte table as
+//! the body; `GET /codecs` lists the registry as `id name` rows).
 //!
 //! Error model: one response per request, always. A request whose
 //! *head* is unroutable or ill-parameterized gets its full error
@@ -40,6 +43,7 @@ use std::time::Instant;
 
 use crate::base64::mime::MimeCodec;
 use crate::base64::{Alphabet, Mode, Whitespace};
+use crate::codec::CodecSel;
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Request, RequestKind, Router};
 use crate::obs::clock::ReqClock;
@@ -94,7 +98,7 @@ pub fn respond_clocked(
         }
         HttpJob::Request(req) => {
             Metrics::inc(&metrics.http_requests, 1);
-            handle_request(req, router, draining, buf, clock)
+            handle_request(req, router, session, draining, buf, clock)
         }
         HttpJob::StreamBegin(req) => {
             Metrics::inc(&metrics.http_requests, 1);
@@ -159,6 +163,7 @@ pub fn respond_clocked(
 fn handle_request(
     req: HttpRequest,
     router: &Router,
+    session: &mut SessionState,
     draining: bool,
     mut buf: Vec<u8>,
     clock: Option<&ReqClock>,
@@ -202,13 +207,53 @@ fn handle_request(
             (buf, close)
         }
         (Method::Post, "/encode") => {
-            codec_request(req, router, CodecRoute::Encode, close, buf, clock)
+            codec_request(req, router, session, CodecRoute::Encode, close, buf, clock)
         }
         (Method::Post, "/datauri") => {
-            codec_request(req, router, CodecRoute::DataUri, close, buf, clock)
+            codec_request(req, router, session, CodecRoute::DataUri, close, buf, clock)
         }
         (Method::Post, "/decode") => {
-            codec_request(req, router, CodecRoute::Decode, close, buf, clock)
+            codec_request(req, router, session, CodecRoute::Decode, close, buf, clock)
+        }
+        (Method::Get, "/codecs") => {
+            // The connection's codec registry as plain `id name` rows —
+            // built-ins first, then this connection's registrations.
+            let mut body = String::new();
+            for (id, name) in session.codecs().list() {
+                body.push_str(&format!("{id} {name}\n"));
+            }
+            write_response(&mut buf, 200, "OK", "text/plain", &[], body.as_bytes(), close);
+            stamp(clock);
+            (buf, close)
+        }
+        (Method::Post, "/codecs") => {
+            // Register a custom base64 alphabet: `?name=<name>` and an
+            // optional `?pad=<decimal byte>` (default '='), the 64-byte
+            // table as the request body. Success answers the assigned
+            // id; the name is then usable in `codec=` on this
+            // connection, mirroring the native CodecRegister frame.
+            let reply = register_codec(&req, session);
+            match reply {
+                Ok(id) => write_simple(&mut buf, 200, "OK", &format!("{id}\n"), close),
+                Err(message) => {
+                    write_simple(&mut buf, 400, "Bad Request", &format!("{message}\n"), close)
+                }
+            }
+            stamp(clock);
+            (buf, close)
+        }
+        (_, "/codecs") => {
+            write_response(
+                &mut buf,
+                405,
+                "Method Not Allowed",
+                "text/plain",
+                &[("Allow", "GET, POST")],
+                b"method not allowed\n",
+                close,
+            );
+            stamp(clock);
+            (buf, close)
         }
         (_, "/healthz" | "/metrics" | "/debug/trace") => {
             write_response(
@@ -244,6 +289,19 @@ fn handle_request(
     }
 }
 
+/// Validate and apply a `POST /codecs` registration against the
+/// connection's registry; `Ok` carries the assigned codec id.
+fn register_codec(req: &HttpRequest, session: &mut SessionState) -> Result<u16, String> {
+    let name = req.query_param("name").ok_or("missing name parameter")?.to_string();
+    let pad = match req.query_param("pad") {
+        None => b'=',
+        Some(v) => v.parse::<u8>().map_err(|_| format!("bad pad value: {v}"))?,
+    };
+    let chars: [u8; 64] =
+        req.body[..].try_into().map_err(|_| "codec table must be 64 bytes".to_string())?;
+    session.codecs_mut().register(&name, &chars, pad).map_err(|e| e.to_string())
+}
+
 /// The three codec routes.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum CodecRoute {
@@ -257,12 +315,13 @@ enum CodecRoute {
 fn codec_request(
     req: HttpRequest,
     router: &Router,
+    session: &SessionState,
     route: CodecRoute,
     close: bool,
     mut buf: Vec<u8>,
     clock: Option<&ReqClock>,
 ) -> (Vec<u8>, bool) {
-    let params = match Params::of(&req, route) {
+    let params = match Params::of(&req, route, session) {
         Ok(p) => p,
         Err(message) => {
             write_simple(&mut buf, 400, "Bad Request", &format!("{message}\n"), close);
@@ -274,7 +333,12 @@ fn codec_request(
         // path encodes via the codec directly. Bodies here are bounded
         // by the buffering threshold, so a Content-Length response is
         // simplest. Building the codec validates the wrap value.
-        let codec = match MimeCodec::new(params.alphabet).with_line_len(wrap) {
+        // Params rejects wrap on non-base64 codecs, so the alphabet is
+        // always extractable here.
+        let CodecSel::Base64(alphabet) = params.codec else {
+            unreachable!("Params rejects wrap on non-base64 codecs")
+        };
+        let codec = match MimeCodec::new(alphabet).with_line_len(wrap) {
             Ok(c) => c,
             Err(e) => {
                 write_simple(&mut buf, 400, "Bad Request", &format!("{e}\n"), close);
@@ -305,7 +369,7 @@ fn codec_request(
         id: 0,
         kind,
         payload: req.body,
-        alphabet: params.alphabet,
+        codec: params.codec,
         mode: params.mode,
         ws: params.ws,
     };
@@ -338,7 +402,13 @@ fn stream_begin(
         (Method::Post, "/encode") => CodecRoute::Encode,
         (Method::Post, "/datauri") => CodecRoute::DataUri,
         (Method::Post, "/decode") => CodecRoute::Decode,
-        (_, "/encode" | "/decode" | "/datauri" | "/healthz" | "/metrics") => {
+        (Method::Post, "/codecs") => {
+            // Registration tables are 64 bytes; a body large enough to
+            // stream (or chunked framing) is never a valid table.
+            write_simple(&mut buf, 400, "Bad Request", "codec table must be 64 bytes\n", close);
+            return (buf, false);
+        }
+        (_, "/encode" | "/decode" | "/datauri" | "/healthz" | "/metrics" | "/codecs") => {
             write_simple(&mut buf, 405, "Method Not Allowed", "method not allowed\n", close);
             return (buf, false);
         }
@@ -347,7 +417,7 @@ fn stream_begin(
             return (buf, false);
         }
     };
-    let params = match Params::of(&req, route) {
+    let params = match Params::of(&req, route, session) {
         Ok(p) => p,
         Err(message) => {
             write_simple(&mut buf, 400, "Bad Request", &format!("{message}\n"), close);
@@ -356,13 +426,16 @@ fn stream_begin(
     };
     let opened = match (route, params.wrap) {
         (CodecRoute::Encode, Some(wrap)) => {
-            session.open_encode_wrapped(HTTP_STREAM_ID, params.alphabet, wrap)
+            // Params rejects wrap on non-base64 codecs, and
+            // `open_codec_encode` routes base64-with-wrap through the
+            // wrapped encoder.
+            session.open_codec_encode(HTTP_STREAM_ID, params.codec, wrap)
         }
         (CodecRoute::Encode | CodecRoute::DataUri, None) => {
-            session.open_encode(HTTP_STREAM_ID, params.alphabet)
+            session.open_codec_encode(HTTP_STREAM_ID, params.codec, 0)
         }
         (CodecRoute::Decode, None) => {
-            session.open_decode_ws(HTTP_STREAM_ID, params.alphabet, params.mode, params.ws)
+            session.open_codec_decode(HTTP_STREAM_ID, params.codec, params.mode, params.ws)
         }
         (CodecRoute::DataUri | CodecRoute::Decode, Some(_)) => unreachable!("Params rejects wrap"),
     };
@@ -389,20 +462,34 @@ fn stream_begin(
 
 /// Validated query parameters of a codec request.
 struct Params {
-    alphabet: Alphabet,
+    codec: CodecSel,
     mode: Mode,
     ws: Whitespace,
     wrap: Option<usize>,
 }
 
 impl Params {
-    fn of(req: &HttpRequest, route: CodecRoute) -> Result<Params, String> {
-        let alphabet = match req.query_param("alphabet") {
-            None => Alphabet::standard(),
-            Some(name) => {
-                Alphabet::by_name(name).ok_or_else(|| format!("unknown alphabet: {name}"))?
+    fn of(req: &HttpRequest, route: CodecRoute, session: &SessionState) -> Result<Params, String> {
+        // `alphabet=` keeps its pre-registry resolution (the three
+        // built-in base64 alphabets); `codec=` resolves against the
+        // connection's registry, which also covers hex, base32 and any
+        // names registered over `POST /codecs`.
+        let codec = match (req.query_param("alphabet"), req.query_param("codec")) {
+            (Some(_), Some(_)) => {
+                return Err("specify alphabet or codec, not both".to_string());
             }
+            (Some(name), None) => CodecSel::Base64(
+                Alphabet::by_name(name).ok_or_else(|| format!("unknown alphabet: {name}"))?,
+            ),
+            (None, Some(name)) => session
+                .codecs()
+                .resolve(name)
+                .ok_or_else(|| format!("unknown codec: {name}"))?,
+            (None, None) => CodecSel::Base64(Alphabet::standard()),
         };
+        if route == CodecRoute::DataUri && !matches!(codec, CodecSel::Base64(_)) {
+            return Err(format!("data URIs require a base64 codec, not {}", codec.name()));
+        }
         let mode = match req.query_param("mode") {
             None | Some("strict") => Mode::Strict,
             Some("forgiving") => Mode::Forgiving,
@@ -421,13 +508,16 @@ impl Params {
         if wrap.is_some() && route != CodecRoute::Encode {
             return Err("wrap is only valid on /encode".to_string());
         }
+        if wrap.is_some() && !matches!(codec, CodecSel::Base64(_)) {
+            return Err(format!("codec {} does not support wrapped output", codec.name()));
+        }
         if route == CodecRoute::Decode {
-            Ok(Params { alphabet, mode, ws, wrap })
+            Ok(Params { codec, mode, ws, wrap })
         } else {
             if req.query_param("mode").is_some() || req.query_param("ws").is_some() {
                 return Err("mode/ws are only valid on /decode".to_string());
             }
-            Ok(Params { alphabet, mode: Mode::Strict, ws: Whitespace::None, wrap })
+            Ok(Params { codec, mode: Mode::Strict, ws: Whitespace::None, wrap })
         }
     }
 }
@@ -837,6 +927,83 @@ mod tests {
         let (head, _, _) = run(&rt, post("/encode?wrap=76", &[0xA5u8; 64]));
         assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
         assert!(rt.metrics().latency.count() > before);
+    }
+
+    #[test]
+    fn codec_param_routes_hex_and_base32() {
+        let rt = router();
+        let data = b"foobar".to_vec();
+        let (head, hex, _) = run(&rt, post("/encode?codec=hex", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(hex, crate::codec::HexCodec::new().encode(&data));
+        let (head, decoded, _) = run(&rt, post("/decode?codec=hex", &hex));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(decoded, data);
+        let (head, b32, _) = run(&rt, post("/encode?codec=base32", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(b32, b"MZXW6YTBOI======");
+        let (head, decoded, _) = run(&rt, post("/decode?codec=base32", &b32));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(decoded, data);
+        // `codec=` also reaches the base64 aliases.
+        let (head, b64, _) = run(&rt, post("/encode?codec=base64url", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(b64, BlockCodec::new(Alphabet::url()).encode(&data));
+        for target in [
+            "/encode?codec=hex&wrap=76",          // wrap needs a base64 codec
+            "/encode?codec=hex&alphabet=standard", // pick one selector
+            "/encode?codec=rot13",                // unknown name
+            "/datauri?codec=hex",                 // data URIs are base64-only
+        ] {
+            let (head, _, _) = run(&rt, post(target, b"x"));
+            assert!(head.starts_with("HTTP/1.1 400"), "{target}: {head}");
+        }
+    }
+
+    #[test]
+    fn codecs_register_then_use_on_same_session() {
+        let rt = router();
+        let mut session = SessionState::new(4);
+        let run_in = |session: &mut SessionState, req: HttpRequest| {
+            let work = HttpWork { job: HttpJob::Request(req), draining: false };
+            let (out, _) = respond(work, &rt, session, Vec::new());
+            split_response(&out)
+        };
+        let (head, body) = run_in(&mut session, get("/codecs"));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        let listing = String::from_utf8(body).unwrap();
+        assert!(listing.contains("0 standard"), "{listing}");
+        assert!(listing.contains("3 hex"), "{listing}");
+        assert!(listing.contains("4 base32"), "{listing}");
+        // Register standard-with-'!' (char 62 swapped) and round-trip
+        // through it on the same connection.
+        let mut chars = *Alphabet::standard().chars();
+        chars[62] = b'!';
+        let (head, body) = run_in(&mut session, post("/codecs?name=bang", &chars));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(body, b"64\n", "first dynamic id");
+        let data = vec![0xFBu8; 3]; // leading 6 bits = 62 → '!'
+        let (head, enc) = run_in(&mut session, post("/encode?codec=bang", &data));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(enc.contains(&b'!'), "{enc:?}");
+        let (head, dec) = run_in(&mut session, post("/decode?codec=bang", &enc));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(dec, data);
+        let (head, body) = run_in(&mut session, get("/codecs"));
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(String::from_utf8(body).unwrap().contains("64 bang"));
+        // Registrations are connection-scoped: a fresh session rejects
+        // the name.
+        let mut other = SessionState::new(4);
+        let (head, _) = run_in(&mut other, post("/encode?codec=bang", b"x"));
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        // Bad registrations: short table, missing name, duplicate name.
+        let (head, _) = run_in(&mut session, post("/codecs?name=short", &chars[..10]));
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        let (head, _) = run_in(&mut session, post("/codecs", &chars));
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+        let (head, _) = run_in(&mut session, post("/codecs?name=bang", &chars));
+        assert!(head.starts_with("HTTP/1.1 400"), "{head}");
     }
 
     #[test]

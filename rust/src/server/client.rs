@@ -192,6 +192,43 @@ impl Client {
         self.expect_data(&Message::StreamEnd { id: stream })
     }
 
+    /// List the codecs this connection can name in requests: the
+    /// built-in table plus any alphabets registered via
+    /// [`Client::register_codec`], as `(id, name)` rows (a `CodecHello`
+    /// frame). Servers predating codec negotiation treat the frame as
+    /// malformed and close the connection, which surfaces here as
+    /// [`ClientError::Closed`] — callers can use that to feature-detect.
+    pub fn codecs(&mut self) -> Result<Vec<(u16, String)>, ClientError> {
+        let id = self.id();
+        match self.call(&Message::CodecHello { id })? {
+            Message::RespCodecs { codecs, .. } => Ok(codecs),
+            Message::RespError { message, .. } => Err(ClientError::Server(message)),
+            _ => Err(ClientError::Unexpected),
+        }
+    }
+
+    /// Register a custom base64 alphabet under `name` for this
+    /// connection (a `CodecRegister` frame); returns the assigned codec
+    /// id. The name is then accepted anywhere an alphabet name is —
+    /// [`Client::encode`], [`Client::decode`], streams — until the
+    /// connection closes.
+    pub fn register_codec(
+        &mut self,
+        name: &str,
+        chars: &[u8; 64],
+        pad: u8,
+    ) -> Result<u16, ClientError> {
+        let id = self.id();
+        let data = self.expect_data(&Message::CodecRegister {
+            id,
+            name: name.to_string(),
+            pad,
+            chars: *chars,
+        })?;
+        let raw: [u8; 2] = data[..].try_into().map_err(|_| ClientError::Unexpected)?;
+        Ok(u16::from_le_bytes(raw))
+    }
+
     /// Fetch the server's metrics report line.
     pub fn stats(&mut self) -> Result<String, ClientError> {
         match self.call(&Message::Stats)? {

@@ -13,6 +13,8 @@
 //!   0x12 StreamEnd   { id:u64le }
 //!   0x20 Stats     {}
 //!   0x21 Ping      {}
+//!   0x22 CodecHello    { id:u64le } — list the connection's codecs
+//!   0x23 CodecRegister { id:u64le, name:str8, pad:u8, chars:[u8;64] }
 //! responses:
 //!   0x81 Data      { id:u64le, data }
 //!   0x82 Error     { id:u64le, message }
@@ -20,6 +22,9 @@
 //!   0x84 Stats     { report }
 //!   0x85 Busy      { message } — connection refused at admission; the
 //!                  server closes the socket right after writing it
+//!   0x86 Codecs    { id:u64le, count:u16le, (id:u16le, name:str8)* } —
+//!                  reply to CodecHello; one row per registered codec
+//!                  (built-ins first, this connection's dynamics after)
 //! str8      := len(u8), utf-8 bytes
 //! mode      := 0 strict, 1 forgiving
 //! ws        := 0 none, 1 crlf, 2 all — whitespace the decoder skips
@@ -133,6 +138,33 @@ pub enum Message {
     Stats,
     /// Tag `0x21`: liveness probe.
     Ping,
+    /// Tag `0x22`: list the codecs this connection can name in its
+    /// requests (built-ins plus dynamically registered alphabets).
+    /// Answered with [`Message::RespCodecs`]. Old servers treat the
+    /// unknown tag as a malformed frame and close the connection, so a
+    /// client probing for negotiation support should send this on a
+    /// fresh connection.
+    CodecHello {
+        /// Request id, echoed in the reply.
+        id: u64,
+    },
+    /// Tag `0x23`: register a custom base64 alphabet under a new codec
+    /// name, scoped to this connection. Success is acknowledged with a
+    /// [`Message::RespData`] whose 2-byte payload is the assigned codec
+    /// id (u16le); rejection (bad name, duplicate, invalid table, full
+    /// registry) is an ordinary [`Message::RespError`].
+    CodecRegister {
+        /// Request id, echoed in the reply.
+        id: u64,
+        /// Codec name for subsequent requests' `alphabet` field
+        /// (1–255 bytes of graphic ASCII).
+        name: String,
+        /// Padding character (usually `=`); must not collide with the
+        /// table.
+        pad: u8,
+        /// The 64-character encode table.
+        chars: [u8; 64],
+    },
     /// Tag `0x81`: successful reply carrying output bytes.
     RespData {
         /// Id of the request this answers.
@@ -161,6 +193,14 @@ pub enum Message {
     RespBusy {
         /// Why the connection was refused (includes the cap).
         message: String,
+    },
+    /// Tag `0x86`: reply to [`Message::CodecHello`] — every codec this
+    /// connection can name, as `(id, name)` rows ordered by id.
+    RespCodecs {
+        /// Id of the `CodecHello` this answers.
+        id: u64,
+        /// `(codec id, canonical name)` rows (aliases are not listed).
+        codecs: Vec<(u16, String)>,
     },
 }
 
@@ -247,8 +287,11 @@ impl Message {
             | Message::StreamBegin { id, .. }
             | Message::StreamChunk { id, .. }
             | Message::StreamEnd { id }
+            | Message::CodecHello { id }
+            | Message::CodecRegister { id, .. }
             | Message::RespData { id, .. }
-            | Message::RespError { id, .. } => *id,
+            | Message::RespError { id, .. }
+            | Message::RespCodecs { id, .. } => *id,
             Message::Stats | Message::Ping | Message::Pong => 0,
             Message::RespStats { .. } | Message::RespBusy { .. } => 0,
         }
@@ -308,6 +351,17 @@ impl Message {
             }
             Message::Stats => out.push(0x20),
             Message::Ping => out.push(0x21),
+            Message::CodecHello { id } => {
+                out.push(0x22);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            Message::CodecRegister { id, name, pad, chars } => {
+                out.push(0x23);
+                out.extend_from_slice(&id.to_le_bytes());
+                str8(&mut out, name);
+                out.push(*pad);
+                out.extend_from_slice(chars);
+            }
             Message::RespData { id, data } => {
                 out.push(TAG_RESP_DATA);
                 out.extend_from_slice(&id.to_le_bytes());
@@ -326,6 +380,16 @@ impl Message {
             Message::RespBusy { message } => {
                 out.push(0x85);
                 out.extend_from_slice(message.as_bytes());
+            }
+            Message::RespCodecs { id, codecs } => {
+                out.push(0x86);
+                out.extend_from_slice(&id.to_le_bytes());
+                debug_assert!(codecs.len() < (1 << 16));
+                out.extend_from_slice(&(codecs.len() as u16).to_le_bytes());
+                for (cid, name) in codecs {
+                    out.extend_from_slice(&cid.to_le_bytes());
+                    str8(&mut out, name);
+                }
             }
         }
         out
@@ -417,6 +481,20 @@ impl Message {
             }
             0x20 => Ok(Message::Stats),
             0x21 => Ok(Message::Ping),
+            0x22 => {
+                let (id, _) = take_u64(rest)?;
+                Ok(Message::CodecHello { id })
+            }
+            0x23 => {
+                let (id, rest) = take_u64(rest)?;
+                let (name, rest) = take_str8(rest)?;
+                let (&pad, rest) =
+                    rest.split_first().ok_or(ProtoError::Malformed("no pad byte"))?;
+                let chars: [u8; 64] = rest
+                    .try_into()
+                    .map_err(|_| ProtoError::Malformed("codec table must be 64 bytes"))?;
+                Ok(Message::CodecRegister { id, name, pad, chars })
+            }
             0x81 => {
                 let (id, rest) = take_u64(rest)?;
                 Ok(Message::RespData { id, data: rest.to_vec() })
@@ -433,6 +511,28 @@ impl Message {
             0x85 => Ok(Message::RespBusy {
                 message: String::from_utf8_lossy(rest).into_owned(),
             }),
+            0x86 => {
+                let (id, rest) = take_u64(rest)?;
+                if rest.len() < 2 {
+                    return Err(ProtoError::Malformed("truncated codec count"));
+                }
+                let count = u16::from_le_bytes([rest[0], rest[1]]) as usize;
+                let mut rest = &rest[2..];
+                let mut codecs = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    if rest.len() < 2 {
+                        return Err(ProtoError::Malformed("truncated codec row"));
+                    }
+                    let cid = u16::from_le_bytes([rest[0], rest[1]]);
+                    let (name, r) = take_str8(&rest[2..])?;
+                    codecs.push((cid, name));
+                    rest = r;
+                }
+                if !rest.is_empty() {
+                    return Err(ProtoError::Malformed("trailing bytes after codec rows"));
+                }
+                Ok(Message::RespCodecs { id, codecs })
+            }
             _ => Err(ProtoError::Malformed("unknown tag")),
         }
     }
@@ -505,6 +605,59 @@ mod tests {
         roundtrip(Message::Pong);
         roundtrip(Message::RespStats { report: "req=1".into() });
         roundtrip(Message::RespBusy { message: "server busy".into() });
+        roundtrip(Message::CodecHello { id: 11 });
+        roundtrip(Message::CodecRegister {
+            id: 12,
+            name: "custom1".into(),
+            pad: b'=',
+            chars: *crate::base64::Alphabet::standard().chars(),
+        });
+        roundtrip(Message::RespCodecs { id: 11, codecs: vec![] });
+        roundtrip(Message::RespCodecs {
+            id: 11,
+            codecs: vec![(0, "standard".into()), (3, "hex".into()), (64, "custom1".into())],
+        });
+    }
+
+    #[test]
+    fn codec_register_layout_is_pinned() {
+        let msg = Message::CodecRegister {
+            id: 0x0102_0304_0506_0708,
+            name: "ab".into(),
+            pad: b'=',
+            chars: *crate::base64::Alphabet::standard().chars(),
+        };
+        let body = msg.to_bytes();
+        // tag(1) + id(8) + str8(1+2) + pad(1) + table(64) = 77.
+        assert_eq!(body.len(), 77);
+        assert_eq!(body[0], 0x23);
+        assert_eq!(&body[9..12], &[2, b'a', b'b']);
+        assert_eq!(body[12], b'=');
+        assert_eq!(&body[13..], &crate::base64::Alphabet::standard().chars()[..]);
+        // A short or long table is malformed, not silently truncated.
+        assert!(Message::from_bytes(&body[..76]).is_err());
+        let mut long = body.clone();
+        long.push(b'x');
+        assert!(Message::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn resp_codecs_layout_is_pinned() {
+        let msg = Message::RespCodecs { id: 9, codecs: vec![(3, "hex".into())] };
+        let body = msg.to_bytes();
+        // tag(1) + id(8) + count(2) + row(2 + 1+3) = 17.
+        assert_eq!(body.len(), 17);
+        assert_eq!(body[0], 0x86);
+        assert_eq!(&body[9..11], &1u16.to_le_bytes());
+        assert_eq!(&body[11..13], &3u16.to_le_bytes());
+        assert_eq!(&body[13..], &[3, b'h', b'e', b'x']);
+        // Count must match the rows exactly.
+        let mut short = body.clone();
+        short[9] = 2;
+        assert!(Message::from_bytes(&short).is_err());
+        let mut trailing = body;
+        trailing.push(0);
+        assert!(Message::from_bytes(&trailing).is_err());
     }
 
     #[test]

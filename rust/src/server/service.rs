@@ -34,8 +34,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::proto::{resolve_alphabet, Message, ProtoError};
+use super::proto::{Message, ProtoError};
 use crate::base64::{Mode, Whitespace};
+use crate::codec::CodecSel;
 use crate::coordinator::backpressure::{ConnLimiter, RateLimiter};
 use crate::coordinator::state::{SessionState, StreamError};
 use crate::coordinator::{Metrics, Outcome, Request, RequestKind, Router};
@@ -1067,10 +1068,21 @@ fn stream_err(id: u64, e: StreamError) -> Message {
     Message::RespError { id, message: e.to_string() }
 }
 
-/// Resolve the alphabet and run a one-shot request through the router.
+/// Resolve a wire codec name against the session's registry: built-in
+/// alphabet names keep resolving exactly as before the negotiation
+/// extension, new built-ins (`hex`, `base32`, `base32hex` and the
+/// aliases) come with the registry, and dynamically registered names
+/// are connection-scoped. The legacy "unknown alphabet" error text is
+/// preserved for unresolvable names.
+fn resolve_codec(session: &SessionState, name: &str) -> Result<CodecSel, ProtoError> {
+    session.codecs().resolve(name).ok_or_else(|| ProtoError::UnknownAlphabet(name.to_string()))
+}
+
+/// Resolve the codec and run a one-shot request through the router.
 #[allow(clippy::too_many_arguments)]
 fn one_shot(
     router: &Router,
+    session: &SessionState,
     id: u64,
     kind: RequestKind,
     alphabet: String,
@@ -1079,12 +1091,12 @@ fn one_shot(
     data: Vec<u8>,
     clock: Option<&ReqClock>,
 ) -> Message {
-    let alphabet = match resolve_alphabet(&alphabet) {
-        Ok(a) => a,
+    let codec = match resolve_codec(session, &alphabet) {
+        Ok(c) => c,
         Err(e) => return Message::RespError { id, message: e.to_string() },
     };
     let resp =
-        router.process_clocked(Request { id, kind, payload: data, alphabet, mode, ws }, clock);
+        router.process_clocked(Request { id, kind, payload: data, codec, mode, ws }, clock);
     outcome_to_message(id, resp.outcome)
 }
 
@@ -1123,20 +1135,36 @@ pub(crate) fn dispatch_clocked(
 ) -> Message {
     maybe_injected_panic(&msg);
     match msg {
-        Message::Encode { id, alphabet, mode, data } => {
-            one_shot(router, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data, clock)
-        }
+        Message::Encode { id, alphabet, mode, data } => one_shot(
+            router,
+            session,
+            id,
+            RequestKind::Encode,
+            alphabet,
+            mode,
+            Whitespace::None,
+            data,
+            clock,
+        ),
         Message::Decode { id, alphabet, mode, ws, data } => {
             // The one-shot whitespace knob (wire tag 0x04) rides through
             // to the router, which strips and rebases error offsets.
-            one_shot(router, id, RequestKind::Decode, alphabet, mode, ws, data, clock)
+            one_shot(router, session, id, RequestKind::Decode, alphabet, mode, ws, data, clock)
         }
-        Message::Validate { id, alphabet, mode, data } => {
-            one_shot(router, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data, clock)
-        }
+        Message::Validate { id, alphabet, mode, data } => one_shot(
+            router,
+            session,
+            id,
+            RequestKind::Validate,
+            alphabet,
+            mode,
+            Whitespace::None,
+            data,
+            clock,
+        ),
         Message::StreamBegin { id, decode, alphabet, mode, ws, wrap } => {
-            let alphabet = match resolve_alphabet(&alphabet) {
-                Ok(a) => a,
+            let codec = match resolve_codec(session, &alphabet) {
+                Ok(c) => c,
                 Err(e) => return Message::RespError { id, message: e.to_string() },
             };
             let r = if decode {
@@ -1146,15 +1174,24 @@ pub(crate) fn dispatch_clocked(
                         message: "wrap is only valid on encode streams".into(),
                     };
                 }
-                session.open_decode_ws(id, alphabet, mode, ws)
-            } else if wrap != 0 {
-                session.open_encode_wrapped(id, alphabet, wrap as usize)
+                session.open_codec_decode(id, codec, mode, ws)
             } else {
-                session.open_encode(id, alphabet)
+                session.open_codec_encode(id, codec, wrap as usize)
             };
             match r {
                 Ok(()) => Message::RespData { id, data: Vec::new() },
                 Err(e) => stream_err(id, e),
+            }
+        }
+        Message::CodecHello { id } => Message::RespCodecs { id, codecs: session.codecs().list() },
+        Message::CodecRegister { id, name, pad, chars } => {
+            match session.codecs_mut().register(&name, &chars, pad) {
+                // Success acks with the assigned 16-bit codec id as a
+                // little-endian RespData payload; the client may then
+                // use the registered name in any request on this
+                // connection.
+                Ok(cid) => Message::RespData { id, data: cid.to_le_bytes().to_vec() },
+                Err(e) => Message::RespError { id, message: e.to_string() },
             }
         }
         // Stream payload work never passes through the router, so it
@@ -1202,8 +1239,10 @@ pub(crate) fn dispatch_clocked(
     }
 }
 
-/// Resolve a one-shot request's alphabet, or the error reply to send.
+/// Resolve a one-shot request's codec, or the error reply to send.
+#[allow(clippy::too_many_arguments)]
 fn make_request(
+    session: &SessionState,
     id: u64,
     kind: RequestKind,
     alphabet: String,
@@ -1211,8 +1250,8 @@ fn make_request(
     ws: Whitespace,
     data: Vec<u8>,
 ) -> Result<Request, Message> {
-    match resolve_alphabet(&alphabet) {
-        Ok(alphabet) => Ok(Request { id, kind, payload: data, alphabet, mode, ws }),
+    match resolve_codec(session, &alphabet) {
+        Ok(codec) => Ok(Request { id, kind, payload: data, codec, mode, ws }),
         Err(e) => Err(Message::RespError { id, message: e.to_string() }),
     }
 }
@@ -1245,19 +1284,21 @@ pub(crate) fn dispatch_into_clocked(
     maybe_injected_panic(&msg);
     match msg {
         Message::Encode { id, alphabet, mode, data } => {
-            match make_request(id, RequestKind::Encode, alphabet, mode, Whitespace::None, data) {
+            match make_request(session, id, RequestKind::Encode, alphabet, mode, Whitespace::None, data)
+            {
                 Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Decode { id, alphabet, mode, ws, data } => {
-            match make_request(id, RequestKind::Decode, alphabet, mode, ws, data) {
+            match make_request(session, id, RequestKind::Decode, alphabet, mode, ws, data) {
                 Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }
         }
         Message::Validate { id, alphabet, mode, data } => {
-            match make_request(id, RequestKind::Validate, alphabet, mode, Whitespace::None, data) {
+            match make_request(session, id, RequestKind::Validate, alphabet, mode, Whitespace::None, data)
+            {
                 Ok(req) => framed(router.process_into_clocked(req, sink, clock)),
                 Err(reply) => sink.push_message(&reply),
             }

@@ -22,6 +22,14 @@ pub struct BenchResult {
     pub mad: Duration,
     /// Throughput over the reference byte count.
     pub gbps: f64,
+    /// 50th-percentile per-call wall time (nearest rank over the
+    /// repetition samples — coarse at the paper's 10 reps, but monotone
+    /// and stable enough to track in artifacts).
+    pub p50: Duration,
+    /// 90th-percentile per-call wall time.
+    pub p90: Duration,
+    /// 99th-percentile per-call wall time (the max at < 100 reps).
+    pub p99: Duration,
 }
 
 impl BenchResult {
@@ -32,6 +40,29 @@ impl BenchResult {
             self.name, self.bytes, self.median, self.mad, self.gbps
         )
     }
+
+    /// The result as one JSON object for [`emit_json`] artifacts:
+    /// throughput plus the per-repetition latency percentiles in
+    /// nanoseconds (the schema `bench::tests::json_obj_schema` pins).
+    pub fn json_obj(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"bytes\":{},\"median_ns\":{},\"mad_ns\":{},\"gbps\":{:.4},\"p50_ns\":{},\"p90_ns\":{},\"p99_ns\":{}}}",
+            self.name,
+            self.bytes,
+            self.median.as_nanos(),
+            self.mad.as_nanos(),
+            self.gbps,
+            self.p50.as_nanos(),
+            self.p90.as_nanos(),
+            self.p99.as_nanos()
+        )
+    }
+}
+
+/// Nearest-rank percentile over sorted samples (`q` in (0, 1]).
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
 }
 
 /// Harness options.
@@ -99,7 +130,16 @@ pub fn bench(name: impl Into<String>, bytes: usize, opts: &BenchOpts, mut f: imp
     devs.sort_unstable();
     let mad = devs[devs.len() / 2];
     let gbps = bytes as f64 / median.as_nanos().max(1) as f64;
-    BenchResult { name: name.into(), bytes, median, mad, gbps }
+    BenchResult {
+        name: name.into(),
+        bytes,
+        median,
+        mad,
+        gbps,
+        p50: percentile(&samples, 0.50),
+        p90: percentile(&samples, 0.90),
+        p99: percentile(&samples, 0.99),
+    }
 }
 
 /// Simple aligned table printer for a series of results.
@@ -167,10 +207,40 @@ mod tests {
             median: Duration::from_nanos(100),
             mad: Duration::ZERO,
             gbps: 0.1,
+            p50: Duration::from_nanos(100),
+            p90: Duration::from_nanos(120),
+            p99: Duration::from_nanos(150),
         };
         let csv = to_csv(&[r]);
         assert!(csv.starts_with("name,bytes"));
         assert!(csv.contains("x,10,100,0.1000"));
+    }
+
+    /// Schema check for the artifact rows: every `json_obj` parses as
+    /// JSON, carries the throughput and percentile fields the CI
+    /// artifacts track, and the percentiles are monotone.
+    #[test]
+    fn json_obj_schema() {
+        let data = vec![3u8; 4 << 10];
+        let r = bench("schema", data.len(), &fast_opts(), || {
+            std::hint::black_box(data.iter().map(|&b| b as u64).sum::<u64>());
+        });
+        let parsed = crate::util::json::Value::parse(&r.json_obj()).expect("row must be JSON");
+        let obj = match parsed {
+            crate::util::json::Value::Object(m) => m,
+            other => panic!("row must be an object, got {other:?}"),
+        };
+        for key in ["name", "bytes", "median_ns", "mad_ns", "gbps", "p50_ns", "p90_ns", "p99_ns"] {
+            assert!(obj.contains_key(key), "missing {key} in {obj:?}");
+        }
+        let num = |key: &str| match &obj[key] {
+            crate::util::json::Value::Number(n) => *n,
+            other => panic!("{key} must be a number, got {other:?}"),
+        };
+        assert!(num("p50_ns") > 0.0);
+        assert!(num("p50_ns") <= num("p90_ns"));
+        assert!(num("p90_ns") <= num("p99_ns"));
+        assert_eq!(num("bytes"), data.len() as f64);
     }
 
     #[test]

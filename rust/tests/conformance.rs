@@ -1,7 +1,10 @@
-//! Cross-implementation conformance: pin the engine byte-identical to
-//! GNU coreutils `base64` / `base64 -d` — an oracle that shares no
-//! code, tables or bugs with this crate — across every supported tier,
-//! both explicit store policies, and the RFC 2045 wrap-76 path.
+//! Cross-implementation conformance: pin the codecs byte-identical to
+//! independent third-party oracles — GNU coreutils `base64` /
+//! `base64 -d` for the engine, coreutils `base32` / `base32 -d` for
+//! the base32 codec, and `xxd -p` / `xxd -p -r` for hex — none of
+//! which share code, tables or bugs with this crate — across every
+//! supported tier, both explicit store policies, and the RFC 2045
+//! wrap-76 path.
 //!
 //! The shelling-out is deliberate: the in-crate differential tests
 //! (`rust/tests/engine.rs`) prove the tiers agree with the scalar
@@ -22,14 +25,15 @@ use std::io::Write;
 use std::process::{Command, Stdio};
 use std::sync::OnceLock;
 
-use b64simd::base64::{encoded_len, Alphabet, Engine, StorePolicy, Tier, Whitespace};
+use b64simd::base64::{encoded_len, Alphabet, Codec, Engine, Mode, StorePolicy, Tier, Whitespace};
+use b64simd::codec::{base32, hex, Base32Codec, Base32Variant, HexCodec};
 use b64simd::workload::{random_bytes, Rng64};
 
-/// Run `base64 <args>` with `input` on stdin; `None` if the binary is
+/// Run `<bin> <args>` with `input` on stdin; `None` if the binary is
 /// missing or exits non-zero. Inputs here stay well under the pipe
 /// buffer, so write-all-then-wait cannot deadlock.
-fn coreutils(args: &[&str], input: &[u8]) -> Option<Vec<u8>> {
-    let mut child = Command::new("base64")
+fn pipe(bin: &str, args: &[&str], input: &[u8]) -> Option<Vec<u8>> {
+    let mut child = Command::new(bin)
         .args(args)
         .stdin(Stdio::piped())
         .stdout(Stdio::piped())
@@ -39,6 +43,11 @@ fn coreutils(args: &[&str], input: &[u8]) -> Option<Vec<u8>> {
     child.stdin.take()?.write_all(input).ok()?;
     let out = child.wait_with_output().ok()?;
     out.status.success().then_some(out.stdout)
+}
+
+/// Run `base64 <args>` with `input` on stdin.
+fn coreutils(args: &[&str], input: &[u8]) -> Option<Vec<u8>> {
+    pipe("base64", args, input)
 }
 
 /// Strip the single trailing newline coreutils appends.
@@ -77,6 +86,37 @@ fn oracle_available() -> bool {
             eprintln!(
                 "conformance: no coreutils-compatible `base64` on PATH; skipping cross-checks"
             );
+        }
+        ok
+    })
+}
+
+/// Same probe for GNU coreutils `base32` (busybox has no base32 at
+/// all; anything that disagrees on the §10 vector skips).
+fn base32_oracle_available() -> bool {
+    static PROBE: OnceLock<bool> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let ok = pipe("base32", &["-w", "0"], b"foobar").map(trim_nl)
+            == Some(b"MZXW6YTBOI======".to_vec())
+            && pipe("base32", &["-d"], b"MZXW6YTBOI======") == Some(b"foobar".to_vec());
+        if !ok {
+            eprintln!(
+                "conformance: no coreutils-compatible `base32` on PATH; skipping cross-checks"
+            );
+        }
+        ok
+    })
+}
+
+/// Probe for `xxd` as the hex oracle (`xxd -p` dumps lowercase plain
+/// hex, `xxd -p -r` reverses it, either case).
+fn xxd_oracle_available() -> bool {
+    static PROBE: OnceLock<bool> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let ok = pipe("xxd", &["-p"], b"foobar").map(trim_nl) == Some(b"666f6f626172".to_vec())
+            && pipe("xxd", &["-p", "-r"], b"666F6F626172") == Some(b"foobar".to_vec());
+        if !ok {
+            eprintln!("conformance: no usable `xxd` on PATH; skipping hex cross-checks");
         }
         ok
     })
@@ -175,6 +215,107 @@ fn tiers_and_policies_match_coreutils_on_random_lengths() {
                     coreutils(&["-d"], &flat[..engine.encoded_len(len)]).as_deref(),
                     Some(&data[..]),
                     "oracle decode of engine output, tier={tier:?} len={len}"
+                );
+            }
+        }
+    }
+}
+
+/// The base32 codec against coreutils `base32` / `base32 -d`: every
+/// tier × both explicit policies on random lengths, cross-decoding in
+/// both directions. Only the standard alphabet — coreutils has no
+/// base32hex mode (that variant is pinned by the RFC vectors and the
+/// in-crate differential tests instead).
+#[test]
+fn base32_tiers_and_policies_match_coreutils() {
+    if !base32_oracle_available() {
+        return;
+    }
+    for tier in Tier::supported() {
+        let codec = Base32Codec::with_tier(Base32Variant::Std, tier);
+        for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal] {
+            let mut rng = Rng64::new(0xB32 ^ ((tier as u64) << 8) ^ policy.name().len() as u64);
+            // 0 plus every tail residue (1..=5), then random fill.
+            let mut lens: Vec<usize> = vec![0, 1, 2, 3, 4, 5, 8191];
+            lens.extend((0..12).map(|_| rng.below(8192) as usize));
+            for len in lens {
+                let data = random_bytes(len, 0xB32 ^ len as u64);
+                let want = pipe("base32", &["-w", "0"], &data).map(trim_nl).expect("oracle");
+                let mut enc = vec![0u8; base32::encoded_len(len)];
+                let n = codec.encode_slice_policy(&data, &mut enc, policy);
+                assert_eq!(
+                    &enc[..n],
+                    &want[..],
+                    "base32 encode tier={tier:?} policy={} len={len}",
+                    policy.name()
+                );
+                let mut dec = vec![0u8; base32::decoded_len_upper(want.len())];
+                let m = codec
+                    .decode_slice_policy(&want, &mut dec, Mode::Strict, policy)
+                    .expect("decode of oracle output");
+                assert_eq!(
+                    &dec[..m],
+                    &data[..],
+                    "base32 decode tier={tier:?} policy={} len={len}",
+                    policy.name()
+                );
+                assert_eq!(
+                    pipe("base32", &["-d"], &enc[..n]).as_deref(),
+                    Some(&data[..]),
+                    "oracle decode of codec output, tier={tier:?} len={len}"
+                );
+            }
+        }
+    }
+}
+
+/// The hex codec against `xxd -p` / `xxd -p -r`. Case conventions
+/// differ by design — the codec encodes uppercase (RFC 4648 §8), xxd
+/// dumps lowercase — so encode comparisons are case-folded, and each
+/// side decodes the other's preferred case directly.
+#[test]
+fn hex_tiers_and_policies_match_xxd() {
+    if !xxd_oracle_available() {
+        return;
+    }
+    for tier in Tier::supported() {
+        let codec = HexCodec::with_tier(tier);
+        for policy in [StorePolicy::Temporal, StorePolicy::NonTemporal] {
+            let mut rng = Rng64::new(0x16 ^ ((tier as u64) << 8) ^ policy.name().len() as u64);
+            let mut lens: Vec<usize> = vec![0, 1, 2, 3, 8191];
+            lens.extend((0..12).map(|_| rng.below(8192) as usize));
+            for len in lens {
+                let data = random_bytes(len, 0x16 ^ len as u64);
+                // `xxd -p` wraps at 60 chars; strip the line structure.
+                let want: Vec<u8> = pipe("xxd", &["-p"], &data)
+                    .expect("oracle")
+                    .into_iter()
+                    .filter(|&c| c != b'\n')
+                    .collect();
+                let mut enc = vec![0u8; hex::encoded_len(len)];
+                let n = codec.encode_slice_policy(&data, &mut enc, policy);
+                assert_eq!(
+                    enc[..n].to_ascii_lowercase(),
+                    want,
+                    "hex encode tier={tier:?} policy={} len={len}",
+                    policy.name()
+                );
+                // Decode xxd's lowercase output directly (§8 lets
+                // decoders be case-insensitive; ours is).
+                let mut dec = vec![0u8; hex::decoded_len(want.len())];
+                let m = codec
+                    .decode_slice_policy(&want, &mut dec, policy)
+                    .expect("decode of oracle output");
+                assert_eq!(
+                    &dec[..m],
+                    &data[..],
+                    "hex decode tier={tier:?} policy={} len={len}",
+                    policy.name()
+                );
+                assert_eq!(
+                    pipe("xxd", &["-p", "-r"], &enc[..n]).as_deref(),
+                    Some(&data[..]),
+                    "oracle decode of codec output, tier={tier:?} len={len}"
                 );
             }
         }

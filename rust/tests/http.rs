@@ -377,6 +377,66 @@ fn native_protocol_unaffected_by_gateway() {
     handle.shutdown();
 }
 
+/// Codec negotiation end to end on a live gateway: one keep-alive
+/// connection lists the registry, round-trips the non-base64 codecs
+/// against the in-process oracles, registers a custom alphabet and
+/// decodes with it; a second connection proves the registration is
+/// connection-scoped.
+#[test]
+fn gateway_codec_negotiation_end_to_end() {
+    use b64simd::codec::{Base32Codec, Base32Variant, HexCodec};
+    let (handle, _router) = start_http(Transport::Epoll, 2, true, |_| {});
+    let addr = handle.http_addr.unwrap();
+    let mut c = Http::connect(addr);
+
+    let r = c.roundtrip("GET", "/codecs", &[], b"");
+    assert_eq!(r.status, 200);
+    let listing = String::from_utf8(r.body).unwrap();
+    for row in ["0 standard", "1 url", "2 imap", "3 hex", "4 base32", "5 base32hex"] {
+        assert!(listing.contains(row), "{listing}");
+    }
+
+    let data = random_bytes(70_001, 0x477E);
+    let r = c.roundtrip("POST", "/encode?codec=hex", &[], &data);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body, HexCodec::new().encode(&data));
+    let hex = r.body;
+    let r = c.roundtrip("POST", "/decode?codec=base16", &[], &hex);
+    assert_eq!((r.status, r.body == data), (200, true));
+
+    let r = c.roundtrip("POST", "/encode?codec=base32hex", &[], &data);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body, Base32Codec::new(Base32Variant::Hex).encode(&data));
+    let r = c.roundtrip("POST", "/decode?codec=base32hex", &[], &r.body);
+    assert_eq!((r.status, r.body == data), (200, true));
+
+    // Register standard-with-'!'/'?' (both symbol slots swapped for
+    // bytes no built-in table uses) and round-trip through it.
+    let mut chars = *Alphabet::standard().chars();
+    chars[62] = b'!';
+    chars[63] = b'?';
+    let r = c.roundtrip("POST", "/codecs?name=bang", &[], &chars);
+    assert_eq!((r.status, r.body.as_slice()), (200, b"64\n".as_slice()));
+    let r = c.roundtrip("POST", "/encode?codec=bang", &[], &data);
+    assert_eq!(r.status, 200);
+    let enc = r.body;
+    let reference =
+        b64simd::base64::Engine::new(Alphabet::new("bang", chars, b'=').unwrap());
+    assert_eq!(enc, reference.encode(&data));
+    let r = c.roundtrip("POST", "/decode?codec=bang", &[], &enc);
+    assert_eq!((r.status, r.body == data), (200, true));
+
+    // Connection-scoped: a second connection rejects the name but can
+    // claim it (and the same dynamic id) for itself.
+    let mut other = Http::connect(addr);
+    let r = other.roundtrip("POST", "/encode?codec=bang", &[], b"x");
+    assert_eq!(r.status, 400);
+    let r = other.roundtrip("POST", "/codecs?name=bang", &[], &chars);
+    assert_eq!((r.status, r.body.as_slice()), (200, b"64\n".as_slice()));
+
+    handle.shutdown();
+}
+
 // ---------------------------------------------------------------------
 // Streaming: chunked-transfer uploads through the session codecs.
 // ---------------------------------------------------------------------

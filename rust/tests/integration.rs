@@ -263,6 +263,97 @@ fn server_many_connections() {
 }
 
 // ---------------------------------------------------------------------
+// Codec negotiation over the native protocol.
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_codec_negotiation_builtins() {
+    use b64simd::codec::{Base32Codec, Base32Variant, HexCodec};
+    let (handle, _router) = start_server();
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    // CodecHello on a fresh session lists the six built-ins in id order
+    // (canonical names only — aliases resolve but are not advertised).
+    let codecs = client.codecs().unwrap();
+    let rows: Vec<(u16, &str)> = codecs.iter().map(|(id, n)| (*id, n.as_str())).collect();
+    assert_eq!(
+        rows,
+        [
+            (0, "standard"),
+            (1, "url"),
+            (2, "imap"),
+            (3, "hex"),
+            (4, "base32"),
+            (5, "base32hex"),
+        ]
+    );
+
+    // One-shot requests resolve the alphabet field as a codec name and
+    // match the in-process codecs byte for byte; "base16" is an alias.
+    let data = random_bytes(3001, 0xC0DEC);
+    let enc = client.encode(&data, "hex").unwrap();
+    assert_eq!(enc, HexCodec::new().encode(&data));
+    assert_eq!(client.decode(&enc, "base16", Mode::Strict).unwrap(), data);
+
+    let enc = client.encode(&data, "base32").unwrap();
+    assert_eq!(enc, Base32Codec::new(Base32Variant::Std).encode(&data));
+    assert_eq!(client.decode(&enc, "base32", Mode::Strict).unwrap(), data);
+
+    // Streaming sessions route through the codec stream adapters with
+    // the same carry handling as base64 streams.
+    let sid = client.stream_begin(false, "base32hex").unwrap();
+    let mut streamed = Vec::new();
+    for chunk in data.chunks(777) {
+        streamed.extend(client.stream_chunk(sid, chunk).unwrap());
+    }
+    streamed.extend(client.stream_end(sid).unwrap());
+    assert_eq!(streamed, Base32Codec::new(Base32Variant::Hex).encode(&data));
+
+    handle.shutdown();
+}
+
+#[test]
+fn server_register_custom_alphabet_over_the_wire() {
+    use b64simd::base64::Engine;
+    let (handle, _router) = start_server();
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    // Standard table with the two symbol slots swapped for bytes no
+    // built-in uses, so outputs must differ from every built-in codec.
+    let mut chars = *Alphabet::standard().chars();
+    chars[62] = b'!';
+    chars[63] = b'?';
+    let id = client.register_codec("bang", &chars, b'=').unwrap();
+    assert_eq!(id, 64, "first dynamic id");
+
+    let data = random_bytes(4097, 0xBA64);
+    let enc = client.encode(&data, "bang").unwrap();
+    let reference = Engine::new(Alphabet::new("bang", chars, b'=').unwrap());
+    assert_eq!(enc, reference.encode(&data));
+    assert_ne!(enc, Engine::get().encode(&data));
+    assert_eq!(client.decode(&enc, "bang", Mode::Strict).unwrap(), data);
+
+    // The listing now carries the dynamic row; re-registering the name
+    // (or shadowing a built-in) is refused without closing the session.
+    assert!(client.codecs().unwrap().contains(&(64, "bang".to_string())));
+    let err = client.register_codec("bang", &chars, b'=').unwrap_err();
+    assert!(err.to_string().contains("already registered"), "{err}");
+    let err = client.register_codec("hex", &chars, b'=').unwrap_err();
+    assert!(err.to_string().contains("already registered"), "{err}");
+    assert_eq!(client.decode(&enc, "bang", Mode::Strict).unwrap(), data);
+
+    // Registries are per connection: a second session neither lists nor
+    // resolves the name, and its own registration starts back at 64.
+    let mut other = Client::connect(handle.addr).unwrap();
+    assert_eq!(other.codecs().unwrap().len(), 6);
+    let err = other.encode(&data, "bang").unwrap_err();
+    assert!(err.to_string().contains("unknown alphabet"), "{err}");
+    assert_eq!(other.register_codec("theirs", &chars, b'=').unwrap(), 64);
+
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
 // PJRT differential tests (skipped without artifacts).
 // ---------------------------------------------------------------------
 

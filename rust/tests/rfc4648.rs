@@ -1,0 +1,321 @@
+//! RFC 4648 conformance suite.
+//!
+//! The §10 test vectors for all five encodings the crate speaks —
+//! base64, base64url, base32, base32hex and base16 — exercised across
+//! every supported kernel tier, both store policies, and both the
+//! one-shot and streaming entry points, plus the strict-mode
+//! canonicality rules (§3.5 non-zero trailing bits, §4/§6 padding).
+//!
+//! The full tier ladder is only reachable on hosts with the matching
+//! CPU features; CI additionally pins `B64SIMD_TIER` so the scalar and
+//! SWAR floors get a dedicated pass on every runner.
+
+use b64simd::base64::streaming::{StreamingDecoder, StreamingEncoder};
+use b64simd::base64::{Alphabet, DecodeError, Engine, Mode, StorePolicy, Tier, Whitespace};
+use b64simd::codec::{
+    Base32Codec, Base32Variant, CodecStreamDecoder, CodecStreamEncoder, HexCodec,
+};
+
+/// The RFC 4648 §10 vectors, raw side.
+const RAW: [&[u8]; 7] = [b"", b"f", b"fo", b"foo", b"foob", b"fooba", b"foobar"];
+
+/// §10 base64 vectors (identical for the url alphabet on these inputs).
+const B64: [&[u8]; 7] = [b"", b"Zg==", b"Zm8=", b"Zm9v", b"Zm9vYg==", b"Zm9vYmE=", b"Zm9vYmFy"];
+
+/// §10 base32 vectors.
+const B32: [&[u8]; 7] = [
+    b"",
+    b"MY======",
+    b"MZXQ====",
+    b"MZXW6===",
+    b"MZXW6YQ=",
+    b"MZXW6YTB",
+    b"MZXW6YTBOI======",
+];
+
+/// §10 base32hex vectors.
+const B32HEX: [&[u8]; 7] = [
+    b"",
+    b"CO======",
+    b"CPNG====",
+    b"CPNMU===",
+    b"CPNMUOG=",
+    b"CPNMUOJ1",
+    b"CPNMUOJ1E8======",
+];
+
+/// §10 base16 vectors (the crate encodes uppercase).
+const B16: [&[u8]; 7] =
+    [b"", b"66", b"666F", b"666F6F", b"666F6F62", b"666F6F6261", b"666F6F626172"];
+
+fn policies() -> [StorePolicy; 3] {
+    // Auto(0) forces the non-temporal branch even for the tiny vectors.
+    [StorePolicy::Temporal, StorePolicy::NonTemporal, StorePolicy::Auto(0)]
+}
+
+#[test]
+fn base64_vectors_all_tiers_and_policies() {
+    for alphabet in [Alphabet::standard(), Alphabet::url()] {
+        for tier in Tier::supported() {
+            let engine = Engine::with_tier(alphabet.clone(), tier);
+            for policy in policies() {
+                for (raw, enc) in RAW.iter().zip(B64.iter()) {
+                    let mut out = vec![0u8; enc.len()];
+                    let n = engine.encode_slice_policy(raw, &mut out, policy);
+                    assert_eq!(&out[..n], *enc, "{} {tier:?} {policy:?}", alphabet.name());
+                    let mut dec = vec![0u8; raw.len() + 3];
+                    let n = engine.decode_slice_policy(enc, &mut dec, policy).unwrap();
+                    assert_eq!(&dec[..n], *raw, "{} {tier:?} {policy:?}", alphabet.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn base64_vectors_streaming() {
+    for tier in Tier::supported() {
+        for (raw, enc) in RAW.iter().zip(B64.iter()) {
+            for chunk in 1..=3usize {
+                let mut encoder =
+                    StreamingEncoder::from_engine(Engine::with_tier(Alphabet::standard(), tier));
+                let mut got = Vec::new();
+                for piece in raw.chunks(chunk) {
+                    encoder.update(piece, &mut got);
+                }
+                assert_eq!(encoder.finish(&mut got), raw.len() as u64);
+                assert_eq!(got, *enc, "tier={tier:?} chunk={chunk}");
+
+                let mut decoder = StreamingDecoder::from_engine(
+                    Engine::with_tier(Alphabet::standard(), tier),
+                    Whitespace::None,
+                );
+                let mut back = Vec::new();
+                for piece in enc.chunks(chunk) {
+                    decoder.update(piece, &mut back).unwrap();
+                }
+                decoder.finish(&mut back).unwrap();
+                assert_eq!(back, *raw, "tier={tier:?} chunk={chunk}");
+            }
+        }
+    }
+}
+
+#[test]
+fn base32_vectors_all_tiers_and_policies() {
+    for (variant, table) in [(Base32Variant::Std, &B32), (Base32Variant::Hex, &B32HEX)] {
+        for tier in Tier::supported() {
+            let codec = Base32Codec::with_tier(variant, tier);
+            for policy in policies() {
+                for (raw, enc) in RAW.iter().zip(table.iter()) {
+                    let mut out = vec![0u8; enc.len()];
+                    let n = codec.encode_slice_policy(raw, &mut out, policy);
+                    assert_eq!(&out[..n], *enc, "{variant:?} {tier:?} {policy:?}");
+                    let mut dec = vec![0u8; raw.len() + 5];
+                    let n =
+                        codec.decode_slice_policy(enc, &mut dec, Mode::Strict, policy).unwrap();
+                    assert_eq!(&dec[..n], *raw, "{variant:?} {tier:?} {policy:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn base32_vectors_streaming() {
+    for (variant, table) in [(Base32Variant::Std, &B32), (Base32Variant::Hex, &B32HEX)] {
+        for (raw, enc) in RAW.iter().zip(table.iter()) {
+            for chunk in 1..=3usize {
+                let mut encoder = CodecStreamEncoder::base32(variant);
+                let mut got = Vec::new();
+                for piece in raw.chunks(chunk) {
+                    encoder.update(piece, &mut got);
+                }
+                assert_eq!(encoder.finish(&mut got), raw.len() as u64);
+                assert_eq!(got, *enc, "{variant:?} chunk={chunk}");
+
+                let mut decoder =
+                    CodecStreamDecoder::base32(variant, Mode::Strict, Whitespace::None);
+                let mut back = Vec::new();
+                for piece in enc.chunks(chunk) {
+                    decoder.update(piece, &mut back).unwrap();
+                }
+                decoder.finish(&mut back).unwrap();
+                assert_eq!(back, *raw, "{variant:?} chunk={chunk}");
+            }
+        }
+    }
+}
+
+#[test]
+fn base16_vectors_all_tiers_and_policies() {
+    for tier in Tier::supported() {
+        let codec = HexCodec::with_tier(tier);
+        for policy in policies() {
+            for (raw, enc) in RAW.iter().zip(B16.iter()) {
+                let mut out = vec![0u8; enc.len()];
+                let n = codec.encode_slice_policy(raw, &mut out, policy);
+                assert_eq!(&out[..n], *enc, "{tier:?} {policy:?}");
+                let mut dec = vec![0u8; raw.len() + 1];
+                let n = codec.decode_slice_policy(enc, &mut dec, policy).unwrap();
+                assert_eq!(&dec[..n], *raw, "{tier:?} {policy:?}");
+                // §8 permits decoders to accept lowercase; ours does.
+                let lower: Vec<u8> = enc.to_ascii_lowercase();
+                let n = codec.decode_slice_policy(&lower, &mut dec, policy).unwrap();
+                assert_eq!(&dec[..n], *raw, "{tier:?} {policy:?} lowercase");
+            }
+        }
+    }
+}
+
+#[test]
+fn base16_vectors_streaming() {
+    for (raw, enc) in RAW.iter().zip(B16.iter()) {
+        for chunk in 1..=3usize {
+            let mut encoder = CodecStreamEncoder::hex();
+            let mut got = Vec::new();
+            for piece in raw.chunks(chunk) {
+                encoder.update(piece, &mut got);
+            }
+            assert_eq!(encoder.finish(&mut got), raw.len() as u64);
+            assert_eq!(got, *enc, "chunk={chunk}");
+
+            let mut decoder = CodecStreamDecoder::hex(Whitespace::None);
+            let mut back = Vec::new();
+            for piece in enc.chunks(chunk) {
+                decoder.update(piece, &mut back).unwrap();
+            }
+            decoder.finish(&mut back).unwrap();
+            assert_eq!(back, *raw, "chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn strict_mode_rejects_non_canonical_base64() {
+    for tier in Tier::supported() {
+        let engine = Engine::with_tier(Alphabet::standard(), tier);
+        let mut out = vec![0u8; 16];
+        // "Zh==": 'h' leaks non-zero bits into the discarded tail.
+        assert!(
+            matches!(engine.decode_slice(b"Zh==", &mut out), Err(DecodeError::TrailingBits { .. })),
+            "tier={tier:?}"
+        );
+        // Unpadded final quantum in strict mode.
+        assert!(
+            matches!(engine.decode_slice(b"Zg", &mut out), Err(DecodeError::InvalidLength { .. })),
+            "tier={tier:?}"
+        );
+        // Malformed padding in the final quantum.
+        assert!(
+            matches!(
+                engine.decode_slice(b"Zg=A", &mut out),
+                Err(DecodeError::InvalidPadding { .. })
+            ),
+            "tier={tier:?}"
+        );
+        // Padding mid-stream (a '=' outside the final quantum is not in
+        // the alphabet).
+        assert!(engine.decode_slice(b"Zg==Zm9v", &mut out).is_err(), "tier={tier:?}");
+    }
+}
+
+#[test]
+fn strict_mode_rejects_non_canonical_base32() {
+    for variant in [Base32Variant::Std, Base32Variant::Hex] {
+        for tier in Tier::supported() {
+            let codec = Base32Codec::with_tier(variant, tier);
+            let mut out = vec![0u8; 16];
+            // Non-zero trailing bits: canonical "f" is "MY======" /
+            // "CO======"; bump the final data char by one.
+            let bad: &[u8] = match variant {
+                Base32Variant::Std => b"MZ======",
+                Base32Variant::Hex => b"CP======",
+            };
+            assert!(
+                matches!(
+                    codec.decode_slice(bad, &mut out, Mode::Strict),
+                    Err(DecodeError::TrailingBits { offset: 1 })
+                ),
+                "{variant:?} tier={tier:?}"
+            );
+            // Unpadded final group in strict mode.
+            let unpadded: &[u8] =
+                if variant == Base32Variant::Std { b"MZXW6" } else { b"CPNMU" };
+            assert!(
+                matches!(
+                    codec.decode_slice(unpadded, &mut out, Mode::Strict),
+                    Err(DecodeError::InvalidLength { len: 5 })
+                ),
+                "{variant:?} tier={tier:?}"
+            );
+            // Seven pad chars can never be canonical (§6 allows 1/3/4/6).
+            assert!(
+                matches!(
+                    codec.decode_slice(b"A=======", &mut out, Mode::Strict),
+                    Err(DecodeError::InvalidPadding { .. })
+                ),
+                "{variant:?} tier={tier:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn base16_rejects_odd_lengths_and_bad_digits() {
+    for tier in Tier::supported() {
+        let codec = HexCodec::with_tier(tier);
+        let mut out = vec![0u8; 16];
+        assert!(
+            matches!(
+                codec.decode_slice(b"666", &mut out),
+                Err(DecodeError::InvalidLength { len: 3 })
+            ),
+            "tier={tier:?}"
+        );
+        assert!(
+            matches!(
+                codec.decode_slice(b"66g6", &mut out),
+                Err(DecodeError::InvalidByte { offset: 2, byte: b'g' })
+            ),
+            "tier={tier:?}"
+        );
+    }
+}
+
+/// The wire-facing sanity pass: the §10 vectors through the coordinator
+/// router, exactly as a request on either protocol would run them.
+#[test]
+fn vectors_through_the_router() {
+    use b64simd::codec::CodecSel;
+    use b64simd::coordinator::backend::rust_factory;
+    use b64simd::coordinator::{Outcome, Request, RequestKind, Router, RouterConfig};
+
+    let router = Router::new(rust_factory(), RouterConfig::default());
+    let cases: [(CodecSel, &[&[u8]; 7]); 5] = [
+        (CodecSel::Base64(Alphabet::standard()), &B64),
+        (CodecSel::Base64(Alphabet::url()), &B64),
+        (CodecSel::Base32(Base32Variant::Std), &B32),
+        (CodecSel::Base32(Base32Variant::Hex), &B32HEX),
+        (CodecSel::Hex, &B16),
+    ];
+    let mut id = 0u64;
+    for (sel, table) in cases {
+        for (raw, enc) in RAW.iter().zip(table.iter()) {
+            id += 1;
+            let req =
+                Request::with_codec(id, RequestKind::Encode, raw.to_vec(), sel.clone());
+            match router.process(req).outcome {
+                Outcome::Data(got) => assert_eq!(got, *enc, "{sel:?}"),
+                other => panic!("{sel:?}: {other:?}"),
+            }
+            id += 1;
+            let req =
+                Request::with_codec(id, RequestKind::Decode, enc.to_vec(), sel.clone());
+            match router.process(req).outcome {
+                Outcome::Data(got) => assert_eq!(got, *raw, "{sel:?}"),
+                other => panic!("{sel:?}: {other:?}"),
+            }
+        }
+    }
+}
